@@ -1,0 +1,65 @@
+//! Ablation sweep: model choice x trace depth x branching factor on one
+//! benchmark — a compact version of §4.3 / Appendix C-E.
+//!
+//! ```
+//! cargo run --release --example ablation_sweep -- [workload]
+//! ```
+
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
+use reasoning_compiler::reasoning::ModelProfile;
+use reasoning_compiler::tir::WorkloadId;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workload = args.first().map(|s| s.as_str()).unwrap_or("llama3_attention");
+    let w = WorkloadId::from_name(workload).expect("unknown workload");
+    let base = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: w.name().to_string(),
+        platform: "core_i9".to_string(),
+        budget: 150,
+        repeats: 3,
+        ..Default::default()
+    };
+
+    println!("=== {} on Intel Core i9, 150-sample budget, 3 repeats ===\n", w.display());
+
+    println!("--- Fig. 4(a): proposal model ---");
+    println!("{:<30} {:>11} {:>11} {:>11}", "model", "speedup@18", "speedup@36", "speedup@150");
+    for model in ModelProfile::all() {
+        let cfg = TuneConfig { model: model.name.to_string(), ..base.clone() };
+        let s = run_session(&cfg);
+        println!(
+            "{:<30} {:>10.2}x {:>10.2}x {:>10.2}x",
+            model.display,
+            s.mean_speedup_at(18),
+            s.mean_speedup_at(36),
+            s.mean_speedup_at(150)
+        );
+    }
+
+    println!("\n--- Fig. 4(b): historical trace depth ---");
+    for (label, depth) in [("parent+grandparent", 2), ("parent+gp+great-gp", 3)] {
+        let cfg = TuneConfig { history_depth: depth, ..base.clone() };
+        let s = run_session(&cfg);
+        println!(
+            "{:<30} {:>10.2}x {:>10.2}x {:>10.2}x",
+            label,
+            s.mean_speedup_at(18),
+            s.mean_speedup_at(36),
+            s.mean_speedup_at(150)
+        );
+    }
+
+    println!("\n--- Appendix E: branching factor ---");
+    for b in [2usize, 4] {
+        let cfg = TuneConfig { branching: b, ..base.clone() };
+        let s = run_session(&cfg);
+        println!(
+            "B = {b:<26} {:>10.2}x {:>10.2}x {:>10.2}x",
+            s.mean_speedup_at(18),
+            s.mean_speedup_at(36),
+            s.mean_speedup_at(150)
+        );
+    }
+}

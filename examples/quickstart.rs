@@ -1,0 +1,43 @@
+//! Quickstart: the REASONING COMPILER in ~40 lines.
+//!
+//! ```
+//! cargo run --release --example quickstart
+//! ```
+//! Builds the paper's running example (the DeepSeek-R1 MoE matmul from
+//! Appendix A), shows its TIR, runs a short LLM-guided MCTS tuning session
+//! on the simulated Intel Core i9, and prints the discovered schedule.
+
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
+use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::tir::{printer, WorkloadId};
+
+fn main() {
+    // 1. A tunable tensor program (one TVM-style task).
+    let workload = WorkloadId::DeepSeekMoe;
+    let program = workload.build();
+    println!("=== input program ===\n{}", printer::print_program(&program));
+
+    // 2. Tune it: LLM-guided MCTS, paper defaults (c = sqrt2, B = 2,
+    //    parent+grandparent context), 72-sample budget.
+    let cfg = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: workload.name().to_string(),
+        platform: "core_i9".to_string(),
+        budget: 72,
+        repeats: 3,
+        ..Default::default()
+    };
+    let session = run_session(&cfg);
+    println!(
+        "mean speedup over pre-optimized code: {:.2}x (at 36 samples: {:.2}x)",
+        session.mean_speedup(),
+        session.mean_speedup_at(36)
+    );
+
+    // 3. Inspect the winning transformation sequence.
+    let best_run = &session.runs[0];
+    let (best, _) = Schedule::new(program).apply_all(&best_run.best_trace);
+    println!("\n=== winning schedule ({:.2}x) ===", best_run.best_speedup());
+    println!("{}", best.render_trace());
+    println!("\n=== scheduled program ===\n{}", printer::print_program(&best.current));
+}

@@ -1,0 +1,47 @@
+//! Serving example: dynamic-batching inference over the AOT artifacts.
+//!
+//! ```
+//! make artifacts          # once: Python lowers the kernels to HLO text
+//! cargo run --release --example serve_llama -- [requests] [max_batch]
+//! ```
+//! Loads every compiled layer (attention, MoE, conv, MLP and the full
+//! Llama-3-style block) on the PJRT CPU client, drives a synthetic request
+//! mix through the dynamic batcher, and reports latency/throughput — the
+//! "efficient model serving" half of the paper's title. Python is not on
+//! the request path: only the rust binary and libxla run here.
+
+use reasoning_compiler::coordinator::{Server, ServerConfig};
+use reasoning_compiler::runtime::Manifest;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(96);
+    let max_batch: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let manifest = Manifest::discover()?;
+    println!(
+        "loading {} artifacts from {} ...",
+        manifest.artifacts.len(),
+        manifest.dir.display()
+    );
+    let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+
+    println!("serving {requests} synthetic requests (max batch {max_batch})...\n");
+    server.run_synthetic(requests, 7)?;
+
+    println!("{}", server.metrics.report());
+
+    // Focused latency check on the end-to-end block.
+    for _ in 0..16 {
+        server.submit("llama3_block", 99)?;
+    }
+    server.drain()?;
+    let m = &server.metrics.per_model["llama3_block"];
+    println!(
+        "llama3_block: p50 {:.3} ms, p99 {:.3} ms over {} requests",
+        m.p50() * 1e3,
+        m.p99() * 1e3,
+        m.requests
+    );
+    Ok(())
+}

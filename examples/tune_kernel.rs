@@ -1,0 +1,54 @@
+//! Example: tune one kernel and explain the found schedule.
+//!
+//! ```
+//! cargo run --release --example tune_kernel -- [workload] [platform] [budget]
+//! ```
+//! Runs the REASONING COMPILER on one benchmark, prints the convergence
+//! checkpoints, the winning transformation trace, the scheduled TIR and the
+//! simulator's latency breakdown for baseline vs tuned — the workflow a
+//! performance engineer would use to adopt a schedule.
+
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
+use reasoning_compiler::cost::{access, simulator, Platform};
+use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::tir::{printer, WorkloadId};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let workload = args.first().map(|s| s.as_str()).unwrap_or("deepseek_moe");
+    let platform = args.get(1).map(|s| s.as_str()).unwrap_or("core_i9");
+    let budget: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(200);
+
+    let w = WorkloadId::from_name(workload).expect("unknown workload");
+    let plat = Platform::by_name(platform).expect("unknown platform");
+    let cfg = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: workload.to_string(),
+        platform: platform.to_string(),
+        budget,
+        repeats: 3,
+        ..Default::default()
+    };
+    println!("tuning {} on {} (budget {budget}, 3 repeats)...", w.display(), plat.display);
+    let session = run_session(&cfg);
+    for c in [18, 36, 72, 150, budget] {
+        if c <= budget {
+            println!("  speedup@{c:<4} = {:.2}x", session.mean_speedup_at(c));
+        }
+    }
+
+    let run = &session.runs[0];
+    let base = w.build();
+    let sched = Schedule::new(base.clone());
+    let (best, _) = sched.apply_all(&run.best_trace);
+    println!("\nwinning trace:\n{}", best.render_trace());
+    println!("\nscheduled TIR:\n{}", printer::print_program(&best.current));
+
+    for (label, prog) in [("baseline", &base), ("tuned", &best.current)] {
+        println!("--- {label} latency breakdown ({}) ---", plat.display);
+        for stage in &prog.stages {
+            let a = access::analyze(prog, stage);
+            println!("[{}] {}", stage.name, simulator::stage_breakdown(&a, &plat).render());
+        }
+    }
+}

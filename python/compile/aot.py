@@ -1,0 +1,82 @@
+"""AOT lowering: JAX -> HLO text artifacts for the rust runtime.
+
+Interchange format is HLO **text**, not serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only NAME]
+
+Outputs one `<name>.hlo.txt` per entry of `model.ARTIFACTS` plus a
+`manifest.json` describing argument/output shapes, which the rust
+`runtime::artifacts` module reads.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(name):
+    """Lower one registered artifact; returns (hlo_text, manifest_entry)."""
+    fn, specs = model.ARTIFACTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    out_shapes = [
+        {"shape": list(s.shape), "dtype": str(s.dtype)}
+        for s in jax.eval_shape(fn, *specs)
+    ]
+    entry = {
+        "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+        "outputs": out_shapes,
+    }
+    return text, entry
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument("--only", default=None, help="lower a single artifact")
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = [args.only] if args.only else list(model.ARTIFACTS)
+    manifest = {}
+    for name in names:
+        text, entry = lower_artifact(name)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        entry["file"] = f"{name}.hlo.txt"
+        manifest[name] = entry
+        print(f"  wrote {path} ({len(text)} chars)")
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Merge with an existing manifest when lowering a single artifact.
+    if args.only and os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        old.update(manifest)
+        manifest = old
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"  wrote {manifest_path} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

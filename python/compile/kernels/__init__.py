@@ -1,0 +1,15 @@
+"""L1 Pallas kernels (build-time only; never imported at runtime).
+
+Each kernel pairs with a pure-jnp oracle in `ref.py`; pytest enforces the
+match. All kernels run `interpret=True` so their HLO executes on any PJRT
+backend, including the rust CPU client.
+"""
+
+from .attention import attention
+from .conv import conv2d
+from .matmul import matmul
+from .mlp import mlp
+from .moe import moe
+from . import ref
+
+__all__ = ["attention", "conv2d", "matmul", "mlp", "moe", "ref"]

@@ -1,0 +1,105 @@
+"""L1 Pallas kernel: flash-attention-style fused attention.
+
+One Q block is held in VMEM while K/V blocks stream through the grid's
+innermost dimension; softmax is computed *online* (running max + running
+sum), so the [seq, seq] score matrix is never materialized in HBM — the
+TPU restatement of the paper's cache-blocking insight for attention
+(DESIGN.md §Hardware-Adaptation).
+
+Grid: (heads, q_blocks, kv_blocks); kv is the reduction stream. Running
+statistics (m, l) and the output accumulator live in the output refs,
+which map to the same block for every kv step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, *, scale, kv_steps, causal, bq, bk
+):
+    """One (h, qi, kj) step of online-softmax attention."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [bq, d]
+    k = k_ref[0]  # [bk, d]
+    v = v_ref[0]  # [bk, d]
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [bq, bk]
+    if causal:
+        # Global row/col positions of this tile; mask future keys.
+        row = pl.program_id(1) * bq + jnp.arange(bq)[:, None]
+        col = pl.program_id(2) * bk + jnp.arange(bk)[None, :]
+        s = jnp.where(col > row, NEG_INF, s)
+
+    m_prev = m_ref[0]                                   # [bq]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))         # [bq]
+    correction = jnp.exp(m_prev - m_cur)                # [bq]
+    p = jnp.exp(s - m_cur[:, None])                     # [bq, bk]
+
+    l_ref[0] = l_ref[0] * correction + p.sum(axis=-1)
+    o_ref[0] = o_ref[0] * correction[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[0] = m_cur
+
+    # Final kv step: normalize by the accumulated softmax denominator.
+    @pl.when(pl.program_id(2) == kv_steps - 1)
+    def _finalize():
+        o_ref[0] = o_ref[0] / l_ref[0][:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "causal"))
+def attention(q, k, v, bq=128, bk=128, causal=False):
+    """Fused multi-head attention, f32.
+
+    q, k, v: [heads, seq, dim] -> [heads, seq, dim]. `causal=True` applies
+    the decoder mask inside the kernel (the serving decode path), still
+    without materializing the [seq, seq] score matrix.
+    VMEM per step = (bq + 2*bk) * dim + bq*dim + 2*bq floats — e.g.
+    ~260 KiB at bq=bk=128, dim=128.
+    """
+    from .matmul import pick_tile
+
+    h, sq, d = q.shape
+    _, sk, _ = k.shape
+    bq = pick_tile(sq, bq)
+    bk = pick_tile(sk, bk)
+    kv_steps = sk // bk
+    scale = 1.0 / (d ** 0.5)
+    grid = (h, sq // bq, kv_steps)
+
+    out, _m, _l = pl.pallas_call(
+        functools.partial(
+            _attention_kernel,
+            scale=scale, kv_steps=kv_steps, causal=causal, bq=bq, bk=bk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qi, kj: (hh, qi, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qi, kj: (hh, kj, 0)),
+            pl.BlockSpec((1, bk, d), lambda hh, qi, kj: (hh, kj, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda hh, qi, kj: (hh, qi, 0)),
+            pl.BlockSpec((1, bq), lambda hh, qi, kj: (hh, qi)),
+            pl.BlockSpec((1, bq), lambda hh, qi, kj: (hh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, sq), jnp.float32),   # running max
+            jax.ShapeDtypeStruct((h, sq), jnp.float32),   # running sum
+        ],
+        interpret=True,
+    )(q, k, v)
+    return out

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: 2-D convolution as implicit GEMM.
+
+The FLUX convolution layer. Rather than porting a CPU register-blocked
+direct convolution, the TPU idiom is implicit GEMM: each (kh, kw) tap is a
+[c_in, oh*ow] x [c_out, c_in] matmul on a shifted view of the input, which
+keeps the MXU busy and lets BlockSpecs stream channel blocks through VMEM
+(DESIGN.md §Hardware-Adaptation).
+
+Grid: (kh, kw, c_in_blocks) — all reduction dimensions; the full output
+accumulates in VMEM across the grid.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, oh, ow, ksize):
+    """One (kh, kw, ci-block) step: o += W[:, ci, kh, kw] @ X[ci, sh:, sw:]."""
+    kh = pl.program_id(0)
+    kw = pl.program_id(1)
+
+    @pl.when((kh == 0) & (kw == 0) & (pl.program_id(2) == 0))
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]  # [bc, h, w]
+    w = w_ref[...]  # [c_out, bc, ksize, ksize]
+    # Shifted valid window for this tap.
+    patch = jax.lax.dynamic_slice(
+        x, (0, kh, kw), (x.shape[0], oh, ow)
+    )  # [bc, oh, ow]
+    tap = jax.lax.dynamic_slice(
+        w, (0, 0, kh, kw), (w.shape[0], w.shape[1], 1, 1)
+    )[:, :, 0, 0]  # [c_out, bc]
+    contrib = jnp.dot(
+        tap, patch.reshape(x.shape[0], oh * ow),
+        preferred_element_type=jnp.float32,
+    )  # [c_out, oh*ow]
+    o_ref[...] += contrib.reshape(o_ref.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bc",))
+def conv2d(x, w, bc=32):
+    """2-D convolution, stride 1, valid padding (f32).
+
+    x: [c_in, h, w]; w: [c_out, c_in, kh, kw] -> [c_out, oh, ow].
+    VMEM per step = bc*h*w + c_out*bc*k*k + c_out*oh*ow floats.
+    """
+    from .matmul import pick_tile
+
+    c_in, h, wdt = x.shape
+    c_out, c_in2, ksize, ksize2 = w.shape
+    assert c_in == c_in2 and ksize == ksize2
+    oh = h - ksize + 1
+    ow = wdt - ksize + 1
+    bc = pick_tile(c_in, bc)
+    grid = (ksize, ksize, c_in // bc)
+
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, oh=oh, ow=ow, ksize=ksize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bc, h, wdt), lambda kh, kw, ci: (ci, 0, 0)),
+            pl.BlockSpec(
+                (c_out, bc, ksize, ksize), lambda kh, kw, ci: (0, ci, 0, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((c_out, oh, ow), lambda kh, kw, ci: (0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c_out, oh, ow), jnp.float32),
+        interpret=True,
+    )(x, w)

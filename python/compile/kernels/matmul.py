@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: MXU-tiled matmul.
+
+The workhorse of the MoE expert layer, the dense projections and the MLP.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper tunes CPU
+cache tiling; on TPU the same insight maps to HBM->VMEM blocking expressed
+with BlockSpecs. Tiles default to the 128x128 MXU shape, with the K
+reduction streamed through the grid's innermost dimension so each (i, j)
+output tile accumulates in VMEM.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the AOT
+path serializes and the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (i, j, k) grid step: o[i, j] += A[i, k] @ B[k, j].
+
+    The output BlockSpec maps every k step to the same (i, j) tile, so the
+    tile stays resident in VMEM and accumulates across the K stream.
+    """
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def pick_tile(dim, target):
+    """Largest divisor of `dim` <= target, preferring MXU-aligned sizes."""
+    for cand in (target, 256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if cand <= target and dim % cand == 0:
+            return cand
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul(a, b, bm=128, bn=128, bk=128):
+    """Tiled matmul: a [M, K] @ b [K, N] -> [M, N] (f32).
+
+    Block sizes clamp to divisors of the problem shape; defaults target the
+    MXU. VMEM per grid step = (bm*bk + bk*bn + bm*bn) * 4 bytes
+    (192 KiB at the 128 defaults — comfortably inside a TPU core's VMEM).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"shape mismatch {a.shape} @ {b.shape}"
+    bm = pick_tile(m, bm)
+    bn = pick_tile(n, bn)
+    bk = pick_tile(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

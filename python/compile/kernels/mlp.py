@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused gated (SwiGLU) MLP.
+
+The Llama-4-Scout MLP layer: out = (silu(x @ Wg) * (x @ Wu)) @ Wd.
+Fusing gate/up/activation into one kernel avoids materializing the two
+[tokens, ffn] intermediates in HBM; the ffn dimension streams through the
+grid while the token block stays VMEM-resident.
+
+Grid: (ffn_blocks,) — each step computes a [tokens, bf] slice of the gated
+activation and immediately contracts it with the matching Wd rows,
+accumulating the [tokens, d_out] result in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mlp_kernel(x_ref, wg_ref, wu_ref, wd_ref, o_ref):
+    """One ffn-block step of the fused gated MLP."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]        # [t, d_in]
+    g = jnp.dot(x, wg_ref[...], preferred_element_type=jnp.float32)  # [t, bf]
+    u = jnp.dot(x, wu_ref[...], preferred_element_type=jnp.float32)  # [t, bf]
+    act = g * (1.0 / (1.0 + jnp.exp(-g))) * u                         # silu(g)*u
+    o_ref[...] += jnp.dot(act, wd_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bf",))
+def mlp(x, w_gate, w_up, w_down, bf=256):
+    """Fused SwiGLU MLP (f32).
+
+    x: [tokens, d_in]; w_gate/w_up: [d_in, ffn]; w_down: [ffn, d_out].
+    VMEM per step = t*d_in + 2*d_in*bf + bf*d_out + t*d_out floats.
+    """
+    from .matmul import pick_tile
+
+    t, d_in = x.shape
+    d_in2, ffn = w_gate.shape
+    ffn2, d_out = w_down.shape
+    assert d_in == d_in2 and ffn == ffn2 and w_up.shape == w_gate.shape
+    bf = pick_tile(ffn, bf)
+    grid = (ffn // bf,)
+
+    return pl.pallas_call(
+        _mlp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda f: (0, 0)),
+            pl.BlockSpec((d_in, bf), lambda f: (0, f)),
+            pl.BlockSpec((d_in, bf), lambda f: (0, f)),
+            pl.BlockSpec((bf, d_out), lambda f: (f, 0)),
+        ],
+        out_specs=pl.BlockSpec((t, d_out), lambda f: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), jnp.float32),
+        interpret=True,
+    )(x, w_gate, w_up, w_down)

@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: top-1 routed mixture-of-experts FFN.
+
+The DeepSeek-R1 MoE layer. Routing (argmax over router logits) is cheap
+and stays in plain jnp; the expensive part — every token through its
+expert's weight matrix — runs as a Pallas kernel that streams expert
+blocks through VMEM and masks tokens by their route, so the dense compute
+is MXU matmuls with a per-expert one-hot mask (the standard dense-MoE
+formulation for small expert counts).
+
+Grid: (experts,) — each step computes X @ W[e] for the full token block
+and accumulates the masked contribution.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_kernel(x_ref, w_ref, mask_ref, o_ref):
+    """One expert step: o += mask[:, e] * (x @ W[e])."""
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]          # [t, d_in]
+    w = w_ref[0]            # [d_in, d_out]
+    mask = mask_ref[...]    # [t, 1]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)  # [t, d_out]
+    o_ref[...] += y * mask
+
+
+@jax.jit
+def moe(x, w_experts, router_logits):
+    """Top-1 routed MoE (f32).
+
+    x: [tokens, d_in]; w_experts: [E, d_in, d_out];
+    router_logits: [tokens, E] -> [tokens, d_out].
+    VMEM per step = t*d_in + d_in*d_out + t + t*d_out floats; expert
+    matrices stream one at a time.
+    """
+    t, d_in = x.shape
+    n_exp, d_in2, d_out = w_experts.shape
+    assert d_in == d_in2
+    route = jnp.argmax(router_logits, axis=-1)                    # [t]
+    onehot = jax.nn.one_hot(route, n_exp, dtype=x.dtype)          # [t, E]
+
+    return pl.pallas_call(
+        _moe_kernel,
+        grid=(n_exp,),
+        in_specs=[
+            pl.BlockSpec((t, d_in), lambda e: (0, 0)),
+            pl.BlockSpec((1, d_in, d_out), lambda e: (e, 0, 0)),
+            pl.BlockSpec((t, 1), lambda e: (0, e)),
+        ],
+        out_specs=pl.BlockSpec((t, d_out), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d_out), jnp.float32),
+        interpret=True,
+    )(x, w_experts, onehot)

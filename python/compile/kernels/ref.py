@@ -1,0 +1,79 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every L1 kernel in this package has a reference implementation here built
+only from `jnp`/`lax` primitives. pytest asserts `kernel(x) ~= ref(x)` —
+the core correctness signal of the build path (the AOT artifacts embed the
+kernels, so kernel==ref implies artifact==ref).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, scale=None):
+    """Multi-head attention: softmax(q @ k^T * scale) @ v.
+
+    Shapes: q, k, v: [heads, seq, dim] -> out [heads, seq, dim].
+    """
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype)))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def causal_attention_ref(q, k, v, scale=None):
+    """Causal (decoder) attention: position i attends to keys j <= i."""
+    if scale is None:
+        scale = (1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype)))
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) * scale
+    sq, sk = scores.shape[-2], scores.shape[-1]
+    mask = jnp.arange(sk)[None, :] > jnp.arange(sq)[:, None]
+    scores = jnp.where(mask[None], -1e30, scores)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("hqk,hkd->hqd", probs, v)
+
+
+def matmul_ref(a, b):
+    """Plain f32 matmul oracle for the expert/dense kernels."""
+    return a @ b
+
+
+def moe_ref(x, w_experts, router_logits):
+    """Top-1 routed mixture-of-experts layer (dense one-hot oracle).
+
+    x: [tokens, d_in]; w_experts: [n_experts, d_in, d_out];
+    router_logits: [tokens, n_experts].
+    """
+    route = jnp.argmax(router_logits, axis=-1)                  # [tokens]
+    onehot = jnp.eye(w_experts.shape[0], dtype=x.dtype)[route]  # [tokens, E]
+    per_expert = jnp.einsum("td,edf->tef", x, w_experts)        # [tokens, E, f]
+    return jnp.einsum("tef,te->tf", per_expert, onehot)
+
+
+def conv2d_ref(x, w):
+    """Direct 2-D convolution, stride 1, valid padding.
+
+    x: [c_in, h, w]; w: [c_out, c_in, kh, kw] -> [c_out, oh, ow].
+    """
+    out = jax.lax.conv_general_dilated(
+        x[None], w, window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def mlp_ref(x, w_gate, w_up, w_down):
+    """Gated SwiGLU MLP: (silu(x@Wg) * (x@Wu)) @ Wd."""
+    g = x @ w_gate
+    u = x @ w_up
+    silu = g * (1.0 / (1.0 + jnp.exp(-g)))
+    return (silu * u) @ w_down
+
+
+def rmsnorm_ref(x, gamma, eps=1e-6):
+    """RMSNorm over the last axis."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * gamma / jnp.sqrt(ms + eps)

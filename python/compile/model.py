@@ -1,0 +1,168 @@
+"""L2: the JAX layer graphs that the serving path executes.
+
+Each function composes the L1 Pallas kernels into one of the paper's five
+evaluation layers, plus a miniature end-to-end Llama-3-style transformer
+block used by the serving example. `aot.py` lowers every entry of
+`ARTIFACTS` to HLO text; the rust runtime (`rust/src/runtime/`) loads and
+executes them — Python is never on the request path.
+
+Artifact shapes are scaled-down versions of the production shapes (the
+schedule search in rust uses the full shapes analytically; the PJRT
+executables are the *numerically real* counterparts sized for fast CPU
+execution — DESIGN.md §Substitutions).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention, conv2d, matmul, mlp, moe
+from .kernels import ref
+
+
+# --------------------------------------------------------------------------
+# The five evaluation layers (kernel-backed).
+# --------------------------------------------------------------------------
+
+def llama3_attention_layer(q, k, v):
+    """Llama-3-8B self-attention core: fused flash attention."""
+    return (attention(q, k, v),)
+
+
+def llama3_causal_attention_layer(q, k, v):
+    """Llama-3 decode-path attention: causal mask fused into the kernel."""
+    return (attention(q, k, v, causal=True),)
+
+
+def deepseek_moe_layer(x, w_experts, router_logits):
+    """DeepSeek-R1 top-1 routed MoE FFN."""
+    return (moe(x, w_experts, router_logits),)
+
+
+def flux_attention_layer(q, k, v):
+    """FLUX DiT self-attention (same fused kernel, DiT shapes)."""
+    return (attention(q, k, v),)
+
+
+def flux_conv_layer(x, w):
+    """FLUX convolution block: implicit-GEMM conv2d."""
+    return (conv2d(x, w),)
+
+
+def llama4_mlp_layer(x, w_gate, w_up, w_down):
+    """Llama-4-Scout gated MLP."""
+    return (mlp(x, w_gate, w_up, w_down),)
+
+
+def dense_layer(x, w):
+    """Dense projection used by the e2e block (MXU-tiled matmul)."""
+    return (matmul(x, w),)
+
+
+# --------------------------------------------------------------------------
+# Miniature end-to-end Llama-3-style transformer block (serving example).
+# --------------------------------------------------------------------------
+
+HEAD_DIM = 32
+
+
+def llama3_block(x, gamma1, wq, wk, wv, wo, gamma2, w_gate, w_up, w_down):
+    """One pre-norm transformer block over [seq, hidden] activations.
+
+    heads = hidden // HEAD_DIM. All matmuls go through the L1 kernels;
+    norms/residuals are cheap jnp glue.
+    """
+    seq, hidden = x.shape
+    heads = hidden // HEAD_DIM
+
+    h = ref.rmsnorm_ref(x, gamma1)
+    q = matmul(h, wq).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    k = matmul(h, wk).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    v = matmul(h, wv).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    attn = attention(q, k, v)  # [heads, seq, HEAD_DIM]
+    attn = attn.transpose(1, 0, 2).reshape(seq, hidden)
+    x = x + matmul(attn, wo)
+
+    h2 = ref.rmsnorm_ref(x, gamma2)
+    x = x + mlp(h2, w_gate, w_up, w_down)
+    return (x,)
+
+
+def llama3_block_ref(x, gamma1, wq, wk, wv, wo, gamma2, w_gate, w_up, w_down):
+    """Pure-jnp oracle of `llama3_block` (kernels replaced with refs)."""
+    seq, hidden = x.shape
+    heads = hidden // HEAD_DIM
+    h = ref.rmsnorm_ref(x, gamma1)
+    q = (h @ wq).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    k = (h @ wk).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    v = (h @ wv).reshape(seq, heads, HEAD_DIM).transpose(1, 0, 2)
+    attn = ref.attention_ref(q, k, v).transpose(1, 0, 2).reshape(seq, hidden)
+    x = x + attn @ wo
+    h2 = ref.rmsnorm_ref(x, gamma2)
+    return x + ref.mlp_ref(h2, w_gate, w_up, w_down)
+
+
+# --------------------------------------------------------------------------
+# AOT artifact registry: name -> (function, example argument specs).
+# --------------------------------------------------------------------------
+
+def _spec(*shapes):
+    return [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+
+
+# Scaled serving shapes.
+ATTN_SHAPE = (4, 128, 64)
+MOE_TOKENS, MOE_EXPERTS, MOE_DIN, MOE_DOUT = 16, 4, 512, 256
+CONV_CIN, CONV_COUT, CONV_H, CONV_K = 32, 32, 34, 3
+MLP_TOKENS, MLP_DIN, MLP_FFN, MLP_DOUT = 16, 256, 688, 256
+E2E_SEQ, E2E_HIDDEN, E2E_FFN = 64, 128, 352
+
+ARTIFACTS = {
+    "llama3_attention": (
+        llama3_attention_layer,
+        _spec(ATTN_SHAPE, ATTN_SHAPE, ATTN_SHAPE),
+    ),
+    "llama3_causal_attention": (
+        llama3_causal_attention_layer,
+        _spec(ATTN_SHAPE, ATTN_SHAPE, ATTN_SHAPE),
+    ),
+    "deepseek_moe": (
+        deepseek_moe_layer,
+        _spec(
+            (MOE_TOKENS, MOE_DIN),
+            (MOE_EXPERTS, MOE_DIN, MOE_DOUT),
+            (MOE_TOKENS, MOE_EXPERTS),
+        ),
+    ),
+    "flux_attention": (
+        flux_attention_layer,
+        _spec((8, 64, 64), (8, 64, 64), (8, 64, 64)),
+    ),
+    "flux_conv": (
+        flux_conv_layer,
+        _spec((CONV_CIN, CONV_H, CONV_H), (CONV_COUT, CONV_CIN, CONV_K, CONV_K)),
+    ),
+    "llama4_mlp": (
+        llama4_mlp_layer,
+        _spec(
+            (MLP_TOKENS, MLP_DIN),
+            (MLP_DIN, MLP_FFN),
+            (MLP_DIN, MLP_FFN),
+            (MLP_FFN, MLP_DOUT),
+        ),
+    ),
+    "llama3_block": (
+        llama3_block,
+        _spec(
+            (E2E_SEQ, E2E_HIDDEN),
+            (E2E_HIDDEN,),
+            (E2E_HIDDEN, E2E_HIDDEN),
+            (E2E_HIDDEN, E2E_HIDDEN),
+            (E2E_HIDDEN, E2E_HIDDEN),
+            (E2E_HIDDEN, E2E_HIDDEN),
+            (E2E_HIDDEN,),
+            (E2E_HIDDEN, E2E_FFN),
+            (E2E_HIDDEN, E2E_FFN),
+            (E2E_FFN, E2E_HIDDEN),
+        ),
+    ),
+}

@@ -1,0 +1,316 @@
+"""Kernel vs oracle — the core correctness signal of the build path.
+
+Fixed-shape checks plus hypothesis sweeps over shapes and block sizes.
+Everything runs interpret=True on CPU; tolerances absorb the float32
+reassociation that tiled accumulation introduces.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention, conv2d, matmul, mlp, moe, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+
+class TestMatmul:
+    def test_square(self):
+        a, b = randn(64, 64), randn(64, 64)
+        np.testing.assert_allclose(matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4)
+
+    def test_rectangular(self):
+        a, b = randn(16, 512), randn(512, 256)
+        np.testing.assert_allclose(
+            matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )
+
+    def test_small_blocks(self):
+        a, b = randn(32, 48), randn(48, 24)
+        np.testing.assert_allclose(
+            matmul(a, b, bm=8, bn=8, bk=8), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-5
+        )
+
+    def test_block_larger_than_dim_clamps(self):
+        a, b = randn(4, 8), randn(8, 4)
+        np.testing.assert_allclose(
+            matmul(a, b, bm=128, bn=128, bk=128), ref.matmul_ref(a, b), rtol=1e-5
+        )
+
+    def test_identity(self):
+        a = randn(16, 16)
+        eye = jnp.eye(16, dtype=jnp.float32)
+        np.testing.assert_allclose(matmul(a, eye), a, rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        m=st.sampled_from([4, 8, 16, 32]),
+        n=st.sampled_from([4, 8, 24, 64]),
+        k=st.sampled_from([4, 16, 48, 128]),
+        bm=st.sampled_from([4, 8, 128]),
+    )
+    def test_hypothesis_shapes(self, m, n, k, bm):
+        a, b = randn(m, k), randn(k, n)
+        np.testing.assert_allclose(
+            matmul(a, b, bm=bm), ref.matmul_ref(a, b), rtol=1e-3, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+class TestAttention:
+    def test_basic(self):
+        q, k, v = randn(2, 64, 16), randn(2, 64, 16), randn(2, 64, 16)
+        np.testing.assert_allclose(
+            attention(q, k, v, bq=32, bk=32),
+            ref.attention_ref(q, k, v),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_single_block(self):
+        q, k, v = randn(1, 16, 8), randn(1, 16, 8), randn(1, 16, 8)
+        np.testing.assert_allclose(
+            attention(q, k, v), ref.attention_ref(q, k, v), rtol=1e-4, atol=1e-5
+        )
+
+    def test_many_heads(self):
+        q, k, v = randn(8, 32, 16), randn(8, 32, 16), randn(8, 32, 16)
+        np.testing.assert_allclose(
+            attention(q, k, v, bq=16, bk=16),
+            ref.attention_ref(q, k, v),
+            rtol=1e-4,
+            atol=1e-5,
+        )
+
+    def test_softmax_rows_consistent(self):
+        # Uniform V: attention output must equal V rows regardless of scores.
+        q, k = randn(1, 32, 8), randn(1, 32, 8)
+        v = jnp.ones((1, 32, 8), jnp.float32)
+        out = attention(q, k, v, bq=8, bk=8)
+        np.testing.assert_allclose(out, np.ones_like(out), rtol=1e-4)
+
+    def test_large_magnitudes_stable(self):
+        # Online softmax must not overflow with large score magnitudes.
+        q = randn(1, 32, 8) * 30.0
+        k = randn(1, 32, 8) * 30.0
+        v = randn(1, 32, 8)
+        out = attention(q, k, v, bq=8, bk=8)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(
+            out, ref.attention_ref(q, k, v), rtol=1e-3, atol=1e-4
+        )
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        h=st.sampled_from([1, 2, 4]),
+        s=st.sampled_from([16, 32, 64]),
+        d=st.sampled_from([8, 16, 32]),
+        bq=st.sampled_from([8, 16, 128]),
+    )
+    def test_hypothesis_shapes(self, h, s, d, bq):
+        q, k, v = randn(h, s, d), randn(h, s, d), randn(h, s, d)
+        np.testing.assert_allclose(
+            attention(q, k, v, bq=bq, bk=bq),
+            ref.attention_ref(q, k, v),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+    def test_causal_matches_ref(self):
+        q, k, v = randn(2, 64, 16), randn(2, 64, 16), randn(2, 64, 16)
+        np.testing.assert_allclose(
+            attention(q, k, v, bq=16, bk=16, causal=True),
+            ref.causal_attention_ref(q, k, v),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+    def test_causal_first_row_attends_only_itself(self):
+        # Position 0 may only see key 0: output row 0 == v[0].
+        q, k, v = randn(1, 32, 8), randn(1, 32, 8), randn(1, 32, 8)
+        out = attention(q, k, v, bq=8, bk=8, causal=True)
+        np.testing.assert_allclose(out[0, 0], v[0, 0], rtol=1e-4, atol=1e-5)
+
+    def test_causal_ignores_future_keys(self):
+        # Perturbing future keys/values must not change earlier outputs.
+        q, k, v = randn(1, 32, 8), randn(1, 32, 8), randn(1, 32, 8)
+        base = attention(q, k, v, bq=8, bk=8, causal=True)
+        k2 = k.at[:, 16:].set(randn(1, 16, 8))
+        v2 = v.at[:, 16:].set(randn(1, 16, 8))
+        pert = attention(q, k2, v2, bq=8, bk=8, causal=True)
+        np.testing.assert_allclose(base[:, :16], pert[:, :16], rtol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        s=st.sampled_from([16, 32, 64]),
+        bq=st.sampled_from([8, 16, 32]),
+    )
+    def test_causal_hypothesis(self, s, bq):
+        q, k, v = randn(2, s, 8), randn(2, s, 8), randn(2, s, 8)
+        np.testing.assert_allclose(
+            attention(q, k, v, bq=bq, bk=bq, causal=True),
+            ref.causal_attention_ref(q, k, v),
+            rtol=1e-3,
+            atol=1e-4,
+        )
+
+
+# --------------------------------------------------------------------------
+# conv2d
+# --------------------------------------------------------------------------
+
+class TestConv:
+    def test_basic(self):
+        x, w = randn(8, 12, 12), randn(6, 8, 3, 3)
+        np.testing.assert_allclose(
+            conv2d(x, w, bc=4), ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-4
+        )
+
+    def test_1x1_kernel(self):
+        x, w = randn(4, 8, 8), randn(4, 4, 1, 1)
+        np.testing.assert_allclose(
+            conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-4, atol=1e-5
+        )
+
+    def test_5x5_kernel(self):
+        x, w = randn(2, 16, 16), randn(3, 2, 5, 5)
+        np.testing.assert_allclose(
+            conv2d(x, w), ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-4
+        )
+
+    def test_channel_blocking_invariant(self):
+        x, w = randn(16, 10, 10), randn(8, 16, 3, 3)
+        full = conv2d(x, w, bc=16)
+        blocked = conv2d(x, w, bc=4)
+        np.testing.assert_allclose(full, blocked, rtol=1e-4, atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        cin=st.sampled_from([2, 4, 8]),
+        cout=st.sampled_from([2, 4, 6]),
+        hw=st.sampled_from([8, 12, 16]),
+        k=st.sampled_from([1, 3]),
+    )
+    def test_hypothesis_shapes(self, cin, cout, hw, k):
+        x, w = randn(cin, hw, hw), randn(cout, cin, k, k)
+        np.testing.assert_allclose(
+            conv2d(x, w, bc=2), ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# mlp
+# --------------------------------------------------------------------------
+
+class TestMlp:
+    def test_basic(self):
+        x = randn(16, 32)
+        wg, wu, wd = randn(32, 64), randn(32, 64), randn(64, 32)
+        np.testing.assert_allclose(
+            mlp(x, wg, wu, wd, bf=16), ref.mlp_ref(x, wg, wu, wd), rtol=1e-3, atol=1e-4
+        )
+
+    def test_single_ffn_block(self):
+        x = randn(8, 16)
+        wg, wu, wd = randn(16, 16), randn(16, 16), randn(16, 8)
+        np.testing.assert_allclose(
+            mlp(x, wg, wu, wd), ref.mlp_ref(x, wg, wu, wd), rtol=1e-3, atol=1e-4
+        )
+
+    def test_blocking_invariant(self):
+        x = randn(4, 24)
+        wg, wu, wd = randn(24, 96), randn(24, 96), randn(96, 24)
+        np.testing.assert_allclose(
+            mlp(x, wg, wu, wd, bf=96),
+            mlp(x, wg, wu, wd, bf=8),
+            rtol=2e-3,
+            atol=1e-3,
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        t=st.sampled_from([2, 8, 16]),
+        din=st.sampled_from([8, 32]),
+        ffn=st.sampled_from([16, 64, 96]),
+        bf=st.sampled_from([8, 16, 256]),
+    )
+    def test_hypothesis_shapes(self, t, din, ffn, bf):
+        x = randn(t, din)
+        wg, wu, wd = randn(din, ffn), randn(din, ffn), randn(ffn, din)
+        np.testing.assert_allclose(
+            mlp(x, wg, wu, wd, bf=bf), ref.mlp_ref(x, wg, wu, wd), rtol=1e-3, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# moe
+# --------------------------------------------------------------------------
+
+class TestMoe:
+    def test_basic(self):
+        x, we, rl = randn(16, 24), randn(4, 24, 32), randn(16, 4)
+        np.testing.assert_allclose(
+            moe(x, we, rl), ref.moe_ref(x, we, rl), rtol=1e-3, atol=1e-4
+        )
+
+    def test_single_expert(self):
+        x, we, rl = randn(8, 16), randn(1, 16, 16), randn(8, 1)
+        # One expert: MoE == plain matmul with that expert.
+        np.testing.assert_allclose(
+            moe(x, we, rl), ref.matmul_ref(x, we[0]), rtol=1e-4, atol=1e-5
+        )
+
+    def test_routing_exclusive(self):
+        # Tokens hard-routed to expert 0 must be unaffected by expert 1.
+        x = randn(4, 8)
+        we = randn(2, 8, 8)
+        rl = jnp.asarray([[10.0, -10.0]] * 4, jnp.float32)
+        out = moe(x, we, rl)
+        np.testing.assert_allclose(out, ref.matmul_ref(x, we[0]), rtol=1e-4, atol=1e-5)
+        we2 = we.at[1].set(randn(8, 8))
+        np.testing.assert_allclose(moe(x, we2, rl), out, rtol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        t=st.sampled_from([2, 8, 16]),
+        e=st.sampled_from([1, 2, 4, 8]),
+        din=st.sampled_from([8, 24]),
+        dout=st.sampled_from([8, 32]),
+    )
+    def test_hypothesis_shapes(self, t, e, din, dout):
+        x, we, rl = randn(t, din), randn(e, din, dout), randn(t, e)
+        np.testing.assert_allclose(
+            moe(x, we, rl), ref.moe_ref(x, we, rl), rtol=1e-3, atol=1e-4
+        )
+
+
+# --------------------------------------------------------------------------
+# degenerate inputs
+# --------------------------------------------------------------------------
+
+class TestEdgeCases:
+    def test_zeros_propagate(self):
+        z = jnp.zeros((8, 8), jnp.float32)
+        np.testing.assert_array_equal(matmul(z, z), z)
+
+    def test_matmul_shape_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            matmul(randn(4, 8), randn(4, 8))
+
+    def test_attention_deterministic(self):
+        q, k, v = randn(2, 16, 8), randn(2, 16, 8), randn(2, 16, 8)
+        a = attention(q, k, v)
+        b = attention(q, k, v)
+        np.testing.assert_array_equal(a, b)

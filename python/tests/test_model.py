@@ -1,0 +1,105 @@
+"""L2 model graphs + AOT lowering checks."""
+
+import json
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+def args_for(name):
+    _, specs = model.ARTIFACTS[name]
+    return [randn(*s.shape) for s in specs]
+
+
+class TestLayers:
+    def test_all_artifacts_execute(self):
+        for name, (fn, _) in model.ARTIFACTS.items():
+            out = fn(*args_for(name))
+            assert isinstance(out, tuple), name
+            assert all(np.isfinite(np.asarray(o)).all() for o in out), name
+
+    def test_attention_layer_matches_ref(self):
+        q, k, v = args_for("llama3_attention")
+        (out,) = model.llama3_attention_layer(q, k, v)
+        np.testing.assert_allclose(
+            out, ref.attention_ref(q, k, v), rtol=1e-3, atol=1e-4
+        )
+
+    def test_moe_layer_matches_ref(self):
+        x, we, rl = args_for("deepseek_moe")
+        (out,) = model.deepseek_moe_layer(x, we, rl)
+        np.testing.assert_allclose(out, ref.moe_ref(x, we, rl), rtol=1e-3, atol=1e-3)
+
+    def test_conv_layer_matches_ref(self):
+        x, w = args_for("flux_conv")
+        (out,) = model.flux_conv_layer(x, w)
+        np.testing.assert_allclose(out, ref.conv2d_ref(x, w), rtol=1e-3, atol=1e-3)
+
+    def test_mlp_layer_matches_ref(self):
+        x, wg, wu, wd = args_for("llama4_mlp")
+        (out,) = model.llama4_mlp_layer(x, wg, wu, wd)
+        np.testing.assert_allclose(
+            out, ref.mlp_ref(x, wg, wu, wd), rtol=1e-3, atol=1e-2
+        )
+
+    def test_e2e_block_matches_ref(self):
+        args = args_for("llama3_block")
+        # Gammas at 1; weights scaled like real initializations (~1/sqrt(d))
+        # so activations stay O(1) and tolerances are meaningful.
+        args[1] = jnp.ones_like(args[1])
+        args[6] = jnp.ones_like(args[6])
+        args = args[:2] + [w * 0.08 for w in args[2:6]] + [args[6]] + [
+            w * 0.08 for w in args[7:]
+        ]
+        (out,) = model.llama3_block(*args)
+        want = model.llama3_block_ref(*args)
+        np.testing.assert_allclose(out, want, rtol=2e-3, atol=2e-3)
+
+    def test_block_output_shape(self):
+        args = args_for("llama3_block")
+        (out,) = model.llama3_block(*args)
+        assert out.shape == (model.E2E_SEQ, model.E2E_HIDDEN)
+
+
+class TestAot:
+    def test_lower_artifact_produces_hlo_text(self):
+        text, entry = aot.lower_artifact("deepseek_moe")
+        assert "HloModule" in text
+        assert "ENTRY" in text
+        assert len(entry["inputs"]) == 3
+        assert entry["outputs"][0]["shape"] == [model.MOE_TOKENS, model.MOE_DOUT]
+
+    def test_artifact_registry_consistent(self):
+        for name, (fn, specs) in model.ARTIFACTS.items():
+            shapes = jax.eval_shape(fn, *specs)
+            assert isinstance(shapes, tuple), name
+            assert len(shapes) >= 1, name
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")),
+        reason="artifacts not built (run `make artifacts`)",
+    )
+    def test_manifest_matches_registry(self):
+        path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.json")
+        with open(path) as f:
+            manifest = json.load(f)
+        for name in model.ARTIFACTS:
+            assert name in manifest, name
+            entry = manifest[name]
+            assert os.path.exists(
+                os.path.join(os.path.dirname(path), entry["file"])
+            ), name
+            _, specs = model.ARTIFACTS[name]
+            assert len(entry["inputs"]) == len(specs)

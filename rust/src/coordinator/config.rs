@@ -1,0 +1,200 @@
+//! Framework configuration: typed view over the TOML-subset files in
+//! `configs/`, with CLI overrides.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::tomlmini::Doc;
+
+/// Which search strategy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    Evolutionary,
+    Mcts,
+    LlmMcts,
+}
+
+impl Strategy {
+    pub fn from_name(s: &str) -> Option<Strategy> {
+        match s {
+            "evolutionary" | "es" | "tvm" => Some(Strategy::Evolutionary),
+            "mcts" => Some(Strategy::Mcts),
+            "llm_mcts" | "rc" | "reasoning" => Some(Strategy::LlmMcts),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Evolutionary => "evolutionary",
+            Strategy::Mcts => "mcts",
+            Strategy::LlmMcts => "llm_mcts",
+        }
+    }
+
+    pub fn display(&self) -> &'static str {
+        match self {
+            Strategy::Evolutionary => "Evolutionary Search",
+            Strategy::Mcts => "MCTS",
+            Strategy::LlmMcts => "REASONING COMPILER",
+        }
+    }
+}
+
+/// One tuning run's configuration.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    pub strategy: Strategy,
+    pub workload: String,
+    pub platform: String,
+    /// Hardware-measurement budget (samples).
+    pub budget: usize,
+    /// Statistical repeats (paper: 20).
+    pub repeats: usize,
+    pub seed: u64,
+    /// LLM model profile name (llm_mcts only).
+    pub model: String,
+    /// Prompt history depth: 2 = parent+grandparent (paper default).
+    pub history_depth: usize,
+    /// MCTS branching factor (paper: B = 2).
+    pub branching: usize,
+    /// UCT exploration constant (paper: sqrt(2)).
+    pub exploration_c: f64,
+    pub rollout_len: usize,
+    pub max_trace_len: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            strategy: Strategy::LlmMcts,
+            workload: "deepseek_moe".to_string(),
+            platform: "core_i9".to_string(),
+            budget: 200,
+            repeats: 5,
+            seed: 42,
+            model: "gpt4o_mini".to_string(),
+            history_depth: 2,
+            branching: 2,
+            exploration_c: std::f64::consts::SQRT_2,
+            rollout_len: 4,
+            max_trace_len: 24,
+        }
+    }
+}
+
+impl TuneConfig {
+    /// Load from a TOML-subset file; missing keys keep defaults.
+    pub fn from_file(path: &Path) -> Result<TuneConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Doc::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Ok(Self::from_doc(&doc))
+    }
+
+    pub fn from_doc(doc: &Doc) -> TuneConfig {
+        let d = TuneConfig::default();
+        TuneConfig {
+            strategy: Strategy::from_name(doc.get_str("search.strategy", d.strategy.name()))
+                .unwrap_or(d.strategy),
+            workload: doc.get_str("workload", &d.workload).to_string(),
+            platform: doc.get_str("platform", &d.platform).to_string(),
+            budget: doc.get_usize("search.budget", d.budget),
+            repeats: doc.get_usize("search.repeats", d.repeats),
+            seed: doc.get_usize("search.seed", d.seed as usize) as u64,
+            model: doc.get_str("llm.model", &d.model).to_string(),
+            history_depth: doc.get_usize("llm.history_depth", d.history_depth),
+            branching: doc.get_usize("mcts.branching", d.branching),
+            exploration_c: doc.get_f64("mcts.exploration_c", d.exploration_c),
+            rollout_len: doc.get_usize("mcts.rollout_len", d.rollout_len),
+            max_trace_len: doc.get_usize("search.max_trace_len", d.max_trace_len),
+        }
+    }
+
+    /// Apply `--key value` CLI overrides.
+    pub fn apply_cli(&mut self, args: &crate::util::cli::Args) {
+        if let Some(s) = args.opt("strategy").and_then(Strategy::from_name) {
+            self.strategy = s;
+        }
+        if let Some(w) = args.opt("workload") {
+            self.workload = w.to_string();
+        }
+        if let Some(p) = args.opt("platform") {
+            self.platform = p.to_string();
+        }
+        self.budget = args.opt_usize("budget", self.budget);
+        self.repeats = args.opt_usize("repeats", self.repeats);
+        self.seed = args.opt_u64("seed", self.seed);
+        if let Some(m) = args.opt("model") {
+            self.model = m.to_string();
+        }
+        self.history_depth = args.opt_usize("history-depth", self.history_depth);
+        self.branching = args.opt_usize("branching", self.branching);
+        self.exploration_c = args.opt_f64("exploration-c", self.exploration_c);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TuneConfig::default();
+        assert_eq!(c.branching, 2);
+        assert!((c.exploration_c - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(c.history_depth, 2);
+        assert_eq!(c.model, "gpt4o_mini");
+    }
+
+    #[test]
+    fn from_doc_overrides() {
+        let doc = Doc::parse(
+            r#"
+workload = "flux_conv"
+platform = "m2_pro"
+[search]
+strategy = "es"
+budget = 500
+[mcts]
+branching = 4
+[llm]
+model = "llama33_70b"
+history_depth = 3
+"#,
+        )
+        .unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.strategy, Strategy::Evolutionary);
+        assert_eq!(c.workload, "flux_conv");
+        assert_eq!(c.platform, "m2_pro");
+        assert_eq!(c.budget, 500);
+        assert_eq!(c.branching, 4);
+        assert_eq!(c.model, "llama33_70b");
+        assert_eq!(c.history_depth, 3);
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --strategy mcts --budget 99 --platform graviton2 --history-depth 3"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args);
+        assert_eq!(c.strategy, Strategy::Mcts);
+        assert_eq!(c.budget, 99);
+        assert_eq!(c.platform, "graviton2");
+        assert_eq!(c.history_depth, 3);
+    }
+
+    #[test]
+    fn strategy_aliases() {
+        assert_eq!(Strategy::from_name("tvm"), Some(Strategy::Evolutionary));
+        assert_eq!(Strategy::from_name("rc"), Some(Strategy::LlmMcts));
+        assert_eq!(Strategy::from_name("xx"), None);
+    }
+}

@@ -1,0 +1,121 @@
+//! Serving metrics: per-artifact latency/throughput summaries.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::util::stats::{percentile, Summary};
+
+/// Rolling metrics for one served model (artifact).
+#[derive(Debug, Clone, Default)]
+pub struct ModelMetrics {
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_latency: Summary,
+    /// Per-request end-to-end latencies (seconds), kept for percentiles.
+    pub request_latencies: Vec<f64>,
+}
+
+impl ModelMetrics {
+    pub fn record_batch(&mut self, batch_size: usize, exec_latency_s: f64, request_waits: &[f64]) {
+        self.requests += batch_size as u64;
+        self.batches += 1;
+        self.batch_latency.record(exec_latency_s);
+        for &w in request_waits {
+            self.request_latencies.push(w + exec_latency_s);
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        percentile(&self.request_latencies, 50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        percentile(&self.request_latencies, 99.0)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Registry of metrics across served models + wall-clock throughput.
+#[derive(Debug)]
+pub struct ServerMetrics {
+    pub per_model: BTreeMap<String, ModelMetrics>,
+    started: Instant,
+}
+
+impl Default for ServerMetrics {
+    fn default() -> Self {
+        ServerMetrics { per_model: BTreeMap::new(), started: Instant::now() }
+    }
+}
+
+impl ServerMetrics {
+    pub fn model(&mut self, name: &str) -> &mut ModelMetrics {
+        self.per_model.entry(name.to_string()).or_default()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.per_model.values().map(|m| m.requests).sum()
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        if elapsed <= 0.0 {
+            0.0
+        } else {
+            self.total_requests() as f64 / elapsed
+        }
+    }
+
+    /// Render the serving report table.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<20} {:>8} {:>8} {:>10} {:>10} {:>10}\n",
+            "model", "reqs", "batches", "mean batch", "p50 ms", "p99 ms"
+        ));
+        for (name, m) in &self.per_model {
+            out.push_str(&format!(
+                "{:<20} {:>8} {:>8} {:>10.2} {:>10.3} {:>10.3}\n",
+                name,
+                m.requests,
+                m.batches,
+                m.mean_batch_size(),
+                m.p50() * 1e3,
+                m.p99() * 1e3
+            ));
+        }
+        out.push_str(&format!(
+            "total: {} requests, {:.1} req/s\n",
+            self.total_requests(),
+            self.throughput_rps()
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports() {
+        let mut m = ServerMetrics::default();
+        m.model("moe").record_batch(4, 0.002, &[0.0, 0.001, 0.0005, 0.0]);
+        m.model("moe").record_batch(2, 0.001, &[0.0, 0.0]);
+        let mm = &m.per_model["moe"];
+        assert_eq!(mm.requests, 6);
+        assert_eq!(mm.batches, 2);
+        assert_eq!(mm.mean_batch_size(), 3.0);
+        assert!(mm.p99() >= mm.p50());
+        let report = m.report();
+        assert!(report.contains("moe"));
+        assert!(report.contains("total: 6 requests"));
+    }
+}

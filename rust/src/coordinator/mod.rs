@@ -1,0 +1,15 @@
+//! L3 coordinator: the framework around the search — typed configuration,
+//! repeated tuning sessions with the paper's statistical protocol, the
+//! end-to-end multi-task driver, and the dynamic-batching serving loop
+//! over PJRT executables.
+
+pub mod config;
+pub mod metrics;
+pub mod registry;
+pub mod server;
+pub mod tuner;
+
+pub use config::{Strategy, TuneConfig};
+pub use registry::{Registry, RunRecord};
+pub use server::{Server, ServerConfig};
+pub use tuner::{run_e2e, run_once, run_session, E2eResult, SessionResult};

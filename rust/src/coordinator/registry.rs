@@ -1,0 +1,253 @@
+//! Run registry: persistent records of tuning sessions.
+//!
+//! Every session can be recorded as a JSON document under `results/runs/`;
+//! `rcc history` lists them and `rcc best` replays the best trace of a
+//! recorded run. This is the framework feature that makes tuned schedules
+//! *deployable*: the serving path looks up the best schedule for a
+//! (workload, platform) pair instead of re-tuning.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::schedule::Transform;
+use crate::util::json::{arr, num, s, Json};
+
+use super::tuner::SessionResult;
+
+/// Where run records live.
+#[derive(Debug, Clone)]
+pub struct Registry {
+    pub dir: PathBuf,
+}
+
+/// A persisted record of one tuning session.
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    pub id: String,
+    pub strategy: String,
+    pub workload: String,
+    pub platform: String,
+    pub mean_speedup: f64,
+    pub best_speedup: f64,
+    pub samples: usize,
+    pub best_trace: Vec<Transform>,
+}
+
+impl Registry {
+    pub fn open(dir: &Path) -> Result<Registry> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating registry dir {}", dir.display()))?;
+        Ok(Registry { dir: dir.to_path_buf() })
+    }
+
+    pub fn default_location() -> Result<Registry> {
+        Registry::open(Path::new("results/runs"))
+    }
+
+    /// Persist a session; returns the record id.
+    pub fn record(&self, session: &SessionResult) -> Result<String> {
+        let best_run = session
+            .runs
+            .iter()
+            .max_by(|a, b| a.best_speedup().partial_cmp(&b.best_speedup()).unwrap())
+            .ok_or_else(|| anyhow!("empty session"))?;
+        let id = format!(
+            "{}-{}-{}-{:x}",
+            session.config_strategy.name(),
+            session.workload,
+            session.platform,
+            fxhash(&format!(
+                "{}{}{}",
+                session.mean_speedup(),
+                best_run.samples_used,
+                session.runs.len()
+            ))
+        );
+        let mut doc = Json::obj();
+        doc.set("id", s(&id))
+            .set("strategy", s(session.config_strategy.name()))
+            .set("workload", s(&session.workload))
+            .set("platform", s(&session.platform))
+            .set("repeats", num(session.runs.len() as f64))
+            .set("mean_speedup", num(session.mean_speedup()))
+            .set("best_speedup", num(best_run.best_speedup()))
+            .set("samples", num(best_run.samples_used as f64))
+            .set(
+                "best_trace",
+                arr(best_run
+                    .best_trace
+                    .iter()
+                    .map(|t| s(&crate::reasoning::engine::render_transform(t)))
+                    .collect()),
+            )
+            .set(
+                "curve",
+                arr(best_run
+                    .curve
+                    .iter()
+                    .map(|m| {
+                        let mut o = Json::obj();
+                        o.set("sample", num(m.sample as f64))
+                            .set("best_speedup", num(m.best_speedup));
+                        o
+                    })
+                    .collect()),
+            );
+        let path = self.dir.join(format!("{id}.json"));
+        std::fs::write(&path, doc.to_pretty())
+            .with_context(|| format!("writing {}", path.display()))?;
+        Ok(id)
+    }
+
+    /// List all persisted records (most recent speedup first).
+    pub fn list(&self) -> Result<Vec<RunRecord>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            match Self::load_record(&path) {
+                Ok(r) => out.push(r),
+                Err(e) => log::warn!("skipping malformed record {}: {e}", path.display()),
+            }
+        }
+        out.sort_by(|a, b| b.best_speedup.partial_cmp(&a.best_speedup).unwrap());
+        Ok(out)
+    }
+
+    /// Best record for a (workload, platform) pair, if any.
+    pub fn best_for(&self, workload: &str, platform: &str) -> Result<Option<RunRecord>> {
+        Ok(self
+            .list()?
+            .into_iter()
+            .find(|r| r.workload == workload && r.platform == platform))
+    }
+
+    fn load_record(path: &Path) -> Result<RunRecord> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text).ok_or_else(|| anyhow!("malformed JSON"))?;
+        let get_s = |k: &str| -> Result<String> {
+            doc.get(k)
+                .and_then(|v| v.as_str())
+                .map(String::from)
+                .ok_or_else(|| anyhow!("missing {k}"))
+        };
+        let get_n =
+            |k: &str| -> Result<f64> { doc.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("missing {k}")) };
+        let trace_texts: Vec<String> = doc
+            .get("best_trace")
+            .and_then(|v| v.as_arr())
+            .map(|a| {
+                a.iter()
+                    .filter_map(|t| t.as_str().map(String::from))
+                    .collect()
+            })
+            .unwrap_or_default();
+        // Re-parse the rendered transforms through the proposal parser.
+        let mut best_trace = Vec::new();
+        for t in &trace_texts {
+            if let crate::reasoning::proposal::Parsed::Valid(tr) =
+                parse_one_rendered(t).ok_or_else(|| anyhow!("bad trace element {t}"))?
+            {
+                best_trace.push(tr);
+            }
+        }
+        Ok(RunRecord {
+            id: get_s("id")?,
+            strategy: get_s("strategy")?,
+            workload: get_s("workload")?,
+            platform: get_s("platform")?,
+            mean_speedup: get_n("mean_speedup")?,
+            best_speedup: get_n("best_speedup")?,
+            samples: get_n("samples")? as usize,
+            best_trace,
+        })
+    }
+}
+
+fn parse_one_rendered(text: &str) -> Option<crate::reasoning::proposal::Parsed> {
+    let resp = format!("Transformations to apply: {text}.");
+    crate::reasoning::proposal::parse_response(&resp).into_iter().next()
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{run_session, Strategy, TuneConfig};
+
+    fn temp_registry() -> Registry {
+        let dir = std::env::temp_dir().join(format!(
+            "rcc_reg_{}_{}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        Registry::open(&dir).unwrap()
+    }
+
+    fn session() -> SessionResult {
+        run_session(&TuneConfig {
+            strategy: Strategy::LlmMcts,
+            budget: 25,
+            repeats: 2,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn record_and_list_roundtrip() {
+        let reg = temp_registry();
+        let s = session();
+        let id = reg.record(&s).unwrap();
+        let records = reg.list().unwrap();
+        assert_eq!(records.len(), 1);
+        let r = &records[0];
+        assert_eq!(r.id, id);
+        assert_eq!(r.workload, "deepseek_moe");
+        assert!((r.mean_speedup - s.mean_speedup()).abs() < 1e-9);
+        assert!(!r.best_trace.is_empty());
+        std::fs::remove_dir_all(&reg.dir).ok();
+    }
+
+    #[test]
+    fn recorded_trace_replays_on_workload() {
+        let reg = temp_registry();
+        let s = session();
+        reg.record(&s).unwrap();
+        let r = reg.best_for("deepseek_moe", "core_i9").unwrap().unwrap();
+        let base = crate::tir::WorkloadId::DeepSeekMoe.build();
+        let sched = crate::schedule::Schedule::new(base);
+        let (best, applied) = sched.apply_all(&r.best_trace);
+        assert_eq!(applied, r.best_trace.len(), "persisted trace must replay");
+        best.current.validate().unwrap();
+        std::fs::remove_dir_all(&reg.dir).ok();
+    }
+
+    #[test]
+    fn best_for_missing_pair_is_none() {
+        let reg = temp_registry();
+        assert!(reg.best_for("nope", "core_i9").unwrap().is_none());
+        std::fs::remove_dir_all(&reg.dir).ok();
+    }
+
+    #[test]
+    fn malformed_records_skipped() {
+        let reg = temp_registry();
+        std::fs::write(reg.dir.join("junk.json"), "{not json").unwrap();
+        assert!(reg.list().unwrap().is_empty());
+        std::fs::remove_dir_all(&reg.dir).ok();
+    }
+}

@@ -1,0 +1,487 @@
+//! Loop-nest access analysis.
+//!
+//! Shared machinery for the hardware simulator, the rollout surrogate and
+//! the feature extractor: per-depth working-set footprints, cache-line
+//! traffic under a capacity model, innermost-access strides, parallel
+//! structure and accumulation-chain analysis.
+//!
+//! The model is the classic tiling-reuse analysis: for a cache of capacity
+//! `C`, find the outermost loop depth `d` at which the nest's working set
+//! fits in `C`; every loop outside `d` then re-streams that working set, so
+//! traffic(level) = trips(0..d) x footprint_lines(d).
+
+use crate::tir::expr::LinIdx;
+use crate::tir::program::{BufKind, LoopKind, Program, ReduceOp, Stage};
+
+pub const LINE_BYTES: i64 = 64;
+const F32_BYTES: i64 = 4;
+
+/// Analysis of one buffer access (load or store) within a stage.
+#[derive(Debug, Clone)]
+pub struct AccessInfo {
+    pub buffer: usize,
+    pub is_store: bool,
+    /// Distinct elements touched by the loops at depth >= d, for d in 0..=n.
+    pub elems_at_depth: Vec<i64>,
+    /// Distinct cache lines touched by the loops at depth >= d.
+    pub lines_at_depth: Vec<i64>,
+    /// Stride (in elements) of the flattened index w.r.t. the innermost
+    /// loop: 0 = invariant (broadcast), 1 = contiguous, else strided.
+    pub innermost_stride: i64,
+}
+
+/// Full analysis of one stage.
+#[derive(Debug, Clone)]
+pub struct StageAnalysis {
+    /// trips[d] = product of extents of loops 0..d (iterations of everything
+    /// outside depth d). trips[0] = 1.
+    pub trips: Vec<i64>,
+    /// Combined working set in bytes at each depth (line-granular).
+    pub footprint_bytes: Vec<i64>,
+    pub accesses: Vec<AccessInfo>,
+    /// Product of extents of the parallel prefix.
+    pub parallel_extent: i64,
+    /// Independent accumulation chains available in the innermost region
+    /// (spatial unroll x vector lanes) — bounds latency-limited FMA issue.
+    pub chains: i64,
+    /// Innermost loop is vectorized, and with which extent.
+    pub vector_extent: Option<i64>,
+    /// Product of unrolled loop extents.
+    pub unrolled_product: i64,
+    /// Iterations executed by non-unrolled, non-vectorized loop levels —
+    /// drives branch/increment overhead.
+    pub overhead_iters: f64,
+    /// Writebacks of the output per full stage execution (accumulation
+    /// interruption model; see `writeback_count`).
+    pub writebacks: i64,
+    /// Bytes of output live across one accumulation-interruption cycle:
+    /// the output lines touched inside the outermost reduction loop. This
+    /// is the working set that writeback traffic thrashes, so it decides
+    /// which cache level absorbs the spills.
+    pub wb_tile_bytes: i64,
+    pub total_iters: i64,
+    pub flops: u64,
+}
+
+/// Analyze a stage. Cost-model hot path: called once per candidate
+/// schedule evaluation.
+pub fn analyze(program: &Program, stage: &Stage) -> StageAnalysis {
+    let n = stage.loops.len();
+
+    // trips[d] = prod extents[0..d]
+    let mut trips = Vec::with_capacity(n + 1);
+    trips.push(1i64);
+    for l in &stage.loops {
+        let last = *trips.last().unwrap();
+        trips.push(last.saturating_mul(l.extent));
+    }
+    let total_iters = trips[n];
+
+    // Axis spans: span_from[d][axis] = range of the axis expression when
+    // loops at depth >= d run and loops outside are fixed.
+    // Axis exprs are monotone non-decreasing in every var (splits produce
+    // vo*f+vi, fuses produce f/e and f%e), so endpoint evaluation is exact.
+    let n_axes = stage.axes.len();
+    let env_lo = vec![0i64; stage.var_extents.len()];
+    let mut span_from: Vec<Vec<i64>> = vec![vec![0; n_axes]; n + 1];
+    for d in (0..n).rev() {
+        let mut env_hi = env_lo.clone();
+        for l in &stage.loops[d..] {
+            env_hi[l.var] = l.extent - 1;
+        }
+        for (a, e) in stage.axis_exprs.iter().enumerate() {
+            let lo = e.eval(&env_lo);
+            let hi = e.eval(&env_hi);
+            span_from[d][a] = (hi - lo).min(stage.axes[a].extent - 1);
+        }
+    }
+
+    // Collect accesses: all loads + the output store.
+    let mut loads = Vec::new();
+    stage.block.rhs.loads(&mut loads);
+    let mut raw: Vec<(usize, Vec<LinIdx>, bool)> = loads
+        .into_iter()
+        .map(|(b, idx)| (b, idx.to_vec(), false))
+        .collect();
+    raw.push((stage.block.out, stage.block.out_idx.clone(), true));
+
+    let innermost_var_span = |d: usize| -> Vec<i64> {
+        // Span of each axis when only the innermost loop moves.
+        let mut env_hi = env_lo.clone();
+        if n > 0 {
+            env_hi[stage.loops[d].var] = stage.loops[d].extent - 1;
+        }
+        stage
+            .axis_exprs
+            .iter()
+            .map(|e| e.eval(&env_hi) - e.eval(&env_lo))
+            .collect()
+    };
+    let inner_axis_delta: Vec<i64> = if n > 0 {
+        // Per-axis delta for one step of the innermost loop.
+        let mut env_one = env_lo.clone();
+        env_one[stage.loops[n - 1].var] = 1;
+        stage
+            .axis_exprs
+            .iter()
+            .map(|e| e.eval(&env_one) - e.eval(&env_lo))
+            .collect()
+    } else {
+        vec![0; n_axes]
+    };
+    let _ = innermost_var_span;
+
+    let mut accesses = Vec::with_capacity(raw.len());
+    let mut footprint_bytes = vec![0i64; n + 1];
+    for (buf, idx, is_store) in raw {
+        let shape = &program.buffers[buf].shape;
+        let mut elems_at_depth = Vec::with_capacity(n + 1);
+        let mut lines_at_depth = Vec::with_capacity(n + 1);
+        for d in 0..=n {
+            let spans = &span_from[d]; // span_from[n] is all zeros
+
+            // Per-dimension element counts and line count.
+            let mut elems: i64 = 1;
+            let mut lines: i64 = 1;
+            for (dim, ix) in idx.iter().enumerate() {
+                let dim_size = shape[dim];
+                let mut span: i64 = 0;
+                for &(a, k) in &ix.terms {
+                    span += spans[a] * k.abs();
+                }
+                span = span.min(dim_size - 1);
+                let dim_elems = (span + 1).min(dim_size);
+                elems = elems.saturating_mul(dim_elems);
+                if dim + 1 == idx.len() {
+                    // Last (contiguous) dim: line count from the byte span.
+                    let dense_lines = (span * F32_BYTES) / LINE_BYTES + 1;
+                    lines = lines.saturating_mul(dense_lines.min(dim_elems));
+                } else {
+                    lines = lines.saturating_mul(dim_elems);
+                }
+            }
+            elems_at_depth.push(elems);
+            lines_at_depth.push(lines);
+            footprint_bytes[d] += lines * LINE_BYTES;
+        }
+        // Innermost stride: change in the flattened index per step of the
+        // innermost loop.
+        let strides = program.buffers[buf].strides();
+        let mut innermost_stride: i64 = 0;
+        for (dim, ix) in idx.iter().enumerate() {
+            let mut delta: i64 = 0;
+            for &(a, k) in &ix.terms {
+                delta += inner_axis_delta[a] * k;
+            }
+            innermost_stride += delta * strides[dim];
+        }
+        accesses.push(AccessInfo {
+            buffer: buf,
+            is_store,
+            elems_at_depth,
+            lines_at_depth,
+            innermost_stride: innermost_stride.abs(),
+        });
+    }
+
+    // Parallel prefix.
+    let parallel_extent: i64 = stage
+        .loops
+        .iter()
+        .take_while(|l| l.kind == LoopKind::Parallel)
+        .map(|l| l.extent)
+        .product();
+
+    // Vector + unroll structure.
+    let vector_extent = stage
+        .loops
+        .last()
+        .filter(|l| l.kind == LoopKind::Vectorized)
+        .map(|l| l.extent);
+    let unrolled_product: i64 = stage
+        .loops
+        .iter()
+        .filter(|l| l.kind == LoopKind::Unrolled)
+        .map(|l| l.extent)
+        .product();
+
+    // Independent accumulation chains: spatial loops in the innermost
+    // region (vectorized innermost + unrolled loops adjacent to it) supply
+    // independent accumulators. Capped by the register file.
+    let mut chains: i64 = 1;
+    if stage.block.reduce != ReduceOp::Assign {
+        for (li, l) in stage.loops.iter().enumerate().rev() {
+            let spatial = !stage.loop_is_reduction(li);
+            match l.kind {
+                LoopKind::Vectorized => {
+                    if spatial {
+                        chains = chains.saturating_mul(l.extent);
+                    }
+                }
+                LoopKind::Unrolled => {
+                    if spatial {
+                        chains = chains.saturating_mul(l.extent);
+                    }
+                    // Unrolled reduction loops break the dependence chain too
+                    // (compiler reassociates across the unrolled body).
+                    if !spatial {
+                        chains = chains.saturating_mul(l.extent.min(4));
+                    }
+                }
+                _ => break, // chain region = innermost vec/unroll suffix
+            }
+        }
+    } else {
+        chains = 64; // elementwise: no carried dependence
+    }
+
+    // Loop bookkeeping overhead: each non-unrolled, non-vectorized loop
+    // level costs ~1 branch+increment per iteration of that level.
+    let mut overhead_iters = 0.0f64;
+    for (li, l) in stage.loops.iter().enumerate() {
+        let level_iters = trips[li + 1] as f64;
+        match l.kind {
+            LoopKind::Unrolled => overhead_iters += level_iters * 0.05,
+            LoopKind::Vectorized => overhead_iters += level_iters / l.extent.max(1) as f64,
+            _ => overhead_iters += level_iters,
+        }
+    }
+
+    let writebacks = writeback_count(stage, &trips);
+
+    // Output tile live across accumulation interruptions: the store's
+    // footprint inside the outermost reduction loop.
+    let outermost_reduction = (0..n).find(|&li| stage.loop_is_reduction(li));
+    let wb_tile_bytes = accesses
+        .iter()
+        .find(|acc| acc.is_store)
+        .map(|acc| {
+            let d = outermost_reduction.map(|li| li + 1).unwrap_or(n);
+            acc.lines_at_depth[d] * LINE_BYTES
+        })
+        .unwrap_or(0);
+
+    StageAnalysis {
+        trips,
+        footprint_bytes,
+        accesses,
+        parallel_extent,
+        chains: chains.clamp(1, 64),
+        vector_extent,
+        unrolled_product,
+        overhead_iters,
+        writebacks,
+        wb_tile_bytes,
+        total_iters,
+        flops: stage.flops(),
+    }
+}
+
+/// How many times output elements are written back during the stage.
+///
+/// An accumulation run is uninterrupted while the innermost suffix of loops
+/// leaves the output index unchanged (pure reduction suffix). Each
+/// interruption forces a spill + reload. `cache_write` widens the window:
+/// a register/L1 tile lets small spatial loops live inside the run.
+fn writeback_count(stage: &Stage, trips: &[i64]) -> i64 {
+    let n = stage.loops.len();
+    if stage.block.reduce == ReduceOp::Assign {
+        return trips[n]; // every iteration stores
+    }
+    // Find the innermost suffix of loops that do not move the output index.
+    let mut suffix_run: i64 = 1;
+    let mut tile_elems: i64 = 1;
+    for li in (0..n).rev() {
+        let l = &stage.loops[li];
+        let moves_output = stage
+            .axes_of_var(l.var)
+            .iter()
+            .any(|&a| stage.block.out_idx.iter().any(|ix| ix.coeff(a) != 0));
+        if !moves_output {
+            suffix_run = suffix_run.saturating_mul(l.extent);
+        } else if stage.cache_write && tile_elems.saturating_mul(l.extent) <= 1024 {
+            // With a local accumulation tile, small spatial loops stay
+            // inside the run (the tile holds extent more accumulators).
+            tile_elems = tile_elems.saturating_mul(l.extent);
+            suffix_run = suffix_run.saturating_mul(l.extent);
+        } else {
+            break;
+        }
+    }
+    (trips[n] / suffix_run.max(1)).max(1)
+}
+
+/// Cache traffic in bytes for a capacity level: the tiling-reuse model.
+/// `store_weight` scales store traffic (read-for-ownership + write-back).
+pub fn traffic_bytes(a: &StageAnalysis, capacity: i64, store_weight: f64) -> f64 {
+    let n = a.trips.len() - 1;
+    // Outermost depth whose working set fits.
+    let mut d_fit = n;
+    for d in 0..=n {
+        if a.footprint_bytes[d] <= capacity {
+            d_fit = d;
+            break;
+        }
+    }
+    let trips = a.trips[d_fit] as f64;
+    let mut bytes = 0.0;
+    for acc in &a.accesses {
+        let w = if acc.is_store { store_weight } else { 1.0 };
+        bytes += trips * acc.lines_at_depth[d_fit] as f64 * LINE_BYTES as f64 * w;
+    }
+    bytes
+}
+
+/// Whole-program analysis (per stage) plus total weights for multi-stage
+/// programs (attention = scores + output matmuls).
+pub fn analyze_program(program: &Program) -> Vec<StageAnalysis> {
+    program
+        .stages
+        .iter()
+        .map(|s| analyze(program, s))
+        .collect()
+}
+
+/// Does any buffer access have unit stride w.r.t. the innermost loop?
+/// (Cheap helper for the feature extractor / reasoning diagnostics.)
+pub fn innermost_contiguity(a: &StageAnalysis) -> (usize, usize, usize) {
+    let mut contiguous = 0;
+    let mut broadcast = 0;
+    let mut strided = 0;
+    for acc in &a.accesses {
+        match acc.innermost_stride {
+            0 => broadcast += 1,
+            1 => contiguous += 1,
+            _ => strided += 1,
+        }
+    }
+    (contiguous, broadcast, strided)
+}
+
+/// Is `kind` a buffer the traffic model should ignore at register level?
+pub fn is_external(kind: BufKind) -> bool {
+    matches!(kind, BufKind::Input | BufKind::Output | BufKind::Intermediate)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload;
+
+    #[test]
+    fn naive_matmul_footprints() {
+        // C[4,6] = A[4,8] x B[8,6]
+        let p = workload::moe_matmul("m", 4, 6, 8);
+        let a = analyze(&p, &p.stages[0]);
+        assert_eq!(a.total_iters, 4 * 6 * 8);
+        assert_eq!(a.trips, vec![1, 4, 24, 192]);
+        // At depth 0 the whole of A, B, C is live.
+        // A: 4x8=32 elems, B: 8x6=48, C: 4x6=24.
+        assert_eq!(a.accesses[0].elems_at_depth[0], 32);
+        assert_eq!(a.accesses[1].elems_at_depth[0], 48);
+        assert_eq!(a.accesses[2].elems_at_depth[0], 24);
+        // At full depth (single iteration): 1 element each.
+        assert_eq!(a.accesses[0].elems_at_depth[3], 1);
+        assert_eq!(a.accesses[1].elems_at_depth[3], 1);
+    }
+
+    #[test]
+    fn innermost_strides_matmul() {
+        // Loops (t, j, k): A[t,k] stride 1 in k; B[k,j] stride = row (6);
+        // C[t,j] invariant in k (stride 0).
+        let p = workload::moe_matmul("m", 4, 6, 8);
+        let a = analyze(&p, &p.stages[0]);
+        assert_eq!(a.accesses[0].innermost_stride, 1); // A
+        assert_eq!(a.accesses[1].innermost_stride, 6); // B
+        assert_eq!(a.accesses[2].innermost_stride, 0); // C store
+    }
+
+    #[test]
+    fn writebacks_reduction_innermost_vs_outermost() {
+        let p = workload::moe_matmul("m", 4, 6, 8);
+        let a = analyze(&p, &p.stages[0]);
+        // k innermost: one writeback per output element.
+        assert_eq!(a.writebacks, 24);
+        // Reorder k outermost: writeback storm.
+        let q = Transform::Reorder { stage: 0, perm: vec![2, 0, 1] }
+            .apply(&p)
+            .unwrap();
+        let aq = analyze(&q, &q.stages[0]);
+        assert_eq!(aq.writebacks, 192);
+    }
+
+    #[test]
+    fn cache_write_extends_run() {
+        let p = workload::moe_matmul("m", 4, 6, 8);
+        // Put j inside k: (t, k, j) — j interrupts accumulation.
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 2, 1] }.apply(&p).unwrap();
+        let aq = analyze(&q, &q.stages[0]);
+        assert_eq!(aq.writebacks, 192); // every iteration spills
+        let qc = Transform::CacheWrite { stage: 0 }.apply(&q).unwrap();
+        let aqc = analyze(&qc, &qc.stages[0]);
+        // j-tile (6 accumulators) lives locally: one writeback per (t) x j.
+        assert!(aqc.writebacks < aq.writebacks);
+    }
+
+    #[test]
+    fn traffic_fits_vs_streams() {
+        let p = workload::moe_matmul("m", 16, 64, 64);
+        let a = analyze(&p, &p.stages[0]);
+        // Huge cache: cold misses only (footprint at depth 0).
+        let cold = traffic_bytes(&a, 1 << 30, 1.0);
+        assert_eq!(cold, a.footprint_bytes[0] as f64);
+        // Tiny cache: traffic strictly larger.
+        let hot = traffic_bytes(&a, 1 << 8, 1.0);
+        assert!(hot > cold * 4.0, "hot={hot} cold={cold}");
+    }
+
+    #[test]
+    fn tiling_reduces_small_cache_traffic() {
+        // B streamed repeatedly: tiling j should cut the per-trip footprint.
+        let p = workload::moe_matmul("m", 16, 256, 256);
+        let a_naive = analyze(&p, &p.stages[0]);
+        // Tile j by 16 and k by 16, order (t, j0, k0, j1, k1).
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 16 }.apply(&p).unwrap();
+        let q = Transform::TileSize { stage: 0, loop_idx: 3, factor: 16 }.apply(&q).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2, 4] }.apply(&q).unwrap();
+        let a_tiled = analyze(&q, &q.stages[0]);
+        let cap = 32 << 10; // 32 KB L1
+        let t_naive = traffic_bytes(&a_naive, cap, 1.0);
+        let t_tiled = traffic_bytes(&a_tiled, cap, 1.0);
+        assert!(
+            t_tiled < t_naive,
+            "tiled traffic {t_tiled} should beat naive {t_naive}"
+        );
+    }
+
+    #[test]
+    fn parallel_and_vector_structure() {
+        let p = workload::moe_matmul("m", 16, 64, 64);
+        let q = Transform::Parallel { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 16 }.apply(&q).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2] }.apply(&q).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 3 }.apply(&q).unwrap();
+        let a = analyze(&q, &q.stages[0]);
+        assert_eq!(a.parallel_extent, 16);
+        assert_eq!(a.vector_extent, Some(16));
+        assert!(a.chains >= 16); // vectorized spatial loop gives 16 chains
+    }
+
+    #[test]
+    fn conv_footprint_includes_halo() {
+        let p = workload::conv2d("c", 4, 4, 10, 10, 3);
+        let a = analyze(&p, &p.stages[0]);
+        // Input footprint at depth 0 = full input.
+        assert_eq!(a.accesses[0].elems_at_depth[0], 4 * 10 * 10);
+    }
+
+    #[test]
+    fn overhead_drops_with_unroll_and_vectorize() {
+        let p = workload::moe_matmul("m", 16, 64, 64);
+        let base = analyze(&p, &p.stages[0]).overhead_iters;
+        let q = Transform::Unroll { stage: 0, loop_idx: 2 }.apply(&p).unwrap();
+        let unrolled = analyze(&q, &q.stages[0]).overhead_iters;
+        assert!(unrolled < base);
+    }
+}

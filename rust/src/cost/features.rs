@@ -1,0 +1,215 @@
+//! Schedule feature extraction.
+//!
+//! A compact numeric summary of a scheduled program, consumed by the
+//! reasoning engine's program analysis (the "hardware cost model outputs"
+//! that the paper serializes into prompts) and by diagnostics/reports.
+
+use crate::tir::Program;
+
+use super::access;
+use super::platform::Platform;
+
+/// Features of one program variant on one platform. All ratios are in
+/// [0, 1] unless noted.
+#[derive(Debug, Clone, Default)]
+pub struct Features {
+    pub total_iters: f64,
+    pub flops: f64,
+    /// Explicit SIMD vectorization present on the innermost loop.
+    pub vectorized: bool,
+    /// Extent of the vectorized loop (0 if none).
+    pub vector_extent: f64,
+    /// Fraction of loads that are contiguous w.r.t. the innermost loop.
+    pub contiguous_frac: f64,
+    /// Any strided (gather) load under vectorization.
+    pub has_gather: bool,
+    /// Product of parallel-prefix extents.
+    pub parallel_extent: f64,
+    /// parallel_extent / cores, capped at 8 (oversubscription measure).
+    pub parallel_utilization: f64,
+    /// Independent accumulation chains in the innermost region.
+    pub chains: f64,
+    /// Product of unrolled loop extents.
+    pub unrolled_product: f64,
+    /// Loop bookkeeping iterations / total iterations.
+    pub overhead_frac: f64,
+    /// DRAM traffic / cold-miss (compulsory) traffic: 1.0 = perfect reuse.
+    pub dram_amplification: f64,
+    /// L2 traffic / cold traffic.
+    pub l2_amplification: f64,
+    /// Output writebacks / output elements.
+    pub writeback_amplification: f64,
+    /// Arithmetic intensity: flops / DRAM bytes.
+    pub arithmetic_intensity: f64,
+    /// Number of loops in the (first) stage nest.
+    pub loop_count: f64,
+    pub cache_write: bool,
+    pub has_compute_location: bool,
+}
+
+/// Extract features for a program on a platform (aggregated over stages,
+/// weighted by per-stage flops).
+pub fn extract(program: &Program, platform: &Platform) -> Features {
+    let mut f = Features::default();
+    let mut total_flops = 0.0;
+    for stage in &program.stages {
+        let a = access::analyze(program, stage);
+        let w = a.flops as f64;
+        total_flops += w;
+
+        let cold = a.footprint_bytes[0] as f64;
+        let dram = access::traffic_bytes(&a, platform.l3_bytes as i64, 1.0);
+        let l2 = access::traffic_bytes(&a, platform.l1d_bytes as i64, 1.0);
+        let (contig, broadcast, strided) = access::innermost_contiguity(&a);
+        let n_acc = (contig + broadcast + strided).max(1);
+
+        f.total_iters += a.total_iters as f64;
+        f.flops += w;
+        if a.vector_extent.is_some() {
+            f.vectorized = true;
+            f.vector_extent = f.vector_extent.max(a.vector_extent.unwrap() as f64);
+            if a
+                .accesses
+                .iter()
+                .any(|acc| !acc.is_store && acc.innermost_stride > 1)
+            {
+                f.has_gather = true;
+            }
+        }
+        f.contiguous_frac += w * (contig + broadcast) as f64 / n_acc as f64;
+        f.parallel_extent += w * a.parallel_extent as f64;
+        f.chains += w * a.chains as f64;
+        f.unrolled_product += w * a.unrolled_product as f64;
+        f.overhead_frac += w * (a.overhead_iters / a.total_iters.max(1) as f64).min(4.0);
+        f.dram_amplification += w * (dram / cold.max(1.0));
+        f.l2_amplification += w * (l2 / cold.max(1.0));
+        let out_elems = a
+            .accesses
+            .iter()
+            .find(|acc| acc.is_store)
+            .map(|acc| acc.elems_at_depth[0] as f64)
+            .unwrap_or(1.0);
+        f.writeback_amplification += w * (a.writebacks as f64 / out_elems.max(1.0));
+        f.arithmetic_intensity += w * (w / dram.max(1.0));
+    }
+    let tw = total_flops.max(1.0);
+    f.contiguous_frac /= tw;
+    f.parallel_extent /= tw;
+    f.chains /= tw;
+    f.unrolled_product /= tw;
+    f.overhead_frac /= tw;
+    f.dram_amplification /= tw;
+    f.l2_amplification /= tw;
+    f.writeback_amplification /= tw;
+    f.arithmetic_intensity /= tw;
+    f.parallel_utilization = (f.parallel_extent / platform.cores as f64).min(8.0);
+    f.loop_count = program
+        .stages
+        .iter()
+        .map(|s| s.loops.len())
+        .max()
+        .unwrap_or(0) as f64;
+    f.cache_write = program.stages.iter().any(|s| s.cache_write);
+    f.has_compute_location = program.stages.iter().any(|s| s.compute_at.is_some());
+    f
+}
+
+impl Features {
+    /// Render the features as the key/value block prompts embed
+    /// ("hardware cost model outputs").
+    pub fn render(&self) -> String {
+        format!(
+            "vectorized: {} (extent {})\n\
+             contiguous load fraction: {:.2}\n\
+             gather under vectorization: {}\n\
+             parallel extent: {:.0} (utilization {:.2} of cores)\n\
+             accumulation chains: {:.1}\n\
+             unrolled product: {:.0}\n\
+             loop overhead fraction: {:.3}\n\
+             DRAM traffic amplification: {:.2}x cold\n\
+             L2 traffic amplification: {:.2}x cold\n\
+             writeback amplification: {:.2}x outputs\n\
+             arithmetic intensity: {:.2} flop/byte\n\
+             cache_write: {}, compute_location set: {}",
+            self.vectorized,
+            self.vector_extent,
+            self.contiguous_frac,
+            self.has_gather,
+            self.parallel_extent,
+            self.parallel_utilization,
+            self.chains,
+            self.unrolled_product,
+            self.overhead_frac,
+            self.dram_amplification,
+            self.l2_amplification,
+            self.writeback_amplification,
+            self.arithmetic_intensity,
+            self.cache_write,
+            self.has_compute_location,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload::{self, WorkloadId};
+
+    #[test]
+    fn naive_features_sane() {
+        let p = WorkloadId::DeepSeekMoe.build();
+        let f = extract(&p, &Platform::core_i9());
+        assert!(!f.vectorized);
+        assert_eq!(f.parallel_extent, 1.0);
+        assert!(f.dram_amplification >= 1.0);
+        assert!(f.arithmetic_intensity > 0.0);
+        assert_eq!(f.loop_count, 3.0);
+    }
+
+    #[test]
+    fn features_track_transforms() {
+        let p = workload::moe_matmul("m", 16, 512, 512);
+        let plat = Platform::core_i9();
+        let base = extract(&p, &plat);
+
+        let q = Transform::Parallel { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        let fq = extract(&q, &plat);
+        assert_eq!(fq.parallel_extent, 16.0);
+        assert!(fq.parallel_utilization > base.parallel_utilization);
+
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 16 }.apply(&p).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2] }.apply(&q).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 3 }.apply(&q).unwrap();
+        let fv = extract(&q, &plat);
+        assert!(fv.vectorized);
+        assert_eq!(fv.vector_extent, 16.0);
+        assert!(fv.chains > base.chains);
+    }
+
+    #[test]
+    fn tiling_lowers_dram_amplification() {
+        let p = workload::moe_matmul("m", 64, 2048, 2048);
+        let plat = Platform::xeon_e3(); // small caches: amplification visible
+        let base = extract(&p, &plat);
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 }.apply(&p).unwrap();
+        let q = Transform::TileSize { stage: 0, loop_idx: 3, factor: 64 }.apply(&q).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2, 4] }.apply(&q).unwrap();
+        let tiled = extract(&q, &plat);
+        assert!(
+            tiled.dram_amplification <= base.dram_amplification,
+            "tiled {} vs base {}",
+            tiled.dram_amplification,
+            base.dram_amplification
+        );
+    }
+
+    #[test]
+    fn render_mentions_key_fields() {
+        let p = WorkloadId::FluxConv.build_test();
+        let text = extract(&p, &Platform::graviton2()).render();
+        assert!(text.contains("vectorized"));
+        assert!(text.contains("DRAM traffic amplification"));
+        assert!(text.contains("parallel extent"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Cost models: the analytical surrogate f-hat used inside MCTS rollouts,
+//! the hardware simulator f that stands in for the paper's five-CPU
+//! testbed, feature extraction for prompts/diagnostics, and the platform
+//! descriptors.
+
+pub mod access;
+pub mod analytical;
+pub mod features;
+pub mod platform;
+pub mod simulator;
+
+pub use analytical::{CostModel, HardwareModel, SurrogateModel};
+pub use features::Features;
+pub use platform::Platform;

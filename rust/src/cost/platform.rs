@@ -1,0 +1,210 @@
+//! Hardware platform descriptors.
+//!
+//! The paper evaluates on five CPU platforms; the simulator is parameterized
+//! by these descriptors so the same schedule lands at different points of
+//! each platform's roofline, reproducing the cross-platform variance of
+//! Table 1/2. Numbers are public-spec-sheet values (per-core caches are
+//! per-core; L3 is the shared slice visible to one tuning process).
+
+/// One CPU platform.
+#[derive(Debug, Clone)]
+pub struct Platform {
+    pub name: &'static str,
+    pub display: &'static str,
+    /// Physical cores available to the parallel runtime.
+    pub cores: u32,
+    /// f32 lanes per SIMD op (NEON=4, AVX2=8, AVX-512=16).
+    pub simd_lanes: u32,
+    /// Vector FMA pipes per core.
+    pub fma_ports: u32,
+    /// FMA result latency in cycles (length of the accumulation chain stall).
+    pub fma_latency: f64,
+    pub freq_ghz: f64,
+    pub l1d_bytes: u64,
+    pub l2_bytes: u64,
+    /// Shared last-level cache.
+    pub l3_bytes: u64,
+    /// Per-core sustained bandwidths, GB/s.
+    pub l2_gbps: f64,
+    /// Shared L3 bandwidth, GB/s.
+    pub l3_gbps: f64,
+    /// Shared DRAM bandwidth, GB/s.
+    pub dram_gbps: f64,
+    /// Cost of entering/leaving a parallel region, microseconds.
+    pub parallel_overhead_us: f64,
+    /// Effective scalar ILP (independent scalar FMA chains the OoO core
+    /// sustains without vectorization).
+    pub scalar_ipc: f64,
+}
+
+impl Platform {
+    /// The five evaluation platforms, in the paper's Table-1 order.
+    pub fn all() -> Vec<Platform> {
+        vec![
+            Platform::graviton2(),
+            Platform::epyc_7r13(),
+            Platform::m2_pro(),
+            Platform::core_i9(),
+            Platform::xeon_e3(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Platform> {
+        Platform::all().into_iter().find(|p| p.name == name)
+    }
+
+    /// AWS Graviton2: 64x Neoverse-N1, NEON (4 f32 lanes), 2.5 GHz.
+    pub fn graviton2() -> Platform {
+        Platform {
+            name: "graviton2",
+            display: "Amazon Graviton2",
+            cores: 64,
+            simd_lanes: 4,
+            fma_ports: 2,
+            fma_latency: 4.0,
+            freq_ghz: 2.5,
+            l1d_bytes: 64 << 10,
+            l2_bytes: 1 << 20,
+            l3_bytes: 32 << 20,
+            l2_gbps: 120.0,
+            l3_gbps: 180.0,
+            dram_gbps: 190.0,
+            parallel_overhead_us: 12.0,
+            scalar_ipc: 2.0,
+        }
+    }
+
+    /// AMD EPYC 7R13 (Milan, AWS c6a): 48 cores, AVX2, 2.65 GHz.
+    pub fn epyc_7r13() -> Platform {
+        Platform {
+            name: "epyc_7r13",
+            display: "AMD EPYC 7R13",
+            cores: 48,
+            simd_lanes: 8,
+            fma_ports: 2,
+            fma_latency: 4.0,
+            freq_ghz: 2.65,
+            l1d_bytes: 32 << 10,
+            l2_bytes: 512 << 10,
+            l3_bytes: 32 << 20, // one CCD slice
+            l2_gbps: 170.0,
+            l3_gbps: 250.0,
+            dram_gbps: 150.0,
+            parallel_overhead_us: 10.0,
+            scalar_ipc: 2.5,
+        }
+    }
+
+    /// Apple M2 Pro: 8 performance cores modeled, NEON with 4 FMA pipes,
+    /// 3.5 GHz, big shared L2, very high memory bandwidth.
+    pub fn m2_pro() -> Platform {
+        Platform {
+            name: "m2_pro",
+            display: "Apple M2 Pro",
+            cores: 8,
+            simd_lanes: 4,
+            fma_ports: 4,
+            fma_latency: 3.0,
+            freq_ghz: 3.5,
+            l1d_bytes: 128 << 10,
+            l2_bytes: 4 << 20, // per-core share of the 32 MB cluster L2
+            l3_bytes: 24 << 20,
+            l2_gbps: 240.0,
+            l3_gbps: 250.0,
+            dram_gbps: 200.0,
+            parallel_overhead_us: 6.0,
+            scalar_ipc: 3.0,
+        }
+    }
+
+    /// Intel Core i9 (Raptor Lake class): 8 P-cores modeled, AVX2, 5.0 GHz.
+    /// This is the paper's ablation environment.
+    pub fn core_i9() -> Platform {
+        Platform {
+            name: "core_i9",
+            display: "Intel Core i9",
+            cores: 16,
+            simd_lanes: 8,
+            fma_ports: 2,
+            fma_latency: 4.0,
+            freq_ghz: 5.0,
+            l1d_bytes: 48 << 10,
+            l2_bytes: 2 << 20,
+            l3_bytes: 36 << 20,
+            l2_gbps: 300.0,
+            l3_gbps: 300.0,
+            dram_gbps: 90.0,
+            parallel_overhead_us: 5.0,
+            scalar_ipc: 3.0,
+        }
+    }
+
+    /// Intel Xeon E3 (Skylake-era workstation): 4 cores, AVX2, 3.5 GHz.
+    pub fn xeon_e3() -> Platform {
+        Platform {
+            name: "xeon_e3",
+            display: "Intel Xeon E3",
+            cores: 4,
+            simd_lanes: 8,
+            fma_ports: 2,
+            fma_latency: 4.0,
+            freq_ghz: 3.5,
+            l1d_bytes: 32 << 10,
+            l2_bytes: 256 << 10,
+            l3_bytes: 8 << 20,
+            l2_gbps: 140.0,
+            l3_gbps: 120.0,
+            dram_gbps: 34.0,
+            parallel_overhead_us: 4.0,
+            scalar_ipc: 2.5,
+        }
+    }
+
+    /// Peak f32 GFLOP/s of one core (2 flops per FMA lane).
+    pub fn core_peak_gflops(&self) -> f64 {
+        self.freq_ghz * self.simd_lanes as f64 * self.fma_ports as f64 * 2.0
+    }
+
+    /// Peak f32 GFLOP/s of the whole chip.
+    pub fn chip_peak_gflops(&self) -> f64 {
+        self.core_peak_gflops() * self.cores as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn five_platforms_unique_names() {
+        let all = Platform::all();
+        assert_eq!(all.len(), 5);
+        let mut names: Vec<_> = all.iter().map(|p| p.name).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), 5);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Platform::by_name("core_i9").unwrap().display, "Intel Core i9");
+        assert!(Platform::by_name("tpu_v9").is_none());
+    }
+
+    #[test]
+    fn peak_flops_sane() {
+        // Core i9: 5.0 GHz * 8 lanes * 2 ports * 2 = 160 GFLOP/s per core.
+        let p = Platform::core_i9();
+        assert_eq!(p.core_peak_gflops(), 160.0);
+        assert_eq!(p.chip_peak_gflops(), 160.0 * 16.0);
+    }
+
+    #[test]
+    fn cache_hierarchy_monotone() {
+        for p in Platform::all() {
+            assert!(p.l1d_bytes < p.l2_bytes, "{}", p.name);
+            assert!(p.l2_bytes < p.l3_bytes, "{}", p.name);
+            assert!(p.l2_gbps > p.dram_gbps / 8.0, "{}", p.name);
+        }
+    }
+}

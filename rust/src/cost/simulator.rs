@@ -1,0 +1,357 @@
+//! The hardware simulator `f` — the "testbed" the search is measured on.
+//!
+//! Substitutes for the paper's real five-CPU measurement harness (see
+//! DESIGN.md §Substitutions). For each stage it models:
+//!
+//! - **compute**: FMA issue throughput (SIMD lanes x ports) vs the
+//!   accumulation-latency bound (independent chains), plus scalar ILP when
+//!   not vectorized and gather penalties for strided vector loads;
+//! - **memory**: per-level cache traffic from the tiling-reuse analysis in
+//!   [`super::access`], divided by per-level bandwidths;
+//! - **loop overhead**: branch/increment cost per non-unrolled loop level,
+//!   and a register-pressure penalty for oversized unrolled bodies;
+//! - **parallelism**: work division over the parallel prefix with
+//!   quantization imbalance, fork/join overhead and shared-bandwidth
+//!   saturation for L3/DRAM;
+//! - **measurement noise**: small multiplicative lognormal noise per
+//!   (schedule, seed), motivating the paper's 20-repeat protocol.
+//!
+//! Deterministic given (program, platform, seed), and fast (~microseconds),
+//! so whole Table-1 sweeps run in seconds.
+
+use crate::tir::Program;
+use crate::util::rng::Pcg;
+
+use super::access::{self, StageAnalysis};
+use super::platform::Platform;
+
+/// Relative sigma of simulated measurement noise.
+const NOISE_SIGMA: f64 = 0.02;
+
+/// Independent accumulation chains the backend compiler extracts from any
+/// schedule (unroll + reassociation at -O3). Explicit Unroll/Vectorize
+/// raise `chains` beyond this floor.
+const IMPLICIT_CHAINS: f64 = 12.0;
+
+/// Fraction of SIMD lanes the backend auto-vectorizer captures on loops the
+/// schedule did not explicitly vectorize.
+const AUTOVEC_FRAC: f64 = 0.40;
+
+/// Simulated latency of one program execution, in seconds.
+/// `seed` selects the measurement-noise draw; seed 0 disables noise.
+pub fn simulate(program: &Program, platform: &Platform, seed: u64) -> f64 {
+    let mut total = 0.0;
+    for (si, stage) in program.stages.iter().enumerate() {
+        let a = access::analyze(program, stage);
+        total += stage_latency(&a, platform);
+        // Per-stage fixed launch cost (kernel call, arg setup).
+        let _ = si;
+        total += 2.0e-7;
+    }
+    if seed != 0 {
+        let mut rng = Pcg::new(seed ^ fingerprint(program));
+        let noise = (rng.gen_normal() * NOISE_SIGMA).exp();
+        total *= noise;
+    }
+    total
+}
+
+/// Breakdown of one stage's latency into its bounding terms — the
+/// explanation surface behind `rcc explain` and the perf work in
+/// EXPERIMENTS.md §Perf.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyBreakdown {
+    pub issue_s: f64,
+    pub latency_bound_s: f64,
+    pub overhead_s: f64,
+    pub pressure: f64,
+    pub l2_s: f64,
+    pub l3_s: f64,
+    pub dram_s: f64,
+    pub parallel_eff: f64,
+    pub fork_join_s: f64,
+    pub total_s: f64,
+}
+
+impl LatencyBreakdown {
+    pub fn render(&self) -> String {
+        format!(
+            "issue {:.3}ms | fma-latency {:.3}ms | loop-overhead {:.3}ms | pressure x{:.2}\n\
+             l2 {:.3}ms | l3 {:.3}ms | dram {:.3}ms | parallel eff {:.1} | fork/join {:.3}ms\n\
+             total {:.3}ms",
+            self.issue_s * 1e3,
+            self.latency_bound_s * 1e3,
+            self.overhead_s * 1e3,
+            self.pressure,
+            self.l2_s * 1e3,
+            self.l3_s * 1e3,
+            self.dram_s * 1e3,
+            self.parallel_eff,
+            self.fork_join_s * 1e3,
+            self.total_s * 1e3,
+        )
+    }
+}
+
+/// Latency of one analyzed stage on a platform, in seconds.
+pub fn stage_latency(a: &StageAnalysis, p: &Platform) -> f64 {
+    stage_breakdown(a, p).total_s
+}
+
+/// Full latency breakdown (see [`stage_latency`]).
+pub fn stage_breakdown(a: &StageAnalysis, p: &Platform) -> LatencyBreakdown {
+    let freq_hz = p.freq_ghz * 1e9;
+
+    // ---- compute bound ----------------------------------------------------
+    let flops = a.flops as f64;
+    let (lanes_eff, gather_penalty) = vector_efficiency(a, p);
+    // Throughput bound: flops / (lanes * ports * 2 flops-per-FMA).
+    let issue_cycles =
+        flops / (lanes_eff * p.fma_ports as f64 * 2.0) * gather_penalty;
+    // Latency bound: an accumulator element can only be updated every
+    // `fma_latency` cycles; independent accumulator elements (`chains`)
+    // hide the stall. The backend compiler gets baseline credit for
+    // unroll+reassociate (IMPLICIT_CHAINS) on any schedule.
+    let updates = a.total_iters as f64;
+    let chains_eff = (a.chains as f64).max(IMPLICIT_CHAINS);
+    let latency_cycles = updates * p.fma_latency / chains_eff;
+
+    // Loop bookkeeping overhead.
+    let overhead_cycles = a.overhead_iters * 1.2;
+
+    // Register pressure: unrolled body too large spills.
+    let body = a.unrolled_product * a.vector_extent.unwrap_or(1);
+    let pressure = if body > 256 {
+        1.5
+    } else if body > 64 {
+        1.15
+    } else {
+        1.0
+    };
+
+    let compute_cycles = issue_cycles.max(latency_cycles) * pressure + overhead_cycles;
+    let compute_s = compute_cycles / freq_hz;
+
+    // ---- memory bound ------------------------------------------------------
+    // Store traffic is read-for-ownership + writeback; a local accumulation
+    // tile (cache_write) write-combines.
+    let store_w = 2.0;
+    let mut l2_bytes = access::traffic_bytes(a, p.l1d_bytes as i64, store_w);
+    let l3_bytes = access::traffic_bytes(a, p.l2_bytes as i64, store_w);
+    let dram_bytes = access::traffic_bytes(a, p.l3_bytes as i64, store_w);
+
+    // Accumulation-interruption spills: writebacks beyond the compulsory
+    // one-per-element land at the level that holds the output tile — cheap
+    // (L2) when the output fits, DRAM-visible when it does not.
+    let store = a.accesses.iter().find(|acc| acc.is_store);
+    let out_elems = store.map(|s| s.elems_at_depth[0]).unwrap_or(1);
+    let excess_wb = (a.writebacks - out_elems).max(0) as f64;
+    let mut wb_spill = 0.0;
+    if a.wb_tile_bytes > p.l2_bytes as i64 {
+        // The thrashed output tile exceeds L2: spills are DRAM/L3-visible.
+        wb_spill = excess_wb * access::LINE_BYTES as f64 * 0.25;
+    } else {
+        l2_bytes += excess_wb * 4.0; // read-modify-write stays cache-resident
+    }
+
+    let l2_s = l2_bytes / (p.l2_gbps * 1e9);
+    let l3_s = (l3_bytes + wb_spill * 0.5) / (p.l3_gbps * 1e9);
+    let dram_s = (dram_bytes + wb_spill * 0.5) / (p.dram_gbps * 1e9);
+
+    // ---- parallel scaling ---------------------------------------------------
+    let par = a.parallel_extent.max(1) as f64;
+    let used = par.min(p.cores as f64);
+    // Quantization imbalance: time is set by the core with ceil(P/used) units.
+    let balance = if par > 0.0 {
+        par / (used * (par / used).ceil())
+    } else {
+        1.0
+    };
+    let eff = used * balance;
+
+    // Private resources (compute, L1->L2) scale with cores; shared L3/DRAM
+    // saturate.
+    let compute_par = compute_s / eff;
+    let l2_par = l2_s / eff;
+    let l3_par = l3_s / (eff.min(8.0));
+    let dram_par = dram_s; // shared bus
+
+    let fork_join = if par > 1.0 {
+        p.parallel_overhead_us * 1e-6
+    } else {
+        0.0
+    };
+
+    // Bounds overlap imperfectly: max + a fraction of the rest.
+    let bounds = [compute_par, l2_par, l3_par, dram_par];
+    let dominant = bounds.iter().cloned().fold(0.0, f64::max);
+    let rest: f64 = bounds.iter().sum::<f64>() - dominant;
+    LatencyBreakdown {
+        issue_s: issue_cycles / freq_hz / eff,
+        latency_bound_s: latency_cycles / freq_hz / eff,
+        overhead_s: overhead_cycles / freq_hz / eff,
+        pressure,
+        l2_s: l2_par,
+        l3_s: l3_par,
+        dram_s: dram_par,
+        parallel_eff: eff,
+        fork_join_s: fork_join,
+        total_s: dominant + 0.25 * rest + fork_join,
+    }
+}
+
+/// Effective SIMD lanes + gather penalty for vectorized innermost loops.
+fn vector_efficiency(a: &StageAnalysis, p: &Platform) -> (f64, f64) {
+    match a.vector_extent {
+        // No explicit vectorization: the backend auto-vectorizer captures a
+        // fraction of the lanes (the paper's "pre-optimized" baselines are
+        // -O3-compiled, not scalar).
+        None => ((p.simd_lanes as f64 * AUTOVEC_FRAC).max(1.0), 1.0),
+        Some(ve) => {
+            let lanes = p.simd_lanes as f64;
+            // Short vectors underfill the lanes.
+            let fill = (ve as f64 / lanes).min(4.0);
+            let lanes_eff = lanes * fill.min(1.0);
+            // Strided (non-unit, non-broadcast) loads become gathers.
+            let mut penalty = 1.0;
+            for acc in &a.accesses {
+                if !acc.is_store && acc.innermost_stride > 1 {
+                    penalty *= 3.0;
+                }
+            }
+            (lanes_eff.max(1.0), penalty)
+        }
+    }
+}
+
+/// Structural hash so noise is stable per schedule (re-measuring the same
+/// schedule with the same seed returns the same value).
+fn fingerprint(program: &Program) -> u64 {
+    let mut h: u64 = 0x9E3779B97F4A7C15;
+    for s in &program.stages {
+        for l in &s.loops {
+            h ^= (l.extent as u64).wrapping_mul(0x100000001b3);
+            h = h.rotate_left(13) ^ (l.kind as u64 + 1);
+        }
+        h = h.wrapping_mul(31).wrapping_add(s.cache_write as u64);
+    }
+    h
+}
+
+/// Speedup of `opt` over `base` on `platform` (the paper's figure of merit:
+/// unoptimized time / optimized time).
+pub fn speedup(base: &Program, opt: &Program, platform: &Platform) -> f64 {
+    simulate(base, platform, 0) / simulate(opt, platform, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload::{self, WorkloadId};
+
+    fn i9() -> Platform {
+        Platform::core_i9()
+    }
+
+    #[test]
+    fn latency_positive_and_deterministic() {
+        for w in WorkloadId::ALL {
+            let p = w.build();
+            let t1 = simulate(&p, &i9(), 0);
+            let t2 = simulate(&p, &i9(), 0);
+            assert!(t1 > 0.0, "{}", w.name());
+            assert_eq!(t1, t2);
+        }
+    }
+
+    #[test]
+    fn noise_small_and_seeded() {
+        let p = WorkloadId::DeepSeekMoe.build();
+        let base = simulate(&p, &i9(), 0);
+        let a = simulate(&p, &i9(), 1);
+        let b = simulate(&p, &i9(), 1);
+        let c = simulate(&p, &i9(), 2);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert!((a / base - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn vectorize_helps_contiguous_matmul() {
+        let p = workload::moe_matmul("m", 16, 2048, 1024);
+        let base = simulate(&p, &i9(), 0);
+        // j innermost (contiguous for B and C), tile to 16, vectorize.
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 16 }.apply(&p).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2] }.apply(&q).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 3 }.apply(&q).unwrap();
+        let t = simulate(&q, &i9(), 0);
+        assert!(t < base, "vectorized {t} vs base {base}");
+    }
+
+    #[test]
+    fn parallel_helps_large_work() {
+        let p = WorkloadId::DeepSeekMoe.build();
+        let base = simulate(&p, &i9(), 0);
+        let q = Transform::Parallel { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        let t = simulate(&q, &i9(), 0);
+        assert!(t < base, "parallel {t} vs base {base}");
+    }
+
+    #[test]
+    fn tiling_helps_cache_bound_matmul() {
+        let p = workload::moe_matmul("m", 64, 2048, 2048);
+        let base = simulate(&p, &i9(), 0);
+        // Classic register/cache tiling.
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 }.apply(&p).unwrap();
+        let q = Transform::TileSize { stage: 0, loop_idx: 3, factor: 64 }.apply(&q).unwrap();
+        // (t, j0, j1, k0, k1) -> (t, j0, k0, j1, k1)
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2, 4] }.apply(&q).unwrap();
+        let t = simulate(&q, &i9(), 0);
+        assert!(t < base, "tiled {t} vs base {base}");
+    }
+
+    #[test]
+    fn reduction_outer_writeback_storm_hurts_large_output() {
+        // When the thrashed output tile exceeds L2, hoisting the reduction
+        // loop outermost forces every accumulation run to spill to DRAM:
+        // (k, t, j) must lose to (t, k, j), which thrashes only one row.
+        let p = workload::moe_matmul("m", 2048, 2048, 64);
+        let base = Transform::Reorder { stage: 0, perm: vec![0, 2, 1] }.apply(&p).unwrap();
+        let base_t = simulate(&base, &i9(), 0);
+        let q = Transform::Reorder { stage: 0, perm: vec![2, 0, 1] }.apply(&p).unwrap();
+        let t = simulate(&q, &i9(), 0);
+        assert!(t > base_t, "reduction-outer {t} should be worse than {base_t}");
+    }
+
+    #[test]
+    fn platforms_differ() {
+        let p = WorkloadId::Llama4Mlp.build();
+        let times: Vec<f64> = Platform::all()
+            .iter()
+            .map(|pl| simulate(&p, pl, 0))
+            .collect();
+        let mut uniq = times.clone();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        assert_eq!(uniq.len(), times.len(), "{times:?}");
+    }
+
+    #[test]
+    fn good_schedule_speedup_in_paper_range() {
+        // A hand-built "good" schedule should land in the single-to-low-double
+        // digit speedup range the paper reports (not 1000x, not 1.01x).
+        let p = WorkloadId::DeepSeekMoe.build();
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 }.apply(&p).unwrap();
+        // (t, j0, j1(64), k)
+        let q = Transform::TileSize { stage: 0, loop_idx: 3, factor: 16 }.apply(&q).unwrap();
+        // (t, j0, j1, k0, k1)
+        let q = Transform::Reorder { stage: 0, perm: vec![1, 0, 3, 4, 2] }.apply(&q).unwrap();
+        // (j0, t, k0, k1, j1)
+        let q = Transform::Parallel { stage: 0, loop_idx: 0 }.apply(&q).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 4 }.apply(&q).unwrap();
+        let q = Transform::Unroll { stage: 0, loop_idx: 3 }.apply(&q).unwrap();
+        let s = speedup(&p, &q, &i9());
+        assert!(s > 2.0 && s < 400.0, "speedup {s}");
+    }
+}

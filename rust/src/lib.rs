@@ -1,0 +1,37 @@
+//! # REASONING COMPILER
+//!
+//! Reproduction of *"REASONING COMPILER: LLM-Guided Optimizations for
+//! Efficient Model Serving"* (NeurIPS 2025) as a three-layer
+//! Rust + JAX + Pallas stack.
+//!
+//! The paper casts tensor-program schedule optimization as a finite-horizon
+//! MDP searched by MCTS, where node expansion is proposed by an LLM that
+//! reasons over the program, its transformation history and cost-model
+//! feedback. This crate provides:
+//!
+//! - [`tir`] — a tensor-program IR (the MetaSchedule substrate): loop nests,
+//!   compute blocks, the five paper workloads, a printer and an interpreter.
+//! - [`schedule`] — transformation primitives (`TileSize`, `Reorder`,
+//!   `Fuse`, `Parallel`, `Vectorize`, `Unroll`, `ComputeLocation`,
+//!   `CacheWrite`), traces, legality and random sampling.
+//! - [`cost`] — feature extraction, the analytical rollout surrogate f-hat
+//!   and the per-platform hardware simulator f.
+//! - [`search`] — MCTS with UCT and the TVM-style Evolutionary Search
+//!   baseline.
+//! - [`reasoning`] — the paper's contribution: prompt construction,
+//!   proposal parsing/validation with fallback, simulated LLM model
+//!   profiles and API cost tracking.
+//! - [`coordinator`] — tuning sessions, config system, serving loop.
+//! - [`runtime`] — PJRT execution of the AOT artifacts produced by the
+//!   Python build path (`python/compile/aot.py`).
+//! - [`report`] — regenerators for every table and figure in the paper.
+
+pub mod util;
+pub mod tir;
+pub mod schedule;
+pub mod cost;
+pub mod search;
+pub mod reasoning;
+pub mod coordinator;
+pub mod runtime;
+pub mod report;

@@ -1,0 +1,406 @@
+//! `rcc` — the REASONING COMPILER command-line interface.
+//!
+//! Subcommands cover the whole system: single tuning runs, strategy
+//! comparisons, every paper table/figure regenerator, the serving demo,
+//! artifact inspection and prompt dumps. See `rcc help`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use reasoning_compiler::coordinator::{
+    run_e2e, run_session, Registry, Server, ServerConfig, Strategy, TuneConfig,
+};
+use reasoning_compiler::cost::{features, Platform};
+use reasoning_compiler::reasoning::{self, ModelProfile, PromptContext};
+use reasoning_compiler::report::{ablations, costs, figure3, platforms, Scale};
+use reasoning_compiler::runtime::Manifest;
+use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::tir::{printer, workload, WorkloadId};
+use reasoning_compiler::util::cli::Args;
+
+const HELP: &str = "\
+rcc — REASONING COMPILER (NeurIPS 2025 reproduction)
+
+USAGE: rcc <command> [--key value] [--flag]
+
+Tuning
+  tune        Run one tuning session.
+              --strategy es|mcts|rc --workload NAME --platform NAME
+              --budget N --repeats N --seed N --model NAME
+              --history-depth N --branching N [--config FILE]
+  compare     Run all three strategies head-to-head on one benchmark.
+  e2e         Tune the end-to-end Llama-3-8B task set.
+
+Paper experiments (each accepts --scale smoke|default|full, --seed, --out DIR)
+  figure3     Fig. 3 / Table 3 convergence curves
+  table1      Layer-wise sample efficiency across 5 platforms
+  table2      End-to-end Llama-3-8B across 5 platforms
+  table4      LLM-choice ablation (Fig. 4a)
+  table5      Historical-trace-depth ablation (Fig. 4b)
+  table6      MCTS branching-factor ablation
+  table7      LLM API cost accounting
+  table8      Proposal fallback rates
+  all         Run every experiment and write results/
+
+Registry
+  history     List persisted tuning runs (results/runs/).
+  best        Show + replay the best recorded schedule.
+              --workload NAME --platform NAME
+
+Serving & inspection
+  serve       Dynamic-batching serving demo over the AOT artifacts.
+              --requests N --max-batch N
+  artifacts   List + smoke-run the AOT artifacts.
+  show        Print a workload's TIR. --workload NAME
+  prompt      Print a real optimization prompt + simulated LLM response.
+  platforms   List the hardware platform descriptors.
+  models      List the LLM model profiles.
+";
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
+    if let Err(e) = dispatch(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(cmd: &str, args: &Args) -> Result<()> {
+    match cmd {
+        "help" | "--help" => {
+            println!("{HELP}");
+            Ok(())
+        }
+        "tune" => cmd_tune(args),
+        "history" => cmd_history(),
+        "best" => cmd_best(args),
+        "compare" => cmd_compare(args),
+        "e2e" => cmd_e2e(args),
+        "figure3" | "table1" | "table2" | "table4" | "table5" | "table6" | "table7"
+        | "table8" | "all" => cmd_experiment(cmd, args),
+        "serve" => cmd_serve(args),
+        "artifacts" => cmd_artifacts(),
+        "show" => cmd_show(args),
+        "prompt" => cmd_prompt(args),
+        "platforms" => {
+            for p in Platform::all() {
+                println!(
+                    "{:<12} {:<18} {} cores, {}-lane SIMD, {:.2} GHz, L1 {}K L2 {}K L3 {}M, {} GB/s DRAM",
+                    p.name, p.display, p.cores, p.simd_lanes, p.freq_ghz,
+                    p.l1d_bytes >> 10, p.l2_bytes >> 10, p.l3_bytes >> 20, p.dram_gbps
+                );
+            }
+            Ok(())
+        }
+        "models" => {
+            for m in ModelProfile::all() {
+                println!(
+                    "{:<16} {:<28} quality {:.2}, context use {:.2}, expected fallback {:.2}%",
+                    m.name,
+                    m.display,
+                    m.quality,
+                    m.context_use,
+                    m.expected_fallback_rate() * 100.0
+                );
+            }
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}; see `rcc help`")),
+    }
+}
+
+fn config_from(args: &Args) -> Result<TuneConfig> {
+    let mut cfg = match args.opt("config") {
+        Some(path) => TuneConfig::from_file(Path::new(path))?,
+        None => TuneConfig::default(),
+    };
+    cfg.apply_cli(args);
+    Ok(cfg)
+}
+
+fn cmd_tune(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    println!(
+        "tuning {} on {} with {} (budget {}, {} repeats)...",
+        cfg.workload,
+        cfg.platform,
+        cfg.strategy.display(),
+        cfg.budget,
+        cfg.repeats
+    );
+    let session = run_session(&cfg);
+    println!(
+        "mean best speedup: {:.2}x over pre-optimized code",
+        session.mean_speedup()
+    );
+    for c in [18usize, 36, 72, 150] {
+        if c <= cfg.budget {
+            println!("  speedup@{c:<4} = {:.2}x", session.mean_speedup_at(c));
+        }
+    }
+    if cfg.strategy == Strategy::LlmMcts {
+        let model = ModelProfile::by_name(&cfg.model).unwrap();
+        println!(
+            "LLM: {} calls, {} prompt tokens, ${:.4}, fallback rate {:.2}%",
+            session.llm_costs.calls,
+            session.llm_costs.prompt_tokens,
+            session.llm_costs.usd(&model),
+            session.llm_fallback_rate * 100.0
+        );
+    }
+    if !args.has_flag("no-record") {
+        let reg = Registry::default_location()?;
+        let id = reg.record(&session)?;
+        println!("recorded run {id} in {}", reg.dir.display());
+    }
+    // Print the best trace of the first run.
+    if let Some(run) = session.runs.first() {
+        let base = WorkloadId::from_name(&cfg.workload)
+            .ok_or_else(|| anyhow!("unknown workload {}", cfg.workload))?
+            .build();
+        let sched = Schedule::new(base);
+        let (best, _) = sched.apply_all(&run.best_trace);
+        println!("\nbest schedule trace (run 0, {:.2}x):", run.best_speedup());
+        println!("{}", best.render_trace());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> Result<()> {
+    let base_cfg = config_from(args)?;
+    println!(
+        "comparing strategies on {} / {} ({} repeats)\n",
+        base_cfg.workload, base_cfg.platform, base_cfg.repeats
+    );
+    println!(
+        "{:<22} {:>10} {:>12} {:>12} {:>12}",
+        "strategy", "budget", "speedup@36", "speedup@150", "final"
+    );
+    for strategy in [Strategy::Evolutionary, Strategy::Mcts, Strategy::LlmMcts] {
+        let cfg = TuneConfig {
+            strategy,
+            budget: if strategy == Strategy::Evolutionary {
+                base_cfg.budget * 3
+            } else {
+                base_cfg.budget
+            },
+            ..base_cfg.clone()
+        };
+        let s = run_session(&cfg);
+        println!(
+            "{:<22} {:>10} {:>11.2}x {:>11.2}x {:>11.2}x",
+            strategy.display(),
+            cfg.budget,
+            s.mean_speedup_at(36),
+            s.mean_speedup_at(150),
+            s.mean_speedup()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let cfg = config_from(args)?;
+    let tasks = workload::llama3_e2e(64);
+    println!(
+        "end-to-end Llama-3-8B ({} tasks) on {} with {}...",
+        tasks.len(),
+        cfg.platform,
+        cfg.strategy.display()
+    );
+    let r = run_e2e(&tasks, &cfg);
+    for (name, session) in &r.tasks {
+        println!("  {:<18} {:.2}x", name, session.mean_speedup());
+    }
+    println!(
+        "weighted end-to-end speedup: {:.2}x ({} samples)",
+        r.weighted_speedup, r.total_samples
+    );
+    Ok(())
+}
+
+fn cmd_experiment(cmd: &str, args: &Args) -> Result<()> {
+    let scale = Scale::from_name(args.opt_or("scale", "default"))
+        .ok_or_else(|| anyhow!("bad --scale (smoke|default|full)"))?;
+    let seed = args.opt_u64("seed", 42);
+    let out_dir = args.opt("out").map(PathBuf::from);
+    let run_one = |name: &str| -> (String, String) {
+        eprintln!("running {name} at {scale:?} scale...");
+        match name {
+            "figure3" => {
+                let r = figure3::run(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table1" => {
+                let r = platforms::table1(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table2" => {
+                let r = platforms::table2(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table4" => {
+                let r = ablations::table4(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table5" => {
+                let r = ablations::table5(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table6" => {
+                let r = ablations::table6(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table7" => {
+                let r = costs::table7(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            "table8" => {
+                let r = costs::table8(scale, seed);
+                (r.markdown, r.json.to_pretty())
+            }
+            _ => unreachable!(),
+        }
+    };
+
+    let names: Vec<&str> = if cmd == "all" {
+        vec![
+            "figure3", "table1", "table2", "table4", "table5", "table6", "table7", "table8",
+        ]
+    } else {
+        vec![cmd]
+    };
+    for name in names {
+        let (md, json) = run_one(name);
+        println!("{md}");
+        if let Some(dir) = &out_dir {
+            std::fs::create_dir_all(dir)?;
+            std::fs::write(dir.join(format!("{name}.md")), &md)?;
+            std::fs::write(dir.join(format!("{name}.json")), &json)?;
+            eprintln!("wrote {}/{name}.{{md,json}}", dir.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let manifest = Manifest::discover()?;
+    let requests = args.opt_usize("requests", 64);
+    let max_batch = args.opt_usize("max-batch", 8);
+    println!(
+        "serving {} artifacts from {} (PJRT CPU), {} synthetic requests, max batch {}",
+        manifest.artifacts.len(),
+        manifest.dir.display(),
+        requests,
+        max_batch
+    );
+    let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+    server.run_synthetic(requests, args.opt_u64("seed", 1))?;
+    println!("\n{}", server.metrics.report());
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let manifest = Manifest::discover()?;
+    let mut rt = reasoning_compiler::runtime::Runtime::cpu()?;
+    println!(
+        "artifacts in {} (PJRT {}):",
+        manifest.dir.display(),
+        rt.platform_name()
+    );
+    let names: Vec<String> = manifest.artifacts.keys().cloned().collect();
+    for name in names {
+        rt.load(&manifest, &name)?;
+        let exe = rt.get(&name).unwrap();
+        let out = exe.run(&exe.random_inputs(1))?;
+        println!(
+            "  {:<18} inputs {:?} -> outputs {:?}  ({:.3} ms)",
+            name,
+            exe.spec.inputs.iter().map(|t| t.shape.clone()).collect::<Vec<_>>(),
+            exe.spec.outputs.iter().map(|t| t.shape.clone()).collect::<Vec<_>>(),
+            out.latency_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_show(args: &Args) -> Result<()> {
+    let name = args.opt_or("workload", "deepseek_moe");
+    let w = WorkloadId::from_name(name).ok_or_else(|| anyhow!("unknown workload {name}"))?;
+    let p = w.build();
+    println!("{}", printer::print_program(&p));
+    let plat = Platform::by_name(args.opt_or("platform", "core_i9")).unwrap();
+    println!("--- cost model analysis ({}) ---", plat.display);
+    println!("{}", features::extract(&p, &plat).render());
+    Ok(())
+}
+
+fn cmd_prompt(args: &Args) -> Result<()> {
+    use reasoning_compiler::reasoning::engine::LlmEngine;
+    let name = args.opt_or("workload", "deepseek_moe");
+    let w = WorkloadId::from_name(name).ok_or_else(|| anyhow!("unknown workload {name}"))?;
+    let plat = Platform::by_name(args.opt_or("platform", "core_i9")).unwrap();
+    let base = Schedule::new(w.build());
+    let child = {
+        let mut rng = reasoning_compiler::util::Pcg::new(args.opt_u64("seed", 1));
+        let (seq, _) =
+            reasoning::engine::informed_proposals(&base, &plat, &Default::default(), &mut rng);
+        base.apply_all(&seq).0
+    };
+    let ctx = PromptContext {
+        node: &child,
+        ancestors: vec![&base],
+        scores: vec![0.773, 0.313],
+        platform: &plat,
+    };
+    println!("=== PROMPT ===\n{}", reasoning::prompt::render(&ctx));
+    let model = ModelProfile::by_name(args.opt_or("model", "gpt4o_mini"))
+        .ok_or_else(|| anyhow!("bad model"))?;
+    let mut engine = reasoning::SimulatedLlm::new(model, args.opt_u64("seed", 1));
+    let response = engine.complete(&ctx);
+    println!("=== RESPONSE ===\n{}", response.text);
+    Ok(())
+}
+
+fn cmd_history() -> Result<()> {
+    let reg = Registry::default_location()?;
+    let records = reg.list()?;
+    if records.is_empty() {
+        println!("no recorded runs in {} (run `rcc tune` first)", reg.dir.display());
+        return Ok(());
+    }
+    println!(
+        "{:<14} {:<18} {:<12} {:>10} {:>9} {:>8}",
+        "strategy", "workload", "platform", "mean", "best", "samples"
+    );
+    for r in records {
+        println!(
+            "{:<14} {:<18} {:<12} {:>9.2}x {:>8.2}x {:>8}",
+            r.strategy, r.workload, r.platform, r.mean_speedup, r.best_speedup, r.samples
+        );
+    }
+    Ok(())
+}
+
+fn cmd_best(args: &Args) -> Result<()> {
+    let workload = args.opt_or("workload", "deepseek_moe");
+    let platform = args.opt_or("platform", "core_i9");
+    let reg = Registry::default_location()?;
+    let Some(r) = reg.best_for(workload, platform)? else {
+        return Err(anyhow!("no recorded run for {workload}/{platform}"));
+    };
+    println!(
+        "best recorded run {}: {:.2}x via {} ({} samples)",
+        r.id, r.best_speedup, r.strategy, r.samples
+    );
+    let base = WorkloadId::from_name(workload)
+        .ok_or_else(|| anyhow!("unknown workload"))?
+        .build();
+    let (best, applied) = Schedule::new(base).apply_all(&r.best_trace);
+    anyhow::ensure!(applied == r.best_trace.len(), "persisted trace no longer replays");
+    println!("\ntrace:\n{}", best.render_trace());
+    println!("\nscheduled TIR:\n{}", printer::print_program(&best.current));
+    Ok(())
+}

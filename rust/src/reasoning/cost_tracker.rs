@@ -1,0 +1,70 @@
+//! API-cost accounting (Appendix F / Table 7).
+//!
+//! Every LLM call's prompt and completion token counts are metered against
+//! the model's per-token prices, so `rcc table7` can report the USD cost of
+//! each full experiment the way the paper does.
+
+use super::models::ModelProfile;
+
+#[derive(Debug, Clone, Default)]
+pub struct CostTracker {
+    pub calls: u64,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+impl CostTracker {
+    pub fn record(&mut self, prompt_tokens: u64, completion_tokens: u64) {
+        self.calls += 1;
+        self.prompt_tokens += prompt_tokens;
+        self.completion_tokens += completion_tokens;
+    }
+
+    /// Total cost in USD under a model's pricing.
+    pub fn usd(&self, model: &ModelProfile) -> f64 {
+        self.prompt_tokens as f64 * model.usd_per_m_prompt / 1e6
+            + self.completion_tokens as f64 * model.usd_per_m_completion / 1e6
+    }
+
+    pub fn merge(&mut self, other: &CostTracker) {
+        self.calls += other.calls;
+        self.prompt_tokens += other.prompt_tokens;
+        self.completion_tokens += other.completion_tokens;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_prices() {
+        let mut t = CostTracker::default();
+        t.record(2000, 500);
+        t.record(2000, 500);
+        assert_eq!(t.calls, 2);
+        assert_eq!(t.prompt_tokens, 4000);
+        let m = ModelProfile::gpt4o_mini();
+        // 4000 * 0.15/1M + 1000 * 0.60/1M = 0.0006 + 0.0006
+        assert!((t.usd(&m) - 0.0012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn o1_costs_more_than_gpt4o_mini() {
+        let mut t = CostTracker::default();
+        t.record(100_000, 50_000);
+        assert!(t.usd(&ModelProfile::o1_mini()) > t.usd(&ModelProfile::gpt4o_mini()) * 5.0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = CostTracker::default();
+        a.record(10, 20);
+        let mut b = CostTracker::default();
+        b.record(30, 40);
+        a.merge(&b);
+        assert_eq!(a.calls, 2);
+        assert_eq!(a.prompt_tokens, 40);
+        assert_eq!(a.completion_tokens, 60);
+    }
+}

@@ -1,0 +1,773 @@
+//! The simulated reasoning engine.
+//!
+//! Plays the role of the paper's LLM: given the prompt context (program
+//! text, transformation history, ancestor diffs, cost-model outputs), it
+//! produces a *reasoned* transformation sequence plus a natural-language
+//! rationale, emitted in the exact response format of Appendix A
+//! ("Reasoning: ... / Transformations to apply: ...").
+//!
+//! The analysis consumes only information present in the prompt: the
+//! current program structure, the platform header, the feature block and
+//! the ancestor score trajectory. Model capability profiles gate how well
+//! that information is used (`quality`, `context_use`) and inject malformed
+//! proposals (`invalid_rate`) — reproducing the paper's model-choice,
+//! trace-depth and fallback ablations through the same mechanisms the paper
+//! varies. Swapping in a real API is one `LlmEngine` implementation.
+
+use std::collections::HashSet;
+
+use crate::cost::{access, platform::Platform, simulator};
+use crate::schedule::{sampler, Schedule, Transform};
+use crate::tir::program::{LoopKind, Program, Stage};
+use crate::util::rng::Pcg;
+
+use super::models::ModelProfile;
+use super::prompt::{self, PromptContext};
+
+/// A model response: the raw text (parsed downstream by
+/// `super::proposal`) plus token accounting.
+#[derive(Debug, Clone)]
+pub struct LlmResponse {
+    pub text: String,
+    pub prompt_tokens: u64,
+    pub completion_tokens: u64,
+}
+
+/// Anything that can answer an optimization prompt. The simulated engine is
+/// the offline implementation; a real OpenAI/HF client would implement the
+/// same trait.
+pub trait LlmEngine: Send {
+    fn complete(&mut self, ctx: &PromptContext) -> LlmResponse;
+    fn profile(&self) -> &ModelProfile;
+}
+
+/// The offline reasoning engine.
+pub struct SimulatedLlm {
+    pub model: ModelProfile,
+    rng: Pcg,
+}
+
+impl SimulatedLlm {
+    pub fn new(model: ModelProfile, seed: u64) -> Self {
+        SimulatedLlm { model, rng: Pcg::new(seed ^ 0x11AA_22BB) }
+    }
+}
+
+impl LlmEngine for SimulatedLlm {
+    fn complete(&mut self, ctx: &PromptContext) -> LlmResponse {
+        let prompt_text = prompt::render(ctx);
+        let prompt_tokens = prompt::token_estimate(&prompt_text);
+
+        // Does this round use the full contextual analysis?
+        let informed = self.rng.gen_bool(self.model.quality);
+        // Does it exploit the historical trace (score trend / avoidance)?
+        let use_history = !ctx.ancestors.is_empty() && self.rng.gen_bool(self.model.context_use);
+
+        let avoid = if use_history {
+            history_avoid_set(ctx)
+        } else {
+            HashSet::new()
+        };
+
+        let (transforms, rationale) = if informed {
+            informed_proposals(ctx.node, ctx.platform, &avoid, &mut self.rng)
+        } else {
+            shallow_proposals(&ctx.node.current, &mut self.rng)
+        };
+
+        // Emit the response text; each proposal independently risks being
+        // malformed per the model's invalid_rate (Appendix G).
+        let mut rendered: Vec<String> = Vec::new();
+        for t in transforms.iter().take(self.model.proposals_per_call) {
+            if self.rng.gen_bool(self.model.invalid_rate) {
+                rendered.push(corrupt_proposal(&mut self.rng));
+            } else {
+                rendered.push(render_transform(t));
+            }
+        }
+        if rendered.is_empty() {
+            // Engines always answer something.
+            rendered.push(if self.rng.gen_bool(self.model.invalid_rate) {
+                corrupt_proposal(&mut self.rng)
+            } else {
+                "Unroll".to_string()
+            });
+        }
+
+        let text = format!(
+            "Reasoning: {rationale}\nTransformations to apply: {}.",
+            rendered.join(", ")
+        );
+        let completion_tokens =
+            self.model.completion_tokens + prompt::token_estimate(&text) / 4;
+        LlmResponse { text, prompt_tokens, completion_tokens }
+    }
+
+    fn profile(&self) -> &ModelProfile {
+        &self.model
+    }
+}
+
+/// Render a transform in the parameterized textual form the parser accepts.
+pub fn render_transform(t: &Transform) -> String {
+    match t {
+        Transform::TileSize { stage, loop_idx, factor } => {
+            format!("TileSize(stage={stage}, loop={loop_idx}, factor={factor})")
+        }
+        Transform::Reorder { stage, perm } => {
+            let p: Vec<String> = perm.iter().map(|x| x.to_string()).collect();
+            format!("Reorder(stage={stage}, perm=[{}])", p.join(", "))
+        }
+        Transform::Fuse { stage, loop_idx } => format!("Fuse(stage={stage}, loop={loop_idx})"),
+        Transform::Parallel { stage, loop_idx } => {
+            format!("Parallel(stage={stage}, loop={loop_idx})")
+        }
+        Transform::Vectorize { stage, loop_idx } => {
+            format!("Vectorize(stage={stage}, loop={loop_idx})")
+        }
+        Transform::Unroll { stage, loop_idx } => {
+            format!("Unroll(stage={stage}, loop={loop_idx})")
+        }
+        Transform::ComputeLocation { stage, depth } => {
+            format!("ComputeLocation(stage={stage}, depth={depth})")
+        }
+        Transform::CacheWrite { stage } => format!("CacheWrite(stage={stage})"),
+    }
+}
+
+/// A malformed proposal: either an unknown op or broken parameters.
+fn corrupt_proposal(rng: &mut Pcg) -> String {
+    const BAD: [&str; 6] = [
+        "TileFusion",
+        "LoopJam(stage=0)",
+        "Vectorise(loop=j)",
+        "TileSize(stage=, factor=abc)",
+        "SplitK",
+        "Reorder(perm=[banana])",
+    ];
+    BAD[rng.gen_range(BAD.len())].to_string()
+}
+
+/// Extract an avoid-set from the ancestor score trajectory: op kinds whose
+/// introduction coincided with a score regression. Deeper history attributes
+/// more transitions — the mechanism behind the Fig. 4b ablation.
+fn history_avoid_set(ctx: &PromptContext) -> HashSet<&'static str> {
+    let mut avoid = HashSet::new();
+    // scores[0] = node, scores[i] = i-th ancestor. Walk transitions
+    // ancestor[i] -> ancestor[i-1] -> node.
+    let chain: Vec<&Schedule> = std::iter::once(ctx.node)
+        .chain(ctx.ancestors.iter().copied())
+        .collect();
+    for i in (1..chain.len()).rev() {
+        let newer = chain[i - 1];
+        let older = chain[i];
+        let (s_new, s_old) = (ctx.scores[i - 1], ctx.scores[i]);
+        if s_new < s_old * 0.98 {
+            for t in newer.trace.iter().skip(older.trace.len()) {
+                avoid.insert(t.op_name());
+            }
+        }
+    }
+    avoid
+}
+
+/// Shallow proposal: plausible op names with weakly-grounded parameters —
+/// what a small model produces without really reading the context.
+fn shallow_proposals(program: &Program, rng: &mut Pcg) -> (Vec<Transform>, String) {
+    let mut out = Vec::new();
+    let mut cur = program.clone();
+    let n = 1 + rng.gen_range(3);
+    for _ in 0..n {
+        if let Some(t) = sampler::random_transform(&cur, rng) {
+            if let Ok(next) = t.apply(&cur) {
+                cur = next;
+                out.push(t);
+            }
+        }
+    }
+    (
+        out,
+        "The loops look large, so applying some tiling and annotations should help."
+            .to_string(),
+    )
+}
+
+/// The informed analysis: diagnose the dominant bottleneck of the worst
+/// stage from the cost-model features and synthesize a transformation
+/// sequence that addresses it, honoring the avoid-set from history.
+pub fn informed_proposals(
+    node: &Schedule,
+    platform: &Platform,
+    avoid: &HashSet<&'static str>,
+    rng: &mut Pcg,
+) -> (Vec<Transform>, String) {
+    let program = &node.current;
+    // Target the stage dominating latency.
+    let (si, _) = program
+        .stages
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let a = access::analyze(program, s);
+            (i, simulator::stage_latency(&a, platform))
+        })
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .unwrap();
+
+    // Build candidate fixes in priority order; skip avoided kinds.
+    let mut scratch = program.clone();
+    let mut seq: Vec<Transform> = Vec::new();
+    let mut notes: Vec<String> = Vec::new();
+
+    let push = |scratch: &mut Program, seq: &mut Vec<Transform>, t: Transform| -> bool {
+        match t.apply(scratch) {
+            Ok(next) => {
+                *scratch = next;
+                seq.push(t);
+                true
+            }
+            Err(_) => false,
+        }
+    };
+
+    // Re-analyze helper.
+    let analyze = |p: &Program| access::analyze(p, &p.stages[si]);
+
+    // --- 1. parallelism -----------------------------------------------------
+    let a0 = analyze(&scratch);
+    if !avoid.contains("Parallel")
+        && (a0.parallel_extent as f64) < platform.cores as f64
+        && a0.total_iters > 1 << 14
+    {
+        if let Some(ts) = plan_parallel(&scratch.stages[si], si, platform) {
+            for t in ts {
+                push(&mut scratch, &mut seq, t);
+            }
+            notes.push(format!(
+                "the nest exposes no parallelism for {} cores, so I parallelize the outer spatial loops",
+                platform.cores
+            ));
+        }
+    }
+
+    // --- 2. vectorization ----------------------------------------------------
+    let a1 = analyze(&scratch);
+    if !avoid.contains("Vectorize") && a1.vector_extent.is_none() {
+        if let Some(ts) = plan_vectorize(&scratch, si, platform, rng) {
+            for t in ts {
+                push(&mut scratch, &mut seq, t);
+            }
+            notes.push(format!(
+                "the innermost loop is not SIMD-vectorized; I move a contiguous spatial loop inside and vectorize it {}-wide",
+                platform.simd_lanes
+            ));
+        }
+    }
+
+    // --- 3. cache tiling -------------------------------------------------
+    let a2 = analyze(&scratch);
+    let cold = a2.footprint_bytes[0] as f64;
+    let dram = access::traffic_bytes(&a2, platform.l3_bytes as i64, 1.0);
+    let l2t = access::traffic_bytes(&a2, platform.l1d_bytes as i64, 1.0);
+    if !avoid.contains("TileSize") && seq.len() < 5 && (dram / cold.max(1.0) > 2.5 || l2t / cold.max(1.0) > 16.0)
+    {
+        if let Some(ts) = plan_cache_tiling(&scratch, si, platform, rng) {
+            for t in ts {
+                push(&mut scratch, &mut seq, t);
+            }
+            notes.push(
+                "memory traffic is amplified well beyond compulsory misses; I tile the large spatial and reduction loops so the working tile fits cache and reorder for reuse"
+                    .to_string(),
+            );
+        }
+    }
+
+    // --- 4. accumulation chains / unroll -------------------------------------
+    let a3 = analyze(&scratch);
+    // Target the register-tile cap (64 chains): below that, the FMA
+    // latency bound dominates the issue bound.
+    if !avoid.contains("Unroll") && a3.chains < 48 && seq.len() < 6 {
+        if let Some(ts) = plan_unroll(&scratch, si) {
+            for t in ts {
+                push(&mut scratch, &mut seq, t);
+            }
+            notes.push(
+                "few independent accumulation chains limit FMA pipelining; unrolling a small register tile breaks the dependence"
+                    .to_string(),
+            );
+        }
+    }
+
+    // --- 5. write-back locality ----------------------------------------------
+    let a4 = analyze(&scratch);
+    let store_elems = a4
+        .accesses
+        .iter()
+        .find(|acc| acc.is_store)
+        .map(|acc| acc.elems_at_depth[0])
+        .unwrap_or(1);
+    if !avoid.contains("CacheWrite")
+        && !scratch.stages[si].cache_write
+        && a4.writebacks > store_elems * 2
+        && seq.len() < 7
+    {
+        if push(&mut scratch, &mut seq, Transform::CacheWrite { stage: si }) {
+            let depth = scratch.stages[si].loops.len() / 2;
+            if depth > 0 {
+                push(
+                    &mut scratch,
+                    &mut seq,
+                    Transform::ComputeLocation { stage: si, depth },
+                );
+            }
+            notes.push(
+                "accumulation is repeatedly interrupted; a local write cache with a hoisted compute location removes the spills"
+                    .to_string(),
+            );
+        }
+    }
+
+    if seq.is_empty() {
+        // Everything looks structurally healthy: micro-tune (re-tile or
+        // unroll something small) instead of doing nothing.
+        let (ts, note) = shallow_proposals(&scratch, rng);
+        return (
+            ts,
+            format!("the schedule already has parallel, vector and tiled structure; {note}"),
+        );
+    }
+
+    (seq, notes.join("; "))
+}
+
+/// Plan a parallelization prefix: tile the *largest* spatial loop into
+/// a few-times-cores chunks, hoist the chunk loop to the front and mark it
+/// parallel. Hoisting the widest spatial dimension outermost doubles as a
+/// streaming-order fix: the biggest buffer is swept once while the small
+/// operands stay cache-resident inside each chunk.
+fn plan_parallel(stage: &Stage, si: usize, platform: &Platform) -> Option<Vec<Transform>> {
+    let n = stage.loops.len();
+    let prefix = stage
+        .loops
+        .iter()
+        .take_while(|l| l.kind == LoopKind::Parallel)
+        .count();
+    if prefix >= n {
+        return None;
+    }
+    // Largest spatial serial loop.
+    let cand = (0..n)
+        .filter(|&i| !stage_is_reduction(stage, i) && stage.loops[i].kind == LoopKind::Serial)
+        .max_by_key(|&i| stage.loops[i].extent)?;
+    let extent = stage.loops[cand].extent;
+    let cores = platform.cores as i64;
+
+    let mut seq = Vec::new();
+    let mut n_after = n;
+    // Tile so the chunk count lands around 4-8x cores (good balance without
+    // starving the inner tile).
+    let target_chunks = (cores * 8).min(extent.max(1));
+    if extent > target_chunks * 2 {
+        let divs = sampler::divisors(extent);
+        let want_inner = (extent / target_chunks).max(2);
+        if let Some(f) = divs
+            .iter()
+            .copied()
+            .filter(|&f| f >= want_inner / 2 && f <= want_inner * 4)
+            .min_by_key(|&f| (f - want_inner).abs())
+            .or_else(|| divs.iter().copied().min_by_key(|&f| (f - want_inner).abs()))
+        {
+            seq.push(Transform::TileSize { stage: si, loop_idx: cand, factor: f });
+            n_after += 1;
+        }
+    }
+    // Move the chunk loop to the front of the serial region.
+    if cand != prefix {
+        let mut perm: Vec<usize> = (0..n_after).filter(|&i| i != cand).collect();
+        perm.insert(prefix, cand);
+        seq.push(Transform::Reorder { stage: si, perm });
+    }
+    seq.push(Transform::Parallel { stage: si, loop_idx: prefix });
+    Some(seq)
+}
+
+/// Plan vectorization: choose a spatial loop with contiguous access, tile it
+/// to a SIMD-friendly width, move the inner tile innermost and vectorize.
+fn plan_vectorize(
+    program: &Program,
+    si: usize,
+    platform: &Platform,
+    _rng: &mut Pcg,
+) -> Option<Vec<Transform>> {
+    let stage = &program.stages[si];
+    let n = stage.loops.len();
+    // Score candidate loops by contiguity (prefer store-contiguous).
+    let strides = loop_access_strides(program, stage);
+    let mut best: Option<(usize, i64)> = None; // (loop idx, extent)
+    for li in 0..n {
+        if stage_is_reduction(stage, li) || stage.loops[li].kind != LoopKind::Serial {
+            continue;
+        }
+        let contiguous = strides[li].iter().any(|&s| s == 1);
+        let no_bad_store = strides[li].last().map(|&s| s <= 1).unwrap_or(true);
+        if contiguous && no_bad_store {
+            let e = stage.loops[li].extent;
+            if best.map(|(_, be)| e > be).unwrap_or(true) {
+                best = Some((li, e));
+            }
+        }
+    }
+    let (li, extent) = best?;
+    let lanes = platform.simd_lanes as i64;
+    let mut seq = Vec::new();
+    let mut inner_idx = li;
+    let mut inner_extent = extent;
+    if extent > 4 * lanes {
+        // Tile to a SIMD-friendly inner width.
+        let divs = sampler::divisors(extent);
+        let factor = divs
+            .iter()
+            .copied()
+            .filter(|&f| f >= lanes && f <= 4 * lanes)
+            .min_by_key(|&f| (f - 2 * lanes).abs())
+            .or_else(|| divs.iter().copied().filter(|&f| f <= 64).max())?;
+        seq.push(Transform::TileSize { stage: si, loop_idx: li, factor });
+        inner_idx = li + 1;
+        inner_extent = factor;
+    }
+    if inner_extent > 64 {
+        return None;
+    }
+    let n_after = if seq.is_empty() { n } else { n + 1 };
+    if inner_idx != n_after - 1 {
+        // Move the inner tile innermost.
+        let mut perm: Vec<usize> = (0..n_after).filter(|&i| i != inner_idx).collect();
+        perm.push(inner_idx);
+        seq.push(Transform::Reorder { stage: si, perm });
+    }
+    seq.push(Transform::Vectorize { stage: si, loop_idx: n_after - 1 });
+    Some(seq)
+}
+
+/// Plan cache tiling: tile the largest reduction loop and the largest
+/// non-vectorized spatial loop, then order tiles for reuse.
+fn plan_cache_tiling(
+    program: &Program,
+    si: usize,
+    platform: &Platform,
+    _rng: &mut Pcg,
+) -> Option<Vec<Transform>> {
+    let stage = &program.stages[si];
+    let n = stage.loops.len();
+    let serial_big = |li: usize| stage.loops[li].kind == LoopKind::Serial && stage.loops[li].extent >= 32;
+    let red = (0..n)
+        .filter(|&i| stage_is_reduction(stage, i) && serial_big(i))
+        .max_by_key(|&i| stage.loops[i].extent);
+    let spa = (0..n)
+        .filter(|&i| !stage_is_reduction(stage, i) && serial_big(i))
+        .max_by_key(|&i| stage.loops[i].extent);
+
+    // Pick tile factors so one tile of each streamed buffer ~ fits L2/4.
+    let pick_factor = |extent: i64, target: i64| -> Option<i64> {
+        let divs = sampler::divisors(extent);
+        divs.iter()
+            .copied()
+            .filter(|&f| f <= target.max(4))
+            .max()
+            .or_else(|| divs.first().copied())
+    };
+    let target = ((platform.l2_bytes as i64 / 4 / 4).max(64) as f64).sqrt() as i64;
+
+    let mut seq = Vec::new();
+    let mut scratch = program.clone();
+    let mut tiled_any = false;
+    // Tile the reduction loop first (indices of later loops shift by 1).
+    if let Some(rk) = red {
+        if let Some(f) = pick_factor(stage.loops[rk].extent, target) {
+            let t = Transform::TileSize { stage: si, loop_idx: rk, factor: f };
+            if let Ok(next) = t.apply(&scratch) {
+                scratch = next;
+                seq.push(t);
+                tiled_any = true;
+            }
+        }
+    }
+    if let Some(sk0) = spa {
+        // Recompute index in the scratch program (shifted if after the split).
+        let sk = match red {
+            Some(rk) if sk0 > rk && tiled_any => sk0 + 1,
+            _ => sk0,
+        };
+        let extent = scratch.stages[si].loops.get(sk)?.extent;
+        if extent >= 32 {
+            if let Some(f) = pick_factor(extent, target) {
+                let t = Transform::TileSize { stage: si, loop_idx: sk, factor: f };
+                if let Ok(next) = t.apply(&scratch) {
+                    scratch = next;
+                    seq.push(t);
+                    tiled_any = true;
+                }
+            }
+        }
+    }
+    if !tiled_any {
+        return None;
+    }
+    // Reorder: parallel prefix, then outer tiles/spatial, then reduction
+    // outers, then the inner tiles, vectorized loop pinned last.
+    let st = &scratch.stages[si];
+    let m = st.loops.len();
+    let mut front: Vec<usize> = Vec::new();
+    let mut mids: Vec<usize> = Vec::new();
+    let mut inners: Vec<usize> = Vec::new();
+    let mut last: Vec<usize> = Vec::new();
+    for i in 0..m {
+        match st.loops[i].kind {
+            LoopKind::Parallel => front.push(i),
+            LoopKind::Vectorized => last.push(i),
+            _ => {
+                if st.loops[i].extent <= target.max(64) && st.loops[i].name.ends_with("_1") {
+                    inners.push(i);
+                } else {
+                    mids.push(i);
+                }
+            }
+        }
+    }
+    let mut perm = front;
+    perm.extend(mids);
+    perm.extend(inners);
+    perm.extend(last);
+    if perm.iter().enumerate().any(|(i, &p)| i != p) {
+        seq.push(Transform::Reorder { stage: si, perm });
+    }
+    Some(seq)
+}
+
+/// Plan a register tile: unroll small loops adjacent to the innermost
+/// position (spatial loops multiply independent accumulators directly;
+/// unrolled reduction loops let the backend reassociate), creating one
+/// from a larger loop when none exists.
+fn plan_unroll(program: &Program, si: usize) -> Option<Vec<Transform>> {
+    let stage = &program.stages[si];
+    let n = stage.loops.len();
+    let mut seq = Vec::new();
+    // Unroll up to two nearest-to-innermost small serial loops.
+    for li in (0..n).rev() {
+        let l = &stage.loops[li];
+        if l.kind == LoopKind::Serial && l.extent >= 2 && l.extent <= 16 {
+            seq.push(Transform::Unroll { stage: si, loop_idx: li });
+            if seq.len() == 2 {
+                return Some(seq);
+            }
+        }
+    }
+    if !seq.is_empty() {
+        return Some(seq);
+    }
+    // No small loop: carve a register tile out of a spatial loop first,
+    // falling back to a reduction loop (reassociation still helps).
+    for spatial_first in [true, false] {
+        for li in (0..n).rev() {
+            let l = &stage.loops[li];
+            if l.kind == LoopKind::Serial
+                && stage_is_reduction(stage, li) != spatial_first
+                && l.extent % 4 == 0
+                && l.extent > 16
+            {
+                return Some(vec![
+                    Transform::TileSize { stage: si, loop_idx: li, factor: 4 },
+                    Transform::Unroll { stage: si, loop_idx: li + 1 },
+                ]);
+            }
+        }
+    }
+    None
+}
+
+fn stage_is_reduction(stage: &Stage, li: usize) -> bool {
+    stage.loop_is_reduction(li)
+}
+
+/// Stride of each access's flattened index w.r.t. each loop (elements).
+fn loop_access_strides(program: &Program, stage: &Stage) -> Vec<Vec<i64>> {
+    let mut loads = Vec::new();
+    stage.block.rhs.loads(&mut loads);
+    let mut accesses: Vec<(usize, Vec<crate::tir::LinIdx>)> = loads
+        .into_iter()
+        .map(|(b, idx)| (b, idx.to_vec()))
+        .collect();
+    accesses.push((stage.block.out, stage.block.out_idx.clone()));
+
+    let env0 = vec![0i64; stage.var_extents.len()];
+    (0..stage.loops.len())
+        .map(|li| {
+            let mut env1 = env0.clone();
+            env1[stage.loops[li].var] = 1;
+            let axis_delta: Vec<i64> = stage
+                .axis_exprs
+                .iter()
+                .map(|e| e.eval(&env1) - e.eval(&env0))
+                .collect();
+            accesses
+                .iter()
+                .map(|(b, idx)| {
+                    let strides = program.buffers[*b].strides();
+                    idx.iter()
+                        .enumerate()
+                        .map(|(dim, ix)| {
+                            let d: i64 = ix.terms.iter().map(|&(a, k)| axis_delta[a] * k).sum();
+                            d * strides[dim]
+                        })
+                        .sum::<i64>()
+                        .abs()
+                })
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Platform;
+    use crate::tir::workload::WorkloadId;
+
+    fn ctx_and_engine(model: ModelProfile) -> (Schedule, Platform, SimulatedLlm) {
+        (
+            Schedule::new(WorkloadId::DeepSeekMoe.build()),
+            Platform::core_i9(),
+            SimulatedLlm::new(model, 99),
+        )
+    }
+
+    #[test]
+    fn informed_proposals_apply_and_improve() {
+        let node = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let plat = Platform::core_i9();
+        let mut rng = Pcg::new(1);
+        let (seq, rationale) = informed_proposals(&node, &plat, &HashSet::new(), &mut rng);
+        assert!(!seq.is_empty());
+        assert!(!rationale.is_empty());
+        let (out, applied) = node.apply_all(&seq);
+        assert_eq!(applied, seq.len(), "all informed steps must be legal");
+        let before = simulator::simulate(&node.current, &plat, 0);
+        let after = simulator::simulate(&out.current, &plat, 0);
+        assert!(
+            after < before,
+            "informed proposal should improve: {after} vs {before}"
+        );
+    }
+
+    #[test]
+    fn informed_improves_all_workloads_all_platforms() {
+        for w in WorkloadId::ALL {
+            for plat in Platform::all() {
+                let node = Schedule::new(w.build());
+                let mut rng = Pcg::new(7);
+                let (seq, _) = informed_proposals(&node, &plat, &HashSet::new(), &mut rng);
+                let (out, _) = node.apply_all(&seq);
+                let before = simulator::simulate(&node.current, &plat, 0);
+                let after = simulator::simulate(&out.current, &plat, 0);
+                assert!(
+                    after < before,
+                    "{} on {}: {after} vs {before}",
+                    w.name(),
+                    plat.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn response_format_matches_appendix() {
+        let (node, plat, mut engine) = ctx_and_engine(ModelProfile::gpt4o_mini());
+        let ctx = PromptContext {
+            node: &node,
+            ancestors: vec![],
+            scores: vec![1.0],
+            platform: &plat,
+        };
+        let r = engine.complete(&ctx);
+        assert!(r.text.starts_with("Reasoning: "), "{}", r.text);
+        assert!(r.text.contains("Transformations to apply: "), "{}", r.text);
+        assert!(r.prompt_tokens > 100);
+        assert!(r.completion_tokens > 0);
+    }
+
+    #[test]
+    fn weak_model_emits_invalid_sometimes() {
+        let (node, plat, mut engine) = ctx_and_engine(ModelProfile::deepseek_distill_7b());
+        let mut saw_bad = false;
+        for _ in 0..40 {
+            let ctx = PromptContext {
+                node: &node,
+                ancestors: vec![],
+                scores: vec![1.0],
+                platform: &plat,
+            };
+            let r = engine.complete(&ctx);
+            if r.text.contains("TileFusion")
+                || r.text.contains("LoopJam")
+                || r.text.contains("Vectorise")
+                || r.text.contains("SplitK")
+                || r.text.contains("banana")
+                || r.text.contains("factor=abc")
+            {
+                saw_bad = true;
+                break;
+            }
+        }
+        assert!(saw_bad, "7B model should emit malformed proposals");
+    }
+
+    #[test]
+    fn strong_model_never_invalid() {
+        let (node, plat, mut engine) = ctx_and_engine(ModelProfile::gpt4o_mini());
+        for _ in 0..40 {
+            let ctx = PromptContext {
+                node: &node,
+                ancestors: vec![],
+                scores: vec![1.0],
+                platform: &plat,
+            };
+            let r = engine.complete(&ctx);
+            assert!(!r.text.contains("TileFusion"));
+            assert!(!r.text.contains("banana"));
+        }
+    }
+
+    #[test]
+    fn avoid_set_built_from_regressions() {
+        let base = Schedule::new(WorkloadId::Llama4Mlp.build());
+        let child = base
+            .apply(Transform::Unroll { stage: 0, loop_idx: 0 })
+            .unwrap();
+        let plat = Platform::core_i9();
+        // Child scored worse than parent -> Unroll lands in the avoid set.
+        let ctx = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![0.5, 1.0],
+            platform: &plat,
+        };
+        let avoid = history_avoid_set(&ctx);
+        assert!(avoid.contains("Unroll"));
+        // Improvement -> nothing avoided.
+        let ctx2 = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![1.5, 1.0],
+            platform: &plat,
+        };
+        assert!(history_avoid_set(&ctx2).is_empty());
+    }
+
+    #[test]
+    fn render_transform_roundtrip_format() {
+        let t = Transform::TileSize { stage: 0, loop_idx: 2, factor: 16 };
+        assert_eq!(render_transform(&t), "TileSize(stage=0, loop=2, factor=16)");
+        let r = Transform::Reorder { stage: 1, perm: vec![2, 0, 1] };
+        assert_eq!(render_transform(&r), "Reorder(stage=1, perm=[2, 0, 1])");
+    }
+}

@@ -1,0 +1,23 @@
+//! The REASONING COMPILER's contribution: LLM-guided contextual proposal
+//! generation for MCTS expansion (§3.1).
+//!
+//! Pipeline per expansion: [`prompt`] serializes the selected node, its
+//! ancestor diffs, score trajectory and the available transformation set;
+//! an [`engine::LlmEngine`] answers in the Appendix-A response format;
+//! [`proposal`] parses, validates and grounds the answer (falling back to
+//! the random policy when every proposal is invalid, Appendix G);
+//! [`cost_tracker`] meters API spend (Appendix F). [`models`] defines the
+//! six simulated model capability profiles (DESIGN.md §Substitutions).
+
+pub mod cost_tracker;
+pub mod engine;
+pub mod models;
+pub mod policy;
+pub mod prompt;
+pub mod proposal;
+
+pub use cost_tracker::CostTracker;
+pub use engine::{LlmEngine, LlmResponse, SimulatedLlm};
+pub use models::ModelProfile;
+pub use policy::LlmPolicy;
+pub use prompt::PromptContext;

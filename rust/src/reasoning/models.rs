@@ -1,0 +1,197 @@
+//! Simulated LLM model profiles.
+//!
+//! No network access exists in this environment, so the paper's six API
+//! models are replaced by capability profiles driving the simulated
+//! reasoning engine (DESIGN.md §Substitutions). Each profile controls:
+//!
+//! - `quality` — probability that a proposal round uses the full contextual
+//!   analysis rather than a shallow/plausible guess (the paper's "stronger
+//!   models lead to faster convergence", Fig. 4a);
+//! - `context_use` — probability the model exploits the *historical trace*
+//!   portion of the prompt (deeper-context ablation, Fig. 4b);
+//! - `invalid_rate` — per-proposal probability of emitting a malformed
+//!   transformation, reproducing the fallback rates of Appendix G/Table 8;
+//! - token pricing for the API-cost accounting of Appendix F/Table 7.
+
+/// Capability + pricing profile of one proposal model.
+#[derive(Debug, Clone)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    pub display: &'static str,
+    /// P(informed proposal round).
+    pub quality: f64,
+    /// P(historical context is exploited when present).
+    pub context_use: f64,
+    /// Per-proposal probability of a malformed transformation string.
+    pub invalid_rate: f64,
+    /// Proposals emitted per call.
+    pub proposals_per_call: usize,
+    /// USD per 1M prompt tokens.
+    pub usd_per_m_prompt: f64,
+    /// USD per 1M completion tokens.
+    pub usd_per_m_completion: f64,
+    /// Mean completion length in tokens (reasoning models ramble more).
+    pub completion_tokens: u64,
+}
+
+impl ModelProfile {
+    /// The six models of §4.3.1 / Appendix C, in Table-4 row order.
+    pub fn all() -> Vec<ModelProfile> {
+        vec![
+            ModelProfile::gpt4o_mini(),
+            ModelProfile::o1_mini(),
+            ModelProfile::llama33_70b(),
+            ModelProfile::deepseek_distill_32b(),
+            ModelProfile::llama31_8b(),
+            ModelProfile::deepseek_distill_7b(),
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelProfile> {
+        ModelProfile::all().into_iter().find(|m| m.name == name)
+    }
+
+    /// GPT-4o mini — the paper's main proposal model.
+    pub fn gpt4o_mini() -> ModelProfile {
+        ModelProfile {
+            name: "gpt4o_mini",
+            display: "GPT-4o mini",
+            quality: 0.78,
+            context_use: 0.90,
+            invalid_rate: 0.0,
+            proposals_per_call: 3,
+            usd_per_m_prompt: 0.15,
+            usd_per_m_completion: 0.60,
+            completion_tokens: 420,
+        }
+    }
+
+    /// OpenAI o1-mini — strongest late-stage optimizer, expensive.
+    pub fn o1_mini() -> ModelProfile {
+        ModelProfile {
+            name: "o1_mini",
+            display: "OpenAI o1-mini",
+            quality: 0.74,
+            context_use: 0.97,
+            invalid_rate: 0.0,
+            proposals_per_call: 3,
+            usd_per_m_prompt: 1.10,
+            usd_per_m_completion: 4.40,
+            completion_tokens: 900, // hidden reasoning tokens billed
+        }
+    }
+
+    /// Llama 3.3 70B Instruct — exceptional early sample efficiency.
+    pub fn llama33_70b() -> ModelProfile {
+        ModelProfile {
+            name: "llama33_70b",
+            display: "Llama3.3-Instruct (70B)",
+            quality: 0.88,
+            context_use: 0.92,
+            invalid_rate: 0.093, // -> ~0.08% all-invalid fallback at 3/call
+            proposals_per_call: 3,
+            usd_per_m_prompt: 0.40,
+            usd_per_m_completion: 0.40,
+            completion_tokens: 450,
+        }
+    }
+
+    /// DeepSeek-R1-Distill-Qwen 32B — gradual, strong long-horizon.
+    pub fn deepseek_distill_32b() -> ModelProfile {
+        ModelProfile {
+            name: "ds_distill_32b",
+            display: "DeepSeek-Distill-Qwen (32B)",
+            quality: 0.70,
+            context_use: 0.95,
+            invalid_rate: 0.119, // -> ~0.17% fallback
+            proposals_per_call: 3,
+            usd_per_m_prompt: 0.30,
+            usd_per_m_completion: 0.30,
+            completion_tokens: 520,
+        }
+    }
+
+    /// Llama 3.1 8B Instruct — small but still useful.
+    pub fn llama31_8b() -> ModelProfile {
+        ModelProfile {
+            name: "llama31_8b",
+            display: "Llama3.1-Instruct (8B)",
+            quality: 0.52,
+            context_use: 0.60,
+            invalid_rate: 0.472, // -> ~10.5% fallback
+            proposals_per_call: 3,
+            usd_per_m_prompt: 0.06,
+            usd_per_m_completion: 0.06,
+            completion_tokens: 380,
+        }
+    }
+
+    /// DeepSeek-R1-Distill-Qwen 7B.
+    pub fn deepseek_distill_7b() -> ModelProfile {
+        ModelProfile {
+            name: "ds_distill_7b",
+            display: "DeepSeek-Distill-Qwen (7B)",
+            quality: 0.46,
+            context_use: 0.55,
+            invalid_rate: 0.556, // -> ~17.2% fallback
+            proposals_per_call: 3,
+            usd_per_m_prompt: 0.40,
+            usd_per_m_completion: 0.40,
+            completion_tokens: 400,
+        }
+    }
+
+    /// Expected all-proposals-invalid fallback rate (Table 8's metric).
+    pub fn expected_fallback_rate(&self) -> f64 {
+        self.invalid_rate.powi(self.proposals_per_call as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn six_models() {
+        assert_eq!(ModelProfile::all().len(), 6);
+        assert!(ModelProfile::by_name("gpt4o_mini").is_some());
+        assert!(ModelProfile::by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn fallback_rates_match_table8() {
+        // Table 8: 0%, 0%, 0.08%, 0.17%, 10.50%, 17.20%.
+        let targets = [0.0, 0.0, 0.0008, 0.0017, 0.105, 0.172];
+        for (m, t) in ModelProfile::all().iter().zip(targets) {
+            let got = m.expected_fallback_rate();
+            assert!(
+                (got - t).abs() < t * 0.15 + 1e-6,
+                "{}: fallback {got} vs table {t}",
+                m.name
+            );
+        }
+    }
+
+    #[test]
+    fn quality_ordering_matches_paper() {
+        // Larger/instruction-tuned models propose better (Fig. 4a).
+        let q = |n: &str| ModelProfile::by_name(n).unwrap().quality;
+        assert!(q("llama33_70b") > q("gpt4o_mini"));
+        assert!(q("gpt4o_mini") > q("llama31_8b"));
+        assert!(q("llama31_8b") > q("ds_distill_7b"));
+    }
+
+    #[test]
+    fn o1_mini_is_most_expensive() {
+        let all = ModelProfile::all();
+        let o1 = all.iter().find(|m| m.name == "o1_mini").unwrap();
+        for m in &all {
+            if m.name != "o1_mini" {
+                assert!(
+                    o1.usd_per_m_completion * o1.completion_tokens as f64
+                        > m.usd_per_m_completion * m.completion_tokens as f64
+                );
+            }
+        }
+    }
+}

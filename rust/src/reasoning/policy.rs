@@ -1,0 +1,140 @@
+//! The LLM-guided MCTS proposal policy: glue between the search engine and
+//! the reasoning pipeline (prompt → LLM → parse → validate → ground →
+//! fallback), with cost and fallback accounting.
+
+use crate::schedule::Transform;
+use crate::search::common::{ProposalContext, ProposalPolicy};
+use crate::util::rng::Pcg;
+
+use super::cost_tracker::CostTracker;
+use super::engine::LlmEngine;
+use super::proposal::{self, FallbackStats};
+use super::prompt::PromptContext;
+
+/// ProposalPolicy backed by an [`LlmEngine`].
+pub struct LlmPolicy<E: LlmEngine> {
+    pub engine: E,
+    pub costs: CostTracker,
+    pub fallbacks: FallbackStats,
+    /// Maximum ancestors included in the prompt (2 = parent+grandparent;
+    /// 3 adds the great-grandparent — the Fig. 4b ablation).
+    pub history_depth: usize,
+    rng: Pcg,
+    /// Most recent raw responses, for logging/inspection (bounded).
+    pub transcript: Vec<String>,
+    pub log_transcript: bool,
+}
+
+impl<E: LlmEngine> LlmPolicy<E> {
+    pub fn new(engine: E, history_depth: usize, seed: u64) -> Self {
+        LlmPolicy {
+            engine,
+            costs: CostTracker::default(),
+            fallbacks: FallbackStats::default(),
+            history_depth,
+            rng: Pcg::new(seed ^ 0x9D_0F_FE),
+            transcript: Vec::new(),
+            log_transcript: false,
+        }
+    }
+}
+
+impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
+    fn propose(&mut self, ctx: &ProposalContext) -> Vec<Transform> {
+        let prompt_ctx = PromptContext {
+            node: ctx.node,
+            ancestors: ctx
+                .ancestors
+                .iter()
+                .copied()
+                .take(self.history_depth)
+                .collect(),
+            scores: ctx
+                .scores
+                .iter()
+                .copied()
+                .take(self.history_depth + 1)
+                .collect(),
+            platform: ctx.platform,
+        };
+        let response = self.engine.complete(&prompt_ctx);
+        self.costs
+            .record(response.prompt_tokens, response.completion_tokens);
+        if self.log_transcript && self.transcript.len() < 64 {
+            self.transcript.push(response.text.clone());
+        }
+
+        let parsed = proposal::parse_response(&response.text);
+        let (seq, _fallback) = proposal::resolve(
+            &parsed,
+            &ctx.node.current,
+            &mut self.rng,
+            &mut self.fallbacks,
+        );
+        // On total fallback `seq` is empty; the MCTS loop then expands with
+        // the default random policy (Appendix G) — uninterrupted search.
+        seq
+    }
+
+    fn name(&self) -> String {
+        format!("llm:{}", self.engine.profile().name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::Platform;
+    use crate::reasoning::engine::SimulatedLlm;
+    use crate::reasoning::models::ModelProfile;
+    use crate::schedule::Schedule;
+    use crate::tir::workload::WorkloadId;
+
+    fn propose_n(model: ModelProfile, n: usize) -> (LlmPolicy<SimulatedLlm>, usize) {
+        let engine = SimulatedLlm::new(model, 5);
+        let mut policy = LlmPolicy::new(engine, 2, 5);
+        let plat = Platform::core_i9();
+        let node = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let mut nonempty = 0;
+        for step in 0..n {
+            let ctx = ProposalContext {
+                node: &node,
+                ancestors: vec![],
+                scores: vec![1.0],
+                platform: &plat,
+                step,
+            };
+            if !policy.propose(&ctx).is_empty() {
+                nonempty += 1;
+            }
+        }
+        (policy, nonempty)
+    }
+
+    #[test]
+    fn proposals_apply_and_costs_accumulate() {
+        let (policy, nonempty) = propose_n(ModelProfile::gpt4o_mini(), 10);
+        assert_eq!(nonempty, 10, "gpt4o-mini should never fully fall back");
+        assert_eq!(policy.costs.calls, 10);
+        assert!(policy.costs.prompt_tokens > 1000);
+        assert_eq!(policy.fallbacks.fallbacks, 0);
+    }
+
+    #[test]
+    fn weak_model_falls_back_at_table8_rate() {
+        let (policy, _) = propose_n(ModelProfile::deepseek_distill_7b(), 300);
+        let rate = policy.fallbacks.fallback_rate();
+        // Table 8: 17.2%; allow generous tolerance on 300 draws.
+        assert!(
+            (0.08..0.30).contains(&rate),
+            "7B fallback rate {rate} out of expected band"
+        );
+    }
+
+    #[test]
+    fn policy_name_includes_model() {
+        let engine = SimulatedLlm::new(ModelProfile::llama33_70b(), 1);
+        let policy = LlmPolicy::new(engine, 2, 1);
+        assert_eq!(policy.name(), "llm:llama33_70b");
+    }
+}

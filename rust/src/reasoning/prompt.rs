@@ -1,0 +1,197 @@
+//! Prompt construction (§3.1, Appendix A).
+//!
+//! Serializes the MCTS expansion context into the paper's prompt format:
+//! the selected node's code, structural diffs against its ancestors (loop
+//! shapes, tile decisions), predicted performance scores, the transformation
+//! history, and the available transformation set. The simulated engine
+//! consumes the structured [`PromptContext`]; the rendered text is what a
+//! real API would receive (swap `LlmEngine` implementations to use one) and
+//! is logged for inspection.
+
+use crate::cost::{features, Platform};
+use crate::schedule::{Schedule, Transform};
+use crate::tir::printer;
+
+/// Structured prompt contents for one expansion step.
+pub struct PromptContext<'a> {
+    pub node: &'a Schedule,
+    /// Nearest-first ancestors included per the history-depth config.
+    pub ancestors: Vec<&'a Schedule>,
+    /// Predicted scores aligned with [node, ancestors...] (higher better).
+    pub scores: Vec<f64>,
+    pub platform: &'a Platform,
+}
+
+impl<'a> PromptContext<'a> {
+    /// History depth actually available (ancestor count).
+    pub fn depth(&self) -> usize {
+        self.ancestors.len()
+    }
+}
+
+/// Render the full prompt text in the Appendix-A format.
+pub fn render(ctx: &PromptContext) -> String {
+    let mut out = String::new();
+    out.push_str(
+        "You are a code optimization assistant performing Monte Carlo Tree Search \
+         (MCTS) on a given code to improve performance. Each code has a corresponding \
+         history of transformations and predicted cost.\n\n",
+    );
+    out.push_str(&format!(
+        "Target platform: {} ({} cores, {}-lane SIMD, {:.1} GHz, L1 {} KiB / L2 {} KiB / L3 {} MiB, DRAM {:.0} GB/s)\n\n",
+        ctx.platform.display,
+        ctx.platform.cores,
+        ctx.platform.simd_lanes,
+        ctx.platform.freq_ghz,
+        ctx.platform.l1d_bytes >> 10,
+        ctx.platform.l2_bytes >> 10,
+        ctx.platform.l3_bytes >> 20,
+        ctx.platform.dram_gbps,
+    ));
+
+    out.push_str("Code of the selected node:\n```python\n");
+    out.push_str(&printer::print_program(&ctx.node.current));
+    out.push_str("```\n\n");
+
+    out.push_str("Applied transformation history of the selected node:\n");
+    out.push_str(&ctx.node.render_trace());
+    out.push('\n');
+
+    out.push_str("\nHardware cost model analysis of the selected node:\n");
+    let f = features::extract(&ctx.node.current, ctx.platform);
+    out.push_str(&f.render());
+    out.push('\n');
+
+    // Ancestor diffs: loop shapes + score trajectory.
+    let labels = ["parent", "grandparent", "great-grandparent"];
+    for (i, anc) in ctx.ancestors.iter().enumerate() {
+        let label = labels.get(i).copied().unwrap_or("ancestor");
+        out.push_str(&format!("\nMain differences against the {label}:\nLoop shapes:\n"));
+        for (si, stage) in ctx.node.current.stages.iter().enumerate() {
+            let cur_sig = printer::loop_signature(stage);
+            let anc_sig = anc
+                .current
+                .stages
+                .get(si)
+                .map(printer::loop_signature)
+                .unwrap_or_default();
+            if cur_sig != anc_sig {
+                out.push_str(&format!(
+                    "  stage {}: current: {cur_sig}\n  stage {}: {label}:  {anc_sig}\n",
+                    stage.name, stage.name
+                ));
+            }
+        }
+        let new_steps: Vec<&Transform> = ctx
+            .node
+            .trace
+            .iter()
+            .skip(anc.trace.len())
+            .collect();
+        if !new_steps.is_empty() {
+            out.push_str("Transformations applied since:\n");
+            for t in new_steps {
+                out.push_str(&format!("  - {}\n", t.render(&ctx.node.current)));
+            }
+        }
+    }
+
+    out.push_str("\nPerformance estimates (higher is better):\n");
+    let names = ["Current", "Parent", "Grandparent", "Great-grandparent"];
+    for (i, s) in ctx.scores.iter().enumerate() {
+        out.push_str(&format!(
+            "  {}: {:.3}\n",
+            names.get(i).copied().unwrap_or("Ancestor"),
+            s
+        ));
+    }
+
+    out.push_str(&format!(
+        "\nAvailable transformations:\n{}\n",
+        Transform::OP_NAMES.join(", ")
+    ));
+    out.push_str(
+        "\nTask\nAnalyze the IR, trace, and predicted scores. Then propose a sequence of \
+         transformations (you may repeat any) to potentially improve performance.\n\
+         Output your reasoning and your suggested transformations.\n\
+         For example, your answer should be in the following format:\n\
+         Reasoning: This code still has large loop extents, so I'd tile it twice \
+         differently, then unroll.\n\
+         Transformations to apply: TileSize, TileSize, Unroll.\n",
+    );
+    out
+}
+
+/// Rough token count of a prompt (4 chars/token — the accounting the cost
+/// tracker uses, Appendix F).
+pub fn token_estimate(text: &str) -> u64 {
+    (text.len() as u64).div_ceil(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload::WorkloadId;
+
+    fn ctx_fixture() -> (Schedule, Schedule, Platform) {
+        let base = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let child = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 })
+            .unwrap();
+        (child, base, Platform::core_i9())
+    }
+
+    #[test]
+    fn prompt_has_paper_sections() {
+        let (child, base, plat) = ctx_fixture();
+        let ctx = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![0.773, 0.313],
+            platform: &plat,
+        };
+        let text = render(&ctx);
+        assert!(text.contains("Monte Carlo Tree Search"));
+        assert!(text.contains("@tvm.script.ir_module"));
+        assert!(text.contains("Available transformations:"));
+        assert!(text.contains("TileSize, Reorder, Fuse, Parallel"));
+        assert!(text.contains("Performance estimates"));
+        assert!(text.contains("Current: 0.773"));
+        assert!(text.contains("Parent: 0.313"));
+        assert!(text.contains("Transformations to apply:"));
+        assert!(text.contains("differences against the parent"));
+    }
+
+    #[test]
+    fn deeper_history_renders_more_sections() {
+        let (child, base, plat) = ctx_fixture();
+        let gchild = child
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        let ctx = PromptContext {
+            node: &gchild,
+            ancestors: vec![&child, &base],
+            scores: vec![0.9, 0.773, 0.313],
+            platform: &plat,
+        };
+        let text = render(&ctx);
+        assert!(text.contains("differences against the parent"));
+        assert!(text.contains("differences against the grandparent"));
+        assert!(text.contains("Grandparent: 0.313"));
+    }
+
+    #[test]
+    fn token_estimate_scales() {
+        assert_eq!(token_estimate("abcd"), 1);
+        assert_eq!(token_estimate("abcde"), 2);
+        let (child, base, plat) = ctx_fixture();
+        let ctx = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![1.0, 0.9],
+            platform: &plat,
+        };
+        assert!(token_estimate(&render(&ctx)) > 300);
+    }
+}

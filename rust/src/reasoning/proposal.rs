@@ -1,0 +1,296 @@
+//! Proposal parsing, validation and grounding (§3.1 "Transformation
+//! proposal and validation", Appendix G).
+//!
+//! The LLM answers in free text; the compiler extracts the
+//! "Transformations to apply:" list, validates each item against the known
+//! transformation set, grounds under-specified items (bare op names) with
+//! concrete parameters, and — when *all* items are invalid — falls back to
+//! the non-LLM expansion policy. Fallback occurrences are counted for
+//! Table 8.
+
+use crate::schedule::{sampler, Transform};
+use crate::tir::Program;
+use crate::util::rng::Pcg;
+
+/// Outcome of parsing one proposal item.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Parsed {
+    /// Fully-parameterized valid transform.
+    Valid(Transform),
+    /// Recognized op name without (complete) parameters — grounded later.
+    Bare(&'static str),
+    /// Unrecognized or malformed.
+    Invalid(String),
+}
+
+/// Parse the "Transformations to apply:" list out of a model response.
+pub fn parse_response(text: &str) -> Vec<Parsed> {
+    let Some(line) = text
+        .lines()
+        .find(|l| l.trim_start().starts_with("Transformations to apply:"))
+    else {
+        return Vec::new();
+    };
+    let list = line
+        .trim_start()
+        .trim_start_matches("Transformations to apply:")
+        .trim()
+        .trim_end_matches('.');
+    split_items(list).into_iter().map(|s| parse_item(s.trim())).collect()
+}
+
+/// Split on top-level commas (commas inside `[...]` or `(...)` don't count).
+fn split_items(s: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '(' | '[' => depth += 1,
+            ')' | ']' => depth -= 1,
+            ',' if depth == 0 => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if start < s.len() {
+        out.push(&s[start..]);
+    }
+    out
+}
+
+fn parse_item(item: &str) -> Parsed {
+    if item.is_empty() {
+        return Parsed::Invalid(String::new());
+    }
+    let (name, args) = match item.split_once('(') {
+        Some((n, rest)) => (n.trim(), Some(rest.trim_end_matches(')'))),
+        None => (item.trim(), None),
+    };
+    let Some(canonical) = Transform::OP_NAMES.iter().find(|&&op| op == name) else {
+        return Parsed::Invalid(item.to_string());
+    };
+    let Some(args) = args else {
+        return Parsed::Bare(canonical);
+    };
+    match parse_args(canonical, args) {
+        Some(t) => Parsed::Valid(t),
+        // Recognized name with broken params: still salvageable as bare
+        // (the framework re-grounds the parameters).
+        None => Parsed::Bare(canonical),
+    }
+}
+
+fn parse_args(op: &str, args: &str) -> Option<Transform> {
+    let mut stage = None;
+    let mut loop_idx = None;
+    let mut factor = None;
+    let mut depth = None;
+    let mut perm: Option<Vec<usize>> = None;
+    for part in split_items(args) {
+        let (k, v) = part.split_once('=')?;
+        let (k, v) = (k.trim(), v.trim());
+        match k {
+            "stage" => stage = v.parse::<usize>().ok(),
+            "loop" | "loop_idx" => loop_idx = v.parse::<usize>().ok(),
+            "factor" => factor = v.parse::<i64>().ok(),
+            "depth" => depth = v.parse::<usize>().ok(),
+            "perm" => {
+                let inner = v.trim_start_matches('[').trim_end_matches(']');
+                let parsed: Result<Vec<usize>, _> = inner
+                    .split(',')
+                    .map(|x| x.trim().parse::<usize>())
+                    .collect();
+                perm = parsed.ok();
+            }
+            _ => return None,
+        }
+        // Any unparsable required field surfaces as None below.
+        if k == "stage" && stage.is_none() {
+            return None;
+        }
+    }
+    let s = stage?;
+    Some(match op {
+        "TileSize" => Transform::TileSize { stage: s, loop_idx: loop_idx?, factor: factor? },
+        "Reorder" => Transform::Reorder { stage: s, perm: perm? },
+        "Fuse" => Transform::Fuse { stage: s, loop_idx: loop_idx? },
+        "Parallel" => Transform::Parallel { stage: s, loop_idx: loop_idx? },
+        "Vectorize" => Transform::Vectorize { stage: s, loop_idx: loop_idx? },
+        "Unroll" => Transform::Unroll { stage: s, loop_idx: loop_idx? },
+        "ComputeLocation" => Transform::ComputeLocation { stage: s, depth: depth? },
+        "CacheWrite" => Transform::CacheWrite { stage: s },
+        _ => return None,
+    })
+}
+
+/// Ground a bare op name into a concrete transform legal for `program`
+/// (the framework samples parameters, as MetaSchedule does for
+/// under-specified instructions).
+pub fn ground(op: &str, program: &Program, rng: &mut Pcg) -> Option<Transform> {
+    let candidates: Vec<Transform> = sampler::legal_transforms(program, rng)
+        .into_iter()
+        .filter(|t| t.op_name() == op)
+        .collect();
+    if candidates.is_empty() {
+        return None;
+    }
+    Some(rng.choose(&candidates).clone())
+}
+
+/// Statistics for Table 8: expansions vs all-invalid fallbacks.
+#[derive(Debug, Clone, Default)]
+pub struct FallbackStats {
+    pub expansions: u64,
+    pub fallbacks: u64,
+    pub proposals_seen: u64,
+    pub proposals_invalid: u64,
+}
+
+impl FallbackStats {
+    pub fn fallback_rate(&self) -> f64 {
+        if self.expansions == 0 {
+            0.0
+        } else {
+            self.fallbacks as f64 / self.expansions as f64
+        }
+    }
+}
+
+/// Resolve a parsed proposal list into an applicable transform sequence.
+/// Invalid items are discarded; bare items are grounded. Returns the
+/// sequence plus whether this expansion was a total fallback (no usable
+/// proposal at all).
+pub fn resolve(
+    parsed: &[Parsed],
+    program: &Program,
+    rng: &mut Pcg,
+    stats: &mut FallbackStats,
+) -> (Vec<Transform>, bool) {
+    stats.expansions += 1;
+    let mut out = Vec::new();
+    for p in parsed {
+        stats.proposals_seen += 1;
+        match p {
+            Parsed::Valid(t) => out.push(t.clone()),
+            Parsed::Bare(op) => {
+                if let Some(t) = ground(op, program, rng) {
+                    out.push(t);
+                } else {
+                    stats.proposals_invalid += 1;
+                }
+            }
+            Parsed::Invalid(_) => stats.proposals_invalid += 1,
+        }
+    }
+    let fallback = out.is_empty();
+    if fallback {
+        stats.fallbacks += 1;
+    }
+    (out, fallback)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload::WorkloadId;
+
+    #[test]
+    fn parses_parameterized_list() {
+        let text = "Reasoning: tile then vectorize.\n\
+                    Transformations to apply: TileSize(stage=0, loop=1, factor=64), \
+                    Reorder(stage=0, perm=[0, 1, 3, 2]), Vectorize(stage=0, loop=3).";
+        let parsed = parse_response(text);
+        assert_eq!(parsed.len(), 3);
+        assert_eq!(
+            parsed[0],
+            Parsed::Valid(Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 })
+        );
+        assert_eq!(
+            parsed[1],
+            Parsed::Valid(Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2] })
+        );
+    }
+
+    #[test]
+    fn parses_bare_names_like_paper_example() {
+        // The Appendix-A example answer: "TileSize, TileSize, Unroll."
+        let text = "Reasoning: ...\nTransformations to apply: TileSize, TileSize, Unroll.";
+        let parsed = parse_response(text);
+        assert_eq!(
+            parsed,
+            vec![
+                Parsed::Bare("TileSize"),
+                Parsed::Bare("TileSize"),
+                Parsed::Bare("Unroll")
+            ]
+        );
+    }
+
+    #[test]
+    fn flags_unknown_ops() {
+        let text = "Transformations to apply: TileFusion, LoopJam(stage=0), Parallel.";
+        let parsed = parse_response(text);
+        assert!(matches!(parsed[0], Parsed::Invalid(_)));
+        assert!(matches!(parsed[1], Parsed::Invalid(_)));
+        assert_eq!(parsed[2], Parsed::Bare("Parallel"));
+    }
+
+    #[test]
+    fn malformed_params_degrade_to_bare() {
+        let text = "Transformations to apply: TileSize(stage=, factor=abc).";
+        let parsed = parse_response(text);
+        assert_eq!(parsed, vec![Parsed::Bare("TileSize")]);
+    }
+
+    #[test]
+    fn missing_list_is_empty() {
+        assert!(parse_response("Reasoning: I have no idea.").is_empty());
+    }
+
+    #[test]
+    fn grounding_produces_legal_transforms() {
+        let p = WorkloadId::DeepSeekMoe.build_test();
+        let mut rng = Pcg::new(3);
+        for op in ["TileSize", "Parallel", "Unroll", "CacheWrite"] {
+            let t = ground(op, &p, &mut rng).unwrap_or_else(|| panic!("{op} ungroundable"));
+            assert_eq!(t.op_name(), op);
+            t.apply(&p).unwrap();
+        }
+    }
+
+    #[test]
+    fn resolve_counts_fallbacks() {
+        let p = WorkloadId::Llama4Mlp.build_test();
+        let mut rng = Pcg::new(4);
+        let mut stats = FallbackStats::default();
+        // All invalid -> fallback.
+        let parsed = vec![
+            Parsed::Invalid("TileFusion".into()),
+            Parsed::Invalid("banana".into()),
+        ];
+        let (seq, fb) = resolve(&parsed, &p, &mut rng, &mut stats);
+        assert!(seq.is_empty());
+        assert!(fb);
+        // One valid among invalid -> no fallback.
+        let parsed = vec![
+            Parsed::Invalid("junk".into()),
+            Parsed::Bare("Parallel"),
+        ];
+        let (seq, fb) = resolve(&parsed, &p, &mut rng, &mut stats);
+        assert_eq!(seq.len(), 1);
+        assert!(!fb);
+        assert_eq!(stats.expansions, 2);
+        assert_eq!(stats.fallbacks, 1);
+        assert!((stats.fallback_rate() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn split_items_respects_brackets() {
+        let items = split_items("Reorder(stage=0, perm=[2, 0, 1]), Unroll");
+        assert_eq!(items.len(), 2);
+        assert!(items[0].contains("perm=[2, 0, 1]"));
+    }
+}

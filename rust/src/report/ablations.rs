@@ -1,0 +1,192 @@
+//! Ablation regenerators:
+//! - Table 4 / Fig. 4(a): LLM choice,
+//! - Table 5 / Fig. 4(b): historical trace depth,
+//! - Table 6: MCTS branching factor.
+//!
+//! All on the Intel Core i9 ablation environment, reporting best speedup at
+//! the paper's sample checkpoints.
+
+use crate::coordinator::{run_session, Strategy, TuneConfig};
+use crate::reasoning::ModelProfile;
+use crate::tir::workload::WorkloadId;
+use crate::util::json::{arr, num, s, Json};
+
+use super::scale::Scale;
+use super::table::{x2, Table};
+
+pub struct Ablation {
+    pub markdown: String,
+    pub json: Json,
+}
+
+/// The four benchmarks the appendix ablations cover.
+const ABLATION_WORKLOADS: [WorkloadId; 4] = [
+    WorkloadId::Llama3Attention,
+    WorkloadId::DeepSeekMoe,
+    WorkloadId::FluxAttention,
+    WorkloadId::FluxConv,
+];
+
+fn curve(cfg: &TuneConfig, checkpoints: &[usize]) -> Vec<f64> {
+    let session = run_session(cfg);
+    checkpoints
+        .iter()
+        .map(|&c| session.mean_speedup_at(c))
+        .collect()
+}
+
+fn header(checkpoints: &[usize], label: &str) -> Vec<String> {
+    std::iter::once(label.to_string())
+        .chain(checkpoints.iter().map(|c| c.to_string()))
+        .collect()
+}
+
+/// Table 4: each LLM profile as the proposal engine.
+pub fn table4(scale: Scale, seed: u64) -> Ablation {
+    let checkpoints = scale.checkpoints();
+    let budget = *checkpoints.last().unwrap();
+    let mut md = String::from("## Table 4 / Figure 4(a) — LLM choice ablation (Intel Core i9)\n\n");
+    let mut json = Json::obj();
+    for w in ABLATION_WORKLOADS {
+        let hdr = header(&checkpoints, "model");
+        let mut t = Table::new(
+            w.display(),
+            &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let mut wjson = Json::obj();
+        for model in ModelProfile::all() {
+            let cfg = TuneConfig {
+                strategy: Strategy::LlmMcts,
+                workload: w.name().to_string(),
+                platform: "core_i9".to_string(),
+                budget,
+                repeats: scale.repeats(),
+                seed,
+                model: model.name.to_string(),
+                ..Default::default()
+            };
+            let speeds = curve(&cfg, &checkpoints);
+            let mut row = vec![model.display.to_string()];
+            row.extend(speeds.iter().map(|&v| x2(v)));
+            t.row(row);
+            wjson.set(model.name, arr(speeds.into_iter().map(num).collect()));
+        }
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        json.set(w.name(), wjson);
+    }
+    wrap("table4", md, json, &checkpoints)
+}
+
+/// Table 5: historical trace depth (parent+gp vs parent+gp+ggp).
+pub fn table5(scale: Scale, seed: u64) -> Ablation {
+    let checkpoints = scale.checkpoints();
+    let budget = *checkpoints.last().unwrap();
+    let mut md =
+        String::from("## Table 5 / Figure 4(b) — historical trace depth ablation (Intel Core i9)\n\n");
+    let mut json = Json::obj();
+    for w in ABLATION_WORKLOADS {
+        let hdr = header(&checkpoints, "context");
+        let mut t = Table::new(
+            w.display(),
+            &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let mut wjson = Json::obj();
+        for (label, depth) in [
+            ("Parent + Grandparent", 2usize),
+            ("Parent + Grandparent + Great-Grandparent", 3usize),
+        ] {
+            let cfg = TuneConfig {
+                strategy: Strategy::LlmMcts,
+                workload: w.name().to_string(),
+                platform: "core_i9".to_string(),
+                budget,
+                repeats: scale.repeats(),
+                seed,
+                history_depth: depth,
+                ..Default::default()
+            };
+            let speeds = curve(&cfg, &checkpoints);
+            let mut row = vec![label.to_string()];
+            row.extend(speeds.iter().map(|&v| x2(v)));
+            t.row(row);
+            wjson.set(
+                &format!("depth{depth}"),
+                arr(speeds.into_iter().map(num).collect()),
+            );
+        }
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        json.set(w.name(), wjson);
+    }
+    wrap("table5", md, json, &checkpoints)
+}
+
+/// Table 6: MCTS branching factor B = 2 vs B = 4.
+pub fn table6(scale: Scale, seed: u64) -> Ablation {
+    let checkpoints = scale.checkpoints();
+    let budget = *checkpoints.last().unwrap();
+    let mut md = String::from("## Table 6 — MCTS branching factor ablation (Intel Core i9)\n\n");
+    let mut json = Json::obj();
+    for w in ABLATION_WORKLOADS {
+        let hdr = header(&checkpoints, "branching");
+        let mut t = Table::new(
+            w.display(),
+            &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        let mut wjson = Json::obj();
+        for b in [2usize, 4usize] {
+            let cfg = TuneConfig {
+                strategy: Strategy::LlmMcts,
+                workload: w.name().to_string(),
+                platform: "core_i9".to_string(),
+                budget,
+                repeats: scale.repeats(),
+                seed,
+                branching: b,
+                ..Default::default()
+            };
+            let speeds = curve(&cfg, &checkpoints);
+            let mut row = vec![format!("B = {b}")];
+            row.extend(speeds.iter().map(|&v| x2(v)));
+            t.row(row);
+            wjson.set(&format!("b{b}"), arr(speeds.into_iter().map(num).collect()));
+        }
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        json.set(w.name(), wjson);
+    }
+    wrap("table6", md, json, &checkpoints)
+}
+
+fn wrap(name: &str, md: String, series: Json, checkpoints: &[usize]) -> Ablation {
+    let mut root = Json::obj();
+    root.set("experiment", s(name));
+    root.set(
+        "checkpoints",
+        arr(checkpoints.iter().map(|&c| num(c as f64)).collect()),
+    );
+    root.set("series", series);
+    Ablation { markdown: md, json: root }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table5_smoke_runs_both_depths() {
+        let a = table5(Scale::Smoke, 2);
+        assert!(a.markdown.contains("Great-Grandparent"));
+        let moe = a.json.get("series").unwrap().get("deepseek_moe").unwrap();
+        assert!(moe.get("depth2").is_some());
+        assert!(moe.get("depth3").is_some());
+    }
+
+    #[test]
+    fn table6_smoke_runs_both_branchings() {
+        let a = table6(Scale::Smoke, 2);
+        assert!(a.markdown.contains("B = 2"));
+        assert!(a.markdown.contains("B = 4"));
+    }
+}

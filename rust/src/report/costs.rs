@@ -1,0 +1,123 @@
+//! Appendix F / Table 7 (API cost per experiment) and Appendix G /
+//! Table 8 (proposal validity and fallback rates).
+
+use crate::coordinator::{run_session, Strategy, TuneConfig};
+use crate::reasoning::ModelProfile;
+use crate::tir::workload::WorkloadId;
+use crate::util::json::{num, s, Json};
+
+use super::scale::Scale;
+use super::table::{usd, Table};
+
+pub struct CostReport {
+    pub markdown: String,
+    pub json: Json,
+}
+
+/// Table 7: USD cost of a full experiment per (benchmark, model).
+pub fn table7(scale: Scale, seed: u64) -> CostReport {
+    let models = ModelProfile::all();
+    let mut hdr = vec!["Layer / Task".to_string()];
+    hdr.extend(models.iter().map(|m| m.display.to_string()));
+    let mut t = Table::new(
+        "Table 7 — LLM API cost per experiment (USD)",
+        &hdr.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+    );
+    let mut json_rows = Vec::new();
+    for w in WorkloadId::ALL {
+        let mut row = vec![w.display().to_string()];
+        let mut jrow = Json::obj();
+        jrow.set("workload", s(w.name()));
+        for model in &models {
+            let cfg = TuneConfig {
+                strategy: Strategy::LlmMcts,
+                workload: w.name().to_string(),
+                platform: "core_i9".to_string(),
+                budget: scale.rc_budget(),
+                repeats: scale.repeats().min(3), // cost scales linearly anyway
+                seed,
+                model: model.name.to_string(),
+                ..Default::default()
+            };
+            let session = run_session(&cfg);
+            // Cost of ONE full experiment = total cost / repeats.
+            let cost = session.llm_costs.usd(model) / cfg.repeats as f64;
+            row.push(usd(cost));
+            jrow.set(model.name, num(cost));
+        }
+        t.row(row);
+        json_rows.push(jrow);
+    }
+    let mut json = Json::obj();
+    json.set("experiment", s("table7"))
+        .set("rows", Json::Arr(json_rows));
+    CostReport {
+        markdown: format!("## Table 7\n\n{}", t.to_markdown()),
+        json,
+    }
+}
+
+/// Table 8: fallback rate by proposal model.
+pub fn table8(scale: Scale, seed: u64) -> CostReport {
+    let mut t = Table::new(
+        "Table 8 — fallback rate by proposal model",
+        &["Model", "Fallback Rate", "Expected (profile)"],
+    );
+    let mut json_rows = Vec::new();
+    for model in ModelProfile::all() {
+        let cfg = TuneConfig {
+            strategy: Strategy::LlmMcts,
+            workload: "deepseek_moe".to_string(),
+            platform: "core_i9".to_string(),
+            budget: scale.rc_budget() * 2, // more expansions => tighter estimate
+            repeats: scale.repeats(),
+            seed,
+            model: model.name.to_string(),
+            ..Default::default()
+        };
+        let session = run_session(&cfg);
+        let rate = session.llm_fallback_rate;
+        t.row(vec![
+            model.display.to_string(),
+            format!("{:.2}%", rate * 100.0),
+            format!("{:.2}%", model.expected_fallback_rate() * 100.0),
+        ]);
+        let mut jrow = Json::obj();
+        jrow.set("model", s(model.name))
+            .set("fallback_rate", num(rate))
+            .set("expected", num(model.expected_fallback_rate()));
+        json_rows.push(jrow);
+    }
+    let mut json = Json::obj();
+    json.set("experiment", s("table8"))
+        .set("rows", Json::Arr(json_rows));
+    CostReport {
+        markdown: format!("## Table 8\n\n{}", t.to_markdown()),
+        json,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table8_smoke_orders_models() {
+        let r = table8(Scale::Smoke, 5);
+        let rows = r.json.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 6);
+        // Strong commercial models: 0 fallback. Small OSS: > 0.
+        let rate = |name: &str| {
+            rows.iter()
+                .find(|r| r.get("model").unwrap().as_str() == Some(name))
+                .unwrap()
+                .get("fallback_rate")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+        };
+        assert_eq!(rate("gpt4o_mini"), 0.0);
+        assert_eq!(rate("o1_mini"), 0.0);
+        assert!(rate("ds_distill_7b") > rate("llama33_70b"));
+    }
+}

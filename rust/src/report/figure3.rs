@@ -1,0 +1,93 @@
+//! Figure 3 / Table 3: speedup-vs-samples convergence for the three
+//! methods on the five kernels (Intel Core i9 ablation environment).
+
+use crate::coordinator::{run_session, Strategy, TuneConfig};
+use crate::tir::workload::WorkloadId;
+use crate::util::json::{arr, num, s, Json};
+
+use super::scale::Scale;
+use super::table::{x2, Table};
+
+pub struct Figure3 {
+    pub markdown: String,
+    pub json: Json,
+}
+
+/// Regenerate Figure 3 / Table 3.
+pub fn run(scale: Scale, seed: u64) -> Figure3 {
+    let checkpoints = scale.checkpoints();
+    let strategies = [Strategy::Evolutionary, Strategy::Mcts, Strategy::LlmMcts];
+    let mut md = String::from(
+        "## Figure 3 / Table 3 — speedup over pre-optimized code vs evaluated proposals (Intel Core i9)\n\n",
+    );
+    let mut json = Json::obj();
+
+    for w in WorkloadId::ALL {
+        let mut t = Table::new(
+            w.display(),
+            &std::iter::once("method".to_string())
+                .chain(checkpoints.iter().map(|c| c.to_string()))
+                .collect::<Vec<_>>()
+                .iter()
+                .map(|s| s.as_str())
+                .collect::<Vec<_>>(),
+        );
+        let mut wjson = Json::obj();
+        for strat in strategies {
+            let cfg = TuneConfig {
+                strategy: strat,
+                workload: w.name().to_string(),
+                platform: "core_i9".to_string(),
+                budget: if strat == Strategy::Evolutionary {
+                    scale.es_budget()
+                } else {
+                    scale.rc_budget().max(*checkpoints.last().unwrap())
+                },
+                repeats: scale.repeats(),
+                seed,
+                ..Default::default()
+            };
+            let session = run_session(&cfg);
+            let speeds: Vec<f64> = checkpoints
+                .iter()
+                .map(|&c| session.mean_speedup_at(c))
+                .collect();
+            let mut row = vec![strat.display().to_string()];
+            row.extend(speeds.iter().map(|&v| x2(v)));
+            t.row(row);
+            wjson.set(
+                strat.name(),
+                arr(speeds.into_iter().map(num).collect()),
+            );
+        }
+        md.push_str(&t.to_markdown());
+        md.push('\n');
+        json.set(w.name(), wjson);
+    }
+    let mut root = Json::obj();
+    root.set("experiment", s("figure3"));
+    root.set(
+        "checkpoints",
+        arr(checkpoints.iter().map(|&c| num(c as f64)).collect()),
+    );
+    root.set("series", json);
+    Figure3 { markdown: md, json: root }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_scale_produces_all_series() {
+        let f = run(Scale::Smoke, 1);
+        assert!(f.markdown.contains("DeepSeek-R1 MoE Layer"));
+        assert!(f.markdown.contains("REASONING COMPILER"));
+        assert!(f.markdown.contains("Evolutionary Search"));
+        let series = f.json.get("series").unwrap();
+        for w in WorkloadId::ALL {
+            let wj = series.get(w.name()).unwrap();
+            assert_eq!(wj.get("llm_mcts").unwrap().as_arr().unwrap().len(), 3);
+        }
+    }
+}

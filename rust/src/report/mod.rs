@@ -1,0 +1,13 @@
+//! Experiment regenerators: one module per paper table/figure, each
+//! producing markdown (for EXPERIMENTS.md) and JSON (for tooling). The
+//! benches in `rust/benches/` and the `rcc` CLI both dispatch here; see
+//! DESIGN.md's per-experiment index.
+
+pub mod ablations;
+pub mod costs;
+pub mod figure3;
+pub mod platforms;
+pub mod scale;
+pub mod table;
+
+pub use scale::Scale;

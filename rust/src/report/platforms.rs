@@ -1,0 +1,251 @@
+//! Table 1 (layer-wise) and Table 2 (end-to-end Llama-3-8B): sample
+//! efficiency of the REASONING COMPILER vs TVM Evolutionary Search across
+//! the five hardware platforms.
+//!
+//! Protocol (matching the paper's metrics):
+//! - run ES with the large baseline budget, RC with the small budget;
+//! - "# Samples" = samples to reach 98% of that run's own final best
+//!   (the convergence point);
+//! - Speedup = final best over the unoptimized baseline;
+//! - Sample Reduction = ES samples / RC samples;
+//! - Sample Efficiency Gain = (RC speedup / RC samples) /
+//!   (ES speedup / ES samples).
+
+use crate::coordinator::{run_e2e, run_session, Strategy, TuneConfig};
+use crate::cost::Platform;
+use crate::tir::workload::{self, WorkloadId};
+use crate::util::json::{num, s, Json};
+use crate::util::stats;
+
+use super::scale::Scale;
+use super::table::{n, x, Table};
+
+pub struct PlatformReport {
+    pub markdown: String,
+    pub json: Json,
+}
+
+/// Samples to convergence: first sample reaching 98% of the session's mean
+/// final speedup.
+fn convergence_samples(session: &crate::coordinator::SessionResult) -> f64 {
+    let target = session.mean_speedup() * 0.98;
+    session.mean_samples_to(target)
+}
+
+struct PairOutcome {
+    es_samples: f64,
+    es_speedup: f64,
+    rc_samples: f64,
+    rc_speedup: f64,
+}
+
+impl PairOutcome {
+    fn reduction(&self) -> f64 {
+        self.es_samples / self.rc_samples.max(1.0)
+    }
+    fn efficiency_gain(&self) -> f64 {
+        (self.rc_speedup / self.rc_samples.max(1.0)) / (self.es_speedup / self.es_samples.max(1.0))
+    }
+}
+
+fn run_pair(workload: &str, platform: &str, scale: Scale, seed: u64) -> PairOutcome {
+    let base = TuneConfig {
+        workload: workload.to_string(),
+        platform: platform.to_string(),
+        repeats: scale.repeats(),
+        seed,
+        ..Default::default()
+    };
+    let es = run_session(&TuneConfig {
+        strategy: Strategy::Evolutionary,
+        budget: scale.es_budget(),
+        ..base.clone()
+    });
+    let rc = run_session(&TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: scale.rc_budget(),
+        ..base
+    });
+    PairOutcome {
+        es_samples: convergence_samples(&es),
+        es_speedup: es.mean_speedup(),
+        rc_samples: convergence_samples(&rc),
+        rc_speedup: rc.mean_speedup(),
+    }
+}
+
+/// Regenerate Table 1.
+pub fn table1(scale: Scale, seed: u64) -> PlatformReport {
+    let mut t = Table::new(
+        "Table 1 — layer-wise sample efficiency across hardware platforms",
+        &[
+            "Platform",
+            "Benchmark",
+            "TVM # Samples",
+            "TVM Speedup",
+            "RC # Samples",
+            "RC Speedup",
+            "Sample Reduction",
+            "Sample Efficiency Gain",
+        ],
+    );
+    let mut json_rows = Vec::new();
+    let mut es_speeds = Vec::new();
+    let mut rc_speeds = Vec::new();
+    let mut reductions = Vec::new();
+    let mut gains = Vec::new();
+
+    for platform in Platform::all() {
+        for w in WorkloadId::ALL {
+            let o = run_pair(w.name(), platform.name, scale, seed);
+            t.row(vec![
+                platform.display.to_string(),
+                w.display().to_string(),
+                n(o.es_samples),
+                x(o.es_speedup),
+                n(o.rc_samples),
+                x(o.rc_speedup),
+                x(o.reduction()),
+                x(o.efficiency_gain()),
+            ]);
+            let mut row = Json::obj();
+            row.set("platform", s(platform.name))
+                .set("workload", s(w.name()))
+                .set("es_samples", num(o.es_samples))
+                .set("es_speedup", num(o.es_speedup))
+                .set("rc_samples", num(o.rc_samples))
+                .set("rc_speedup", num(o.rc_speedup))
+                .set("sample_reduction", num(o.reduction()))
+                .set("efficiency_gain", num(o.efficiency_gain()));
+            json_rows.push(row);
+            es_speeds.push(o.es_speedup);
+            rc_speeds.push(o.rc_speedup);
+            reductions.push(o.reduction());
+            gains.push(o.efficiency_gain());
+        }
+    }
+    let geo = |v: &[f64]| stats::geomean(v);
+    t.row(vec![
+        "Geomean".into(),
+        "-".into(),
+        "-".into(),
+        x(geo(&es_speeds)),
+        "-".into(),
+        x(geo(&rc_speeds)),
+        x(geo(&reductions)),
+        x(geo(&gains)),
+    ]);
+
+    let mut json = Json::obj();
+    json.set("experiment", s("table1"))
+        .set("rows", Json::Arr(json_rows))
+        .set("geomean_es_speedup", num(geo(&es_speeds)))
+        .set("geomean_rc_speedup", num(geo(&rc_speeds)))
+        .set("geomean_sample_reduction", num(geo(&reductions)))
+        .set("geomean_efficiency_gain", num(geo(&gains)));
+    PlatformReport {
+        markdown: format!("## Table 1\n\n{}", t.to_markdown()),
+        json,
+    }
+}
+
+/// Regenerate Table 2 (end-to-end Llama-3-8B).
+pub fn table2(scale: Scale, seed: u64) -> PlatformReport {
+    let mut t = Table::new(
+        "Table 2 — end-to-end Llama-3-8B sample efficiency",
+        &[
+            "Platform",
+            "TVM # Samples",
+            "TVM Speedup",
+            "RC # Samples",
+            "RC Speedup",
+            "Sample Reduction",
+            "Sample Efficiency Gain",
+        ],
+    );
+    // Scaled-down task set at smoke scale; serving-sized otherwise.
+    let tasks = match scale {
+        Scale::Smoke => workload::llama3_e2e_test(),
+        _ => workload::llama3_e2e(64),
+    };
+    let mut json_rows = Vec::new();
+    let mut es_speeds = Vec::new();
+    let mut rc_speeds = Vec::new();
+    let mut reductions = Vec::new();
+    let mut gains = Vec::new();
+
+    for platform in Platform::all() {
+        let mk = |strategy: Strategy, budget: usize| TuneConfig {
+            strategy,
+            platform: platform.name.to_string(),
+            budget,
+            repeats: (scale.repeats() / 2).max(1), // e2e repeats are heavier
+            seed,
+            ..Default::default()
+        };
+        // Whole-model budgets: tasks share the budget inside run_e2e.
+        let es = run_e2e(&tasks, &mk(Strategy::Evolutionary, scale.es_budget() * 2));
+        let rc = run_e2e(&tasks, &mk(Strategy::LlmMcts, scale.rc_budget() * 2));
+        let (es_n, rc_n) = (es.total_samples as f64, rc.total_samples as f64);
+        let reduction = es_n / rc_n.max(1.0);
+        let gain = (rc.weighted_speedup / rc_n.max(1.0)) / (es.weighted_speedup / es_n.max(1.0));
+        t.row(vec![
+            platform.display.to_string(),
+            n(es_n),
+            x(es.weighted_speedup),
+            n(rc_n),
+            x(rc.weighted_speedup),
+            x(reduction),
+            x(gain),
+        ]);
+        let mut row = Json::obj();
+        row.set("platform", s(platform.name))
+            .set("es_samples", num(es_n))
+            .set("es_speedup", num(es.weighted_speedup))
+            .set("rc_samples", num(rc_n))
+            .set("rc_speedup", num(rc.weighted_speedup))
+            .set("sample_reduction", num(reduction))
+            .set("efficiency_gain", num(gain));
+        json_rows.push(row);
+        es_speeds.push(es.weighted_speedup);
+        rc_speeds.push(rc.weighted_speedup);
+        reductions.push(reduction);
+        gains.push(gain);
+    }
+    t.row(vec![
+        "Geomean".into(),
+        "-".into(),
+        x(stats::geomean(&es_speeds)),
+        "-".into(),
+        x(stats::geomean(&rc_speeds)),
+        x(stats::geomean(&reductions)),
+        x(stats::geomean(&gains)),
+    ]);
+
+    let mut json = Json::obj();
+    json.set("experiment", s("table2"))
+        .set("rows", Json::Arr(json_rows))
+        .set("geomean_rc_speedup", num(stats::geomean(&rc_speeds)))
+        .set("geomean_sample_reduction", num(stats::geomean(&reductions)))
+        .set("geomean_efficiency_gain", num(stats::geomean(&gains)));
+    PlatformReport {
+        markdown: format!("## Table 2\n\n{}", t.to_markdown()),
+        json,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_has_25_pairs_plus_geomean() {
+        let r = table1(Scale::Smoke, 3);
+        let rows = r.json.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 25);
+        assert!(r.markdown.contains("Geomean"));
+        // Headline shape: RC gains efficiency on geomean.
+        let gain = r.json.get("geomean_efficiency_gain").unwrap().as_f64().unwrap();
+        assert!(gain > 1.0, "geomean efficiency gain {gain}");
+    }
+}

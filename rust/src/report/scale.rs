@@ -1,0 +1,73 @@
+//! Experiment scale presets.
+//!
+//! Every regenerator runs at one of three scales: `Smoke` (CI-fast),
+//! `Default` (minutes — the `cargo bench` setting), `Full` (the paper's
+//! budgets and 20 repeats — what EXPERIMENTS.md records).
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Smoke,
+    Default,
+    Full,
+}
+
+impl Scale {
+    pub fn from_name(s: &str) -> Option<Scale> {
+        match s {
+            "smoke" => Some(Scale::Smoke),
+            "default" => Some(Scale::Default),
+            "full" | "paper" => Some(Scale::Full),
+            _ => None,
+        }
+    }
+
+    /// Statistical repeats (paper: 20).
+    pub fn repeats(&self) -> usize {
+        match self {
+            Scale::Smoke => 2,
+            Scale::Default => 5,
+            Scale::Full => 20,
+        }
+    }
+
+    /// Hardware-sample budget for the Evolutionary Search baseline.
+    pub fn es_budget(&self) -> usize {
+        match self {
+            Scale::Smoke => 60,
+            Scale::Default => 600,
+            Scale::Full => 3000,
+        }
+    }
+
+    /// Budget for the REASONING COMPILER / MCTS variants.
+    pub fn rc_budget(&self) -> usize {
+        match self {
+            Scale::Smoke => 30,
+            Scale::Default => 200,
+            Scale::Full => 600,
+        }
+    }
+
+    /// Sample checkpoints for convergence tables (paper Table 3 header).
+    pub fn checkpoints(&self) -> Vec<usize> {
+        match self {
+            Scale::Smoke => vec![18, 36, 60],
+            Scale::Default => vec![18, 36, 72, 150, 200, 600],
+            Scale::Full => vec![18, 36, 72, 150, 200, 600, 900, 1632, 3000],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_ordered() {
+        assert!(Scale::Smoke.es_budget() < Scale::Default.es_budget());
+        assert!(Scale::Default.es_budget() < Scale::Full.es_budget());
+        assert_eq!(Scale::Full.repeats(), 20);
+        assert_eq!(Scale::from_name("paper"), Some(Scale::Full));
+        assert_eq!(Scale::from_name("x"), None);
+    }
+}

@@ -1,0 +1,85 @@
+//! Markdown table rendering for the experiment reports.
+
+/// Simple markdown table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("### {}\n\n", self.title));
+        }
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            self.header.iter().map(|_| "---|").collect::<String>()
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+}
+
+/// Format a speedup like the paper: `5.0x`.
+pub fn x(v: f64) -> String {
+    format!("{v:.1}x")
+}
+
+/// Format a speedup with 2 decimals (Table 3/4/5/6 style).
+pub fn x2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+/// Format a sample count.
+pub fn n(v: f64) -> String {
+    format!("{}", v.round() as i64)
+}
+
+/// Format USD.
+pub fn usd(v: f64) -> String {
+    format!("${v:.2}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_markdown() {
+        let mut t = Table::new("Table 1", &["workload", "speedup"]);
+        t.row(vec!["moe".into(), x(5.02)]);
+        let md = t.to_markdown();
+        assert!(md.contains("### Table 1"));
+        assert!(md.contains("| workload | speedup |"));
+        assert!(md.contains("| moe | 5.0x |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    fn formatters() {
+        assert_eq!(x(5.04), "5.0x");
+        assert_eq!(x2(7.081), "7.08");
+        assert_eq!(n(599.7), "600");
+        assert_eq!(usd(0.894), "$0.89");
+    }
+}

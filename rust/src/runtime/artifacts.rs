@@ -1,0 +1,164 @@
+//! Artifact manifest: what the Python build path produced.
+//!
+//! `make artifacts` writes `artifacts/<name>.hlo.txt` files plus
+//! `manifest.json` describing argument/output shapes. This module parses
+//! the manifest (with the in-repo JSON parser) and locates artifact files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one tensor boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub shape: Vec<i64>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<i64>() as usize
+    }
+}
+
+/// One AOT-compiled computation.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The full artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Default location relative to the repo root / current dir.
+    pub fn discover() -> Result<Manifest> {
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let dir = PathBuf::from(cand);
+            if dir.join("manifest.json").exists() {
+                return Self::load(&dir);
+            }
+        }
+        Err(anyhow!(
+            "no artifacts/manifest.json found — run `make artifacts` first"
+        ))
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let json = Json::parse(text).ok_or_else(|| anyhow!("malformed manifest.json"))?;
+        let Json::Obj(entries) = &json else {
+            return Err(anyhow!("manifest root must be an object"));
+        };
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in entries {
+            let file = entry
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                let arr = entry
+                    .get(key)
+                    .and_then(|v| v.as_arr())
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?;
+                arr.iter()
+                    .map(|t| {
+                        let shape = t
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow!("{name}: bad shape"))?
+                            .iter()
+                            .map(|d| d.as_f64().unwrap_or(0.0) as i64)
+                            .collect();
+                        let dtype = t
+                            .get("dtype")
+                            .and_then(|d| d.as_str())
+                            .unwrap_or("float32")
+                            .to_string();
+                        Ok(TensorSpec { shape, dtype })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    hlo_path: dir.join(file),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "deepseek_moe": {
+        "file": "deepseek_moe.hlo.txt",
+        "inputs": [
+          {"shape": [16, 512], "dtype": "float32"},
+          {"shape": [4, 512, 256], "dtype": "float32"},
+          {"shape": [16, 4], "dtype": "float32"}
+        ],
+        "outputs": [{"shape": [16, 256], "dtype": "float32"}]
+      }
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let a = m.get("deepseek_moe").unwrap();
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![16, 512]);
+        assert_eq!(a.inputs[0].elems(), 16 * 512);
+        assert_eq!(a.outputs[0].shape, vec![16, 256]);
+        assert!(a.hlo_path.ends_with("deepseek_moe.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_errors() {
+        assert!(Manifest::parse(Path::new("/tmp"), "not json").is_err());
+        assert!(Manifest::parse(Path::new("/tmp"), "[1,2]").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Exercised fully in integration tests; here just check discovery
+        // doesn't panic.
+        let _ = Manifest::discover();
+    }
+}

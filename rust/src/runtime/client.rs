@@ -1,0 +1,130 @@
+//! PJRT execution of AOT artifacts.
+//!
+//! Wraps the `xla` crate: `PjRtClient::cpu()` compiles HLO text produced by
+//! `python/compile/aot.py`; executables run with f32 literal inputs. This
+//! is the only place the process touches XLA — Python never runs at serve
+//! time.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Pcg;
+
+use super::artifacts::{ArtifactSpec, Manifest};
+
+/// A loaded, compiled artifact ready to execute.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + a cache of compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    loaded: BTreeMap<String, Executable>,
+}
+
+/// Result of one execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutput {
+    /// Flattened f32 payloads, one per declared output.
+    pub outputs: Vec<Vec<f32>>,
+    pub latency_s: f64,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, loaded: BTreeMap::new() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact from the manifest.
+    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&Executable> {
+        if !self.loaded.contains_key(name) {
+            let spec = manifest.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .context("artifact path not valid UTF-8")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            self.loaded
+                .insert(name.to_string(), Executable { spec, exe });
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Load every artifact in the manifest.
+    pub fn load_all(&mut self, manifest: &Manifest) -> Result<usize> {
+        for name in manifest.artifacts.keys() {
+            self.load(manifest, name)?;
+        }
+        Ok(self.loaded.len())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Executable> {
+        self.loaded.get(name)
+    }
+}
+
+impl Executable {
+    /// Execute with the given flattened f32 inputs (lengths must match the
+    /// manifest shapes). Returns per-output payloads + wall latency.
+    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<ExecOutput> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            self.spec.name,
+            self.spec.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+            anyhow::ensure!(
+                data.len() == spec.elems(),
+                "{}: input payload {} elems, shape wants {}",
+                self.spec.name,
+                data.len(),
+                spec.elems()
+            );
+            let lit = xla::Literal::vec1(data).reshape(&spec.shape)?;
+            literals.push(lit);
+        }
+        let t0 = Instant::now();
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let latency_s = t0.elapsed().as_secs_f64();
+        // aot.py lowers with return_tuple=True: unpack the tuple.
+        let tuple = result.decompose_tuple()?;
+        let mut outputs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            outputs.push(lit.to_vec::<f32>()?);
+        }
+        Ok(ExecOutput { outputs, latency_s })
+    }
+
+    /// Deterministic pseudo-random inputs matching the artifact's shapes
+    /// (for smoke runs, serving demos and latency measurement).
+    pub fn random_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Pcg::new(seed ^ 0xDA7A);
+        self.spec
+            .inputs
+            .iter()
+            .map(|s| {
+                (0..s.elems())
+                    .map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32)
+                    .collect()
+            })
+            .collect()
+    }
+}

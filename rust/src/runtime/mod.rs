@@ -1,0 +1,10 @@
+//! PJRT runtime: load and execute the AOT artifacts produced by the Python
+//! build path (`make artifacts`). HLO text in, compiled executables out —
+//! see /opt/xla-example/load_hlo for the reference wiring and DESIGN.md for
+//! why text (not serialized protos) is the interchange format.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest, TensorSpec};
+pub use client::{ExecOutput, Executable, Runtime};

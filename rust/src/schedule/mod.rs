@@ -1,0 +1,13 @@
+//! Schedule engine: the transformation algebra over TIR programs.
+//!
+//! [`Transform`] is the action space of the paper's MDP; [`Schedule`] pairs
+//! a base program with its transformation trace (replayable, fingerprinted
+//! for MCTS dedup); [`sampler`] provides the uninformed random policy used
+//! by vanilla MCTS, ES mutation, rollouts and the LLM fallback path.
+
+pub mod sampler;
+pub mod trace;
+pub mod transform;
+
+pub use trace::Schedule;
+pub use transform::{ApplyError, Transform};

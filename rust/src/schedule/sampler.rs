@@ -1,0 +1,255 @@
+//! Random legal-transform sampling.
+//!
+//! This is the *uninformed* proposal policy: vanilla MCTS expansion and
+//! rollouts, Evolutionary Search mutation, and the fallback path when all
+//! LLM proposals are invalid (Appendix G) all draw from here.
+
+use crate::tir::program::{LoopKind, Program, Stage};
+use crate::util::rng::Pcg;
+
+use super::transform::Transform;
+
+/// Proper divisors d of n with 2 <= d < n.
+pub fn divisors(n: i64) -> Vec<i64> {
+    let mut out = Vec::new();
+    let mut d = 2;
+    while d < n {
+        if n % d == 0 {
+            out.push(d);
+        }
+        d += 1;
+        if d > 512 {
+            // Large extents: cap the scan, keep power-of-two-ish factors.
+            let mut k = 512;
+            while k < n {
+                if n % k == 0 {
+                    out.push(k);
+                }
+                k *= 2;
+            }
+            break;
+        }
+    }
+    out
+}
+
+/// Enumerate every legal transform for the program, bounded per category so
+/// the list stays small for big nests (Reorder alternatives are sampled, not
+/// enumerated exhaustively).
+pub fn legal_transforms(program: &Program, rng: &mut Pcg) -> Vec<Transform> {
+    let mut out = Vec::new();
+    for (si, stage) in program.stages.iter().enumerate() {
+        legal_for_stage(program, stage, si, rng, &mut out);
+    }
+    out
+}
+
+fn legal_for_stage(
+    _program: &Program,
+    stage: &Stage,
+    si: usize,
+    rng: &mut Pcg,
+    out: &mut Vec<Transform>,
+) {
+    let n = stage.loops.len();
+
+    // TileSize: every serial loop x a few divisors.
+    for (li, l) in stage.loops.iter().enumerate() {
+        if l.kind != LoopKind::Serial {
+            continue;
+        }
+        let divs = divisors(l.extent);
+        if divs.is_empty() {
+            continue;
+        }
+        // Keep at most 4 candidate factors per loop to bound the action set.
+        if divs.len() <= 4 {
+            for f in divs {
+                out.push(Transform::TileSize { stage: si, loop_idx: li, factor: f });
+            }
+        } else {
+            let mut picked = std::collections::BTreeSet::new();
+            // Always include a small and a large factor, then random fill.
+            picked.insert(divs[0]);
+            picked.insert(divs[divs.len() - 1]);
+            while picked.len() < 4 {
+                picked.insert(*rng.choose(&divs));
+            }
+            for f in picked {
+                out.push(Transform::TileSize { stage: si, loop_idx: li, factor: f });
+            }
+        }
+    }
+
+    // Reorder: a handful of random legal permutations (plus reduction-
+    // outward and reduction-inward canonical moves).
+    if n >= 2 {
+        for _ in 0..3 {
+            let perm = random_legal_perm(stage, rng);
+            if perm.iter().enumerate().any(|(i, &p)| i != p) {
+                out.push(Transform::Reorder { stage: si, perm });
+            }
+        }
+    }
+
+    // Fuse: adjacent serial pairs.
+    for li in 0..n.saturating_sub(1) {
+        if stage.loops[li].kind == LoopKind::Serial && stage.loops[li + 1].kind == LoopKind::Serial
+        {
+            out.push(Transform::Fuse { stage: si, loop_idx: li });
+        }
+    }
+
+    // Parallel: the first non-parallel loop, if legal.
+    let prefix = stage
+        .loops
+        .iter()
+        .take_while(|l| l.kind == LoopKind::Parallel)
+        .count();
+    if prefix < n
+        && stage.loops[prefix].kind == LoopKind::Serial
+        && !stage.loop_is_reduction(prefix)
+    {
+        out.push(Transform::Parallel { stage: si, loop_idx: prefix });
+    }
+
+    // Vectorize: innermost loop.
+    if n > 0 {
+        let li = n - 1;
+        let l = &stage.loops[li];
+        if l.kind == LoopKind::Serial && !stage.loop_is_reduction(li) && l.extent <= 64 {
+            out.push(Transform::Vectorize { stage: si, loop_idx: li });
+        }
+    }
+
+    // Unroll: small serial loops.
+    for (li, l) in stage.loops.iter().enumerate() {
+        if l.kind == LoopKind::Serial && l.extent <= 64 {
+            out.push(Transform::Unroll { stage: si, loop_idx: li });
+        }
+    }
+
+    // ComputeLocation: a few depths.
+    for depth in [n / 2, n.saturating_sub(1)] {
+        if depth > 0 && depth <= n && stage.compute_at != Some(depth) {
+            out.push(Transform::ComputeLocation { stage: si, depth });
+        }
+    }
+
+    // CacheWrite.
+    if !stage.cache_write {
+        out.push(Transform::CacheWrite { stage: si });
+    }
+}
+
+/// A random permutation that respects the structural constraints:
+/// parallel prefix stays in place, vectorized loop stays innermost.
+fn random_legal_perm(stage: &Stage, rng: &mut Pcg) -> Vec<usize> {
+    let n = stage.loops.len();
+    let prefix = stage
+        .loops
+        .iter()
+        .take_while(|l| l.kind == LoopKind::Parallel)
+        .count();
+    let vec_tail = usize::from(n > 0 && stage.loops[n - 1].kind == LoopKind::Vectorized);
+    let mut middle: Vec<usize> = (prefix..n - vec_tail).collect();
+    rng.shuffle(&mut middle);
+    let mut perm: Vec<usize> = (0..prefix).collect();
+    perm.extend(middle);
+    perm.extend(n - vec_tail..n);
+    perm
+}
+
+/// Draw one random legal transform. Returns None only if the action set is
+/// empty (fully annotated nest — practically unreachable).
+pub fn random_transform(program: &Program, rng: &mut Pcg) -> Option<Transform> {
+    let actions = legal_transforms(program, rng);
+    if actions.is_empty() {
+        return None;
+    }
+    Some(rng.choose(&actions).clone())
+}
+
+/// Draw a random sequence of `len` legal transforms, applying as it goes so
+/// every element is legal in context (the MCTS rollout policy).
+pub fn random_sequence(program: &Program, len: usize, rng: &mut Pcg) -> Vec<Transform> {
+    let mut out = Vec::with_capacity(len);
+    let mut cur = program.clone();
+    for _ in 0..len {
+        match random_transform(&cur, rng) {
+            Some(t) => match t.apply(&cur) {
+                Ok(next) => {
+                    cur = next;
+                    out.push(t);
+                }
+                Err(_) => continue,
+            },
+            None => break,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(12), vec![2, 3, 4, 6]);
+        assert_eq!(divisors(7), Vec::<i64>::new());
+        assert_eq!(divisors(2), Vec::<i64>::new());
+    }
+
+    #[test]
+    fn divisors_large_extent_capped() {
+        let d = divisors(7168);
+        assert!(!d.is_empty());
+        assert!(d.iter().all(|&x| 7168 % x == 0 && x >= 2 && x < 7168));
+    }
+
+    #[test]
+    fn all_enumerated_transforms_apply_cleanly() {
+        let mut rng = Pcg::new(1);
+        for w in workload::WorkloadId::ALL {
+            let p = w.build_test();
+            for t in legal_transforms(&p, &mut rng) {
+                t.apply(&p)
+                    .unwrap_or_else(|e| panic!("{}: {t:?} illegal: {e}", w.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn random_sequence_all_legal() {
+        let mut rng = Pcg::new(2);
+        let p = workload::WorkloadId::DeepSeekMoe.build_test();
+        for _ in 0..10 {
+            let seq = random_sequence(&p, 6, &mut rng);
+            // Apply the whole sequence: every element must be legal in order.
+            let mut cur = p.clone();
+            for t in &seq {
+                cur = t.apply(&cur).expect("sequence element illegal");
+            }
+            cur.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn random_sequences_differ_across_seeds() {
+        let p = workload::WorkloadId::Llama4Mlp.build_test();
+        let a = random_sequence(&p, 5, &mut Pcg::new(3));
+        let b = random_sequence(&p, 5, &mut Pcg::new(4));
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let p = workload::WorkloadId::FluxConv.build_test();
+        let a = random_sequence(&p, 5, &mut Pcg::new(11));
+        let b = random_sequence(&p, 5, &mut Pcg::new(11));
+        assert_eq!(a, b);
+    }
+}

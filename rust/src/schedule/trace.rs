@@ -1,0 +1,207 @@
+//! Transformation traces: the ordered sequence `S_i` of transforms that
+//! produced a program variant, with deterministic replay.
+//!
+//! Traces are the genome of Evolutionary Search, the path labels of the
+//! MCTS tree, and the "applied schedule history" serialized into prompts.
+
+use std::sync::Arc;
+
+use crate::tir::Program;
+
+use super::transform::{ApplyError, Transform};
+
+/// A schedule: the original program, the transform sequence applied so far,
+/// and the resulting current program.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    /// Shared, immutable original program (Arc: schedules are cloned on
+    /// every tree edge, so the base must not be deep-copied each time).
+    pub base: Arc<Program>,
+    pub trace: Vec<Transform>,
+    pub current: Program,
+    /// Human-readable rendering of each trace step against the program it
+    /// was applied to, built incrementally at apply time so prompts don't
+    /// replay the whole trace (O(L^2) before; see EXPERIMENTS.md §Perf).
+    trace_text: Vec<String>,
+}
+
+impl Schedule {
+    pub fn new(base: Program) -> Schedule {
+        Schedule {
+            current: base.clone(),
+            base: Arc::new(base),
+            trace: Vec::new(),
+            trace_text: Vec::new(),
+        }
+    }
+
+    /// Build from an already-shared base (avoids re-wrapping).
+    pub fn new_shared(base: Arc<Program>) -> Schedule {
+        Schedule {
+            current: (*base).clone(),
+            base,
+            trace: Vec::new(),
+            trace_text: Vec::new(),
+        }
+    }
+
+    /// Apply one transform, extending the trace (`S_{i+1} = S_i ++ [o]`).
+    pub fn apply(&self, t: Transform) -> Result<Schedule, ApplyError> {
+        let next = t.apply(&self.current)?;
+        let mut trace = self.trace.clone();
+        let mut trace_text = self.trace_text.clone();
+        trace_text.push(t.render(&self.current));
+        trace.push(t);
+        Ok(Schedule { base: self.base.clone(), trace, current: next, trace_text })
+    }
+
+    /// Apply a sequence; stops at the first failure, returning how many
+    /// transforms were applied (partial application is how ES mutation and
+    /// MCTS rollouts tolerate invalid tails).
+    pub fn apply_all(&self, ts: &[Transform]) -> (Schedule, usize) {
+        let mut cur = self.clone();
+        let mut applied = 0;
+        for t in ts {
+            match cur.apply(t.clone()) {
+                Ok(next) => {
+                    cur = next;
+                    applied += 1;
+                }
+                Err(_) => break,
+            }
+        }
+        (cur, applied)
+    }
+
+    /// Replay the trace from the base program; must reproduce `current`.
+    pub fn replay(&self) -> Result<Program, ApplyError> {
+        let mut p = (*self.base).clone();
+        for t in &self.trace {
+            p = t.apply(&p)?;
+        }
+        Ok(p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.trace.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.trace.is_empty()
+    }
+
+    /// Render the trace as numbered lines for prompts/logs. Each step was
+    /// rendered at apply time against the program state it actually saw, so
+    /// this is O(L) string work, not O(L) transform replays.
+    pub fn render_trace(&self) -> String {
+        if self.trace.is_empty() {
+            return "  (no transformations applied)".to_string();
+        }
+        self.trace_text
+            .iter()
+            .enumerate()
+            .map(|(i, t)| format!("  {}. {t}", i + 1))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    /// Structural fingerprint of the current program — used by MCTS to
+    /// detect that a proposed child already exists (the tree must stay
+    /// acyclic / deduplicated, §3.2).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut feed = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for s in &self.current.stages {
+            for l in &s.loops {
+                feed(l.extent as u64);
+                feed(l.kind as u64 + 1);
+                for b in l.name.bytes() {
+                    feed(b as u64);
+                }
+            }
+            feed(s.cache_write as u64 + 17);
+            feed(s.compute_at.map(|d| d as u64 + 1).unwrap_or(0));
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload;
+
+    fn sched() -> Schedule {
+        Schedule::new(workload::moe_matmul("m", 4, 6, 8))
+    }
+
+    #[test]
+    fn apply_extends_trace() {
+        let s = sched();
+        let s1 = s
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap();
+        assert_eq!(s1.len(), 1);
+        assert_eq!(s1.current.stages[0].loops.len(), 4);
+        // Parent unchanged.
+        assert_eq!(s.len(), 0);
+        assert_eq!(s.current.stages[0].loops.len(), 3);
+    }
+
+    #[test]
+    fn replay_reproduces_current() {
+        let s = sched()
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap()
+            .apply(Transform::Reorder { stage: 0, perm: vec![0, 2, 1, 3] })
+            .unwrap()
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        let replayed = s.replay().unwrap();
+        // Same loop structure.
+        let a: Vec<_> = replayed.stages[0].loops.iter().map(|l| (l.name.clone(), l.extent, l.kind)).collect();
+        let b: Vec<_> = s.current.stages[0].loops.iter().map(|l| (l.name.clone(), l.extent, l.kind)).collect();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn apply_all_partial() {
+        let s = sched();
+        let ts = vec![
+            Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 },
+            Transform::TileSize { stage: 0, loop_idx: 99, factor: 2 }, // invalid
+            Transform::Parallel { stage: 0, loop_idx: 0 },
+        ];
+        let (out, applied) = s.apply_all(&ts);
+        assert_eq!(applied, 1);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_schedules() {
+        let s = sched();
+        let s1 = s.apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }).unwrap();
+        let s2 = s.apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 2 }).unwrap();
+        assert_ne!(s.fingerprint(), s1.fingerprint());
+        assert_ne!(s1.fingerprint(), s2.fingerprint());
+        // Same sequence -> same fingerprint.
+        let s1b = s.apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }).unwrap();
+        assert_eq!(s1.fingerprint(), s1b.fingerprint());
+    }
+
+    #[test]
+    fn render_trace_numbered() {
+        let s = sched()
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap()
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        let text = s.render_trace();
+        assert!(text.contains("1. TileSize(stage=moe, loop=k, factor=4)"));
+        assert!(text.contains("2. Parallel(stage=moe, loop=t)"));
+        assert!(sched().render_trace().contains("no transformations"));
+    }
+}

@@ -1,0 +1,550 @@
+//! Schedule transformations (the action space `O` of the paper's MDP).
+//!
+//! Every transform is a semantics-preserving rewrite of a stage's loop nest
+//! (or a performance annotation). The names mirror the set the paper's
+//! prompts expose: `TileSize`, `Reorder`, `Fuse`, `Parallel`, `Vectorize`,
+//! `Unroll`, `ComputeLocation`, `CacheWrite`.
+
+use crate::tir::expr::Expr;
+use crate::tir::program::{LoopDef, LoopKind, Program, Stage};
+
+/// One transformation. `stage` indexes `Program::stages`; `loop_idx`
+/// indexes the stage's *current* loop nest (outermost = 0).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Transform {
+    /// Split the loop into `(extent/factor, factor)`; `factor` must divide
+    /// the extent. This is MetaSchedule's `sample_perfect_tile` step.
+    TileSize { stage: usize, loop_idx: usize, factor: i64 },
+    /// Permute the loop nest. `perm[i]` = old index of the loop now at `i`.
+    Reorder { stage: usize, perm: Vec<usize> },
+    /// Fuse loops `loop_idx` and `loop_idx + 1` into one.
+    Fuse { stage: usize, loop_idx: usize },
+    /// Mark a loop parallel (binds to worker threads).
+    Parallel { stage: usize, loop_idx: usize },
+    /// Mark a loop SIMD-vectorized (must be the innermost loop).
+    Vectorize { stage: usize, loop_idx: usize },
+    /// Mark a loop fully unrolled.
+    Unroll { stage: usize, loop_idx: usize },
+    /// Hoist output-tile init/write-back to the given loop depth.
+    ComputeLocation { stage: usize, depth: usize },
+    /// Accumulate into a register/L1-local buffer, write back once.
+    CacheWrite { stage: usize },
+}
+
+/// Why a transform could not be applied.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum ApplyError {
+    #[error("stage index {0} out of range")]
+    BadStage(usize),
+    #[error("loop index {0} out of range")]
+    BadLoop(usize),
+    #[error("factor {factor} does not divide extent {extent}")]
+    BadFactor { factor: i64, extent: i64 },
+    #[error("factor must be in 2..extent, got {0}")]
+    TrivialFactor(i64),
+    #[error("reorder permutation invalid: {0}")]
+    BadPerm(String),
+    #[error("cannot {action} a {kind} loop")]
+    WrongKind { action: &'static str, kind: &'static str },
+    #[error("cannot parallelize a reduction loop")]
+    ParallelReduction,
+    #[error("parallel loops must form an outermost prefix")]
+    ParallelNotPrefix,
+    #[error("cannot vectorize a reduction loop")]
+    VectorizeReduction,
+    #[error("vectorized loop must be innermost")]
+    VectorizeNotInnermost,
+    #[error("vectorize extent {0} too large (max 64)")]
+    VectorizeTooWide(i64),
+    #[error("fuse requires two adjacent serial loops")]
+    FuseNotSerial,
+    #[error("compute location depth {0} out of range")]
+    BadDepth(usize),
+    #[error("cache_write already applied")]
+    CacheWriteTwice,
+    #[error("unroll extent {0} too large (max 64)")]
+    UnrollTooWide(i64),
+}
+
+impl Transform {
+    pub fn stage(&self) -> usize {
+        match self {
+            Transform::TileSize { stage, .. }
+            | Transform::Reorder { stage, .. }
+            | Transform::Fuse { stage, .. }
+            | Transform::Parallel { stage, .. }
+            | Transform::Vectorize { stage, .. }
+            | Transform::Unroll { stage, .. }
+            | Transform::ComputeLocation { stage, .. }
+            | Transform::CacheWrite { stage } => *stage,
+        }
+    }
+
+    /// Paper-facing operation name (what prompts list and the LLM emits).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            Transform::TileSize { .. } => "TileSize",
+            Transform::Reorder { .. } => "Reorder",
+            Transform::Fuse { .. } => "Fuse",
+            Transform::Parallel { .. } => "Parallel",
+            Transform::Vectorize { .. } => "Vectorize",
+            Transform::Unroll { .. } => "Unroll",
+            Transform::ComputeLocation { .. } => "ComputeLocation",
+            Transform::CacheWrite { .. } => "CacheWrite",
+        }
+    }
+
+    /// All operation names, in the order prompts list them.
+    pub const OP_NAMES: [&'static str; 8] = [
+        "TileSize",
+        "Reorder",
+        "Fuse",
+        "Parallel",
+        "Vectorize",
+        "Unroll",
+        "ComputeLocation",
+        "CacheWrite",
+    ];
+
+    /// Human-readable rendering used in traces and prompts, e.g.
+    /// `TileSize(stage=moe, loop=j, factor=64)`.
+    pub fn render(&self, program: &Program) -> String {
+        let stage_name = |s: usize| {
+            program
+                .stages
+                .get(s)
+                .map(|st| st.name.clone())
+                .unwrap_or_else(|| format!("#{s}"))
+        };
+        let loop_name = |s: usize, l: usize| {
+            program
+                .stages
+                .get(s)
+                .and_then(|st| st.loops.get(l))
+                .map(|ld| ld.name.clone())
+                .unwrap_or_else(|| format!("#{l}"))
+        };
+        match self {
+            Transform::TileSize { stage, loop_idx, factor } => format!(
+                "TileSize(stage={}, loop={}, factor={})",
+                stage_name(*stage),
+                loop_name(*stage, *loop_idx),
+                factor
+            ),
+            Transform::Reorder { stage, perm } => {
+                format!("Reorder(stage={}, perm={:?})", stage_name(*stage), perm)
+            }
+            Transform::Fuse { stage, loop_idx } => format!(
+                "Fuse(stage={}, loops=[{}, {}])",
+                stage_name(*stage),
+                loop_name(*stage, *loop_idx),
+                loop_name(*stage, *loop_idx + 1)
+            ),
+            Transform::Parallel { stage, loop_idx } => format!(
+                "Parallel(stage={}, loop={})",
+                stage_name(*stage),
+                loop_name(*stage, *loop_idx)
+            ),
+            Transform::Vectorize { stage, loop_idx } => format!(
+                "Vectorize(stage={}, loop={})",
+                stage_name(*stage),
+                loop_name(*stage, *loop_idx)
+            ),
+            Transform::Unroll { stage, loop_idx } => format!(
+                "Unroll(stage={}, loop={})",
+                stage_name(*stage),
+                loop_name(*stage, *loop_idx)
+            ),
+            Transform::ComputeLocation { stage, depth } => format!(
+                "ComputeLocation(stage={}, depth={})",
+                stage_name(*stage),
+                depth
+            ),
+            Transform::CacheWrite { stage } => {
+                format!("CacheWrite(stage={})", stage_name(*stage))
+            }
+        }
+    }
+
+    /// Apply to a program, producing the transformed variant.
+    pub fn apply(&self, program: &Program) -> Result<Program, ApplyError> {
+        let mut p = program.clone();
+        let si = self.stage();
+        let stage = p.stages.get_mut(si).ok_or(ApplyError::BadStage(si))?;
+        match self {
+            Transform::TileSize { loop_idx, factor, .. } => {
+                apply_tile(stage, *loop_idx, *factor)?
+            }
+            Transform::Reorder { perm, .. } => apply_reorder(stage, perm)?,
+            Transform::Fuse { loop_idx, .. } => apply_fuse(stage, *loop_idx)?,
+            Transform::Parallel { loop_idx, .. } => apply_parallel(stage, *loop_idx)?,
+            Transform::Vectorize { loop_idx, .. } => apply_vectorize(stage, *loop_idx)?,
+            Transform::Unroll { loop_idx, .. } => apply_unroll(stage, *loop_idx)?,
+            Transform::ComputeLocation { depth, .. } => {
+                if *depth > stage.loops.len() {
+                    return Err(ApplyError::BadDepth(*depth));
+                }
+                stage.compute_at = Some(*depth);
+            }
+            Transform::CacheWrite { .. } => {
+                if stage.cache_write {
+                    return Err(ApplyError::CacheWriteTwice);
+                }
+                stage.cache_write = true;
+            }
+        }
+        debug_assert!(p.validate().is_ok(), "transform broke invariants: {self:?}");
+        Ok(p)
+    }
+}
+
+fn apply_tile(stage: &mut Stage, loop_idx: usize, factor: i64) -> Result<(), ApplyError> {
+    let l = stage
+        .loops
+        .get(loop_idx)
+        .ok_or(ApplyError::BadLoop(loop_idx))?
+        .clone();
+    if l.kind != LoopKind::Serial {
+        return Err(ApplyError::WrongKind { action: "tile", kind: l.kind.label() });
+    }
+    if factor < 2 || factor >= l.extent {
+        return Err(ApplyError::TrivialFactor(factor));
+    }
+    if l.extent % factor != 0 {
+        return Err(ApplyError::BadFactor { factor, extent: l.extent });
+    }
+    let outer_ext = l.extent / factor;
+    let vo = stage.fresh_var(outer_ext);
+    let vi = stage.fresh_var(factor);
+    // old var := vo * factor + vi
+    let replacement = Expr::add(Expr::mul(Expr::var(vo), factor), Expr::var(vi));
+    for e in stage.axis_exprs.iter_mut() {
+        *e = e.subst(l.var, &replacement);
+    }
+    let outer = LoopDef {
+        var: vo,
+        name: format!("{}_0", l.name),
+        extent: outer_ext,
+        kind: LoopKind::Serial,
+    };
+    let inner = LoopDef {
+        var: vi,
+        name: format!("{}_1", l.name),
+        extent: factor,
+        kind: LoopKind::Serial,
+    };
+    stage.loops.splice(loop_idx..=loop_idx, [outer, inner]);
+    // compute_at depths beyond the split point shift by one.
+    if let Some(d) = stage.compute_at {
+        if d > loop_idx {
+            stage.compute_at = Some(d + 1);
+        }
+    }
+    Ok(())
+}
+
+fn apply_reorder(stage: &mut Stage, perm: &[usize]) -> Result<(), ApplyError> {
+    let n = stage.loops.len();
+    if perm.len() != n {
+        return Err(ApplyError::BadPerm(format!("length {} != {}", perm.len(), n)));
+    }
+    let mut seen = vec![false; n];
+    for &i in perm {
+        if i >= n || seen[i] {
+            return Err(ApplyError::BadPerm(format!("bad element {i}")));
+        }
+        seen[i] = true;
+    }
+    let new_loops: Vec<LoopDef> = perm.iter().map(|&i| stage.loops[i].clone()).collect();
+    // Vectorized loops must stay innermost; parallel loops must stay an
+    // outermost prefix (mirrors TVM's structural constraints).
+    for (pos, l) in new_loops.iter().enumerate() {
+        if l.kind == LoopKind::Vectorized && pos != n - 1 {
+            return Err(ApplyError::VectorizeNotInnermost);
+        }
+    }
+    let par_count = new_loops.iter().filter(|l| l.kind == LoopKind::Parallel).count();
+    if par_count > 0 && !new_loops[..par_count].iter().all(|l| l.kind == LoopKind::Parallel) {
+        return Err(ApplyError::ParallelNotPrefix);
+    }
+    stage.loops = new_loops;
+    // Reorder invalidates a previously chosen compute location (TVM resets it).
+    stage.compute_at = None;
+    Ok(())
+}
+
+fn apply_fuse(stage: &mut Stage, loop_idx: usize) -> Result<(), ApplyError> {
+    if loop_idx + 1 >= stage.loops.len() {
+        return Err(ApplyError::BadLoop(loop_idx + 1));
+    }
+    let l1 = stage.loops[loop_idx].clone();
+    let l2 = stage.loops[loop_idx + 1].clone();
+    if l1.kind != LoopKind::Serial || l2.kind != LoopKind::Serial {
+        return Err(ApplyError::FuseNotSerial);
+    }
+    let fused_ext = l1.extent * l2.extent;
+    let vf = stage.fresh_var(fused_ext);
+    // l1 := vf / e2 ; l2 := vf % e2
+    let r1 = Expr::div(Expr::var(vf), l2.extent);
+    let r2 = Expr::modulo(Expr::var(vf), l2.extent);
+    for e in stage.axis_exprs.iter_mut() {
+        *e = e.subst(l1.var, &r1).subst(l2.var, &r2);
+    }
+    let fused = LoopDef {
+        var: vf,
+        name: format!("{}_{}_f", l1.name, l2.name),
+        extent: fused_ext,
+        kind: LoopKind::Serial,
+    };
+    stage.loops.splice(loop_idx..=loop_idx + 1, [fused]);
+    if let Some(d) = stage.compute_at {
+        if d > loop_idx {
+            stage.compute_at = Some(d.saturating_sub(1));
+        }
+    }
+    Ok(())
+}
+
+fn apply_parallel(stage: &mut Stage, loop_idx: usize) -> Result<(), ApplyError> {
+    let n = stage.loops.len();
+    if loop_idx >= n {
+        return Err(ApplyError::BadLoop(loop_idx));
+    }
+    if stage.loop_is_reduction(loop_idx) {
+        return Err(ApplyError::ParallelReduction);
+    }
+    let l = &stage.loops[loop_idx];
+    if l.kind != LoopKind::Serial {
+        return Err(ApplyError::WrongKind { action: "parallelize", kind: l.kind.label() });
+    }
+    // Must extend the parallel prefix: every loop outside must already be parallel.
+    if !stage.loops[..loop_idx].iter().all(|l| l.kind == LoopKind::Parallel) {
+        return Err(ApplyError::ParallelNotPrefix);
+    }
+    stage.loops[loop_idx].kind = LoopKind::Parallel;
+    Ok(())
+}
+
+fn apply_vectorize(stage: &mut Stage, loop_idx: usize) -> Result<(), ApplyError> {
+    let n = stage.loops.len();
+    if loop_idx >= n {
+        return Err(ApplyError::BadLoop(loop_idx));
+    }
+    if loop_idx != n - 1 {
+        return Err(ApplyError::VectorizeNotInnermost);
+    }
+    if stage.loop_is_reduction(loop_idx) {
+        return Err(ApplyError::VectorizeReduction);
+    }
+    let l = &stage.loops[loop_idx];
+    if l.kind != LoopKind::Serial {
+        return Err(ApplyError::WrongKind { action: "vectorize", kind: l.kind.label() });
+    }
+    if l.extent > 64 {
+        return Err(ApplyError::VectorizeTooWide(l.extent));
+    }
+    stage.loops[loop_idx].kind = LoopKind::Vectorized;
+    Ok(())
+}
+
+fn apply_unroll(stage: &mut Stage, loop_idx: usize) -> Result<(), ApplyError> {
+    let l = stage
+        .loops
+        .get(loop_idx)
+        .ok_or(ApplyError::BadLoop(loop_idx))?;
+    if l.kind != LoopKind::Serial {
+        return Err(ApplyError::WrongKind { action: "unroll", kind: l.kind.label() });
+    }
+    if l.extent > 64 {
+        return Err(ApplyError::UnrollTooWide(l.extent));
+    }
+    stage.loops[loop_idx].kind = LoopKind::Unrolled;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::interp;
+    use crate::tir::workload;
+
+    fn moe() -> Program {
+        workload::moe_matmul("m", 4, 6, 8)
+    }
+
+    #[test]
+    fn tile_splits_loop_and_preserves_semantics() {
+        let p = moe();
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 3 }
+            .apply(&p)
+            .unwrap();
+        assert_eq!(q.stages[0].loops.len(), 4);
+        assert_eq!(q.stages[0].loops[1].name, "j_0");
+        assert_eq!(q.stages[0].loops[2].name, "j_1");
+        assert_eq!(q.stages[0].loops[1].extent, 2);
+        assert_eq!(q.stages[0].loops[2].extent, 3);
+        q.validate().unwrap();
+        interp::iteration_space(&q.stages[0]).unwrap();
+        assert!(interp::outputs_close(
+            &interp::run_seeded(&p, 5),
+            &interp::run_seeded(&q, 5),
+            1e-4
+        ));
+    }
+
+    #[test]
+    fn tile_rejects_nondivisor_and_trivial() {
+        let p = moe();
+        assert_eq!(
+            Transform::TileSize { stage: 0, loop_idx: 1, factor: 4 }.apply(&p).unwrap_err(),
+            ApplyError::BadFactor { factor: 4, extent: 6 }
+        );
+        assert_eq!(
+            Transform::TileSize { stage: 0, loop_idx: 1, factor: 1 }.apply(&p).unwrap_err(),
+            ApplyError::TrivialFactor(1)
+        );
+        assert_eq!(
+            Transform::TileSize { stage: 0, loop_idx: 1, factor: 6 }.apply(&p).unwrap_err(),
+            ApplyError::TrivialFactor(6)
+        );
+    }
+
+    #[test]
+    fn reorder_permutes_and_preserves_semantics() {
+        let p = moe();
+        let q = Transform::Reorder { stage: 0, perm: vec![2, 0, 1] }
+            .apply(&p)
+            .unwrap();
+        assert_eq!(q.stages[0].loops[0].name, "k");
+        interp::iteration_space(&q.stages[0]).unwrap();
+        assert!(interp::outputs_close(
+            &interp::run_seeded(&p, 6),
+            &interp::run_seeded(&q, 6),
+            1e-4
+        ));
+    }
+
+    #[test]
+    fn reorder_rejects_bad_perm() {
+        let p = moe();
+        assert!(Transform::Reorder { stage: 0, perm: vec![0, 1] }.apply(&p).is_err());
+        assert!(Transform::Reorder { stage: 0, perm: vec![0, 0, 1] }.apply(&p).is_err());
+    }
+
+    #[test]
+    fn fuse_preserves_semantics() {
+        let p = moe();
+        let q = Transform::Fuse { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        assert_eq!(q.stages[0].loops.len(), 2);
+        assert_eq!(q.stages[0].loops[0].extent, 24);
+        interp::iteration_space(&q.stages[0]).unwrap();
+        assert!(interp::outputs_close(
+            &interp::run_seeded(&p, 7),
+            &interp::run_seeded(&q, 7),
+            1e-4
+        ));
+    }
+
+    #[test]
+    fn parallel_requires_prefix_and_non_reduction() {
+        let p = moe();
+        // k (idx 2) is reduction.
+        assert_eq!(
+            Transform::Parallel { stage: 0, loop_idx: 2 }.apply(&p).unwrap_err(),
+            ApplyError::ParallelReduction
+        );
+        // j (idx 1) without t parallel first: not a prefix.
+        assert_eq!(
+            Transform::Parallel { stage: 0, loop_idx: 1 }.apply(&p).unwrap_err(),
+            ApplyError::ParallelNotPrefix
+        );
+        // t then j: fine.
+        let q = Transform::Parallel { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        let q = Transform::Parallel { stage: 0, loop_idx: 1 }.apply(&q).unwrap();
+        assert_eq!(q.stages[0].loops[1].kind, LoopKind::Parallel);
+    }
+
+    #[test]
+    fn vectorize_innermost_only_non_reduction() {
+        let p = moe();
+        // Innermost is k, a reduction: rejected.
+        assert_eq!(
+            Transform::Vectorize { stage: 0, loop_idx: 2 }.apply(&p).unwrap_err(),
+            ApplyError::VectorizeReduction
+        );
+        // Move j innermost, then vectorize.
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 2, 1] }.apply(&p).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 2 }.apply(&q).unwrap();
+        assert_eq!(q.stages[0].loops[2].kind, LoopKind::Vectorized);
+        // Not innermost: rejected.
+        assert_eq!(
+            Transform::Vectorize { stage: 0, loop_idx: 0 }.apply(&p).unwrap_err(),
+            ApplyError::VectorizeNotInnermost
+        );
+    }
+
+    #[test]
+    fn reorder_keeps_vectorized_innermost() {
+        let p = moe();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 2, 1] }.apply(&p).unwrap();
+        let q = Transform::Vectorize { stage: 0, loop_idx: 2 }.apply(&q).unwrap();
+        // Moving the vectorized loop out is illegal.
+        assert_eq!(
+            Transform::Reorder { stage: 0, perm: vec![2, 0, 1] }.apply(&q).unwrap_err(),
+            ApplyError::VectorizeNotInnermost
+        );
+    }
+
+    #[test]
+    fn unroll_limits() {
+        let p = moe();
+        let q = Transform::Unroll { stage: 0, loop_idx: 0 }.apply(&p).unwrap();
+        assert_eq!(q.stages[0].loops[0].kind, LoopKind::Unrolled);
+        let big = workload::moe_matmul("big", 4, 6, 128);
+        assert_eq!(
+            Transform::Unroll { stage: 0, loop_idx: 2 }.apply(&big).unwrap_err(),
+            ApplyError::UnrollTooWide(128)
+        );
+    }
+
+    #[test]
+    fn cache_write_once() {
+        let p = moe();
+        let q = Transform::CacheWrite { stage: 0 }.apply(&p).unwrap();
+        assert!(q.stages[0].cache_write);
+        assert_eq!(
+            Transform::CacheWrite { stage: 0 }.apply(&q).unwrap_err(),
+            ApplyError::CacheWriteTwice
+        );
+    }
+
+    #[test]
+    fn compute_location_bounds() {
+        let p = moe();
+        assert!(Transform::ComputeLocation { stage: 0, depth: 2 }.apply(&p).is_ok());
+        assert!(Transform::ComputeLocation { stage: 0, depth: 9 }.apply(&p).is_err());
+    }
+
+    #[test]
+    fn tile_then_fuse_chain_preserves_semantics() {
+        let p = moe();
+        let q = Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }.apply(&p).unwrap();
+        let q = Transform::TileSize { stage: 0, loop_idx: 1, factor: 2 }.apply(&q).unwrap();
+        let q = Transform::Reorder { stage: 0, perm: vec![0, 1, 3, 2, 4] }.apply(&q).unwrap();
+        let q = Transform::Fuse { stage: 0, loop_idx: 0 }.apply(&q).unwrap();
+        q.validate().unwrap();
+        interp::iteration_space(&q.stages[0]).unwrap();
+        assert!(interp::outputs_close(
+            &interp::run_seeded(&p, 8),
+            &interp::run_seeded(&q, 8),
+            1e-4
+        ));
+    }
+
+    #[test]
+    fn render_names_loops() {
+        let p = moe();
+        let t = Transform::TileSize { stage: 0, loop_idx: 1, factor: 3 };
+        assert_eq!(t.render(&p), "TileSize(stage=moe, loop=j, factor=3)");
+    }
+}

@@ -1,0 +1,239 @@
+//! Shared search infrastructure: proposal policies, sample accounting,
+//! convergence curves and the strategy interface.
+
+use crate::cost::{CostModel, Platform};
+use crate::schedule::{Schedule, Transform};
+use crate::tir::Program;
+use crate::util::rng::Pcg;
+
+/// Context handed to a proposal policy at expansion time: the selected node,
+/// its ancestor chain (parent first), and their predicted scores — exactly
+/// the information the paper serializes into the LLM prompt (§3.1).
+pub struct ProposalContext<'a> {
+    /// The node being expanded.
+    pub node: &'a Schedule,
+    /// Ancestors, nearest first (parent, grandparent, ...), truncated to the
+    /// configured history depth.
+    pub ancestors: Vec<&'a Schedule>,
+    /// Predicted performance scores (higher = better) aligned with
+    /// [node, ancestors...].
+    pub scores: Vec<f64>,
+    pub platform: &'a Platform,
+    /// Monotone counter of expansions so far (lets stateful policies vary).
+    pub step: usize,
+}
+
+/// A proposal policy suggests the transformation sequence for one MCTS
+/// expansion. Implemented by the random policy (vanilla MCTS) and the
+/// LLM reasoning engine (`crate::reasoning`).
+pub trait ProposalPolicy {
+    /// Propose a transformation sequence for the node in `ctx`. May return
+    /// an empty vector; the search then falls back to a random transform.
+    fn propose(&mut self, ctx: &ProposalContext) -> Vec<Transform>;
+    fn name(&self) -> String;
+}
+
+/// Vanilla-MCTS expansion policy: one random legal transform.
+pub struct RandomPolicy {
+    pub rng: Pcg,
+}
+
+impl RandomPolicy {
+    pub fn new(seed: u64) -> Self {
+        RandomPolicy { rng: Pcg::new(seed) }
+    }
+}
+
+impl ProposalPolicy for RandomPolicy {
+    fn propose(&mut self, ctx: &ProposalContext) -> Vec<Transform> {
+        // A short random sequence (1-4 steps): expansion edges are
+        // transformation sequences, mirroring the LLM-guided variant.
+        let len = 1 + self.rng.gen_range(4);
+        crate::schedule::sampler::random_sequence(&ctx.node.current, len, &mut self.rng)
+    }
+    fn name(&self) -> String {
+        "random".to_string()
+    }
+}
+
+/// One hardware measurement in the search log.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    /// 1-based index of this sample.
+    pub sample: usize,
+    /// Measured latency (seconds) on the hardware model.
+    pub latency: f64,
+    /// Best speedup over the unoptimized baseline after this sample.
+    pub best_speedup: f64,
+    /// Trace length of the measured candidate.
+    pub trace_len: usize,
+}
+
+/// Result of one search run.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    pub strategy: String,
+    pub workload: String,
+    pub platform: String,
+    pub baseline_latency: f64,
+    pub best_latency: f64,
+    pub best_trace: Vec<Transform>,
+    /// Full measurement log (the convergence curve).
+    pub curve: Vec<Measurement>,
+    pub samples_used: usize,
+}
+
+impl SearchResult {
+    pub fn best_speedup(&self) -> f64 {
+        self.baseline_latency / self.best_latency
+    }
+
+    /// Best speedup achieved within the first `samples` measurements
+    /// (the quantity plotted in Figure 3 / tabulated in Table 3).
+    pub fn speedup_at(&self, samples: usize) -> f64 {
+        self.curve
+            .iter()
+            .take_while(|m| m.sample <= samples)
+            .map(|m| m.best_speedup)
+            .fold(1.0, f64::max)
+    }
+
+    /// Fewest samples needed to reach `target` speedup, if ever reached.
+    pub fn samples_to_reach(&self, target: f64) -> Option<usize> {
+        self.curve
+            .iter()
+            .find(|m| m.best_speedup >= target)
+            .map(|m| m.sample)
+    }
+}
+
+/// Tracks the hardware-measurement budget and the convergence curve.
+/// Measuring a candidate consumes one sample — the unit of the paper's
+/// x-axes and of Table 1/2's "# Samples".
+pub struct Evaluator<'a> {
+    pub hardware: &'a dyn CostModel,
+    pub baseline_latency: f64,
+    pub budget: usize,
+    pub used: usize,
+    pub best_latency: f64,
+    pub best_trace: Vec<Transform>,
+    pub curve: Vec<Measurement>,
+    seed: u64,
+}
+
+impl<'a> Evaluator<'a> {
+    pub fn new(hardware: &'a dyn CostModel, base: &Program, budget: usize, seed: u64) -> Self {
+        let baseline_latency = hardware.latency(base, seed ^ 0xBA5E);
+        Evaluator {
+            hardware,
+            baseline_latency,
+            budget,
+            used: 0,
+            best_latency: baseline_latency,
+            best_trace: Vec::new(),
+            curve: Vec::new(),
+            seed,
+        }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.used >= self.budget
+    }
+
+    /// Measure a candidate on the hardware model, consuming one sample.
+    /// Returns the measured latency, or None if the budget is exhausted.
+    pub fn measure(&mut self, candidate: &Schedule) -> Option<f64> {
+        if self.exhausted() {
+            return None;
+        }
+        self.used += 1;
+        let lat = self
+            .hardware
+            .latency(&candidate.current, self.seed.wrapping_add(self.used as u64));
+        if lat < self.best_latency {
+            self.best_latency = lat;
+            self.best_trace = candidate.trace.clone();
+        }
+        self.curve.push(Measurement {
+            sample: self.used,
+            latency: lat,
+            best_speedup: self.baseline_latency / self.best_latency,
+            trace_len: candidate.trace.len(),
+        });
+        Some(lat)
+    }
+
+    pub fn into_result(self, strategy: &str, workload: &str, platform: &str) -> SearchResult {
+        SearchResult {
+            strategy: strategy.to_string(),
+            workload: workload.to_string(),
+            platform: platform.to_string(),
+            baseline_latency: self.baseline_latency,
+            best_latency: self.best_latency,
+            best_trace: self.best_trace,
+            curve: self.curve,
+            samples_used: self.used,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{HardwareModel, Platform};
+    use crate::tir::workload::WorkloadId;
+
+    #[test]
+    fn evaluator_budget_and_best_tracking() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        let base = WorkloadId::DeepSeekMoe.build_test();
+        let mut ev = Evaluator::new(&hw, &base, 3, 7);
+        let sched = Schedule::new(base.clone());
+        assert!(ev.measure(&sched).is_some());
+        assert!(ev.measure(&sched).is_some());
+        assert!(ev.measure(&sched).is_some());
+        assert!(ev.measure(&sched).is_none(), "budget exhausted");
+        assert_eq!(ev.used, 3);
+        let r = ev.into_result("test", "w", "p");
+        assert_eq!(r.curve.len(), 3);
+        assert!(r.best_speedup() > 0.5);
+    }
+
+    #[test]
+    fn speedup_at_monotone() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        let base = WorkloadId::Llama4Mlp.build_test();
+        let mut ev = Evaluator::new(&hw, &base, 10, 1);
+        let mut rng = Pcg::new(5);
+        let sched = Schedule::new(base.clone());
+        for _ in 0..10 {
+            let seq = crate::schedule::sampler::random_sequence(&sched.current, 3, &mut rng);
+            let (s, _) = sched.apply_all(&seq);
+            ev.measure(&s);
+        }
+        let r = ev.into_result("t", "w", "p");
+        assert!(r.speedup_at(10) >= r.speedup_at(3));
+        assert!(r.speedup_at(3) >= r.speedup_at(1));
+    }
+
+    #[test]
+    fn random_policy_proposes_legal() {
+        let base = WorkloadId::FluxConv.build_test();
+        let sched = Schedule::new(base);
+        let plat = Platform::core_i9();
+        let mut pol = RandomPolicy::new(3);
+        let ctx = ProposalContext {
+            node: &sched,
+            ancestors: vec![],
+            scores: vec![1.0],
+            platform: &plat,
+            step: 0,
+        };
+        let ts = pol.propose(&ctx);
+        assert!((1..=4).contains(&ts.len()));
+        // The whole sequence must apply in order.
+        let (out, applied) = sched.apply_all(&ts);
+        assert_eq!(applied, ts.len());
+        out.current.validate().unwrap();
+    }
+}

@@ -1,0 +1,235 @@
+//! Evolutionary Search — the TVM MetaSchedule baseline.
+//!
+//! Mirrors MetaSchedule's evolutionary tuner: a population of transformation
+//! traces evolves by tournament selection, trace mutation (append / drop /
+//! re-parameterize) and prefix crossover; each generation is ranked by the
+//! surrogate cost model and the top candidates are measured on hardware
+//! (consuming samples). Uninformed but robust — the sample-inefficient
+//! black-box baseline of the paper's comparison.
+
+use crate::cost::CostModel;
+use crate::schedule::{sampler, Schedule, Transform};
+use crate::tir::Program;
+use crate::util::rng::Pcg;
+
+use super::common::{Evaluator, SearchResult};
+
+#[derive(Debug, Clone)]
+pub struct EvoConfig {
+    pub population: usize,
+    /// Hardware measurements per generation (MetaSchedule's
+    /// `num_trials_per_iter`).
+    pub measure_per_gen: usize,
+    /// Initial random-trace length.
+    pub init_len: usize,
+    pub max_trace_len: usize,
+    /// Probability of mutation (vs crossover) when producing offspring.
+    pub mutation_prob: f64,
+    /// Tournament size for parent selection.
+    pub tournament: usize,
+}
+
+impl Default for EvoConfig {
+    fn default() -> Self {
+        EvoConfig {
+            population: 64,
+            measure_per_gen: 16,
+            init_len: 4,
+            max_trace_len: 24,
+            mutation_prob: 0.7,
+            tournament: 4,
+        }
+    }
+}
+
+struct Member {
+    schedule: Schedule,
+    /// Surrogate fitness: baseline / f̂ (higher better).
+    fitness: f64,
+}
+
+/// Run evolutionary search until the hardware budget is exhausted.
+pub fn evolutionary_search(
+    base: &Program,
+    surrogate: &dyn CostModel,
+    hardware: &dyn CostModel,
+    cfg: &EvoConfig,
+    platform: &crate::cost::Platform,
+    budget: usize,
+    seed: u64,
+) -> SearchResult {
+    let mut rng = Pcg::new(seed ^ 0xE5_0E_5E);
+    let mut ev = Evaluator::new(hardware, base, budget, seed);
+    let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
+    let base_sched = Schedule::new(base.clone());
+
+    // ---- initial population: random traces --------------------------------
+    let mut population: Vec<Member> = (0..cfg.population)
+        .map(|i| {
+            let len = 1 + rng.gen_range(cfg.init_len);
+            let seq = sampler::random_sequence(&base_sched.current, len, &mut rng);
+            let (schedule, _) = base_sched.apply_all(&seq);
+            let fitness = surrogate_baseline
+                / surrogate.latency(&schedule.current, seed ^ (i as u64 + 1));
+            Member { schedule, fitness }
+        })
+        .collect();
+
+    let mut gen = 0u64;
+    while !ev.exhausted() {
+        gen += 1;
+        // ---- measure the surrogate-best slice on hardware ------------------
+        let mut order: Vec<usize> = (0..population.len()).collect();
+        order.sort_by(|&a, &b| {
+            population[b]
+                .fitness
+                .partial_cmp(&population[a].fitness)
+                .unwrap()
+        });
+        for &i in order.iter().take(cfg.measure_per_gen) {
+            if ev.measure(&population[i].schedule).is_none() {
+                break;
+            }
+        }
+        if ev.exhausted() {
+            break;
+        }
+
+        // ---- next generation -----------------------------------------------
+        let elite_n = (cfg.population / 8).max(1);
+        let mut next: Vec<Member> = Vec::with_capacity(cfg.population);
+        for &i in order.iter().take(elite_n) {
+            next.push(Member {
+                schedule: population[i].schedule.clone(),
+                fitness: population[i].fitness,
+            });
+        }
+        while next.len() < cfg.population {
+            let parent_a = tournament_pick(&population, cfg.tournament, &mut rng);
+            let child_trace = if rng.gen_bool(cfg.mutation_prob) {
+                mutate(&population[parent_a].schedule, cfg, &mut rng)
+            } else {
+                let parent_b = tournament_pick(&population, cfg.tournament, &mut rng);
+                crossover(
+                    &population[parent_a].schedule,
+                    &population[parent_b].schedule,
+                    &mut rng,
+                )
+            };
+            let (schedule, _) = base_sched.apply_all(&child_trace);
+            let fitness = surrogate_baseline
+                / surrogate.latency(&schedule.current, seed ^ gen << 16 ^ next.len() as u64);
+            next.push(Member { schedule, fitness });
+        }
+        population = next;
+    }
+
+    ev.into_result("evolutionary", &base.name, platform.name)
+}
+
+fn tournament_pick(population: &[Member], k: usize, rng: &mut Pcg) -> usize {
+    let mut best = rng.gen_range(population.len());
+    for _ in 1..k {
+        let c = rng.gen_range(population.len());
+        if population[c].fitness > population[best].fitness {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Trace mutation: drop the tail, append random transforms, or both.
+fn mutate(parent: &Schedule, cfg: &EvoConfig, rng: &mut Pcg) -> Vec<Transform> {
+    let mut trace = parent.trace.clone();
+    match rng.gen_range(3) {
+        0 if !trace.is_empty() => {
+            // Drop a random-length tail.
+            let keep = rng.gen_range(trace.len());
+            trace.truncate(keep);
+        }
+        1 if !trace.is_empty() => {
+            // Drop tail then regrow.
+            let keep = rng.gen_range(trace.len());
+            trace.truncate(keep);
+        }
+        _ => {}
+    }
+    // Append 1-2 random transforms legal in context (applied later via
+    // apply_all, which tolerates an illegal tail).
+    let base = Schedule::new_shared(parent.base.clone());
+    let (ctx_sched, _) = base.apply_all(&trace);
+    let grow = 1 + rng.gen_range(2);
+    let seq = sampler::random_sequence(&ctx_sched.current, grow, rng);
+    trace.extend(seq);
+    trace.truncate(cfg.max_trace_len);
+    trace
+}
+
+/// Prefix crossover: a prefix of one parent + the suffix of the other.
+/// Illegal suffix elements are dropped by `apply_all` later.
+fn crossover(a: &Schedule, b: &Schedule, rng: &mut Pcg) -> Vec<Transform> {
+    if a.trace.is_empty() {
+        return b.trace.clone();
+    }
+    let cut_a = rng.gen_range(a.trace.len() + 1);
+    let mut child: Vec<Transform> = a.trace[..cut_a].to_vec();
+    if !b.trace.is_empty() {
+        let cut_b = rng.gen_range(b.trace.len());
+        child.extend(b.trace[cut_b..].iter().cloned());
+    }
+    child
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{HardwareModel, Platform, SurrogateModel};
+    use crate::tir::workload::WorkloadId;
+
+    fn run(budget: usize, seed: u64) -> SearchResult {
+        let plat = Platform::core_i9();
+        let base = WorkloadId::DeepSeekMoe.build();
+        let surrogate = SurrogateModel { platform: plat.clone() };
+        let hardware = HardwareModel { platform: plat.clone() };
+        evolutionary_search(
+            &base,
+            &surrogate,
+            &hardware,
+            &EvoConfig::default(),
+            &plat,
+            budget,
+            seed,
+        )
+    }
+
+    #[test]
+    fn improves_over_baseline() {
+        let r = run(120, 1);
+        assert!(r.best_speedup() > 1.5, "ES speedup {}", r.best_speedup());
+        assert!(r.samples_used <= 120);
+    }
+
+    #[test]
+    fn respects_budget_exactly() {
+        let r = run(37, 2);
+        assert_eq!(r.samples_used, 37);
+        assert_eq!(r.curve.len(), 37);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run(40, 5);
+        let b = run(40, 5);
+        assert_eq!(a.best_latency, b.best_latency);
+    }
+
+    #[test]
+    fn best_trace_replays() {
+        let r = run(60, 3);
+        let base = WorkloadId::DeepSeekMoe.build();
+        let sched = Schedule::new(base);
+        let (best, applied) = sched.apply_all(&r.best_trace);
+        assert_eq!(applied, r.best_trace.len());
+        best.current.validate().unwrap();
+    }
+}

@@ -1,0 +1,332 @@
+//! Monte Carlo tree search over transformation sequences (§3.2).
+//!
+//! - **Selection**: UCT descent from the root (`c = sqrt(2)` by default).
+//! - **Expansion**: the proposal policy (random for vanilla MCTS, the LLM
+//!   reasoning engine for the REASONING COMPILER) suggests a transformation
+//!   sequence, which is applied to create one new child node. Duplicate
+//!   program states (by structural fingerprint) are not re-added, keeping
+//!   the tree acyclic.
+//! - **Rollout**: a short random continuation is scored with the surrogate
+//!   f̂ — never the hardware model, matching the paper's cost-model-driven
+//!   simulation.
+//! - **Backpropagation**: normalized rewards and visit counts flow to the
+//!   root.
+//!
+//! Each expanded child is additionally measured once on the hardware model,
+//! consuming one sample of the budget (this is the paper's "evaluated
+//! transformation proposals" axis).
+
+use std::collections::HashSet;
+
+use crate::cost::CostModel;
+use crate::schedule::{sampler, Schedule};
+use crate::tir::Program;
+use crate::util::rng::Pcg;
+
+use super::common::{Evaluator, ProposalContext, ProposalPolicy, SearchResult};
+
+/// MCTS hyperparameters (paper §4.1: c = sqrt(2), B = 2).
+#[derive(Debug, Clone)]
+pub struct MctsConfig {
+    /// UCT exploration constant.
+    pub exploration_c: f64,
+    /// Branching factor: max children per node.
+    pub branching: usize,
+    /// Rollout depth (random continuation length).
+    pub rollout_len: usize,
+    /// History depth handed to the proposal policy (2 = parent+grandparent,
+    /// 3 adds the great-grandparent; Figure 4b / Table 5 ablate this).
+    pub history_depth: usize,
+    /// Maximum transformation-sequence length (the horizon T of §2).
+    pub max_trace_len: usize,
+}
+
+impl Default for MctsConfig {
+    fn default() -> Self {
+        MctsConfig {
+            exploration_c: std::f64::consts::SQRT_2,
+            branching: 2,
+            rollout_len: 4,
+            history_depth: 2,
+            max_trace_len: 24,
+        }
+    }
+}
+
+struct Node {
+    schedule: Schedule,
+    parent: Option<usize>,
+    children: Vec<usize>,
+    /// Cumulative normalized reward.
+    w: f64,
+    /// Visit count.
+    n: f64,
+    /// Surrogate score (baseline_latency / f̂), cached for prompts.
+    score: f64,
+}
+
+/// Run MCTS with the given proposal policy. `surrogate` scores rollouts;
+/// `hardware` (inside `Evaluator`) measures expanded candidates and meters
+/// the sample budget.
+#[allow(clippy::too_many_arguments)]
+pub fn mcts_search(
+    base: &Program,
+    policy: &mut dyn ProposalPolicy,
+    surrogate: &dyn CostModel,
+    hardware: &dyn CostModel,
+    cfg: &MctsConfig,
+    platform: &crate::cost::Platform,
+    budget: usize,
+    seed: u64,
+) -> SearchResult {
+    let mut rng = Pcg::new(seed);
+    let mut ev = Evaluator::new(hardware, base, budget, seed);
+    let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
+
+    let root_sched = Schedule::new(base.clone());
+    let mut nodes = vec![Node {
+        score: 1.0,
+        schedule: root_sched,
+        parent: None,
+        children: Vec::new(),
+        w: 0.0,
+        n: 1e-9,
+    }];
+    let mut seen: HashSet<u64> = HashSet::new();
+    seen.insert(nodes[0].schedule.fingerprint());
+
+    let mut best_rollout_reward: f64 = 1.0;
+    let mut step = 0usize;
+    // Guard against saturation: on tiny programs every proposal can
+    // duplicate an existing node; stop after too many sterile iterations.
+    let mut sterile = 0usize;
+
+    while !ev.exhausted() {
+        if sterile > 200 {
+            break;
+        }
+        step += 1;
+        // ---- selection: UCT descent to an expandable node ------------------
+        let mut cur = 0usize;
+        loop {
+            let node = &nodes[cur];
+            let expandable = node.children.len() < cfg.branching
+                && node.schedule.trace.len() < cfg.max_trace_len;
+            if expandable || node.children.is_empty() {
+                break;
+            }
+            let ln_n = node.n.max(1.0).ln();
+            let mut best_child = node.children[0];
+            let mut best_uct = f64::NEG_INFINITY;
+            for &c in &node.children {
+                let ch = &nodes[c];
+                let uct = ch.w / ch.n.max(1e-9)
+                    + cfg.exploration_c * (ln_n / ch.n.max(1e-9)).sqrt();
+                if uct > best_uct {
+                    best_uct = uct;
+                    best_child = c;
+                }
+            }
+            cur = best_child;
+        }
+
+        // ---- expansion: ask the policy for a transformation sequence -------
+        let (ancestors, scores) = ancestor_chain(&nodes, cur, cfg.history_depth);
+        let proposal = {
+            let ctx = ProposalContext {
+                node: &nodes[cur].schedule,
+                ancestors,
+                scores,
+                platform,
+                step,
+            };
+            policy.propose(&ctx)
+        };
+        // Apply the proposal; if nothing applies, fall back to one random
+        // legal transform (Appendix G's fallback path).
+        let (mut child_sched, applied) = nodes[cur].schedule.apply_all(&proposal);
+        if applied == 0 {
+            match sampler::random_transform(&nodes[cur].schedule.current, &mut rng) {
+                Some(t) => match nodes[cur].schedule.apply(t) {
+                    Ok(s) => child_sched = s,
+                    Err(_) => continue,
+                },
+                None => break,
+            }
+        }
+
+        // Dedup: if this program state already exists in the tree, do not
+        // add it again (tree stays acyclic); still spend a visit.
+        let fp = child_sched.fingerprint();
+        if !seen.insert(fp) {
+            nodes[cur].n += 1.0;
+            sterile += 1;
+            continue;
+        }
+        sterile = 0;
+
+        // Measure the new candidate on hardware (one sample).
+        if ev.measure(&child_sched).is_none() {
+            break;
+        }
+
+        // ---- rollout: random continuation scored by the surrogate ----------
+        let rollout_seq =
+            sampler::random_sequence(&child_sched.current, cfg.rollout_len, &mut rng);
+        let (rollout_sched, _) = child_sched.apply_all(&rollout_seq);
+        let rollout_latency = surrogate.latency(&rollout_sched.current, seed ^ step as u64);
+        // Direct surrogate score of the child itself (used in prompts).
+        let child_latency_hat = surrogate.latency(&child_sched.current, seed ^ (step as u64) << 1);
+        let child_score = surrogate_baseline / child_latency_hat;
+
+        // Reward: speedup of the rollout terminal vs baseline, normalized by
+        // the best rollout so far to keep UCT's exploit term in [0, 1].
+        let raw_reward = surrogate_baseline / rollout_latency;
+        best_rollout_reward = best_rollout_reward.max(raw_reward);
+        let reward = raw_reward / best_rollout_reward;
+
+        // ---- insert + backpropagate ----------------------------------------
+        let child_id = nodes.len();
+        nodes.push(Node {
+            schedule: child_sched,
+            parent: Some(cur),
+            children: Vec::new(),
+            w: reward,
+            n: 1.0,
+            score: child_score,
+        });
+        nodes[cur].children.push(child_id);
+        let mut up = Some(cur);
+        while let Some(i) = up {
+            nodes[i].w += reward;
+            nodes[i].n += 1.0;
+            up = nodes[i].parent;
+        }
+    }
+
+    ev.into_result(&format!("mcts[{}]", policy.name()), &base.name, platform.name)
+}
+
+/// Collect up to `depth` ancestors (nearest first) and surrogate scores
+/// aligned with [node, ancestors...].
+fn ancestor_chain(
+    nodes: &[Node],
+    cur: usize,
+    depth: usize,
+) -> (Vec<&Schedule>, Vec<f64>) {
+    let mut ancestors = Vec::new();
+    let mut scores = vec![nodes[cur].score];
+    let mut up = nodes[cur].parent;
+    while let Some(i) = up {
+        if ancestors.len() >= depth {
+            break;
+        }
+        ancestors.push(&nodes[i].schedule);
+        scores.push(nodes[i].score);
+        up = nodes[i].parent;
+    }
+    (ancestors, scores)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{HardwareModel, Platform, SurrogateModel};
+    use crate::search::common::RandomPolicy;
+    use crate::tir::workload::WorkloadId;
+
+    fn run(budget: usize, seed: u64) -> SearchResult {
+        let plat = Platform::core_i9();
+        let base = WorkloadId::DeepSeekMoe.build();
+        let surrogate = SurrogateModel { platform: plat.clone() };
+        let hardware = HardwareModel { platform: plat.clone() };
+        let mut policy = RandomPolicy::new(seed);
+        mcts_search(
+            &base,
+            &mut policy,
+            &surrogate,
+            &hardware,
+            &MctsConfig::default(),
+            &plat,
+            budget,
+            seed,
+        )
+    }
+
+    #[test]
+    fn finds_improvement_with_modest_budget() {
+        let r = run(60, 3);
+        assert!(r.samples_used <= 60);
+        assert!(
+            r.best_speedup() > 1.5,
+            "MCTS should beat baseline: {}",
+            r.best_speedup()
+        );
+        assert!(!r.best_trace.is_empty());
+    }
+
+    #[test]
+    fn curve_monotone_nondecreasing() {
+        let r = run(40, 4);
+        let mut prev = 0.0;
+        for m in &r.curve {
+            assert!(m.best_speedup >= prev);
+            prev = m.best_speedup;
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = run(25, 9);
+        let b = run(25, 9);
+        assert_eq!(a.best_latency, b.best_latency);
+        assert_eq!(a.curve.len(), b.curve.len());
+        let c = run(25, 10);
+        assert_ne!(a.best_latency, c.best_latency);
+    }
+
+    #[test]
+    fn best_trace_replays_to_best_latency() {
+        let plat = Platform::core_i9();
+        let base = WorkloadId::Llama4Mlp.build();
+        let r = run_on(&base, &plat, 40, 5);
+        let sched = Schedule::new(base.clone());
+        let (best, applied) = sched.apply_all(&r.best_trace);
+        assert_eq!(applied, r.best_trace.len(), "best trace must replay fully");
+        // Replayed program must validate and beat baseline (noise-free).
+        best.current.validate().unwrap();
+        let hw = HardwareModel { platform: plat };
+        assert!(hw.latency(&best.current, 0) < r.baseline_latency);
+    }
+
+    fn run_on(base: &Program, plat: &Platform, budget: usize, seed: u64) -> SearchResult {
+        let surrogate = SurrogateModel { platform: plat.clone() };
+        let hardware = HardwareModel { platform: plat.clone() };
+        let mut policy = RandomPolicy::new(seed);
+        mcts_search(
+            base,
+            &mut policy,
+            &surrogate,
+            &hardware,
+            &MctsConfig::default(),
+            plat,
+            budget,
+            seed,
+        )
+    }
+
+    #[test]
+    fn branching_limits_children() {
+        // With B=1 the tree is a chain: every node except the frontier has
+        // exactly one child. Indirectly verified via search still working.
+        let plat = Platform::xeon_e3();
+        let base = WorkloadId::FluxConv.build();
+        let surrogate = SurrogateModel { platform: plat.clone() };
+        let hardware = HardwareModel { platform: plat.clone() };
+        let mut policy = RandomPolicy::new(2);
+        let cfg = MctsConfig { branching: 1, ..Default::default() };
+        let r = mcts_search(&base, &mut policy, &surrogate, &hardware, &cfg, &plat, 20, 2);
+        assert!(r.samples_used <= 20);
+        assert!(r.best_speedup() >= 1.0);
+    }
+}

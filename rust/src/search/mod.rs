@@ -1,0 +1,13 @@
+//! Search engines over the transformation space: MCTS with UCT (vanilla and
+//! LLM-guided via a pluggable [`ProposalPolicy`]) and the TVM-style
+//! Evolutionary Search baseline. All strategies meter hardware measurements
+//! through [`common::Evaluator`], producing the speedup-vs-samples curves
+//! the paper's figures and tables are built from.
+
+pub mod common;
+pub mod evolutionary;
+pub mod mcts;
+
+pub use common::{Measurement, ProposalContext, ProposalPolicy, RandomPolicy, SearchResult};
+pub use evolutionary::{evolutionary_search, EvoConfig};
+pub use mcts::{mcts_search, MctsConfig};

@@ -1,0 +1,286 @@
+//! Index expressions.
+//!
+//! Two expression families cover everything the schedule engine needs:
+//!
+//! - [`Expr`] — integer expressions over *loop variables*, used to
+//!   reconstruct original-axis values from the (split/fused) loop nest.
+//!   `Split` substitutes `v := outer*f + inner`; `Fuse` substitutes
+//!   `v1 := f / e2, v2 := f % e2`, so the tree needs Add/Mul/Div/Mod.
+//! - [`LinIdx`] — buffer index expressions, *linear* in the original axes
+//!   (`sum(axis * stride) + offset`). Matmul, batched matmul and
+//!   convolution indexing are all axis-linear, and keeping them linear makes
+//!   stride/locality analysis in the cost model exact.
+
+/// Loop-variable id, unique within a [`super::Stage`].
+pub type VarId = usize;
+
+/// Integer expression over loop variables.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Expr {
+    /// A loop variable.
+    Var(VarId),
+    Const(i64),
+    Add(Box<Expr>, Box<Expr>),
+    /// Multiply by a constant (index expressions never multiply two vars).
+    Mul(Box<Expr>, i64),
+    /// Floor division by a positive constant.
+    Div(Box<Expr>, i64),
+    /// Modulo by a positive constant.
+    Mod(Box<Expr>, i64),
+}
+
+impl Expr {
+    pub fn var(v: VarId) -> Expr {
+        Expr::Var(v)
+    }
+
+    pub fn add(a: Expr, b: Expr) -> Expr {
+        match (&a, &b) {
+            (Expr::Const(0), _) => b,
+            (_, Expr::Const(0)) => a,
+            (Expr::Const(x), Expr::Const(y)) => Expr::Const(x + y),
+            _ => Expr::Add(Box::new(a), Box::new(b)),
+        }
+    }
+
+    pub fn mul(a: Expr, k: i64) -> Expr {
+        match (&a, k) {
+            (_, 0) => Expr::Const(0),
+            (_, 1) => a,
+            (Expr::Const(x), _) => Expr::Const(x * k),
+            _ => Expr::Mul(Box::new(a), k),
+        }
+    }
+
+    pub fn div(a: Expr, k: i64) -> Expr {
+        debug_assert!(k > 0);
+        if k == 1 {
+            return a;
+        }
+        if let Expr::Const(x) = a {
+            return Expr::Const(x.div_euclid(k));
+        }
+        Expr::Div(Box::new(a), k)
+    }
+
+    pub fn modulo(a: Expr, k: i64) -> Expr {
+        debug_assert!(k > 0);
+        if k == 1 {
+            return Expr::Const(0);
+        }
+        if let Expr::Const(x) = a {
+            return Expr::Const(x.rem_euclid(k));
+        }
+        Expr::Mod(Box::new(a), k)
+    }
+
+    /// Evaluate under an environment mapping loop var id -> value.
+    pub fn eval(&self, env: &[i64]) -> i64 {
+        match self {
+            Expr::Var(v) => env[*v],
+            Expr::Const(c) => *c,
+            Expr::Add(a, b) => a.eval(env) + b.eval(env),
+            Expr::Mul(a, k) => a.eval(env) * k,
+            Expr::Div(a, k) => a.eval(env).div_euclid(*k),
+            Expr::Mod(a, k) => a.eval(env).rem_euclid(*k),
+        }
+    }
+
+    /// Substitute `var := replacement` throughout.
+    pub fn subst(&self, var: VarId, replacement: &Expr) -> Expr {
+        match self {
+            Expr::Var(v) if *v == var => replacement.clone(),
+            Expr::Var(_) | Expr::Const(_) => self.clone(),
+            Expr::Add(a, b) => Expr::add(a.subst(var, replacement), b.subst(var, replacement)),
+            Expr::Mul(a, k) => Expr::mul(a.subst(var, replacement), *k),
+            Expr::Div(a, k) => Expr::div(a.subst(var, replacement), *k),
+            Expr::Mod(a, k) => Expr::modulo(a.subst(var, replacement), *k),
+        }
+    }
+
+    /// All loop variables referenced.
+    pub fn vars(&self, out: &mut Vec<VarId>) {
+        match self {
+            Expr::Var(v) => {
+                if !out.contains(v) {
+                    out.push(*v);
+                }
+            }
+            Expr::Const(_) => {}
+            Expr::Add(a, b) => {
+                a.vars(out);
+                b.vars(out);
+            }
+            Expr::Mul(a, _) | Expr::Div(a, _) | Expr::Mod(a, _) => a.vars(out),
+        }
+    }
+
+    /// Render with loop-var names.
+    pub fn render(&self, names: &dyn Fn(VarId) -> String) -> String {
+        match self {
+            Expr::Var(v) => names(*v),
+            Expr::Const(c) => c.to_string(),
+            Expr::Add(a, b) => format!("{} + {}", a.render(names), b.render(names)),
+            Expr::Mul(a, k) => format!("{} * {}", paren(a, names), k),
+            Expr::Div(a, k) => format!("{} // {}", paren(a, names), k),
+            Expr::Mod(a, k) => format!("{} % {}", paren(a, names), k),
+        }
+    }
+}
+
+fn paren(e: &Expr, names: &dyn Fn(VarId) -> String) -> String {
+    match e {
+        Expr::Var(_) | Expr::Const(_) => e.render(names),
+        _ => format!("({})", e.render(names)),
+    }
+}
+
+/// Axis id, unique within a stage (indexes `Stage::axes`).
+pub type AxisId = usize;
+
+/// A buffer index expression, linear in the original axes:
+/// `offset + sum_i axes[terms[i].0] * terms[i].1`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LinIdx {
+    pub terms: Vec<(AxisId, i64)>,
+    pub offset: i64,
+}
+
+impl LinIdx {
+    /// Index that is exactly one axis.
+    pub fn axis(a: AxisId) -> LinIdx {
+        LinIdx { terms: vec![(a, 1)], offset: 0 }
+    }
+
+    /// `a + b` (e.g. conv input index `h + kh`).
+    pub fn axis_sum(a: AxisId, b: AxisId) -> LinIdx {
+        LinIdx { terms: vec![(a, 1), (b, 1)], offset: 0 }
+    }
+
+    pub fn scaled(terms: Vec<(AxisId, i64)>) -> LinIdx {
+        LinIdx { terms, offset: 0 }
+    }
+
+    /// Evaluate under axis values.
+    #[inline]
+    pub fn eval(&self, axes: &[i64]) -> i64 {
+        let mut v = self.offset;
+        for &(a, k) in &self.terms {
+            v += axes[a] * k;
+        }
+        v
+    }
+
+    /// Coefficient of `axis` (0 if absent).
+    pub fn coeff(&self, axis: AxisId) -> i64 {
+        self.terms
+            .iter()
+            .find(|(a, _)| *a == axis)
+            .map(|(_, k)| *k)
+            .unwrap_or(0)
+    }
+
+    pub fn render(&self, axis_name: &dyn Fn(AxisId) -> String) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        for &(a, k) in &self.terms {
+            if k == 1 {
+                parts.push(axis_name(a));
+            } else {
+                parts.push(format!("{} * {}", axis_name(a), k));
+            }
+        }
+        if self.offset != 0 || parts.is_empty() {
+            parts.push(self.offset.to_string());
+        }
+        parts.join(" + ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_basic() {
+        // v0*4 + v1
+        let e = Expr::add(Expr::mul(Expr::var(0), 4), Expr::var(1));
+        assert_eq!(e.eval(&[3, 2]), 14);
+    }
+
+    #[test]
+    fn split_substitution_preserves_value() {
+        // original axis j = v0, extent 12. Split v0 into (v1 extent 3, v2 extent 4):
+        // v0 := v1*4 + v2. Every (v1, v2) in 3x4 must reproduce each j in 0..12 once.
+        let axis = Expr::var(0);
+        let substituted = axis.subst(0, &Expr::add(Expr::mul(Expr::var(1), 4), Expr::var(2)));
+        let mut seen = vec![false; 12];
+        for v1 in 0..3 {
+            for v2 in 0..4 {
+                let env = vec![0, v1, v2];
+                let j = substituted.eval(&env);
+                assert!(!seen[j as usize], "duplicate j={j}");
+                seen[j as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn fuse_substitution_preserves_values() {
+        // axes (a=v0 extent 3, b=v1 extent 5) fused into f=v2 extent 15:
+        // v0 := f/5, v1 := f%5.
+        let a = Expr::var(0).subst(0, &Expr::div(Expr::var(2), 5));
+        let b = Expr::var(1).subst(1, &Expr::modulo(Expr::var(2), 5));
+        let mut seen = std::collections::HashSet::new();
+        for f in 0..15 {
+            let env = vec![0, 0, f];
+            seen.insert((a.eval(&env), b.eval(&env)));
+        }
+        assert_eq!(seen.len(), 15);
+        for (x, y) in seen {
+            assert!((0..3).contains(&x) && (0..5).contains(&y));
+        }
+    }
+
+    #[test]
+    fn simplification_identities() {
+        assert_eq!(Expr::mul(Expr::var(0), 1), Expr::var(0));
+        assert_eq!(Expr::mul(Expr::var(0), 0), Expr::Const(0));
+        assert_eq!(Expr::add(Expr::var(0), Expr::Const(0)), Expr::var(0));
+        assert_eq!(Expr::div(Expr::var(0), 1), Expr::var(0));
+        assert_eq!(Expr::modulo(Expr::var(0), 1), Expr::Const(0));
+        assert_eq!(Expr::add(Expr::Const(2), Expr::Const(3)), Expr::Const(5));
+    }
+
+    #[test]
+    fn vars_collects_unique() {
+        let e = Expr::add(
+            Expr::mul(Expr::var(0), 4),
+            Expr::add(Expr::var(1), Expr::var(0)),
+        );
+        let mut vs = Vec::new();
+        e.vars(&mut vs);
+        vs.sort();
+        assert_eq!(vs, vec![0, 1]);
+    }
+
+    #[test]
+    fn linidx_eval_and_coeff() {
+        // in[h + kh] with h=axis0 (coeff 1), kh=axis2 (coeff 1), plus stride row W=64
+        let idx = LinIdx::scaled(vec![(0, 64), (2, 1)]);
+        assert_eq!(idx.eval(&[3, 0, 5]), 197);
+        assert_eq!(idx.coeff(0), 64);
+        assert_eq!(idx.coeff(1), 0);
+        assert_eq!(idx.coeff(2), 1);
+    }
+
+    #[test]
+    fn render_readable() {
+        let e = Expr::add(Expr::mul(Expr::var(0), 64), Expr::var(1));
+        let names = |v: VarId| format!("j_{v}");
+        assert_eq!(e.render(&names), "j_0 * 64 + j_1");
+        let idx = LinIdx::axis_sum(0, 1);
+        let axis_names = |a: AxisId| ["h", "kh"][a].to_string();
+        assert_eq!(idx.render(&axis_names), "h + kh");
+    }
+}

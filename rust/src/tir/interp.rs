@@ -1,0 +1,342 @@
+//! Reference interpreter.
+//!
+//! Executes a (possibly scheduled) program element-by-element, providing the
+//! semantic-equivalence oracle for schedule transformations: for any legal
+//! transformation sequence, `execute(scheduled)` must match
+//! `execute(original)` up to floating reassociation. Used only in tests on
+//! miniature shapes — the search path never touches it.
+
+use std::collections::HashMap;
+
+use super::expr::VarId;
+use super::program::{BlockExpr, BufKind, Program, ReduceOp, Stage};
+
+/// Dense f32 storage for every buffer of a program.
+#[derive(Debug, Clone)]
+pub struct Tensors {
+    pub data: Vec<Vec<f32>>,
+}
+
+impl Tensors {
+    /// Allocate all buffers; inputs filled by a deterministic hash-based
+    /// pattern in [-1, 1] so tests are reproducible without an RNG.
+    pub fn seeded(program: &Program, seed: u64) -> Tensors {
+        let data = program
+            .buffers
+            .iter()
+            .enumerate()
+            .map(|(bi, b)| {
+                let n = b.elems() as usize;
+                match b.kind {
+                    BufKind::Input => (0..n)
+                        .map(|i| {
+                            let h = hash3(seed, bi as u64, i as u64);
+                            (h as f64 / u64::MAX as f64 * 2.0 - 1.0) as f32
+                        })
+                        .collect(),
+                    _ => vec![0.0; n],
+                }
+            })
+            .collect();
+        Tensors { data }
+    }
+
+    pub fn output<'a>(&'a self, program: &Program) -> &'a [f32] {
+        let idx = program
+            .buffers
+            .iter()
+            .position(|b| b.kind == BufKind::Output)
+            .expect("program has no output buffer");
+        &self.data[idx]
+    }
+}
+
+fn hash3(a: u64, b: u64, c: u64) -> u64 {
+    let mut x = a ^ b.rotate_left(21) ^ c.rotate_left(42);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xFF51AFD7ED558CCD);
+    x ^= x >> 33;
+    x = x.wrapping_mul(0xC4CEB9FE1A85EC53);
+    x ^= x >> 33;
+    x
+}
+
+/// Execute all stages in order over the given tensors.
+pub fn execute(program: &Program, tensors: &mut Tensors) {
+    for stage in &program.stages {
+        execute_stage(program, stage, tensors);
+    }
+}
+
+/// Execute one stage by walking its loop nest in nest order.
+fn execute_stage(program: &Program, stage: &Stage, tensors: &mut Tensors) {
+    let n_loops = stage.loops.len();
+    let max_var = stage.var_extents.len();
+    let mut env = vec![0i64; max_var];
+    let mut axes = vec![0i64; stage.axes.len()];
+
+    // Odometer over loop extents, outermost first (order only matters for
+    // float reassociation, which tests tolerate).
+    let mut counters = vec![0i64; n_loops];
+    let total: i64 = stage.loops.iter().map(|l| l.extent).product();
+    let reduce = stage.block.reduce;
+    let init_val = reduce.init_val();
+
+    for _ in 0..total {
+        for (li, l) in stage.loops.iter().enumerate() {
+            env[l.var] = counters[li];
+        }
+        for (ai, e) in stage.axis_exprs.iter().enumerate() {
+            axes[ai] = e.eval(&env);
+            debug_assert!(
+                axes[ai] >= 0 && axes[ai] < stage.axes[ai].extent,
+                "axis {} out of range: {}",
+                stage.axes[ai].name,
+                axes[ai]
+            );
+        }
+
+        // T.init() semantics: initialize when all reduction axes are zero.
+        let out_buf = stage.block.out;
+        let out_flat = {
+            let idx: Vec<i64> = stage.block.out_idx.iter().map(|ix| ix.eval(&axes)).collect();
+            program.buffers[out_buf].flat(&idx) as usize
+        };
+        if reduce != ReduceOp::Assign {
+            let at_init = stage
+                .axes
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| a.is_reduction)
+                .all(|(ai, _)| axes[ai] == 0);
+            if at_init {
+                tensors.data[out_buf][out_flat] = init_val;
+            }
+        }
+
+        let rhs = eval_expr(&stage.block.rhs, program, tensors, &axes);
+        let slot = &mut tensors.data[out_buf][out_flat];
+        match reduce {
+            ReduceOp::Sum => *slot += rhs,
+            ReduceOp::Max => *slot = slot.max(rhs),
+            ReduceOp::Assign => *slot = rhs,
+        }
+
+        // Advance odometer (innermost fastest).
+        for li in (0..n_loops).rev() {
+            counters[li] += 1;
+            if counters[li] < stage.loops[li].extent {
+                break;
+            }
+            counters[li] = 0;
+        }
+    }
+}
+
+fn eval_expr(e: &BlockExpr, program: &Program, tensors: &Tensors, axes: &[i64]) -> f32 {
+    match e {
+        BlockExpr::Load(buf, idx) => {
+            let i: Vec<i64> = idx.iter().map(|ix| ix.eval(axes)).collect();
+            let flat = program.buffers[*buf].flat(&i) as usize;
+            tensors.data[*buf][flat]
+        }
+        BlockExpr::Const(c) => *c,
+        BlockExpr::Add(a, b) => {
+            eval_expr(a, program, tensors, axes) + eval_expr(b, program, tensors, axes)
+        }
+        BlockExpr::Sub(a, b) => {
+            eval_expr(a, program, tensors, axes) - eval_expr(b, program, tensors, axes)
+        }
+        BlockExpr::Mul(a, b) => {
+            eval_expr(a, program, tensors, axes) * eval_expr(b, program, tensors, axes)
+        }
+        BlockExpr::Max(a, b) => {
+            eval_expr(a, program, tensors, axes).max(eval_expr(b, program, tensors, axes))
+        }
+    }
+}
+
+/// Enumerate the multiset of axis tuples a stage's loop nest visits.
+/// For a legal schedule this must be exactly the full product space, each
+/// tuple once — the exact (non-float) half of the equivalence oracle.
+pub fn iteration_space(stage: &Stage) -> Result<(), String> {
+    let total: i64 = stage.loops.iter().map(|l| l.extent).product();
+    if total > 4_000_000 {
+        return Err(format!("iteration space too large to enumerate: {total}"));
+    }
+    let mut env = vec![0i64; stage.var_extents.len()];
+    let mut counters = vec![0i64; stage.loops.len()];
+    let mut seen: HashMap<Vec<i64>, u32> = HashMap::with_capacity(total as usize);
+    for _ in 0..total {
+        for (li, l) in stage.loops.iter().enumerate() {
+            env[l.var] = counters[li];
+        }
+        let axes: Vec<i64> = stage.axis_exprs.iter().map(|e| e.eval(&env)).collect();
+        for (ai, &v) in axes.iter().enumerate() {
+            if v < 0 || v >= stage.axes[ai].extent {
+                return Err(format!(
+                    "axis {} out of range: {} (extent {})",
+                    stage.axes[ai].name, v, stage.axes[ai].extent
+                ));
+            }
+        }
+        *seen.entry(axes).or_insert(0) += 1;
+        for li in (0..stage.loops.len()).rev() {
+            counters[li] += 1;
+            if counters[li] < stage.loops[li].extent {
+                break;
+            }
+            counters[li] = 0;
+        }
+    }
+    let expected: i64 = stage.axes.iter().map(|a| a.extent).product();
+    if seen.len() as i64 != expected {
+        return Err(format!(
+            "visited {} distinct axis tuples, expected {expected}",
+            seen.len()
+        ));
+    }
+    if let Some((tuple, count)) = seen.iter().find(|(_, &c)| c != 1) {
+        return Err(format!("axis tuple {tuple:?} visited {count} times"));
+    }
+    Ok(())
+}
+
+/// Compare two runs of (possibly differently scheduled) versions of the same
+/// program. Relative tolerance absorbs float reassociation from reordered
+/// reductions.
+pub fn outputs_close(a: &[f32], b: &[f32], rel_tol: f32) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    a.iter().zip(b).all(|(x, y)| {
+        let denom = x.abs().max(y.abs()).max(1.0);
+        (x - y).abs() / denom <= rel_tol
+    })
+}
+
+/// Convenience: run `program` on seeded inputs and return the output copy.
+pub fn run_seeded(program: &Program, seed: u64) -> Vec<f32> {
+    let mut t = Tensors::seeded(program, seed);
+    execute(program, &mut t);
+    t.output(program).to_vec()
+}
+
+/// Map from loop var to its current value — exposed for diagnostics.
+pub type Env = Vec<(VarId, i64)>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload::{self, WorkloadId};
+
+    #[test]
+    fn moe_matmul_against_manual() {
+        let p = workload::moe_matmul("m", 2, 3, 4);
+        let mut t = Tensors::seeded(&p, 1);
+        // Manual reference matmul.
+        let a = t.data[0].clone();
+        let b = t.data[1].clone();
+        execute(&p, &mut t);
+        for ti in 0..2 {
+            for j in 0..3 {
+                let mut acc = 0.0f32;
+                for k in 0..4 {
+                    acc += a[ti * 4 + k] * b[k * 3 + j];
+                }
+                let got = t.data[2][ti * 3 + j];
+                assert!((acc - got).abs() < 1e-5, "C[{ti},{j}]: {acc} vs {got}");
+            }
+        }
+    }
+
+    #[test]
+    fn conv_against_manual() {
+        let p = workload::conv2d("c", 2, 2, 5, 5, 3);
+        let mut t = Tensors::seeded(&p, 2);
+        let inp = t.data[0].clone();
+        let wt = t.data[1].clone();
+        execute(&p, &mut t);
+        // O[co,h,w] = sum I[ci,h+kh,w+kw] * W[co,ci,kh,kw]
+        for co in 0..2usize {
+            for h in 0..3usize {
+                for w in 0..3usize {
+                    let mut acc = 0.0f32;
+                    for ci in 0..2usize {
+                        for kh in 0..3usize {
+                            for kw in 0..3usize {
+                                acc += inp[ci * 25 + (h + kh) * 5 + (w + kw)]
+                                    * wt[co * 18 + ci * 9 + kh * 3 + kw];
+                            }
+                        }
+                    }
+                    let got = t.data[2][co * 9 + h * 3 + w];
+                    assert!((acc - got).abs() < 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_chains_stages() {
+        let p = workload::attention("a", 1, 3, 2);
+        let mut t = Tensors::seeded(&p, 3);
+        let q = t.data[0].clone();
+        let k = t.data[1].clone();
+        let v = t.data[2].clone();
+        execute(&p, &mut t);
+        // S[i,j] = sum_d Q[i,d] K[j,d]; O[i,d] = sum_j S[i,j] V[j,d]
+        let mut s = vec![0.0f32; 9];
+        for i in 0..3 {
+            for j in 0..3 {
+                for d in 0..2 {
+                    s[i * 3 + j] += q[i * 2 + d] * k[j * 2 + d];
+                }
+            }
+        }
+        for i in 0..3 {
+            for d in 0..2 {
+                let mut acc = 0.0f32;
+                for j in 0..3 {
+                    acc += s[i * 3 + j] * v[j * 2 + d];
+                }
+                let got = t.data[4][i * 2 + d];
+                assert!((acc - got).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn all_test_workloads_execute() {
+        for w in WorkloadId::ALL {
+            let p = w.build_test();
+            let out = run_seeded(&p, 7);
+            assert!(out.iter().all(|x| x.is_finite()), "{}", w.name());
+            assert!(out.iter().any(|x| *x != 0.0), "{}", w.name());
+        }
+    }
+
+    #[test]
+    fn iteration_space_fresh_program_ok() {
+        for w in WorkloadId::ALL {
+            let p = w.build_test();
+            for s in &p.stages {
+                iteration_space(s).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_inputs_deterministic() {
+        let p = workload::moe_matmul("m", 2, 3, 4);
+        assert_eq!(run_seeded(&p, 9), run_seeded(&p, 9));
+        assert_ne!(run_seeded(&p, 9), run_seeded(&p, 10));
+    }
+
+    #[test]
+    fn outputs_close_tolerances() {
+        assert!(outputs_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-4));
+        assert!(!outputs_close(&[1.0], &[1.1], 1e-4));
+        assert!(!outputs_close(&[1.0], &[1.0, 2.0], 1e-4));
+    }
+}

@@ -1,0 +1,21 @@
+//! Tensor-program IR — the MetaSchedule substrate.
+//!
+//! A [`Program`] is one tunable task: buffers + one or more [`Stage`]s, each
+//! a perfect loop nest around a single compute [`Block`]. The schedule
+//! engine (`crate::schedule`) rewrites loop nests; the interpreter
+//! ([`interp`]) provides the semantic-equivalence oracle; [`workload`]
+//! builds the paper's five evaluation kernels and the end-to-end Llama-3
+//! task set; [`printer`] renders the TVMScript-flavoured text used in LLM
+//! prompts.
+
+pub mod expr;
+pub mod interp;
+pub mod printer;
+pub mod program;
+pub mod workload;
+
+pub use expr::{AxisId, Expr, LinIdx, VarId};
+pub use program::{
+    Axis, Block, BlockExpr, BufKind, Buffer, LoopDef, LoopKind, Program, ReduceOp, Stage,
+};
+pub use workload::{E2eTask, WorkloadId};

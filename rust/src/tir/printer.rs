@@ -1,0 +1,261 @@
+//! TVMScript-flavoured textual rendering of programs.
+//!
+//! The prompt generator (reasoning::prompt) embeds this text verbatim, the
+//! same way the paper's Appendix-A prompt embeds the IRModule; it is also
+//! what `rcc show` prints. The dialect mirrors the paper's example:
+//! `T.grid`, `T.block`, `T.init`.
+
+use super::program::{BlockExpr, LoopKind, Program, ReduceOp, Stage};
+
+/// Render a whole program.
+pub fn print_program(p: &Program) -> String {
+    let mut out = String::new();
+    out.push_str("@tvm.script.ir_module\n");
+    out.push_str(&format!("class {}:\n", camel(&p.name)));
+    out.push_str("  @T.prim_func\n  def main(\n");
+    for b in &p.buffers {
+        let dims = b
+            .shape
+            .iter()
+            .map(|d| d.to_string())
+            .collect::<Vec<_>>()
+            .join(", ");
+        out.push_str(&format!("    {}: T.Buffer(({dims}), \"float32\"),\n", b.name));
+    }
+    out.push_str("  ):\n");
+    for s in &p.stages {
+        out.push_str(&print_stage(p, s, 4));
+    }
+    out
+}
+
+/// Render one stage's loop nest + block at the given indent.
+pub fn print_stage(p: &Program, s: &Stage, indent: usize) -> String {
+    let mut out = String::new();
+    let pad = |n: usize| " ".repeat(n);
+
+    // Loop header lines; consecutive serial loops are folded into one
+    // T.grid as in TVMScript.
+    let mut depth = indent;
+    let mut i = 0;
+    while i < s.loops.len() {
+        let l = &s.loops[i];
+        match l.kind {
+            LoopKind::Serial => {
+                let mut names = vec![l.name.clone()];
+                let mut extents = vec![l.extent.to_string()];
+                let mut j = i + 1;
+                while j < s.loops.len() && s.loops[j].kind == LoopKind::Serial {
+                    names.push(s.loops[j].name.clone());
+                    extents.push(s.loops[j].extent.to_string());
+                    j += 1;
+                }
+                out.push_str(&format!(
+                    "{}for {} in T.grid({}):\n",
+                    pad(depth),
+                    names.join(", "),
+                    extents.join(", ")
+                ));
+                i = j;
+            }
+            LoopKind::Parallel => {
+                out.push_str(&format!(
+                    "{}for {} in T.parallel({}):\n",
+                    pad(depth),
+                    l.name,
+                    l.extent
+                ));
+                i += 1;
+            }
+            LoopKind::Vectorized => {
+                out.push_str(&format!(
+                    "{}for {} in T.vectorized({}):\n",
+                    pad(depth),
+                    l.name,
+                    l.extent
+                ));
+                i += 1;
+            }
+            LoopKind::Unrolled => {
+                out.push_str(&format!(
+                    "{}for {} in T.unroll({}):\n",
+                    pad(depth),
+                    l.name,
+                    l.extent
+                ));
+                i += 1;
+            }
+        }
+        depth += 2;
+    }
+
+    // Block body.
+    let name_of = |v: usize| {
+        s.loops
+            .iter()
+            .find(|l| l.var == v)
+            .map(|l| l.name.clone())
+            .unwrap_or_else(|| format!("v{v}"))
+    };
+    out.push_str(&format!("{}with T.block(\"{}\"):\n", pad(depth), s.block.name));
+    depth += 2;
+    for (ai, axis) in s.axes.iter().enumerate() {
+        out.push_str(&format!(
+            "{}v{} = {}  # {} axis, extent {}\n",
+            pad(depth),
+            axis.name,
+            s.axis_exprs[ai].render(&name_of),
+            if axis.is_reduction { "reduce" } else { "spatial" },
+            axis.extent
+        ));
+    }
+    let axis_name = |a: usize| format!("v{}", s.axes[a].name);
+    let out_buf = &p.buffers[s.block.out];
+    let out_idx = s
+        .block
+        .out_idx
+        .iter()
+        .map(|ix| ix.render(&axis_name))
+        .collect::<Vec<_>>()
+        .join(", ");
+    if s.block.reduce != ReduceOp::Assign {
+        out.push_str(&format!("{}with T.init():\n", pad(depth)));
+        out.push_str(&format!(
+            "{}{}[{}] = T.float32({})\n",
+            pad(depth + 2),
+            out_buf.name,
+            out_idx,
+            s.block.reduce.init_val()
+        ));
+    }
+    let rhs = print_expr(p, &s.block.rhs, &axis_name);
+    let op = match s.block.reduce {
+        ReduceOp::Sum => format!("{}[{out_idx}] + {rhs}", out_buf.name),
+        ReduceOp::Max => format!("T.max({}[{out_idx}], {rhs})", out_buf.name),
+        ReduceOp::Assign => rhs.clone(),
+    };
+    out.push_str(&format!("{}{}[{}] = {}\n", pad(depth), out_buf.name, out_idx, op));
+
+    // Schedule annotations that are not visible in the nest itself.
+    if s.cache_write {
+        out.push_str(&format!(
+            "{}# sch: cache_write({}, \"local\")\n",
+            pad(indent),
+            s.block.name
+        ));
+    }
+    if let Some(d) = s.compute_at {
+        out.push_str(&format!(
+            "{}# sch: compute_at(depth={d})\n",
+            pad(indent)
+        ));
+    }
+    out
+}
+
+fn print_expr(p: &Program, e: &BlockExpr, axis_name: &dyn Fn(usize) -> String) -> String {
+    match e {
+        BlockExpr::Load(b, idx) => {
+            let parts = idx
+                .iter()
+                .map(|ix| ix.render(axis_name))
+                .collect::<Vec<_>>()
+                .join(", ");
+            format!("{}[{}]", p.buffers[*b].name, parts)
+        }
+        BlockExpr::Const(c) => format!("T.float32({c})"),
+        BlockExpr::Add(a, b) => format!(
+            "({} + {})",
+            print_expr(p, a, axis_name),
+            print_expr(p, b, axis_name)
+        ),
+        BlockExpr::Sub(a, b) => format!(
+            "({} - {})",
+            print_expr(p, a, axis_name),
+            print_expr(p, b, axis_name)
+        ),
+        BlockExpr::Mul(a, b) => format!(
+            "{} * {}",
+            print_expr(p, a, axis_name),
+            print_expr(p, b, axis_name)
+        ),
+        BlockExpr::Max(a, b) => format!(
+            "T.max({}, {})",
+            print_expr(p, a, axis_name),
+            print_expr(p, b, axis_name)
+        ),
+    }
+}
+
+/// Compact one-line summary of a stage's loop structure, e.g.
+/// `parallel t(16) . j_0(4) . j_1(8) . k(7168) . vectorized j_2(64)`.
+/// Used in prompt diffs.
+pub fn loop_signature(s: &Stage) -> String {
+    s.loops
+        .iter()
+        .map(|l| {
+            let prefix = match l.kind {
+                LoopKind::Serial => "",
+                LoopKind::Parallel => "parallel ",
+                LoopKind::Vectorized => "vectorized ",
+                LoopKind::Unrolled => "unrolled ",
+            };
+            format!("{prefix}{}({})", l.name, l.extent)
+        })
+        .collect::<Vec<_>>()
+        .join(" . ")
+}
+
+fn camel(s: &str) -> String {
+    s.split(['_', '-'])
+        .map(|w| {
+            let mut c = w.chars();
+            match c.next() {
+                Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+                None => String::new(),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload;
+
+    #[test]
+    fn moe_prints_paper_like_text() {
+        let p = workload::moe_matmul("deepseek_moe", 16, 2048, 7168);
+        let text = print_program(&p);
+        assert!(text.contains("@tvm.script.ir_module"), "{text}");
+        assert!(text.contains("class DeepseekMoe:"));
+        assert!(text.contains("A: T.Buffer((16, 7168), \"float32\")"));
+        assert!(text.contains("for t, j, k in T.grid(16, 2048, 7168):"));
+        assert!(text.contains("with T.block(\"moe\"):"));
+        assert!(text.contains("with T.init():"));
+        assert!(text.contains("C[vt, vj] = C[vt, vj] + A[vt, vk] * B[vk, vj]"));
+    }
+
+    #[test]
+    fn conv_prints_summed_indices() {
+        let p = workload::conv2d("flux_conv", 4, 4, 8, 8, 3);
+        let text = print_program(&p);
+        assert!(text.contains("I[vci, vh + vkh, vw + vkw]"), "{text}");
+    }
+
+    #[test]
+    fn loop_signature_compact() {
+        let p = workload::moe_matmul("m", 16, 2048, 7168);
+        let sig = loop_signature(&p.stages[0]);
+        assert_eq!(sig, "t(16) . j(2048) . k(7168)");
+    }
+
+    #[test]
+    fn printer_total_for_attention() {
+        let p = workload::attention("a", 2, 4, 4);
+        let text = print_program(&p);
+        // Both stages present.
+        assert!(text.contains("T.block(\"scores\")"));
+        assert!(text.contains("T.block(\"attn_out\")"));
+    }
+}

@@ -1,0 +1,464 @@
+//! Program structure: buffers, axes, loop nests and compute blocks.
+//!
+//! A [`Program`] is one tunable tensor computation (a "task" in TVM terms):
+//! one or more [`Stage`]s, each a perfect loop nest around a single
+//! reduction/elementwise [`Block`]. Schedule transformations rewrite the
+//! loop list and the axis-reconstruction expressions but never the block,
+//! which is what makes semantic equivalence checkable.
+
+use super::expr::{AxisId, Expr, LinIdx, VarId};
+
+/// Buffer role, used by the interpreter and the cost model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BufKind {
+    Input,
+    Output,
+    /// Intermediate produced by one stage and consumed by a later one.
+    Intermediate,
+}
+
+#[derive(Debug, Clone)]
+pub struct Buffer {
+    pub name: String,
+    pub shape: Vec<i64>,
+    pub kind: BufKind,
+}
+
+impl Buffer {
+    pub fn elems(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<i64> {
+        let mut s = vec![1i64; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flatten a multi-dim index (already evaluated) to a linear offset.
+    pub fn flat(&self, idx: &[i64]) -> i64 {
+        let strides = self.strides();
+        idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+    }
+}
+
+/// An original iteration axis of the computation (spatial or reduction).
+#[derive(Debug, Clone)]
+pub struct Axis {
+    pub name: String,
+    pub extent: i64,
+    pub is_reduction: bool,
+}
+
+/// How a loop is annotated. Annotations never change semantics, only the
+/// cost model's view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoopKind {
+    Serial,
+    Parallel,
+    Vectorized,
+    Unrolled,
+}
+
+impl LoopKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoopKind::Serial => "serial",
+            LoopKind::Parallel => "parallel",
+            LoopKind::Vectorized => "vectorized",
+            LoopKind::Unrolled => "unrolled",
+        }
+    }
+}
+
+/// One loop of the current nest.
+#[derive(Debug, Clone)]
+pub struct LoopDef {
+    /// Loop variable id; index into the stage's var table.
+    pub var: VarId,
+    /// Human-readable name, e.g. `j_1` (axis j, split level 1).
+    pub name: String,
+    pub extent: i64,
+    pub kind: LoopKind,
+}
+
+/// Scalar compute expression inside a block.
+#[derive(Debug, Clone)]
+pub enum BlockExpr {
+    /// Load `buffers[buf][indices...]`; indices are linear in original axes.
+    Load(usize, Vec<LinIdx>),
+    Const(f32),
+    Add(Box<BlockExpr>, Box<BlockExpr>),
+    Sub(Box<BlockExpr>, Box<BlockExpr>),
+    Mul(Box<BlockExpr>, Box<BlockExpr>),
+    Max(Box<BlockExpr>, Box<BlockExpr>),
+}
+
+impl BlockExpr {
+    pub fn load(buf: usize, indices: Vec<LinIdx>) -> BlockExpr {
+        BlockExpr::Load(buf, indices)
+    }
+
+    pub fn mul(a: BlockExpr, b: BlockExpr) -> BlockExpr {
+        BlockExpr::Mul(Box::new(a), Box::new(b))
+    }
+
+    pub fn add(a: BlockExpr, b: BlockExpr) -> BlockExpr {
+        BlockExpr::Add(Box::new(a), Box::new(b))
+    }
+
+    /// All buffer loads (buffer id, indices).
+    pub fn loads<'a>(&'a self, out: &mut Vec<(usize, &'a [LinIdx])>) {
+        match self {
+            BlockExpr::Load(b, idx) => out.push((*b, idx)),
+            BlockExpr::Const(_) => {}
+            BlockExpr::Add(a, b) | BlockExpr::Sub(a, b) | BlockExpr::Mul(a, b) | BlockExpr::Max(a, b) => {
+                a.loads(out);
+                b.loads(out);
+            }
+        }
+    }
+
+    /// Count of arithmetic ops (flops contributed per block execution).
+    pub fn flops(&self) -> u64 {
+        match self {
+            BlockExpr::Load(..) | BlockExpr::Const(_) => 0,
+            BlockExpr::Add(a, b) | BlockExpr::Sub(a, b) | BlockExpr::Mul(a, b) | BlockExpr::Max(a, b) => {
+                1 + a.flops() + b.flops()
+            }
+        }
+    }
+}
+
+/// Reduction combinator for the block update.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// `out += rhs` (init 0).
+    Sum,
+    /// `out = max(out, rhs)` (init -inf).
+    Max,
+    /// No reduction: `out = rhs` (pure elementwise stage).
+    Assign,
+}
+
+impl ReduceOp {
+    pub fn init_val(&self) -> f32 {
+        match self {
+            ReduceOp::Sum => 0.0,
+            ReduceOp::Max => f32::NEG_INFINITY,
+            ReduceOp::Assign => 0.0,
+        }
+    }
+}
+
+/// The single compute block of a stage:
+/// `out[out_idx] = reduce(out[out_idx], rhs)` with `T.init()` semantics —
+/// the init store fires when all reduction axes are at 0.
+#[derive(Debug, Clone)]
+pub struct Block {
+    pub name: String,
+    /// Output buffer id.
+    pub out: usize,
+    /// Output indices, linear in original axes (must not use reduction axes).
+    pub out_idx: Vec<LinIdx>,
+    pub rhs: BlockExpr,
+    pub reduce: ReduceOp,
+}
+
+/// One stage: a perfect loop nest around one block.
+#[derive(Debug, Clone)]
+pub struct Stage {
+    pub name: String,
+    /// Original axes, fixed for the life of the stage.
+    pub axes: Vec<Axis>,
+    /// Current loop nest, outermost first. Transformed by the scheduler.
+    pub loops: Vec<LoopDef>,
+    /// Per-axis reconstruction expression over current loop vars.
+    pub axis_exprs: Vec<Expr>,
+    /// Extent of each loop var ever created (indexed by VarId); needed to
+    /// build substitutions and for validation.
+    pub var_extents: Vec<i64>,
+    pub block: Block,
+    /// Accumulate in a register/L1-local buffer, write back at the end
+    /// (CacheWrite transform). Performance-only.
+    pub cache_write: bool,
+    /// Loop depth at which the output tile is initialized / written back
+    /// (ComputeLocation transform). None = at the block. Performance-only.
+    pub compute_at: Option<usize>,
+}
+
+impl Stage {
+    /// Create a stage whose loops are exactly the axes in order.
+    pub fn from_axes(name: &str, axes: Vec<Axis>, block: Block) -> Stage {
+        let loops: Vec<LoopDef> = axes
+            .iter()
+            .enumerate()
+            .map(|(i, a)| LoopDef {
+                var: i,
+                name: a.name.clone(),
+                extent: a.extent,
+                kind: LoopKind::Serial,
+            })
+            .collect();
+        let axis_exprs = (0..axes.len()).map(Expr::var).collect();
+        let var_extents = axes.iter().map(|a| a.extent).collect();
+        Stage {
+            name: name.to_string(),
+            axes,
+            loops,
+            axis_exprs,
+            var_extents,
+            block,
+            cache_write: false,
+            compute_at: None,
+        }
+    }
+
+    /// Allocate a fresh loop variable.
+    pub fn fresh_var(&mut self, extent: i64) -> VarId {
+        self.var_extents.push(extent);
+        self.var_extents.len() - 1
+    }
+
+    /// Total iteration count of the nest.
+    pub fn iter_count(&self) -> i64 {
+        self.loops.iter().map(|l| l.extent).product()
+    }
+
+    /// Index of the loop named `name`, if present.
+    pub fn loop_index(&self, name: &str) -> Option<usize> {
+        self.loops.iter().position(|l| l.name == name)
+    }
+
+    /// Which original axes a loop variable feeds into.
+    pub fn axes_of_var(&self, var: VarId) -> Vec<AxisId> {
+        let mut out = Vec::new();
+        for (a, e) in self.axis_exprs.iter().enumerate() {
+            let mut vs = Vec::new();
+            e.vars(&mut vs);
+            if vs.contains(&var) {
+                out.push(a);
+            }
+        }
+        out
+    }
+
+    /// True if the loop at `idx` touches any reduction axis.
+    pub fn loop_is_reduction(&self, idx: usize) -> bool {
+        self.axes_of_var(self.loops[idx].var)
+            .iter()
+            .any(|&a| self.axes[a].is_reduction)
+    }
+
+    /// Structural invariants; used by debug assertions and property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        // Loop iteration space must equal axis space.
+        let loop_space: i64 = self.loops.iter().map(|l| l.extent).product();
+        let axis_space: i64 = self.axes.iter().map(|a| a.extent).product();
+        if loop_space != axis_space {
+            return Err(format!(
+                "stage {}: loop space {} != axis space {}",
+                self.name, loop_space, axis_space
+            ));
+        }
+        // Every axis expr must only use live loop vars.
+        let live: Vec<VarId> = self.loops.iter().map(|l| l.var).collect();
+        for (a, e) in self.axis_exprs.iter().enumerate() {
+            let mut vs = Vec::new();
+            e.vars(&mut vs);
+            for v in vs {
+                if !live.contains(&v) {
+                    return Err(format!(
+                        "stage {}: axis {} references dead var {}",
+                        self.name, a, v
+                    ));
+                }
+            }
+        }
+        // Loop extents must match var extents.
+        for l in &self.loops {
+            if self.var_extents[l.var] != l.extent {
+                return Err(format!(
+                    "stage {}: loop {} extent {} != var extent {}",
+                    self.name, l.name, l.extent, self.var_extents[l.var]
+                ));
+            }
+        }
+        // Output indices must not involve reduction axes.
+        for idx in &self.block.out_idx {
+            for &(a, _) in &idx.terms {
+                if self.axes[a].is_reduction && self.block.reduce != ReduceOp::Assign {
+                    return Err(format!(
+                        "stage {}: output indexed by reduction axis {}",
+                        self.name, self.axes[a].name
+                    ));
+                }
+            }
+        }
+        // compute_at depth in range.
+        if let Some(d) = self.compute_at {
+            if d > self.loops.len() {
+                return Err(format!("stage {}: compute_at {} out of range", self.name, d));
+            }
+        }
+        Ok(())
+    }
+
+    /// Floating-point ops for the whole stage (1 mul + 1 add per reduction
+    /// update, etc.).
+    pub fn flops(&self) -> u64 {
+        let per_iter = self.block.rhs.flops()
+            + match self.block.reduce {
+                ReduceOp::Sum | ReduceOp::Max => 1,
+                ReduceOp::Assign => 0,
+            };
+        per_iter * self.iter_count() as u64
+    }
+}
+
+/// A tunable tensor program (one TVM-style task).
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub buffers: Vec<Buffer>,
+    pub stages: Vec<Stage>,
+}
+
+impl Program {
+    pub fn validate(&self) -> Result<(), String> {
+        for s in &self.stages {
+            s.validate()?;
+            if s.block.out >= self.buffers.len() {
+                return Err(format!("stage {}: bad output buffer id", s.name));
+            }
+            let out_buf = &self.buffers[s.block.out];
+            if s.block.out_idx.len() != out_buf.shape.len() {
+                return Err(format!(
+                    "stage {}: output rank {} != buffer rank {}",
+                    s.name,
+                    s.block.out_idx.len(),
+                    out_buf.shape.len()
+                ));
+            }
+            let mut loads = Vec::new();
+            s.block.rhs.loads(&mut loads);
+            for (b, idx) in loads {
+                if b >= self.buffers.len() {
+                    return Err(format!("stage {}: bad load buffer id {}", s.name, b));
+                }
+                if idx.len() != self.buffers[b].shape.len() {
+                    return Err(format!(
+                        "stage {}: load rank mismatch on {}",
+                        s.name, self.buffers[b].name
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.stages.iter().map(|s| s.flops()).sum()
+    }
+
+    /// Sum of input/output footprints in bytes (f32).
+    pub fn memory_bytes(&self) -> u64 {
+        self.buffers.iter().map(|b| b.elems() as u64 * 4).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul_4x4x4() -> Program {
+        // C[i,j] = sum_k A[i,k] * B[k,j], 4x4x4
+        let buffers = vec![
+            Buffer { name: "A".into(), shape: vec![4, 4], kind: BufKind::Input },
+            Buffer { name: "B".into(), shape: vec![4, 4], kind: BufKind::Input },
+            Buffer { name: "C".into(), shape: vec![4, 4], kind: BufKind::Output },
+        ];
+        let axes = vec![
+            Axis { name: "i".into(), extent: 4, is_reduction: false },
+            Axis { name: "j".into(), extent: 4, is_reduction: false },
+            Axis { name: "k".into(), extent: 4, is_reduction: true },
+        ];
+        let block = Block {
+            name: "matmul".into(),
+            out: 2,
+            out_idx: vec![LinIdx::axis(0), LinIdx::axis(1)],
+            rhs: BlockExpr::mul(
+                BlockExpr::load(0, vec![LinIdx::axis(0), LinIdx::axis(2)]),
+                BlockExpr::load(1, vec![LinIdx::axis(2), LinIdx::axis(1)]),
+            ),
+            reduce: ReduceOp::Sum,
+        };
+        Program {
+            name: "matmul".into(),
+            buffers,
+            stages: vec![Stage::from_axes("matmul", axes, block)],
+        }
+    }
+
+    #[test]
+    fn fresh_program_validates() {
+        let p = matmul_4x4x4();
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn flops_counted() {
+        let p = matmul_4x4x4();
+        // 64 iterations x (1 mul + 1 reduce-add)
+        assert_eq!(p.total_flops(), 128);
+    }
+
+    #[test]
+    fn buffer_strides_row_major() {
+        let b = Buffer { name: "X".into(), shape: vec![2, 3, 4], kind: BufKind::Input };
+        assert_eq!(b.strides(), vec![12, 4, 1]);
+        assert_eq!(b.flat(&[1, 2, 3]), 23);
+        assert_eq!(b.elems(), 24);
+    }
+
+    #[test]
+    fn validate_catches_space_mismatch() {
+        let mut p = matmul_4x4x4();
+        p.stages[0].loops[0].extent = 3; // break the space
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn validate_catches_dead_var() {
+        let mut p = matmul_4x4x4();
+        p.stages[0].axis_exprs[0] = Expr::var(99);
+        p.stages[0].var_extents.resize(100, 1);
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn loop_is_reduction_detects_k() {
+        let p = matmul_4x4x4();
+        let s = &p.stages[0];
+        assert!(!s.loop_is_reduction(0));
+        assert!(!s.loop_is_reduction(1));
+        assert!(s.loop_is_reduction(2));
+    }
+
+    #[test]
+    fn axes_of_var_initial_identity() {
+        let p = matmul_4x4x4();
+        let s = &p.stages[0];
+        assert_eq!(s.axes_of_var(0), vec![0]);
+        assert_eq!(s.axes_of_var(2), vec![2]);
+    }
+
+    #[test]
+    fn reduce_op_inits() {
+        assert_eq!(ReduceOp::Sum.init_val(), 0.0);
+        assert!(ReduceOp::Max.init_val().is_infinite());
+    }
+}

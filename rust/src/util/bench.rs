@@ -1,0 +1,151 @@
+//! Micro-benchmark timing harness (criterion is unavailable offline).
+//!
+//! Benches in `rust/benches/` are plain `main()` binaries (`harness = false`)
+//! that use `Bencher` for wall-clock measurement of hot paths and the table
+//! regenerators for paper experiments.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// One measured benchmark: warms up, then runs timed batches until the
+/// target measurement time has elapsed, reporting per-iteration statistics.
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub median_ns: f64,
+    pub throughput_per_s: f64,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 10,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(200),
+            min_iters: 5,
+        }
+    }
+
+    /// Run `f` repeatedly; returns per-iteration timing stats. The closure's
+    /// return value is consumed with `std::hint::black_box` to prevent the
+    /// optimizer from deleting the work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup phase: also estimates per-iteration cost to pick batch size.
+        let warm_start = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while warm_start.elapsed() < self.warmup || warm_iters < 3 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+        // Batch so each sample is >= ~100us to keep timer overhead <1%.
+        let batch = ((100_000.0 / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let measure_start = Instant::now();
+        while measure_start.elapsed() < self.measure || total_iters < self.min_iters {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / batch as f64;
+            samples_ns.push(dt);
+            total_iters += batch;
+            if samples_ns.len() > 10_000 {
+                break;
+            }
+        }
+
+        let mean_ns = stats::mean(&samples_ns);
+        BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns,
+            stddev_ns: stats::stddev(&samples_ns),
+            median_ns: stats::median(&samples_ns),
+            throughput_per_s: if mean_ns > 0.0 { 1e9 / mean_ns } else { 0.0 },
+        }
+    }
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} /iter  (median {}, sd {}, {:.0}/s, {} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.stddev_ns),
+            self.throughput_per_s,
+            self.iters
+        )
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            min_iters: 3,
+        };
+        let r = b.run("noop-ish", || {
+            let mut acc = 0u64;
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.iters >= 3);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.throughput_per_s > 0.0);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5_000.0).contains("us"));
+        assert!(fmt_ns(5_000_000.0).contains("ms"));
+        assert!(fmt_ns(5e9).contains(" s"));
+    }
+}

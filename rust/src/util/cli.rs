@@ -1,0 +1,114 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `subcommand --flag --key value --key=value positional` layouts,
+//! which is all the `rcc` binary needs.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. The first non-flag token is the subcommand.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.opt(key).unwrap_or(default)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn opt_f64(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("tune --workload llama3_attention --samples 600 --seed=7");
+        assert_eq!(a.subcommand.as_deref(), Some("tune"));
+        assert_eq!(a.opt("workload"), Some("llama3_attention"));
+        assert_eq!(a.opt_usize("samples", 0), 600);
+        assert_eq!(a.opt_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn flags_vs_valued_options() {
+        let a = parse("serve --verbose --port 8080 --dry-run");
+        assert!(a.has_flag("verbose"));
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.opt("port"), Some("8080"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("table1 out.md extra");
+        assert_eq!(a.subcommand.as_deref(), Some("table1"));
+        assert_eq!(a.positional, vec!["out.md", "extra"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("tune");
+        assert_eq!(a.opt_or("platform", "core_i9"), "core_i9");
+        assert_eq!(a.opt_f64("c", 1.414), 1.414);
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn empty() {
+        let a = parse("");
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Utility substrate: RNG, statistics, JSON, CLI parsing, config files and
+//! bench timing. These stand in for the rand/serde/clap/criterion crates,
+//! which are unavailable in this offline environment.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tomlmini;
+
+pub use json::Json;
+pub use rng::Pcg;

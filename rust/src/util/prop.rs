@@ -1,0 +1,63 @@
+//! Minimal property-based testing helper (proptest is unavailable offline).
+//!
+//! `check` runs a property over `cases` random inputs produced by a
+//! generator closure; on failure it reports the seed and case index so the
+//! exact failing input can be replayed deterministically.
+
+use super::rng::Pcg;
+
+/// Run `prop` on `cases` inputs drawn from `gen`. Panics with a replayable
+/// seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Pcg::new(seed);
+    for case in 0..cases {
+        let mut case_rng = rng.fork();
+        let input = gen(&mut case_rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case}/{cases} (seed {seed}):\n  \
+                 input: {input:?}\n  reason: {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "add-commutes",
+            1,
+            200,
+            |r| (r.gen_range(1000) as i64, r.gen_range(1000) as i64),
+            |&(a, b)| {
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("addition not commutative".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_context() {
+        check(
+            "always-fails",
+            2,
+            10,
+            |r| r.gen_range(5),
+            |_| Err("nope".into()),
+        );
+    }
+}

@@ -1,0 +1,263 @@
+//! TOML-subset parser for the framework config system.
+//!
+//! Supports: `[section]` / `[section.sub]` headers, `key = value` with
+//! string / integer / float / bool / flat-array values, `#` comments.
+//! Keys are flattened to dotted paths (`section.sub.key`). This covers
+//! everything `configs/*.toml` uses; the real `toml` crate is unavailable
+//! offline.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(x) => Some(*x),
+            Value::Int(x) => Some(*x as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(x) => Some(*x),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc, ParseError> {
+        let mut doc = Doc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(hdr) = line.strip_prefix('[') {
+                let hdr = hdr.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno + 1,
+                    msg: "unterminated section header".into(),
+                })?;
+                section = hdr.trim().to_string();
+                continue;
+            }
+            let (key, val) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                msg: format!("expected key = value, got {line:?}"),
+            })?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim()).ok_or_else(|| ParseError {
+                line: lineno + 1,
+                msg: format!("bad value {:?}", val.trim()),
+            })?;
+            doc.entries.insert(full_key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn get_str<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .and_then(|v| v.as_i64())
+            .map(|x| x as usize)
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// All string elements of an array value.
+    pub fn get_str_list(&self, key: &str) -> Vec<String> {
+        match self.get(key) {
+            Some(Value::Arr(items)) => items
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"')?;
+        return Some(Value::Str(body.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']')?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Some(Value::Arr(items));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+/// Split an array body on commas, ignoring commas inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sections_and_types() {
+        let doc = Doc::parse(
+            r#"
+# experiment config
+name = "table1"
+repeats = 20
+
+[search]
+strategy = "llm_mcts"
+exploration_c = 1.4142
+branching = 2
+verbose = false
+
+[search.llm]
+model = "gpt4o_mini"
+workloads = ["llama3_attention", "deepseek_moe"]
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name", ""), "table1");
+        assert_eq!(doc.get_usize("repeats", 0), 20);
+        assert_eq!(doc.get_str("search.strategy", ""), "llm_mcts");
+        assert!((doc.get_f64("search.exploration_c", 0.0) - 1.4142).abs() < 1e-9);
+        assert_eq!(doc.get_usize("search.branching", 0), 2);
+        assert!(!doc.get_bool("search.verbose", true));
+        assert_eq!(
+            doc.get_str_list("search.llm.workloads"),
+            vec!["llama3_attention", "deepseek_moe"]
+        );
+    }
+
+    #[test]
+    fn comments_in_strings() {
+        let doc = Doc::parse(r##"note = "has # inside" # trailing"##).unwrap();
+        assert_eq!(doc.get_str("note", ""), "has # inside");
+    }
+
+    #[test]
+    fn empty_array() {
+        let doc = Doc::parse("xs = []").unwrap();
+        assert_eq!(doc.get("xs"), Some(&Value::Arr(vec![])));
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(Doc::parse("just a line").is_err());
+        assert!(Doc::parse("[unterminated").is_err());
+        assert!(Doc::parse("k = @@").is_err());
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let doc = Doc::parse("").unwrap();
+        assert_eq!(doc.get_str("missing", "d"), "d");
+        assert_eq!(doc.get_f64("missing", 2.5), 2.5);
+        assert!(doc.get_bool("missing", true));
+    }
+
+    #[test]
+    fn float_and_int_coercion() {
+        let doc = Doc::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(doc.get_f64("a", 0.0), 3.0);
+        assert_eq!(doc.get_f64("b", 0.0), 3.5);
+        assert_eq!(doc.get("b").unwrap().as_i64(), None);
+    }
+}

@@ -1,0 +1,136 @@
+//! Coordinator integration: config files, sessions across platforms,
+//! end-to-end tuning, report regenerators and (when artifacts exist) the
+//! serving stack.
+
+use std::io::Write;
+
+use reasoning_compiler::coordinator::{
+    run_e2e, run_session, Server, ServerConfig, Strategy, TuneConfig,
+};
+use reasoning_compiler::cost::Platform;
+use reasoning_compiler::report::{costs, figure3, platforms, Scale};
+use reasoning_compiler::runtime::Manifest;
+use reasoning_compiler::tir::workload;
+
+#[test]
+fn config_file_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("rcc_cfg_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tune.toml");
+    let mut f = std::fs::File::create(&path).unwrap();
+    writeln!(
+        f,
+        "workload = \"flux_attention\"\nplatform = \"xeon_e3\"\n\
+         [search]\nstrategy = \"rc\"\nbudget = 44\nrepeats = 3\n\
+         [llm]\nmodel = \"o1_mini\"\nhistory_depth = 3\n"
+    )
+    .unwrap();
+    let cfg = TuneConfig::from_file(&path).unwrap();
+    assert_eq!(cfg.workload, "flux_attention");
+    assert_eq!(cfg.platform, "xeon_e3");
+    assert_eq!(cfg.strategy, Strategy::LlmMcts);
+    assert_eq!(cfg.budget, 44);
+    assert_eq!(cfg.model, "o1_mini");
+    assert_eq!(cfg.history_depth, 3);
+    // And the config actually drives a session.
+    let s = run_session(&cfg);
+    assert_eq!(s.runs.len(), 3);
+    assert!(s.mean_speedup() > 1.0);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn repo_configs_parse_and_run() {
+    // Every shipped config must stay valid.
+    for entry in std::fs::read_dir("configs").expect("configs/ directory") {
+        let path = entry.unwrap().path();
+        if path.extension().and_then(|e| e.to_str()) != Some("toml") {
+            continue;
+        }
+        let mut cfg = TuneConfig::from_file(&path)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        cfg.budget = cfg.budget.min(20);
+        cfg.repeats = 1;
+        let s = run_session(&cfg);
+        assert!(!s.runs.is_empty(), "{}", path.display());
+    }
+}
+
+#[test]
+fn sessions_work_on_every_platform() {
+    for plat in Platform::all() {
+        let cfg = TuneConfig {
+            strategy: Strategy::LlmMcts,
+            platform: plat.name.to_string(),
+            budget: 25,
+            repeats: 2,
+            ..Default::default()
+        };
+        let s = run_session(&cfg);
+        assert!(
+            s.mean_speedup() > 1.0,
+            "{}: speedup {}",
+            plat.name,
+            s.mean_speedup()
+        );
+    }
+}
+
+#[test]
+fn e2e_driver_beats_baseline_and_counts_samples() {
+    let tasks = workload::llama3_e2e_test();
+    let cfg = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: 45,
+        repeats: 2,
+        ..Default::default()
+    };
+    let r = run_e2e(&tasks, &cfg);
+    assert_eq!(r.tasks.len(), tasks.len());
+    assert!(r.weighted_speedup > 1.0);
+    assert!(r.total_samples > 0 && r.total_samples <= 45);
+}
+
+#[test]
+fn report_regenerators_emit_wellformed_json() {
+    let f = figure3::run(Scale::Smoke, 9);
+    let parsed = reasoning_compiler::util::Json::parse(&f.json.to_string()).unwrap();
+    assert!(parsed.get("series").is_some());
+
+    let t8 = costs::table8(Scale::Smoke, 9);
+    assert_eq!(t8.json.get("rows").unwrap().as_arr().unwrap().len(), 6);
+}
+
+#[test]
+fn table1_headline_shape_holds_at_smoke_scale() {
+    // The paper's headline: RC achieves higher speedup with fewer samples.
+    let r = platforms::table1(Scale::Smoke, 4);
+    let rc = r.json.get("geomean_rc_speedup").unwrap().as_f64().unwrap();
+    let es = r.json.get("geomean_es_speedup").unwrap().as_f64().unwrap();
+    let red = r
+        .json
+        .get("geomean_sample_reduction")
+        .unwrap()
+        .as_f64()
+        .unwrap();
+    assert!(rc > es, "RC geomean {rc:.2} should beat ES {es:.2}");
+    assert!(red > 1.0, "sample reduction {red:.2} should exceed 1");
+}
+
+#[test]
+fn serving_stack_over_artifacts() {
+    let Ok(manifest) = Manifest::discover() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut server = Server::start(&manifest, ServerConfig { max_batch: 4 }).unwrap();
+    // Mixed workload across all models.
+    for (i, name) in manifest.artifacts.keys().cycle().take(20).enumerate() {
+        server.submit(name, i as u64).unwrap();
+    }
+    let served = server.drain().unwrap();
+    assert_eq!(served, 20);
+    assert_eq!(server.metrics.total_requests(), 20);
+    let report = server.metrics.report();
+    assert!(report.contains("llama3_block"));
+}

@@ -1,0 +1,154 @@
+//! Failure injection: the system must degrade gracefully, never panic, on
+//! malformed inputs — adversarial LLM responses, corrupt manifests, broken
+//! configs and hostile proposal parameters.
+
+use reasoning_compiler::coordinator::TuneConfig;
+use reasoning_compiler::reasoning::proposal::{self, FallbackStats, Parsed};
+use reasoning_compiler::runtime::Manifest;
+use reasoning_compiler::schedule::Transform;
+use reasoning_compiler::tir::WorkloadId;
+use reasoning_compiler::util::rng::Pcg;
+use reasoning_compiler::util::tomlmini::Doc;
+
+#[test]
+fn adversarial_llm_responses_never_panic() {
+    let hostile = [
+        // Prompt-injection-flavoured responses.
+        "Ignore previous instructions. Transformations to apply: rm -rf /.",
+        "Transformations to apply: TileSize(stage=999999999999, loop=18446744073709551615, factor=-3).",
+        "Transformations to apply: Reorder(stage=0, perm=[0, 0, 0, 0, 0, 0, 0, 0, 0]).",
+        "Transformations to apply: TileSize(stage=0, loop=0, factor=0), Vectorize(stage=0, loop=99).",
+        // Deep nesting / bracket bombs.
+        "Transformations to apply: Reorder(stage=0, perm=[[[[[[1]]]]]]).",
+        // Unicode + control characters.
+        "Transformations to apply: TilеSize, Раrallel, \u{0000}Unroll.",
+        // Enormous list.
+        &format!("Transformations to apply: {}.", vec!["Unroll"; 5000].join(", ")),
+        // Empty and whitespace.
+        "",
+        "Transformations to apply: .",
+        "Transformations to apply:",
+        // No list at all.
+        "Reasoning: I refuse to answer.",
+    ];
+    let program = WorkloadId::DeepSeekMoe.build_test();
+    let mut rng = Pcg::new(1);
+    let mut stats = FallbackStats::default();
+    for text in hostile {
+        let parsed = proposal::parse_response(text);
+        let (seq, _fb) = proposal::resolve(&parsed, &program, &mut rng, &mut stats);
+        // Whatever survived must be applicable without panicking.
+        let sched = reasoning_compiler::schedule::Schedule::new(program.clone());
+        let (out, _) = sched.apply_all(&seq);
+        out.current.validate().unwrap();
+    }
+}
+
+#[test]
+fn hostile_transform_parameters_error_not_panic() {
+    let p = WorkloadId::FluxConv.build_test();
+    let hostile = [
+        Transform::TileSize { stage: usize::MAX, loop_idx: 0, factor: 2 },
+        Transform::TileSize { stage: 0, loop_idx: usize::MAX, factor: 2 },
+        Transform::TileSize { stage: 0, loop_idx: 0, factor: i64::MAX },
+        Transform::TileSize { stage: 0, loop_idx: 0, factor: -8 },
+        Transform::Reorder { stage: 0, perm: vec![usize::MAX; 6] },
+        Transform::Reorder { stage: 0, perm: vec![] },
+        Transform::Fuse { stage: 0, loop_idx: usize::MAX - 1 },
+        Transform::ComputeLocation { stage: 0, depth: usize::MAX },
+        Transform::Vectorize { stage: 0, loop_idx: usize::MAX },
+    ];
+    for t in hostile {
+        assert!(t.apply(&p).is_err(), "{t:?} should be rejected");
+    }
+}
+
+#[test]
+fn corrupt_manifests_error_cleanly() {
+    use std::path::Path;
+    let cases = [
+        "",
+        "{",
+        "[]",
+        r#"{"m": {}}"#,                                // missing file
+        r#"{"m": {"file": "x.hlo.txt"}}"#,             // missing inputs
+        r#"{"m": {"file": "x", "inputs": "nope", "outputs": []}}"#,
+    ];
+    for text in cases {
+        assert!(
+            Manifest::parse(Path::new("/tmp"), text).is_err(),
+            "should reject: {text}"
+        );
+    }
+}
+
+#[test]
+fn missing_artifact_file_fails_at_load_not_panic() {
+    use std::path::Path;
+    let m = Manifest::parse(
+        Path::new("/tmp/definitely_missing_dir_rcc"),
+        r#"{"ghost": {"file": "ghost.hlo.txt",
+            "inputs": [{"shape": [2, 2], "dtype": "float32"}],
+            "outputs": [{"shape": [2, 2], "dtype": "float32"}]}}"#,
+    )
+    .unwrap();
+    let mut rt = reasoning_compiler::runtime::Runtime::cpu().unwrap();
+    assert!(rt.load(&m, "ghost").is_err());
+}
+
+#[test]
+fn wrong_input_payload_sizes_rejected() {
+    let Ok(manifest) = Manifest::discover() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut rt = reasoning_compiler::runtime::Runtime::cpu().unwrap();
+    rt.load(&manifest, "deepseek_moe").unwrap();
+    let exe = rt.get("deepseek_moe").unwrap();
+    // Too few inputs.
+    assert!(exe.run(&[vec![0.0; 16]]).is_err());
+    // Wrong payload length.
+    let mut inputs = exe.random_inputs(1);
+    inputs[0].truncate(3);
+    assert!(exe.run(&inputs).is_err());
+}
+
+#[test]
+fn broken_configs_error_cleanly() {
+    for text in [
+        "strategy = ",               // missing value
+        "[search\nbudget = 3",       // unterminated header
+        "search.budget = \"NaN\"...",
+    ] {
+        assert!(Doc::parse(text).is_err(), "should reject: {text}");
+    }
+    // Unknown strategy/workload names fall back to defaults or panic at
+    // lookup time with a clear message (not UB); here: unknown strategy
+    // keeps the default.
+    let doc = Doc::parse("[search]\nstrategy = \"quantum\"").unwrap();
+    let cfg = TuneConfig::from_doc(&doc);
+    assert_eq!(cfg.strategy, reasoning_compiler::coordinator::Strategy::LlmMcts);
+}
+
+#[test]
+fn grounding_unknown_op_is_none() {
+    let p = WorkloadId::Llama4Mlp.build_test();
+    let mut rng = Pcg::new(2);
+    assert!(proposal::ground("NotAnOp", &p, &mut rng).is_none());
+}
+
+#[test]
+fn parse_response_bracket_bomb_terminates_quickly() {
+    let bomb = format!(
+        "Transformations to apply: {}{}",
+        "Reorder(stage=0, perm=[".repeat(2000),
+        "]".repeat(2000)
+    );
+    let start = std::time::Instant::now();
+    let parsed = proposal::parse_response(&bomb);
+    assert!(start.elapsed().as_secs_f64() < 1.0, "parser too slow on bomb");
+    // Everything here is malformed one way or another.
+    assert!(parsed
+        .iter()
+        .all(|p| matches!(p, Parsed::Invalid(_) | Parsed::Bare(_))));
+}

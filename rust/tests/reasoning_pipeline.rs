@@ -1,0 +1,177 @@
+//! Integration tests of the full reasoning pipeline:
+//! prompt -> simulated LLM -> parse -> validate -> ground -> apply,
+//! across model profiles and history depths, plus the ablation directions
+//! the paper claims (§4.3).
+
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
+use reasoning_compiler::cost::Platform;
+use reasoning_compiler::reasoning::engine::LlmEngine;
+use reasoning_compiler::reasoning::{proposal, ModelProfile, PromptContext, SimulatedLlm};
+use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::tir::WorkloadId;
+use reasoning_compiler::util::rng::Pcg;
+use reasoning_compiler::util::stats;
+
+#[test]
+fn every_model_produces_parseable_applicable_proposals() {
+    let plat = Platform::core_i9();
+    let node = Schedule::new(WorkloadId::DeepSeekMoe.build());
+    for model in ModelProfile::all() {
+        let mut engine = SimulatedLlm::new(model.clone(), 11);
+        let mut rng = Pcg::new(12);
+        let mut stats_ = proposal::FallbackStats::default();
+        let mut applied_any = 0;
+        let rounds = 30;
+        for _ in 0..rounds {
+            let ctx = PromptContext {
+                node: &node,
+                ancestors: vec![],
+                scores: vec![1.0],
+                platform: &plat,
+            };
+            let resp = engine.complete(&ctx);
+            assert!(resp.text.contains("Transformations to apply:"), "{}", model.name);
+            let parsed = proposal::parse_response(&resp.text);
+            assert!(!parsed.is_empty(), "{}: no proposals parsed", model.name);
+            let (seq, _fb) = proposal::resolve(&parsed, &node.current, &mut rng, &mut stats_);
+            let (out, applied) = node.apply_all(&seq);
+            if applied > 0 {
+                applied_any += 1;
+                out.current.validate().unwrap();
+            }
+        }
+        // Even the weakest model must usually produce something applicable.
+        assert!(
+            applied_any as f64 / rounds as f64 > 0.5,
+            "{}: only {applied_any}/{rounds} rounds applicable",
+            model.name
+        );
+    }
+}
+
+#[test]
+fn model_quality_orders_early_speedup() {
+    // Fig. 4(a) direction: the 70B profile converges faster than the 7B one
+    // at a small budget (averaged over repeats).
+    let mk = |model: &str| TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: "llama3_attention".to_string(),
+        platform: "core_i9".to_string(),
+        budget: 40,
+        repeats: 6,
+        model: model.to_string(),
+        ..Default::default()
+    };
+    let strong = run_session(&mk("llama33_70b")).mean_speedup_at(36);
+    let weak = run_session(&mk("ds_distill_7b")).mean_speedup_at(36);
+    assert!(
+        strong > weak,
+        "70B ({strong:.2}x) should beat 7B ({weak:.2}x) at 36 samples"
+    );
+}
+
+#[test]
+fn deeper_history_does_not_hurt() {
+    // Fig. 4(b) direction: parent+gp+ggp >= parent+gp (within tolerance),
+    // averaged across seeds.
+    let mk = |depth: usize, seed: u64| TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: "deepseek_moe".to_string(),
+        platform: "core_i9".to_string(),
+        budget: 60,
+        repeats: 4,
+        history_depth: depth,
+        seed,
+        ..Default::default()
+    };
+    let mut d2 = Vec::new();
+    let mut d3 = Vec::new();
+    for seed in [1, 2, 3] {
+        d2.push(run_session(&mk(2, seed)).mean_speedup());
+        d3.push(run_session(&mk(3, seed)).mean_speedup());
+    }
+    let (m2, m3) = (stats::mean(&d2), stats::mean(&d3));
+    assert!(
+        m3 > m2 * 0.9,
+        "deeper context should not materially hurt: depth2 {m2:.2}x vs depth3 {m3:.2}x"
+    );
+}
+
+#[test]
+fn fallback_rates_reproduce_table8_bands() {
+    // Run enough expansions per model and check the measured all-invalid
+    // fallback rate lands in the paper's band.
+    let bands: [(&str, f64, f64); 4] = [
+        ("gpt4o_mini", 0.0, 0.0001),
+        ("llama33_70b", 0.0, 0.02),
+        ("llama31_8b", 0.04, 0.25),
+        ("ds_distill_7b", 0.08, 0.32),
+    ];
+    for (model, lo, hi) in bands {
+        let cfg = TuneConfig {
+            strategy: Strategy::LlmMcts,
+            workload: "deepseek_moe".to_string(),
+            budget: 120,
+            repeats: 3,
+            model: model.to_string(),
+            ..Default::default()
+        };
+        let s = run_session(&cfg);
+        let rate = s.llm_fallback_rate;
+        assert!(
+            (lo..=hi).contains(&rate),
+            "{model}: fallback {rate:.4} outside [{lo}, {hi}]"
+        );
+    }
+}
+
+#[test]
+fn token_costs_scale_with_budget() {
+    let mk = |budget: usize| TuneConfig {
+        strategy: Strategy::LlmMcts,
+        workload: "flux_conv".to_string(),
+        budget,
+        repeats: 2,
+        ..Default::default()
+    };
+    let small = run_session(&mk(20));
+    let large = run_session(&mk(80));
+    assert!(large.llm_costs.prompt_tokens > small.llm_costs.prompt_tokens * 2);
+    let model = ModelProfile::gpt4o_mini();
+    assert!(large.llm_costs.usd(&model) > small.llm_costs.usd(&model));
+}
+
+#[test]
+fn prompt_embeds_everything_the_engine_uses() {
+    // Information-hygiene check: the rendered prompt must contain the
+    // program text, history, scores, platform header and op list — i.e. a
+    // real API model would receive the same information the simulated
+    // analyst consumes.
+    let plat = Platform::graviton2();
+    let base = Schedule::new(WorkloadId::FluxConv.build());
+    let child = {
+        let mut rng = Pcg::new(4);
+        let (seq, _) = reasoning_compiler::reasoning::engine::informed_proposals(
+            &base,
+            &plat,
+            &Default::default(),
+            &mut rng,
+        );
+        base.apply_all(&seq).0
+    };
+    let ctx = PromptContext {
+        node: &child,
+        ancestors: vec![&base],
+        scores: vec![0.8, 0.4],
+        platform: &plat,
+    };
+    let text = reasoning_compiler::reasoning::prompt::render(&ctx);
+    assert!(text.contains("Amazon Graviton2"));
+    assert!(text.contains("T.block(\"conv2d\")"));
+    assert!(text.contains("Applied transformation history"));
+    assert!(text.contains("Current: 0.800"));
+    assert!(text.contains("Parent: 0.400"));
+    for op in ["TileSize", "Reorder", "Fuse", "Parallel", "Vectorize", "Unroll"] {
+        assert!(text.contains(op), "prompt missing op {op}");
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration test: the paper's headline comparative dynamics.
+//!
+//! Reproduces the qualitative claims of Figure 3 / Table 1 in miniature:
+//! LLM-guided MCTS reaches higher speedups with fewer samples than both
+//! vanilla MCTS and Evolutionary Search.
+
+use reasoning_compiler::cost::{HardwareModel, Platform, SurrogateModel};
+use reasoning_compiler::reasoning::{LlmPolicy, ModelProfile, SimulatedLlm};
+use reasoning_compiler::search::{
+    evolutionary_search, mcts_search, EvoConfig, MctsConfig, RandomPolicy, SearchResult,
+};
+use reasoning_compiler::tir::workload::WorkloadId;
+use reasoning_compiler::util::stats;
+
+fn run_three(
+    workload: WorkloadId,
+    platform: &Platform,
+    budget: usize,
+    seed: u64,
+) -> (SearchResult, SearchResult, SearchResult) {
+    let base = workload.build();
+    let surrogate = SurrogateModel { platform: platform.clone() };
+    let hardware = HardwareModel { platform: platform.clone() };
+    let cfg = MctsConfig::default();
+
+    let es = evolutionary_search(
+        &base,
+        &surrogate,
+        &hardware,
+        &EvoConfig::default(),
+        platform,
+        budget,
+        seed,
+    );
+    let mut rand_policy = RandomPolicy::new(seed);
+    let mcts = mcts_search(
+        &base, &mut rand_policy, &surrogate, &hardware, &cfg, platform, budget, seed,
+    );
+    let engine = SimulatedLlm::new(ModelProfile::gpt4o_mini(), seed);
+    let mut llm_policy = LlmPolicy::new(engine, 2, seed);
+    let rc = mcts_search(
+        &base, &mut llm_policy, &surrogate, &hardware, &cfg, platform, budget, seed,
+    );
+    (es, mcts, rc)
+}
+
+#[test]
+fn reasoning_compiler_dominates_at_low_budget() {
+    // Mean over a few seeds to smooth stochastic variation, as the paper
+    // averages 20 repeats.
+    let plat = Platform::core_i9();
+    let mut es_early = Vec::new();
+    let mut mcts_early = Vec::new();
+    let mut rc_early = Vec::new();
+    for seed in 1..=5 {
+        let (es, mcts, rc) = run_three(WorkloadId::DeepSeekMoe, &plat, 72, seed);
+        es_early.push(es.speedup_at(36));
+        mcts_early.push(mcts.speedup_at(36));
+        rc_early.push(rc.speedup_at(36));
+    }
+    let (es_m, mcts_m, rc_m) = (
+        stats::mean(&es_early),
+        stats::mean(&mcts_early),
+        stats::mean(&rc_early),
+    );
+    eprintln!("speedup@36: ES {es_m:.2} | MCTS {mcts_m:.2} | RC {rc_m:.2}");
+    assert!(
+        rc_m > es_m,
+        "RC ({rc_m:.2}x) must beat ES ({es_m:.2}x) at 36 samples"
+    );
+    assert!(
+        rc_m > mcts_m,
+        "RC ({rc_m:.2}x) must beat vanilla MCTS ({mcts_m:.2}x) at 36 samples"
+    );
+}
+
+#[test]
+fn rc_reaches_es_final_quality_with_fewer_samples() {
+    let plat = Platform::core_i9();
+    let mut reductions = Vec::new();
+    for seed in 11..=13 {
+        let (es, _, rc) = run_three(WorkloadId::Llama4Mlp, &plat, 150, seed);
+        let target = es.best_speedup();
+        if let Some(n) = rc.samples_to_reach(target) {
+            reductions.push(es.samples_used as f64 / n as f64);
+        } else {
+            reductions.push(1.0); // did not reach: no reduction credit
+        }
+    }
+    let mean_reduction = stats::mean(&reductions);
+    eprintln!("sample reduction to ES-final quality: {mean_reduction:.1}x");
+    assert!(
+        mean_reduction > 1.5,
+        "RC should need fewer samples than ES (got {mean_reduction:.1}x)"
+    );
+}
+
+#[test]
+fn all_strategies_beat_baseline_on_every_workload() {
+    let plat = Platform::xeon_e3();
+    for w in WorkloadId::ALL {
+        let (es, mcts, rc) = run_three(w, &plat, 50, 2);
+        assert!(es.best_speedup() > 1.0, "{}: ES {}", w.name(), es.best_speedup());
+        assert!(mcts.best_speedup() > 1.0, "{}: MCTS {}", w.name(), mcts.best_speedup());
+        assert!(rc.best_speedup() > 1.0, "{}: RC {}", w.name(), rc.best_speedup());
+    }
+}
