@@ -28,7 +28,7 @@ fn main() {
     println!("{:<30} {:>11} {:>11} {:>11}", "model", "speedup@18", "speedup@36", "speedup@150");
     for model in ModelProfile::all() {
         let cfg = TuneConfig { model: model.name.to_string(), ..base.clone() };
-        let s = run_session(&cfg);
+        let s = run_session(&cfg).expect("tuning session");
         println!(
             "{:<30} {:>10.2}x {:>10.2}x {:>10.2}x",
             model.display,
@@ -41,7 +41,7 @@ fn main() {
     println!("\n--- Fig. 4(b): historical trace depth ---");
     for (label, depth) in [("parent+grandparent", 2), ("parent+gp+great-gp", 3)] {
         let cfg = TuneConfig { history_depth: depth, ..base.clone() };
-        let s = run_session(&cfg);
+        let s = run_session(&cfg).expect("tuning session");
         println!(
             "{:<30} {:>10.2}x {:>10.2}x {:>10.2}x",
             label,
@@ -54,7 +54,7 @@ fn main() {
     println!("\n--- Appendix E: branching factor ---");
     for b in [2usize, 4] {
         let cfg = TuneConfig { branching: b, ..base.clone() };
-        let s = run_session(&cfg);
+        let s = run_session(&cfg).expect("tuning session");
         println!(
             "B = {b:<26} {:>10.2}x {:>10.2}x {:>10.2}x",
             s.mean_speedup_at(18),

@@ -33,8 +33,8 @@ fn main() -> anyhow::Result<()> {
         repeats: 3,
         ..Default::default()
     };
-    let es = run_e2e(&tasks, &mk(Strategy::Evolutionary, 1200));
-    let rc = run_e2e(&tasks, &mk(Strategy::LlmMcts, 300));
+    let es = run_e2e(&tasks, &mk(Strategy::Evolutionary, 1200))?;
+    let rc = run_e2e(&tasks, &mk(Strategy::LlmMcts, 300))?;
     println!("{:<22} {:>10} {:>10}", "", "TVM (ES)", "RC");
     println!(
         "{:<22} {:>10} {:>10}",

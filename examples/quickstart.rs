@@ -27,7 +27,7 @@ fn main() {
         repeats: 3,
         ..Default::default()
     };
-    let session = run_session(&cfg);
+    let session = run_session(&cfg).expect("tuning session");
     println!(
         "mean speedup over pre-optimized code: {:.2}x (at 36 samples: {:.2}x)",
         session.mean_speedup(),

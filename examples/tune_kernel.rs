@@ -30,7 +30,7 @@ fn main() {
         ..Default::default()
     };
     println!("tuning {} on {} (budget {budget}, 3 repeats)...", w.display(), plat.display);
-    let session = run_session(&cfg);
+    let session = run_session(&cfg).expect("tuning session");
     for c in [18, 36, 72, 150, budget] {
         if c <= budget {
             println!("  speedup@{c:<4} = {:.2}x", session.mean_speedup_at(c));

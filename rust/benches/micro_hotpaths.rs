@@ -9,6 +9,7 @@
 //! Table-1 sweep stays in minutes.
 
 use reasoning_compiler::cost::{access, analytical, simulator, Platform};
+use reasoning_compiler::db::{program_fingerprint, workload_fingerprint, MeasureCache};
 use reasoning_compiler::reasoning::{prompt::PromptContext, ModelProfile, SimulatedLlm};
 use reasoning_compiler::schedule::{sampler, Schedule, Transform};
 use reasoning_compiler::tir::WorkloadId;
@@ -53,6 +54,24 @@ fn main() {
     results.push(b.run("sampler::random_sequence(4)", || {
         sampler::random_sequence(tuned_prog, 4, &mut rng2)
     }));
+    // Tuning-db hot paths: every Evaluator::measure with a cache attached
+    // pays one program fingerprint + one cache lookup before (or instead
+    // of) a hardware-model call, so both must stay well above simulator
+    // throughput.
+    results.push(b.run("db::workload_fingerprint (tiled moe)", || {
+        workload_fingerprint(tuned_prog)
+    }));
+    results.push(b.run("db::program_fingerprint (tiled moe)", || {
+        program_fingerprint(tuned_prog)
+    }));
+    {
+        let mut cache = MeasureCache::new();
+        let fp = program_fingerprint(tuned_prog);
+        cache.insert(fp, "core_i9", 1.25e-3);
+        results.push(b.run("MeasureCache lookup (hit)", || {
+            cache.get(fp, "core_i9")
+        }));
+    }
     results.push(b.run("prompt::render (full Appendix-A prompt)", || {
         let ctx = PromptContext {
             node: &tuned,

@@ -63,7 +63,19 @@ pub struct TuneConfig {
     pub exploration_c: f64,
     pub rollout_len: usize,
     pub max_trace_len: usize,
+    /// Path to the persistent tuning-record database (JSONL). `None`
+    /// disables persistence, warm starts and the measurement cache.
+    pub db_path: Option<String>,
+    /// Seed searches from the best database records for the workload
+    /// (ignored when `db_path` is None; the measurement cache stays active
+    /// either way once a database is attached).
+    pub warm_start: bool,
+    /// How many top database records to warm-start from.
+    pub warm_top_k: usize,
 }
+
+/// Conventional database location used by the CLI when `--db` is not given.
+pub const DEFAULT_DB_PATH: &str = "results/tuning_db.jsonl";
 
 impl Default for TuneConfig {
     fn default() -> Self {
@@ -80,6 +92,9 @@ impl Default for TuneConfig {
             exploration_c: std::f64::consts::SQRT_2,
             rollout_len: 4,
             max_trace_len: 24,
+            db_path: None,
+            warm_start: true,
+            warm_top_k: 8,
         }
     }
 }
@@ -109,6 +124,12 @@ impl TuneConfig {
             exploration_c: doc.get_f64("mcts.exploration_c", d.exploration_c),
             rollout_len: doc.get_usize("mcts.rollout_len", d.rollout_len),
             max_trace_len: doc.get_usize("search.max_trace_len", d.max_trace_len),
+            db_path: match doc.get_str("db.path", "") {
+                "" => d.db_path,
+                p => Some(p.to_string()),
+            },
+            warm_start: doc.get_bool("db.warm_start", d.warm_start),
+            warm_top_k: doc.get_usize("db.warm_top_k", d.warm_top_k),
         }
     }
 
@@ -132,6 +153,16 @@ impl TuneConfig {
         self.history_depth = args.opt_usize("history-depth", self.history_depth);
         self.branching = args.opt_usize("branching", self.branching);
         self.exploration_c = args.opt_f64("exploration-c", self.exploration_c);
+        if let Some(p) = args.opt("db") {
+            self.db_path = Some(p.to_string());
+        }
+        if args.has_flag("no-db") {
+            self.db_path = None;
+        }
+        if args.has_flag("no-warm-start") {
+            self.warm_start = false;
+        }
+        self.warm_top_k = args.opt_usize("warm-top-k", self.warm_top_k);
     }
 }
 
@@ -189,6 +220,38 @@ history_depth = 3
         assert_eq!(c.budget, 99);
         assert_eq!(c.platform, "graviton2");
         assert_eq!(c.history_depth, 3);
+    }
+
+    #[test]
+    fn db_knobs_parse_and_override() {
+        let c = TuneConfig::default();
+        assert_eq!(c.db_path, None);
+        assert!(c.warm_start);
+        assert_eq!(c.warm_top_k, 8);
+
+        let doc = Doc::parse(
+            "[db]\npath = \"results/tuning_db.jsonl\"\nwarm_start = false\nwarm_top_k = 4\n",
+        )
+        .unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.db_path.as_deref(), Some("results/tuning_db.jsonl"));
+        assert!(!c.warm_start);
+        assert_eq!(c.warm_top_k, 4);
+
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --db /tmp/db.jsonl --no-warm-start --warm-top-k 3"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args);
+        assert_eq!(c.db_path.as_deref(), Some("/tmp/db.jsonl"));
+        assert!(!c.warm_start);
+        assert_eq!(c.warm_top_k, 3);
+
+        let args = Args::parse("tune --no-db".split_whitespace().map(String::from));
+        c.apply_cli(&args);
+        assert_eq!(c.db_path, None);
     }
 
     #[test]

@@ -1,7 +1,8 @@
 //! L3 coordinator: the framework around the search — typed configuration,
-//! repeated tuning sessions with the paper's statistical protocol, the
-//! end-to-end multi-task driver, and the dynamic-batching serving loop
-//! over PJRT executables.
+//! repeated tuning sessions with the paper's statistical protocol (which
+//! open, warm-start from and commit to the persistent tuning database),
+//! the end-to-end multi-task driver, and the dynamic-batching serving loop
+//! over PJRT executables annotated with their best-known schedules.
 
 pub mod config;
 pub mod metrics;
@@ -9,7 +10,8 @@ pub mod registry;
 pub mod server;
 pub mod tuner;
 
-pub use config::{Strategy, TuneConfig};
+pub use config::{Strategy, TuneConfig, DEFAULT_DB_PATH};
 pub use registry::{Registry, RunRecord};
-pub use server::{Server, ServerConfig};
-pub use tuner::{run_e2e, run_once, run_session, E2eResult, SessionResult};
+pub use server::{BestSchedule, Server, ServerConfig};
+pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on, E2eResult,
+    SearchHints, SessionResult};

@@ -110,7 +110,7 @@ impl Registry {
             }
             match Self::load_record(&path) {
                 Ok(r) => out.push(r),
-                Err(e) => log::warn!("skipping malformed record {}: {e}", path.display()),
+                Err(e) => eprintln!("warning: skipping malformed record {}: {e}", path.display()),
             }
         }
         out.sort_by(|a, b| b.best_speedup.partial_cmp(&a.best_speedup).unwrap());
@@ -205,6 +205,7 @@ mod tests {
             repeats: 2,
             ..Default::default()
         })
+        .unwrap()
     }
 
     #[test]

@@ -8,15 +8,30 @@
 //! schedules from the search reduce the *kernel* cost; this loop
 //! demonstrates the serving stack those kernels live in.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::db::Database;
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Pcg;
 
 use super::metrics::ServerMetrics;
+
+/// The best-known tuned schedule for a served model, looked up from the
+/// tuning database when one is attached.
+#[derive(Debug, Clone)]
+pub struct BestSchedule {
+    /// Speedup over the unoptimized baseline on the record's platform.
+    pub speedup: f64,
+    /// Platform the schedule was tuned for.
+    pub platform: String,
+    /// Search strategy that found it.
+    pub strategy: String,
+    /// Transformation-trace length.
+    pub trace_len: usize,
+}
 
 /// One inference request.
 #[derive(Debug, Clone)]
@@ -44,6 +59,9 @@ pub struct Server {
     queues: std::collections::BTreeMap<String, VecDeque<Request>>,
     pub metrics: ServerMetrics,
     pub config: ServerConfig,
+    /// Best-known tuned schedule per model, populated by
+    /// [`Server::attach_tuning_db`].
+    best_known: BTreeMap<String, BestSchedule>,
 }
 
 impl Server {
@@ -61,7 +79,52 @@ impl Server {
             queues,
             metrics: ServerMetrics::default(),
             config,
+            best_known: BTreeMap::new(),
         })
+    }
+
+    /// Attach the tuning database: every served model with a recorded run
+    /// gets annotated with its best-known schedule (the serving half of
+    /// "never pay for the same measurement twice"). Returns how many models
+    /// matched a record.
+    pub fn attach_tuning_db(&mut self, db: &Database) -> usize {
+        let mut n = 0;
+        for model in self.queues.keys() {
+            if let Some(rec) = db.best_for_workload(model) {
+                self.best_known.insert(
+                    model.clone(),
+                    BestSchedule {
+                        speedup: rec.speedup(),
+                        platform: rec.platform.clone(),
+                        strategy: rec.strategy.clone(),
+                        trace_len: rec.trace.len(),
+                    },
+                );
+                n += 1;
+            }
+        }
+        n
+    }
+
+    /// Best-known schedule for a model, if the database had one.
+    pub fn best_schedule(&self, model: &str) -> Option<&BestSchedule> {
+        self.best_known.get(model)
+    }
+
+    /// One line per model describing its best-known schedule (or lack of
+    /// one) — printed by `rcc serve`.
+    pub fn schedule_summary(&self) -> String {
+        let mut out = String::new();
+        for model in self.queues.keys() {
+            match self.best_known.get(model) {
+                Some(b) => out.push_str(&format!(
+                    "{:<18} {:>6.2}x via {} on {} ({} transforms)\n",
+                    model, b.speedup, b.strategy, b.platform, b.trace_len
+                )),
+                None => out.push_str(&format!("{model:<18} (no tuning record)\n")),
+            }
+        }
+        out
     }
 
     /// Enqueue a request.
@@ -165,6 +228,10 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         };
+        if !cfg!(feature = "xla") {
+            eprintln!("skipping: built without the xla feature");
+            return;
+        }
         let mut server = Server::start(&m, ServerConfig { max_batch: 4 }).unwrap();
         for i in 0..10 {
             server.submit("deepseek_moe", i).unwrap();
@@ -180,6 +247,9 @@ mod tests {
     #[test]
     fn unknown_model_rejected() {
         let Some(m) = manifest() else { return };
+        if !cfg!(feature = "xla") {
+            return;
+        }
         let mut server = Server::start(&m, ServerConfig::default()).unwrap();
         assert!(server.submit("nope", 0).is_err());
     }
@@ -187,6 +257,9 @@ mod tests {
     #[test]
     fn synthetic_workload_drains() {
         let Some(m) = manifest() else { return };
+        if !cfg!(feature = "xla") {
+            return;
+        }
         let mut server = Server::start(&m, ServerConfig::default()).unwrap();
         server.run_synthetic(12, 3).unwrap();
         assert_eq!(server.pending(), 0);

@@ -1,18 +1,33 @@
 //! Tuning sessions: strategy dispatch, repeated (multi-seed) runs with the
-//! paper's mean-of-20 protocol, parallel execution across repeats, and the
-//! end-to-end multi-task driver behind Table 2.
+//! paper's mean-of-20 protocol, parallel execution across repeats, the
+//! end-to-end multi-task driver behind Table 2, and the session-level
+//! open/commit lifecycle of the persistent tuning database.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::cost::{HardwareModel, Platform, SurrogateModel};
+use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, WarmStart};
 use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
 use crate::schedule::Schedule;
 use crate::search::{
-    evolutionary_search, mcts_search, EvoConfig, MctsConfig, RandomPolicy, SearchResult,
+    evolutionary_search_warm, mcts_search_warm, EvoConfig, MctsConfig, RandomPolicy, SearchResult,
 };
 use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
 use crate::util::stats;
 
 use super::config::{Strategy, TuneConfig};
+
+/// Database-derived hints shared by every repeat of a session: warm-start
+/// traces plus a measurement cache pre-populated with known costs. Each run
+/// clones the cache (runs are independent; counters are per-run).
+#[derive(Debug, Clone, Default)]
+pub struct SearchHints {
+    pub warm: WarmStart,
+    pub cache: MeasureCache,
+}
 
 /// Outcome of a repeated tuning session on one (workload, platform).
 #[derive(Debug, Clone)]
@@ -54,49 +69,47 @@ impl SessionResult {
                 .collect::<Vec<_>>(),
         )
     }
+
+    /// Total measurement-cache hits across repeats (0 without a database).
+    pub fn total_cache_hits(&self) -> usize {
+        self.runs.iter().map(|r| r.cache_hits).sum()
+    }
+
+    /// Total hardware samples consumed across repeats.
+    pub fn total_samples(&self) -> usize {
+        self.runs.iter().map(|r| r.samples_used).sum()
+    }
 }
 
-/// Run one strategy once on a prebuilt program.
-pub fn run_once(program: &Program, cfg: &TuneConfig, seed: u64) -> SearchResult {
-    let platform = Platform::by_name(&cfg.platform)
-        .unwrap_or_else(|| panic!("unknown platform {}", cfg.platform));
-    let surrogate = SurrogateModel { platform: platform.clone() };
-    let hardware = HardwareModel { platform: platform.clone() };
-    let mcts_cfg = MctsConfig {
+fn platform_for(cfg: &TuneConfig) -> Result<Platform> {
+    Platform::by_name(&cfg.platform)
+        .ok_or_else(|| anyhow!("unknown platform {:?} (see `rcc platforms`)", cfg.platform))
+}
+
+fn mcts_cfg_for(cfg: &TuneConfig) -> MctsConfig {
+    MctsConfig {
         exploration_c: cfg.exploration_c,
         branching: cfg.branching,
         rollout_len: cfg.rollout_len,
         history_depth: cfg.history_depth,
         max_trace_len: cfg.max_trace_len,
-    };
-    match cfg.strategy {
-        Strategy::Evolutionary => evolutionary_search(
-            program,
-            &surrogate,
-            &hardware,
-            &EvoConfig::default(),
-            &platform,
-            cfg.budget,
-            seed,
-        ),
-        Strategy::Mcts => {
-            let mut policy = RandomPolicy::new(seed);
-            mcts_search(
-                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
-                seed,
-            )
-        }
-        Strategy::LlmMcts => {
-            let model = ModelProfile::by_name(&cfg.model)
-                .unwrap_or_else(|| panic!("unknown model {}", cfg.model));
-            let engine = SimulatedLlm::new(model, seed);
-            let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
-            mcts_search(
-                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
-                seed,
-            )
-        }
     }
+}
+
+/// Run one strategy once on a prebuilt program.
+pub fn run_once(program: &Program, cfg: &TuneConfig, seed: u64) -> Result<SearchResult> {
+    run_once_warm(program, cfg, seed, None)
+}
+
+/// [`run_once`] with database hints: the search is warm-started from
+/// `hints.warm` and evaluates through a clone of `hints.cache`.
+pub fn run_once_warm(
+    program: &Program,
+    cfg: &TuneConfig,
+    seed: u64,
+    hints: Option<&SearchHints>,
+) -> Result<SearchResult> {
+    Ok(run_once_with_accounting(program, cfg, seed, hints)?.0)
 }
 
 /// Run one strategy once, returning LLM accounting when applicable.
@@ -104,44 +117,87 @@ fn run_once_with_accounting(
     program: &Program,
     cfg: &TuneConfig,
     seed: u64,
-) -> (SearchResult, CostTracker, f64, u64) {
-    if cfg.strategy != Strategy::LlmMcts {
-        return (run_once(program, cfg, seed), CostTracker::default(), 0.0, 0);
-    }
-    let platform = Platform::by_name(&cfg.platform).expect("platform");
+    hints: Option<&SearchHints>,
+) -> Result<(SearchResult, CostTracker, f64, u64)> {
+    let platform = platform_for(cfg)?;
     let surrogate = SurrogateModel { platform: platform.clone() };
     let hardware = HardwareModel { platform: platform.clone() };
-    let mcts_cfg = MctsConfig {
-        exploration_c: cfg.exploration_c,
-        branching: cfg.branching,
-        rollout_len: cfg.rollout_len,
-        history_depth: cfg.history_depth,
-        max_trace_len: cfg.max_trace_len,
+    let mcts_cfg = mcts_cfg_for(cfg);
+    let warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
+    let cache = hints.map(|h| h.cache.clone());
+    let result = match cfg.strategy {
+        Strategy::Evolutionary => {
+            let r = evolutionary_search_warm(
+                program,
+                &surrogate,
+                &hardware,
+                &EvoConfig::default(),
+                &platform,
+                cfg.budget,
+                seed,
+                warm,
+                cache,
+            );
+            (r, CostTracker::default(), 0.0, 0)
+        }
+        Strategy::Mcts => {
+            let mut policy = RandomPolicy::new(seed);
+            let r = mcts_search_warm(
+                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
+                seed, warm, cache,
+            );
+            (r, CostTracker::default(), 0.0, 0)
+        }
+        Strategy::LlmMcts => {
+            let model = ModelProfile::by_name(&cfg.model)
+                .ok_or_else(|| anyhow!("unknown model {:?} (see `rcc models`)", cfg.model))?;
+            let engine = SimulatedLlm::new(model, seed);
+            let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
+            let r = mcts_search_warm(
+                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
+                seed, warm, cache,
+            );
+            let fb = policy.fallbacks.fallback_rate();
+            let expansions = policy.fallbacks.fallbacks;
+            (r, policy.costs, fb, expansions)
+        }
     };
-    let model = ModelProfile::by_name(&cfg.model).expect("model");
-    let engine = SimulatedLlm::new(model, seed);
-    let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
-    let result = mcts_search(
-        program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget, seed,
-    );
-    let fb = policy.fallbacks.fallback_rate();
-    let expansions = policy.fallbacks.fallbacks;
-    (result, policy.costs, fb, expansions)
+    Ok(result)
 }
 
 /// Repeat a tuning run over `cfg.repeats` seeds (in parallel) and aggregate
 /// — the paper's statistical protocol.
-pub fn run_session(cfg: &TuneConfig) -> SessionResult {
+pub fn run_session(cfg: &TuneConfig) -> Result<SessionResult> {
     let workload = WorkloadId::from_name(&cfg.workload)
-        .unwrap_or_else(|| panic!("unknown workload {}", cfg.workload));
+        .ok_or_else(|| anyhow!("unknown workload {:?} (see `rcc show`)", cfg.workload))?;
     let program = workload.build();
     run_session_on(&program, cfg)
 }
 
 /// Same as [`run_session`] but over an arbitrary program (used by e2e).
-pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> SessionResult {
+///
+/// When `cfg.db_path` is set, the session opens the tuning database,
+/// derives warm-start hints for this program's structural fingerprint, runs
+/// every repeat against them, then records each run's best trace and
+/// commits — the open → search → commit lifecycle that makes measurements
+/// durable across processes.
+pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResult> {
+    // Validate the platform up front so every repeat fails the same way.
+    platform_for(cfg)?;
+    let mut db = match &cfg.db_path {
+        Some(p) => Some(Database::open(Path::new(p))?),
+        None => None,
+    };
+    let hints = db.as_ref().map(|db| {
+        let (warm, cache) = db.hints(program, &cfg.platform, cfg.warm_top_k);
+        SearchHints {
+            warm: if cfg.warm_start { warm } else { WarmStart::default() },
+            cache,
+        }
+    });
+
     let seeds: Vec<u64> = (0..cfg.repeats as u64).map(|i| cfg.seed + i * 1009).collect();
-    let mut outcomes: Vec<Option<(SearchResult, CostTracker, f64, u64)>> =
+    let mut outcomes: Vec<Option<Result<(SearchResult, CostTracker, f64, u64)>>> =
         (0..seeds.len()).map(|_| None).collect();
 
     std::thread::scope(|scope| {
@@ -149,8 +205,9 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> SessionResult {
         for (slot, &seed) in outcomes.iter_mut().zip(&seeds) {
             let program = &program;
             let cfg = &cfg;
+            let hints = hints.as_ref();
             handles.push(scope.spawn(move || {
-                *slot = Some(run_once_with_accounting(program, cfg, seed));
+                *slot = Some(run_once_with_accounting(program, cfg, seed, hints));
             }));
         }
         for h in handles {
@@ -162,18 +219,53 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> SessionResult {
     let mut llm_costs = CostTracker::default();
     let mut fb_rates = Vec::new();
     for o in outcomes.into_iter().flatten() {
+        let o = o?;
         runs.push(o.0);
         llm_costs.merge(&o.1);
         fb_rates.push(o.2);
     }
-    SessionResult {
+
+    // Persist each repeat's best discovery and flush.
+    if let Some(db) = &mut db {
+        let fp = workload_fingerprint(program);
+        let timestamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for (run, &seed) in runs.iter().zip(&seeds) {
+            if run.best_trace.is_empty() {
+                continue; // nothing beat the baseline; no record to keep
+            }
+            // A warm run that only re-confirms a recorded result adds no
+            // information; skip the append so the log doesn't grow with
+            // duplicates on every converged re-run.
+            if db.has_equivalent(fp, &cfg.platform, &run.best_trace, run.best_latency) {
+                continue;
+            }
+            db.add(TuningRecord {
+                workload_fp: fp,
+                workload: program.name.clone(),
+                platform: cfg.platform.clone(),
+                strategy: run.strategy.clone(),
+                trace: run.best_trace.clone(),
+                latency: run.best_latency,
+                baseline_latency: run.baseline_latency,
+                seed,
+                timestamp,
+            });
+        }
+        db.commit()
+            .with_context(|| format!("committing tuning records for {}", program.name))?;
+    }
+
+    Ok(SessionResult {
         config_strategy: cfg.strategy,
         workload: cfg.workload.clone(),
         platform: cfg.platform.clone(),
         runs,
         llm_costs,
         llm_fallback_rate: stats::mean(&fb_rates),
-    }
+    })
 }
 
 /// End-to-end result: per-task sessions + the invocation-weighted speedup
@@ -186,8 +278,7 @@ pub struct E2eResult {
 }
 
 /// Tune every task of an end-to-end model and combine by invocation count.
-pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> E2eResult {
-    let platform = Platform::by_name(&cfg.platform).expect("platform");
+pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> Result<E2eResult> {
     let mut sessions = Vec::new();
     let mut base_total = 0.0;
     let mut opt_total = 0.0;
@@ -197,7 +288,7 @@ pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> E2eResult {
         // Budget splits across tasks proportional to... equal shares here;
         // the paper tunes each extracted task with the shared budget.
         task_cfg.budget = (cfg.budget / tasks.len()).max(10);
-        let session = run_session_on(&task.program, &task_cfg);
+        let session = run_session_on(&task.program, &task_cfg)?;
         // Weighted latency: mean best latency per run x invocations.
         let base = stats::mean(
             &session.runs.iter().map(|r| r.baseline_latency).collect::<Vec<_>>(),
@@ -211,12 +302,11 @@ pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> E2eResult {
             / session.runs.len().max(1);
         sessions.push((task.program.name.clone(), session));
     }
-    let _ = platform;
-    E2eResult {
+    Ok(E2eResult {
         tasks: sessions,
         total_samples,
         weighted_speedup: base_total / opt_total,
-    }
+    })
 }
 
 /// Replay the best trace of a search result into a concrete program
@@ -242,7 +332,7 @@ mod tests {
 
     #[test]
     fn session_aggregates_repeats() {
-        let s = run_session(&quick_cfg(Strategy::Mcts));
+        let s = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
         assert_eq!(s.runs.len(), 2);
         assert!(s.mean_speedup() > 1.0);
         assert!(s.mean_speedup_at(30) >= s.mean_speedup_at(5));
@@ -250,7 +340,7 @@ mod tests {
 
     #[test]
     fn llm_session_tracks_costs() {
-        let s = run_session(&quick_cfg(Strategy::LlmMcts));
+        let s = run_session(&quick_cfg(Strategy::LlmMcts)).unwrap();
         assert!(s.llm_costs.calls > 0);
         assert!(s.llm_costs.prompt_tokens > 0);
         assert_eq!(s.llm_fallback_rate, 0.0); // gpt4o_mini never falls back
@@ -258,9 +348,35 @@ mod tests {
 
     #[test]
     fn es_session_runs() {
-        let s = run_session(&quick_cfg(Strategy::Evolutionary));
+        let s = run_session(&quick_cfg(Strategy::Evolutionary)).unwrap();
         assert!(s.mean_speedup() > 1.0);
         assert_eq!(s.llm_costs.calls, 0);
+    }
+
+    #[test]
+    fn unknown_platform_is_an_error_not_a_panic() {
+        let cfg = TuneConfig {
+            platform: "quantum_abacus".to_string(),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        let err = run_session(&cfg).unwrap_err();
+        assert!(err.to_string().contains("quantum_abacus"), "{err}");
+        let program = WorkloadId::DeepSeekMoe.build_test();
+        assert!(run_once(&program, &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn unknown_workload_and_model_are_errors() {
+        let cfg = TuneConfig {
+            workload: "nope".to_string(),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        assert!(run_session(&cfg).is_err());
+        let cfg = TuneConfig {
+            model: "gpt9".to_string(),
+            ..quick_cfg(Strategy::LlmMcts)
+        };
+        assert!(run_session(&cfg).is_err());
     }
 
     #[test]
@@ -269,18 +385,49 @@ mod tests {
         let mut cfg = quick_cfg(Strategy::LlmMcts);
         cfg.budget = 30;
         cfg.repeats = 1;
-        let r = run_e2e(&tasks, &cfg);
+        let r = run_e2e(&tasks, &cfg).unwrap();
         assert_eq!(r.tasks.len(), 3);
         assert!(r.weighted_speedup > 1.0, "e2e speedup {}", r.weighted_speedup);
     }
 
     #[test]
     fn sessions_deterministic() {
-        let a = run_session(&quick_cfg(Strategy::Mcts));
-        let b = run_session(&quick_cfg(Strategy::Mcts));
+        let a = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        let b = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
         assert_eq!(
             a.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
             b.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn session_with_db_persists_and_warm_starts() {
+        let db_path = std::env::temp_dir().join(format!(
+            "rcc_tuner_db_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let cfg = TuneConfig {
+            db_path: Some(db_path.to_string_lossy().to_string()),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        let cold = run_session(&cfg).unwrap();
+        assert_eq!(cold.total_cache_hits(), 0, "cold run has nothing to hit");
+        let db = Database::open(&db_path).unwrap();
+        assert!(
+            (1..=2).contains(&db.len()),
+            "one record per repeat (minus same-trace dedup), got {}",
+            db.len()
+        );
+
+        let warm = run_session(&cfg).unwrap();
+        assert!(
+            warm.total_cache_hits() > 0,
+            "warm run must reuse recorded measurements"
+        );
+        std::fs::remove_file(&db_path).ok();
     }
 }

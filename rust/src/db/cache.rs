@@ -1,0 +1,86 @@
+//! In-memory measurement cache.
+//!
+//! Keyed by `(program fingerprint, platform)`: if two candidates lower to
+//! the same concrete program on the same platform, the hardware model owes
+//! us nothing new — the search can reuse the previous measurement without
+//! consuming a sample from its budget. The cache is consulted by
+//! `crate::search::Evaluator::measure` and pre-populated from database
+//! records when a session warm-starts, which is how a warm run reports
+//! nonzero hits before its first hardware measurement.
+//!
+//! The cache is a pure store; hit/miss accounting lives in the single
+//! budget-aware consumer (`Evaluator`), where "miss" can be defined as
+//! "actually invoked the hardware model".
+
+use std::collections::HashMap;
+
+/// Measurement store: (program fingerprint, platform) → latency.
+///
+/// Entries are nested per platform so the per-candidate hot path (one
+/// lookup per `Evaluator::measure`) hashes a borrowed `&str` + `u64` and
+/// never allocates; a platform key is only allocated once, on the first
+/// insert for that platform.
+#[derive(Debug, Clone, Default)]
+pub struct MeasureCache {
+    entries: HashMap<String, HashMap<u64, f64>>,
+}
+
+impl MeasureCache {
+    pub fn new() -> MeasureCache {
+        MeasureCache::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.values().map(|m| m.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.values().all(|m| m.is_empty())
+    }
+
+    /// Look up a known measurement.
+    pub fn get(&self, program_fp: u64, platform: &str) -> Option<f64> {
+        self.entries
+            .get(platform)
+            .and_then(|m| m.get(&program_fp))
+            .copied()
+    }
+
+    /// Record a measurement. Last write wins (re-measurement under a
+    /// different seed refreshes the entry).
+    pub fn insert(&mut self, program_fp: u64, platform: &str, latency: f64) {
+        match self.entries.get_mut(platform) {
+            Some(m) => {
+                m.insert(program_fp, latency);
+            }
+            None => {
+                let mut m = HashMap::new();
+                m.insert(program_fp, latency);
+                self.entries.insert(platform.to_string(), m);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_and_get_per_platform() {
+        let mut c = MeasureCache::new();
+        assert!(c.get(1, "core_i9").is_none());
+        c.insert(1, "core_i9", 0.5);
+        assert_eq!(c.get(1, "core_i9"), Some(0.5));
+        // Same fingerprint on a different platform is a distinct key.
+        assert!(c.get(1, "m2_pro").is_none());
+        c.insert(1, "m2_pro", 0.7);
+        assert_eq!(c.len(), 2);
+        // Last write wins.
+        c.insert(1, "core_i9", 0.4);
+        assert_eq!(c.get(1, "core_i9"), Some(0.4));
+        assert_eq!(c.len(), 2);
+        assert!(!c.is_empty());
+        assert!(MeasureCache::new().is_empty());
+    }
+}

@@ -1,0 +1,431 @@
+//! The persistent tuning-record database.
+//!
+//! A [`Database`] is a JSONL file of [`TuningRecord`]s plus an in-memory
+//! view. Sessions open it, derive warm-start hints for their workload,
+//! append the records their runs produce, and commit — append-only, so
+//! concurrent readers never see torn earlier records and a crashed run
+//! loses at most its own uncommitted tail. Malformed lines are counted and
+//! skipped, never fatal: the database must survive version drift.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::schedule::{Schedule, Transform};
+use crate::tir::Program;
+
+use super::cache::MeasureCache;
+use super::fingerprint::{program_fingerprint, workload_fingerprint};
+use super::record::TuningRecord;
+
+/// Warm-start hints for one search run: known-good traces (best first) with
+/// their previously measured latencies. MCTS seeds root children from
+/// these; evolutionary search seeds its initial population.
+#[derive(Debug, Clone, Default)]
+pub struct WarmStart {
+    pub entries: Vec<(Vec<Transform>, f64)>,
+}
+
+impl WarmStart {
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Aggregate statistics for `rcc db stats`.
+#[derive(Debug, Clone)]
+pub struct DbStats {
+    pub records: usize,
+    /// Distinct (workload fingerprint, platform) pairs.
+    pub pairs: usize,
+    pub workloads: Vec<String>,
+    pub platforms: Vec<String>,
+    /// Malformed JSONL lines skipped at load time.
+    pub skipped_lines: usize,
+}
+
+impl DbStats {
+    pub fn render(&self) -> String {
+        format!(
+            "{} records over {} (workload, platform) pairs\n\
+             workloads: {}\nplatforms: {}\nskipped malformed lines: {}",
+            self.records,
+            self.pairs,
+            if self.workloads.is_empty() { "-".to_string() } else { self.workloads.join(", ") },
+            if self.platforms.is_empty() { "-".to_string() } else { self.platforms.join(", ") },
+            self.skipped_lines
+        )
+    }
+}
+
+/// JSONL-backed tuning-record store.
+#[derive(Debug, Clone)]
+pub struct Database {
+    /// Backing file; `None` for a purely in-memory database (tests, smoke).
+    pub path: Option<PathBuf>,
+    records: Vec<TuningRecord>,
+    /// records[..committed] are already on disk.
+    committed: usize,
+    pub skipped_lines: usize,
+}
+
+impl Database {
+    /// Open a database file. A missing file is an empty database;
+    /// malformed lines are skipped and counted. Read-only callers (`rcc db
+    /// stats`) get no filesystem side effects — parent directories are
+    /// created by [`Database::commit`], on the write path.
+    pub fn open(path: &Path) -> Result<Database> {
+        let mut records = Vec::new();
+        let mut skipped_lines = 0;
+        if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading tuning db {}", path.display()))?;
+            for line in text.lines() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                match TuningRecord::from_jsonl(line) {
+                    Some(r) => records.push(r),
+                    None => skipped_lines += 1,
+                }
+            }
+        }
+        let committed = records.len();
+        Ok(Database { path: Some(path.to_path_buf()), records, committed, skipped_lines })
+    }
+
+    /// A database with no backing file; `commit` is a no-op.
+    pub fn in_memory() -> Database {
+        Database { path: None, records: Vec::new(), committed: 0, skipped_lines: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[TuningRecord] {
+        &self.records
+    }
+
+    /// Stage a record for the next commit.
+    pub fn add(&mut self, rec: TuningRecord) {
+        self.records.push(rec);
+    }
+
+    /// Append all staged records to the backing file. Returns how many
+    /// records were flushed.
+    pub fn commit(&mut self) -> Result<usize> {
+        let pending = &self.records[self.committed..];
+        let n = pending.len();
+        if n == 0 {
+            return Ok(0);
+        }
+        if let Some(path) = &self.path {
+            if let Some(parent) = path.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)
+                        .with_context(|| format!("creating db dir {}", parent.display()))?;
+                }
+            }
+            let mut chunk = String::new();
+            for rec in pending {
+                chunk.push_str(&rec.to_jsonl());
+                chunk.push('\n');
+            }
+            use std::io::Write as _;
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(path)
+                .with_context(|| format!("opening tuning db {}", path.display()))?;
+            f.write_all(chunk.as_bytes())
+                .with_context(|| format!("appending to tuning db {}", path.display()))?;
+        }
+        self.committed = self.records.len();
+        Ok(n)
+    }
+
+    /// The best records for a (workload fingerprint, platform) pair,
+    /// deduplicated by trace, best first. Within a fixed pair the sort key
+    /// is measured latency, not speedup: baselines are re-measured per run
+    /// under seed noise, so speedup ratios from different runs are not
+    /// comparable while latencies are.
+    pub fn top_k(&self, workload_fp: u64, platform: &str, k: usize) -> Vec<&TuningRecord> {
+        let mut matching: Vec<&TuningRecord> = self
+            .records
+            .iter()
+            .filter(|r| r.workload_fp == workload_fp && r.platform == platform)
+            .collect();
+        matching.sort_by(|a, b| {
+            a.latency
+                .partial_cmp(&b.latency)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut out: Vec<&TuningRecord> = Vec::new();
+        for r in matching {
+            if out.len() >= k {
+                break;
+            }
+            if !out.iter().any(|o| o.trace == r.trace) {
+                out.push(r);
+            }
+        }
+        out
+    }
+
+    /// Best record for a (workload fingerprint, platform) pair.
+    pub fn best(&self, workload_fp: u64, platform: &str) -> Option<&TuningRecord> {
+        self.top_k(workload_fp, platform, 1).into_iter().next()
+    }
+
+    /// True if an existing record already covers this trace at least as
+    /// well (same fingerprint/platform/trace, equal-or-better latency).
+    /// Sessions use this to avoid re-appending known results every run, so
+    /// the append-only log does not grow without new information.
+    pub fn has_equivalent(
+        &self,
+        workload_fp: u64,
+        platform: &str,
+        trace: &[Transform],
+        latency: f64,
+    ) -> bool {
+        self.records.iter().any(|r| {
+            r.workload_fp == workload_fp
+                && r.platform == platform
+                && r.trace == trace
+                && r.latency <= latency
+        })
+    }
+
+    /// Best record for a workload *name* across all platforms (serving-side
+    /// lookup, where the host platform is not one of the simulated ones).
+    /// Within a platform only latency is noise-free (baselines are
+    /// re-measured per run); across platforms only speedup is comparable —
+    /// so take each platform's latency-best record, then the highest
+    /// speedup among those.
+    pub fn best_for_workload(&self, workload: &str) -> Option<&TuningRecord> {
+        let mut per_platform: BTreeMap<&str, &TuningRecord> = BTreeMap::new();
+        for r in self.records.iter().filter(|r| r.workload == workload) {
+            per_platform
+                .entry(r.platform.as_str())
+                .and_modify(|best| {
+                    if r.latency < best.latency {
+                        *best = r;
+                    }
+                })
+                .or_insert(r);
+        }
+        per_platform.into_values().max_by(|a, b| {
+            a.speedup()
+                .partial_cmp(&b.speedup())
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+    }
+
+    pub fn stats(&self) -> DbStats {
+        let mut pairs = BTreeSet::new();
+        let mut workloads = BTreeSet::new();
+        let mut platforms = BTreeSet::new();
+        for r in &self.records {
+            pairs.insert((r.workload_fp, r.platform.clone()));
+            workloads.insert(r.workload.clone());
+            platforms.insert(r.platform.clone());
+        }
+        DbStats {
+            records: self.records.len(),
+            pairs: pairs.len(),
+            workloads: workloads.into_iter().collect(),
+            platforms: platforms.into_iter().collect(),
+            skipped_lines: self.skipped_lines,
+        }
+    }
+
+    /// Derive search hints for `base` on `platform`: the top-k traces as a
+    /// [`WarmStart`], plus a [`MeasureCache`] pre-populated with every
+    /// record's measured latency (keyed by the fingerprint of the program
+    /// the trace replays to). Traces that no longer replay fully on `base`
+    /// are dropped — records never poison a structurally drifted program.
+    pub fn hints(&self, base: &Program, platform: &str, k: usize) -> (WarmStart, MeasureCache) {
+        let fp = workload_fingerprint(base);
+        let mut warm = WarmStart::default();
+        let mut cache = MeasureCache::new();
+        let base_sched = Schedule::new(base.clone());
+        for rec in self.top_k(fp, platform, k) {
+            let (replayed, applied) = base_sched.apply_all(&rec.trace);
+            if applied != rec.trace.len() {
+                continue;
+            }
+            // Distinct traces can replay to the same concrete program; keep
+            // the best latency per fingerprint rather than last-write-wins,
+            // so a worse duplicate never masks the recorded optimum.
+            let pfp = program_fingerprint(&replayed.current);
+            if cache.get(pfp, platform).map_or(true, |known| rec.latency < known) {
+                cache.insert(pfp, platform, rec.latency);
+            }
+            warm.entries.push((rec.trace.clone(), rec.latency));
+        }
+        (warm, cache)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tir::workload::WorkloadId;
+
+    fn temp_db_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "rcc_db_{tag}_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    fn rec(fp: u64, platform: &str, latency: f64, factor: i64) -> TuningRecord {
+        TuningRecord {
+            workload_fp: fp,
+            workload: "deepseek_moe".to_string(),
+            platform: platform.to_string(),
+            strategy: "test".to_string(),
+            trace: vec![Transform::TileSize { stage: 0, loop_idx: 2, factor }],
+            latency,
+            baseline_latency: 10.0,
+            seed: 1,
+            timestamp: 100,
+        }
+    }
+
+    #[test]
+    fn open_commit_reopen_roundtrip() {
+        let path = temp_db_path("roundtrip");
+        let mut db = Database::open(&path).unwrap();
+        assert!(db.is_empty());
+        db.add(rec(42, "core_i9", 2.0, 4));
+        db.add(rec(42, "core_i9", 1.0, 8));
+        assert_eq!(db.commit().unwrap(), 2);
+        assert_eq!(db.commit().unwrap(), 0, "second commit flushes nothing");
+        db.add(rec(42, "m2_pro", 3.0, 16));
+        assert_eq!(db.commit().unwrap(), 1);
+
+        let db2 = Database::open(&path).unwrap();
+        assert_eq!(db2.len(), 3);
+        assert_eq!(db2.records()[1], db.records()[1]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn top_k_orders_by_latency_and_dedups() {
+        let mut db = Database::in_memory();
+        db.add(rec(7, "core_i9", 5.0, 4));
+        db.add(rec(7, "core_i9", 2.0, 8));
+        db.add(rec(7, "core_i9", 2.5, 8)); // same trace, worse: deduped
+        db.add(rec(7, "xeon_e3", 1.0, 8)); // other platform
+        db.add(rec(8, "core_i9", 0.5, 8)); // other workload
+        let top = db.top_k(7, "core_i9", 10);
+        assert_eq!(top.len(), 2);
+        assert_eq!(top[0].latency, 2.0, "lowest latency first");
+        assert_eq!(db.best(7, "core_i9").unwrap().latency, 2.0);
+        assert!(db.best(9, "core_i9").is_none());
+    }
+
+    #[test]
+    fn top_k_ignores_cross_run_baseline_noise() {
+        // A record with a noisier (higher) baseline shows a higher speedup
+        // but a slower latency; latency must win within a fixed pair.
+        let mut db = Database::in_memory();
+        let mut a = rec(7, "core_i9", 2.0, 4);
+        a.baseline_latency = 11.5; // 5.75x
+        let mut b = rec(7, "core_i9", 1.8, 8);
+        b.baseline_latency = 9.0; // 5.0x
+        db.add(a);
+        db.add(b);
+        assert_eq!(db.best(7, "core_i9").unwrap().latency, 1.8);
+    }
+
+    #[test]
+    fn malformed_lines_skipped_not_fatal() {
+        let path = temp_db_path("malformed");
+        let good = rec(1, "core_i9", 1.0, 4);
+        std::fs::write(
+            &path,
+            format!("{}\nnot json at all\n{{\"op\":1}}\n", good.to_jsonl()),
+        )
+        .unwrap();
+        let db = Database::open(&path).unwrap();
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.skipped_lines, 2);
+        assert_eq!(db.stats().skipped_lines, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn hints_replay_and_prepopulate_cache() {
+        let base = WorkloadId::DeepSeekMoe.build();
+        let fp = workload_fingerprint(&base);
+        let mut db = Database::in_memory();
+        db.add(TuningRecord {
+            workload_fp: fp,
+            workload: base.name.clone(),
+            platform: "core_i9".to_string(),
+            strategy: "test".to_string(),
+            trace: vec![
+                Transform::TileSize { stage: 0, loop_idx: 2, factor: 64 },
+                Transform::Parallel { stage: 0, loop_idx: 0 },
+            ],
+            latency: 0.004,
+            baseline_latency: 0.02,
+            seed: 3,
+            timestamp: 1,
+        });
+        // A record whose trace cannot replay (bad loop index): dropped.
+        db.add(TuningRecord {
+            workload_fp: fp,
+            workload: base.name.clone(),
+            platform: "core_i9".to_string(),
+            strategy: "test".to_string(),
+            trace: vec![Transform::TileSize { stage: 0, loop_idx: 99, factor: 2 }],
+            latency: 0.001,
+            baseline_latency: 0.02,
+            seed: 4,
+            timestamp: 2,
+        });
+        let (warm, cache) = db.hints(&base, "core_i9", 8);
+        assert_eq!(warm.entries.len(), 1, "non-replayable record dropped");
+        assert_eq!(cache.len(), 1);
+        // The cache key is the fingerprint of the replayed program.
+        let sched = Schedule::new(base.clone());
+        let (replayed, _) = sched.apply_all(&warm.entries[0].0);
+        assert_eq!(
+            cache.get(program_fingerprint(&replayed.current), "core_i9"),
+            Some(0.004)
+        );
+        // Hints for an unrelated platform are empty.
+        let (warm2, cache2) = db.hints(&base, "graviton2", 8);
+        assert!(warm2.is_empty());
+        assert!(cache2.is_empty());
+    }
+
+    #[test]
+    fn best_for_workload_spans_platforms() {
+        let mut db = Database::in_memory();
+        db.add(rec(7, "core_i9", 5.0, 4));
+        db.add(rec(7, "m2_pro", 2.0, 8));
+        let b = db.best_for_workload("deepseek_moe").unwrap();
+        assert_eq!(b.platform, "m2_pro");
+        assert!(db.best_for_workload("nope").is_none());
+        // Within a platform, a noisy-baseline record with higher speedup
+        // but worse latency must not displace the latency-best one.
+        let mut noisy = rec(7, "m2_pro", 2.5, 4);
+        noisy.baseline_latency = 20.0; // 8x "speedup", slower schedule
+        db.add(noisy);
+        assert_eq!(db.best_for_workload("deepseek_moe").unwrap().latency, 2.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Structural fingerprints over TIR programs.
+//!
+//! Two fingerprints with different invariances power the tuning database:
+//!
+//! - [`workload_fingerprint`] hashes only the *computation* — buffer shapes,
+//!   iteration axes and the compute block — and deliberately ignores names
+//!   and the current loop nest. Two programs with identical structure (e.g.
+//!   the same MoE matmul built under different names) share a fingerprint,
+//!   so tuning records transfer across identically-shaped programs.
+//! - [`program_fingerprint`] extends the workload fingerprint with the
+//!   *schedule state*: the current loop nest, axis-reconstruction
+//!   expressions and performance annotations. Two schedule candidates that
+//!   produce the same concrete program share a fingerprint, which is what
+//!   makes the measurement cache sound — equal fingerprint ⇒ the hardware
+//!   model would return the same latency distribution.
+//!
+//! Both are 64-bit FNV-1a-style hashes with per-field tags to keep
+//! structurally different programs from colliding through commutativity.
+
+use crate::tir::expr::{Expr, LinIdx};
+use crate::tir::program::{BlockExpr, Program, Stage};
+
+/// Incremental FNV-1a-style hasher over tagged integer fields.
+#[derive(Debug, Clone)]
+pub struct StructHasher {
+    h: u64,
+}
+
+impl Default for StructHasher {
+    fn default() -> Self {
+        StructHasher { h: 0xcbf29ce484222325 }
+    }
+}
+
+impl StructHasher {
+    pub fn new() -> StructHasher {
+        StructHasher::default()
+    }
+
+    #[inline]
+    pub fn feed(&mut self, x: u64) {
+        self.h ^= x;
+        self.h = self.h.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    pub fn feed_i64(&mut self, x: i64) {
+        self.feed(x as u64);
+    }
+
+    /// Field tag: keeps `[2, 3]` from colliding with `[3, 2]`-shaped feeds
+    /// of a different field.
+    #[inline]
+    pub fn tag(&mut self, t: u64) {
+        self.feed(0x9E37_79B9_7F4A_7C15 ^ t);
+    }
+
+    pub fn finish(&self) -> u64 {
+        // Final avalanche (splitmix64 tail) so nearby inputs spread.
+        let mut z = self.h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+fn feed_linidx(h: &mut StructHasher, idx: &LinIdx) {
+    h.tag(10);
+    h.feed_i64(idx.offset);
+    for &(axis, coeff) in &idx.terms {
+        h.feed(axis as u64);
+        h.feed_i64(coeff);
+    }
+}
+
+fn feed_block_expr(h: &mut StructHasher, e: &BlockExpr) {
+    match e {
+        BlockExpr::Load(buf, idx) => {
+            h.tag(20);
+            h.feed(*buf as u64);
+            for i in idx {
+                feed_linidx(h, i);
+            }
+        }
+        BlockExpr::Const(c) => {
+            h.tag(21);
+            h.feed(c.to_bits() as u64);
+        }
+        BlockExpr::Add(a, b) => {
+            h.tag(22);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Sub(a, b) => {
+            h.tag(23);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Mul(a, b) => {
+            h.tag(24);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Max(a, b) => {
+            h.tag(25);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+    }
+}
+
+fn feed_expr(h: &mut StructHasher, e: &Expr) {
+    match e {
+        Expr::Var(v) => {
+            h.tag(30);
+            h.feed(*v as u64);
+        }
+        Expr::Const(c) => {
+            h.tag(31);
+            h.feed_i64(*c);
+        }
+        Expr::Add(a, b) => {
+            h.tag(32);
+            feed_expr(h, a);
+            feed_expr(h, b);
+        }
+        Expr::Mul(a, k) => {
+            h.tag(33);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+        Expr::Div(a, k) => {
+            h.tag(34);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+        Expr::Mod(a, k) => {
+            h.tag(35);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+    }
+}
+
+/// Feed the schedule-invariant structure of one stage.
+fn feed_stage_structure(h: &mut StructHasher, s: &Stage) {
+    h.tag(2);
+    for a in &s.axes {
+        h.feed_i64(a.extent);
+        h.feed(a.is_reduction as u64 + 1);
+    }
+    h.tag(3);
+    h.feed(s.block.out as u64);
+    for idx in &s.block.out_idx {
+        feed_linidx(h, idx);
+    }
+    feed_block_expr(h, &s.block.rhs);
+    h.feed(s.block.reduce as u64 + 1);
+}
+
+/// Canonical hash of the computation's structure: buffers, axes and compute
+/// blocks. Invariant to program/stage/buffer *names* and to the current
+/// loop nest, so records keyed by it transfer across identically-shaped
+/// programs and across schedule states.
+pub fn workload_fingerprint(p: &Program) -> u64 {
+    let mut h = StructHasher::new();
+    h.tag(1);
+    for b in &p.buffers {
+        h.feed(b.kind as u64 + 1);
+        h.feed(b.shape.len() as u64);
+        for &d in &b.shape {
+            h.feed_i64(d);
+        }
+    }
+    for s in &p.stages {
+        feed_stage_structure(&mut h, s);
+    }
+    h.finish()
+}
+
+/// Hash of the *scheduled* program: the workload structure plus the current
+/// loop nest (extents, annotations, axis-reconstruction expressions) and
+/// performance annotations. Distinguishes different tile sizes, loop
+/// orders, fusions and annotations on the same workload — the key for the
+/// measurement cache.
+pub fn program_fingerprint(p: &Program) -> u64 {
+    let mut h = StructHasher::new();
+    h.tag(1);
+    for b in &p.buffers {
+        h.feed(b.kind as u64 + 1);
+        h.feed(b.shape.len() as u64);
+        for &d in &b.shape {
+            h.feed_i64(d);
+        }
+    }
+    for s in &p.stages {
+        feed_stage_structure(&mut h, s);
+        h.tag(4);
+        for l in &s.loops {
+            h.feed_i64(l.extent);
+            h.feed(l.kind as u64 + 1);
+            h.feed(l.var as u64);
+        }
+        h.tag(5);
+        for e in &s.axis_exprs {
+            feed_expr(&mut h, e);
+        }
+        h.feed(s.cache_write as u64 + 17);
+        h.feed(s.compute_at.map(|d| d as u64 + 1).unwrap_or(0));
+    }
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{Schedule, Transform};
+    use crate::tir::workload::{self, WorkloadId};
+
+    #[test]
+    fn workload_fingerprint_stable_and_name_invariant() {
+        let a = WorkloadId::DeepSeekMoe.build();
+        let b = WorkloadId::DeepSeekMoe.build();
+        assert_eq!(workload_fingerprint(&a), workload_fingerprint(&b));
+        // Same structure under a different name: identical fingerprint.
+        let renamed = workload::moe_matmul("totally_different_name", 16, 2048, 7168);
+        assert_eq!(workload_fingerprint(&a), workload_fingerprint(&renamed));
+    }
+
+    #[test]
+    fn workload_fingerprint_distinguishes_shapes_and_kernels() {
+        let fps: Vec<u64> = WorkloadId::ALL
+            .iter()
+            .map(|w| workload_fingerprint(&w.build()))
+            .collect();
+        for i in 0..fps.len() {
+            for j in (i + 1)..fps.len() {
+                assert_ne!(fps[i], fps[j], "workloads {i} and {j} collide");
+            }
+        }
+        // Test-scale shapes differ from production shapes.
+        assert_ne!(
+            workload_fingerprint(&WorkloadId::DeepSeekMoe.build()),
+            workload_fingerprint(&WorkloadId::DeepSeekMoe.build_test())
+        );
+    }
+
+    #[test]
+    fn workload_fingerprint_invariant_under_scheduling() {
+        let base = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let tiled = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 64 })
+            .unwrap()
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        assert_eq!(
+            workload_fingerprint(&base.current),
+            workload_fingerprint(&tiled.current),
+            "scheduling must not change the workload fingerprint"
+        );
+    }
+
+    #[test]
+    fn program_fingerprint_distinguishes_tile_sizes() {
+        let base = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let t4 = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap();
+        let t8 = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 8 })
+            .unwrap();
+        assert_ne!(program_fingerprint(&base.current), program_fingerprint(&t4.current));
+        assert_ne!(program_fingerprint(&t4.current), program_fingerprint(&t8.current));
+        // Same transform sequence reproduces the same fingerprint.
+        let t4b = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap();
+        assert_eq!(program_fingerprint(&t4.current), program_fingerprint(&t4b.current));
+    }
+
+    #[test]
+    fn program_fingerprint_distinguishes_annotations() {
+        let base = Schedule::new(WorkloadId::Llama4Mlp.build());
+        let par = base.apply(Transform::Parallel { stage: 0, loop_idx: 0 }).unwrap();
+        let cw = base.apply(Transform::CacheWrite { stage: 0 }).unwrap();
+        let fps = [
+            program_fingerprint(&base.current),
+            program_fingerprint(&par.current),
+            program_fingerprint(&cw.current),
+        ];
+        assert_ne!(fps[0], fps[1]);
+        assert_ne!(fps[0], fps[2]);
+        assert_ne!(fps[1], fps[2]);
+    }
+}

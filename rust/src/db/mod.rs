@@ -1,0 +1,35 @@
+//! Persistent tuning-record database + measurement cache.
+//!
+//! The paper's central claim is sample efficiency: every hardware
+//! measurement is expensive, so accumulated performance feedback must never
+//! be thrown away. This subsystem makes that feedback durable and reusable
+//! across processes:
+//!
+//! - [`fingerprint`] — structural hashes over TIR: a *workload* fingerprint
+//!   (schedule-invariant, name-invariant — the database key) and a
+//!   *program* fingerprint (schedule-sensitive — the measurement-cache
+//!   key).
+//! - [`record`] — [`TuningRecord`]: one (trace, cost, provenance) data
+//!   point, serialized as one JSONL line.
+//! - [`database`] — [`Database`]: the append-only JSONL store with top-k
+//!   lookup, stats, and [`Database::hints`], which turns records into a
+//!   [`WarmStart`] + pre-populated [`MeasureCache`] for a search run.
+//! - [`cache`] — [`MeasureCache`]: (program fingerprint, platform) →
+//!   latency, consulted by `search::Evaluator` before consuming a sample
+//!   (the evaluator owns the hit/miss accounting).
+//!
+//! The flow: `coordinator::tuner` opens the database per session, derives
+//! hints, hands them to `search::{mcts, evolutionary}` (which seed their
+//! frontier/population and skip re-measuring known programs), then commits
+//! each run's best trace back. `coordinator::server` reads the same
+//! database to annotate served models with their best-known schedules.
+
+pub mod cache;
+pub mod database;
+pub mod fingerprint;
+pub mod record;
+
+pub use cache::MeasureCache;
+pub use database::{Database, DbStats, WarmStart};
+pub use fingerprint::{program_fingerprint, workload_fingerprint};
+pub use record::TuningRecord;

@@ -1,0 +1,241 @@
+//! Tuning records and their JSONL wire format.
+//!
+//! One [`TuningRecord`] is one proven data point: "this transformation
+//! trace, applied to the workload with this structural fingerprint, costs
+//! this much on this platform". Records carry full provenance (strategy,
+//! seed, timestamp) so `rcc db top` can answer *where a schedule came from*,
+//! and serialize one-per-line (JSONL) so the database file is append-only
+//! and partially-written tails never corrupt earlier records.
+//!
+//! Transforms are stored structurally (`{"op": "TileSize", "stage": 0,
+//! "loop": 2, "factor": 64}`), not as rendered prompt text — the format the
+//! proposal parser accepts can drift; this codec cannot.
+
+use crate::schedule::Transform;
+use crate::util::json::{arr, num, s, Json};
+
+/// One persisted measurement: a trace, its cost, and provenance.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TuningRecord {
+    /// Structural workload fingerprint (see `db::fingerprint`).
+    pub workload_fp: u64,
+    /// Human-readable workload name at record time (informational; lookups
+    /// key on the fingerprint).
+    pub workload: String,
+    /// Platform descriptor name (`core_i9`, ...).
+    pub platform: String,
+    /// Search strategy that found the trace (`mcts[llm[...]]`, ...).
+    pub strategy: String,
+    /// The transformation trace, replayable on any program with a matching
+    /// workload fingerprint.
+    pub trace: Vec<Transform>,
+    /// Measured latency (seconds) of the traced program on the platform's
+    /// hardware model.
+    pub latency: f64,
+    /// Baseline (untransformed) latency measured in the same run.
+    pub baseline_latency: f64,
+    /// Search seed, for reproducing the run.
+    pub seed: u64,
+    /// Unix timestamp (seconds) when the record was created.
+    pub timestamp: u64,
+}
+
+impl TuningRecord {
+    pub fn speedup(&self) -> f64 {
+        self.baseline_latency / self.latency
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj();
+        doc.set("workload_fp", s(&format!("{:016x}", self.workload_fp)))
+            .set("workload", s(&self.workload))
+            .set("platform", s(&self.platform))
+            .set("strategy", s(&self.strategy))
+            .set(
+                "trace",
+                arr(self.trace.iter().map(transform_to_json).collect()),
+            )
+            .set("latency", num(self.latency))
+            .set("baseline_latency", num(self.baseline_latency))
+            // Seeds are full u64s ("for reproducing the run"); JSON numbers
+            // are f64 and lose integers above 2^53, so encode as a decimal
+            // string like workload_fp. Timestamps fit f64 comfortably.
+            .set("seed", s(&self.seed.to_string()))
+            .set("timestamp", num(self.timestamp as f64));
+        doc
+    }
+
+    /// One JSONL line (compact, no interior newlines).
+    pub fn to_jsonl(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(doc: &Json) -> Option<TuningRecord> {
+        let get_s = |k: &str| doc.get(k).and_then(|v| v.as_str());
+        let get_n = |k: &str| doc.get(k).and_then(|v| v.as_f64());
+        let workload_fp = u64::from_str_radix(get_s("workload_fp")?, 16).ok()?;
+        let trace = doc
+            .get("trace")?
+            .as_arr()?
+            .iter()
+            .map(transform_from_json)
+            .collect::<Option<Vec<_>>>()?;
+        Some(TuningRecord {
+            workload_fp,
+            workload: get_s("workload")?.to_string(),
+            platform: get_s("platform")?.to_string(),
+            strategy: get_s("strategy")?.to_string(),
+            trace,
+            latency: get_n("latency")?,
+            baseline_latency: get_n("baseline_latency")?,
+            seed: get_s("seed")?.parse().ok()?,
+            timestamp: get_n("timestamp")? as u64,
+        })
+    }
+
+    pub fn from_jsonl(line: &str) -> Option<TuningRecord> {
+        Self::from_json(&Json::parse(line.trim())?)
+    }
+}
+
+/// Structural JSON encoding of one transform.
+pub fn transform_to_json(t: &Transform) -> Json {
+    let mut o = Json::obj();
+    o.set("op", s(t.op_name()));
+    match t {
+        Transform::TileSize { stage, loop_idx, factor } => {
+            o.set("stage", num(*stage as f64))
+                .set("loop", num(*loop_idx as f64))
+                .set("factor", num(*factor as f64));
+        }
+        Transform::Reorder { stage, perm } => {
+            o.set("stage", num(*stage as f64)).set(
+                "perm",
+                arr(perm.iter().map(|&i| num(i as f64)).collect()),
+            );
+        }
+        Transform::Fuse { stage, loop_idx }
+        | Transform::Parallel { stage, loop_idx }
+        | Transform::Vectorize { stage, loop_idx }
+        | Transform::Unroll { stage, loop_idx } => {
+            o.set("stage", num(*stage as f64))
+                .set("loop", num(*loop_idx as f64));
+        }
+        Transform::ComputeLocation { stage, depth } => {
+            o.set("stage", num(*stage as f64))
+                .set("depth", num(*depth as f64));
+        }
+        Transform::CacheWrite { stage } => {
+            o.set("stage", num(*stage as f64));
+        }
+    }
+    o
+}
+
+/// Decode one transform; `None` on unknown ops or missing fields.
+pub fn transform_from_json(j: &Json) -> Option<Transform> {
+    let op = j.get("op")?.as_str()?;
+    let get_u = |k: &str| j.get(k).and_then(|v| v.as_f64()).map(|x| x as usize);
+    let stage = get_u("stage")?;
+    Some(match op {
+        "TileSize" => Transform::TileSize {
+            stage,
+            loop_idx: get_u("loop")?,
+            factor: j.get("factor")?.as_f64()? as i64,
+        },
+        "Reorder" => Transform::Reorder {
+            stage,
+            perm: j
+                .get("perm")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_f64().map(|x| x as usize))
+                .collect::<Option<Vec<_>>>()?,
+        },
+        "Fuse" => Transform::Fuse { stage, loop_idx: get_u("loop")? },
+        "Parallel" => Transform::Parallel { stage, loop_idx: get_u("loop")? },
+        "Vectorize" => Transform::Vectorize { stage, loop_idx: get_u("loop")? },
+        "Unroll" => Transform::Unroll { stage, loop_idx: get_u("loop")? },
+        "ComputeLocation" => Transform::ComputeLocation { stage, depth: get_u("depth")? },
+        "CacheWrite" => Transform::CacheWrite { stage },
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_transform_shapes() -> Vec<Transform> {
+        vec![
+            Transform::TileSize { stage: 0, loop_idx: 2, factor: 64 },
+            Transform::Reorder { stage: 1, perm: vec![2, 0, 1] },
+            Transform::Fuse { stage: 0, loop_idx: 1 },
+            Transform::Parallel { stage: 0, loop_idx: 0 },
+            Transform::Vectorize { stage: 2, loop_idx: 3 },
+            Transform::Unroll { stage: 0, loop_idx: 4 },
+            Transform::ComputeLocation { stage: 0, depth: 2 },
+            Transform::CacheWrite { stage: 1 },
+        ]
+    }
+
+    #[test]
+    fn transform_codec_roundtrips_every_op() {
+        for t in all_transform_shapes() {
+            let j = transform_to_json(&t);
+            let back = transform_from_json(&j).unwrap_or_else(|| panic!("decode {t:?}"));
+            assert_eq!(t, back);
+        }
+    }
+
+    #[test]
+    fn record_jsonl_roundtrip() {
+        let rec = TuningRecord {
+            workload_fp: 0xDEAD_BEEF_0123_4567,
+            workload: "deepseek_moe".to_string(),
+            platform: "core_i9".to_string(),
+            strategy: "mcts[random]".to_string(),
+            trace: all_transform_shapes(),
+            latency: 1.25e-3,
+            baseline_latency: 7.5e-3,
+            seed: 42,
+            timestamp: 1_753_000_000,
+        };
+        let line = rec.to_jsonl();
+        assert!(!line.contains('\n'), "JSONL lines must be single-line");
+        let back = TuningRecord::from_jsonl(&line).unwrap();
+        assert_eq!(rec, back);
+        assert!((back.speedup() - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn large_fingerprints_survive_serialization() {
+        // u64 fingerprints exceed f64's 53-bit integer range; the hex-string
+        // encoding must preserve every bit.
+        let rec = TuningRecord {
+            workload_fp: u64::MAX - 1,
+            workload: "w".to_string(),
+            platform: "p".to_string(),
+            strategy: "s".to_string(),
+            trace: vec![],
+            latency: 1.0,
+            baseline_latency: 2.0,
+            seed: u64::MAX,
+            timestamp: 0,
+        };
+        let back = TuningRecord::from_jsonl(&rec.to_jsonl()).unwrap();
+        assert_eq!(back.workload_fp, u64::MAX - 1);
+        assert_eq!(back.seed, u64::MAX, "seed must survive beyond 2^53");
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(TuningRecord::from_jsonl("{not json").is_none());
+        assert!(TuningRecord::from_jsonl("{}").is_none());
+        assert!(TuningRecord::from_jsonl(
+            r#"{"workload_fp":"zz","workload":"w","platform":"p","strategy":"s","trace":[],"latency":1,"baseline_latency":1,"seed":0,"timestamp":0}"#
+        )
+        .is_none());
+        assert!(transform_from_json(&Json::parse(r#"{"op":"Nope","stage":0}"#).unwrap()).is_none());
+    }
+}

@@ -17,10 +17,14 @@
 //! - [`cost`] — feature extraction, the analytical rollout surrogate f-hat
 //!   and the per-platform hardware simulator f.
 //! - [`search`] — MCTS with UCT and the TVM-style Evolutionary Search
-//!   baseline.
+//!   baseline, both warm-startable from the tuning database and backed by
+//!   the measurement cache.
 //! - [`reasoning`] — the paper's contribution: prompt construction,
 //!   proposal parsing/validation with fallback, simulated LLM model
 //!   profiles and API cost tracking.
+//! - [`db`] — the persistent tuning-record database: structural workload/
+//!   program fingerprints, JSONL tuning records with provenance, the
+//!   measurement cache, and warm-start hints derived from past runs.
 //! - [`coordinator`] — tuning sessions, config system, serving loop.
 //! - [`runtime`] — PJRT execution of the AOT artifacts produced by the
 //!   Python build path (`python/compile/aot.py`).
@@ -32,6 +36,7 @@ pub mod schedule;
 pub mod cost;
 pub mod search;
 pub mod reasoning;
+pub mod db;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

@@ -9,8 +9,9 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use reasoning_compiler::coordinator::{
-    run_e2e, run_session, Registry, Server, ServerConfig, Strategy, TuneConfig,
+    run_e2e, run_session, Registry, Server, ServerConfig, Strategy, TuneConfig, DEFAULT_DB_PATH,
 };
+use reasoning_compiler::db::{workload_fingerprint, Database};
 use reasoning_compiler::cost::{features, Platform};
 use reasoning_compiler::reasoning::{self, ModelProfile, PromptContext};
 use reasoning_compiler::report::{ablations, costs, figure3, platforms, Scale};
@@ -25,12 +26,19 @@ rcc — REASONING COMPILER (NeurIPS 2025 reproduction)
 USAGE: rcc <command> [--key value] [--flag]
 
 Tuning
-  tune        Run one tuning session.
+  tune        Run one tuning session. Persists records to the tuning
+              database (results/tuning_db.jsonl) and warm-starts from it.
               --strategy es|mcts|rc --workload NAME --platform NAME
               --budget N --repeats N --seed N --model NAME
               --history-depth N --branching N [--config FILE]
+              --db FILE | --no-db  --no-warm-start --warm-top-k N
   compare     Run all three strategies head-to-head on one benchmark.
   e2e         Tune the end-to-end Llama-3-8B task set.
+
+Tuning database
+  db stats    Aggregate stats of the tuning-record database. [--db FILE]
+  db top      Best recorded schedules for one (workload, platform).
+              --workload NAME --platform NAME [--k N] [--db FILE]
 
 Paper experiments (each accepts --scale smoke|default|full, --seed, --out DIR)
   figure3     Fig. 3 / Table 3 convergence curves
@@ -49,8 +57,9 @@ Registry
               --workload NAME --platform NAME
 
 Serving & inspection
-  serve       Dynamic-batching serving demo over the AOT artifacts.
-              --requests N --max-batch N
+  serve       Dynamic-batching serving demo over the AOT artifacts,
+              annotated with best-known schedules from the tuning db.
+              --requests N --max-batch N [--db FILE]
   artifacts   List + smoke-run the AOT artifacts.
   show        Print a workload's TIR. --workload NAME
   prompt      Print a real optimization prompt + simulated LLM response.
@@ -74,6 +83,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "tune" => cmd_tune(args),
+        "db" => cmd_db(args),
         "history" => cmd_history(),
         "best" => cmd_best(args),
         "compare" => cmd_compare(args),
@@ -121,7 +131,12 @@ fn config_from(args: &Args) -> Result<TuneConfig> {
 }
 
 fn cmd_tune(args: &Args) -> Result<()> {
-    let cfg = config_from(args)?;
+    let mut cfg = config_from(args)?;
+    // The CLI persists to the conventional database location unless the
+    // user opts out; library callers stay db-less by default.
+    if cfg.db_path.is_none() && !args.has_flag("no-db") {
+        cfg.db_path = Some(DEFAULT_DB_PATH.to_string());
+    }
     println!(
         "tuning {} on {} with {} (budget {}, {} repeats)...",
         cfg.workload,
@@ -130,11 +145,18 @@ fn cmd_tune(args: &Args) -> Result<()> {
         cfg.budget,
         cfg.repeats
     );
-    let session = run_session(&cfg);
+    let session = run_session(&cfg)?;
     println!(
         "mean best speedup: {:.2}x over pre-optimized code",
         session.mean_speedup()
     );
+    if let Some(db) = &cfg.db_path {
+        println!(
+            "tuning db {db}: {} cache hits, {} hardware samples across repeats",
+            session.total_cache_hits(),
+            session.total_samples()
+        );
+    }
     for c in [18usize, 36, 72, 150] {
         if c <= cfg.budget {
             println!("  speedup@{c:<4} = {:.2}x", session.mean_speedup_at(c));
@@ -188,7 +210,7 @@ fn cmd_compare(args: &Args) -> Result<()> {
             },
             ..base_cfg.clone()
         };
-        let s = run_session(&cfg);
+        let s = run_session(&cfg)?;
         println!(
             "{:<22} {:>10} {:>11.2}x {:>11.2}x {:>11.2}x",
             strategy.display(),
@@ -210,7 +232,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         cfg.platform,
         cfg.strategy.display()
     );
-    let r = run_e2e(&tasks, &cfg);
+    let r = run_e2e(&tasks, &cfg)?;
     for (name, session) in &r.tasks {
         println!("  {:<18} {:.2}x", name, session.mean_speedup());
     }
@@ -297,9 +319,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch
     );
     let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+    // Annotate served models with their best-known tuned schedules. A
+    // missing db is only acceptable when the path is the implicit default;
+    // an explicit --db that doesn't exist is a user error, not a no-op.
+    let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
+    if args.opt("db").is_some() && !db_path.exists() {
+        return Err(anyhow!("tuning db {} does not exist", db_path.display()));
+    }
+    if db_path.exists() {
+        let db = Database::open(&db_path)?;
+        let matched = server.attach_tuning_db(&db);
+        println!(
+            "\ntuning db {} ({} records, {matched} served models matched):",
+            db_path.display(),
+            db.len()
+        );
+        print!("{}", server.schedule_summary());
+    }
     server.run_synthetic(requests, args.opt_u64("seed", 1))?;
     println!("\n{}", server.metrics.report());
     Ok(())
+}
+
+fn cmd_db(args: &Args) -> Result<()> {
+    let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("stats");
+    let db = Database::open(&db_path)?;
+    match action {
+        "stats" => {
+            println!("tuning db {}:", db_path.display());
+            println!("{}", db.stats().render());
+            Ok(())
+        }
+        "top" => {
+            let workload = args.opt_or("workload", "deepseek_moe");
+            let platform = args.opt_or("platform", "core_i9");
+            let k = args.opt_usize("k", 10);
+            let w = WorkloadId::from_name(workload)
+                .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+            let base = w.build();
+            let fp = workload_fingerprint(&base);
+            let top = db.top_k(fp, platform, k);
+            if top.is_empty() {
+                println!(
+                    "no records for {workload}/{platform} in {} (run `rcc tune` first)",
+                    db_path.display()
+                );
+                return Ok(());
+            }
+            println!(
+                "top {} records for {workload}/{platform} (fingerprint {fp:016x}):",
+                top.len()
+            );
+            println!(
+                "{:<16} {:>9} {:>7} {:>6} {:<12}",
+                "strategy", "speedup", "trace", "seed", "recorded"
+            );
+            for r in &top {
+                println!(
+                    "{:<16} {:>8.2}x {:>7} {:>6} @{}",
+                    r.strategy,
+                    r.speedup(),
+                    r.trace.len(),
+                    r.seed,
+                    r.timestamp
+                );
+            }
+            // Replay the best trace so `db top` doubles as a health check.
+            let best = top[0];
+            let sched = Schedule::new(base);
+            let (replayed, applied) = sched.apply_all(&best.trace);
+            anyhow::ensure!(
+                applied == best.trace.len(),
+                "best record's trace no longer replays on {workload}"
+            );
+            println!("\nbest trace:\n{}", replayed.render_trace());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown db action {other:?}; use `db stats` or `db top`")),
+    }
 }
 
 fn cmd_artifacts() -> Result<()> {

@@ -28,7 +28,7 @@ const ABLATION_WORKLOADS: [WorkloadId; 4] = [
 ];
 
 fn curve(cfg: &TuneConfig, checkpoints: &[usize]) -> Vec<f64> {
-    let session = run_session(cfg);
+    let session = run_session(cfg).expect("tuning session");
     checkpoints
         .iter()
         .map(|&c| session.mean_speedup_at(c))

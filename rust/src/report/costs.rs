@@ -39,7 +39,7 @@ pub fn table7(scale: Scale, seed: u64) -> CostReport {
                 model: model.name.to_string(),
                 ..Default::default()
             };
-            let session = run_session(&cfg);
+            let session = run_session(&cfg).expect("tuning session");
             // Cost of ONE full experiment = total cost / repeats.
             let cost = session.llm_costs.usd(model) / cfg.repeats as f64;
             row.push(usd(cost));
@@ -75,7 +75,7 @@ pub fn table8(scale: Scale, seed: u64) -> CostReport {
             model: model.name.to_string(),
             ..Default::default()
         };
-        let session = run_session(&cfg);
+        let session = run_session(&cfg).expect("tuning session");
         let rate = session.llm_fallback_rate;
         t.row(vec![
             model.display.to_string(),

@@ -47,7 +47,7 @@ pub fn run(scale: Scale, seed: u64) -> Figure3 {
                 seed,
                 ..Default::default()
             };
-            let session = run_session(&cfg);
+            let session = run_session(&cfg).expect("tuning session");
             let speeds: Vec<f64> = checkpoints
                 .iter()
                 .map(|&c| session.mean_speedup_at(c))

@@ -60,12 +60,14 @@ fn run_pair(workload: &str, platform: &str, scale: Scale, seed: u64) -> PairOutc
         strategy: Strategy::Evolutionary,
         budget: scale.es_budget(),
         ..base.clone()
-    });
+    })
+    .expect("tuning session");
     let rc = run_session(&TuneConfig {
         strategy: Strategy::LlmMcts,
         budget: scale.rc_budget(),
         ..base
-    });
+    })
+    .expect("tuning session");
     PairOutcome {
         es_samples: convergence_samples(&es),
         es_speedup: es.mean_speedup(),
@@ -184,8 +186,10 @@ pub fn table2(scale: Scale, seed: u64) -> PlatformReport {
             ..Default::default()
         };
         // Whole-model budgets: tasks share the budget inside run_e2e.
-        let es = run_e2e(&tasks, &mk(Strategy::Evolutionary, scale.es_budget() * 2));
-        let rc = run_e2e(&tasks, &mk(Strategy::LlmMcts, scale.rc_budget() * 2));
+        let es = run_e2e(&tasks, &mk(Strategy::Evolutionary, scale.es_budget() * 2))
+            .expect("e2e tuning");
+        let rc = run_e2e(&tasks, &mk(Strategy::LlmMcts, scale.rc_budget() * 2))
+            .expect("e2e tuning");
         let (es_n, rc_n) = (es.total_samples as f64, rc.total_samples as f64);
         let reduction = es_n / rc_n.max(1.0);
         let gain = (rc.weighted_speedup / rc_n.max(1.0)) / (es.weighted_speedup / es_n.max(1.0));

@@ -4,27 +4,16 @@
 //! `python/compile/aot.py`; executables run with f32 literal inputs. This
 //! is the only place the process touches XLA — Python never runs at serve
 //! time.
-
-use std::collections::BTreeMap;
-use std::time::Instant;
-
-use anyhow::{Context, Result};
+//!
+//! The native XLA library is not available everywhere the search/tuning
+//! stack needs to build, so the real client lives behind the `xla` cargo
+//! feature. Without it, [`Runtime::cpu`] returns a descriptive error and
+//! everything that gates on artifact discovery (tests, serving demos)
+//! skips gracefully.
 
 use crate::util::rng::Pcg;
 
-use super::artifacts::{ArtifactSpec, Manifest};
-
-/// A loaded, compiled artifact ready to execute.
-pub struct Executable {
-    pub spec: ArtifactSpec,
-    exe: xla::PjRtLoadedExecutable,
-}
-
-/// The PJRT runtime: one CPU client + a cache of compiled artifacts.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    loaded: BTreeMap<String, Executable>,
-}
+use super::artifacts::ArtifactSpec;
 
 /// Result of one execution.
 #[derive(Debug, Clone)]
@@ -34,97 +23,186 @@ pub struct ExecOutput {
     pub latency_s: f64,
 }
 
-impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, loaded: BTreeMap::new() })
-    }
-
-    pub fn platform_name(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (and cache) one artifact from the manifest.
-    pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&Executable> {
-        if !self.loaded.contains_key(name) {
-            let spec = manifest.get(name)?.clone();
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.hlo_path
-                    .to_str()
-                    .context("artifact path not valid UTF-8")?,
-            )
-            .with_context(|| format!("parsing HLO text for {name}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .with_context(|| format!("compiling {name}"))?;
-            self.loaded
-                .insert(name.to_string(), Executable { spec, exe });
-        }
-        Ok(&self.loaded[name])
-    }
-
-    /// Load every artifact in the manifest.
-    pub fn load_all(&mut self, manifest: &Manifest) -> Result<usize> {
-        for name in manifest.artifacts.keys() {
-            self.load(manifest, name)?;
-        }
-        Ok(self.loaded.len())
-    }
-
-    pub fn get(&self, name: &str) -> Option<&Executable> {
-        self.loaded.get(name)
-    }
+/// Deterministic pseudo-random inputs matching an artifact's shapes
+/// (for smoke runs, serving demos and latency measurement).
+fn random_inputs_for(spec: &ArtifactSpec, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Pcg::new(seed ^ 0xDA7A);
+    spec.inputs
+        .iter()
+        .map(|s| {
+            (0..s.elems())
+                .map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32)
+                .collect()
+        })
+        .collect()
 }
 
-impl Executable {
-    /// Execute with the given flattened f32 inputs (lengths must match the
-    /// manifest shapes). Returns per-output payloads + wall latency.
-    pub fn run(&self, inputs: &[Vec<f32>]) -> Result<ExecOutput> {
-        anyhow::ensure!(
-            inputs.len() == self.spec.inputs.len(),
-            "{}: expected {} inputs, got {}",
-            self.spec.name,
-            self.spec.inputs.len(),
-            inputs.len()
-        );
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+#[cfg(feature = "xla")]
+mod imp {
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+
+    use anyhow::{Context, Result};
+
+    use super::super::artifacts::{ArtifactSpec, Manifest};
+    use super::ExecOutput;
+
+    /// A loaded, compiled artifact ready to execute.
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    /// The PJRT runtime: one CPU client + a cache of compiled artifacts.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        loaded: BTreeMap<String, Executable>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client, loaded: BTreeMap::new() })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile (and cache) one artifact from the manifest.
+        pub fn load(&mut self, manifest: &Manifest, name: &str) -> Result<&Executable> {
+            if !self.loaded.contains_key(name) {
+                let spec = manifest.get(name)?.clone();
+                let proto = xla::HloModuleProto::from_text_file(
+                    spec.hlo_path
+                        .to_str()
+                        .context("artifact path not valid UTF-8")?,
+                )
+                .with_context(|| format!("parsing HLO text for {name}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self
+                    .client
+                    .compile(&comp)
+                    .with_context(|| format!("compiling {name}"))?;
+                self.loaded
+                    .insert(name.to_string(), Executable { spec, exe });
+            }
+            Ok(&self.loaded[name])
+        }
+
+        /// Load every artifact in the manifest.
+        pub fn load_all(&mut self, manifest: &Manifest) -> Result<usize> {
+            for name in manifest.artifacts.keys() {
+                self.load(manifest, name)?;
+            }
+            Ok(self.loaded.len())
+        }
+
+        pub fn get(&self, name: &str) -> Option<&Executable> {
+            self.loaded.get(name)
+        }
+    }
+
+    impl Executable {
+        /// Execute with the given flattened f32 inputs (lengths must match the
+        /// manifest shapes). Returns per-output payloads + wall latency.
+        pub fn run(&self, inputs: &[Vec<f32>]) -> Result<ExecOutput> {
             anyhow::ensure!(
-                data.len() == spec.elems(),
-                "{}: input payload {} elems, shape wants {}",
+                inputs.len() == self.spec.inputs.len(),
+                "{}: expected {} inputs, got {}",
                 self.spec.name,
-                data.len(),
-                spec.elems()
+                self.spec.inputs.len(),
+                inputs.len()
             );
-            let lit = xla::Literal::vec1(data).reshape(&spec.shape)?;
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (data, spec) in inputs.iter().zip(&self.spec.inputs) {
+                anyhow::ensure!(
+                    data.len() == spec.elems(),
+                    "{}: input payload {} elems, shape wants {}",
+                    self.spec.name,
+                    data.len(),
+                    spec.elems()
+                );
+                let lit = xla::Literal::vec1(data).reshape(&spec.shape)?;
+                literals.push(lit);
+            }
+            let t0 = Instant::now();
+            let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+            let latency_s = t0.elapsed().as_secs_f64();
+            // aot.py lowers with return_tuple=True: unpack the tuple.
+            let tuple = result.decompose_tuple()?;
+            let mut outputs = Vec::with_capacity(tuple.len());
+            for lit in tuple {
+                outputs.push(lit.to_vec::<f32>()?);
+            }
+            Ok(ExecOutput { outputs, latency_s })
         }
-        let t0 = Instant::now();
-        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        let latency_s = t0.elapsed().as_secs_f64();
-        // aot.py lowers with return_tuple=True: unpack the tuple.
-        let tuple = result.decompose_tuple()?;
-        let mut outputs = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            outputs.push(lit.to_vec::<f32>()?);
-        }
-        Ok(ExecOutput { outputs, latency_s })
-    }
 
-    /// Deterministic pseudo-random inputs matching the artifact's shapes
-    /// (for smoke runs, serving demos and latency measurement).
-    pub fn random_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
-        let mut rng = Pcg::new(seed ^ 0xDA7A);
-        self.spec
-            .inputs
-            .iter()
-            .map(|s| {
-                (0..s.elems())
-                    .map(|_| (rng.gen_f64() * 2.0 - 1.0) as f32)
-                    .collect()
-            })
-            .collect()
+        pub fn random_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
+            super::random_inputs_for(&self.spec, seed)
+        }
     }
 }
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use std::collections::BTreeMap;
+
+    use anyhow::{anyhow, Result};
+
+    use super::super::artifacts::{ArtifactSpec, Manifest};
+    use super::ExecOutput;
+
+    fn feature_missing() -> anyhow::Error {
+        anyhow!(
+            "built without the `xla` feature — rebuild with `cargo build --features xla` \
+             (requires the native XLA library) to execute AOT artifacts"
+        )
+    }
+
+    /// Stub artifact handle (never constructed without the `xla` feature —
+    /// [`Runtime::cpu`] is the only way in and it always errors).
+    pub struct Executable {
+        pub spec: ArtifactSpec,
+    }
+
+    /// Stub runtime so the serving/coordinator layers compile and report a
+    /// clear error instead of failing to link against libxla.
+    pub struct Runtime {
+        loaded: BTreeMap<String, Executable>,
+    }
+
+    impl Runtime {
+        pub fn cpu() -> Result<Runtime> {
+            Err(feature_missing())
+        }
+
+        pub fn platform_name(&self) -> String {
+            "stub (no xla feature)".to_string()
+        }
+
+        pub fn load(&mut self, _manifest: &Manifest, _name: &str) -> Result<&Executable> {
+            Err(feature_missing())
+        }
+
+        pub fn load_all(&mut self, _manifest: &Manifest) -> Result<usize> {
+            Err(feature_missing())
+        }
+
+        pub fn get(&self, name: &str) -> Option<&Executable> {
+            self.loaded.get(name)
+        }
+    }
+
+    impl Executable {
+        pub fn run(&self, _inputs: &[Vec<f32>]) -> Result<ExecOutput> {
+            Err(feature_missing())
+        }
+
+        pub fn random_inputs(&self, seed: u64) -> Vec<Vec<f32>> {
+            super::random_inputs_for(&self.spec, seed)
+        }
+    }
+}
+
+pub use imp::{Executable, Runtime};

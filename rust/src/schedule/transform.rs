@@ -32,39 +32,58 @@ pub enum Transform {
 }
 
 /// Why a transform could not be applied.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum ApplyError {
-    #[error("stage index {0} out of range")]
     BadStage(usize),
-    #[error("loop index {0} out of range")]
     BadLoop(usize),
-    #[error("factor {factor} does not divide extent {extent}")]
     BadFactor { factor: i64, extent: i64 },
-    #[error("factor must be in 2..extent, got {0}")]
     TrivialFactor(i64),
-    #[error("reorder permutation invalid: {0}")]
     BadPerm(String),
-    #[error("cannot {action} a {kind} loop")]
     WrongKind { action: &'static str, kind: &'static str },
-    #[error("cannot parallelize a reduction loop")]
     ParallelReduction,
-    #[error("parallel loops must form an outermost prefix")]
     ParallelNotPrefix,
-    #[error("cannot vectorize a reduction loop")]
     VectorizeReduction,
-    #[error("vectorized loop must be innermost")]
     VectorizeNotInnermost,
-    #[error("vectorize extent {0} too large (max 64)")]
     VectorizeTooWide(i64),
-    #[error("fuse requires two adjacent serial loops")]
     FuseNotSerial,
-    #[error("compute location depth {0} out of range")]
     BadDepth(usize),
-    #[error("cache_write already applied")]
     CacheWriteTwice,
-    #[error("unroll extent {0} too large (max 64)")]
     UnrollTooWide(i64),
 }
+
+// Hand-written Display/Error impls: proc-macro crates (thiserror) are kept
+// out of the dependency tree so the crate builds in offline environments.
+impl std::fmt::Display for ApplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ApplyError::BadStage(i) => write!(f, "stage index {i} out of range"),
+            ApplyError::BadLoop(i) => write!(f, "loop index {i} out of range"),
+            ApplyError::BadFactor { factor, extent } => {
+                write!(f, "factor {factor} does not divide extent {extent}")
+            }
+            ApplyError::TrivialFactor(x) => write!(f, "factor must be in 2..extent, got {x}"),
+            ApplyError::BadPerm(why) => write!(f, "reorder permutation invalid: {why}"),
+            ApplyError::WrongKind { action, kind } => {
+                write!(f, "cannot {action} a {kind} loop")
+            }
+            ApplyError::ParallelReduction => write!(f, "cannot parallelize a reduction loop"),
+            ApplyError::ParallelNotPrefix => {
+                write!(f, "parallel loops must form an outermost prefix")
+            }
+            ApplyError::VectorizeReduction => write!(f, "cannot vectorize a reduction loop"),
+            ApplyError::VectorizeNotInnermost => write!(f, "vectorized loop must be innermost"),
+            ApplyError::VectorizeTooWide(x) => {
+                write!(f, "vectorize extent {x} too large (max 64)")
+            }
+            ApplyError::FuseNotSerial => write!(f, "fuse requires two adjacent serial loops"),
+            ApplyError::BadDepth(d) => write!(f, "compute location depth {d} out of range"),
+            ApplyError::CacheWriteTwice => write!(f, "cache_write already applied"),
+            ApplyError::UnrollTooWide(x) => write!(f, "unroll extent {x} too large (max 64)"),
+        }
+    }
+}
+
+impl std::error::Error for ApplyError {}
 
 impl Transform {
     pub fn stage(&self) -> usize {

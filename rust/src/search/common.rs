@@ -2,9 +2,12 @@
 //! convergence curves and the strategy interface.
 
 use crate::cost::{CostModel, Platform};
+use crate::db::{program_fingerprint, MeasureCache};
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
+
+pub use crate::db::WarmStart;
 
 /// Context handed to a proposal policy at expansion time: the selected node,
 /// its ancestor chain (parent first), and their predicted scores — exactly
@@ -81,6 +84,11 @@ pub struct SearchResult {
     /// Full measurement log (the convergence curve).
     pub curve: Vec<Measurement>,
     pub samples_used: usize,
+    /// Candidate evaluations answered by the measurement cache (no sample
+    /// consumed). 0 when the run had no cache attached.
+    pub cache_hits: usize,
+    /// Candidate evaluations that fell through to the hardware model.
+    pub cache_misses: usize,
 }
 
 impl SearchResult {
@@ -119,6 +127,19 @@ pub struct Evaluator<'a> {
     pub best_trace: Vec<Transform>,
     pub curve: Vec<Measurement>,
     seed: u64,
+    /// Optional measurement cache (`db::MeasureCache`): when attached, a
+    /// candidate whose program fingerprint is already known costs zero
+    /// samples. `None` preserves the original every-measure-spends
+    /// semantics.
+    cache: Option<MeasureCache>,
+    /// Platform name used in cache keys (empty when no cache is attached).
+    platform_name: String,
+    /// Evaluations answered by the cache (no hardware sample consumed).
+    cache_hits: usize,
+    /// Evaluations that invoked the hardware model. Counted here, not in
+    /// the cache, so misses always equal actual hardware invocations (an
+    /// exhausted-budget bail-out is neither).
+    cache_misses: usize,
 }
 
 impl<'a> Evaluator<'a> {
@@ -133,27 +154,92 @@ impl<'a> Evaluator<'a> {
             best_trace: Vec::new(),
             curve: Vec::new(),
             seed,
+            cache: None,
+            platform_name: String::new(),
+            cache_hits: 0,
+            cache_misses: 0,
         }
+    }
+
+    /// Like [`Evaluator::new`], but measurements go through `cache` first.
+    /// The cache may arrive pre-populated from the tuning database, which
+    /// is how warm-started runs re-evaluate known schedules for free.
+    pub fn with_cache(
+        hardware: &'a dyn CostModel,
+        base: &Program,
+        budget: usize,
+        seed: u64,
+        cache: MeasureCache,
+        platform: &str,
+    ) -> Self {
+        let mut ev = Evaluator::new(hardware, base, budget, seed);
+        ev.cache = Some(cache);
+        ev.platform_name = platform.to_string();
+        ev
     }
 
     pub fn exhausted(&self) -> bool {
         self.used >= self.budget
     }
 
-    /// Measure a candidate on the hardware model, consuming one sample.
-    /// Returns the measured latency, or None if the budget is exhausted.
+    /// Cache accounting so far (hits, misses); (0, 0) without a cache.
+    pub fn cache_counts(&self) -> (usize, usize) {
+        (self.cache_hits, self.cache_misses)
+    }
+
+    /// Evaluate a candidate. A measurement-cache hit returns the known
+    /// latency without consuming a sample; otherwise the hardware model is
+    /// invoked and one sample of the budget is spent. Returns None when a
+    /// hardware measurement is needed but the budget is exhausted.
     pub fn measure(&mut self, candidate: &Schedule) -> Option<f64> {
-        if self.exhausted() {
-            return None;
-        }
-        self.used += 1;
-        let lat = self
-            .hardware
-            .latency(&candidate.current, self.seed.wrapping_add(self.used as u64));
+        let fp = self
+            .cache
+            .is_some()
+            .then(|| program_fingerprint(&candidate.current));
+        self.measure_inner(candidate, fp)
+    }
+
+    /// Like [`Evaluator::measure`], with the candidate's
+    /// `db::program_fingerprint` already computed — callers that fingerprint
+    /// anyway (MCTS tree dedup) avoid hashing the program twice per sample.
+    pub fn measure_with_fingerprint(&mut self, candidate: &Schedule, fp: u64) -> Option<f64> {
+        self.measure_inner(candidate, Some(fp))
+    }
+
+    fn measure_inner(&mut self, candidate: &Schedule, fp: Option<u64>) -> Option<f64> {
+        let lat = if let (Some(cache), Some(fp)) = (&mut self.cache, fp) {
+            match cache.get(fp, &self.platform_name) {
+                Some(known) => {
+                    self.cache_hits += 1;
+                    known
+                }
+                None => {
+                    if self.used >= self.budget {
+                        return None;
+                    }
+                    self.cache_misses += 1;
+                    self.used += 1;
+                    let lat = self
+                        .hardware
+                        .latency(&candidate.current, self.seed.wrapping_add(self.used as u64));
+                    cache.insert(fp, &self.platform_name, lat);
+                    lat
+                }
+            }
+        } else {
+            if self.exhausted() {
+                return None;
+            }
+            self.used += 1;
+            self.hardware
+                .latency(&candidate.current, self.seed.wrapping_add(self.used as u64))
+        };
         if lat < self.best_latency {
             self.best_latency = lat;
             self.best_trace = candidate.trace.clone();
         }
+        // Cache hits log at the current sample count (no sample consumed),
+        // so a warm start can reach a target speedup "at sample 0".
         self.curve.push(Measurement {
             sample: self.used,
             latency: lat,
@@ -164,6 +250,7 @@ impl<'a> Evaluator<'a> {
     }
 
     pub fn into_result(self, strategy: &str, workload: &str, platform: &str) -> SearchResult {
+        let (cache_hits, cache_misses) = self.cache_counts();
         SearchResult {
             strategy: strategy.to_string(),
             workload: workload.to_string(),
@@ -173,6 +260,8 @@ impl<'a> Evaluator<'a> {
             best_trace: self.best_trace,
             curve: self.curve,
             samples_used: self.used,
+            cache_hits,
+            cache_misses,
         }
     }
 }
@@ -197,6 +286,45 @@ mod tests {
         let r = ev.into_result("test", "w", "p");
         assert_eq!(r.curve.len(), 3);
         assert!(r.best_speedup() > 0.5);
+    }
+
+    #[test]
+    fn cached_reevaluation_consumes_zero_samples() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        let base = WorkloadId::DeepSeekMoe.build_test();
+        let mut ev =
+            Evaluator::with_cache(&hw, &base, 5, 7, MeasureCache::new(), "core_i9");
+        let sched = Schedule::new(base.clone())
+            .apply(crate::schedule::Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap();
+        let first = ev.measure(&sched).unwrap();
+        assert_eq!(ev.used, 1, "first evaluation spends a sample");
+        // Second evaluation of the identical candidate: cache hit, zero
+        // additional samples, same latency.
+        let second = ev.measure(&sched).unwrap();
+        assert_eq!(second, first);
+        assert_eq!(ev.used, 1, "cache hit must not consume a sample");
+        assert_eq!(ev.cache_counts(), (1, 1));
+        let r = ev.into_result("t", "w", "core_i9");
+        assert_eq!(r.cache_hits, 1);
+        assert_eq!(r.cache_misses, 1);
+        assert_eq!(r.samples_used, 1);
+    }
+
+    #[test]
+    fn prepopulated_cache_answers_before_any_sample() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        let base = WorkloadId::Llama4Mlp.build_test();
+        let sched = Schedule::new(base.clone())
+            .apply(crate::schedule::Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        let mut cache = MeasureCache::new();
+        cache.insert(program_fingerprint(&sched.current), "core_i9", 0.125);
+        let mut ev = Evaluator::with_cache(&hw, &base, 5, 7, cache, "core_i9");
+        assert_eq!(ev.measure(&sched), Some(0.125));
+        assert_eq!(ev.used, 0, "warm hit costs nothing");
+        assert_eq!(ev.curve.len(), 1);
+        assert_eq!(ev.curve[0].sample, 0);
     }
 
     #[test]

@@ -8,11 +8,12 @@
 //! black-box baseline of the paper's comparison.
 
 use crate::cost::CostModel;
+use crate::db::MeasureCache;
 use crate::schedule::{sampler, Schedule, Transform};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
 
-use super::common::{Evaluator, SearchResult};
+use super::common::{Evaluator, SearchResult, WarmStart};
 
 #[derive(Debug, Clone)]
 pub struct EvoConfig {
@@ -58,24 +59,65 @@ pub fn evolutionary_search(
     budget: usize,
     seed: u64,
 ) -> SearchResult {
+    evolutionary_search_warm(base, surrogate, hardware, cfg, platform, budget, seed, None, None)
+}
+
+/// [`evolutionary_search`] with tuning-database support: up to half the
+/// initial population is seeded from `warm` traces (the rest stays random
+/// for diversity), and `cache` answers re-measurements of known programs —
+/// including the elites this tuner re-measures every generation — without
+/// consuming the sample budget.
+#[allow(clippy::too_many_arguments)]
+pub fn evolutionary_search_warm(
+    base: &Program,
+    surrogate: &dyn CostModel,
+    hardware: &dyn CostModel,
+    cfg: &EvoConfig,
+    platform: &crate::cost::Platform,
+    budget: usize,
+    seed: u64,
+    warm: Option<&WarmStart>,
+    cache: Option<MeasureCache>,
+) -> SearchResult {
     let mut rng = Pcg::new(seed ^ 0xE5_0E_5E);
-    let mut ev = Evaluator::new(hardware, base, budget, seed);
+    let mut ev = match cache {
+        Some(c) => Evaluator::with_cache(hardware, base, budget, seed, c, platform.name),
+        None => Evaluator::new(hardware, base, budget, seed),
+    };
     let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
     let base_sched = Schedule::new(base.clone());
 
-    // ---- initial population: random traces --------------------------------
-    let mut population: Vec<Member> = (0..cfg.population)
-        .map(|i| {
-            let len = 1 + rng.gen_range(cfg.init_len);
-            let seq = sampler::random_sequence(&base_sched.current, len, &mut rng);
-            let (schedule, _) = base_sched.apply_all(&seq);
+    // ---- initial population: warm traces first, random fill ----------------
+    let mut population: Vec<Member> = Vec::with_capacity(cfg.population);
+    if let Some(ws) = warm {
+        for (trace, _known_latency) in ws.entries.iter() {
+            if population.len() >= cfg.population / 2 {
+                break;
+            }
+            let (schedule, applied) = base_sched.apply_all(trace);
+            if applied == 0 {
+                continue;
+            }
             let fitness = surrogate_baseline
-                / surrogate.latency(&schedule.current, seed ^ (i as u64 + 1));
-            Member { schedule, fitness }
-        })
-        .collect();
+                / surrogate.latency(&schedule.current, seed ^ (0x5EED + population.len() as u64));
+            population.push(Member { schedule, fitness });
+        }
+    }
+    while population.len() < cfg.population {
+        let i = population.len();
+        let len = 1 + rng.gen_range(cfg.init_len);
+        let seq = sampler::random_sequence(&base_sched.current, len, &mut rng);
+        let (schedule, _) = base_sched.apply_all(&seq);
+        let fitness =
+            surrogate_baseline / surrogate.latency(&schedule.current, seed ^ (i as u64 + 1));
+        population.push(Member { schedule, fitness });
+    }
 
     let mut gen = 0u64;
+    // With a cache, a whole generation's measurement slice can be answered
+    // for free (elites recur); bound consecutive zero-sample generations so
+    // the loop cannot spin without spending budget.
+    let mut stalled_gens = 0usize;
     while !ev.exhausted() {
         gen += 1;
         // ---- measure the surrogate-best slice on hardware ------------------
@@ -86,10 +128,19 @@ pub fn evolutionary_search(
                 .partial_cmp(&population[a].fitness)
                 .unwrap()
         });
+        let used_before = ev.used;
         for &i in order.iter().take(cfg.measure_per_gen) {
             if ev.measure(&population[i].schedule).is_none() {
                 break;
             }
+        }
+        if ev.used == used_before {
+            stalled_gens += 1;
+            if stalled_gens > 50 {
+                break;
+            }
+        } else {
+            stalled_gens = 0;
         }
         if ev.exhausted() {
             break;

@@ -19,11 +19,12 @@
 use std::collections::HashSet;
 
 use crate::cost::CostModel;
+use crate::db::{program_fingerprint, MeasureCache};
 use crate::schedule::{sampler, Schedule};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
 
-use super::common::{Evaluator, ProposalContext, ProposalPolicy, SearchResult};
+use super::common::{Evaluator, ProposalContext, ProposalPolicy, SearchResult, WarmStart};
 
 /// MCTS hyperparameters (paper §4.1: c = sqrt(2), B = 2).
 #[derive(Debug, Clone)]
@@ -79,8 +80,34 @@ pub fn mcts_search(
     budget: usize,
     seed: u64,
 ) -> SearchResult {
+    mcts_search_warm(
+        base, policy, surrogate, hardware, cfg, platform, budget, seed, None, None,
+    )
+}
+
+/// [`mcts_search`] with tuning-database support: `warm` traces are replayed
+/// and inserted as root children before the first UCT iteration (the search
+/// starts from the best-known frontier instead of an empty tree), and
+/// `cache` answers re-measurements of known programs without consuming the
+/// sample budget.
+#[allow(clippy::too_many_arguments)]
+pub fn mcts_search_warm(
+    base: &Program,
+    policy: &mut dyn ProposalPolicy,
+    surrogate: &dyn CostModel,
+    hardware: &dyn CostModel,
+    cfg: &MctsConfig,
+    platform: &crate::cost::Platform,
+    budget: usize,
+    seed: u64,
+    warm: Option<&WarmStart>,
+    cache: Option<MeasureCache>,
+) -> SearchResult {
     let mut rng = Pcg::new(seed);
-    let mut ev = Evaluator::new(hardware, base, budget, seed);
+    let mut ev = match cache {
+        Some(c) => Evaluator::with_cache(hardware, base, budget, seed, c, platform.name),
+        None => Evaluator::new(hardware, base, budget, seed),
+    };
     let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
 
     let root_sched = Schedule::new(base.clone());
@@ -92,10 +119,60 @@ pub fn mcts_search(
         w: 0.0,
         n: 1e-9,
     }];
+    // Tree dedup and the measurement cache share one structural hash
+    // (`db::program_fingerprint`), computed once per candidate and handed
+    // to the evaluator — hashing the program is on the per-sample hot path.
     let mut seen: HashSet<u64> = HashSet::new();
-    seen.insert(nodes[0].schedule.fingerprint());
+    seen.insert(program_fingerprint(&nodes[0].schedule.current));
 
     let mut best_rollout_reward: f64 = 1.0;
+
+    // ---- warm start: seed root children from the tuning database -----------
+    // Each known-good trace becomes a root child whose exploit weight is
+    // proportional to its *measured* speedup (best warm entry = 1.0), so
+    // UCT prefers the strongest recorded frontier instead of treating all
+    // seeds as equally good. With a pre-populated cache these measurements
+    // are free; without one they spend budget like any other candidate.
+    if let Some(ws) = warm {
+        let mut seeded: Vec<(usize, f64)> = Vec::new();
+        for (i, (trace, _known_latency)) in ws.entries.iter().enumerate() {
+            let (child_sched, applied) = nodes[0].schedule.apply_all(trace);
+            if applied == 0 {
+                continue;
+            }
+            let fp = program_fingerprint(&child_sched.current);
+            if !seen.insert(fp) {
+                continue;
+            }
+            let Some(lat) = ev.measure_with_fingerprint(&child_sched, fp) else {
+                break;
+            };
+            let child_latency_hat =
+                surrogate.latency(&child_sched.current, seed ^ 0x3A17 ^ (i as u64) << 8);
+            let score = surrogate_baseline / child_latency_hat;
+            let child_id = nodes.len();
+            nodes.push(Node {
+                schedule: child_sched,
+                parent: Some(0),
+                children: Vec::new(),
+                w: 0.0, // assigned below, normalized over all warm children
+                n: 1.0,
+                score,
+            });
+            nodes[0].children.push(child_id);
+            nodes[0].n += 1.0;
+            seeded.push((child_id, ev.baseline_latency / lat));
+        }
+        let best_speedup = seeded.iter().map(|&(_, s)| s).fold(0.0, f64::max);
+        if best_speedup > 0.0 {
+            for &(id, speedup) in &seeded {
+                let reward = speedup / best_speedup;
+                nodes[id].w = reward;
+                nodes[0].w += reward;
+            }
+        }
+    }
+
     let mut step = 0usize;
     // Guard against saturation: on tiny programs every proposal can
     // duplicate an existing node; stop after too many sterile iterations.
@@ -157,7 +234,7 @@ pub fn mcts_search(
 
         // Dedup: if this program state already exists in the tree, do not
         // add it again (tree stays acyclic); still spend a visit.
-        let fp = child_sched.fingerprint();
+        let fp = program_fingerprint(&child_sched.current);
         if !seen.insert(fp) {
             nodes[cur].n += 1.0;
             sterile += 1;
@@ -165,8 +242,9 @@ pub fn mcts_search(
         }
         sterile = 0;
 
-        // Measure the new candidate on hardware (one sample).
-        if ev.measure(&child_sched).is_none() {
+        // Measure the new candidate on hardware (one sample); the dedup
+        // fingerprint doubles as the measurement-cache key.
+        if ev.measure_with_fingerprint(&child_sched, fp).is_none() {
             break;
         }
 

@@ -3,11 +3,19 @@
 //! Evolutionary Search baseline. All strategies meter hardware measurements
 //! through [`common::Evaluator`], producing the speedup-vs-samples curves
 //! the paper's figures and tables are built from.
+//!
+//! Both engines have `*_warm` variants that accept a [`WarmStart`] (known
+//! traces from the tuning database, seeded into the MCTS root frontier /
+//! the evolutionary population) and a `db::MeasureCache` (re-measurements
+//! of known programs cost zero samples); [`SearchResult`] reports the
+//! cache hit/miss counts.
 
 pub mod common;
 pub mod evolutionary;
 pub mod mcts;
 
-pub use common::{Measurement, ProposalContext, ProposalPolicy, RandomPolicy, SearchResult};
-pub use evolutionary::{evolutionary_search, EvoConfig};
-pub use mcts::{mcts_search, MctsConfig};
+pub use common::{
+    Evaluator, Measurement, ProposalContext, ProposalPolicy, RandomPolicy, SearchResult, WarmStart,
+};
+pub use evolutionary::{evolutionary_search, evolutionary_search_warm, EvoConfig};
+pub use mcts::{mcts_search, mcts_search_warm, MctsConfig};

@@ -50,12 +50,21 @@ pub struct Doc {
     pub entries: BTreeMap<String, Value>,
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("toml parse error at line {line}: {msg}")]
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+// Hand-written Display/Error impls: proc-macro crates (thiserror) are kept
+// out of the dependency tree so the crate builds in offline environments.
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Doc {
     pub fn parse(text: &str) -> Result<Doc, ParseError> {

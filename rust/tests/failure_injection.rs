@@ -92,6 +92,10 @@ fn missing_artifact_file_fails_at_load_not_panic() {
             "outputs": [{"shape": [2, 2], "dtype": "float32"}]}}"#,
     )
     .unwrap();
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the xla feature");
+        return;
+    }
     let mut rt = reasoning_compiler::runtime::Runtime::cpu().unwrap();
     assert!(rt.load(&m, "ghost").is_err());
 }
@@ -102,6 +106,10 @@ fn wrong_input_payload_sizes_rejected() {
         eprintln!("skipping: artifacts not built");
         return;
     };
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the xla feature");
+        return;
+    }
     let mut rt = reasoning_compiler::runtime::Runtime::cpu().unwrap();
     rt.load(&manifest, "deepseek_moe").unwrap();
     let exe = rt.get("deepseek_moe").unwrap();

@@ -62,8 +62,8 @@ fn model_quality_orders_early_speedup() {
         model: model.to_string(),
         ..Default::default()
     };
-    let strong = run_session(&mk("llama33_70b")).mean_speedup_at(36);
-    let weak = run_session(&mk("ds_distill_7b")).mean_speedup_at(36);
+    let strong = run_session(&mk("llama33_70b")).expect("session").mean_speedup_at(36);
+    let weak = run_session(&mk("ds_distill_7b")).expect("session").mean_speedup_at(36);
     assert!(
         strong > weak,
         "70B ({strong:.2}x) should beat 7B ({weak:.2}x) at 36 samples"
@@ -87,8 +87,8 @@ fn deeper_history_does_not_hurt() {
     let mut d2 = Vec::new();
     let mut d3 = Vec::new();
     for seed in [1, 2, 3] {
-        d2.push(run_session(&mk(2, seed)).mean_speedup());
-        d3.push(run_session(&mk(3, seed)).mean_speedup());
+        d2.push(run_session(&mk(2, seed)).expect("session").mean_speedup());
+        d3.push(run_session(&mk(3, seed)).expect("session").mean_speedup());
     }
     let (m2, m3) = (stats::mean(&d2), stats::mean(&d3));
     assert!(
@@ -116,7 +116,7 @@ fn fallback_rates_reproduce_table8_bands() {
             model: model.to_string(),
             ..Default::default()
         };
-        let s = run_session(&cfg);
+        let s = run_session(&cfg).expect("session");
         let rate = s.llm_fallback_rate;
         assert!(
             (lo..=hi).contains(&rate),
@@ -134,8 +134,8 @@ fn token_costs_scale_with_budget() {
         repeats: 2,
         ..Default::default()
     };
-    let small = run_session(&mk(20));
-    let large = run_session(&mk(80));
+    let small = run_session(&mk(20)).expect("session");
+    let large = run_session(&mk(80)).expect("session");
     assert!(large.llm_costs.prompt_tokens > small.llm_costs.prompt_tokens * 2);
     let model = ModelProfile::gpt4o_mini();
     assert!(large.llm_costs.usd(&model) > small.llm_costs.usd(&model));

@@ -17,6 +17,10 @@ fn manifest_or_skip() -> Option<Manifest> {
 #[test]
 fn all_artifacts_compile_and_run() {
     let Some(manifest) = manifest_or_skip() else { return };
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the xla feature");
+        return;
+    }
     let mut rt = Runtime::cpu().expect("PJRT CPU client");
     let n = rt.load_all(&manifest).expect("compile all artifacts");
     assert_eq!(n, manifest.artifacts.len());
@@ -36,6 +40,10 @@ fn all_artifacts_compile_and_run() {
 #[test]
 fn execution_is_deterministic() {
     let Some(manifest) = manifest_or_skip() else { return };
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the xla feature");
+        return;
+    }
     let mut rt = Runtime::cpu().unwrap();
     rt.load(&manifest, "deepseek_moe").unwrap();
     let exe = rt.get("deepseek_moe").unwrap();
@@ -51,6 +59,10 @@ fn moe_artifact_matches_manual_top1_routing() {
     // single non-zero input feature, the output equals that expert's
     // weight row.
     let Some(manifest) = manifest_or_skip() else { return };
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the xla feature");
+        return;
+    }
     let mut rt = Runtime::cpu().unwrap();
     rt.load(&manifest, "deepseek_moe").unwrap();
     let exe = rt.get("deepseek_moe").unwrap();

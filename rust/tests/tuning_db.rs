@@ -1,0 +1,225 @@
+//! Integration tests of the persistent tuning database: a cold `tune` run
+//! followed by a warm-started run on the same workload must reach the cold
+//! run's best speedup in strictly fewer hardware-model samples, with the
+//! warm run reporting a nonzero measurement-cache hit count.
+
+use std::path::PathBuf;
+
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
+use reasoning_compiler::cost::{HardwareModel, Platform, SurrogateModel};
+use reasoning_compiler::db::{workload_fingerprint, Database, TuningRecord};
+use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::search::{evolutionary_search_warm, EvoConfig};
+use reasoning_compiler::tir::WorkloadId;
+
+fn temp_db(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "rcc_tdb_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+#[test]
+fn warm_run_reaches_cold_best_in_strictly_fewer_samples() {
+    let db_path = temp_db("warm");
+    let cfg = TuneConfig {
+        strategy: Strategy::Mcts,
+        workload: "deepseek_moe".to_string(),
+        platform: "core_i9".to_string(),
+        budget: 50,
+        repeats: 1,
+        seed: 42,
+        db_path: Some(db_path.to_string_lossy().to_string()),
+        ..Default::default()
+    };
+
+    // ---- cold run: empty database, every evaluation costs a sample --------
+    let cold = run_session(&cfg).expect("cold session");
+    let cold_run = &cold.runs[0];
+    assert_eq!(cold_run.cache_hits, 0, "cold run has nothing to hit");
+    assert!(cold_run.best_speedup() > 1.0, "cold run must improve");
+    let cold_best = cold_run.best_speedup();
+    let cold_samples = cold_run
+        .samples_to_reach(cold_best)
+        .expect("cold run reached its own best");
+    assert!(cold_samples >= 1, "hardware measurements start at sample 1");
+
+    // The session committed its records.
+    let db = Database::open(&db_path).expect("reopen db");
+    assert_eq!(db.len(), 1, "one record per repeat");
+    let fp = workload_fingerprint(&WorkloadId::DeepSeekMoe.build());
+    assert!(db.best(fp, "core_i9").is_some());
+
+    // ---- warm run: seeded from the database -------------------------------
+    // Same seed => identical baseline measurement, so "cold best speedup"
+    // means the same latency target; the warm start replays the recorded
+    // trace through the pre-populated cache before the first sample.
+    let warm = run_session(&cfg).expect("warm session");
+    let warm_run = &warm.runs[0];
+    assert!(
+        warm_run.cache_hits > 0,
+        "warm run must report measurement-cache hits"
+    );
+    let warm_samples = warm_run
+        .samples_to_reach(cold_best)
+        .expect("warm run must reach the cold run's best speedup");
+    assert!(
+        warm_samples < cold_samples,
+        "warm start must reach {cold_best:.2}x in fewer samples: \
+         warm {warm_samples} vs cold {cold_samples}"
+    );
+
+    std::fs::remove_file(&db_path).ok();
+}
+
+#[test]
+fn warm_evolutionary_search_reuses_recorded_measurements() {
+    let base = WorkloadId::DeepSeekMoe.build();
+    let plat = Platform::core_i9();
+    let surrogate = SurrogateModel { platform: plat.clone() };
+    let hardware = HardwareModel { platform: plat.clone() };
+
+    // Record one known-good schedule by hand.
+    let trace = vec![
+        reasoning_compiler::schedule::Transform::TileSize { stage: 0, loop_idx: 2, factor: 64 },
+        reasoning_compiler::schedule::Transform::Parallel { stage: 0, loop_idx: 0 },
+    ];
+    let sched = Schedule::new(base.clone());
+    let (replayed, applied) = sched.apply_all(&trace);
+    assert_eq!(applied, trace.len());
+    use reasoning_compiler::cost::analytical::CostModel as _;
+    let known_latency = hardware.latency(&replayed.current, 7);
+
+    let mut db = Database::in_memory();
+    db.add(TuningRecord {
+        workload_fp: workload_fingerprint(&base),
+        workload: base.name.clone(),
+        platform: "core_i9".to_string(),
+        strategy: "test".to_string(),
+        trace,
+        latency: known_latency,
+        baseline_latency: known_latency * 4.0,
+        seed: 7,
+        timestamp: 1,
+    });
+    let (warm, cache) = db.hints(&base, "core_i9", 4);
+    assert_eq!(warm.entries.len(), 1);
+
+    // Measure the whole population every generation so the warm member is
+    // guaranteed to be evaluated — through the cache, for free.
+    let cfg = EvoConfig {
+        population: 16,
+        measure_per_gen: 16,
+        ..Default::default()
+    };
+    let r = evolutionary_search_warm(
+        &base, &surrogate, &hardware, &cfg, &plat, 40, 3,
+        Some(&warm), Some(cache),
+    );
+    assert!(r.cache_hits > 0, "warm member must be answered by the cache");
+    assert_eq!(r.samples_used, 40, "budget still fully spent on new candidates");
+    assert!(
+        r.best_latency <= known_latency,
+        "search must be at least as good as the warm-started schedule"
+    );
+}
+
+#[test]
+fn warm_seeding_hits_at_sample_zero_and_cache_only_does_not() {
+    // Distinguishes warm *seeding* from mere cache attachment. The recorded
+    // trace needs 6 transforms (4 tiles + cache-write + parallel); an MCTS
+    // expansion proposal applies at most 4, so the first measured candidate
+    // of an unseeded search provably cannot match the recorded program.
+    // Therefore: seeded run => first curve entry at sample 0 (free hit);
+    // cache-only run => first curve entry at sample 1 (hardware measure).
+    use reasoning_compiler::schedule::Transform;
+    use reasoning_compiler::search::{mcts_search_warm, MctsConfig, RandomPolicy};
+
+    let base = WorkloadId::DeepSeekMoe.build();
+    let plat = Platform::core_i9();
+    let surrogate = SurrogateModel { platform: plat.clone() };
+    let hardware = HardwareModel { platform: plat.clone() };
+    let trace = vec![
+        Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
+        Transform::TileSize { stage: 0, loop_idx: 3, factor: 128 },
+        Transform::TileSize { stage: 0, loop_idx: 0, factor: 4 },
+        Transform::TileSize { stage: 0, loop_idx: 2, factor: 8 },
+        Transform::CacheWrite { stage: 0 },
+        Transform::Parallel { stage: 0, loop_idx: 0 },
+    ];
+    let (replayed, applied) = Schedule::new(base.clone()).apply_all(&trace);
+    assert_eq!(applied, trace.len(), "hand-built trace must be legal");
+    use reasoning_compiler::cost::analytical::CostModel as _;
+    let known_latency = hardware.latency(&replayed.current, 9);
+
+    let mut db = Database::in_memory();
+    db.add(TuningRecord {
+        workload_fp: workload_fingerprint(&base),
+        workload: base.name.clone(),
+        platform: "core_i9".to_string(),
+        strategy: "test".to_string(),
+        trace,
+        latency: known_latency,
+        baseline_latency: known_latency * 3.0,
+        seed: 9,
+        timestamp: 1,
+    });
+    let (warm, cache) = db.hints(&base, "core_i9", 4);
+    assert_eq!(warm.entries.len(), 1);
+
+    let run = |seed_warm: bool| {
+        let mut policy = RandomPolicy::new(13);
+        mcts_search_warm(
+            &base,
+            &mut policy,
+            &surrogate,
+            &hardware,
+            &MctsConfig::default(),
+            &plat,
+            20,
+            13,
+            seed_warm.then_some(&warm),
+            Some(cache.clone()),
+        )
+    };
+
+    let seeded = run(true);
+    assert!(seeded.cache_hits > 0, "seeded run answers the trace from cache");
+    assert_eq!(
+        seeded.curve[0].sample, 0,
+        "seeded run's first evaluation is a free warm hit"
+    );
+
+    let unseeded = run(false);
+    assert_eq!(
+        unseeded.curve[0].sample, 1,
+        "without seeding, the first evaluation must be a hardware sample"
+    );
+}
+
+#[test]
+fn empty_warm_start_is_identical_to_cold_search() {
+    // A database with no matching records must not perturb the search:
+    // same seed => byte-identical curves with and without an (empty) db.
+    let db_path = temp_db("empty");
+    let cfg_plain = TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 30,
+        repeats: 1,
+        seed: 11,
+        ..Default::default()
+    };
+    let cfg_db = TuneConfig {
+        db_path: Some(db_path.to_string_lossy().to_string()),
+        ..cfg_plain.clone()
+    };
+    let plain = run_session(&cfg_plain).expect("plain");
+    let with_db = run_session(&cfg_db).expect("with empty db");
+    assert_eq!(plain.runs[0].best_latency, with_db.runs[0].best_latency);
+    assert_eq!(plain.runs[0].curve.len(), with_db.runs[0].curve.len());
+    std::fs::remove_file(&db_path).ok();
+}
