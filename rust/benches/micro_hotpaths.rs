@@ -8,7 +8,9 @@
 //! proposal round. The §Perf target: simulator eval >50k/s so a full
 //! Table-1 sweep stays in minutes.
 
-use reasoning_compiler::cost::{access, analytical, simulator, Platform};
+use reasoning_compiler::cost::{
+    access, analytical, latency_batch, simulator, HardwareModel, LatencyJob, Platform,
+};
 use reasoning_compiler::db::{program_fingerprint, workload_fingerprint, MeasureCache};
 use reasoning_compiler::reasoning::{prompt::PromptContext, ModelProfile, SimulatedLlm};
 use reasoning_compiler::schedule::{sampler, Schedule, Transform};
@@ -65,7 +67,7 @@ fn main() {
         program_fingerprint(tuned_prog)
     }));
     {
-        let mut cache = MeasureCache::new();
+        let cache = MeasureCache::new();
         let fp = program_fingerprint(tuned_prog);
         cache.insert(fp, "core_i9", 1.25e-3);
         results.push(b.run("MeasureCache lookup (hit)", || {
@@ -95,10 +97,43 @@ fn main() {
         }));
     }
 
+    // Serial vs batched evaluation: the PR-2 parallel pipeline. One batch
+    // is a realistic MCTS/ES measurement slice (64 distinct candidates);
+    // the worker counts bracket a typical CI machine. Results are
+    // bit-identical across worker counts — only wall-clock moves.
+    let batch_speedup = {
+        let hw = HardwareModel { platform: plat.clone() };
+        let mut rng3 = Pcg::new(9);
+        let cands: Vec<_> = (0..64)
+            .map(|_| {
+                let seq = sampler::random_sequence(&sched.current, 4, &mut rng3);
+                sched.apply_all(&seq).0.current
+            })
+            .collect();
+        let jobs: Vec<LatencyJob> = cands
+            .iter()
+            .enumerate()
+            .map(|(i, p)| LatencyJob { program: p, seed: 100 + i as u64 })
+            .collect();
+        let serial = b.run("latency_batch x64 (workers=1, serial)", || {
+            latency_batch(&hw, &jobs, 1)
+        });
+        let batched = b.run("latency_batch x64 (workers=4, pooled)", || {
+            latency_batch(&hw, &jobs, 4)
+        });
+        let speedup = serial.mean_ns / batched.mean_ns.max(1.0);
+        results.push(serial);
+        results.push(batched);
+        speedup
+    };
+
     println!("\n== micro hot paths ==");
     for r in &results {
         println!("{}", r.report());
     }
+    println!(
+        "\nbatched evaluation wall-clock speedup (4 workers vs serial, 64-candidate batch): {batch_speedup:.2}x"
+    );
     // §Perf acceptance: simulator throughput.
     let sim = &results[1];
     println!(

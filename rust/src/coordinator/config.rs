@@ -72,6 +72,19 @@ pub struct TuneConfig {
     pub warm_start: bool,
     /// How many top database records to warm-start from.
     pub warm_top_k: usize,
+    /// Worker threads for parallel execution: sizes the session's repeat
+    /// pool and each run's batched-evaluation fan-out. `0` = auto
+    /// (`RCC_WORKERS` env var if set, else the machine's available
+    /// parallelism). Any value yields identical results when
+    /// `eval_batch <= 1` — workers only change wall-clock; `1` forces the
+    /// fully serial path.
+    pub workers: usize,
+    /// MCTS leaves expanded + measured per iteration (leaf-parallel batch
+    /// width). `1` (the default) is the original serial trajectory and
+    /// keeps results machine-independent; `>1` changes the search
+    /// trajectory deterministically per seed; `0` = match the resolved
+    /// worker count. Evolutionary search ignores this knob.
+    pub eval_batch: usize,
 }
 
 /// Conventional database location used by the CLI when `--db` is not given.
@@ -95,11 +108,37 @@ impl Default for TuneConfig {
             db_path: None,
             warm_start: true,
             warm_top_k: 8,
+            workers: 0,
+            eval_batch: 1,
         }
     }
 }
 
 impl TuneConfig {
+    /// The concrete worker count: the explicit knob, else `RCC_WORKERS`,
+    /// else the machine's available parallelism.
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        if let Some(n) = std::env::var("RCC_WORKERS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&n| n > 0)
+        {
+            return n;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    /// The concrete MCTS evaluation-batch width (`0` = match workers).
+    pub fn resolved_eval_batch(&self) -> usize {
+        if self.eval_batch > 0 {
+            self.eval_batch
+        } else {
+            self.resolved_workers()
+        }
+    }
     /// Load from a TOML-subset file; missing keys keep defaults.
     pub fn from_file(path: &Path) -> Result<TuneConfig> {
         let text = std::fs::read_to_string(path)
@@ -130,6 +169,8 @@ impl TuneConfig {
             },
             warm_start: doc.get_bool("db.warm_start", d.warm_start),
             warm_top_k: doc.get_usize("db.warm_top_k", d.warm_top_k),
+            workers: doc.get_usize("search.workers", d.workers),
+            eval_batch: doc.get_usize("search.eval_batch", d.eval_batch),
         }
     }
 
@@ -163,6 +204,8 @@ impl TuneConfig {
             self.warm_start = false;
         }
         self.warm_top_k = args.opt_usize("warm-top-k", self.warm_top_k);
+        self.workers = args.opt_usize("workers", self.workers);
+        self.eval_batch = args.opt_usize("eval-batch", self.eval_batch);
     }
 }
 
@@ -252,6 +295,29 @@ history_depth = 3
         let args = Args::parse("tune --no-db".split_whitespace().map(String::from));
         c.apply_cli(&args);
         assert_eq!(c.db_path, None);
+    }
+
+    #[test]
+    fn parallelism_knobs_parse_and_resolve() {
+        let c = TuneConfig::default();
+        assert_eq!(c.workers, 0, "default is auto");
+        assert_eq!(c.eval_batch, 1, "default trajectory is serial");
+        assert!(c.resolved_workers() >= 1);
+        assert_eq!(c.resolved_eval_batch(), 1);
+
+        let doc = Doc::parse("[search]\nworkers = 3\neval_batch = 2\n").unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.workers, 3);
+        assert_eq!(c.resolved_workers(), 3, "explicit knob wins over env/auto");
+        assert_eq!(c.resolved_eval_batch(), 2);
+
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --workers 4 --eval-batch 0".split_whitespace().map(String::from),
+        );
+        c.apply_cli(&args);
+        assert_eq!(c.resolved_workers(), 4);
+        assert_eq!(c.resolved_eval_batch(), 4, "eval_batch=0 follows workers");
     }
 
     #[test]

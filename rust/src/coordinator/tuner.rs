@@ -12,7 +12,8 @@ use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, Warm
 use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
 use crate::schedule::Schedule;
 use crate::search::{
-    evolutionary_search_warm, mcts_search_warm, EvoConfig, MctsConfig, RandomPolicy, SearchResult,
+    EvoConfig, EvolutionaryStrategy, MctsConfig, MctsStrategy, RandomPolicy, SearchContext,
+    SearchResult, SearchStrategy,
 };
 use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
@@ -112,7 +113,10 @@ pub fn run_once_warm(
     Ok(run_once_with_accounting(program, cfg, seed, hints)?.0)
 }
 
-/// Run one strategy once, returning LLM accounting when applicable.
+/// Run one strategy once, returning LLM accounting when applicable. All
+/// strategies dispatch through the [`SearchStrategy`] trait; the
+/// parallelism knobs (`cfg.workers`, `cfg.eval_batch`) flow into the
+/// [`SearchContext`] driving the batched evaluation pipeline.
 fn run_once_with_accounting(
     program: &Program,
     cfg: &TuneConfig,
@@ -123,29 +127,20 @@ fn run_once_with_accounting(
     let surrogate = SurrogateModel { platform: platform.clone() };
     let hardware = HardwareModel { platform: platform.clone() };
     let mcts_cfg = mcts_cfg_for(cfg);
-    let warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
-    let cache = hints.map(|h| h.cache.clone());
+    let mut ctx =
+        SearchContext::new(program, &surrogate, &hardware, &platform, cfg.budget, seed);
+    ctx.warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
+    ctx.cache = hints.map(|h| &h.cache);
+    ctx.workers = cfg.resolved_workers();
+    ctx.eval_batch = cfg.resolved_eval_batch();
     let result = match cfg.strategy {
         Strategy::Evolutionary => {
-            let r = evolutionary_search_warm(
-                program,
-                &surrogate,
-                &hardware,
-                &EvoConfig::default(),
-                &platform,
-                cfg.budget,
-                seed,
-                warm,
-                cache,
-            );
+            let r = EvolutionaryStrategy::new(EvoConfig::default()).search(&ctx);
             (r, CostTracker::default(), 0.0, 0)
         }
         Strategy::Mcts => {
             let mut policy = RandomPolicy::new(seed);
-            let r = mcts_search_warm(
-                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
-                seed, warm, cache,
-            );
+            let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
             (r, CostTracker::default(), 0.0, 0)
         }
         Strategy::LlmMcts => {
@@ -153,10 +148,7 @@ fn run_once_with_accounting(
                 .ok_or_else(|| anyhow!("unknown model {:?} (see `rcc models`)", cfg.model))?;
             let engine = SimulatedLlm::new(model, seed);
             let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
-            let r = mcts_search_warm(
-                program, &mut policy, &surrogate, &hardware, &mcts_cfg, &platform, cfg.budget,
-                seed, warm, cache,
-            );
+            let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
             let fb = policy.fallbacks.fallback_rate();
             let expansions = policy.fallbacks.fallbacks;
             (r, policy.costs, fb, expansions)
@@ -200,20 +192,30 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
     let mut outcomes: Vec<Option<Result<(SearchResult, CostTracker, f64, u64)>>> =
         (0..seeds.len()).map(|_| None).collect();
 
-    std::thread::scope(|scope| {
-        let mut handles = Vec::new();
-        for (slot, &seed) in outcomes.iter_mut().zip(&seeds) {
-            let program = &program;
-            let cfg = &cfg;
-            let hints = hints.as_ref();
-            handles.push(scope.spawn(move || {
-                *slot = Some(run_once_with_accounting(program, cfg, seed, hints));
-            }));
-        }
-        for h in handles {
-            h.join().expect("tuning repeat panicked");
+    // Repeats run across a bounded worker pool (`cfg.workers`, 0 = auto).
+    // Each repeat is an independent seeded run over a private clone of the
+    // hints cache, so the pool size never affects results — `workers = 1`
+    // runs the repeats strictly serially. The session owns the worker
+    // budget at one level: repeats split it, and each repeat's inner
+    // batch-evaluation fan-out gets the remainder (at least 1) instead of
+    // multiplying into `workers²` threads. `eval_batch` is resolved
+    // against the *session* worker count first so the leaf-parallel
+    // trajectory does not depend on how many repeats share the pool.
+    let resolved = cfg.resolved_workers();
+    let pool = resolved.min(seeds.len()).max(1);
+    let mut run_cfg = cfg.clone();
+    run_cfg.eval_batch = cfg.resolved_eval_batch();
+    run_cfg.workers = (resolved / pool).max(1);
+    let run_cfg = &run_cfg;
+    let hints = hints.as_ref();
+    let mut work: Vec<(&mut Option<_>, u64)> =
+        outcomes.iter_mut().zip(seeds.iter().copied()).collect();
+    crate::util::pool::scoped_chunks(&mut work, pool, |batch| {
+        for (slot, seed) in batch.iter_mut() {
+            **slot = Some(run_once_with_accounting(program, run_cfg, *seed, hints));
         }
     });
+    drop(work);
 
     let mut runs = Vec::new();
     let mut llm_costs = CostTracker::default();
@@ -307,6 +309,43 @@ pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> Result<E2eResult> {
         total_samples,
         weighted_speedup: base_total / opt_total,
     })
+}
+
+/// Tune several registered models concurrently, one session per model,
+/// across a worker pool of `base_cfg.resolved_workers()` threads. All
+/// sessions share one tuning database path; the database's advisory file
+/// lock serializes their commits, so no session's records are lost
+/// (the serving-side "tune everything you host at once" path behind
+/// `rcc serve --tune`). Models that don't name a known workload are
+/// skipped. Returns `(model, session)` pairs in input order.
+pub fn tune_models(models: &[String], base_cfg: &TuneConfig) -> Result<Vec<(String, SessionResult)>> {
+    let tunable: Vec<&String> = models
+        .iter()
+        .filter(|m| WorkloadId::from_name(m).is_some())
+        .collect();
+    if tunable.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut slots: Vec<Option<Result<SessionResult>>> =
+        (0..tunable.len()).map(|_| None).collect();
+    let mut work: Vec<(&String, &mut Option<Result<SessionResult>>)> =
+        tunable.iter().copied().zip(slots.iter_mut()).collect();
+    crate::util::pool::scoped_chunks(&mut work, base_cfg.resolved_workers(), |batch| {
+        for (model, slot) in batch.iter_mut() {
+            let mut cfg = base_cfg.clone();
+            cfg.workload = (*model).clone();
+            // Model-level concurrency already fills the pool; keep each
+            // session internally serial to avoid nested pools.
+            cfg.workers = 1;
+            **slot = Some(run_session(&cfg));
+        }
+    });
+    drop(work);
+    tunable
+        .into_iter()
+        .zip(slots)
+        .map(|(m, s)| Ok((m.clone(), s.expect("model session ran")?)))
+        .collect()
 }
 
 /// Replay the best trace of a search result into a concrete program

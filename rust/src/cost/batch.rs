@@ -1,0 +1,88 @@
+//! Parallel batched cost-model evaluation.
+//!
+//! The search engines spend almost all of their wall-clock inside
+//! `CostModel::latency` calls. Those calls are pure functions of
+//! `(program, seed)`, so a batch of candidates can fan out across a worker
+//! pool with no change in results: each job's seed is fixed by the caller
+//! before the fan-out, and results come back in input order regardless of
+//! thread scheduling. This is the evaluation-layer half of the parallel
+//! pipeline; budget metering and cache consultation stay in
+//! `search::common::Evaluator`, which plans a batch serially, calls
+//! [`latency_batch`], then folds results back in deterministic order.
+
+use crate::tir::Program;
+
+use super::analytical::CostModel;
+
+/// One batched evaluation job: a program variant and the measurement seed
+/// it must be evaluated under (assigned by the caller, typically
+/// `base_seed + sample_number` so parallel and serial execution agree).
+pub struct LatencyJob<'a> {
+    pub program: &'a Program,
+    pub seed: u64,
+}
+
+/// Evaluate `jobs` on `model` across up to `workers` OS threads, returning
+/// latencies in input order. `workers <= 1` (or a single job) runs inline
+/// with no threads spawned — the exact serial path. Results are
+/// bit-identical for every worker count because each job's seed is fixed
+/// up front and `CostModel::latency` is deterministic per `(program, seed)`.
+pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], workers: usize) -> Vec<f64> {
+    if workers <= 1 || jobs.len() <= 1 {
+        return jobs.iter().map(|j| model.latency(j.program, j.seed)).collect();
+    }
+    let mut out = vec![0.0f64; jobs.len()];
+    let mut work: Vec<(&LatencyJob, &mut f64)> = jobs.iter().zip(out.iter_mut()).collect();
+    crate::util::pool::scoped_chunks(&mut work, workers, |batch| {
+        for (job, slot) in batch.iter_mut() {
+            **slot = model.latency(job.program, job.seed);
+        }
+    });
+    drop(work);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cost::{HardwareModel, Platform};
+    use crate::schedule::{sampler, Schedule};
+    use crate::tir::workload::WorkloadId;
+    use crate::util::rng::Pcg;
+
+    fn candidates(n: usize) -> Vec<Program> {
+        let base = Schedule::new(WorkloadId::DeepSeekMoe.build_test());
+        let mut rng = Pcg::new(11);
+        (0..n)
+            .map(|_| {
+                let seq = sampler::random_sequence(&base.current, 3, &mut rng);
+                base.apply_all(&seq).0.current
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parallel_matches_serial_bit_for_bit() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        let progs = candidates(23);
+        let jobs: Vec<LatencyJob> = progs
+            .iter()
+            .enumerate()
+            .map(|(i, p)| LatencyJob { program: p, seed: 1000 + i as u64 })
+            .collect();
+        let serial = latency_batch(&hw, &jobs, 1);
+        for workers in [2, 4, 7] {
+            assert_eq!(latency_batch(&hw, &jobs, workers), serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_oversized_pools() {
+        let hw = HardwareModel { platform: Platform::core_i9() };
+        assert!(latency_batch(&hw, &[], 4).is_empty());
+        let progs = candidates(2);
+        let jobs: Vec<LatencyJob> =
+            progs.iter().map(|p| LatencyJob { program: p, seed: 5 }).collect();
+        assert_eq!(latency_batch(&hw, &jobs, 64).len(), 2);
+    }
+}

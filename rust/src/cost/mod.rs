@@ -5,10 +5,12 @@
 
 pub mod access;
 pub mod analytical;
+pub mod batch;
 pub mod features;
 pub mod platform;
 pub mod simulator;
 
 pub use analytical::{CostModel, HardwareModel, SurrogateModel};
+pub use batch::{latency_batch, LatencyJob};
 pub use features::Features;
 pub use platform::Platform;

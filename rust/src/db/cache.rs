@@ -1,4 +1,4 @@
-//! In-memory measurement cache.
+//! Thread-safe in-memory measurement cache.
 //!
 //! Keyed by `(program fingerprint, platform)`: if two candidates lower to
 //! the same concrete program on the same platform, the hardware model owes
@@ -8,21 +8,63 @@
 //! records when a session warm-starts, which is how a warm run reports
 //! nonzero hits before its first hardware measurement.
 //!
+//! The store is sharded behind mutexes so concurrent tuners (parallel
+//! batch evaluation, `rcc serve` tuning several models at once) can share
+//! one cache: `get`/`insert` take `&self`. Two handle semantics exist and
+//! the distinction is load-bearing for determinism:
+//!
+//! - [`MeasureCache::clone`] **deep-copies** the entries. Independent
+//!   search runs (the repeats of one session) each clone the session
+//!   hints, so one run's discoveries never leak into another and every
+//!   run stays bit-reproducible per seed.
+//! - [`MeasureCache::share`] returns a handle over the **same** storage.
+//!   Use it when sharing is the point (threads of one evaluator batch, or
+//!   deliberately pooled measurements across concurrent sessions).
+//!
 //! The cache is a pure store; hit/miss accounting lives in the single
 //! budget-aware consumer (`Evaluator`), where "miss" can be defined as
 //! "actually invoked the hardware model".
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Per-platform fingerprint → latency map; one per shard.
+type Shard = HashMap<String, HashMap<u64, f64>>;
+
+/// Number of lock shards: enough that a worker pool rarely contends, small
+/// enough that `len`/deep-clone stay trivial.
+const SHARDS: usize = 8;
 
 /// Measurement store: (program fingerprint, platform) → latency.
 ///
 /// Entries are nested per platform so the per-candidate hot path (one
 /// lookup per `Evaluator::measure`) hashes a borrowed `&str` + `u64` and
-/// never allocates; a platform key is only allocated once, on the first
-/// insert for that platform.
-#[derive(Debug, Clone, Default)]
+/// never allocates; a platform key is only allocated once per shard, on
+/// the first insert for that platform.
+#[derive(Debug)]
 pub struct MeasureCache {
-    entries: HashMap<String, HashMap<u64, f64>>,
+    shards: Arc<[Mutex<Shard>; SHARDS]>,
+}
+
+impl Default for MeasureCache {
+    fn default() -> Self {
+        MeasureCache {
+            shards: Arc::new(std::array::from_fn(|_| Mutex::new(Shard::new()))),
+        }
+    }
+}
+
+impl Clone for MeasureCache {
+    /// Deep copy: the clone has its own storage. See the module docs for
+    /// why (per-run determinism); use [`MeasureCache::share`] for a handle
+    /// over the same storage.
+    fn clone(&self) -> Self {
+        let copy = MeasureCache::new();
+        for (src, dst) in self.shards.iter().zip(copy.shards.iter()) {
+            *dst.lock().unwrap() = src.lock().unwrap().clone();
+        }
+        copy
+    }
 }
 
 impl MeasureCache {
@@ -30,17 +72,33 @@ impl MeasureCache {
         MeasureCache::default()
     }
 
+    /// A second handle over the same storage: inserts through either handle
+    /// are visible to both. This is what concurrent tuners share.
+    pub fn share(&self) -> MeasureCache {
+        MeasureCache { shards: Arc::clone(&self.shards) }
+    }
+
+    #[inline]
+    fn shard(&self, program_fp: u64) -> &Mutex<Shard> {
+        &self.shards[(program_fp % SHARDS as u64) as usize]
+    }
+
     pub fn len(&self) -> usize {
-        self.entries.values().map(|m| m.len()).sum()
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().values().map(|m| m.len()).sum::<usize>())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.values().all(|m| m.is_empty())
+        self.len() == 0
     }
 
     /// Look up a known measurement.
     pub fn get(&self, program_fp: u64, platform: &str) -> Option<f64> {
-        self.entries
+        self.shard(program_fp)
+            .lock()
+            .unwrap()
             .get(platform)
             .and_then(|m| m.get(&program_fp))
             .copied()
@@ -48,15 +106,16 @@ impl MeasureCache {
 
     /// Record a measurement. Last write wins (re-measurement under a
     /// different seed refreshes the entry).
-    pub fn insert(&mut self, program_fp: u64, platform: &str, latency: f64) {
-        match self.entries.get_mut(platform) {
+    pub fn insert(&self, program_fp: u64, platform: &str, latency: f64) {
+        let mut shard = self.shard(program_fp).lock().unwrap();
+        match shard.get_mut(platform) {
             Some(m) => {
                 m.insert(program_fp, latency);
             }
             None => {
                 let mut m = HashMap::new();
                 m.insert(program_fp, latency);
-                self.entries.insert(platform.to_string(), m);
+                shard.insert(platform.to_string(), m);
             }
         }
     }
@@ -68,7 +127,7 @@ mod tests {
 
     #[test]
     fn store_and_get_per_platform() {
-        let mut c = MeasureCache::new();
+        let c = MeasureCache::new();
         assert!(c.get(1, "core_i9").is_none());
         c.insert(1, "core_i9", 0.5);
         assert_eq!(c.get(1, "core_i9"), Some(0.5));
@@ -82,5 +141,38 @@ mod tests {
         assert_eq!(c.len(), 2);
         assert!(!c.is_empty());
         assert!(MeasureCache::new().is_empty());
+    }
+
+    #[test]
+    fn clone_is_deep_share_is_shallow() {
+        let c = MeasureCache::new();
+        c.insert(7, "core_i9", 1.0);
+        let deep = c.clone();
+        let shallow = c.share();
+        c.insert(8, "core_i9", 2.0);
+        assert_eq!(deep.len(), 1, "clone must not see later inserts");
+        assert_eq!(shallow.len(), 2, "share must see later inserts");
+        deep.insert(9, "core_i9", 3.0);
+        assert!(c.get(9, "core_i9").is_none(), "clone writes stay private");
+    }
+
+    #[test]
+    fn concurrent_inserts_and_gets() {
+        let cache = MeasureCache::new();
+        const THREADS: u64 = 8;
+        const PER_THREAD: u64 = 200;
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let handle = cache.share();
+                scope.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        let fp = t * PER_THREAD + i;
+                        handle.insert(fp, "core_i9", fp as f64);
+                        assert_eq!(handle.get(fp, "core_i9"), Some(fp as f64));
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), (THREADS * PER_THREAD) as usize);
     }
 }

@@ -16,9 +16,11 @@
 //!   `CacheWrite`), traces, legality and random sampling.
 //! - [`cost`] — feature extraction, the analytical rollout surrogate f-hat
 //!   and the per-platform hardware simulator f.
-//! - [`search`] — MCTS with UCT and the TVM-style Evolutionary Search
-//!   baseline, both warm-startable from the tuning database and backed by
-//!   the measurement cache.
+//! - [`search`] — MCTS with UCT (serial or leaf-parallel with virtual
+//!   loss) and the TVM-style Evolutionary Search baseline, unified behind
+//!   the `SearchStrategy` trait, both warm-startable from the tuning
+//!   database and evaluated through a batched, worker-pooled measurement
+//!   pipeline backed by the measurement cache.
 //! - [`reasoning`] — the paper's contribution: prompt construction,
 //!   proposal parsing/validation with fallback, simulated LLM model
 //!   profiles and API cost tracking.

@@ -9,7 +9,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use reasoning_compiler::coordinator::{
-    run_e2e, run_session, Registry, Server, ServerConfig, Strategy, TuneConfig, DEFAULT_DB_PATH,
+    run_e2e, run_session, tune_models, Registry, Server, ServerConfig, Strategy, TuneConfig,
+    DEFAULT_DB_PATH,
 };
 use reasoning_compiler::db::{workload_fingerprint, Database};
 use reasoning_compiler::cost::{features, Platform};
@@ -32,6 +33,13 @@ Tuning
               --budget N --repeats N --seed N --model NAME
               --history-depth N --branching N [--config FILE]
               --db FILE | --no-db  --no-warm-start --warm-top-k N
+              --workers N    worker threads: repeat pool + batched
+                             evaluation (0 = auto: RCC_WORKERS env or all
+                             cores; 1 = fully serial; results identical
+                             for every N)
+              --eval-batch N MCTS leaves measured per iteration (1 =
+                             serial trajectory; >1 = leaf-parallel search,
+                             deterministic per seed; 0 = match --workers)
   compare     Run all three strategies head-to-head on one benchmark.
   e2e         Tune the end-to-end Llama-3-8B task set.
 
@@ -39,6 +47,8 @@ Tuning database
   db stats    Aggregate stats of the tuning-record database. [--db FILE]
   db top      Best recorded schedules for one (workload, platform).
               --workload NAME --platform NAME [--k N] [--db FILE]
+  db gc       Compact the database: keep the top-k records per
+              (workload, platform), drop the rest. [--k N] [--db FILE]
 
 Paper experiments (each accepts --scale smoke|default|full, --seed, --out DIR)
   figure3     Fig. 3 / Table 3 convergence curves
@@ -60,6 +70,10 @@ Serving & inspection
   serve       Dynamic-batching serving demo over the AOT artifacts,
               annotated with best-known schedules from the tuning db.
               --requests N --max-batch N [--db FILE]
+              --tune         first tune every registered model, running
+                             the sessions concurrently against the shared
+                             database (file-locked)
+              --tune-budget N --tune-repeats N  per-model session size
   artifacts   List + smoke-run the AOT artifacts.
   show        Print a workload's TIR. --workload NAME
   prompt      Print a real optimization prompt + simulated LLM response.
@@ -319,10 +333,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_batch
     );
     let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+    let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
+    // Optionally tune every registered model first, sessions running
+    // concurrently against the shared (file-locked) tuning database, so a
+    // fresh deployment starts serving with best-known schedules.
+    if args.has_flag("tune") {
+        let mut cfg = TuneConfig::default();
+        cfg.apply_cli(args);
+        cfg.budget = args.opt_usize("tune-budget", 40);
+        cfg.repeats = args.opt_usize("tune-repeats", 1);
+        cfg.db_path = Some(db_path.to_string_lossy().to_string());
+        let models: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        println!(
+            "tuning {} registered models concurrently ({} workers, budget {} x{} repeats)...",
+            models.len(),
+            cfg.resolved_workers(),
+            cfg.budget,
+            cfg.repeats
+        );
+        for (model, session) in tune_models(&models, &cfg)? {
+            println!(
+                "  {:<18} {:.2}x mean speedup ({} samples, {} cache hits)",
+                model,
+                session.mean_speedup(),
+                session.total_samples(),
+                session.total_cache_hits()
+            );
+        }
+    }
     // Annotate served models with their best-known tuned schedules. A
     // missing db is only acceptable when the path is the implicit default;
     // an explicit --db that doesn't exist is a user error, not a no-op.
-    let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
     if args.opt("db").is_some() && !db_path.exists() {
         return Err(anyhow!("tuning db {} does not exist", db_path.display()));
     }
@@ -348,8 +389,23 @@ fn cmd_db(args: &Args) -> Result<()> {
         .first()
         .map(|s| s.as_str())
         .unwrap_or("stats");
-    let db = Database::open(&db_path)?;
+    let mut db = Database::open(&db_path)?;
     match action {
+        "gc" => {
+            let k = args.opt_usize("k", 8);
+            let report = db.gc(k)?;
+            // Total from the report, not this handle's pre-gc snapshot:
+            // gc re-reads the file and may see other tuners' commits.
+            println!(
+                "compacted {}: kept {} of {} records, dropped {} \
+                 (top-{k} per workload/platform)",
+                db_path.display(),
+                report.kept,
+                report.kept + report.dropped,
+                report.dropped
+            );
+            Ok(())
+        }
         "stats" => {
             println!("tuning db {}:", db_path.display());
             println!("{}", db.stats().render());
@@ -400,7 +456,9 @@ fn cmd_db(args: &Args) -> Result<()> {
             println!("\nbest trace:\n{}", replayed.render_trace());
             Ok(())
         }
-        other => Err(anyhow!("unknown db action {other:?}; use `db stats` or `db top`")),
+        other => Err(anyhow!(
+            "unknown db action {other:?}; use `db stats`, `db top` or `db gc`"
+        )),
     }
 }
 

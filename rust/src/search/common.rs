@@ -1,13 +1,158 @@
 //! Shared search infrastructure: proposal policies, sample accounting,
 //! convergence curves and the strategy interface.
+//!
+//! The pieces compose bottom-up: [`Evaluator`] meters the hardware budget
+//! one candidate at a time; [`BatchEvaluator`] plans a whole batch against
+//! the cache and budget, fans the needed hardware measurements across a
+//! worker pool (`cost::latency_batch`), and folds results back in
+//! deterministic candidate order; [`SearchStrategy`] is the uniform entry
+//! point (`MctsStrategy`, `EvolutionaryStrategy`) over a [`SearchContext`]
+//! carrying the models, budget, warm-start hints and parallelism knobs.
+//!
+//! Determinism contract: `workers = 1, eval_batch = 1` reproduces the
+//! original serial search bit-for-bit; raising `workers` never changes
+//! results (only wall-clock) because every measurement's seed is fixed at
+//! plan time; raising `eval_batch` changes the MCTS trajectory (leaf
+//! parallelism) but stays bit-reproducible per seed.
 
-use crate::cost::{CostModel, Platform};
+use std::collections::HashMap;
+
+use crate::cost::{latency_batch, CostModel, LatencyJob, Platform};
 use crate::db::{program_fingerprint, MeasureCache};
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
 
 pub use crate::db::WarmStart;
+
+/// Everything one search run needs, bundled so strategies share a uniform
+/// signature. Build with [`SearchContext::new`] and override the optional
+/// fields (`warm`, `cache`, `workers`, `eval_batch`) as needed.
+pub struct SearchContext<'a> {
+    pub base: &'a Program,
+    /// Rollout surrogate f̂ (never consumes samples).
+    pub surrogate: &'a dyn CostModel,
+    /// Hardware model f (every invocation consumes one sample).
+    pub hardware: &'a dyn CostModel,
+    pub platform: &'a Platform,
+    /// Hardware-measurement budget (samples).
+    pub budget: usize,
+    pub seed: u64,
+    /// Known-good traces from the tuning database, seeded into the MCTS
+    /// root frontier / the evolutionary initial population.
+    pub warm: Option<&'a WarmStart>,
+    /// Measurement cache consulted before spending samples. The run
+    /// evaluates through a private deep copy (see `MeasureCache::clone`)
+    /// so concurrent runs stay independently deterministic.
+    pub cache: Option<&'a MeasureCache>,
+    /// Worker threads for batched hardware evaluation (1 = serial).
+    pub workers: usize,
+    /// Candidates expanded and measured per MCTS iteration (leaf-parallel
+    /// batch width). 1 = the original serial trajectory. Evolutionary
+    /// search ignores this: its natural batch is the per-generation
+    /// measurement slice.
+    pub eval_batch: usize,
+}
+
+impl<'a> SearchContext<'a> {
+    pub fn new(
+        base: &'a Program,
+        surrogate: &'a dyn CostModel,
+        hardware: &'a dyn CostModel,
+        platform: &'a Platform,
+        budget: usize,
+        seed: u64,
+    ) -> SearchContext<'a> {
+        SearchContext {
+            base,
+            surrogate,
+            hardware,
+            platform,
+            budget,
+            seed,
+            warm: None,
+            cache: None,
+            workers: 1,
+            eval_batch: 1,
+        }
+    }
+
+    /// A budget evaluator for this run (with the cache attached when the
+    /// context has one).
+    pub fn evaluator(&self) -> Evaluator<'a> {
+        match self.cache {
+            Some(c) => Evaluator::with_cache(
+                self.hardware,
+                self.base,
+                self.budget,
+                self.seed,
+                c.clone(),
+                self.platform.name,
+            ),
+            None => Evaluator::new(self.hardware, self.base, self.budget, self.seed),
+        }
+    }
+
+    /// The batched evaluation pipeline for this run: [`Self::evaluator`]
+    /// behind a worker pool of `self.workers`.
+    pub fn batch_evaluator(&self) -> BatchEvaluator<'a> {
+        BatchEvaluator { ev: self.evaluator(), workers: self.workers }
+    }
+}
+
+/// A search engine behind a uniform interface: MCTS (vanilla or
+/// LLM-guided, via the [`ProposalPolicy`] it carries) and Evolutionary
+/// Search. The coordinator dispatches through this trait; the legacy free
+/// functions (`mcts_search*`, `evolutionary_search*`) are thin wrappers
+/// that build a serial [`SearchContext`].
+pub trait SearchStrategy {
+    /// Strategy label recorded in [`SearchResult::strategy`].
+    fn name(&self) -> String;
+    /// Run the search to budget exhaustion (or saturation).
+    fn search(&mut self, ctx: &SearchContext) -> SearchResult;
+}
+
+/// One warm-start trace replayed onto the base program, ready for seeding.
+pub struct WarmReplay {
+    /// Index of the source entry in `WarmStart::entries` (gaps from
+    /// non-replayable entries preserved — MCTS derives surrogate seeds
+    /// from this, exactly as the pre-trait serial code did).
+    pub index: usize,
+    pub schedule: Schedule,
+    /// `db::program_fingerprint` of the replayed program.
+    pub fp: u64,
+    /// The entry's recorded latency.
+    pub known_latency: f64,
+}
+
+/// Replay warm-start traces onto a fresh schedule of the base program,
+/// dropping entries that no longer apply (partial replays are kept, like
+/// any other candidate). Returns at most `max` replayed entries,
+/// best-recorded-first. Deliberately does NOT deduplicate: MCTS dedups
+/// against its tree fingerprints and evolutionary search keeps duplicates
+/// as extra population mass — both exactly as the pre-trait serial code
+/// behaved, which the `workers = 1` bit-parity contract pins. Shared by
+/// both strategies so the replay logic cannot drift between them.
+pub fn replay_warm_entries(
+    base_sched: &Schedule,
+    warm: Option<&WarmStart>,
+    max: usize,
+) -> Vec<WarmReplay> {
+    let mut out = Vec::new();
+    let Some(ws) = warm else { return out };
+    for (index, (trace, known_latency)) in ws.entries.iter().enumerate() {
+        if out.len() >= max {
+            break;
+        }
+        let (schedule, applied) = base_sched.apply_all(trace);
+        if applied == 0 {
+            continue;
+        }
+        let fp = program_fingerprint(&schedule.current);
+        out.push(WarmReplay { index, schedule, fp, known_latency: *known_latency });
+    }
+    out
+}
 
 /// Context handed to a proposal policy at expansion time: the selected node,
 /// its ancestor chain (parent first), and their predicted scores — exactly
@@ -182,6 +327,12 @@ impl<'a> Evaluator<'a> {
         self.used >= self.budget
     }
 
+    /// Whether a measurement cache is attached (batch planning needs to
+    /// know whether fingerprints are worth computing).
+    pub fn has_cache(&self) -> bool {
+        self.cache.is_some()
+    }
+
     /// Cache accounting so far (hits, misses); (0, 0) without a cache.
     pub fn cache_counts(&self) -> (usize, usize) {
         (self.cache_hits, self.cache_misses)
@@ -234,19 +385,24 @@ impl<'a> Evaluator<'a> {
             self.hardware
                 .latency(&candidate.current, self.seed.wrapping_add(self.used as u64))
         };
+        self.record(candidate, lat);
+        Some(lat)
+    }
+
+    /// Fold one resolved measurement into best-so-far and the curve.
+    /// Cache hits log at the current sample count (no sample consumed),
+    /// so a warm start can reach a target speedup "at sample 0".
+    fn record(&mut self, candidate: &Schedule, lat: f64) {
         if lat < self.best_latency {
             self.best_latency = lat;
             self.best_trace = candidate.trace.clone();
         }
-        // Cache hits log at the current sample count (no sample consumed),
-        // so a warm start can reach a target speedup "at sample 0".
         self.curve.push(Measurement {
             sample: self.used,
             latency: lat,
             best_speedup: self.baseline_latency / self.best_latency,
             trace_len: candidate.trace.len(),
         });
-        Some(lat)
     }
 
     pub fn into_result(self, strategy: &str, workload: &str, platform: &str) -> SearchResult {
@@ -263,6 +419,148 @@ impl<'a> Evaluator<'a> {
             cache_hits,
             cache_misses,
         }
+    }
+}
+
+/// How one candidate of a batch resolves against cache and budget,
+/// decided serially at plan time so the parallel fan-out cannot affect
+/// accounting order.
+enum BatchPlan {
+    /// Already in the cache: free, latency known at plan time.
+    Hit(f64),
+    /// Needs a hardware measurement; `job` indexes the fan-out results.
+    Miss { job: usize },
+    /// Same fingerprint as an earlier miss in this batch: free once that
+    /// job resolves (the serial loop would hit the just-inserted entry).
+    HitOfMiss { job: usize },
+}
+
+/// The batched evaluation pipeline: wraps an [`Evaluator`], plans a whole
+/// batch of candidates against the measurement cache and remaining budget,
+/// fans the required hardware measurements across `workers` threads
+/// (`cost::latency_batch`), then folds results back in candidate order.
+///
+/// Results are bit-identical to calling [`Evaluator::measure`] on each
+/// candidate in order (with callers breaking at the first `None`), for
+/// every worker count: each measurement's sample number — and therefore
+/// its seed — is assigned serially at plan time.
+pub struct BatchEvaluator<'a> {
+    pub ev: Evaluator<'a>,
+    /// Threads for the hardware fan-out (1 = fully inline/serial).
+    pub workers: usize,
+}
+
+impl<'a> BatchEvaluator<'a> {
+    pub fn new(ev: Evaluator<'a>, workers: usize) -> BatchEvaluator<'a> {
+        BatchEvaluator { ev, workers }
+    }
+
+    pub fn exhausted(&self) -> bool {
+        self.ev.exhausted()
+    }
+
+    pub fn into_result(self, strategy: &str, workload: &str, platform: &str) -> SearchResult {
+        self.ev.into_result(strategy, workload, platform)
+    }
+
+    /// Evaluate a batch of candidates. Fingerprints are computed here when
+    /// a cache is attached (as [`Evaluator::measure`] would).
+    pub fn measure_batch(&mut self, candidates: &[&Schedule]) -> Vec<Option<f64>> {
+        let fps: Option<Vec<u64>> = self
+            .ev
+            .has_cache()
+            .then(|| candidates.iter().map(|c| program_fingerprint(&c.current)).collect());
+        self.measure_batch_inner(candidates, fps.as_deref())
+    }
+
+    /// Like [`BatchEvaluator::measure_batch`] with fingerprints already
+    /// computed (MCTS fingerprints every candidate for tree dedup anyway).
+    pub fn measure_batch_with_fingerprints(
+        &mut self,
+        candidates: &[(&Schedule, u64)],
+    ) -> Vec<Option<f64>> {
+        let scheds: Vec<&Schedule> = candidates.iter().map(|&(s, _)| s).collect();
+        let fps: Vec<u64> = candidates.iter().map(|&(_, fp)| fp).collect();
+        self.measure_batch_inner(&scheds, Some(&fps))
+    }
+
+    /// Returned vector is aligned with `candidates`; a `None` means the
+    /// budget could not afford that candidate's measurement, and (matching
+    /// the serial break-on-`None` pattern) every later candidate is also
+    /// `None` — unevaluated, even if it would have been a cache hit.
+    fn measure_batch_inner(
+        &mut self,
+        candidates: &[&Schedule],
+        fps: Option<&[u64]>,
+    ) -> Vec<Option<f64>> {
+        let ev = &mut self.ev;
+        // ---- plan (serial): classify candidates, assign sample numbers ----
+        let mut plans: Vec<BatchPlan> = Vec::with_capacity(candidates.len());
+        // (candidate index, sample number) per planned hardware job.
+        let mut jobs: Vec<(usize, usize)> = Vec::new();
+        let mut fp_to_job: HashMap<u64, usize> = HashMap::new();
+        for (i, _) in candidates.iter().enumerate() {
+            let cached = match (ev.cache.as_ref(), fps.map(|f| f[i])) {
+                (Some(cache), Some(fp)) => match cache.get(fp, &ev.platform_name) {
+                    Some(known) => Some(BatchPlan::Hit(known)),
+                    None => fp_to_job.get(&fp).map(|&j| BatchPlan::HitOfMiss { job: j }),
+                },
+                _ => None,
+            };
+            let plan = match cached {
+                Some(p) => p,
+                None => {
+                    if ev.used + jobs.len() >= ev.budget {
+                        break; // budget exhausted: this and all later candidates are None
+                    }
+                    let job = jobs.len();
+                    jobs.push((i, ev.used + job + 1));
+                    if let Some(f) = fps {
+                        fp_to_job.insert(f[i], job);
+                    }
+                    BatchPlan::Miss { job }
+                }
+            };
+            plans.push(plan);
+        }
+
+        // ---- fan out (parallel): pure (program, seed) evaluations --------
+        let latency_jobs: Vec<LatencyJob> = jobs
+            .iter()
+            .map(|&(i, sample)| LatencyJob {
+                program: &candidates[i].current,
+                seed: ev.seed.wrapping_add(sample as u64),
+            })
+            .collect();
+        let measured = latency_batch(ev.hardware, &latency_jobs, self.workers);
+
+        // ---- fold (serial, candidate order): identical to the serial loop -
+        let mut out: Vec<Option<f64>> = Vec::with_capacity(candidates.len());
+        for (i, plan) in plans.iter().enumerate() {
+            let lat = match *plan {
+                BatchPlan::Hit(known) => {
+                    ev.cache_hits += 1;
+                    known
+                }
+                BatchPlan::HitOfMiss { job } => {
+                    ev.cache_hits += 1;
+                    measured[job]
+                }
+                BatchPlan::Miss { job } => {
+                    let lat = measured[job];
+                    ev.used += 1;
+                    if let (Some(cache), Some(f)) = (&ev.cache, fps) {
+                        ev.cache_misses += 1;
+                        cache.insert(f[i], &ev.platform_name, lat);
+                    }
+                    lat
+                }
+            };
+            ev.record(candidates[i], lat);
+            out.push(Some(lat));
+        }
+        out.resize(candidates.len(), None);
+        out
     }
 }
 
@@ -318,7 +616,7 @@ mod tests {
         let sched = Schedule::new(base.clone())
             .apply(crate::schedule::Transform::Parallel { stage: 0, loop_idx: 0 })
             .unwrap();
-        let mut cache = MeasureCache::new();
+        let cache = MeasureCache::new();
         cache.insert(program_fingerprint(&sched.current), "core_i9", 0.125);
         let mut ev = Evaluator::with_cache(&hw, &base, 5, 7, cache, "core_i9");
         assert_eq!(ev.measure(&sched), Some(0.125));

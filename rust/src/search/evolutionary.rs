@@ -13,7 +13,9 @@ use crate::schedule::{sampler, Schedule, Transform};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
 
-use super::common::{Evaluator, SearchResult, WarmStart};
+use super::common::{
+    replay_warm_entries, SearchContext, SearchResult, SearchStrategy, WarmStart,
+};
 
 #[derive(Debug, Clone)]
 pub struct EvoConfig {
@@ -79,103 +81,133 @@ pub fn evolutionary_search_warm(
     warm: Option<&WarmStart>,
     cache: Option<MeasureCache>,
 ) -> SearchResult {
-    let mut rng = Pcg::new(seed ^ 0xE5_0E_5E);
-    let mut ev = match cache {
-        Some(c) => Evaluator::with_cache(hardware, base, budget, seed, c, platform.name),
-        None => Evaluator::new(hardware, base, budget, seed),
-    };
-    let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
-    let base_sched = Schedule::new(base.clone());
+    let mut ctx = SearchContext::new(base, surrogate, hardware, platform, budget, seed);
+    ctx.warm = warm;
+    ctx.cache = cache.as_ref();
+    EvolutionaryStrategy::new(cfg.clone()).search(&ctx)
+}
 
-    // ---- initial population: warm traces first, random fill ----------------
-    let mut population: Vec<Member> = Vec::with_capacity(cfg.population);
-    if let Some(ws) = warm {
-        for (trace, _known_latency) in ws.entries.iter() {
-            if population.len() >= cfg.population / 2 {
-                break;
-            }
-            let (schedule, applied) = base_sched.apply_all(trace);
-            if applied == 0 {
-                continue;
-            }
+/// Evolutionary Search behind the [`SearchStrategy`] interface. The
+/// per-generation measurement slice goes through the batched evaluation
+/// pipeline: since the slice's membership is fixed by surrogate ranking
+/// *before* any hardware runs, results are bit-identical for every
+/// `SearchContext::workers` count — parallelism here is pure wall-clock.
+/// (`SearchContext::eval_batch` is ignored; the generation slice is the
+/// natural batch.)
+pub struct EvolutionaryStrategy {
+    pub cfg: EvoConfig,
+}
+
+impl EvolutionaryStrategy {
+    pub fn new(cfg: EvoConfig) -> EvolutionaryStrategy {
+        EvolutionaryStrategy { cfg }
+    }
+}
+
+impl SearchStrategy for EvolutionaryStrategy {
+    fn name(&self) -> String {
+        "evolutionary".to_string()
+    }
+
+    fn search(&mut self, ctx: &SearchContext) -> SearchResult {
+        let cfg = &self.cfg;
+        let mut rng = Pcg::new(ctx.seed ^ 0xE5_0E_5E);
+        let mut ev = ctx.batch_evaluator();
+        let surrogate_baseline = ctx.surrogate.latency(ctx.base, ctx.seed ^ 0xF0F0);
+        let base_sched = Schedule::new(ctx.base.clone());
+
+        // ---- initial population: warm traces first, random fill ------------
+        // Duplicates among warm replays are kept as extra population mass
+        // (the pre-trait serial behavior, pinned by the workers=1 parity
+        // contract); the fitness seed counts pushed members.
+        let mut population: Vec<Member> = Vec::with_capacity(cfg.population);
+        for replay in replay_warm_entries(&base_sched, ctx.warm, cfg.population / 2) {
+            let schedule = replay.schedule;
             let fitness = surrogate_baseline
-                / surrogate.latency(&schedule.current, seed ^ (0x5EED + population.len() as u64));
+                / ctx
+                    .surrogate
+                    .latency(&schedule.current, ctx.seed ^ (0x5EED + population.len() as u64));
             population.push(Member { schedule, fitness });
         }
-    }
-    while population.len() < cfg.population {
-        let i = population.len();
-        let len = 1 + rng.gen_range(cfg.init_len);
-        let seq = sampler::random_sequence(&base_sched.current, len, &mut rng);
-        let (schedule, _) = base_sched.apply_all(&seq);
-        let fitness =
-            surrogate_baseline / surrogate.latency(&schedule.current, seed ^ (i as u64 + 1));
-        population.push(Member { schedule, fitness });
-    }
-
-    let mut gen = 0u64;
-    // With a cache, a whole generation's measurement slice can be answered
-    // for free (elites recur); bound consecutive zero-sample generations so
-    // the loop cannot spin without spending budget.
-    let mut stalled_gens = 0usize;
-    while !ev.exhausted() {
-        gen += 1;
-        // ---- measure the surrogate-best slice on hardware ------------------
-        let mut order: Vec<usize> = (0..population.len()).collect();
-        order.sort_by(|&a, &b| {
-            population[b]
-                .fitness
-                .partial_cmp(&population[a].fitness)
-                .unwrap()
-        });
-        let used_before = ev.used;
-        for &i in order.iter().take(cfg.measure_per_gen) {
-            if ev.measure(&population[i].schedule).is_none() {
-                break;
-            }
-        }
-        if ev.used == used_before {
-            stalled_gens += 1;
-            if stalled_gens > 50 {
-                break;
-            }
-        } else {
-            stalled_gens = 0;
-        }
-        if ev.exhausted() {
-            break;
-        }
-
-        // ---- next generation -----------------------------------------------
-        let elite_n = (cfg.population / 8).max(1);
-        let mut next: Vec<Member> = Vec::with_capacity(cfg.population);
-        for &i in order.iter().take(elite_n) {
-            next.push(Member {
-                schedule: population[i].schedule.clone(),
-                fitness: population[i].fitness,
-            });
-        }
-        while next.len() < cfg.population {
-            let parent_a = tournament_pick(&population, cfg.tournament, &mut rng);
-            let child_trace = if rng.gen_bool(cfg.mutation_prob) {
-                mutate(&population[parent_a].schedule, cfg, &mut rng)
-            } else {
-                let parent_b = tournament_pick(&population, cfg.tournament, &mut rng);
-                crossover(
-                    &population[parent_a].schedule,
-                    &population[parent_b].schedule,
-                    &mut rng,
-                )
-            };
-            let (schedule, _) = base_sched.apply_all(&child_trace);
+        while population.len() < cfg.population {
+            let i = population.len();
+            let len = 1 + rng.gen_range(cfg.init_len);
+            let seq = sampler::random_sequence(&base_sched.current, len, &mut rng);
+            let (schedule, _) = base_sched.apply_all(&seq);
             let fitness = surrogate_baseline
-                / surrogate.latency(&schedule.current, seed ^ gen << 16 ^ next.len() as u64);
-            next.push(Member { schedule, fitness });
+                / ctx.surrogate.latency(&schedule.current, ctx.seed ^ (i as u64 + 1));
+            population.push(Member { schedule, fitness });
         }
-        population = next;
-    }
 
-    ev.into_result("evolutionary", &base.name, platform.name)
+        let mut gen = 0u64;
+        // With a cache, a whole generation's measurement slice can be answered
+        // for free (elites recur); bound consecutive zero-sample generations so
+        // the loop cannot spin without spending budget.
+        let mut stalled_gens = 0usize;
+        while !ev.exhausted() {
+            gen += 1;
+            // ---- measure the surrogate-best slice on hardware --------------
+            let mut order: Vec<usize> = (0..population.len()).collect();
+            order.sort_by(|&a, &b| {
+                population[b]
+                    .fitness
+                    .partial_cmp(&population[a].fitness)
+                    .unwrap()
+            });
+            let used_before = ev.ev.used;
+            {
+                let slice: Vec<&Schedule> = order
+                    .iter()
+                    .take(cfg.measure_per_gen)
+                    .map(|&i| &population[i].schedule)
+                    .collect();
+                ev.measure_batch(&slice);
+            }
+            if ev.ev.used == used_before {
+                stalled_gens += 1;
+                if stalled_gens > 50 {
+                    break;
+                }
+            } else {
+                stalled_gens = 0;
+            }
+            if ev.exhausted() {
+                break;
+            }
+
+            // ---- next generation -------------------------------------------
+            let elite_n = (cfg.population / 8).max(1);
+            let mut next: Vec<Member> = Vec::with_capacity(cfg.population);
+            for &i in order.iter().take(elite_n) {
+                next.push(Member {
+                    schedule: population[i].schedule.clone(),
+                    fitness: population[i].fitness,
+                });
+            }
+            while next.len() < cfg.population {
+                let parent_a = tournament_pick(&population, cfg.tournament, &mut rng);
+                let child_trace = if rng.gen_bool(cfg.mutation_prob) {
+                    mutate(&population[parent_a].schedule, cfg, &mut rng)
+                } else {
+                    let parent_b = tournament_pick(&population, cfg.tournament, &mut rng);
+                    crossover(
+                        &population[parent_a].schedule,
+                        &population[parent_b].schedule,
+                        &mut rng,
+                    )
+                };
+                let (schedule, _) = base_sched.apply_all(&child_trace);
+                let fitness = surrogate_baseline
+                    / ctx
+                        .surrogate
+                        .latency(&schedule.current, ctx.seed ^ gen << 16 ^ next.len() as u64);
+                next.push(Member { schedule, fitness });
+            }
+            population = next;
+        }
+
+        ev.into_result("evolutionary", &ctx.base.name, ctx.platform.name)
+    }
 }
 
 fn tournament_pick(population: &[Member], k: usize, rng: &mut Pcg) -> usize {

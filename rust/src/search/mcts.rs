@@ -15,8 +15,17 @@
 //! Each expanded child is additionally measured once on the hardware model,
 //! consuming one sample of the budget (this is the paper's "evaluated
 //! transformation proposals" axis).
+//!
+//! **Leaf parallelism** (`SearchContext::eval_batch > 1`): per iteration,
+//! up to `eval_batch` leaves are selected and expanded under *virtual
+//! loss* — each selected path temporarily gains visits without reward, so
+//! consecutive selections within one batch diverge instead of piling onto
+//! the same leaf — and the new children are measured concurrently through
+//! the [`super::common::BatchEvaluator`] worker pool. With
+//! `eval_batch = 1` the loop is the original serial search, bit-for-bit,
+//! for any worker count.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::cost::CostModel;
 use crate::db::{program_fingerprint, MeasureCache};
@@ -24,7 +33,10 @@ use crate::schedule::{sampler, Schedule};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
 
-use super::common::{Evaluator, ProposalContext, ProposalPolicy, SearchResult, WarmStart};
+use super::common::{
+    replay_warm_entries, ProposalContext, ProposalPolicy, SearchContext, SearchResult,
+    SearchStrategy, WarmStart,
+};
 
 /// MCTS hyperparameters (paper §4.1: c = sqrt(2), B = 2).
 #[derive(Debug, Clone)]
@@ -103,186 +115,300 @@ pub fn mcts_search_warm(
     warm: Option<&WarmStart>,
     cache: Option<MeasureCache>,
 ) -> SearchResult {
-    let mut rng = Pcg::new(seed);
-    let mut ev = match cache {
-        Some(c) => Evaluator::with_cache(hardware, base, budget, seed, c, platform.name),
-        None => Evaluator::new(hardware, base, budget, seed),
-    };
-    let surrogate_baseline = surrogate.latency(base, seed ^ 0xF0F0);
+    let mut ctx = SearchContext::new(base, surrogate, hardware, platform, budget, seed);
+    ctx.warm = warm;
+    ctx.cache = cache.as_ref();
+    MctsStrategy::new(cfg.clone(), policy).search(&ctx)
+}
 
-    let root_sched = Schedule::new(base.clone());
-    let mut nodes = vec![Node {
-        score: 1.0,
-        schedule: root_sched,
-        parent: None,
-        children: Vec::new(),
-        w: 0.0,
-        n: 1e-9,
-    }];
-    // Tree dedup and the measurement cache share one structural hash
-    // (`db::program_fingerprint`), computed once per candidate and handed
-    // to the evaluator — hashing the program is on the per-sample hot path.
-    let mut seen: HashSet<u64> = HashSet::new();
-    seen.insert(program_fingerprint(&nodes[0].schedule.current));
+/// Extra visits (without reward) placed on a selected path while its leaf
+/// awaits batched evaluation, steering the next in-batch selection toward
+/// a different subtree. Removed before real backpropagation.
+const VIRTUAL_LOSS: f64 = 1.0;
 
-    let mut best_rollout_reward: f64 = 1.0;
+/// A newly expanded child awaiting its batched hardware measurement.
+struct PendingLeaf {
+    parent: usize,
+    sched: Schedule,
+    fp: u64,
+    /// Expansion step at selection time (seeds the rollout scoring).
+    step: usize,
+    /// Node path leaf→root carrying this leaf's virtual loss.
+    path: Vec<usize>,
+}
 
-    // ---- warm start: seed root children from the tuning database -----------
-    // Each known-good trace becomes a root child whose exploit weight is
-    // proportional to its *measured* speedup (best warm entry = 1.0), so
-    // UCT prefers the strongest recorded frontier instead of treating all
-    // seeds as equally good. With a pre-populated cache these measurements
-    // are free; without one they spend budget like any other candidate.
-    if let Some(ws) = warm {
-        let mut seeded: Vec<(usize, f64)> = Vec::new();
-        for (i, (trace, _known_latency)) in ws.entries.iter().enumerate() {
-            let (child_sched, applied) = nodes[0].schedule.apply_all(trace);
-            if applied == 0 {
-                continue;
-            }
-            let fp = program_fingerprint(&child_sched.current);
-            if !seen.insert(fp) {
-                continue;
-            }
-            let Some(lat) = ev.measure_with_fingerprint(&child_sched, fp) else {
-                break;
-            };
-            let child_latency_hat =
-                surrogate.latency(&child_sched.current, seed ^ 0x3A17 ^ (i as u64) << 8);
-            let score = surrogate_baseline / child_latency_hat;
-            let child_id = nodes.len();
-            nodes.push(Node {
-                schedule: child_sched,
-                parent: Some(0),
-                children: Vec::new(),
-                w: 0.0, // assigned below, normalized over all warm children
-                n: 1.0,
-                score,
-            });
-            nodes[0].children.push(child_id);
-            nodes[0].n += 1.0;
-            seeded.push((child_id, ev.baseline_latency / lat));
-        }
-        let best_speedup = seeded.iter().map(|&(_, s)| s).fold(0.0, f64::max);
-        if best_speedup > 0.0 {
-            for &(id, speedup) in &seeded {
-                let reward = speedup / best_speedup;
-                nodes[id].w = reward;
-                nodes[0].w += reward;
-            }
-        }
+/// MCTS behind the [`SearchStrategy`] interface, carrying its
+/// hyperparameters and proposal policy. The policy is borrowed mutably so
+/// the caller can read its accounting (LLM costs, fallbacks) after the run.
+pub struct MctsStrategy<'p> {
+    pub cfg: MctsConfig,
+    pub policy: &'p mut dyn ProposalPolicy,
+}
+
+impl<'p> MctsStrategy<'p> {
+    pub fn new(cfg: MctsConfig, policy: &'p mut dyn ProposalPolicy) -> MctsStrategy<'p> {
+        MctsStrategy { cfg, policy }
+    }
+}
+
+impl SearchStrategy for MctsStrategy<'_> {
+    fn name(&self) -> String {
+        format!("mcts[{}]", self.policy.name())
     }
 
-    let mut step = 0usize;
-    // Guard against saturation: on tiny programs every proposal can
-    // duplicate an existing node; stop after too many sterile iterations.
-    let mut sterile = 0usize;
+    fn search(&mut self, ctx: &SearchContext) -> SearchResult {
+        let cfg = &self.cfg;
+        let mut rng = Pcg::new(ctx.seed);
+        let mut ev = ctx.batch_evaluator();
+        let surrogate_baseline = ctx.surrogate.latency(ctx.base, ctx.seed ^ 0xF0F0);
 
-    while !ev.exhausted() {
-        if sterile > 200 {
-            break;
-        }
-        step += 1;
-        // ---- selection: UCT descent to an expandable node ------------------
-        let mut cur = 0usize;
-        loop {
-            let node = &nodes[cur];
-            let expandable = node.children.len() < cfg.branching
-                && node.schedule.trace.len() < cfg.max_trace_len;
-            if expandable || node.children.is_empty() {
-                break;
+        let root_sched = Schedule::new(ctx.base.clone());
+        let mut nodes = vec![Node {
+            score: 1.0,
+            schedule: root_sched,
+            parent: None,
+            children: Vec::new(),
+            w: 0.0,
+            n: 1e-9,
+        }];
+        // Tree dedup and the measurement cache share one structural hash
+        // (`db::program_fingerprint`), computed once per candidate and handed
+        // to the evaluator — hashing the program is on the per-sample hot path.
+        let mut seen: HashSet<u64> = HashSet::new();
+        seen.insert(program_fingerprint(&nodes[0].schedule.current));
+
+        let mut best_rollout_reward: f64 = 1.0;
+
+        // ---- warm start: seed root children from the tuning database -------
+        // Each known-good trace becomes a root child whose exploit weight is
+        // proportional to its *measured* speedup (best warm entry = 1.0), so
+        // UCT prefers the strongest recorded frontier instead of treating all
+        // seeds as equally good. With a pre-populated cache these measurements
+        // are free; without one they spend budget like any other candidate.
+        // Tree dedup against `seen` (which holds the root fingerprint)
+        // happens here, not in the replay helper, mirroring the serial
+        // loop exactly — including its use of the *original* entry index
+        // for surrogate seeds.
+        let warm_children: Vec<_> = replay_warm_entries(&nodes[0].schedule, ctx.warm, usize::MAX)
+            .into_iter()
+            .filter(|r| seen.insert(r.fp))
+            .collect();
+        if !warm_children.is_empty() {
+            let lats = {
+                let cands: Vec<(&Schedule, u64)> =
+                    warm_children.iter().map(|r| (&r.schedule, r.fp)).collect();
+                ev.measure_batch_with_fingerprints(&cands)
+            };
+            let mut seeded: Vec<(usize, f64)> = Vec::new();
+            for (replay, lat) in warm_children.into_iter().zip(lats) {
+                let Some(lat) = lat else { break };
+                let (i, child_sched) = (replay.index, replay.schedule);
+                let child_latency_hat = ctx
+                    .surrogate
+                    .latency(&child_sched.current, ctx.seed ^ 0x3A17 ^ (i as u64) << 8);
+                let score = surrogate_baseline / child_latency_hat;
+                let child_id = nodes.len();
+                nodes.push(Node {
+                    schedule: child_sched,
+                    parent: Some(0),
+                    children: Vec::new(),
+                    w: 0.0, // assigned below, normalized over all warm children
+                    n: 1.0,
+                    score,
+                });
+                nodes[0].children.push(child_id);
+                nodes[0].n += 1.0;
+                seeded.push((child_id, ev.ev.baseline_latency / lat));
             }
-            let ln_n = node.n.max(1.0).ln();
-            let mut best_child = node.children[0];
-            let mut best_uct = f64::NEG_INFINITY;
-            for &c in &node.children {
-                let ch = &nodes[c];
-                let uct = ch.w / ch.n.max(1e-9)
-                    + cfg.exploration_c * (ln_n / ch.n.max(1e-9)).sqrt();
-                if uct > best_uct {
-                    best_uct = uct;
-                    best_child = c;
+            let best_speedup = seeded.iter().map(|&(_, s)| s).fold(0.0, f64::max);
+            if best_speedup > 0.0 {
+                for &(id, speedup) in &seeded {
+                    let reward = speedup / best_speedup;
+                    nodes[id].w = reward;
+                    nodes[0].w += reward;
                 }
             }
-            cur = best_child;
         }
 
-        // ---- expansion: ask the policy for a transformation sequence -------
-        let (ancestors, scores) = ancestor_chain(&nodes, cur, cfg.history_depth);
-        let proposal = {
-            let ctx = ProposalContext {
-                node: &nodes[cur].schedule,
-                ancestors,
-                scores,
-                platform,
-                step,
+        let batch_size = ctx.eval_batch.max(1);
+        let mut step = 0usize;
+        // Guard against saturation: on tiny programs every proposal can
+        // duplicate an existing node; stop after too many sterile iterations.
+        let mut sterile = 0usize;
+        let mut no_legal_moves = false;
+
+        while !ev.exhausted() && !no_legal_moves {
+            if sterile > 200 {
+                break;
+            }
+            // ---- collect a batch of fresh leaves under virtual loss --------
+            let mut pending: Vec<PendingLeaf> = Vec::new();
+            // In-flight expansions per parent: pending children are not in
+            // the tree yet, so the branching limit must count them too.
+            let mut pending_children: HashMap<usize, usize> = HashMap::new();
+            while pending.len() < batch_size && sterile <= 200 {
+                step += 1;
+                // ---- selection: UCT descent to an expandable node ----------
+                let mut cur = 0usize;
+                let mut saturated_in_flight = false;
+                loop {
+                    let node = &nodes[cur];
+                    let in_flight = pending_children.get(&cur).copied().unwrap_or(0);
+                    let expandable = node.children.len() + in_flight < cfg.branching
+                        && node.schedule.trace.len() < cfg.max_trace_len;
+                    if expandable || (node.children.is_empty() && in_flight == 0) {
+                        break;
+                    }
+                    if node.children.is_empty() {
+                        // Every slot here is taken by this batch's pending
+                        // leaves and there is nothing to descend into yet:
+                        // flush what we have and re-select next iteration.
+                        saturated_in_flight = true;
+                        break;
+                    }
+                    let ln_n = node.n.max(1.0).ln();
+                    let mut best_child = node.children[0];
+                    let mut best_uct = f64::NEG_INFINITY;
+                    for &c in &node.children {
+                        let ch = &nodes[c];
+                        let uct = ch.w / ch.n.max(1e-9)
+                            + cfg.exploration_c * (ln_n / ch.n.max(1e-9)).sqrt();
+                        if uct > best_uct {
+                            best_uct = uct;
+                            best_child = c;
+                        }
+                    }
+                    cur = best_child;
+                }
+                if saturated_in_flight {
+                    break;
+                }
+
+                // ---- expansion: ask the policy for a transformation seq ----
+                let (ancestors, scores) = ancestor_chain(&nodes, cur, cfg.history_depth);
+                let proposal = {
+                    let pctx = ProposalContext {
+                        node: &nodes[cur].schedule,
+                        ancestors,
+                        scores,
+                        platform: ctx.platform,
+                        step,
+                    };
+                    self.policy.propose(&pctx)
+                };
+                // Apply the proposal; if nothing applies, fall back to one
+                // random legal transform (Appendix G's fallback path).
+                let (mut child_sched, applied) = nodes[cur].schedule.apply_all(&proposal);
+                if applied == 0 {
+                    match sampler::random_transform(&nodes[cur].schedule.current, &mut rng) {
+                        Some(t) => match nodes[cur].schedule.apply(t) {
+                            Ok(s) => child_sched = s,
+                            Err(_) => continue,
+                        },
+                        None => {
+                            no_legal_moves = true;
+                            break;
+                        }
+                    }
+                }
+
+                // Dedup: if this program state already exists in the tree, do
+                // not add it again (tree stays acyclic); still spend a visit.
+                let fp = program_fingerprint(&child_sched.current);
+                if !seen.insert(fp) {
+                    nodes[cur].n += 1.0;
+                    sterile += 1;
+                    continue;
+                }
+                sterile = 0;
+
+                // Virtual loss: visits without reward along the selected
+                // path, so the next selection of this batch diverges. A
+                // batch of one never re-selects, so it skips the loss
+                // entirely — add-then-subtract would leave float-rounding
+                // residue in `n` and break bit-parity with the serial loop.
+                let path = if batch_size > 1 {
+                    let mut path = vec![cur];
+                    let mut up = nodes[cur].parent;
+                    while let Some(i) = up {
+                        path.push(i);
+                        up = nodes[i].parent;
+                    }
+                    for &i in &path {
+                        nodes[i].n += VIRTUAL_LOSS;
+                    }
+                    path
+                } else {
+                    Vec::new()
+                };
+                *pending_children.entry(cur).or_insert(0) += 1;
+                pending.push(PendingLeaf { parent: cur, sched: child_sched, fp, step, path });
+            }
+
+            // Real statistics flow below; lift the provisional losses first.
+            for p in &pending {
+                for &i in &p.path {
+                    nodes[i].n -= VIRTUAL_LOSS;
+                }
+            }
+            if pending.is_empty() {
+                continue; // saturated or out of legal moves; loop guards decide
+            }
+
+            // ---- batched measurement: one sample per fresh leaf ------------
+            // The dedup fingerprint doubles as the measurement-cache key.
+            let lats = {
+                let cands: Vec<(&Schedule, u64)> =
+                    pending.iter().map(|p| (&p.sched, p.fp)).collect();
+                ev.measure_batch_with_fingerprints(&cands)
             };
-            policy.propose(&ctx)
-        };
-        // Apply the proposal; if nothing applies, fall back to one random
-        // legal transform (Appendix G's fallback path).
-        let (mut child_sched, applied) = nodes[cur].schedule.apply_all(&proposal);
-        if applied == 0 {
-            match sampler::random_transform(&nodes[cur].schedule.current, &mut rng) {
-                Some(t) => match nodes[cur].schedule.apply(t) {
-                    Ok(s) => child_sched = s,
-                    Err(_) => continue,
-                },
-                None => break,
+
+            for (p, lat) in pending.into_iter().zip(lats) {
+                if lat.is_none() {
+                    break; // budget exhausted mid-batch; outer loop exits
+                }
+
+                // ---- rollout: random continuation scored by the surrogate --
+                let rollout_seq =
+                    sampler::random_sequence(&p.sched.current, cfg.rollout_len, &mut rng);
+                let (rollout_sched, _) = p.sched.apply_all(&rollout_seq);
+                let rollout_latency =
+                    ctx.surrogate.latency(&rollout_sched.current, ctx.seed ^ p.step as u64);
+                // Direct surrogate score of the child itself (used in prompts).
+                let child_latency_hat =
+                    ctx.surrogate.latency(&p.sched.current, ctx.seed ^ (p.step as u64) << 1);
+                let child_score = surrogate_baseline / child_latency_hat;
+
+                // Reward: speedup of the rollout terminal vs baseline,
+                // normalized by the best rollout so far to keep UCT's exploit
+                // term in [0, 1].
+                let raw_reward = surrogate_baseline / rollout_latency;
+                best_rollout_reward = best_rollout_reward.max(raw_reward);
+                let reward = raw_reward / best_rollout_reward;
+
+                // ---- insert + backpropagate --------------------------------
+                let child_id = nodes.len();
+                nodes.push(Node {
+                    schedule: p.sched,
+                    parent: Some(p.parent),
+                    children: Vec::new(),
+                    w: reward,
+                    n: 1.0,
+                    score: child_score,
+                });
+                nodes[p.parent].children.push(child_id);
+                let mut up = Some(p.parent);
+                while let Some(i) = up {
+                    nodes[i].w += reward;
+                    nodes[i].n += 1.0;
+                    up = nodes[i].parent;
+                }
             }
         }
 
-        // Dedup: if this program state already exists in the tree, do not
-        // add it again (tree stays acyclic); still spend a visit.
-        let fp = program_fingerprint(&child_sched.current);
-        if !seen.insert(fp) {
-            nodes[cur].n += 1.0;
-            sterile += 1;
-            continue;
-        }
-        sterile = 0;
-
-        // Measure the new candidate on hardware (one sample); the dedup
-        // fingerprint doubles as the measurement-cache key.
-        if ev.measure_with_fingerprint(&child_sched, fp).is_none() {
-            break;
-        }
-
-        // ---- rollout: random continuation scored by the surrogate ----------
-        let rollout_seq =
-            sampler::random_sequence(&child_sched.current, cfg.rollout_len, &mut rng);
-        let (rollout_sched, _) = child_sched.apply_all(&rollout_seq);
-        let rollout_latency = surrogate.latency(&rollout_sched.current, seed ^ step as u64);
-        // Direct surrogate score of the child itself (used in prompts).
-        let child_latency_hat = surrogate.latency(&child_sched.current, seed ^ (step as u64) << 1);
-        let child_score = surrogate_baseline / child_latency_hat;
-
-        // Reward: speedup of the rollout terminal vs baseline, normalized by
-        // the best rollout so far to keep UCT's exploit term in [0, 1].
-        let raw_reward = surrogate_baseline / rollout_latency;
-        best_rollout_reward = best_rollout_reward.max(raw_reward);
-        let reward = raw_reward / best_rollout_reward;
-
-        // ---- insert + backpropagate ----------------------------------------
-        let child_id = nodes.len();
-        nodes.push(Node {
-            schedule: child_sched,
-            parent: Some(cur),
-            children: Vec::new(),
-            w: reward,
-            n: 1.0,
-            score: child_score,
-        });
-        nodes[cur].children.push(child_id);
-        let mut up = Some(cur);
-        while let Some(i) = up {
-            nodes[i].w += reward;
-            nodes[i].n += 1.0;
-            up = nodes[i].parent;
-        }
+        let name = self.name();
+        ev.into_result(&name, &ctx.base.name, ctx.platform.name)
     }
-
-    ev.into_result(&format!("mcts[{}]", policy.name()), &base.name, platform.name)
 }
 
 /// Collect up to `depth` ancestors (nearest first) and surrogate scores

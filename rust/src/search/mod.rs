@@ -1,21 +1,34 @@
 //! Search engines over the transformation space: MCTS with UCT (vanilla and
 //! LLM-guided via a pluggable [`ProposalPolicy`]) and the TVM-style
-//! Evolutionary Search baseline. All strategies meter hardware measurements
-//! through [`common::Evaluator`], producing the speedup-vs-samples curves
-//! the paper's figures and tables are built from.
+//! Evolutionary Search baseline, unified behind the [`SearchStrategy`]
+//! trait over a [`SearchContext`]. All strategies meter hardware
+//! measurements through [`common::Evaluator`] — batched across a worker
+//! pool by [`common::BatchEvaluator`] when `SearchContext::workers > 1` —
+//! producing the speedup-vs-samples curves the paper's figures and tables
+//! are built from.
 //!
-//! Both engines have `*_warm` variants that accept a [`WarmStart`] (known
-//! traces from the tuning database, seeded into the MCTS root frontier /
-//! the evolutionary population) and a `db::MeasureCache` (re-measurements
-//! of known programs cost zero samples); [`SearchResult`] reports the
-//! cache hit/miss counts.
+//! Warm starts ([`WarmStart`] traces from the tuning database) seed the
+//! MCTS root frontier / the evolutionary population through one shared
+//! replay helper ([`common::replay_warm_entries`]), and an attached
+//! `db::MeasureCache` makes re-measurements of known programs cost zero
+//! samples; [`SearchResult`] reports the cache hit/miss counts.
+//!
+//! Determinism: `workers` never changes results (measurement seeds are
+//! fixed at plan time); `eval_batch > 1` switches MCTS to leaf-parallel
+//! expansion, which changes the trajectory but stays bit-reproducible per
+//! seed. The legacy free functions (`mcts_search*`, `evolutionary_search*`)
+//! wrap the strategies with a serial context.
 
 pub mod common;
 pub mod evolutionary;
 pub mod mcts;
 
 pub use common::{
-    Evaluator, Measurement, ProposalContext, ProposalPolicy, RandomPolicy, SearchResult, WarmStart,
+    replay_warm_entries, BatchEvaluator, Evaluator, Measurement, ProposalContext,
+    ProposalPolicy, RandomPolicy, SearchContext, SearchResult, SearchStrategy, WarmReplay,
+    WarmStart,
 };
-pub use evolutionary::{evolutionary_search, evolutionary_search_warm, EvoConfig};
-pub use mcts::{mcts_search, mcts_search_warm, MctsConfig};
+pub use evolutionary::{
+    evolutionary_search, evolutionary_search_warm, EvoConfig, EvolutionaryStrategy,
+};
+pub use mcts::{mcts_search, mcts_search_warm, MctsConfig, MctsStrategy};

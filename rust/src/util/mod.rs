@@ -1,10 +1,12 @@
-//! Utility substrate: RNG, statistics, JSON, CLI parsing, config files and
-//! bench timing. These stand in for the rand/serde/clap/criterion crates,
-//! which are unavailable in this offline environment.
+//! Utility substrate: RNG, statistics, JSON, CLI parsing, config files,
+//! bench timing and the scoped worker pool. These stand in for the
+//! rand/serde/clap/criterion crates, which are unavailable in this
+//! offline environment.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;

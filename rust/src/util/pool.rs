@@ -1,0 +1,61 @@
+//! Minimal deterministic worker pool over scoped threads.
+//!
+//! One shape serves every parallel site in the crate (batched cost-model
+//! evaluation, session repeats, concurrent model tuning): split a slice of
+//! work items into contiguous chunks, one scoped thread per chunk. The
+//! partition depends only on `(len, workers)`, so per-item outputs written
+//! through the items land identically for every worker count — the
+//! determinism contract of the parallel pipeline rests on this.
+
+use std::thread;
+
+/// Run `f` over disjoint contiguous chunks of `items`, on up to `workers`
+/// scoped threads. `workers <= 1` (or a single item) runs `f` inline on
+/// the whole slice — the exact serial path, no threads spawned. A panic
+/// in any chunk propagates to the caller (scoped threads re-raise on
+/// join).
+pub fn scoped_chunks<T, F>(items: &mut [T], workers: usize, f: F)
+where
+    T: Send,
+    F: Fn(&mut [T]) + Sync,
+{
+    if items.is_empty() {
+        return;
+    }
+    let threads = workers.max(1).min(items.len());
+    if threads == 1 {
+        f(items);
+        return;
+    }
+    let chunk = items.len().div_ceil(threads);
+    let f = &f;
+    thread::scope(|scope| {
+        for batch in items.chunks_mut(chunk) {
+            scope.spawn(move || f(batch));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_every_item_exactly_once_for_any_worker_count() {
+        for workers in [0, 1, 2, 3, 7, 64] {
+            let mut items: Vec<usize> = vec![0; 23];
+            scoped_chunks(&mut items, workers, |batch| {
+                for x in batch.iter_mut() {
+                    *x += 1;
+                }
+            });
+            assert!(items.iter().all(|&x| x == 1), "workers={workers}: {items:?}");
+        }
+    }
+
+    #[test]
+    fn empty_input_is_a_no_op() {
+        let mut items: Vec<u8> = Vec::new();
+        scoped_chunks(&mut items, 4, |_| panic!("must not be called"));
+    }
+}
