@@ -19,8 +19,8 @@ use reasoning_compiler::util::stats;
 fn rc_run(cfg: &MctsConfig, use_surrogate: bool, budget: usize, seed: u64) -> f64 {
     let plat = Platform::core_i9();
     let base = WorkloadId::DeepSeekMoe.build();
-    let hardware = HardwareModel { platform: plat.clone() };
-    let surrogate = SurrogateModel { platform: plat.clone() };
+    let hardware = HardwareModel::new(plat.clone());
+    let surrogate = SurrogateModel::new(plat.clone());
     let engine = SimulatedLlm::new(ModelProfile::gpt4o_mini(), seed);
     let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
     let r = if use_surrogate {

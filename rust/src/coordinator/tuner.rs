@@ -7,7 +7,7 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::cost::{HardwareModel, Platform, SurrogateModel};
+use crate::cost::{AnalysisCache, HardwareModel, Platform, SurrogateModel};
 use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, WarmStart};
 use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
 use crate::schedule::Schedule;
@@ -110,22 +110,31 @@ pub fn run_once_warm(
     seed: u64,
     hints: Option<&SearchHints>,
 ) -> Result<SearchResult> {
-    Ok(run_once_with_accounting(program, cfg, seed, hints)?.0)
+    Ok(run_once_with_accounting(program, cfg, seed, hints, &AnalysisCache::new())?.0)
 }
 
 /// Run one strategy once, returning LLM accounting when applicable. All
 /// strategies dispatch through the [`SearchStrategy`] trait; the
 /// parallelism knobs (`cfg.workers`, `cfg.eval_batch`) flow into the
 /// [`SearchContext`] driving the batched evaluation pipeline.
+///
+/// `analysis` is the session-wide access-analysis memoization: the
+/// surrogate, the hardware model and (for llm_mcts) the reasoning engine
+/// all share it, so one distinct stage structure is analyzed once per
+/// session — across the 20-repeat protocol and every feature extraction.
+/// Sharing is invisible to results: cached analyses are pure values, so
+/// every run stays bit-identical to an uncached one (unlike the
+/// measurement cache, which each run deliberately clones).
 fn run_once_with_accounting(
     program: &Program,
     cfg: &TuneConfig,
     seed: u64,
     hints: Option<&SearchHints>,
+    analysis: &AnalysisCache,
 ) -> Result<(SearchResult, CostTracker, f64, u64)> {
     let platform = platform_for(cfg)?;
-    let surrogate = SurrogateModel { platform: platform.clone() };
-    let hardware = HardwareModel { platform: platform.clone() };
+    let surrogate = SurrogateModel::with_analysis(platform.clone(), analysis.share());
+    let hardware = HardwareModel::with_analysis(platform.clone(), analysis.share());
     let mcts_cfg = mcts_cfg_for(cfg);
     let mut ctx =
         SearchContext::new(program, &surrogate, &hardware, &platform, cfg.budget, seed);
@@ -146,7 +155,7 @@ fn run_once_with_accounting(
         Strategy::LlmMcts => {
             let model = ModelProfile::by_name(&cfg.model)
                 .ok_or_else(|| anyhow!("unknown model {:?} (see `rcc models`)", cfg.model))?;
-            let engine = SimulatedLlm::new(model, seed);
+            let engine = SimulatedLlm::new(model, seed).with_analysis(analysis.share());
             let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
             let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
             let fb = policy.fallbacks.fallback_rate();
@@ -208,11 +217,16 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
     run_cfg.workers = (resolved / pool).max(1);
     let run_cfg = &run_cfg;
     let hints = hints.as_ref();
+    // One analysis cache for the whole session: the repeats evaluate the
+    // same workload, so they share every per-stage analysis (thread-safe,
+    // and pure values — sharing cannot perturb per-seed determinism).
+    let analysis = AnalysisCache::new();
+    let analysis = &analysis;
     let mut work: Vec<(&mut Option<_>, u64)> =
         outcomes.iter_mut().zip(seeds.iter().copied()).collect();
     crate::util::pool::scoped_chunks(&mut work, pool, |batch| {
         for (slot, seed) in batch.iter_mut() {
-            **slot = Some(run_once_with_accounting(program, run_cfg, *seed, hints));
+            **slot = Some(run_once_with_accounting(program, run_cfg, *seed, hints, analysis));
         }
     });
     drop(work);

@@ -1,0 +1,213 @@
+//! Shared memoization of per-stage access analyses.
+//!
+//! `access::analyze` is the single most-repeated computation of the search
+//! inner loop: the hardware simulator, the rollout surrogate, the feature
+//! extractor and the reasoning engine all analyze the same `(program,
+//! stage)` pairs — and the paper's 20-repeat measurement protocol
+//! re-simulates every candidate under 20 seeds, multiplying each redundant
+//! analysis by 20. [`AnalysisCache`] is the shared store all of those
+//! callers route through, so a distinct stage structure is analyzed exactly
+//! once per session.
+//!
+//! **Soundness.** The cache key combines the program's buffer-table hash
+//! (kinds + shapes) with the stage's memoized structural hash
+//! ([`crate::tir::Stage::struct_hash`]). `access::analyze` is a pure
+//! function of exactly those inputs — buffer shapes/strides plus the
+//! stage's axes, loops, axis expressions, block and annotations — with no
+//! seed, platform or name dependence. Equal key ⇒ structurally identical
+//! inputs ⇒ identical `StageAnalysis`, so cached and uncached evaluation
+//! are **bit-identical**. The invalidation invariant is upstream: every
+//! stage mutation goes through `Stage::cow_mut`, which clears the memoized
+//! hash, so a mutated stage hashes to a new key and is re-analyzed.
+//!
+//! The store is sharded behind mutexes like `db::MeasureCache` so the
+//! parallel evaluation pipeline and concurrent `rcc serve` tuners can share
+//! one handle. Unlike `MeasureCache` — whose `clone()` deep-copies to keep
+//! per-run *accounting* independent — `clone()` here shares storage:
+//! analyses are pure values, so sharing them across runs, threads or
+//! sessions cannot change any result.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::tir::hash::{feed_buffers, StructHasher};
+use crate::tir::program::{Program, Stage};
+
+use super::access::{self, StageAnalysis};
+
+/// Number of lock shards (mirrors `MeasureCache`).
+const SHARDS: usize = 8;
+
+/// Per-shard entry bound. Analyses are ~1 KiB each; clearing a shard on
+/// overflow bounds memory for long-lived serve sessions and is
+/// correctness-free (entries are recomputable pure values).
+const MAX_SHARD_ENTRIES: usize = 1 << 14;
+
+type Shard = HashMap<u64, Arc<StageAnalysis>>;
+
+/// Sharded (buffer-table hash, stage hash) → `Arc<StageAnalysis>` store.
+#[derive(Debug)]
+pub struct AnalysisCache {
+    shards: Arc<[Mutex<Shard>; SHARDS]>,
+}
+
+impl Default for AnalysisCache {
+    fn default() -> Self {
+        AnalysisCache {
+            shards: Arc::new(std::array::from_fn(|_| Mutex::new(Shard::new()))),
+        }
+    }
+}
+
+impl Clone for AnalysisCache {
+    /// Shares the underlying storage (see module docs for why this is safe
+    /// here and deliberately different from `MeasureCache::clone`).
+    fn clone(&self) -> Self {
+        self.share()
+    }
+}
+
+impl AnalysisCache {
+    pub fn new() -> AnalysisCache {
+        AnalysisCache::default()
+    }
+
+    /// A second handle over the same storage.
+    pub fn share(&self) -> AnalysisCache {
+        AnalysisCache { shards: Arc::clone(&self.shards) }
+    }
+
+    /// Cached entries across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The memoization key for one `(program, stage)` pair. The expensive
+    /// per-stage part is memoized in the stage; the buffer feed is a few
+    /// dozen integer ops.
+    fn key(program: &Program, stage: &Stage) -> u64 {
+        let mut h = StructHasher::new();
+        h.tag(0xACCE55);
+        feed_buffers(&mut h, &program.buffers);
+        h.feed(stage.struct_hash());
+        h.finish()
+    }
+
+    /// Analyze a stage through the cache: returns the memoized analysis
+    /// when this stage structure (under these buffer shapes) has been seen,
+    /// computing and storing it otherwise. Bit-identical to calling
+    /// [`access::analyze`] directly.
+    pub fn analyze(&self, program: &Program, stage: &Stage) -> Arc<StageAnalysis> {
+        let key = Self::key(program, stage);
+        let shard = &self.shards[(key % SHARDS as u64) as usize];
+        if let Some(a) = shard.lock().unwrap().get(&key) {
+            return Arc::clone(a);
+        }
+        // Compute outside the lock; a racing thread may duplicate the work
+        // once, but both arrive at the identical pure value.
+        let a = Arc::new(access::analyze(program, stage));
+        let mut guard = shard.lock().unwrap();
+        if guard.len() >= MAX_SHARD_ENTRIES {
+            guard.clear();
+        }
+        guard.insert(key, Arc::clone(&a));
+        a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload::{self, WorkloadId};
+
+    #[test]
+    fn hit_returns_shared_identical_analysis() {
+        let cache = AnalysisCache::new();
+        let p = WorkloadId::DeepSeekMoe.build();
+        let a = cache.analyze(&p, &p.stages[0]);
+        let b = cache.analyze(&p, &p.stages[0]);
+        assert!(Arc::ptr_eq(&a, &b), "second call must be a cache hit");
+        assert_eq!(cache.len(), 1);
+        // And the cached value equals a fresh uncached analysis, bit for bit.
+        let fresh = access::analyze(&p, &p.stages[0]);
+        assert_eq!(a.trips, fresh.trips);
+        assert_eq!(a.footprint_bytes, fresh.footprint_bytes);
+        assert_eq!(a.overhead_iters.to_bits(), fresh.overhead_iters.to_bits());
+        assert_eq!(a.writebacks, fresh.writebacks);
+    }
+
+    #[test]
+    fn mutation_misses_then_caches_new_structure() {
+        let cache = AnalysisCache::new();
+        let p = WorkloadId::DeepSeekMoe.build();
+        cache.analyze(&p, &p.stages[0]);
+        let q = Transform::TileSize { stage: 0, loop_idx: 2, factor: 64 }
+            .apply(&p)
+            .unwrap();
+        let a = cache.analyze(&q, &q.stages[0]);
+        assert_eq!(cache.len(), 2, "tiled stage is a distinct entry");
+        let fresh = access::analyze(&q, &q.stages[0]);
+        assert_eq!(a.trips, fresh.trips);
+    }
+
+    #[test]
+    fn key_includes_buffer_shapes() {
+        // Two structurally identical stages over different buffer shapes
+        // must not share an entry (the analysis depends on shapes).
+        let cache = AnalysisCache::new();
+        let small = workload::moe_matmul("m", 4, 6, 8);
+        let large = workload::moe_matmul("m", 8, 12, 16);
+        cache.analyze(&small, &small.stages[0]);
+        cache.analyze(&large, &large.stages[0]);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn name_invariant_across_programs() {
+        // Same structure under different names shares one entry — analyses
+        // transfer exactly like fingerprints do.
+        let cache = AnalysisCache::new();
+        let a = workload::moe_matmul("alpha", 16, 64, 64);
+        let b = workload::moe_matmul("beta", 16, 64, 64);
+        let ra = cache.analyze(&a, &a.stages[0]);
+        let rb = cache.analyze(&b, &b.stages[0]);
+        assert!(Arc::ptr_eq(&ra, &rb));
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn share_sees_other_handles_inserts() {
+        let cache = AnalysisCache::new();
+        let handle = cache.share();
+        let p = WorkloadId::Llama4Mlp.build_test();
+        cache.analyze(&p, &p.stages[0]);
+        assert_eq!(handle.len(), 1);
+        // clone() is a share, not a deep copy.
+        let cloned = cache.clone();
+        assert_eq!(cloned.len(), 1);
+    }
+
+    #[test]
+    fn concurrent_analyze_is_safe() {
+        let cache = AnalysisCache::new();
+        let p = WorkloadId::Llama3Attention.build_test();
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let handle = cache.share();
+                let p = &p;
+                scope.spawn(move || {
+                    for stage in &p.stages {
+                        let a = handle.analyze(p, stage);
+                        assert!(a.total_iters > 0);
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.len(), p.stages.len());
+    }
+}

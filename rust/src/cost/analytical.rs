@@ -9,10 +9,11 @@
 //! so search sees a informative-but-noisy signal exactly as with a learned
 //! XGBoost model.
 
-use crate::tir::Program;
+use crate::tir::{Program, Stage};
 use crate::util::rng::Pcg;
 
 use super::access;
+use super::analysis::AnalysisCache;
 use super::platform::Platform;
 
 /// Relative sigma of surrogate prediction error.
@@ -21,11 +22,36 @@ const SURROGATE_SIGMA: f64 = 0.12;
 /// Predicted latency in seconds. Deterministic per (program, platform,
 /// seed); the noise models learned-cost-model prediction error.
 pub fn predict(program: &Program, platform: &Platform, seed: u64) -> f64 {
+    predict_impl(program, seed, |p, s| stage_estimate(&access::analyze(p, s), platform))
+}
+
+/// [`predict`] with per-stage analyses served from the shared
+/// [`AnalysisCache`] — bit-identical results (the analysis is pure).
+pub fn predict_cached(
+    program: &Program,
+    platform: &Platform,
+    seed: u64,
+    analysis: &AnalysisCache,
+) -> f64 {
+    predict_impl(program, seed, |p, s| stage_estimate(&analysis.analyze(p, s), platform))
+}
+
+/// One summation loop shared by the cached and uncached paths, so the
+/// bit-identity contract cannot drift between two hand-synchronized copies.
+fn predict_impl(
+    program: &Program,
+    seed: u64,
+    stage_cost: impl Fn(&Program, &Stage) -> f64,
+) -> f64 {
     let mut total = 0.0;
     for stage in &program.stages {
-        let a = access::analyze(program, stage);
-        total += stage_estimate(&a, platform);
+        total += stage_cost(program, stage);
     }
+    apply_noise(program, seed, total)
+}
+
+/// Multiplicative lognormal surrogate error, stable per (program, seed).
+fn apply_noise(program: &Program, seed: u64, total: f64) -> f64 {
     let mut rng = Pcg::new(seed ^ struct_hash(program) ^ 0xA5A5_5A5A);
     let noise = (rng.gen_normal() * SURROGATE_SIGMA).exp();
     total * noise
@@ -75,27 +101,66 @@ pub trait CostModel: Send + Sync {
 }
 
 /// The hardware simulator as a `CostModel` (the paper's `f`).
+///
+/// Owns a handle to an [`AnalysisCache`]; every `latency` call routes its
+/// per-stage access analyses through it. Build with [`HardwareModel::new`]
+/// (private cache) or [`HardwareModel::with_analysis`] to share one cache
+/// across the models of a session (what the tuner does, so hardware,
+/// surrogate and reasoning engine all reuse each other's analyses).
 pub struct HardwareModel {
     pub platform: Platform,
+    analysis: AnalysisCache,
+}
+
+impl HardwareModel {
+    pub fn new(platform: Platform) -> HardwareModel {
+        HardwareModel { platform, analysis: AnalysisCache::new() }
+    }
+
+    /// Share an existing analysis cache (session-wide memoization).
+    pub fn with_analysis(platform: Platform, analysis: AnalysisCache) -> HardwareModel {
+        HardwareModel { platform, analysis }
+    }
+
+    pub fn analysis(&self) -> &AnalysisCache {
+        &self.analysis
+    }
 }
 
 impl CostModel for HardwareModel {
     fn latency(&self, program: &Program, seed: u64) -> f64 {
-        super::simulator::simulate(program, &self.platform, seed)
+        super::simulator::simulate_cached(program, &self.platform, seed, &self.analysis)
     }
     fn name(&self) -> &'static str {
         "hardware-sim"
     }
 }
 
-/// The analytical surrogate as a `CostModel` (the paper's f̂).
+/// The analytical surrogate as a `CostModel` (the paper's f̂). Analysis
+/// caching mirrors [`HardwareModel`].
 pub struct SurrogateModel {
     pub platform: Platform,
+    analysis: AnalysisCache,
+}
+
+impl SurrogateModel {
+    pub fn new(platform: Platform) -> SurrogateModel {
+        SurrogateModel { platform, analysis: AnalysisCache::new() }
+    }
+
+    /// Share an existing analysis cache (session-wide memoization).
+    pub fn with_analysis(platform: Platform, analysis: AnalysisCache) -> SurrogateModel {
+        SurrogateModel { platform, analysis }
+    }
+
+    pub fn analysis(&self) -> &AnalysisCache {
+        &self.analysis
+    }
 }
 
 impl CostModel for SurrogateModel {
     fn latency(&self, program: &Program, seed: u64) -> f64 {
-        predict(program, &self.platform, seed)
+        predict_cached(program, &self.platform, seed, &self.analysis)
     }
     fn name(&self) -> &'static str {
         "surrogate"
@@ -167,10 +232,35 @@ mod tests {
     #[test]
     fn cost_model_trait_objects() {
         let p = WorkloadId::FluxConv.build_test();
-        let hw: Box<dyn CostModel> = Box::new(HardwareModel { platform: Platform::m2_pro() });
-        let sg: Box<dyn CostModel> = Box::new(SurrogateModel { platform: Platform::m2_pro() });
+        let hw: Box<dyn CostModel> = Box::new(HardwareModel::new(Platform::m2_pro()));
+        let sg: Box<dyn CostModel> = Box::new(SurrogateModel::new(Platform::m2_pro()));
         assert!(hw.latency(&p, 0) > 0.0);
         assert!(sg.latency(&p, 1) > 0.0);
         assert_eq!(hw.name(), "hardware-sim");
+    }
+
+    #[test]
+    fn cached_predict_bit_identical_and_models_match_free_functions() {
+        let plat = Platform::core_i9();
+        let cache = AnalysisCache::new();
+        for w in WorkloadId::ALL {
+            let p = w.build();
+            let plain = predict(&p, &plat, 9);
+            assert_eq!(
+                plain.to_bits(),
+                predict_cached(&p, &plat, 9, &cache).to_bits(),
+                "{}",
+                w.name()
+            );
+            // Models (which evaluate through their own caches) agree with
+            // the free functions bit for bit.
+            let hw = HardwareModel::new(plat.clone());
+            assert_eq!(
+                hw.latency(&p, 5).to_bits(),
+                super::super::simulator::simulate(&p, &plat, 5).to_bits()
+            );
+            let sg = SurrogateModel::with_analysis(plat.clone(), cache.share());
+            assert_eq!(sg.latency(&p, 9).to_bits(), plain.to_bits());
+        }
     }
 }

@@ -63,7 +63,7 @@ mod tests {
 
     #[test]
     fn parallel_matches_serial_bit_for_bit() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         let progs = candidates(23);
         let jobs: Vec<LatencyJob> = progs
             .iter()
@@ -78,7 +78,7 @@ mod tests {
 
     #[test]
     fn handles_empty_and_oversized_pools() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         assert!(latency_batch(&hw, &[], 4).is_empty());
         let progs = candidates(2);
         let jobs: Vec<LatencyJob> =

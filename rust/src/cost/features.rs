@@ -4,14 +4,17 @@
 //! reasoning engine's program analysis (the "hardware cost model outputs"
 //! that the paper serializes into prompts) and by diagnostics/reports.
 
-use crate::tir::Program;
+use std::sync::Arc;
 
-use super::access;
+use crate::tir::program::{Program, Stage};
+
+use super::access::{self, StageAnalysis};
+use super::analysis::AnalysisCache;
 use super::platform::Platform;
 
 /// Features of one program variant on one platform. All ratios are in
 /// [0, 1] unless noted.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Features {
     pub total_iters: f64,
     pub flops: f64,
@@ -50,10 +53,28 @@ pub struct Features {
 /// Extract features for a program on a platform (aggregated over stages,
 /// weighted by per-stage flops).
 pub fn extract(program: &Program, platform: &Platform) -> Features {
+    extract_impl(program, platform, |p, s| Arc::new(access::analyze(p, s)))
+}
+
+/// [`extract`] with per-stage analyses served from the shared
+/// [`AnalysisCache`] — bit-identical results (the analysis is pure).
+pub fn extract_cached(
+    program: &Program,
+    platform: &Platform,
+    analysis: &AnalysisCache,
+) -> Features {
+    extract_impl(program, platform, |p, s| analysis.analyze(p, s))
+}
+
+fn extract_impl(
+    program: &Program,
+    platform: &Platform,
+    analyze: impl Fn(&Program, &Stage) -> Arc<StageAnalysis>,
+) -> Features {
     let mut f = Features::default();
     let mut total_flops = 0.0;
     for stage in &program.stages {
-        let a = access::analyze(program, stage);
+        let a = analyze(program, stage);
         let w = a.flops as f64;
         total_flops += w;
 
@@ -202,6 +223,19 @@ mod tests {
             tiled.dram_amplification,
             base.dram_amplification
         );
+    }
+
+    #[test]
+    fn cached_extraction_matches_uncached() {
+        let cache = AnalysisCache::new();
+        for w in WorkloadId::ALL {
+            let p = w.build();
+            let plat = Platform::core_i9();
+            let plain = extract(&p, &plat);
+            assert_eq!(plain, extract_cached(&p, &plat, &cache), "{}", w.name());
+            // Second pass hits the cache and still agrees.
+            assert_eq!(plain, extract_cached(&p, &plat, &cache), "{}", w.name());
+        }
     }
 
     #[test]

@@ -1,15 +1,18 @@
 //! Cost models: the analytical surrogate f-hat used inside MCTS rollouts,
 //! the hardware simulator f that stands in for the paper's five-CPU
-//! testbed, feature extraction for prompts/diagnostics, and the platform
-//! descriptors.
+//! testbed, feature extraction for prompts/diagnostics, the platform
+//! descriptors, and the shared per-stage [`AnalysisCache`] every cost-model
+//! consumer memoizes access analyses through.
 
 pub mod access;
+pub mod analysis;
 pub mod analytical;
 pub mod batch;
 pub mod features;
 pub mod platform;
 pub mod simulator;
 
+pub use analysis::AnalysisCache;
 pub use analytical::{CostModel, HardwareModel, SurrogateModel};
 pub use batch::{latency_batch, LatencyJob};
 pub use features::Features;

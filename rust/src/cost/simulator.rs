@@ -19,10 +19,11 @@
 //! Deterministic given (program, platform, seed), and fast (~microseconds),
 //! so whole Table-1 sweeps run in seconds.
 
-use crate::tir::Program;
+use crate::tir::{Program, Stage};
 use crate::util::rng::Pcg;
 
 use super::access::{self, StageAnalysis};
+use super::analysis::AnalysisCache;
 use super::platform::Platform;
 
 /// Relative sigma of simulated measurement noise.
@@ -40,20 +41,46 @@ const AUTOVEC_FRAC: f64 = 0.40;
 /// Simulated latency of one program execution, in seconds.
 /// `seed` selects the measurement-noise draw; seed 0 disables noise.
 pub fn simulate(program: &Program, platform: &Platform, seed: u64) -> f64 {
+    simulate_impl(program, seed, |p, s| stage_latency(&access::analyze(p, s), platform))
+}
+
+/// [`simulate`] with per-stage analyses served from the shared
+/// [`AnalysisCache`]. Bit-identical to the uncached path (the analysis is a
+/// pure value; see the cache's module docs), so the 20-repeat measurement
+/// protocol pays for each distinct stage's analysis exactly once.
+pub fn simulate_cached(
+    program: &Program,
+    platform: &Platform,
+    seed: u64,
+    analysis: &AnalysisCache,
+) -> f64 {
+    simulate_impl(program, seed, |p, s| stage_latency(&analysis.analyze(p, s), platform))
+}
+
+/// One summation loop shared by the cached and uncached paths, so the
+/// bit-identity contract cannot drift between two hand-synchronized copies.
+fn simulate_impl(
+    program: &Program,
+    seed: u64,
+    stage_cost: impl Fn(&Program, &Stage) -> f64,
+) -> f64 {
     let mut total = 0.0;
-    for (si, stage) in program.stages.iter().enumerate() {
-        let a = access::analyze(program, stage);
-        total += stage_latency(&a, platform);
+    for stage in &program.stages {
+        total += stage_cost(program, stage);
         // Per-stage fixed launch cost (kernel call, arg setup).
-        let _ = si;
         total += 2.0e-7;
     }
-    if seed != 0 {
-        let mut rng = Pcg::new(seed ^ fingerprint(program));
-        let noise = (rng.gen_normal() * NOISE_SIGMA).exp();
-        total *= noise;
+    apply_noise(program, seed, total)
+}
+
+/// Multiplicative lognormal measurement noise, stable per (program, seed).
+fn apply_noise(program: &Program, seed: u64, total: f64) -> f64 {
+    if seed == 0 {
+        return total;
     }
-    total
+    let mut rng = Pcg::new(seed ^ fingerprint(program));
+    let noise = (rng.gen_normal() * NOISE_SIGMA).exp();
+    total * noise
 }
 
 /// Breakdown of one stage's latency into its bounding terms — the
@@ -263,6 +290,23 @@ mod tests {
             assert!(t1 > 0.0, "{}", w.name());
             assert_eq!(t1, t2);
         }
+    }
+
+    #[test]
+    fn cached_simulation_bit_identical_to_uncached() {
+        let cache = AnalysisCache::new();
+        for w in WorkloadId::ALL {
+            let p = w.build();
+            for seed in [0u64, 1, 7] {
+                let plain = simulate(&p, &i9(), seed);
+                // Twice: first call populates, second hits the cache.
+                let first = simulate_cached(&p, &i9(), seed, &cache);
+                let hit = simulate_cached(&p, &i9(), seed, &cache);
+                assert_eq!(plain.to_bits(), first.to_bits(), "{} seed {seed}", w.name());
+                assert_eq!(plain.to_bits(), hit.to_bits(), "{} seed {seed}", w.name());
+            }
+        }
+        assert!(!cache.is_empty());
     }
 
     #[test]

@@ -14,149 +14,20 @@
 //!   makes the measurement cache sound — equal fingerprint ⇒ the hardware
 //!   model would return the same latency distribution.
 //!
-//! Both are 64-bit FNV-1a-style hashes with per-field tags to keep
-//! structurally different programs from colliding through commutativity.
+//! **Incremental since PR 3:** `program_fingerprint` combines the memoized
+//! per-stage hashes ([`crate::tir::Stage::struct_hash`]) with a cheap
+//! buffer-table hash, so a one-stage edit rehashes exactly one stage (the
+//! one whose memo `Stage::cow_mut` cleared) instead of the whole program —
+//! a measurement-cache probe on a CoW-shared candidate is near-free. The
+//! invalidation invariant: any stage mutation goes through `cow_mut`, which
+//! clears the memo, so a changed stage hash always reflects the current
+//! structure. The hashing primitives live in [`crate::tir::hash`]; both are
+//! 64-bit FNV-1a-style hashes with per-field tags.
 
-use crate::tir::expr::{Expr, LinIdx};
-use crate::tir::program::{BlockExpr, Program, Stage};
+use crate::tir::hash::{feed_buffers, feed_stage_structure};
+use crate::tir::program::Program;
 
-/// Incremental FNV-1a-style hasher over tagged integer fields.
-#[derive(Debug, Clone)]
-pub struct StructHasher {
-    h: u64,
-}
-
-impl Default for StructHasher {
-    fn default() -> Self {
-        StructHasher { h: 0xcbf29ce484222325 }
-    }
-}
-
-impl StructHasher {
-    pub fn new() -> StructHasher {
-        StructHasher::default()
-    }
-
-    #[inline]
-    pub fn feed(&mut self, x: u64) {
-        self.h ^= x;
-        self.h = self.h.wrapping_mul(0x100000001b3);
-    }
-
-    #[inline]
-    pub fn feed_i64(&mut self, x: i64) {
-        self.feed(x as u64);
-    }
-
-    /// Field tag: keeps `[2, 3]` from colliding with `[3, 2]`-shaped feeds
-    /// of a different field.
-    #[inline]
-    pub fn tag(&mut self, t: u64) {
-        self.feed(0x9E37_79B9_7F4A_7C15 ^ t);
-    }
-
-    pub fn finish(&self) -> u64 {
-        // Final avalanche (splitmix64 tail) so nearby inputs spread.
-        let mut z = self.h;
-        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
-        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
-        z ^ (z >> 31)
-    }
-}
-
-fn feed_linidx(h: &mut StructHasher, idx: &LinIdx) {
-    h.tag(10);
-    h.feed_i64(idx.offset);
-    for &(axis, coeff) in &idx.terms {
-        h.feed(axis as u64);
-        h.feed_i64(coeff);
-    }
-}
-
-fn feed_block_expr(h: &mut StructHasher, e: &BlockExpr) {
-    match e {
-        BlockExpr::Load(buf, idx) => {
-            h.tag(20);
-            h.feed(*buf as u64);
-            for i in idx {
-                feed_linidx(h, i);
-            }
-        }
-        BlockExpr::Const(c) => {
-            h.tag(21);
-            h.feed(c.to_bits() as u64);
-        }
-        BlockExpr::Add(a, b) => {
-            h.tag(22);
-            feed_block_expr(h, a);
-            feed_block_expr(h, b);
-        }
-        BlockExpr::Sub(a, b) => {
-            h.tag(23);
-            feed_block_expr(h, a);
-            feed_block_expr(h, b);
-        }
-        BlockExpr::Mul(a, b) => {
-            h.tag(24);
-            feed_block_expr(h, a);
-            feed_block_expr(h, b);
-        }
-        BlockExpr::Max(a, b) => {
-            h.tag(25);
-            feed_block_expr(h, a);
-            feed_block_expr(h, b);
-        }
-    }
-}
-
-fn feed_expr(h: &mut StructHasher, e: &Expr) {
-    match e {
-        Expr::Var(v) => {
-            h.tag(30);
-            h.feed(*v as u64);
-        }
-        Expr::Const(c) => {
-            h.tag(31);
-            h.feed_i64(*c);
-        }
-        Expr::Add(a, b) => {
-            h.tag(32);
-            feed_expr(h, a);
-            feed_expr(h, b);
-        }
-        Expr::Mul(a, k) => {
-            h.tag(33);
-            feed_expr(h, a);
-            h.feed_i64(*k);
-        }
-        Expr::Div(a, k) => {
-            h.tag(34);
-            feed_expr(h, a);
-            h.feed_i64(*k);
-        }
-        Expr::Mod(a, k) => {
-            h.tag(35);
-            feed_expr(h, a);
-            h.feed_i64(*k);
-        }
-    }
-}
-
-/// Feed the schedule-invariant structure of one stage.
-fn feed_stage_structure(h: &mut StructHasher, s: &Stage) {
-    h.tag(2);
-    for a in &s.axes {
-        h.feed_i64(a.extent);
-        h.feed(a.is_reduction as u64 + 1);
-    }
-    h.tag(3);
-    h.feed(s.block.out as u64);
-    for idx in &s.block.out_idx {
-        feed_linidx(h, idx);
-    }
-    feed_block_expr(h, &s.block.rhs);
-    h.feed(s.block.reduce as u64 + 1);
-}
+pub use crate::tir::hash::StructHasher;
 
 /// Canonical hash of the computation's structure: buffers, axes and compute
 /// blocks. Invariant to program/stage/buffer *names* and to the current
@@ -165,13 +36,7 @@ fn feed_stage_structure(h: &mut StructHasher, s: &Stage) {
 pub fn workload_fingerprint(p: &Program) -> u64 {
     let mut h = StructHasher::new();
     h.tag(1);
-    for b in &p.buffers {
-        h.feed(b.kind as u64 + 1);
-        h.feed(b.shape.len() as u64);
-        for &d in &b.shape {
-            h.feed_i64(d);
-        }
-    }
+    feed_buffers(&mut h, &p.buffers);
     for s in &p.stages {
         feed_stage_structure(&mut h, s);
     }
@@ -182,31 +47,15 @@ pub fn workload_fingerprint(p: &Program) -> u64 {
 /// loop nest (extents, annotations, axis-reconstruction expressions) and
 /// performance annotations. Distinguishes different tile sizes, loop
 /// orders, fusions and annotations on the same workload — the key for the
-/// measurement cache.
+/// measurement cache. Built from memoized per-stage hashes, so only stages
+/// mutated since their last hash are rehashed.
 pub fn program_fingerprint(p: &Program) -> u64 {
     let mut h = StructHasher::new();
     h.tag(1);
-    for b in &p.buffers {
-        h.feed(b.kind as u64 + 1);
-        h.feed(b.shape.len() as u64);
-        for &d in &b.shape {
-            h.feed_i64(d);
-        }
-    }
+    feed_buffers(&mut h, &p.buffers);
+    h.tag(6);
     for s in &p.stages {
-        feed_stage_structure(&mut h, s);
-        h.tag(4);
-        for l in &s.loops {
-            h.feed_i64(l.extent);
-            h.feed(l.kind as u64 + 1);
-            h.feed(l.var as u64);
-        }
-        h.tag(5);
-        for e in &s.axis_exprs {
-            feed_expr(&mut h, e);
-        }
-        h.feed(s.cache_write as u64 + 17);
-        h.feed(s.compute_at.map(|d| d as u64 + 1).unwrap_or(0));
+        h.feed(s.struct_hash());
     }
     h.finish()
 }
@@ -291,5 +140,22 @@ mod tests {
         assert_ne!(fps[0], fps[1]);
         assert_ne!(fps[0], fps[2]);
         assert_ne!(fps[1], fps[2]);
+    }
+
+    #[test]
+    fn incremental_fingerprint_matches_from_scratch_rehash() {
+        // The memoized path (CoW apply chain, stage memos warm) must agree
+        // with a cold full rehash (deep clone clears every memo).
+        let base = Schedule::new(WorkloadId::Llama3Attention.build());
+        let sched = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 })
+            .unwrap()
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap()
+            .apply(Transform::CacheWrite { stage: 1 })
+            .unwrap();
+        let warm = program_fingerprint(&sched.current);
+        let cold = program_fingerprint(&sched.current.deep_clone());
+        assert_eq!(warm, cold);
     }
 }

@@ -505,8 +505,14 @@ fn cmd_prompt(args: &Args) -> Result<()> {
     let base = Schedule::new(w.build());
     let child = {
         let mut rng = reasoning_compiler::util::Pcg::new(args.opt_u64("seed", 1));
-        let (seq, _) =
-            reasoning::engine::informed_proposals(&base, &plat, &Default::default(), &mut rng);
+        let analysis = reasoning_compiler::cost::AnalysisCache::new();
+        let (seq, _) = reasoning::engine::informed_proposals(
+            &base,
+            &plat,
+            &Default::default(),
+            &analysis,
+            &mut rng,
+        );
         base.apply_all(&seq).0
     };
     let ctx = PromptContext {

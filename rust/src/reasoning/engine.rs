@@ -16,7 +16,7 @@
 
 use std::collections::HashSet;
 
-use crate::cost::{access, platform::Platform, simulator};
+use crate::cost::{access, platform::Platform, simulator, AnalysisCache};
 use crate::schedule::{sampler, Schedule, Transform};
 use crate::tir::program::{LoopKind, Program, Stage};
 use crate::util::rng::Pcg;
@@ -45,17 +45,32 @@ pub trait LlmEngine: Send {
 pub struct SimulatedLlm {
     pub model: ModelProfile,
     rng: Pcg,
+    /// Shared access-analysis memoization: the engine's bottleneck
+    /// diagnosis and the prompt's feature block analyze the same stages the
+    /// cost models just scored, so the tuner hands every engine the
+    /// session-wide cache.
+    analysis: AnalysisCache,
 }
 
 impl SimulatedLlm {
     pub fn new(model: ModelProfile, seed: u64) -> Self {
-        SimulatedLlm { model, rng: Pcg::new(seed ^ 0x11AA_22BB) }
+        SimulatedLlm {
+            model,
+            rng: Pcg::new(seed ^ 0x11AA_22BB),
+            analysis: AnalysisCache::new(),
+        }
+    }
+
+    /// Share a session-wide analysis cache (builder style).
+    pub fn with_analysis(mut self, analysis: AnalysisCache) -> Self {
+        self.analysis = analysis;
+        self
     }
 }
 
 impl LlmEngine for SimulatedLlm {
     fn complete(&mut self, ctx: &PromptContext) -> LlmResponse {
-        let prompt_text = prompt::render(ctx);
+        let prompt_text = prompt::render_with(ctx, Some(&self.analysis));
         let prompt_tokens = prompt::token_estimate(&prompt_text);
 
         // Does this round use the full contextual analysis?
@@ -70,7 +85,7 @@ impl LlmEngine for SimulatedLlm {
         };
 
         let (transforms, rationale) = if informed {
-            informed_proposals(ctx.node, ctx.platform, &avoid, &mut self.rng)
+            informed_proposals(ctx.node, ctx.platform, &avoid, &self.analysis, &mut self.rng)
         } else {
             shallow_proposals(&ctx.node.current, &mut self.rng)
         };
@@ -194,11 +209,16 @@ fn shallow_proposals(program: &Program, rng: &mut Pcg) -> (Vec<Transform>, Strin
 
 /// The informed analysis: diagnose the dominant bottleneck of the worst
 /// stage from the cost-model features and synthesize a transformation
-/// sequence that addresses it, honoring the avoid-set from history.
+/// sequence that addresses it, honoring the avoid-set from history. All
+/// access analyses — the stage-selection sweep and every re-analysis after
+/// a planned fix — go through the shared `analysis` cache, so the stages
+/// the cost models just scored (and the repeats of this proposal round)
+/// are never re-analyzed.
 pub fn informed_proposals(
     node: &Schedule,
     platform: &Platform,
     avoid: &HashSet<&'static str>,
+    analysis: &AnalysisCache,
     rng: &mut Pcg,
 ) -> (Vec<Transform>, String) {
     let program = &node.current;
@@ -208,7 +228,7 @@ pub fn informed_proposals(
         .iter()
         .enumerate()
         .map(|(i, s)| {
-            let a = access::analyze(program, s);
+            let a = analysis.analyze(program, s);
             (i, simulator::stage_latency(&a, platform))
         })
         .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
@@ -230,8 +250,10 @@ pub fn informed_proposals(
         }
     };
 
-    // Re-analyze helper.
-    let analyze = |p: &Program| access::analyze(p, &p.stages[si]);
+    // Re-analyze helper: one shared-cache closure for every step below (the
+    // selection sweep above already populated the entry for `scratch`'s
+    // starting state, and steps whose plan did not apply hit it again).
+    let analyze = |p: &Program| analysis.analyze(p, &p.stages[si]);
 
     // --- 1. parallelism -----------------------------------------------------
     let a0 = analyze(&scratch);
@@ -646,7 +668,9 @@ mod tests {
         let node = Schedule::new(WorkloadId::DeepSeekMoe.build());
         let plat = Platform::core_i9();
         let mut rng = Pcg::new(1);
-        let (seq, rationale) = informed_proposals(&node, &plat, &HashSet::new(), &mut rng);
+        let cache = AnalysisCache::new();
+        let (seq, rationale) =
+            informed_proposals(&node, &plat, &HashSet::new(), &cache, &mut rng);
         assert!(!seq.is_empty());
         assert!(!rationale.is_empty());
         let (out, applied) = node.apply_all(&seq);
@@ -665,7 +689,9 @@ mod tests {
             for plat in Platform::all() {
                 let node = Schedule::new(w.build());
                 let mut rng = Pcg::new(7);
-                let (seq, _) = informed_proposals(&node, &plat, &HashSet::new(), &mut rng);
+                let cache = AnalysisCache::new();
+                let (seq, _) =
+                    informed_proposals(&node, &plat, &HashSet::new(), &cache, &mut rng);
                 let (out, _) = node.apply_all(&seq);
                 let before = simulator::simulate(&node.current, &plat, 0);
                 let after = simulator::simulate(&out.current, &plat, 0);

@@ -8,7 +8,7 @@
 //! real API would receive (swap `LlmEngine` implementations to use one) and
 //! is logged for inspection.
 
-use crate::cost::{features, Platform};
+use crate::cost::{features, AnalysisCache, Platform};
 use crate::schedule::{Schedule, Transform};
 use crate::tir::printer;
 
@@ -31,6 +31,13 @@ impl<'a> PromptContext<'a> {
 
 /// Render the full prompt text in the Appendix-A format.
 pub fn render(ctx: &PromptContext) -> String {
+    render_with(ctx, None)
+}
+
+/// [`render`] with the feature block's access analyses served from a shared
+/// [`AnalysisCache`] (the reasoning engine passes its session cache, so
+/// repeated prompt rendering on the same node re-analyzes nothing).
+pub fn render_with(ctx: &PromptContext, analysis: Option<&AnalysisCache>) -> String {
     let mut out = String::new();
     out.push_str(
         "You are a code optimization assistant performing Monte Carlo Tree Search \
@@ -58,7 +65,10 @@ pub fn render(ctx: &PromptContext) -> String {
     out.push('\n');
 
     out.push_str("\nHardware cost model analysis of the selected node:\n");
-    let f = features::extract(&ctx.node.current, ctx.platform);
+    let f = match analysis {
+        Some(cache) => features::extract_cached(&ctx.node.current, ctx.platform, cache),
+        None => features::extract(&ctx.node.current, ctx.platform),
+    };
     out.push_str(&f.render());
     out.push('\n');
 
@@ -73,7 +83,7 @@ pub fn render(ctx: &PromptContext) -> String {
                 .current
                 .stages
                 .get(si)
-                .map(printer::loop_signature)
+                .map(|s| printer::loop_signature(s))
                 .unwrap_or_default();
             if cur_sig != anc_sig {
                 out.push_str(&format!(

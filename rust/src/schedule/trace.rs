@@ -7,22 +7,31 @@
 use std::sync::Arc;
 
 use crate::tir::Program;
+use crate::util::pvec::PVec;
 
 use super::transform::{ApplyError, Transform};
 
 /// A schedule: the original program, the transform sequence applied so far,
 /// and the resulting current program.
+///
+/// Cloning a schedule happens on every search-tree edge, so all three
+/// pieces are structurally shared: the base program sits behind an `Arc`,
+/// `current` is a CoW program (untouched stages shared with the parent and
+/// every sibling), and the trace + its rendered text are persistent chunked
+/// vectors ([`PVec`]) whose immutable prefix is shared — extending a
+/// depth-L trace costs O(L/chunk) reference bumps, not O(L) deep copies
+/// (the former O(L²) growth; see EXPERIMENTS.md §Perf).
 #[derive(Debug, Clone)]
 pub struct Schedule {
     /// Shared, immutable original program (Arc: schedules are cloned on
     /// every tree edge, so the base must not be deep-copied each time).
     pub base: Arc<Program>,
-    pub trace: Vec<Transform>,
+    pub trace: PVec<Transform>,
     pub current: Program,
     /// Human-readable rendering of each trace step against the program it
     /// was applied to, built incrementally at apply time so prompts don't
-    /// replay the whole trace (O(L^2) before; see EXPERIMENTS.md §Perf).
-    trace_text: Vec<String>,
+    /// replay the whole trace.
+    trace_text: PVec<String>,
 }
 
 impl Schedule {
@@ -30,8 +39,8 @@ impl Schedule {
         Schedule {
             current: base.clone(),
             base: Arc::new(base),
-            trace: Vec::new(),
-            trace_text: Vec::new(),
+            trace: PVec::new(),
+            trace_text: PVec::new(),
         }
     }
 
@@ -40,8 +49,8 @@ impl Schedule {
         Schedule {
             current: (*base).clone(),
             base,
-            trace: Vec::new(),
-            trace_text: Vec::new(),
+            trace: PVec::new(),
+            trace_text: PVec::new(),
         }
     }
 
@@ -76,7 +85,7 @@ impl Schedule {
     /// Replay the trace from the base program; must reproduce `current`.
     pub fn replay(&self) -> Result<Program, ApplyError> {
         let mut p = (*self.base).clone();
-        for t in &self.trace {
+        for t in self.trace.iter() {
             p = t.apply(&p)?;
         }
         Ok(p)
@@ -190,6 +199,32 @@ mod tests {
         // Same sequence -> same fingerprint.
         let s1b = s.apply(Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }).unwrap();
         assert_eq!(s1.fingerprint(), s1b.fingerprint());
+    }
+
+    #[test]
+    fn deep_chain_crosses_chunk_boundaries_and_replays() {
+        // Deep traces exercise the persistent-vector chunk seams: a chain
+        // well past one chunk must keep trace, text and replay coherent.
+        use crate::schedule::sampler;
+        use crate::util::rng::Pcg;
+        let mut s = Schedule::new(workload::moe_matmul("m", 64, 96, 128));
+        let mut rng = Pcg::new(3);
+        let mut guard = 0;
+        while s.len() < 40 && guard < 4000 {
+            guard += 1;
+            if let Some(t) = sampler::random_transform(&s.current, &mut rng) {
+                if let Ok(next) = s.apply(t) {
+                    s = next;
+                }
+            }
+        }
+        assert!(s.len() >= 40, "could not build a deep trace (got {})", s.len());
+        let lines = s.render_trace();
+        assert_eq!(lines.lines().count(), s.len(), "one rendered line per step");
+        let replayed = s.replay().unwrap();
+        let a: Vec<_> = replayed.stages[0].loops.iter().map(|l| (l.extent, l.kind)).collect();
+        let b: Vec<_> = s.current.stages[0].loops.iter().map(|l| (l.extent, l.kind)).collect();
+        assert_eq!(a, b, "replay must reproduce the deep schedule");
     }
 
     #[test]

@@ -186,10 +186,18 @@ impl Transform {
     }
 
     /// Apply to a program, producing the transformed variant.
+    ///
+    /// Copy-on-write: cloning the program bumps `Arc` refcounts and only
+    /// the touched stage is actually copied (`Stage::cow_mut`), so one tree
+    /// edge costs O(stage), not O(program) — every untouched stage stays
+    /// shared with the parent and all sibling variants.
     pub fn apply(&self, program: &Program) -> Result<Program, ApplyError> {
         let mut p = program.clone();
         let si = self.stage();
-        let stage = p.stages.get_mut(si).ok_or(ApplyError::BadStage(si))?;
+        if si >= p.stages.len() {
+            return Err(ApplyError::BadStage(si));
+        }
+        let stage = Stage::cow_mut(&mut p.stages[si]);
         match self {
             Transform::TileSize { loop_idx, factor, .. } => {
                 apply_tile(stage, *loop_idx, *factor)?

@@ -395,7 +395,7 @@ impl<'a> Evaluator<'a> {
     fn record(&mut self, candidate: &Schedule, lat: f64) {
         if lat < self.best_latency {
             self.best_latency = lat;
-            self.best_trace = candidate.trace.clone();
+            self.best_trace = candidate.trace.to_vec();
         }
         self.curve.push(Measurement {
             sample: self.used,
@@ -572,7 +572,7 @@ mod tests {
 
     #[test]
     fn evaluator_budget_and_best_tracking() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         let base = WorkloadId::DeepSeekMoe.build_test();
         let mut ev = Evaluator::new(&hw, &base, 3, 7);
         let sched = Schedule::new(base.clone());
@@ -588,7 +588,7 @@ mod tests {
 
     #[test]
     fn cached_reevaluation_consumes_zero_samples() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         let base = WorkloadId::DeepSeekMoe.build_test();
         let mut ev =
             Evaluator::with_cache(&hw, &base, 5, 7, MeasureCache::new(), "core_i9");
@@ -611,7 +611,7 @@ mod tests {
 
     #[test]
     fn prepopulated_cache_answers_before_any_sample() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         let base = WorkloadId::Llama4Mlp.build_test();
         let sched = Schedule::new(base.clone())
             .apply(crate::schedule::Transform::Parallel { stage: 0, loop_idx: 0 })
@@ -627,7 +627,7 @@ mod tests {
 
     #[test]
     fn speedup_at_monotone() {
-        let hw = HardwareModel { platform: Platform::core_i9() };
+        let hw = HardwareModel::new(Platform::core_i9());
         let base = WorkloadId::Llama4Mlp.build_test();
         let mut ev = Evaluator::new(&hw, &base, 10, 1);
         let mut rng = Pcg::new(5);

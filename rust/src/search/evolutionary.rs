@@ -223,7 +223,7 @@ fn tournament_pick(population: &[Member], k: usize, rng: &mut Pcg) -> usize {
 
 /// Trace mutation: drop the tail, append random transforms, or both.
 fn mutate(parent: &Schedule, cfg: &EvoConfig, rng: &mut Pcg) -> Vec<Transform> {
-    let mut trace = parent.trace.clone();
+    let mut trace = parent.trace.to_vec();
     match rng.gen_range(3) {
         0 if !trace.is_empty() => {
             // Drop a random-length tail.
@@ -252,13 +252,13 @@ fn mutate(parent: &Schedule, cfg: &EvoConfig, rng: &mut Pcg) -> Vec<Transform> {
 /// Illegal suffix elements are dropped by `apply_all` later.
 fn crossover(a: &Schedule, b: &Schedule, rng: &mut Pcg) -> Vec<Transform> {
     if a.trace.is_empty() {
-        return b.trace.clone();
+        return b.trace.to_vec();
     }
     let cut_a = rng.gen_range(a.trace.len() + 1);
-    let mut child: Vec<Transform> = a.trace[..cut_a].to_vec();
+    let mut child: Vec<Transform> = a.trace.iter().take(cut_a).cloned().collect();
     if !b.trace.is_empty() {
         let cut_b = rng.gen_range(b.trace.len());
-        child.extend(b.trace[cut_b..].iter().cloned());
+        child.extend(b.trace.iter().skip(cut_b).cloned());
     }
     child
 }
@@ -272,8 +272,8 @@ mod tests {
     fn run(budget: usize, seed: u64) -> SearchResult {
         let plat = Platform::core_i9();
         let base = WorkloadId::DeepSeekMoe.build();
-        let surrogate = SurrogateModel { platform: plat.clone() };
-        let hardware = HardwareModel { platform: plat.clone() };
+        let surrogate = SurrogateModel::new(plat.clone());
+        let hardware = HardwareModel::new(plat.clone());
         evolutionary_search(
             &base,
             &surrogate,

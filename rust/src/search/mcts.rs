@@ -442,8 +442,8 @@ mod tests {
     fn run(budget: usize, seed: u64) -> SearchResult {
         let plat = Platform::core_i9();
         let base = WorkloadId::DeepSeekMoe.build();
-        let surrogate = SurrogateModel { platform: plat.clone() };
-        let hardware = HardwareModel { platform: plat.clone() };
+        let surrogate = SurrogateModel::new(plat.clone());
+        let hardware = HardwareModel::new(plat.clone());
         let mut policy = RandomPolicy::new(seed);
         mcts_search(
             &base,
@@ -499,13 +499,13 @@ mod tests {
         assert_eq!(applied, r.best_trace.len(), "best trace must replay fully");
         // Replayed program must validate and beat baseline (noise-free).
         best.current.validate().unwrap();
-        let hw = HardwareModel { platform: plat };
+        let hw = HardwareModel::new(plat);
         assert!(hw.latency(&best.current, 0) < r.baseline_latency);
     }
 
     fn run_on(base: &Program, plat: &Platform, budget: usize, seed: u64) -> SearchResult {
-        let surrogate = SurrogateModel { platform: plat.clone() };
-        let hardware = HardwareModel { platform: plat.clone() };
+        let surrogate = SurrogateModel::new(plat.clone());
+        let hardware = HardwareModel::new(plat.clone());
         let mut policy = RandomPolicy::new(seed);
         mcts_search(
             base,
@@ -525,8 +525,8 @@ mod tests {
         // exactly one child. Indirectly verified via search still working.
         let plat = Platform::xeon_e3();
         let base = WorkloadId::FluxConv.build();
-        let surrogate = SurrogateModel { platform: plat.clone() };
-        let hardware = HardwareModel { platform: plat.clone() };
+        let surrogate = SurrogateModel::new(plat.clone());
+        let hardware = HardwareModel::new(plat.clone());
         let mut policy = RandomPolicy::new(2);
         let cfg = MctsConfig { branching: 1, ..Default::default() };
         let r = mcts_search(&base, &mut policy, &surrogate, &hardware, &cfg, &plat, 20, 2);

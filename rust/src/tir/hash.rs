@@ -1,0 +1,243 @@
+//! Structural hashing primitives over TIR.
+//!
+//! This module hosts the low-level hashing machinery shared by
+//! `db::fingerprint` (workload/program fingerprints), the per-stage
+//! memoized hash ([`crate::tir::program::Stage::struct_hash`]) and the
+//! access-analysis memoization key (`cost::AnalysisCache`). It lives in
+//! `tir` so both `cost` and `db` can use it without depending on each
+//! other.
+//!
+//! All hashes are 64-bit FNV-1a-style with per-field tags (so structurally
+//! different programs don't collide through commutativity) and a splitmix64
+//! avalanche tail.
+
+use super::expr::{Expr, LinIdx};
+use super::program::{BlockExpr, Buffer, Stage};
+
+/// Incremental FNV-1a-style hasher over tagged integer fields.
+#[derive(Debug, Clone)]
+pub struct StructHasher {
+    h: u64,
+}
+
+impl Default for StructHasher {
+    fn default() -> Self {
+        StructHasher { h: 0xcbf29ce484222325 }
+    }
+}
+
+impl StructHasher {
+    pub fn new() -> StructHasher {
+        StructHasher::default()
+    }
+
+    #[inline]
+    pub fn feed(&mut self, x: u64) {
+        self.h ^= x;
+        self.h = self.h.wrapping_mul(0x100000001b3);
+    }
+
+    #[inline]
+    pub fn feed_i64(&mut self, x: i64) {
+        self.feed(x as u64);
+    }
+
+    /// Field tag: keeps `[2, 3]` from colliding with `[3, 2]`-shaped feeds
+    /// of a different field.
+    #[inline]
+    pub fn tag(&mut self, t: u64) {
+        self.feed(0x9E37_79B9_7F4A_7C15 ^ t);
+    }
+
+    pub fn finish(&self) -> u64 {
+        // Final avalanche (splitmix64 tail) so nearby inputs spread.
+        let mut z = self.h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+        z ^ (z >> 31)
+    }
+}
+
+pub fn feed_linidx(h: &mut StructHasher, idx: &LinIdx) {
+    h.tag(10);
+    h.feed_i64(idx.offset);
+    for &(axis, coeff) in &idx.terms {
+        h.feed(axis as u64);
+        h.feed_i64(coeff);
+    }
+}
+
+pub fn feed_block_expr(h: &mut StructHasher, e: &BlockExpr) {
+    match e {
+        BlockExpr::Load(buf, idx) => {
+            h.tag(20);
+            h.feed(*buf as u64);
+            for i in idx {
+                feed_linidx(h, i);
+            }
+        }
+        BlockExpr::Const(c) => {
+            h.tag(21);
+            h.feed(c.to_bits() as u64);
+        }
+        BlockExpr::Add(a, b) => {
+            h.tag(22);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Sub(a, b) => {
+            h.tag(23);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Mul(a, b) => {
+            h.tag(24);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+        BlockExpr::Max(a, b) => {
+            h.tag(25);
+            feed_block_expr(h, a);
+            feed_block_expr(h, b);
+        }
+    }
+}
+
+pub fn feed_expr(h: &mut StructHasher, e: &Expr) {
+    match e {
+        Expr::Var(v) => {
+            h.tag(30);
+            h.feed(*v as u64);
+        }
+        Expr::Const(c) => {
+            h.tag(31);
+            h.feed_i64(*c);
+        }
+        Expr::Add(a, b) => {
+            h.tag(32);
+            feed_expr(h, a);
+            feed_expr(h, b);
+        }
+        Expr::Mul(a, k) => {
+            h.tag(33);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+        Expr::Div(a, k) => {
+            h.tag(34);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+        Expr::Mod(a, k) => {
+            h.tag(35);
+            feed_expr(h, a);
+            h.feed_i64(*k);
+        }
+    }
+}
+
+/// Feed the schedule-invariant structure of one stage (axes and block);
+/// names are deliberately excluded so fingerprints transfer across
+/// identically-shaped programs.
+pub fn feed_stage_structure(h: &mut StructHasher, s: &Stage) {
+    h.tag(2);
+    for a in &s.axes {
+        h.feed_i64(a.extent);
+        h.feed(a.is_reduction as u64 + 1);
+    }
+    h.tag(3);
+    h.feed(s.block.out as u64);
+    for idx in &s.block.out_idx {
+        feed_linidx(h, idx);
+    }
+    feed_block_expr(h, &s.block.rhs);
+    h.feed(s.block.reduce as u64 + 1);
+}
+
+/// Feed the schedule state of one stage: current loop nest,
+/// axis-reconstruction expressions and performance annotations.
+pub fn feed_stage_schedule(h: &mut StructHasher, s: &Stage) {
+    h.tag(4);
+    for l in &s.loops {
+        h.feed_i64(l.extent);
+        h.feed(l.kind as u64 + 1);
+        h.feed(l.var as u64);
+    }
+    h.tag(5);
+    for e in &s.axis_exprs {
+        feed_expr(h, e);
+    }
+    h.feed(s.cache_write as u64 + 17);
+    h.feed(s.compute_at.map(|d| d as u64 + 1).unwrap_or(0));
+}
+
+/// Full per-stage structural hash: the stage's computation structure plus
+/// its current schedule state. This is the value memoized by
+/// [`Stage::struct_hash`] and combined by `db::program_fingerprint`; two
+/// stages with equal hashes are structurally identical (modulo 64-bit
+/// collision), so any pure analysis of them is identical too — the
+/// soundness argument behind `cost::AnalysisCache`.
+pub fn stage_schedule_hash(s: &Stage) -> u64 {
+    let mut h = StructHasher::new();
+    feed_stage_structure(&mut h, s);
+    feed_stage_schedule(&mut h, s);
+    h.finish()
+}
+
+/// Feed the buffer table (kinds and shapes; names excluded). Cheap — a few
+/// dozen integer feeds — so callers hash it per call while the expensive
+/// per-stage part is memoized.
+pub fn feed_buffers(h: &mut StructHasher, buffers: &[Buffer]) {
+    for b in buffers {
+        h.feed(b.kind as u64 + 1);
+        h.feed(b.shape.len() as u64);
+        for &d in &b.shape {
+            h.feed_i64(d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload;
+
+    #[test]
+    fn stage_hash_changes_with_schedule_state() {
+        let p = workload::moe_matmul("m", 4, 6, 8);
+        let h0 = stage_schedule_hash(&p.stages[0]);
+        let q = Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }
+            .apply(&p)
+            .unwrap();
+        let h1 = stage_schedule_hash(&q.stages[0]);
+        assert_ne!(h0, h1, "tiling must change the stage hash");
+        // Same transform sequence reproduces the same hash.
+        let q2 = Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }
+            .apply(&p)
+            .unwrap();
+        assert_eq!(h1, stage_schedule_hash(&q2.stages[0]));
+    }
+
+    #[test]
+    fn stage_hash_invariant_to_names() {
+        let a = workload::moe_matmul("alpha", 4, 6, 8);
+        let b = workload::moe_matmul("beta", 4, 6, 8);
+        assert_eq!(
+            stage_schedule_hash(&a.stages[0]),
+            stage_schedule_hash(&b.stages[0])
+        );
+    }
+
+    #[test]
+    fn buffer_feed_distinguishes_shapes() {
+        let a = workload::moe_matmul("m", 4, 6, 8);
+        let b = workload::moe_matmul("m", 4, 6, 16);
+        let hash = |p: &crate::tir::Program| {
+            let mut h = StructHasher::new();
+            feed_buffers(&mut h, &p.buffers);
+            h.finish()
+        };
+        assert_ne!(hash(&a), hash(&b));
+    }
+}

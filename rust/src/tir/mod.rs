@@ -9,6 +9,7 @@
 //! prompts.
 
 pub mod expr;
+pub mod hash;
 pub mod interp;
 pub mod printer;
 pub mod program;

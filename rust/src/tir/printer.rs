@@ -13,7 +13,7 @@ pub fn print_program(p: &Program) -> String {
     out.push_str("@tvm.script.ir_module\n");
     out.push_str(&format!("class {}:\n", camel(&p.name)));
     out.push_str("  @T.prim_func\n  def main(\n");
-    for b in &p.buffers {
+    for b in p.buffers.iter() {
         let dims = b
             .shape
             .iter()

@@ -5,8 +5,23 @@
 //! reduction/elementwise [`Block`]. Schedule transformations rewrite the
 //! loop list and the axis-reconstruction expressions but never the block,
 //! which is what makes semantic equivalence checkable.
+//!
+//! **Copy-on-write representation (PR 3).** A program stores its buffer
+//! table behind one `Arc` and each stage behind its own `Arc`, so cloning a
+//! program (which every `Transform::apply` does) is a handful of reference
+//! bumps, and mutating one stage clones only that stage
+//! ([`Stage::cow_mut`]) — O(stage) per search-tree edge instead of
+//! O(program). Sibling schedules produced by MCTS/ES therefore share every
+//! untouched stage. Each stage memoizes its structural hash
+//! ([`Stage::struct_hash`]); `cow_mut` clears the memo on every mutable
+//! borrow, which is the invalidation invariant the fingerprint and
+//! analysis caches rely on (stage hash changes ⇒ memo was cleared ⇒
+//! downstream analyses are recomputed).
+
+use std::sync::{Arc, OnceLock};
 
 use super::expr::{AxisId, Expr, LinIdx, VarId};
+use super::hash;
 
 /// Buffer role, used by the interpreter and the cost model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -188,6 +203,10 @@ pub struct Stage {
     /// Loop depth at which the output tile is initialized / written back
     /// (ComputeLocation transform). None = at the block. Performance-only.
     pub compute_at: Option<usize>,
+    /// Memoized structural hash (see [`Stage::struct_hash`]). Cleared by
+    /// [`Stage::cow_mut`] on every mutable borrow; preserved by `clone`
+    /// (a clone is structurally identical, so the hash stays valid).
+    memo: OnceLock<u64>,
 }
 
 impl Stage {
@@ -214,7 +233,29 @@ impl Stage {
             block,
             cache_write: false,
             compute_at: None,
+            memo: OnceLock::new(),
         }
+    }
+
+    /// Memoized structural hash of this stage (computation structure +
+    /// schedule state, names excluded; see `tir::hash::stage_schedule_hash`).
+    /// Computed at most once per stage mutation: [`Stage::cow_mut`] clears
+    /// the memo, everything else shares it — including clones. This is the
+    /// unit the incremental `db::program_fingerprint` combines and the
+    /// `cost::AnalysisCache` keys on.
+    pub fn struct_hash(&self) -> u64 {
+        *self.memo.get_or_init(|| hash::stage_schedule_hash(self))
+    }
+
+    /// Copy-on-write mutable access through a shared handle: clones the
+    /// stage only if other programs still reference it, and clears the
+    /// memoized structural hash (the borrower may change anything). All
+    /// stage mutation must go through here — it is what keeps memoized
+    /// hashes sound.
+    pub fn cow_mut(this: &mut Arc<Stage>) -> &mut Stage {
+        let s = Arc::make_mut(this);
+        s.memo = OnceLock::new();
+        s
     }
 
     /// Allocate a fresh loop variable.
@@ -320,14 +361,55 @@ impl Stage {
 }
 
 /// A tunable tensor program (one TVM-style task).
+///
+/// Clone is copy-on-write: the buffer table and each stage sit behind
+/// `Arc`s, so cloning bumps reference counts and [`Program::stage_mut`] /
+/// [`Stage::cow_mut`] clone only the stage actually mutated.
 #[derive(Debug, Clone)]
 pub struct Program {
     pub name: String,
-    pub buffers: Vec<Buffer>,
-    pub stages: Vec<Stage>,
+    /// Buffer table; immutable after construction (transforms never add or
+    /// reshape buffers), hence shared by every schedule variant.
+    pub buffers: Arc<Vec<Buffer>>,
+    pub stages: Vec<Arc<Stage>>,
 }
 
 impl Program {
+    /// Build a program, wrapping buffers and stages for structural sharing.
+    pub fn new(name: &str, buffers: Vec<Buffer>, stages: Vec<Stage>) -> Program {
+        Program {
+            name: name.to_string(),
+            buffers: Arc::new(buffers),
+            stages: stages.into_iter().map(Arc::new).collect(),
+        }
+    }
+
+    /// Copy-on-write mutable access to stage `i` (clones the stage if
+    /// shared, clears its memoized hash). Panics on out-of-range `i`.
+    pub fn stage_mut(&mut self, i: usize) -> &mut Stage {
+        Stage::cow_mut(&mut self.stages[i])
+    }
+
+    /// Fully independent copy: fresh buffer and stage allocations, memoized
+    /// hashes cleared. The from-scratch oracle the incremental-evaluation
+    /// property tests compare the CoW path against; never needed on the
+    /// search hot path.
+    pub fn deep_clone(&self) -> Program {
+        Program {
+            name: self.name.clone(),
+            buffers: Arc::new((*self.buffers).clone()),
+            stages: self
+                .stages
+                .iter()
+                .map(|s| {
+                    let mut st = (**s).clone();
+                    st.memo = OnceLock::new();
+                    Arc::new(st)
+                })
+                .collect(),
+        }
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         for s in &self.stages {
             s.validate()?;
@@ -396,11 +478,7 @@ mod tests {
             ),
             reduce: ReduceOp::Sum,
         };
-        Program {
-            name: "matmul".into(),
-            buffers,
-            stages: vec![Stage::from_axes("matmul", axes, block)],
-        }
+        Program::new("matmul", buffers, vec![Stage::from_axes("matmul", axes, block)])
     }
 
     #[test]
@@ -427,15 +505,15 @@ mod tests {
     #[test]
     fn validate_catches_space_mismatch() {
         let mut p = matmul_4x4x4();
-        p.stages[0].loops[0].extent = 3; // break the space
+        p.stage_mut(0).loops[0].extent = 3; // break the space
         assert!(p.validate().is_err());
     }
 
     #[test]
     fn validate_catches_dead_var() {
         let mut p = matmul_4x4x4();
-        p.stages[0].axis_exprs[0] = Expr::var(99);
-        p.stages[0].var_extents.resize(100, 1);
+        p.stage_mut(0).axis_exprs[0] = Expr::var(99);
+        p.stage_mut(0).var_extents.resize(100, 1);
         assert!(p.validate().is_err());
     }
 
@@ -460,5 +538,35 @@ mod tests {
     fn reduce_op_inits() {
         assert_eq!(ReduceOp::Sum.init_val(), 0.0);
         assert!(ReduceOp::Max.init_val().is_infinite());
+    }
+
+    #[test]
+    fn clone_shares_stages_until_mutation() {
+        let p = matmul_4x4x4();
+        let q = p.clone();
+        assert!(Arc::ptr_eq(&p.stages[0], &q.stages[0]), "clone must share stages");
+        assert!(Arc::ptr_eq(&p.buffers, &q.buffers), "clone must share buffers");
+        let mut r = p.clone();
+        r.stage_mut(0).loops[0].kind = LoopKind::Unrolled;
+        assert!(!Arc::ptr_eq(&p.stages[0], &r.stages[0]), "mutation must un-share");
+        assert_eq!(p.stages[0].loops[0].kind, LoopKind::Serial, "original untouched");
+        assert_eq!(r.stages[0].loops[0].kind, LoopKind::Unrolled);
+    }
+
+    #[test]
+    fn struct_hash_memoized_and_invalidated() {
+        let mut p = matmul_4x4x4();
+        let h0 = p.stages[0].struct_hash();
+        assert_eq!(h0, p.stages[0].struct_hash(), "memo stable across calls");
+        assert_eq!(
+            h0,
+            p.clone().stages[0].struct_hash(),
+            "clone carries the memo"
+        );
+        p.stage_mut(0).loops[0].kind = LoopKind::Parallel;
+        let h1 = p.stages[0].struct_hash();
+        assert_ne!(h0, h1, "mutation must change the hash");
+        // A from-scratch recompute (cleared memo) agrees with the memoized one.
+        assert_eq!(p.deep_clone().stages[0].struct_hash(), h1);
     }
 }

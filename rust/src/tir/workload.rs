@@ -131,14 +131,14 @@ pub fn attention(name: &str, heads: i64, seq: i64, dim: i64) -> Program {
         reduce: ReduceOp::Sum,
     };
 
-    Program {
-        name: name.to_string(),
+    Program::new(
+        name,
         buffers,
-        stages: vec![
+        vec![
             Stage::from_axes("scores", axes1, block1),
             Stage::from_axes("attn_out", axes2, block2),
         ],
-    }
+    )
 }
 
 /// Token-by-expert matmul (the paper's running example):
@@ -164,11 +164,7 @@ pub fn moe_matmul(name: &str, tokens: i64, out_dim: i64, in_dim: i64) -> Program
         ),
         reduce: ReduceOp::Sum,
     };
-    Program {
-        name: name.to_string(),
-        buffers,
-        stages: vec![Stage::from_axes("moe", axes, block)],
-    }
+    Program::new(name, buffers, vec![Stage::from_axes("moe", axes, block)])
 }
 
 /// Direct 2-D convolution (stride 1, valid padding):
@@ -209,11 +205,7 @@ pub fn conv2d(name: &str, c_out: i64, c_in: i64, height: i64, width: i64, ksize:
         ),
         reduce: ReduceOp::Sum,
     };
-    Program {
-        name: name.to_string(),
-        buffers,
-        stages: vec![Stage::from_axes("conv2d", axes, block)],
-    }
+    Program::new(name, buffers, vec![Stage::from_axes("conv2d", axes, block)])
 }
 
 /// Plain dense matmul task used by the end-to-end decomposition.

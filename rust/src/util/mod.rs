@@ -8,6 +8,7 @@ pub mod cli;
 pub mod json;
 pub mod pool;
 pub mod prop;
+pub mod pvec;
 pub mod rng;
 pub mod stats;
 pub mod tomlmini;

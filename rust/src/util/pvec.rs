@@ -1,0 +1,133 @@
+//! A persistent (structurally shared) chunked vector.
+//!
+//! `Schedule` clones its transform trace and rendered trace text on every
+//! search-tree edge; with plain `Vec`s a depth-L chain deep-copies
+//! O(L) elements per edge — O(L²) total strings/transforms for one branch.
+//! [`PVec`] freezes full chunks behind `Arc<[T]>` and keeps only a small
+//! owned tail, so cloning costs O(L/CHUNK) reference bumps plus at most
+//! `CHUNK` element clones, while iteration order and contents are exactly
+//! those of a `Vec`.
+//!
+//! The structure is append-only (push), which is all a trace needs; for
+//! arbitrary edits, convert with [`PVec::to_vec`] and rebuild.
+
+use std::sync::Arc;
+
+/// Elements per frozen chunk. Small enough that the owned tail stays cheap
+/// to clone, large enough that deep traces are mostly shared `Arc`s.
+const CHUNK: usize = 16;
+
+#[derive(Debug, Clone)]
+pub struct PVec<T> {
+    /// Frozen, shared prefix; every chunk holds exactly `CHUNK` elements.
+    chunks: Vec<Arc<[T]>>,
+    /// Owned tail, length < `CHUNK`.
+    tail: Vec<T>,
+}
+
+impl<T> Default for PVec<T> {
+    fn default() -> Self {
+        PVec { chunks: Vec::new(), tail: Vec::new() }
+    }
+}
+
+impl<T: Clone> PVec<T> {
+    pub fn new() -> PVec<T> {
+        PVec::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.chunks.len() * CHUNK + self.tail.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.chunks.is_empty() && self.tail.is_empty()
+    }
+
+    /// Append one element; seals the tail into a shared chunk when full.
+    pub fn push(&mut self, item: T) {
+        self.tail.push(item);
+        if self.tail.len() == CHUNK {
+            self.chunks.push(std::mem::take(&mut self.tail).into());
+        }
+    }
+
+    /// In-order iteration over all elements.
+    pub fn iter(&self) -> impl Iterator<Item = &T> {
+        self.chunks.iter().flat_map(|c| c.iter()).chain(self.tail.iter())
+    }
+
+    pub fn get(&self, i: usize) -> Option<&T> {
+        let c = i / CHUNK;
+        if c < self.chunks.len() {
+            self.chunks[c].get(i % CHUNK)
+        } else {
+            self.tail.get(i - self.chunks.len() * CHUNK)
+        }
+    }
+
+    /// Materialize as a plain `Vec` (for APIs that need a slice).
+    pub fn to_vec(&self) -> Vec<T> {
+        self.iter().cloned().collect()
+    }
+}
+
+impl<T: Clone> FromIterator<T> for PVec<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> PVec<T> {
+        let mut v = PVec::new();
+        for item in iter {
+            v.push(item);
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_iter_roundtrip() {
+        let mut v: PVec<usize> = PVec::new();
+        assert!(v.is_empty());
+        for i in 0..100 {
+            v.push(i);
+            assert_eq!(v.len(), i + 1);
+        }
+        assert_eq!(v.to_vec(), (0..100).collect::<Vec<_>>());
+        assert_eq!(v.get(0), Some(&0));
+        assert_eq!(v.get(CHUNK), Some(&CHUNK));
+        assert_eq!(v.get(99), Some(&99));
+        assert_eq!(v.get(100), None);
+    }
+
+    #[test]
+    fn clone_shares_frozen_chunks() {
+        let mut v: PVec<u64> = (0..(3 * CHUNK as u64 + 5)).collect();
+        let w = v.clone();
+        assert_eq!(v.to_vec(), w.to_vec());
+        for (a, b) in v.chunks.iter().zip(&w.chunks) {
+            assert!(Arc::ptr_eq(a, b), "frozen chunks must be shared, not copied");
+        }
+        // Diverging after the clone leaves the original untouched.
+        v.push(999);
+        assert_eq!(w.len(), 3 * CHUNK + 5);
+        assert_eq!(v.len(), 3 * CHUNK + 6);
+        assert_eq!(*v.iter().last().unwrap(), 999);
+    }
+
+    #[test]
+    fn boundary_at_exact_chunk_multiple() {
+        let v: PVec<usize> = (0..2 * CHUNK).collect();
+        assert_eq!(v.len(), 2 * CHUNK);
+        assert!(v.tail.is_empty(), "full tails must be sealed");
+        assert_eq!(v.to_vec(), (0..2 * CHUNK).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn from_iterator_collects() {
+        let v: PVec<String> = ["a", "b", "c"].iter().map(|s| s.to_string()).collect();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.to_vec(), vec!["a", "b", "c"]);
+    }
+}

@@ -1,0 +1,162 @@
+//! PR-3 incremental-evaluation equivalence: the copy-on-write TIR, the
+//! memoized per-stage hashes and the shared `AnalysisCache` are pure
+//! plumbing — every observable value (simulated latency per seed,
+//! program/workload fingerprints, extracted features, whole search
+//! trajectories) must be **bit-identical** to a fresh deep-clone evaluated
+//! with no caches at all. Uses the in-repo property harness
+//! (`util::prop`) over random legal transform sequences.
+
+use std::sync::Arc;
+
+use reasoning_compiler::cost::{
+    analytical, features, simulator, AnalysisCache, CostModel, HardwareModel, Platform,
+    SurrogateModel,
+};
+use reasoning_compiler::db::{program_fingerprint, workload_fingerprint};
+use reasoning_compiler::schedule::{sampler, Schedule, Transform};
+use reasoning_compiler::search::{
+    EvoConfig, EvolutionaryStrategy, MctsConfig, MctsStrategy, RandomPolicy, SearchContext,
+    SearchResult, SearchStrategy,
+};
+use reasoning_compiler::tir::{Program, WorkloadId};
+use reasoning_compiler::util::prop;
+
+/// The pre-PR evaluation path: no analysis cache, plain `simulate`.
+struct UncachedHardware {
+    platform: Platform,
+}
+
+impl CostModel for UncachedHardware {
+    fn latency(&self, program: &Program, seed: u64) -> f64 {
+        simulator::simulate(program, &self.platform, seed)
+    }
+    fn name(&self) -> &'static str {
+        "hardware-sim"
+    }
+}
+
+/// The pre-PR surrogate path: no analysis cache, plain `predict`.
+struct UncachedSurrogate {
+    platform: Platform,
+}
+
+impl CostModel for UncachedSurrogate {
+    fn latency(&self, program: &Program, seed: u64) -> f64 {
+        analytical::predict(program, &self.platform, seed)
+    }
+    fn name(&self) -> &'static str {
+        "surrogate"
+    }
+}
+
+#[test]
+fn cow_plus_memoized_path_bit_identical_to_fresh_deep_clone_uncached() {
+    // One shared cache across every case: hits must never change values.
+    let analysis = AnalysisCache::new();
+    let plat = Platform::core_i9();
+    for w in WorkloadId::ALL {
+        prop::check(
+            &format!("incremental-equivalence[{}]", w.name()),
+            0xC0C0 ^ w.name().len() as u64,
+            20,
+            |rng| {
+                let base = Schedule::new(w.build());
+                let len = 1 + rng.gen_range(10);
+                let seq = sampler::random_sequence(&base.current, len, rng);
+                base.apply_all(&seq).0.trace.to_vec()
+            },
+            |trace| {
+                let base = Schedule::new(w.build());
+                let (sched, _) = base.apply_all(trace);
+                let cow = &sched.current; // CoW chain, stage memos warm
+                let fresh = cow.deep_clone(); // fresh allocations, memos cold
+
+                if program_fingerprint(cow) != program_fingerprint(&fresh) {
+                    return Err("program fingerprint differs from cold rehash".into());
+                }
+                if workload_fingerprint(cow) != workload_fingerprint(&fresh) {
+                    return Err("workload fingerprint differs from cold rehash".into());
+                }
+                for seed in [0u64, 1, 5, 17] {
+                    let cached = simulator::simulate_cached(cow, &plat, seed, &analysis);
+                    let plain = simulator::simulate(&fresh, &plat, seed);
+                    if cached.to_bits() != plain.to_bits() {
+                        return Err(format!(
+                            "simulate seed {seed}: cached {cached} != uncached {plain}"
+                        ));
+                    }
+                    let pc = analytical::predict_cached(cow, &plat, seed, &analysis);
+                    let pp = analytical::predict(&fresh, &plat, seed);
+                    if pc.to_bits() != pp.to_bits() {
+                        return Err(format!(
+                            "predict seed {seed}: cached {pc} != uncached {pp}"
+                        ));
+                    }
+                }
+                if features::extract_cached(cow, &plat, &analysis) != features::extract(&fresh, &plat)
+                {
+                    return Err("features differ between cached and uncached".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn cow_apply_shares_untouched_stages_and_buffers_across_siblings() {
+    let s = Schedule::new(WorkloadId::Llama3Attention.build());
+    let a = s.apply(Transform::Parallel { stage: 0, loop_idx: 0 }).unwrap();
+    let b = s.apply(Transform::CacheWrite { stage: 0 }).unwrap();
+    // Stage 1 was never touched: parent and both siblings share one
+    // allocation (this is what makes MCTS's thousands of sibling schedules
+    // O(stage) instead of O(program)).
+    assert!(Arc::ptr_eq(&s.current.stages[1], &a.current.stages[1]));
+    assert!(Arc::ptr_eq(&s.current.stages[1], &b.current.stages[1]));
+    // The touched stage diverged.
+    assert!(!Arc::ptr_eq(&s.current.stages[0], &a.current.stages[0]));
+    assert!(!Arc::ptr_eq(&a.current.stages[0], &b.current.stages[0]));
+    // The buffer table is immutable and shared by everyone.
+    assert!(Arc::ptr_eq(&s.current.buffers, &a.current.buffers));
+    assert!(Arc::ptr_eq(&s.current.buffers, &b.current.buffers));
+    // Deeper edits on a sibling still leave the other untouched stage shared.
+    let a2 = a.apply(Transform::CacheWrite { stage: 0 }).unwrap();
+    assert!(Arc::ptr_eq(&s.current.stages[1], &a2.current.stages[1]));
+}
+
+fn curve_key(r: &SearchResult) -> Vec<(usize, u64)> {
+    r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect()
+}
+
+#[test]
+fn searches_with_analysis_caches_match_uncached_models_bit_for_bit() {
+    // Whole-trajectory proof: MCTS and ES driven by the cache-backed models
+    // reproduce the exact curves of the uncached pre-PR evaluation path —
+    // same latencies, same sample numbers, same best traces, per seed.
+    let plat = Platform::core_i9();
+    let base = WorkloadId::DeepSeekMoe.build();
+    let shared = AnalysisCache::new();
+    let cached_sur = SurrogateModel::with_analysis(plat.clone(), shared.share());
+    let cached_hw = HardwareModel::with_analysis(plat.clone(), shared.share());
+    let plain_sur = UncachedSurrogate { platform: plat.clone() };
+    let plain_hw = UncachedHardware { platform: plat.clone() };
+
+    for seed in [3u64, 11] {
+        let run =
+            |sur: &dyn CostModel, hw: &dyn CostModel| -> (SearchResult, SearchResult) {
+                let ctx = SearchContext::new(&base, sur, hw, &plat, 40, seed);
+                let mut policy = RandomPolicy::new(seed);
+                let mcts = MctsStrategy::new(MctsConfig::default(), &mut policy).search(&ctx);
+                let ctx = SearchContext::new(&base, sur, hw, &plat, 60, seed);
+                let es = EvolutionaryStrategy::new(EvoConfig::default()).search(&ctx);
+                (mcts, es)
+            };
+        let (mcts_cached, es_cached) = run(&cached_sur, &cached_hw);
+        let (mcts_plain, es_plain) = run(&plain_sur, &plain_hw);
+        assert_eq!(curve_key(&mcts_cached), curve_key(&mcts_plain), "mcts seed {seed}");
+        assert_eq!(mcts_cached.best_trace, mcts_plain.best_trace, "mcts seed {seed}");
+        assert_eq!(curve_key(&es_cached), curve_key(&es_plain), "es seed {seed}");
+        assert_eq!(es_cached.best_trace, es_plain.best_trace, "es seed {seed}");
+    }
+    assert!(!shared.is_empty(), "the cached run must actually have cached analyses");
+}

@@ -31,8 +31,8 @@ fn models(workload: WorkloadId) -> Models {
     let platform = Platform::core_i9();
     Models {
         base: workload.build(),
-        surrogate: SurrogateModel { platform: platform.clone() },
-        hardware: HardwareModel { platform: platform.clone() },
+        surrogate: SurrogateModel::new(platform.clone()),
+        hardware: HardwareModel::new(platform.clone()),
         platform,
     }
 }
@@ -155,7 +155,7 @@ fn concurrent_cache_hits_are_counted_correctly() {
     // schedule: every evaluation is a hit, no thread consumes budget, and
     // each evaluator's private counters add up exactly.
     let base = WorkloadId::Llama4Mlp.build_test();
-    let hw = HardwareModel { platform: Platform::core_i9() };
+    let hw = HardwareModel::new(Platform::core_i9());
     let sched = Schedule::new(base.clone())
         .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
         .unwrap();

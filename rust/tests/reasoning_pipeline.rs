@@ -151,10 +151,12 @@ fn prompt_embeds_everything_the_engine_uses() {
     let base = Schedule::new(WorkloadId::FluxConv.build());
     let child = {
         let mut rng = Pcg::new(4);
+        let analysis = reasoning_compiler::cost::AnalysisCache::new();
         let (seq, _) = reasoning_compiler::reasoning::engine::informed_proposals(
             &base,
             &plat,
             &Default::default(),
+            &analysis,
             &mut rng,
         );
         base.apply_all(&seq).0

@@ -31,7 +31,7 @@ fn random_schedules_preserve_structure_and_space() {
             &format!("structure+space[{}]", w.name()),
             0xA11CE ^ w.name().len() as u64,
             40,
-            |rng| random_schedule(w, 8, rng).trace,
+            |rng| random_schedule(w, 8, rng).trace.to_vec(),
             |trace| {
                 let base = Schedule::new(w.build_test());
                 let (sched, applied) = base.apply_all(trace);
@@ -82,7 +82,7 @@ fn trace_replay_is_deterministic() {
         60,
         |rng| {
             let w = *rng.choose(&WorkloadId::ALL);
-            (w, random_schedule(w, 8, rng).trace)
+            (w, random_schedule(w, 8, rng).trace.to_vec())
         },
         |(w, trace)| {
             let a = Schedule::new(w.build_test()).apply_all(trace).0;
@@ -110,7 +110,7 @@ fn fingerprints_distinguish_different_loop_structures() {
             .current
             .stages
             .iter()
-            .map(reasoning_compiler::tir::printer::loop_signature)
+            .map(|s| reasoning_compiler::tir::printer::loop_signature(s))
             .collect::<Vec<_>>()
             .join("|")
             + &format!(
@@ -161,14 +161,16 @@ fn deep_transform_chains_stay_legal() {
 fn informed_proposals_preserve_semantics_too() {
     // The reasoning engine's sequences are *planned*, not sampled — verify
     // they obey the same contract on the miniature workloads.
-    use reasoning_compiler::cost::Platform;
+    use reasoning_compiler::cost::{AnalysisCache, Platform};
     use reasoning_compiler::reasoning::engine::informed_proposals;
+    let analysis = AnalysisCache::new();
     for w in WorkloadId::ALL {
         for plat in Platform::all() {
             let base = Schedule::new(w.build_test());
             let reference = interp::run_seeded(&base.current, 99);
             let mut rng = Pcg::new(3);
-            let (seq, _) = informed_proposals(&base, &plat, &Default::default(), &mut rng);
+            let (seq, _) =
+                informed_proposals(&base, &plat, &Default::default(), &analysis, &mut rng);
             let (sched, _) = base.apply_all(&seq);
             let got = interp::run_seeded(&sched.current, 99);
             assert!(

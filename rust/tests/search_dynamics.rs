@@ -19,8 +19,8 @@ fn run_three(
     seed: u64,
 ) -> (SearchResult, SearchResult, SearchResult) {
     let base = workload.build();
-    let surrogate = SurrogateModel { platform: platform.clone() };
-    let hardware = HardwareModel { platform: platform.clone() };
+    let surrogate = SurrogateModel::new(platform.clone());
+    let hardware = HardwareModel::new(platform.clone());
     let cfg = MctsConfig::default();
 
     let es = evolutionary_search(

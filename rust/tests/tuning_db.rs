@@ -80,8 +80,8 @@ fn warm_run_reaches_cold_best_in_strictly_fewer_samples() {
 fn warm_evolutionary_search_reuses_recorded_measurements() {
     let base = WorkloadId::DeepSeekMoe.build();
     let plat = Platform::core_i9();
-    let surrogate = SurrogateModel { platform: plat.clone() };
-    let hardware = HardwareModel { platform: plat.clone() };
+    let surrogate = SurrogateModel::new(plat.clone());
+    let hardware = HardwareModel::new(plat.clone());
 
     // Record one known-good schedule by hand.
     let trace = vec![
@@ -141,8 +141,8 @@ fn warm_seeding_hits_at_sample_zero_and_cache_only_does_not() {
 
     let base = WorkloadId::DeepSeekMoe.build();
     let plat = Platform::core_i9();
-    let surrogate = SurrogateModel { platform: plat.clone() };
-    let hardware = HardwareModel { platform: plat.clone() };
+    let surrogate = SurrogateModel::new(plat.clone());
+    let hardware = HardwareModel::new(plat.clone());
     let trace = vec![
         Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
         Transform::TileSize { stage: 0, loop_idx: 3, factor: 128 },
