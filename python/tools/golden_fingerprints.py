@@ -1,0 +1,242 @@
+#!/usr/bin/env python3
+"""Cross-language mirror of the Rust structural fingerprints.
+
+Reimplements `rust/src/tir/hash.rs` (StructHasher: FNV-1a-style feeds with
+per-field tags and a splitmix64 avalanche tail) plus the exact feed
+sequences of `db::fingerprint::workload_fingerprint` and
+`db::fingerprint::shape_class`, over the five stock workloads of
+`tir::workload`. Running it regenerates
+`rust/tests/golden/fingerprints.json`, the golden file pinned by
+`rust/tests/golden_fingerprints.rs` so database and transfer records stay
+readable across refactors: if either implementation drifts, the Rust test
+fails and points here.
+
+Usage: python3 python/tools/golden_fingerprints.py [output.json]
+"""
+
+import json
+import os
+import sys
+
+MASK = (1 << 64) - 1
+
+# BufKind / ReduceOp discriminants (rust enum order).
+INPUT, OUTPUT, INTERMEDIATE = 0, 1, 2
+SUM = 0
+
+
+class StructHasher:
+    """Mirror of tir::hash::StructHasher."""
+
+    def __init__(self):
+        self.h = 0xCBF29CE484222325
+
+    def feed(self, x):
+        self.h ^= x & MASK
+        self.h = (self.h * 0x100000001B3) & MASK
+
+    def feed_i64(self, x):
+        self.feed(x & MASK)
+
+    def tag(self, t):
+        self.feed(0x9E3779B97F4A7C15 ^ t)
+
+    def finish(self):
+        z = self.h
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return z ^ (z >> 31)
+
+
+def axis(a):
+    """LinIdx::axis — one (axis, coeff=1) term, offset 0."""
+    return (0, [(a, 1)])
+
+
+def axis_sum(a, b):
+    """LinIdx::axis_sum — (a,1) + (b,1), offset 0."""
+    return (0, [(a, 1), (b, 1)])
+
+
+def feed_linidx(h, idx):
+    offset, terms = idx
+    h.tag(10)
+    h.feed_i64(offset)
+    for ax, coeff in terms:
+        h.feed(ax)
+        h.feed_i64(coeff)
+
+
+def feed_block_expr(h, e):
+    kind = e[0]
+    if kind == "load":
+        _, buf, idx = e
+        h.tag(20)
+        h.feed(buf)
+        for i in idx:
+            feed_linidx(h, i)
+    elif kind == "mul":
+        _, a, b = e
+        h.tag(24)
+        feed_block_expr(h, a)
+        feed_block_expr(h, b)
+    else:
+        raise ValueError(kind)
+
+
+def feed_buffers(h, buffers):
+    for kind, shape in buffers:
+        h.feed(kind + 1)
+        h.feed(len(shape))
+        for d in shape:
+            h.feed_i64(d)
+
+
+def feed_stage_structure(h, stage):
+    axes, out, out_idx, rhs, reduce = stage
+    h.tag(2)
+    for extent, is_reduction in axes:
+        h.feed_i64(extent)
+        h.feed((1 if is_reduction else 0) + 1)
+    h.tag(3)
+    h.feed(out)
+    for idx in out_idx:
+        feed_linidx(h, idx)
+    feed_block_expr(h, rhs)
+    h.feed(reduce + 1)
+
+
+def workload_fingerprint(buffers, stages):
+    h = StructHasher()
+    h.tag(1)
+    feed_buffers(h, buffers)
+    for s in stages:
+        feed_stage_structure(h, s)
+    return h.finish()
+
+
+def shape_class(buffers, stages):
+    h = StructHasher()
+    h.tag(7)
+    for kind, shape in buffers:
+        h.feed(kind + 1)
+        h.feed(len(shape))
+    for axes, out, out_idx, rhs, reduce in stages:
+        h.tag(8)
+        for _, is_reduction in axes:
+            h.feed((1 if is_reduction else 0) + 1)
+        h.tag(9)
+        h.feed(out)
+        for idx in out_idx:
+            feed_linidx(h, idx)
+        feed_block_expr(h, rhs)
+        h.feed(reduce + 1)
+    return h.finish()
+
+
+# ---- tir::workload builders (structure only; names are never hashed) ----
+
+def moe_matmul(tokens, out_dim, in_dim):
+    buffers = [
+        (INPUT, [tokens, in_dim]),
+        (INPUT, [in_dim, out_dim]),
+        (OUTPUT, [tokens, out_dim]),
+    ]
+    axes = [(tokens, False), (out_dim, False), (in_dim, True)]
+    rhs = ("mul", ("load", 0, [axis(0), axis(2)]), ("load", 1, [axis(2), axis(1)]))
+    stage = (axes, 2, [axis(0), axis(1)], rhs, SUM)
+    return buffers, [stage]
+
+
+def attention(heads, seq, dim):
+    buffers = [
+        (INPUT, [heads, seq, dim]),
+        (INPUT, [heads, seq, dim]),
+        (INPUT, [heads, seq, dim]),
+        (INTERMEDIATE, [heads, seq, seq]),
+        (OUTPUT, [heads, seq, dim]),
+    ]
+    axes1 = [(heads, False), (seq, False), (seq, False), (dim, True)]
+    rhs1 = (
+        "mul",
+        ("load", 0, [axis(0), axis(1), axis(3)]),
+        ("load", 1, [axis(0), axis(2), axis(3)]),
+    )
+    stage1 = (axes1, 3, [axis(0), axis(1), axis(2)], rhs1, SUM)
+    axes2 = [(heads, False), (seq, False), (dim, False), (seq, True)]
+    rhs2 = (
+        "mul",
+        ("load", 3, [axis(0), axis(1), axis(3)]),
+        ("load", 2, [axis(0), axis(3), axis(2)]),
+    )
+    stage2 = (axes2, 4, [axis(0), axis(1), axis(2)], rhs2, SUM)
+    return buffers, [stage1, stage2]
+
+
+def conv2d(c_out, c_in, height, width, ksize):
+    oh = height - ksize + 1
+    ow = width - ksize + 1
+    buffers = [
+        (INPUT, [c_in, height, width]),
+        (INPUT, [c_out, c_in, ksize, ksize]),
+        (OUTPUT, [c_out, oh, ow]),
+    ]
+    axes = [
+        (c_out, False),
+        (oh, False),
+        (ow, False),
+        (c_in, True),
+        (ksize, True),
+        (ksize, True),
+    ]
+    rhs = (
+        "mul",
+        ("load", 0, [axis(3), axis_sum(1, 4), axis_sum(2, 5)]),
+        ("load", 1, [axis(0), axis(3), axis(4), axis(5)]),
+    )
+    stage = (axes, 2, [axis(0), axis(1), axis(2)], rhs, SUM)
+    return buffers, [stage]
+
+
+WORKLOADS = {
+    # name -> (production build, test build)
+    "llama3_attention": (attention(32, 1024, 128), attention(2, 8, 4)),
+    "deepseek_moe": (moe_matmul(16, 2048, 7168), moe_matmul(4, 6, 8)),
+    "flux_attention": (attention(24, 1024, 128), attention(2, 6, 4)),
+    "flux_conv": (conv2d(128, 128, 64, 64, 3), conv2d(4, 4, 6, 6, 3)),
+    "llama4_mlp": (moe_matmul(16, 8192, 5120), moe_matmul(4, 8, 6)),
+}
+
+
+def main():
+    out_path = (
+        sys.argv[1]
+        if len(sys.argv) > 1
+        else os.path.join(
+            os.path.dirname(__file__), "..", "..", "rust", "tests", "golden",
+            "fingerprints.json",
+        )
+    )
+    entries = []
+    for name, ((buffers, stages), (tb, ts)) in sorted(WORKLOADS.items()):
+        entries.append(
+            {
+                "workload": name,
+                "workload_fp": f"{workload_fingerprint(buffers, stages):016x}",
+                "shape_class": f"{shape_class(buffers, stages):016x}",
+                "test_workload_fp": f"{workload_fingerprint(tb, ts):016x}",
+                "test_shape_class": f"{shape_class(tb, ts):016x}",
+            }
+        )
+    with open(out_path, "w") as f:
+        json.dump(entries, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.normpath(out_path)}")
+    for e in entries:
+        print(
+            f"{e['workload']:<18} fp {e['workload_fp']} class {e['shape_class']}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,7 @@ fn main() {
             ancestors: vec![&sched],
             scores: vec![0.9, 0.3],
             platform: &plat,
+            exemplars: &[],
         };
         reasoning_compiler::reasoning::prompt::render(&ctx)
     }));
@@ -123,6 +124,7 @@ fn main() {
                 ancestors: vec![&sched],
                 scores: vec![0.9, 0.3],
                 platform: &plat,
+                exemplars: &[],
             };
             engine.complete(&ctx)
         }));

@@ -1,0 +1,123 @@
+//! Transfer-tuning sample-efficiency benchmark (PR 4 acceptance).
+//!
+//! `cargo bench --bench transfer`
+//!
+//! Measures the paper's headline quantity — hardware samples to reach a
+//! target speedup — cold vs transfer-warm: tune workload A (the prior
+//! work), then search a structurally similar workload B twice, once cold
+//! and once with `transfer` rebasing A's records into warm starts. Writes
+//! `BENCH_transfer.json` (`name`, `samples_to_target`, `best_speedup`,
+//! plus a `sample_reduction` summary entry) for cross-PR tracking.
+//! `RCC_BENCH_QUICK=1` shrinks budgets for CI smoke;
+//! `RCC_BENCH_TRANSFER_JSON` overrides the output path.
+
+use reasoning_compiler::coordinator::{run_session_on, Strategy, TuneConfig};
+use reasoning_compiler::tir::workload;
+use reasoning_compiler::util::json::{arr, num, s, Json};
+
+fn main() {
+    let quick = std::env::var_os("RCC_BENCH_QUICK").is_some();
+    let (budget_a, budget_b) = if quick { (60, 50) } else { (150, 120) };
+
+    let db_path = std::env::temp_dir().join(format!(
+        "rcc_bench_transfer_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ));
+    let db_str = db_path.to_string_lossy().to_string();
+
+    let a = workload::moe_matmul("transfer_bench_src", 32, 512, 256);
+    let b = workload::moe_matmul("transfer_bench_dst", 16, 256, 128);
+
+    // ---- prior work: LLM-guided tuning of A into the database -----------
+    let cfg_a = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: budget_a,
+        repeats: 2,
+        seed: 42,
+        db_path: Some(db_str.clone()),
+        workers: 1,
+        ..Default::default()
+    };
+    let sess_a = run_session_on(&a, &cfg_a).expect("tune A");
+    println!(
+        "prior work: tuned {} to {:.2}x mean ({} samples)",
+        a.name,
+        sess_a.mean_speedup(),
+        sess_a.total_samples()
+    );
+
+    // ---- cold vs transfer-warm on B -------------------------------------
+    let cfg_cold = TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: budget_b,
+        repeats: 1,
+        seed: 7,
+        db_path: None,
+        workers: 1,
+        ..Default::default()
+    };
+    let cold = run_session_on(&b, &cfg_cold).expect("cold B");
+    let cold_run = &cold.runs[0];
+    let target = cold_run.best_speedup();
+    let cold_samples = cold_run.samples_to_reach(target).unwrap_or(cold_run.samples_used);
+
+    let cfg_warm = TuneConfig { db_path: Some(db_str), ..cfg_cold };
+    let warm = run_session_on(&b, &cfg_warm).expect("transfer-warm B");
+    let warm_run = &warm.runs[0];
+    let warm_samples = warm_run.samples_to_reach(target);
+
+    println!("\n== transfer sample efficiency (target {target:.2}x, cold best) ==");
+    println!(
+        "cold:          best {:.2}x, {} samples to target (budget {})",
+        cold_run.best_speedup(),
+        cold_samples,
+        budget_b
+    );
+    match warm_samples {
+        Some(n) => println!(
+            "transfer-warm: best {:.2}x, {} samples to target — {:.1}% of cold{}",
+            warm_run.best_speedup(),
+            n,
+            100.0 * n as f64 / cold_samples.max(1) as f64,
+            if n * 2 <= cold_samples { " (PASS <= 50%)" } else { " (BELOW TARGET)" }
+        ),
+        None => println!(
+            "transfer-warm: best {:.2}x — never reached the cold target (FAIL)",
+            warm_run.best_speedup()
+        ),
+    }
+
+    // ---- machine-readable output ----------------------------------------
+    let entry = |name: &str, samples: f64, best: f64| {
+        let mut o = Json::obj();
+        o.set("name", s(name))
+            .set("samples_to_target", num(samples))
+            .set("best_speedup", num(best));
+        o
+    };
+    let mut summary = Json::obj();
+    summary.set("name", s("sample_reduction_ratio")).set(
+        "value",
+        num(warm_samples.map_or(-1.0, |n| n as f64 / cold_samples.max(1) as f64)),
+    );
+    let doc = arr(vec![
+        entry("cold", cold_samples as f64, cold_run.best_speedup()),
+        entry(
+            "transfer_warm",
+            warm_samples.map_or(-1.0, |n| n as f64),
+            warm_run.best_speedup(),
+        ),
+        summary,
+    ]);
+    let out_path = std::env::var("RCC_BENCH_TRANSFER_JSON")
+        .unwrap_or_else(|_| "BENCH_transfer.json".to_string());
+    match std::fs::write(&out_path, doc.to_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {out_path}"),
+        Err(e) => eprintln!("\nfailed to write {out_path}: {e}"),
+    }
+    std::fs::remove_file(&db_path).ok();
+}

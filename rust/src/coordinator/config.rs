@@ -72,6 +72,21 @@ pub struct TuneConfig {
     pub warm_start: bool,
     /// How many top database records to warm-start from.
     pub warm_top_k: usize,
+    /// Cross-workload transfer tuning (ignored without a database): rebase
+    /// traces recorded for structurally similar workloads into extra
+    /// warm-start candidates and feed few-shot exemplars into LLM prompts.
+    /// `--no-transfer` disables; `--transfer` re-enables.
+    pub transfer: bool,
+    /// How many transfer matches to rebase into warm starts / exemplars.
+    pub transfer_top_k: usize,
+    /// Share one measurement cache across the session's repeats
+    /// (`--share-repeat-cache`): repeats answer each other's measurements,
+    /// saving samples at the cost of the 20-repeat independence contract
+    /// (a repeat may reuse another repeat's seeded measurement). The
+    /// session then runs its repeats serially in seed order — sharing is
+    /// order-dependent, so a parallel repeat pool would make results vary
+    /// with thread timing. Default off, preserving the paper's protocol.
+    pub share_repeat_cache: bool,
     /// Worker threads for parallel execution: sizes the session's repeat
     /// pool and each run's batched-evaluation fan-out. `0` = auto
     /// (`RCC_WORKERS` env var if set, else the machine's available
@@ -108,6 +123,9 @@ impl Default for TuneConfig {
             db_path: None,
             warm_start: true,
             warm_top_k: 8,
+            transfer: true,
+            transfer_top_k: 4,
+            share_repeat_cache: false,
             workers: 0,
             eval_batch: 1,
         }
@@ -169,6 +187,10 @@ impl TuneConfig {
             },
             warm_start: doc.get_bool("db.warm_start", d.warm_start),
             warm_top_k: doc.get_usize("db.warm_top_k", d.warm_top_k),
+            transfer: doc.get_bool("db.transfer", d.transfer),
+            transfer_top_k: doc.get_usize("db.transfer_top_k", d.transfer_top_k),
+            share_repeat_cache: doc
+                .get_bool("db.share_repeat_cache", d.share_repeat_cache),
             workers: doc.get_usize("search.workers", d.workers),
             eval_batch: doc.get_usize("search.eval_batch", d.eval_batch),
         }
@@ -204,6 +226,16 @@ impl TuneConfig {
             self.warm_start = false;
         }
         self.warm_top_k = args.opt_usize("warm-top-k", self.warm_top_k);
+        if args.has_flag("transfer") {
+            self.transfer = true;
+        }
+        if args.has_flag("no-transfer") {
+            self.transfer = false;
+        }
+        self.transfer_top_k = args.opt_usize("transfer-top-k", self.transfer_top_k);
+        if args.has_flag("share-repeat-cache") {
+            self.share_repeat_cache = true;
+        }
         self.workers = args.opt_usize("workers", self.workers);
         self.eval_batch = args.opt_usize("eval-batch", self.eval_batch);
     }
@@ -295,6 +327,38 @@ history_depth = 3
         let args = Args::parse("tune --no-db".split_whitespace().map(String::from));
         c.apply_cli(&args);
         assert_eq!(c.db_path, None);
+    }
+
+    #[test]
+    fn transfer_knobs_parse_and_override() {
+        let c = TuneConfig::default();
+        assert!(c.transfer, "transfer defaults on (no-op without similar records)");
+        assert_eq!(c.transfer_top_k, 4);
+        assert!(!c.share_repeat_cache, "repeat independence is the default");
+
+        let doc = Doc::parse(
+            "[db]\ntransfer = false\ntransfer_top_k = 2\nshare_repeat_cache = true\n",
+        )
+        .unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert!(!c.transfer);
+        assert_eq!(c.transfer_top_k, 2);
+        assert!(c.share_repeat_cache);
+
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --no-transfer --transfer-top-k 7 --share-repeat-cache"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args);
+        assert!(!c.transfer);
+        assert_eq!(c.transfer_top_k, 7);
+        assert!(c.share_repeat_cache);
+
+        let args = Args::parse("tune --transfer".split_whitespace().map(String::from));
+        c.apply_cli(&args);
+        assert!(c.transfer, "--transfer re-enables after --no-transfer");
     }
 
     #[test]

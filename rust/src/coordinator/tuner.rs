@@ -17,17 +17,24 @@ use crate::search::{
 };
 use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
+use crate::transfer::{self, Exemplar};
 use crate::util::stats;
 
 use super::config::{Strategy, TuneConfig};
 
 /// Database-derived hints shared by every repeat of a session: warm-start
 /// traces plus a measurement cache pre-populated with known costs. Each run
-/// clones the cache (runs are independent; counters are per-run).
+/// clones the cache (runs are independent; counters are per-run) unless the
+/// session opts into `share_repeat_cache`. With transfer tuning enabled the
+/// warm traces also include rebased cross-workload records, and
+/// `exemplars` feeds the LLM proposal policy's few-shot context.
 #[derive(Debug, Clone, Default)]
 pub struct SearchHints {
     pub warm: WarmStart,
     pub cache: MeasureCache,
+    /// Few-shot exemplars from structurally similar workloads (transfer
+    /// subsystem); only the LLM strategy consumes these.
+    pub exemplars: Vec<Exemplar>,
 }
 
 /// Outcome of a repeated tuning session on one (workload, platform).
@@ -140,6 +147,7 @@ fn run_once_with_accounting(
         SearchContext::new(program, &surrogate, &hardware, &platform, cfg.budget, seed);
     ctx.warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
     ctx.cache = hints.map(|h| &h.cache);
+    ctx.shared_cache = cfg.share_repeat_cache;
     ctx.workers = cfg.resolved_workers();
     ctx.eval_batch = cfg.resolved_eval_batch();
     let result = match cfg.strategy {
@@ -156,7 +164,8 @@ fn run_once_with_accounting(
             let model = ModelProfile::by_name(&cfg.model)
                 .ok_or_else(|| anyhow!("unknown model {:?} (see `rcc models`)", cfg.model))?;
             let engine = SimulatedLlm::new(model, seed).with_analysis(analysis.share());
-            let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed);
+            let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed)
+                .with_exemplars(hints.map(|h| h.exemplars.clone()).unwrap_or_default());
             let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
             let fb = policy.fallbacks.fallback_rate();
             let expansions = policy.fallbacks.fallbacks;
@@ -191,11 +200,36 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
     };
     let hints = db.as_ref().map(|db| {
         let (warm, cache) = db.hints(program, &cfg.platform, cfg.warm_top_k);
-        SearchHints {
+        let mut hints = SearchHints {
             warm: if cfg.warm_start { warm } else { WarmStart::default() },
             cache,
+            exemplars: Vec::new(),
+        };
+        // Cross-workload transfer: rebased traces from structurally similar
+        // workloads extend the warm frontier (appended after the exact
+        // records — those carry real measurements of *this* program), and
+        // exemplars flow to the LLM policy. Recorded latencies of other
+        // shapes are never planted in the measurement cache: a transferred
+        // candidate is measured like any other, it just exists earlier.
+        // Skip the whole derivation when nothing would consume it: warm
+        // entries are gated on `warm_start` and only the LLM strategy
+        // reads exemplars.
+        if cfg.transfer && (cfg.warm_start || cfg.strategy == Strategy::LlmMcts) {
+            let t = transfer::derive_hints(db, program, &cfg.platform, cfg.transfer_top_k);
+            if cfg.warm_start {
+                hints.warm.entries.extend(t.warm_entries);
+            }
+            hints.exemplars = t.exemplars;
         }
+        hints
     });
+    // `--share-repeat-cache` without a database still needs a session-lived
+    // cache for the repeats to share; hand them an empty one (no warm
+    // traces, no exemplars — just the pooled measurements).
+    let hints = match hints {
+        None if cfg.share_repeat_cache => Some(SearchHints::default()),
+        h => h,
+    };
 
     let seeds: Vec<u64> = (0..cfg.repeats as u64).map(|i| cfg.seed + i * 1009).collect();
     let mut outcomes: Vec<Option<Result<(SearchResult, CostTracker, f64, u64)>>> =
@@ -204,14 +238,26 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
     // Repeats run across a bounded worker pool (`cfg.workers`, 0 = auto).
     // Each repeat is an independent seeded run over a private clone of the
     // hints cache, so the pool size never affects results — `workers = 1`
-    // runs the repeats strictly serially. The session owns the worker
+    // runs the repeats strictly serially. (Exception: with
+    // `share_repeat_cache` the repeats deliberately share one cache handle,
+    // which is order-dependent — that mode forces `pool = 1` below and
+    // must keep doing so.) The session owns the worker
     // budget at one level: repeats split it, and each repeat's inner
     // batch-evaluation fan-out gets the remainder (at least 1) instead of
     // multiplying into `workers²` threads. `eval_batch` is resolved
     // against the *session* worker count first so the leaf-parallel
     // trajectory does not depend on how many repeats share the pool.
     let resolved = cfg.resolved_workers();
-    let pool = resolved.min(seeds.len()).max(1);
+    // A shared repeat cache makes repeats order-dependent (each may answer
+    // from whichever repeat measured a program first), so the repeats must
+    // run serially, in seed order, to stay deterministic run-to-run — the
+    // "workers never change results" contract then still holds: the inner
+    // batched-evaluation fan-out keeps the full worker budget.
+    let pool = if cfg.share_repeat_cache {
+        1
+    } else {
+        resolved.min(seeds.len()).max(1)
+    };
     let mut run_cfg = cfg.clone();
     run_cfg.eval_batch = cfg.resolved_eval_batch();
     run_cfg.workers = (resolved / pool).max(1);
@@ -241,9 +287,13 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
         fb_rates.push(o.2);
     }
 
-    // Persist each repeat's best discovery and flush.
+    // Persist each repeat's best discovery and flush. Records carry the
+    // transfer metadata (shape class + per-stage extents) that lets future
+    // sessions on structurally similar workloads find and rebase them.
     if let Some(db) = &mut db {
         let fp = workload_fingerprint(program);
+        let class = crate::db::shape_class(program);
+        let extents = transfer::workload_extents(program);
         let timestamp = std::time::SystemTime::now()
             .duration_since(std::time::UNIX_EPOCH)
             .map(|d| d.as_secs())
@@ -268,6 +318,8 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
                 baseline_latency: run.baseline_latency,
                 seed,
                 timestamp,
+                shape_class: class,
+                extents: extents.clone(),
             });
         }
         db.commit()
@@ -451,6 +503,50 @@ mod tests {
             a.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
             b.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn shared_repeat_cache_sessions_stay_deterministic() {
+        // Sharing the measurement cache across repeats forces the repeat
+        // pool serial (sharing is order-dependent); with that, two
+        // identical sessions — even with a wide worker budget for the
+        // inner evaluation fan-out — must produce identical results.
+        let mk_db = |tag: &str| {
+            std::env::temp_dir().join(format!(
+                "rcc_shared_cache_{tag}_{}_{}.jsonl",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ))
+        };
+        let run = |db: &std::path::PathBuf| {
+            let cfg = TuneConfig {
+                strategy: Strategy::Mcts,
+                budget: 25,
+                repeats: 2,
+                workers: 4,
+                share_repeat_cache: true,
+                db_path: Some(db.to_string_lossy().to_string()),
+                ..Default::default()
+            };
+            run_session(&cfg).unwrap()
+        };
+        // Fresh databases for both sessions so neither warm-starts.
+        let (da, db_) = (mk_db("a"), mk_db("b"));
+        let a = run(&da);
+        let b = run(&db_);
+        assert_eq!(
+            a.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
+            b.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            a.runs.iter().map(|r| r.samples_used).collect::<Vec<_>>(),
+            b.runs.iter().map(|r| r.samples_used).collect::<Vec<_>>()
+        );
+        std::fs::remove_file(&da).ok();
+        std::fs::remove_file(&db_).ok();
     }
 
     #[test]

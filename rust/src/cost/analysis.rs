@@ -26,8 +26,19 @@
 //! per-run *accounting* independent — `clone()` here shares storage:
 //! analyses are pure values, so sharing them across runs, threads or
 //! sessions cannot change any result.
+//!
+//! **Eviction is LRU, not clear-on-overflow** (PR-3 follow-up): each entry
+//! carries a last-use stamp from a shared monotone tick; when a shard is
+//! full, the coldest ~1/8 of its entries (by stamp, at least one) are
+//! evicted in one batch before the insert — amortized O(1)-ish per miss
+//! even at saturation, and recently-touched entries are never victims.
+//! A long-lived serve session therefore keeps its hot working set instead
+//! of periodically dropping everything it knows. Hit/miss accounting
+//! ([`AnalysisCache::hits`]/[`AnalysisCache::misses`]) is kept on the
+//! shared handle and — like the stored values — survives eviction.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::tir::hash::{feed_buffers, StructHasher};
@@ -38,24 +49,36 @@ use super::access::{self, StageAnalysis};
 /// Number of lock shards (mirrors `MeasureCache`).
 const SHARDS: usize = 8;
 
-/// Per-shard entry bound. Analyses are ~1 KiB each; clearing a shard on
-/// overflow bounds memory for long-lived serve sessions and is
-/// correctness-free (entries are recomputable pure values).
+/// Default per-shard entry bound. Analyses are ~1 KiB each, so the default
+/// caps the cache around 16 K entries per shard for long-lived serve
+/// sessions; eviction is correctness-free (entries are recomputable pure
+/// values).
 const MAX_SHARD_ENTRIES: usize = 1 << 14;
 
-type Shard = HashMap<u64, Arc<StageAnalysis>>;
+/// Entry value + last-use stamp (from the shared tick).
+type Shard = HashMap<u64, (Arc<StageAnalysis>, u64)>;
 
-/// Sharded (buffer-table hash, stage hash) → `Arc<StageAnalysis>` store.
+#[derive(Debug)]
+struct Inner {
+    shards: [Mutex<Shard>; SHARDS],
+    /// Monotone logical clock stamping every lookup (shared by all handles).
+    tick: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    /// Per-shard capacity; exceeding it evicts the LRU entry.
+    cap_per_shard: usize,
+}
+
+/// Sharded (buffer-table hash, stage hash) → `Arc<StageAnalysis>` store
+/// with per-shard LRU eviction.
 #[derive(Debug)]
 pub struct AnalysisCache {
-    shards: Arc<[Mutex<Shard>; SHARDS]>,
+    inner: Arc<Inner>,
 }
 
 impl Default for AnalysisCache {
     fn default() -> Self {
-        AnalysisCache {
-            shards: Arc::new(std::array::from_fn(|_| Mutex::new(Shard::new()))),
-        }
+        AnalysisCache::with_capacity(MAX_SHARD_ENTRIES)
     }
 }
 
@@ -72,18 +95,44 @@ impl AnalysisCache {
         AnalysisCache::default()
     }
 
-    /// A second handle over the same storage.
+    /// A cache bounded to `cap_per_shard` entries per shard (so
+    /// `cap_per_shard * 8` total). Exposed so tests — and memory-tight
+    /// embedders — can exercise eviction without 16 K inserts per shard.
+    pub fn with_capacity(cap_per_shard: usize) -> AnalysisCache {
+        AnalysisCache {
+            inner: Arc::new(Inner {
+                shards: std::array::from_fn(|_| Mutex::new(Shard::new())),
+                tick: AtomicU64::new(0),
+                hits: AtomicU64::new(0),
+                misses: AtomicU64::new(0),
+                cap_per_shard: cap_per_shard.max(1),
+            }),
+        }
+    }
+
+    /// A second handle over the same storage (and the same accounting).
     pub fn share(&self) -> AnalysisCache {
-        AnalysisCache { shards: Arc::clone(&self.shards) }
+        AnalysisCache { inner: Arc::clone(&self.inner) }
     }
 
     /// Cached entries across all shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.inner.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Lookups answered from the store since creation (survives eviction —
+    /// the counters live on the shared handle, not in the shards).
+    pub fn hits(&self) -> u64 {
+        self.inner.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that had to run `access::analyze`.
+    pub fn misses(&self) -> u64 {
+        self.inner.misses.load(Ordering::Relaxed)
     }
 
     /// The memoization key for one `(program, stage)` pair. The expensive
@@ -99,22 +148,38 @@ impl AnalysisCache {
 
     /// Analyze a stage through the cache: returns the memoized analysis
     /// when this stage structure (under these buffer shapes) has been seen,
-    /// computing and storing it otherwise. Bit-identical to calling
+    /// computing and storing it otherwise (batch-evicting the shard's
+    /// least-recently-used entries when full). Bit-identical to calling
     /// [`access::analyze`] directly.
     pub fn analyze(&self, program: &Program, stage: &Stage) -> Arc<StageAnalysis> {
         let key = Self::key(program, stage);
-        let shard = &self.shards[(key % SHARDS as u64) as usize];
-        if let Some(a) = shard.lock().unwrap().get(&key) {
-            return Arc::clone(a);
+        let shard = &self.inner.shards[(key % SHARDS as u64) as usize];
+        let stamp = self.inner.tick.fetch_add(1, Ordering::Relaxed);
+        if let Some(entry) = shard.lock().unwrap().get_mut(&key) {
+            entry.1 = stamp;
+            self.inner.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(&entry.0);
         }
+        self.inner.misses.fetch_add(1, Ordering::Relaxed);
         // Compute outside the lock; a racing thread may duplicate the work
         // once, but both arrive at the identical pure value.
         let a = Arc::new(access::analyze(program, stage));
         let mut guard = shard.lock().unwrap();
-        if guard.len() >= MAX_SHARD_ENTRIES {
-            guard.clear();
+        if guard.len() >= self.inner.cap_per_shard && !guard.contains_key(&key) {
+            // Evict the coldest ~1/8 of the shard in one pass (at least
+            // one entry). Batching keeps the scan off the per-miss hot
+            // path at saturation — one O(n log n) sort buys cap/8
+            // eviction-free inserts — while a constantly re-touched entry
+            // (max stamp) still never ranks among the oldest.
+            let mut by_age: Vec<(u64, u64)> =
+                guard.iter().map(|(k, v)| (v.1, *k)).collect();
+            by_age.sort_unstable();
+            let evict = (self.inner.cap_per_shard / 8).max(1);
+            for &(_, k) in by_age.iter().take(evict) {
+                guard.remove(&k);
+            }
         }
-        guard.insert(key, Arc::clone(&a));
+        guard.insert(key, (Arc::clone(&a), stamp));
         a
     }
 }
@@ -190,6 +255,66 @@ mod tests {
         // clone() is a share, not a deep copy.
         let cloned = cache.clone();
         assert_eq!(cloned.len(), 1);
+    }
+
+    #[test]
+    fn lru_eviction_bounds_size_and_keeps_hot_entries() {
+        // Capacity 4 per shard; 64 distinct structures overflow every shard
+        // several times over, but a constantly re-touched entry must never
+        // be the LRU victim.
+        let cache = AnalysisCache::with_capacity(4);
+        let hot = workload::moe_matmul("hot", 4, 6, 8);
+        let first = cache.analyze(&hot, &hot.stages[0]);
+        for i in 0..64i64 {
+            let p = workload::moe_matmul("cold", 4, 6, 16 + 2 * i);
+            cache.analyze(&p, &p.stages[0]);
+            // Touch the hot entry after every insert: its stamp stays the
+            // newest in its shard, so eviction always picks something else.
+            let again = cache.analyze(&hot, &hot.stages[0]);
+            assert!(
+                Arc::ptr_eq(&first, &again),
+                "recently-used entry evicted at insert {i}"
+            );
+        }
+        assert!(
+            cache.len() <= 4 * 8,
+            "LRU must bound the cache at capacity x shards, got {}",
+            cache.len()
+        );
+    }
+
+    #[test]
+    fn hit_accounting_survives_eviction() {
+        let cache = AnalysisCache::with_capacity(1);
+        let p = workload::moe_matmul("p", 4, 6, 8);
+        cache.analyze(&p, &p.stages[0]);
+        cache.analyze(&p, &p.stages[0]);
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        // Overflow every shard with distinct structures (capacity 1 per
+        // shard ⇒ each insert into an occupied shard evicts).
+        let mut calls = 2;
+        for i in 0..32i64 {
+            let q = workload::moe_matmul("q", 4, 6, 16 + 2 * i);
+            cache.analyze(&q, &q.stages[0]);
+            calls += 1;
+        }
+        assert!(cache.len() <= 8, "capacity 1 x 8 shards");
+        // The counters live on the handle, not in the evicted shards: every
+        // call so far is accounted for, and they keep counting afterwards.
+        assert_eq!(cache.hits() + cache.misses(), calls);
+        let shared = cache.share();
+        cache.analyze(&p, &p.stages[0]); // may hit or miss depending on eviction
+        calls += 1;
+        assert_eq!(
+            shared.hits() + shared.misses(),
+            calls,
+            "accounting is shared across handles and survives eviction"
+        );
+        // A recomputed-after-eviction analysis still equals a fresh one.
+        let a = cache.analyze(&p, &p.stages[0]);
+        let fresh = access::analyze(&p, &p.stages[0]);
+        assert_eq!(a.trips, fresh.trips);
+        assert_eq!(a.footprint_bytes, fresh.footprint_bytes);
     }
 
     #[test]

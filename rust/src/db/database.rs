@@ -552,6 +552,8 @@ mod tests {
             baseline_latency: 10.0,
             seed: 1,
             timestamp: 100,
+            shape_class: 0,
+            extents: Vec::new(),
         }
     }
 
@@ -636,6 +638,8 @@ mod tests {
             baseline_latency: 0.02,
             seed: 3,
             timestamp: 1,
+            shape_class: 0,
+            extents: Vec::new(),
         });
         // A record whose trace cannot replay (bad loop index): dropped.
         db.add(TuningRecord {
@@ -648,6 +652,8 @@ mod tests {
             baseline_latency: 0.02,
             seed: 4,
             timestamp: 2,
+            shape_class: 0,
+            extents: Vec::new(),
         });
         let (warm, cache) = db.hints(&base, "core_i9", 8);
         assert_eq!(warm.entries.len(), 1, "non-replayable record dropped");

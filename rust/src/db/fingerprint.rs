@@ -24,7 +24,7 @@
 //! structure. The hashing primitives live in [`crate::tir::hash`]; both are
 //! 64-bit FNV-1a-style hashes with per-field tags.
 
-use crate::tir::hash::{feed_buffers, feed_stage_structure};
+use crate::tir::hash::{feed_block_expr, feed_buffers, feed_linidx, feed_stage_structure};
 use crate::tir::program::Program;
 
 pub use crate::tir::hash::StructHasher;
@@ -39,6 +39,44 @@ pub fn workload_fingerprint(p: &Program) -> u64 {
     feed_buffers(&mut h, &p.buffers);
     for s in &p.stages {
         feed_stage_structure(&mut h, s);
+    }
+    h.finish()
+}
+
+/// Extent-abstracted structural fingerprint — the workload's *shape class*.
+///
+/// Hashes everything [`workload_fingerprint`] hashes **except concrete
+/// extents**: buffer kinds and ranks, per-stage axis counts and reduction
+/// flags, and the compute block (output indexing, load structure, reduction
+/// op). Two workloads share a shape class iff they are the same computation
+/// at different sizes — `matmul 512x512x512` and `matmul 1024x1024x1024`
+/// collide here while `matmul` and `conv2d` do not. This is the grouping
+/// key of the transfer-tuning subsystem (`crate::transfer`): records from a
+/// structurally similar workload are candidates for trace rebasing and
+/// few-shot exemplars even though their workload fingerprints differ.
+///
+/// Like the other fingerprints it is name-invariant and schedule-invariant
+/// (axes and blocks are fixed for the life of a stage). `0` is reserved as
+/// the "unknown" sentinel used by records predating this field.
+pub fn shape_class(p: &Program) -> u64 {
+    let mut h = StructHasher::new();
+    h.tag(7);
+    for b in p.buffers.iter() {
+        h.feed(b.kind as u64 + 1);
+        h.feed(b.shape.len() as u64);
+    }
+    for s in &p.stages {
+        h.tag(8);
+        for a in &s.axes {
+            h.feed(a.is_reduction as u64 + 1);
+        }
+        h.tag(9);
+        h.feed(s.block.out as u64);
+        for idx in &s.block.out_idx {
+            feed_linidx(&mut h, idx);
+        }
+        feed_block_expr(&mut h, &s.block.rhs);
+        h.feed(s.block.reduce as u64 + 1);
     }
     h.finish()
 }
@@ -140,6 +178,58 @@ mod tests {
         assert_ne!(fps[0], fps[1]);
         assert_ne!(fps[0], fps[2]);
         assert_ne!(fps[1], fps[2]);
+    }
+
+    #[test]
+    fn shape_class_abstracts_extents() {
+        // Same computation at different sizes: one class, different
+        // workload fingerprints.
+        let small = workload::moe_matmul("a", 16, 512, 512);
+        let large = workload::moe_matmul("b", 64, 2048, 1024);
+        assert_eq!(shape_class(&small), shape_class(&large));
+        assert_ne!(workload_fingerprint(&small), workload_fingerprint(&large));
+        // Production and test shapes of a stock workload share a class.
+        assert_eq!(
+            shape_class(&WorkloadId::DeepSeekMoe.build()),
+            shape_class(&WorkloadId::DeepSeekMoe.build_test())
+        );
+        assert_eq!(
+            shape_class(&WorkloadId::FluxConv.build()),
+            shape_class(&WorkloadId::FluxConv.build_test())
+        );
+    }
+
+    #[test]
+    fn shape_class_distinguishes_kernels() {
+        // Different computations never share a class: matmul vs conv vs
+        // attention differ in axis structure and block shape.
+        let moe = shape_class(&WorkloadId::DeepSeekMoe.build());
+        let conv = shape_class(&WorkloadId::FluxConv.build());
+        let attn = shape_class(&WorkloadId::Llama3Attention.build());
+        assert_ne!(moe, conv);
+        assert_ne!(moe, attn);
+        assert_ne!(conv, attn);
+        // The two attention variants differ only in extents: same class.
+        assert_eq!(
+            attn,
+            shape_class(&WorkloadId::FluxAttention.build()),
+            "llama3/flux attention are the same kernel at different sizes"
+        );
+        // The two MoE-style MLPs likewise.
+        assert_eq!(moe, shape_class(&WorkloadId::Llama4Mlp.build()));
+    }
+
+    #[test]
+    fn shape_class_invariant_under_scheduling_and_names() {
+        let base = Schedule::new(WorkloadId::Llama4Mlp.build());
+        let tiled = base
+            .apply(Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 })
+            .unwrap()
+            .apply(Transform::Parallel { stage: 0, loop_idx: 0 })
+            .unwrap();
+        assert_eq!(shape_class(&base.current), shape_class(&tiled.current));
+        let renamed = workload::moe_matmul("other_name", 16, 8192, 5120);
+        assert_eq!(shape_class(&base.current), shape_class(&renamed));
     }
 
     #[test]

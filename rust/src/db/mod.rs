@@ -31,5 +31,5 @@ pub mod record;
 
 pub use cache::MeasureCache;
 pub use database::{Database, DbStats, GcReport, WarmStart};
-pub use fingerprint::{program_fingerprint, workload_fingerprint};
+pub use fingerprint::{program_fingerprint, shape_class, workload_fingerprint};
 pub use record::TuningRecord;

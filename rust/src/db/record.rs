@@ -38,6 +38,16 @@ pub struct TuningRecord {
     pub seed: u64,
     /// Unix timestamp (seconds) when the record was created.
     pub timestamp: u64,
+    /// Extent-abstracted structural fingerprint of the source workload
+    /// (`db::fingerprint::shape_class`). Groups records of the same
+    /// computation at different sizes for cross-workload transfer. `0` =
+    /// unknown (records written before this field existed); such records
+    /// never participate in transfer but stay valid everywhere else.
+    pub shape_class: u64,
+    /// Per-stage original-axis extents of the source workload at record
+    /// time, in stage/axis order. The transfer subsystem's feature-distance
+    /// metric compares these against the target's extents; empty = unknown.
+    pub extents: Vec<Vec<i64>>,
 }
 
 impl TuningRecord {
@@ -61,7 +71,16 @@ impl TuningRecord {
             // are f64 and lose integers above 2^53, so encode as a decimal
             // string like workload_fp. Timestamps fit f64 comfortably.
             .set("seed", s(&self.seed.to_string()))
-            .set("timestamp", num(self.timestamp as f64));
+            .set("timestamp", num(self.timestamp as f64))
+            .set("shape_class", s(&format!("{:016x}", self.shape_class)))
+            .set(
+                "extents",
+                arr(self
+                    .extents
+                    .iter()
+                    .map(|stage| arr(stage.iter().map(|&e| num(e as f64)).collect()))
+                    .collect()),
+            );
         doc
     }
 
@@ -80,6 +99,32 @@ impl TuningRecord {
             .iter()
             .map(transform_from_json)
             .collect::<Option<Vec<_>>>()?;
+        // Transfer metadata is optional: records written by older versions
+        // decode with the "unknown" sentinels and simply never participate
+        // in cross-workload transfer.
+        let shape_class = get_s("shape_class")
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .unwrap_or(0);
+        let extents = doc
+            .get("extents")
+            .and_then(|v| v.as_arr())
+            .map(|stages| {
+                stages
+                    .iter()
+                    .map(|stage| {
+                        stage
+                            .as_arr()
+                            .map(|axes| {
+                                axes.iter()
+                                    .filter_map(|e| e.as_f64())
+                                    .map(|e| e as i64)
+                                    .collect()
+                            })
+                            .unwrap_or_default()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         Some(TuningRecord {
             workload_fp,
             workload: get_s("workload")?.to_string(),
@@ -90,6 +135,8 @@ impl TuningRecord {
             baseline_latency: get_n("baseline_latency")?,
             seed: get_s("seed")?.parse().ok()?,
             timestamp: get_n("timestamp")? as u64,
+            shape_class,
+            extents,
         })
     }
 
@@ -200,6 +247,8 @@ mod tests {
             baseline_latency: 7.5e-3,
             seed: 42,
             timestamp: 1_753_000_000,
+            shape_class: 0xA5A5_5A5A_DEAD_F00D,
+            extents: vec![vec![16, 2048, 7168]],
         };
         let line = rec.to_jsonl();
         assert!(!line.contains('\n'), "JSONL lines must be single-line");
@@ -222,10 +271,28 @@ mod tests {
             baseline_latency: 2.0,
             seed: u64::MAX,
             timestamp: 0,
+            shape_class: u64::MAX - 3,
+            extents: vec![],
         };
         let back = TuningRecord::from_jsonl(&rec.to_jsonl()).unwrap();
         assert_eq!(back.workload_fp, u64::MAX - 1);
         assert_eq!(back.seed, u64::MAX, "seed must survive beyond 2^53");
+        assert_eq!(
+            back.shape_class,
+            u64::MAX - 3,
+            "shape class is hex-encoded like the workload fingerprint"
+        );
+    }
+
+    #[test]
+    fn records_without_transfer_metadata_still_decode() {
+        // A pre-transfer record (no shape_class/extents fields) must decode
+        // with the unknown sentinels — version drift is never fatal.
+        let line = r#"{"workload_fp":"00000000000000ff","workload":"w","platform":"p","strategy":"s","trace":[],"latency":1.0,"baseline_latency":2.0,"seed":"7","timestamp":9}"#;
+        let rec = TuningRecord::from_jsonl(line).expect("old-format line decodes");
+        assert_eq!(rec.workload_fp, 0xff);
+        assert_eq!(rec.shape_class, 0, "missing shape class = unknown sentinel");
+        assert!(rec.extents.is_empty(), "missing extents = unknown");
     }
 
     #[test]

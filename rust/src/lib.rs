@@ -27,6 +27,10 @@
 //! - [`db`] — the persistent tuning-record database: structural workload/
 //!   program fingerprints, JSONL tuning records with provenance, the
 //!   measurement cache, and warm-start hints derived from past runs.
+//! - [`transfer`] — cross-workload transfer tuning: a shape-class
+//!   similarity index over the database, a trace rebaser that replays
+//!   recorded traces onto differently-sized workloads, and the few-shot
+//!   exemplar engine feeding accumulated feedback into LLM prompts.
 //! - [`coordinator`] — tuning sessions, config system, serving loop.
 //! - [`runtime`] — PJRT execution of the AOT artifacts produced by the
 //!   Python build path (`python/compile/aot.py`).
@@ -39,6 +43,7 @@ pub mod cost;
 pub mod search;
 pub mod reasoning;
 pub mod db;
+pub mod transfer;
 pub mod coordinator;
 pub mod runtime;
 pub mod report;

@@ -33,6 +33,13 @@ Tuning
               --budget N --repeats N --seed N --model NAME
               --history-depth N --branching N [--config FILE]
               --db FILE | --no-db  --no-warm-start --warm-top-k N
+              --transfer | --no-transfer  cross-workload transfer tuning
+                             (rebased warm starts + LLM exemplars from
+                             structurally similar recorded workloads)
+              --transfer-top-k N  similar records to rebase (default 4)
+              --share-repeat-cache  pool measurements across a session's
+                             repeats (saves samples; waives the repeats'
+                             independence contract — default off)
               --workers N    worker threads: repeat pool + batched
                              evaluation (0 = auto: RCC_WORKERS env or all
                              cores; 1 = fully serial; results identical
@@ -49,6 +56,15 @@ Tuning database
               --workload NAME --platform NAME [--k N] [--db FILE]
   db gc       Compact the database: keep the top-k records per
               (workload, platform), drop the rest. [--k N] [--db FILE]
+
+Transfer tuning (cross-workload reuse of the database)
+  transfer match      Records from structurally similar workloads (same
+                      shape class, ranked by feature distance).
+                      --workload NAME --platform NAME [--k N] [--db FILE]
+  transfer rebase     Rebase the best similar record's trace onto a
+                      workload and verify it replays. Same options.
+  transfer exemplars  Print the few-shot exemplar block the LLM prompts
+                      embed for a workload. Same options.
 
 Paper experiments (each accepts --scale smoke|default|full, --seed, --out DIR)
   figure3     Fig. 3 / Table 3 convergence curves
@@ -98,6 +114,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "tune" => cmd_tune(args),
         "db" => cmd_db(args),
+        "transfer" => cmd_transfer(args),
         "history" => cmd_history(),
         "best" => cmd_best(args),
         "compare" => cmd_compare(args),
@@ -462,6 +479,110 @@ fn cmd_db(args: &Args) -> Result<()> {
     }
 }
 
+fn cmd_transfer(args: &Args) -> Result<()> {
+    use reasoning_compiler::transfer;
+
+    let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
+    let action = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("match");
+    let workload = args.opt_or("workload", "deepseek_moe");
+    let platform = args.opt_or("platform", "core_i9");
+    let k = args.opt_usize("k", 8);
+    let w = WorkloadId::from_name(workload)
+        .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
+    let base = w.build();
+    let db = Database::open(&db_path)?;
+
+    match action {
+        "match" => {
+            let matches = transfer::find_matches(&db, &base, platform, k);
+            if matches.is_empty() {
+                println!(
+                    "no structurally similar records for {workload}/{platform} in {} \
+                     (tune a same-shape-class workload first)",
+                    db_path.display()
+                );
+                return Ok(());
+            }
+            println!(
+                "{} similar records for {workload}/{platform} (shape class {:016x}):",
+                matches.len(),
+                reasoning_compiler::db::shape_class(&base)
+            );
+            println!(
+                "{:<18} {:>9} {:>9} {:>7} {:<10} rebase",
+                "source workload", "distance", "speedup", "trace", "strategy"
+            );
+            for m in &matches {
+                let rb = transfer::rebase_trace(&base, &m.record.trace);
+                println!(
+                    "{:<18} {:>9.3} {:>8.2}x {:>7} {:<10} {} kept, {} adjusted, {} dropped",
+                    m.record.workload,
+                    m.distance,
+                    m.record.speedup(),
+                    m.record.trace.len(),
+                    m.record.strategy,
+                    rb.trace.len(),
+                    rb.adjusted,
+                    rb.dropped
+                );
+            }
+            Ok(())
+        }
+        "rebase" => {
+            let matches = transfer::find_matches(&db, &base, platform, k);
+            let Some(best) = matches.first() else {
+                println!(
+                    "no structurally similar records for {workload}/{platform} in {}",
+                    db_path.display()
+                );
+                return Ok(());
+            };
+            let rb = transfer::rebase_trace(&base, &best.record.trace);
+            println!(
+                "rebasing best match ({}, {:.2}x recorded, distance {:.3}) onto {workload}:",
+                best.record.workload,
+                best.record.speedup(),
+                best.distance
+            );
+            println!(
+                "{} of {} steps kept ({} factors rescaled, {} steps dropped)",
+                rb.trace.len(),
+                best.record.trace.len(),
+                rb.adjusted,
+                rb.dropped
+            );
+            let sched = Schedule::new(base);
+            let (replayed, applied) = sched.apply_all(&rb.trace);
+            anyhow::ensure!(
+                applied == rb.trace.len(),
+                "rebased trace failed to replay — legality contract violated"
+            );
+            println!("\nrebased trace (verified legal):\n{}", replayed.render_trace());
+            Ok(())
+        }
+        "exemplars" => {
+            let exemplars = transfer::select_exemplars(&db, &base, platform, k);
+            if exemplars.is_empty() {
+                println!(
+                    "no exemplars for {workload}/{platform} in {}",
+                    db_path.display()
+                );
+                return Ok(());
+            }
+            print!("{}", transfer::render_exemplar_block(&exemplars));
+            Ok(())
+        }
+        other => Err(anyhow!(
+            "unknown transfer action {other:?}; use `transfer match`, `transfer rebase` \
+             or `transfer exemplars`"
+        )),
+    }
+}
+
 fn cmd_artifacts() -> Result<()> {
     let manifest = Manifest::discover()?;
     let mut rt = reasoning_compiler::runtime::Runtime::cpu()?;
@@ -515,11 +636,23 @@ fn cmd_prompt(args: &Args) -> Result<()> {
         );
         base.apply_all(&seq).0
     };
+    // With a tuning database present, similar-workload exemplars appear in
+    // the prompt exactly as a transfer-enabled tuning session would see.
+    let exemplars = {
+        let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
+        if db_path.exists() {
+            let db = Database::open(&db_path)?;
+            reasoning_compiler::transfer::select_exemplars(&db, &base.current, plat.name, 4)
+        } else {
+            Vec::new()
+        }
+    };
     let ctx = PromptContext {
         node: &child,
         ancestors: vec![&base],
         scores: vec![0.773, 0.313],
         platform: &plat,
+        exemplars: &exemplars,
     };
     println!("=== PROMPT ===\n{}", reasoning::prompt::render(&ctx));
     let model = ModelProfile::by_name(args.opt_or("model", "gpt4o_mini"))

@@ -84,7 +84,20 @@ impl LlmEngine for SimulatedLlm {
             HashSet::new()
         };
 
-        let (transforms, rationale) = if informed {
+        // Few-shot exemplars (transfer subsystem): an informed round that
+        // also exploits context replays a proven transformation pattern
+        // from a structurally similar workload instead of re-deriving one.
+        // Gated on exemplars being present so prompt contexts without
+        // transfer draw the exact rng sequence they always did.
+        let exemplar_try = informed
+            && !ctx.exemplars.is_empty()
+            && self.rng.gen_bool(self.model.context_use);
+        let (transforms, rationale) = if let Some(grounded) = exemplar_try
+            .then(|| exemplar_proposals(ctx.node, ctx.exemplars, &mut self.rng))
+            .flatten()
+        {
+            grounded
+        } else if informed {
             informed_proposals(ctx.node, ctx.platform, &avoid, &self.analysis, &mut self.rng)
         } else {
             shallow_proposals(&ctx.node.current, &mut self.rng)
@@ -161,6 +174,34 @@ fn corrupt_proposal(rng: &mut Pcg) -> String {
         "Reorder(perm=[banana])",
     ];
     BAD[rng.gen_range(BAD.len())].to_string()
+}
+
+/// Ground a proposal directly in a few-shot exemplar: pick one of the top
+/// exemplars and replay the prefix of its (already target-rebased) trace
+/// that is still legal at this node — at the root that is typically the
+/// whole proven sequence, which is what makes transfer-warm LLM searches
+/// sample-efficient. Returns `None` when nothing applies here (deep nodes
+/// whose schedule state conflicts), letting the caller fall back to the
+/// analytical path.
+fn exemplar_proposals(
+    node: &Schedule,
+    exemplars: &[crate::transfer::Exemplar],
+    rng: &mut Pcg,
+) -> Option<(Vec<Transform>, String)> {
+    let pick = rng.gen_range(exemplars.len().min(3));
+    let ex = &exemplars[pick];
+    let (_, applied) = node.apply_all(&ex.trace);
+    if applied == 0 {
+        return None;
+    }
+    Some((
+        ex.trace[..applied].to_vec(),
+        format!(
+            "a structurally similar workload ({}) reached {:.2}x with this transformation \
+             pattern; I replay its applicable prefix here",
+            ex.workload, ex.speedup
+        ),
+    ))
 }
 
 /// Extract an avoid-set from the ancestor score trajectory: op kinds whose
@@ -713,6 +754,7 @@ mod tests {
             ancestors: vec![],
             scores: vec![1.0],
             platform: &plat,
+            exemplars: &[],
         };
         let r = engine.complete(&ctx);
         assert!(r.text.starts_with("Reasoning: "), "{}", r.text);
@@ -731,6 +773,7 @@ mod tests {
                 ancestors: vec![],
                 scores: vec![1.0],
                 platform: &plat,
+                exemplars: &[],
             };
             let r = engine.complete(&ctx);
             if r.text.contains("TileFusion")
@@ -756,11 +799,70 @@ mod tests {
                 ancestors: vec![],
                 scores: vec![1.0],
                 platform: &plat,
+                exemplars: &[],
             };
             let r = engine.complete(&ctx);
             assert!(!r.text.contains("TileFusion"));
             assert!(!r.text.contains("banana"));
         }
+    }
+
+    #[test]
+    fn exemplars_ground_proposals_in_proven_traces() {
+        use crate::transfer::Exemplar;
+        let node = Schedule::new(WorkloadId::DeepSeekMoe.build());
+        let exemplars = vec![Exemplar {
+            workload: "llama4_mlp".to_string(),
+            speedup: 4.0,
+            distance: 0.8,
+            trace: vec![
+                Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
+                Transform::Parallel { stage: 0, loop_idx: 0 },
+            ],
+            rendered: "  1. TileSize(...)\n  2. Parallel(...)".to_string(),
+        }];
+        // The grounding helper replays the full trace at the root.
+        let mut rng = Pcg::new(3);
+        let (seq, why) = exemplar_proposals(&node, &exemplars, &mut rng).unwrap();
+        assert_eq!(seq, exemplars[0].trace);
+        assert!(why.contains("llama4_mlp"));
+        // When no prefix of the exemplar trace applies, the helper declines
+        // and the engine falls back to its analytical path.
+        let bad = vec![Exemplar {
+            workload: "x".to_string(),
+            speedup: 2.0,
+            distance: 0.1,
+            trace: vec![Transform::CacheWrite { stage: 9 }],
+            rendered: String::new(),
+        }];
+        let mut rng2 = Pcg::new(3);
+        assert!(exemplar_proposals(&node, &bad, &mut rng2).is_none());
+
+        // End to end: a strong model with exemplars eventually emits the
+        // exemplar's parameterized steps in its response text.
+        let plat = Platform::core_i9();
+        let mut engine = SimulatedLlm::new(ModelProfile::gpt4o_mini(), 11);
+        let mut saw_exemplar_reasoning = false;
+        for _ in 0..40 {
+            let ctx = PromptContext {
+                node: &node,
+                ancestors: vec![],
+                scores: vec![1.0],
+                platform: &plat,
+                exemplars: &exemplars,
+            };
+            let r = engine.complete(&ctx);
+            assert!(r.text.contains("Transformations to apply:"));
+            if r.text.contains("structurally similar workload") {
+                saw_exemplar_reasoning = true;
+                assert!(r.text.contains("TileSize(stage=0, loop=1, factor=64)"));
+                break;
+            }
+        }
+        assert!(
+            saw_exemplar_reasoning,
+            "gpt4o-mini (quality 0.9+, context_use high) must use exemplars within 40 rounds"
+        );
     }
 
     #[test]
@@ -776,6 +878,7 @@ mod tests {
             ancestors: vec![&base],
             scores: vec![0.5, 1.0],
             platform: &plat,
+            exemplars: &[],
         };
         let avoid = history_avoid_set(&ctx);
         assert!(avoid.contains("Unroll"));
@@ -785,6 +888,7 @@ mod tests {
             ancestors: vec![&base],
             scores: vec![1.5, 1.0],
             platform: &plat,
+            exemplars: &[],
         };
         assert!(history_avoid_set(&ctx2).is_empty());
     }

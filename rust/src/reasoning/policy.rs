@@ -4,6 +4,7 @@
 
 use crate::schedule::Transform;
 use crate::search::common::{ProposalContext, ProposalPolicy};
+use crate::transfer::Exemplar;
 use crate::util::rng::Pcg;
 
 use super::cost_tracker::CostTracker;
@@ -19,6 +20,9 @@ pub struct LlmPolicy<E: LlmEngine> {
     /// Maximum ancestors included in the prompt (2 = parent+grandparent;
     /// 3 adds the great-grandparent — the Fig. 4b ablation).
     pub history_depth: usize,
+    /// Few-shot exemplars from the transfer subsystem, embedded in every
+    /// prompt of this policy's session (empty = no transfer context).
+    pub exemplars: Vec<Exemplar>,
     rng: Pcg,
     /// Most recent raw responses, for logging/inspection (bounded).
     pub transcript: Vec<String>,
@@ -32,10 +36,17 @@ impl<E: LlmEngine> LlmPolicy<E> {
             costs: CostTracker::default(),
             fallbacks: FallbackStats::default(),
             history_depth,
+            exemplars: Vec::new(),
             rng: Pcg::new(seed ^ 0x9D_0F_FE),
             transcript: Vec::new(),
             log_transcript: false,
         }
+    }
+
+    /// Attach transfer-tuning exemplars (builder style).
+    pub fn with_exemplars(mut self, exemplars: Vec<Exemplar>) -> Self {
+        self.exemplars = exemplars;
+        self
     }
 }
 
@@ -56,6 +67,7 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
                 .take(self.history_depth + 1)
                 .collect(),
             platform: ctx.platform,
+            exemplars: &self.exemplars,
         };
         let response = self.engine.complete(&prompt_ctx);
         self.costs

@@ -11,6 +11,7 @@
 use crate::cost::{features, AnalysisCache, Platform};
 use crate::schedule::{Schedule, Transform};
 use crate::tir::printer;
+use crate::transfer::{render_exemplar_block, Exemplar};
 
 /// Structured prompt contents for one expansion step.
 pub struct PromptContext<'a> {
@@ -20,6 +21,10 @@ pub struct PromptContext<'a> {
     /// Predicted scores aligned with [node, ancestors...] (higher better).
     pub scores: Vec<f64>,
     pub platform: &'a Platform,
+    /// Few-shot exemplars from structurally similar workloads (the
+    /// transfer subsystem's accumulated performance feedback); empty when
+    /// transfer is disabled or the database has no similar records.
+    pub exemplars: &'a [Exemplar],
 }
 
 impl<'a> PromptContext<'a> {
@@ -116,6 +121,11 @@ pub fn render_with(ctx: &PromptContext, analysis: Option<&AnalysisCache>) -> Str
         ));
     }
 
+    if !ctx.exemplars.is_empty() {
+        out.push('\n');
+        out.push_str(&render_exemplar_block(ctx.exemplars));
+    }
+
     out.push_str(&format!(
         "\nAvailable transformations:\n{}\n",
         Transform::OP_NAMES.join(", ")
@@ -160,6 +170,7 @@ mod tests {
             ancestors: vec![&base],
             scores: vec![0.773, 0.313],
             platform: &plat,
+            exemplars: &[],
         };
         let text = render(&ctx);
         assert!(text.contains("Monte Carlo Tree Search"));
@@ -184,11 +195,50 @@ mod tests {
             ancestors: vec![&child, &base],
             scores: vec![0.9, 0.773, 0.313],
             platform: &plat,
+            exemplars: &[],
         };
         let text = render(&ctx);
         assert!(text.contains("differences against the parent"));
         assert!(text.contains("differences against the grandparent"));
         assert!(text.contains("Grandparent: 0.313"));
+    }
+
+    #[test]
+    fn exemplar_block_rendered_when_present() {
+        use crate::transfer::Exemplar;
+        let (child, base, plat) = ctx_fixture();
+        let exemplars = vec![Exemplar {
+            workload: "llama4_mlp".to_string(),
+            speedup: 3.5,
+            distance: 1.0,
+            trace: vec![Transform::Parallel { stage: 0, loop_idx: 0 }],
+            rendered: "  1. Parallel(stage=moe, loop=t)".to_string(),
+        }];
+        let ctx = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![0.773, 0.313],
+            platform: &plat,
+            exemplars: &exemplars,
+        };
+        let text = render(&ctx);
+        assert!(text.contains("few-shot exemplars"));
+        assert!(text.contains("Exemplar 1: workload llama4_mlp reached 3.50x"));
+        assert!(text.contains("Parallel(stage=moe, loop=t)"));
+        // The exemplar block sits before the transformation list so the
+        // model reads feedback before choosing actions.
+        let ex_pos = text.find("few-shot exemplars").unwrap();
+        let avail_pos = text.find("Available transformations").unwrap();
+        assert!(ex_pos < avail_pos);
+        // Without exemplars the section is absent.
+        let bare = PromptContext {
+            node: &child,
+            ancestors: vec![&base],
+            scores: vec![0.773, 0.313],
+            platform: &plat,
+            exemplars: &[],
+        };
+        assert!(!render(&bare).contains("few-shot exemplars"));
     }
 
     #[test]
@@ -201,6 +251,7 @@ mod tests {
             ancestors: vec![&base],
             scores: vec![1.0, 0.9],
             platform: &plat,
+            exemplars: &[],
         };
         assert!(token_estimate(&render(&ctx)) > 300);
     }

@@ -45,6 +45,14 @@ pub struct SearchContext<'a> {
     /// evaluates through a private deep copy (see `MeasureCache::clone`)
     /// so concurrent runs stay independently deterministic.
     pub cache: Option<&'a MeasureCache>,
+    /// Evaluate through a *shared* handle on `cache` instead of a private
+    /// deep copy, so this run's measurements are visible to every other
+    /// run sharing the same cache (and vice versa). Opt-in
+    /// (`--share-repeat-cache`): pooling measurements across a session's
+    /// repeats saves samples but deliberately breaks the repeats'
+    /// independence contract — a repeat may answer from another repeat's
+    /// measurement instead of its own seeded one.
+    pub shared_cache: bool,
     /// Worker threads for batched hardware evaluation (1 = serial).
     pub workers: usize,
     /// Candidates expanded and measured per MCTS iteration (leaf-parallel
@@ -72,13 +80,15 @@ impl<'a> SearchContext<'a> {
             seed,
             warm: None,
             cache: None,
+            shared_cache: false,
             workers: 1,
             eval_batch: 1,
         }
     }
 
     /// A budget evaluator for this run (with the cache attached when the
-    /// context has one).
+    /// context has one): a private deep copy by default, a shared handle
+    /// when [`SearchContext::shared_cache`] opts in.
     pub fn evaluator(&self) -> Evaluator<'a> {
         match self.cache {
             Some(c) => Evaluator::with_cache(
@@ -86,7 +96,7 @@ impl<'a> SearchContext<'a> {
                 self.base,
                 self.budget,
                 self.seed,
-                c.clone(),
+                if self.shared_cache { c.share() } else { c.clone() },
                 self.platform.name,
             ),
             None => Evaluator::new(self.hardware, self.base, self.budget, self.seed),
@@ -623,6 +633,49 @@ mod tests {
         assert_eq!(ev.used, 0, "warm hit costs nothing");
         assert_eq!(ev.curve.len(), 1);
         assert_eq!(ev.curve[0].sample, 0);
+    }
+
+    #[test]
+    fn shared_cache_pools_measurements_across_evaluators() {
+        let hw = HardwareModel::new(Platform::core_i9());
+        let base = WorkloadId::DeepSeekMoe.build_test();
+        let plat = Platform::core_i9();
+        let pool = MeasureCache::new();
+        let sched = Schedule::new(base.clone())
+            .apply(crate::schedule::Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 })
+            .unwrap();
+
+        // Default (private clone): the second evaluator re-measures.
+        let mut ctx = SearchContext::new(&base, &hw, &hw, &plat, 5, 7);
+        ctx.cache = Some(&pool);
+        let mut ev1 = ctx.evaluator();
+        ev1.measure(&sched).unwrap();
+        assert_eq!(ev1.cache_counts(), (0, 1));
+        let mut ev2 = ctx.evaluator();
+        ev2.measure(&sched).unwrap();
+        assert_eq!(
+            ev2.cache_counts(),
+            (0, 1),
+            "private clones must not leak measurements between runs"
+        );
+        assert!(pool.is_empty(), "clones never write back to the session pool");
+
+        // Opt-in sharing: the second evaluator answers from the first's
+        // measurement without spending a sample.
+        ctx.shared_cache = true;
+        let mut ev3 = ctx.evaluator();
+        let first = ev3.measure(&sched).unwrap();
+        assert_eq!(ev3.cache_counts(), (0, 1));
+        assert_eq!(pool.len(), 1, "shared handle writes into the pool");
+        let mut ev4 = ctx.evaluator();
+        let second = ev4.measure(&sched).unwrap();
+        assert_eq!(second, first);
+        assert_eq!(
+            ev4.cache_counts(),
+            (1, 0),
+            "a pooled measurement must answer the repeat for free"
+        );
+        assert_eq!(ev4.used, 0);
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Few-shot exemplar engine for the LLM proposal policy.
+//!
+//! The paper's sample-efficiency argument rests on the proposal mechanism
+//! conditioning on accumulated performance feedback. This module turns the
+//! tuning database into that feedback: for the target workload's shape
+//! class it selects the top-k *diverse* (workload, trace, speedup) triples,
+//! rebases each trace onto the target program (so every exemplar the model
+//! sees is legal where it stands), and renders them as the prompt block
+//! `reasoning::prompt::render_with` embeds. The simulated engine
+//! additionally grounds proposals directly in exemplar traces
+//! (`reasoning::engine`), closing the loop the paper prescribes.
+//!
+//! **Selection policy** (deterministic): candidates come from
+//! [`super::similarity::find_matches`] ordered by feature distance then
+//! recorded speedup; one exemplar per source workload fingerprint is taken
+//! first (diversity across workloads), then remaining slots fill with
+//! distinct rebased traces from already-used workloads. Exemplars whose
+//! trace rebases to nothing are skipped.
+
+use crate::db::Database;
+use crate::schedule::{Schedule, Transform};
+use crate::tir::Program;
+
+use super::rebase::rebase_trace;
+use super::similarity::find_matches;
+
+/// One few-shot exemplar: a proven optimization from a structurally
+/// similar workload, rebased onto the target program.
+#[derive(Debug, Clone)]
+pub struct Exemplar {
+    /// Source workload name (display only; selection keys on fingerprints).
+    pub workload: String,
+    /// Speedup the source run measured for the original trace.
+    pub speedup: f64,
+    /// Feature distance between source and target workloads.
+    pub distance: f64,
+    /// The trace rebased onto the target program — applies fully there.
+    pub trace: Vec<Transform>,
+    /// Human-readable numbered rendering of `trace` against the target.
+    pub rendered: String,
+}
+
+/// Select up to `k` diverse exemplars for `target` on `platform`.
+pub fn select_exemplars(
+    db: &Database,
+    target: &Program,
+    platform: &str,
+    k: usize,
+) -> Vec<Exemplar> {
+    // Over-fetch so dropped/duplicate rebases don't starve the selection.
+    let matches = find_matches(db, target, platform, k.saturating_mul(4).max(8));
+    exemplars_from_matches(&matches, target, k)
+}
+
+/// [`select_exemplars`] over an already-computed match set — callers that
+/// also derive warm starts (`super::derive_hints`) scan and rank the
+/// database once and reuse the matches here.
+pub fn exemplars_from_matches(
+    matches: &[super::similarity::TransferMatch],
+    target: &Program,
+    k: usize,
+) -> Vec<Exemplar> {
+    let base = Schedule::new(target.clone());
+    let mut out: Vec<Exemplar> = Vec::new();
+    let mut used_workloads: Vec<u64> = Vec::new();
+    let mut used_traces: Vec<Vec<Transform>> = Vec::new();
+    // Pass 1: one exemplar per source workload; pass 2: fill remaining
+    // slots with distinct traces regardless of source.
+    for workload_diverse in [true, false] {
+        for m in matches {
+            if out.len() >= k {
+                break;
+            }
+            if workload_diverse && used_workloads.contains(&m.record.workload_fp) {
+                continue;
+            }
+            let rebased = rebase_trace(target, &m.record.trace);
+            if rebased.trace.is_empty() || used_traces.contains(&rebased.trace) {
+                continue;
+            }
+            let (replayed, applied) = base.apply_all(&rebased.trace);
+            debug_assert_eq!(applied, rebased.trace.len(), "rebase legality contract");
+            used_workloads.push(m.record.workload_fp);
+            used_traces.push(rebased.trace.clone());
+            out.push(Exemplar {
+                workload: m.record.workload.clone(),
+                speedup: m.record.speedup(),
+                distance: m.distance,
+                rendered: replayed.render_trace(),
+                trace: rebased.trace,
+            });
+        }
+    }
+    out
+}
+
+/// Render exemplars as the prompt block embedded by
+/// `reasoning::prompt::render_with` and printed by `rcc transfer
+/// exemplars`. Empty input renders to an empty string.
+pub fn render_exemplar_block(exemplars: &[Exemplar]) -> String {
+    if exemplars.is_empty() {
+        return String::new();
+    }
+    let mut out = String::from(
+        "Accumulated performance feedback from structurally similar workloads \
+         (few-shot exemplars, transformation sequences rebased to this program):\n",
+    );
+    for (i, ex) in exemplars.iter().enumerate() {
+        out.push_str(&format!(
+            "Exemplar {}: workload {} reached {:.2}x speedup (structural distance {:.2}):\n{}\n",
+            i + 1,
+            ex.workload,
+            ex.speedup,
+            ex.distance,
+            ex.rendered
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fingerprint::{shape_class, workload_fingerprint};
+    use crate::db::TuningRecord;
+    use crate::tir::workload;
+    use crate::transfer::similarity::workload_extents;
+
+    fn rec(program: &Program, trace: Vec<Transform>, latency: f64) -> TuningRecord {
+        TuningRecord {
+            workload_fp: workload_fingerprint(program),
+            workload: program.name.clone(),
+            platform: "core_i9".to_string(),
+            strategy: "test".to_string(),
+            trace,
+            latency,
+            baseline_latency: 10.0,
+            seed: 1,
+            timestamp: 100,
+            shape_class: shape_class(program),
+            extents: workload_extents(program),
+        }
+    }
+
+    #[test]
+    fn selects_diverse_legal_exemplars() {
+        let target = workload::moe_matmul("target", 16, 256, 128);
+        let src_a = workload::moe_matmul("src_a", 16, 1024, 512);
+        let src_b = workload::moe_matmul("src_b", 32, 512, 256);
+        let mut db = Database::in_memory();
+        db.add(rec(
+            &src_a,
+            vec![
+                Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
+                Transform::Parallel { stage: 0, loop_idx: 0 },
+            ],
+            2.0,
+        ));
+        db.add(rec(
+            &src_a,
+            vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 32 }],
+            3.0,
+        ));
+        db.add(rec(
+            &src_b,
+            vec![Transform::Unroll { stage: 0, loop_idx: 0 }],
+            4.0,
+        ));
+
+        let ex = select_exemplars(&db, &target, "core_i9", 2);
+        assert_eq!(ex.len(), 2);
+        // Diversity: the two exemplars come from the two distinct sources,
+        // even though src_a has two records.
+        let mut names: Vec<&str> = ex.iter().map(|e| e.workload.as_str()).collect();
+        names.sort();
+        assert_eq!(names, vec!["src_a", "src_b"]);
+        // Every exemplar trace applies fully on the target.
+        let base = Schedule::new(target.clone());
+        for e in &ex {
+            let (_, applied) = base.apply_all(&e.trace);
+            assert_eq!(applied, e.trace.len());
+            assert!(!e.rendered.is_empty());
+            assert!(e.speedup > 1.0);
+        }
+
+        // With k=3 the second src_a record fills the remaining slot.
+        let ex3 = select_exemplars(&db, &target, "core_i9", 3);
+        assert_eq!(ex3.len(), 3);
+    }
+
+    #[test]
+    fn render_block_lists_speedups() {
+        let target = workload::moe_matmul("target", 16, 256, 128);
+        let src = workload::moe_matmul("src", 16, 512, 256);
+        let mut db = Database::in_memory();
+        db.add(rec(
+            &src,
+            vec![Transform::Parallel { stage: 0, loop_idx: 0 }],
+            2.5,
+        ));
+        let ex = select_exemplars(&db, &target, "core_i9", 4);
+        let block = render_exemplar_block(&ex);
+        assert!(block.contains("Exemplar 1: workload src reached 4.00x"));
+        assert!(block.contains("Parallel"));
+        assert!(render_exemplar_block(&[]).is_empty());
+    }
+
+    #[test]
+    fn empty_db_yields_no_exemplars() {
+        let target = workload::moe_matmul("target", 16, 256, 128);
+        let db = Database::in_memory();
+        assert!(select_exemplars(&db, &target, "core_i9", 4).is_empty());
+    }
+}

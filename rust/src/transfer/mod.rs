@@ -1,0 +1,139 @@
+//! Transfer tuning: cross-workload trace rebasing + few-shot exemplars.
+//!
+//! The tuning database (`crate::db`) makes measurements durable, but a
+//! *new* workload still started cold: records only matched bit-identical
+//! workload fingerprints. This subsystem makes every search start warm from
+//! **related** prior work — the paper's sample-efficiency story applied
+//! across workloads:
+//!
+//! - [`similarity`] — the workload similarity index: an extent-abstracted
+//!   *shape class* (`db::fingerprint::shape_class`) groups records of the
+//!   same computation at different sizes, and an extent-derived feature
+//!   distance ranks them, so `matmul 512^3` finds records from
+//!   `matmul 1024^3`.
+//! - [`rebase`] — the trace rebaser: replays a recorded trace onto a
+//!   structurally similar, differently-sized program — remapping stage/loop
+//!   references, rescaling tile factors to the new extents, dropping
+//!   inapplicable steps — yielding traces that are always fully legal on
+//!   the target.
+//! - [`exemplar`] — the few-shot exemplar engine: selects top-k diverse
+//!   (workload, trace, speedup) triples for the target's shape class and
+//!   renders them into the reasoning engine's prompts
+//!   (`reasoning::prompt::render_with`), so `informed_proposals` conditions
+//!   on accumulated cross-workload performance feedback.
+//!
+//! The coordinator wires both products into a session via
+//! [`derive_hints`]: rebased traces extend the `SearchContext` warm-start
+//! entries (seeded into the MCTS root frontier / evolutionary population
+//! and *measured* like any candidate — recorded latencies are never
+//! transplanted into the measurement cache, since a latency measured on a
+//! different shape proves nothing about this one), and exemplars flow to
+//! `reasoning::LlmPolicy`. CLI: `rcc transfer match|rebase|exemplars`.
+
+pub mod exemplar;
+pub mod rebase;
+pub mod similarity;
+
+pub use exemplar::{exemplars_from_matches, render_exemplar_block, select_exemplars, Exemplar};
+pub use rebase::{rebase_trace, RebaseOutcome};
+pub use similarity::{feature_distance, find_matches, workload_extents, TransferMatch};
+
+use crate::db::Database;
+use crate::schedule::Transform;
+use crate::tir::Program;
+
+/// Everything a tuning session gains from cross-workload transfer.
+#[derive(Debug, Clone, Default)]
+pub struct TransferHints {
+    /// Rebased warm-start traces, best match first, each fully legal on the
+    /// target. The paired value is the **source** record's latency — an
+    /// ordering prior only; callers must never treat it as a measurement of
+    /// the target program.
+    pub warm_entries: Vec<(Vec<Transform>, f64)>,
+    /// Few-shot exemplars for the LLM proposal policy.
+    pub exemplars: Vec<Exemplar>,
+    /// How many similar records were considered (diagnostics).
+    pub matches: usize,
+}
+
+impl TransferHints {
+    pub fn is_empty(&self) -> bool {
+        self.warm_entries.is_empty() && self.exemplars.is_empty()
+    }
+}
+
+/// Derive transfer hints for `target` on `platform`: up to `top_k` rebased
+/// warm-start traces (deduplicated) and up to `top_k` exemplars.
+/// Deterministic for a fixed database file.
+pub fn derive_hints(
+    db: &Database,
+    target: &Program,
+    platform: &str,
+    top_k: usize,
+) -> TransferHints {
+    // One database scan serves both products: warm entries and exemplars.
+    let matches = find_matches(db, target, platform, top_k.saturating_mul(4).max(8));
+    let mut hints = TransferHints { matches: matches.len(), ..Default::default() };
+    for m in &matches {
+        if hints.warm_entries.len() >= top_k {
+            break;
+        }
+        let rebased = rebase_trace(target, &m.record.trace);
+        if rebased.trace.is_empty()
+            || hints.warm_entries.iter().any(|(t, _)| *t == rebased.trace)
+        {
+            continue;
+        }
+        hints.warm_entries.push((rebased.trace, m.record.latency));
+    }
+    hints.exemplars = exemplar::exemplars_from_matches(&matches, target, top_k);
+    hints
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::db::fingerprint::{shape_class, workload_fingerprint};
+    use crate::db::TuningRecord;
+    use crate::schedule::Schedule;
+    use crate::tir::workload;
+
+    #[test]
+    fn derive_hints_produces_legal_deduplicated_entries() {
+        let target = workload::moe_matmul("target", 16, 256, 128);
+        let src = workload::moe_matmul("src", 16, 512, 256);
+        let mut db = Database::in_memory();
+        for (latency, factor) in [(2.0, 64), (3.0, 128), (4.0, 64)] {
+            db.add(TuningRecord {
+                workload_fp: workload_fingerprint(&src),
+                workload: src.name.clone(),
+                platform: "core_i9".to_string(),
+                strategy: "test".to_string(),
+                trace: vec![Transform::TileSize { stage: 0, loop_idx: 1, factor }],
+                latency,
+                baseline_latency: 10.0,
+                seed: 1,
+                timestamp: 100,
+                shape_class: shape_class(&src),
+                extents: workload_extents(&src),
+            });
+        }
+        let hints = derive_hints(&db, &target, "core_i9", 4);
+        assert_eq!(hints.matches, 3);
+        // factor 64 appears twice at the same distance; the rebased trace
+        // dedups, and factor 128 rescales onto j = 256.
+        assert_eq!(hints.warm_entries.len(), 2);
+        let base = Schedule::new(target.clone());
+        for (trace, _) in &hints.warm_entries {
+            let (_, applied) = base.apply_all(trace);
+            assert_eq!(applied, trace.len(), "transfer warm entries must be legal");
+        }
+        assert!(!hints.exemplars.is_empty());
+        assert!(!hints.is_empty());
+
+        // No similar records on another platform.
+        assert!(derive_hints(&db, &target, "graviton2", 4).is_empty());
+        // The source workload itself gets nothing (same fingerprint).
+        assert!(derive_hints(&db, &src, "core_i9", 4).is_empty());
+    }
+}

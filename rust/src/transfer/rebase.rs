@@ -1,0 +1,216 @@
+//! Trace rebasing: replay a recorded transform trace onto a structurally
+//! similar but differently-sized program.
+//!
+//! A trace recorded on `matmul 1024^3` does not replay verbatim on
+//! `matmul 512^3`: tile factors may no longer divide the new extents,
+//! loop/stage indices may dangle after a dropped step, and annotation
+//! limits (vectorize/unroll width ≤ 64) bind at different sizes. The
+//! rebaser walks the trace step by step against the *target* program and
+//! produces the longest legal adaptation:
+//!
+//! - **TileSize** factors that no longer divide the target loop's extent
+//!   are rescaled to the nearest legal divisor (counted in
+//!   [`RebaseOutcome::adjusted`]); loops too small to tile drop the step.
+//! - Steps referencing a stage or loop the target does not have are
+//!   dropped ([`RebaseOutcome::dropped`]) — a dangling reference is never
+//!   emitted.
+//! - Every surviving step is validated through `Transform::apply`, which
+//!   enforces all remaining legality rules (reorder permutation arity,
+//!   parallel-prefix, vectorize-innermost, the ≤ 64 vectorize/unroll width
+//!   caps). Steps it rejects are dropped.
+//!
+//! The output trace therefore **always replays fully** on the target
+//! program — `Schedule::apply_all(&outcome.trace)` applies every step —
+//! which is the legality contract `rust/tests/transfer_tuning.rs` pins
+//! with a property test over random traces and shapes.
+
+use crate::schedule::{sampler, Transform};
+use crate::tir::Program;
+
+/// Result of rebasing one trace onto a target program.
+#[derive(Debug, Clone, Default)]
+pub struct RebaseOutcome {
+    /// The adapted trace; applies fully on the target by construction.
+    pub trace: Vec<Transform>,
+    /// Steps dropped because no legal adaptation existed.
+    pub dropped: usize,
+    /// TileSize steps whose factor was rescaled to a target divisor.
+    pub adjusted: usize,
+}
+
+/// Nearest legal tile factor for a loop of `extent`: the proper divisor
+/// (in `2..extent`) minimizing `|divisor - want|`, smaller divisor on ties
+/// for determinism. `None` when the extent has no proper divisor.
+fn nearest_divisor(extent: i64, want: i64) -> Option<i64> {
+    // Foreign records can carry arbitrary factors; clamp before the
+    // distance arithmetic so extreme values cannot overflow.
+    let want = want.clamp(1, extent.max(1));
+    sampler::divisors(extent)
+        .into_iter()
+        .min_by_key(|&f| ((f - want).abs(), f))
+}
+
+/// Rebase `trace` onto `target`. See the module docs for the policy; the
+/// returned trace is always fully legal on `target`.
+pub fn rebase_trace(target: &Program, trace: &[Transform]) -> RebaseOutcome {
+    let mut cur = target.clone();
+    let mut out = RebaseOutcome::default();
+    for step in trace {
+        // Stage references beyond the target's stage count can never apply.
+        if step.stage() >= cur.stages.len() {
+            out.dropped += 1;
+            continue;
+        }
+        let adapted = match step {
+            Transform::TileSize { stage, loop_idx, factor } => {
+                let Some(l) = cur.stages[*stage].loops.get(*loop_idx) else {
+                    out.dropped += 1;
+                    continue;
+                };
+                let extent = l.extent;
+                let legal =
+                    *factor >= 2 && *factor < extent && extent % *factor == 0;
+                let factor = if legal {
+                    *factor
+                } else {
+                    match nearest_divisor(extent, *factor) {
+                        Some(f) => {
+                            out.adjusted += 1;
+                            f
+                        }
+                        None => {
+                            out.dropped += 1;
+                            continue;
+                        }
+                    }
+                };
+                Transform::TileSize { stage: *stage, loop_idx: *loop_idx, factor }
+            }
+            other => other.clone(),
+        };
+        match adapted.apply(&cur) {
+            Ok(next) => {
+                cur = next;
+                out.trace.push(adapted);
+            }
+            Err(_) => out.dropped += 1,
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::tir::workload;
+
+    /// The rebased trace must replay fully and leave a valid program.
+    fn assert_fully_legal(target: &Program, out: &RebaseOutcome) {
+        let sched = Schedule::new(target.clone());
+        let (replayed, applied) = sched.apply_all(&out.trace);
+        assert_eq!(
+            applied,
+            out.trace.len(),
+            "rebased trace must apply fully on the target"
+        );
+        replayed.current.validate().unwrap();
+    }
+
+    #[test]
+    fn identical_shape_replays_verbatim() {
+        let src = workload::moe_matmul("s", 16, 512, 512);
+        let trace = vec![
+            Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
+            Transform::Parallel { stage: 0, loop_idx: 0 },
+        ];
+        let out = rebase_trace(&src, &trace);
+        assert_eq!(out.trace, trace);
+        assert_eq!((out.dropped, out.adjusted), (0, 0));
+        assert_fully_legal(&src, &out);
+    }
+
+    #[test]
+    fn tile_factors_rescale_to_target_divisors() {
+        // factor 64 divides the source j=512 but the target j=96 needs the
+        // nearest divisor of 96 (48).
+        let target = workload::moe_matmul("t", 16, 96, 128);
+        let trace = vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 }];
+        let out = rebase_trace(&target, &trace);
+        assert_eq!(out.adjusted, 1);
+        assert_eq!(
+            out.trace,
+            vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 48 }]
+        );
+        assert_fully_legal(&target, &out);
+    }
+
+    #[test]
+    fn oversized_factor_clamps_into_range() {
+        // factor 128 exceeds the target extent 8 entirely: nearest proper
+        // divisor is 4.
+        let target = workload::moe_matmul("t", 8, 8, 8);
+        let out = rebase_trace(
+            &target,
+            &[Transform::TileSize { stage: 0, loop_idx: 0, factor: 128 }],
+        );
+        assert_eq!(out.trace.len(), 1);
+        match out.trace[0] {
+            Transform::TileSize { factor, .. } => {
+                assert!((2..8).contains(&factor) && 8 % factor == 0)
+            }
+            _ => panic!("expected TileSize"),
+        }
+        assert_fully_legal(&target, &out);
+    }
+
+    #[test]
+    fn untileable_and_dangling_steps_drop() {
+        let target = workload::moe_matmul("t", 2, 6, 8); // t=2 has no proper divisor
+        let out = rebase_trace(
+            &target,
+            &[
+                Transform::TileSize { stage: 0, loop_idx: 0, factor: 4 }, // extent 2
+                Transform::TileSize { stage: 3, loop_idx: 0, factor: 2 }, // dangling stage
+                Transform::Unroll { stage: 0, loop_idx: 9 },              // dangling loop
+                Transform::Parallel { stage: 0, loop_idx: 0 },            // fine
+            ],
+        );
+        assert_eq!(out.dropped, 3);
+        assert_eq!(out.trace, vec![Transform::Parallel { stage: 0, loop_idx: 0 }]);
+        assert_fully_legal(&target, &out);
+    }
+
+    #[test]
+    fn cross_stage_trace_rebases_onto_fewer_stages() {
+        // A 2-stage attention trace rebased onto a 1-stage matmul: stage-1
+        // steps drop, stage-0 steps adapt — and nothing panics.
+        let trace = vec![
+            Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 },
+            Transform::CacheWrite { stage: 1 },
+            Transform::Parallel { stage: 0, loop_idx: 0 },
+        ];
+        let target = workload::moe_matmul("t", 16, 512, 512);
+        let out = rebase_trace(&target, &trace);
+        assert_eq!(out.dropped, 1, "stage-1 step has nowhere to go");
+        assert_eq!(out.trace.len(), 2);
+        assert_fully_legal(&target, &out);
+    }
+
+    #[test]
+    fn annotation_limits_enforced_via_apply() {
+        // Vectorizing a 512-wide innermost loop is illegal (> 64 lanes);
+        // the rebaser drops it rather than emit an illegal step.
+        let target = workload::moe_matmul("t", 16, 512, 512);
+        // Move j innermost then vectorize — legal on a source whose j <= 64,
+        // illegal here.
+        let trace = vec![
+            Transform::Reorder { stage: 0, perm: vec![0, 2, 1] },
+            Transform::Vectorize { stage: 0, loop_idx: 2 },
+        ];
+        let out = rebase_trace(&target, &trace);
+        assert_eq!(out.dropped, 1);
+        assert_eq!(out.trace.len(), 1);
+        assert_fully_legal(&target, &out);
+    }
+}

@@ -1,0 +1,241 @@
+//! Workload similarity index over the tuning database.
+//!
+//! Two layers of matching turn the database from a same-workload cache into
+//! a cross-workload knowledge base:
+//!
+//! 1. **Shape class** (`db::fingerprint::shape_class`): an
+//!    extent-abstracted structural fingerprint. Records whose shape class
+//!    equals the target's are the same computation at a different size —
+//!    the only pool a recorded trace can meaningfully rebase into.
+//! 2. **Feature distance**: within a shape class, candidates are ranked by
+//!    an L2 distance over per-stage, extent-derived analysis features —
+//!    log2 of every original-axis extent plus per-stage log-spatial and
+//!    log-reduction volumes (the axis roles come from the target's stage
+//!    structure, which the shape-class match guarantees is shared). A
+//!    `matmul 512^3` therefore prefers records from `matmul 1024^3`
+//!    (distance √3·1) over `matmul 8192x16x5120`.
+//!
+//! Matching is read-only over `Database::records()` and fully
+//! deterministic: ties break on recorded speedup (higher first) and then on
+//! file order via the stable sort.
+
+use crate::db::fingerprint::{shape_class, workload_fingerprint};
+use crate::db::{Database, TuningRecord};
+use crate::tir::Program;
+
+/// Per-stage original-axis extents of a program, the structural summary
+/// persisted in every `TuningRecord` for later similarity matching.
+pub fn workload_extents(p: &Program) -> Vec<Vec<i64>> {
+    p.stages
+        .iter()
+        .map(|s| s.axes.iter().map(|a| a.extent).collect())
+        .collect()
+}
+
+/// One database record matched to a target workload by shape class.
+#[derive(Debug, Clone)]
+pub struct TransferMatch<'a> {
+    pub record: &'a TuningRecord,
+    /// Feature distance to the target (0 = identical extents).
+    pub distance: f64,
+}
+
+/// Extent-derived feature vector of one workload: per axis `log2(extent)`,
+/// plus per stage the log-spatial and log-reduction volumes. The reduction
+/// roles come from `reference` (the target program), which shares stage
+/// structure with any extent source of the same shape class. Returns `None`
+/// when the extent layout does not line up with the reference (foreign or
+/// truncated record metadata).
+fn feature_vector(reference: &Program, extents: &[Vec<i64>]) -> Option<Vec<f64>> {
+    if extents.len() != reference.stages.len() {
+        return None;
+    }
+    let mut out = Vec::new();
+    for (stage, stage_extents) in reference.stages.iter().zip(extents) {
+        if stage_extents.len() != stage.axes.len() {
+            return None;
+        }
+        let mut spatial = 0.0;
+        let mut reduction = 0.0;
+        for (axis, &extent) in stage.axes.iter().zip(stage_extents) {
+            let log = (extent.max(1) as f64).log2();
+            out.push(log);
+            if axis.is_reduction {
+                reduction += log;
+            } else {
+                spatial += log;
+            }
+        }
+        out.push(spatial);
+        out.push(reduction);
+    }
+    Some(out)
+}
+
+/// L2 distance between two equal-length feature vectors.
+fn l2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// L2 feature distance between the target program and a recorded extent
+/// summary; `None` when the record's metadata does not line up.
+pub fn feature_distance(target: &Program, record_extents: &[Vec<i64>]) -> Option<f64> {
+    let a = feature_vector(target, &workload_extents(target))?;
+    let b = feature_vector(target, record_extents)?;
+    Some(l2(&a, &b))
+}
+
+/// The `k` database records most similar to `target` on `platform`:
+/// same shape class, *different* workload fingerprint (bit-identical
+/// workloads are already served by the plain warm start), ranked by feature
+/// distance, then recorded speedup, then file order. Records without
+/// transfer metadata (shape class 0 / missing extents) are skipped.
+pub fn find_matches<'a>(
+    db: &'a Database,
+    target: &Program,
+    platform: &str,
+    k: usize,
+) -> Vec<TransferMatch<'a>> {
+    let class = shape_class(target);
+    let fp = workload_fingerprint(target);
+    // The target's own feature vector is the same for every candidate;
+    // compute it once, not per record.
+    let Some(target_vec) = feature_vector(target, &workload_extents(target)) else {
+        return Vec::new();
+    };
+    let mut matches: Vec<TransferMatch<'a>> = db
+        .records()
+        .iter()
+        .filter(|r| {
+            r.platform == platform
+                && r.shape_class == class
+                && r.shape_class != 0
+                && r.workload_fp != fp
+                && !r.trace.is_empty()
+        })
+        .filter_map(|r| {
+            feature_vector(target, &r.extents).map(|v| TransferMatch {
+                record: r,
+                distance: l2(&target_vec, &v),
+            })
+        })
+        .collect();
+    matches.sort_by(|a, b| {
+        a.distance
+            .partial_cmp(&b.distance)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(
+                b.record
+                    .speedup()
+                    .partial_cmp(&a.record.speedup())
+                    .unwrap_or(std::cmp::Ordering::Equal),
+            )
+    });
+    matches.truncate(k);
+    matches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+    use crate::tir::workload;
+
+    fn rec(program: &Program, platform: &str, latency: f64, factor: i64) -> TuningRecord {
+        TuningRecord {
+            workload_fp: workload_fingerprint(program),
+            workload: program.name.clone(),
+            platform: platform.to_string(),
+            strategy: "test".to_string(),
+            trace: vec![Transform::TileSize { stage: 0, loop_idx: 2, factor }],
+            latency,
+            baseline_latency: 10.0,
+            seed: 1,
+            timestamp: 100,
+            shape_class: shape_class(program),
+            extents: workload_extents(program),
+        }
+    }
+
+    #[test]
+    fn extents_and_distance_track_shapes() {
+        let a = workload::moe_matmul("a", 16, 512, 512);
+        assert_eq!(workload_extents(&a), vec![vec![16, 512, 512]]);
+        // Identical extents: distance 0.
+        let same = workload::moe_matmul("b", 16, 512, 512);
+        assert_eq!(feature_distance(&a, &workload_extents(&same)), Some(0.0));
+        // Doubling every extent moves each coordinate by 1 in log2 space.
+        let double = workload::moe_matmul("c", 32, 1024, 1024);
+        let d = feature_distance(&a, &workload_extents(&double)).unwrap();
+        assert!(d > 0.0);
+        // Mismatched layout: None, not a bogus distance.
+        assert_eq!(feature_distance(&a, &[]), None);
+        assert_eq!(feature_distance(&a, &[vec![16, 512]]), None);
+    }
+
+    #[test]
+    fn closer_extents_mean_smaller_distance() {
+        let target = workload::moe_matmul("t", 16, 512, 512);
+        let near = workload::moe_matmul("n", 16, 1024, 512);
+        let far = workload::moe_matmul("f", 128, 8192, 4096);
+        let dn = feature_distance(&target, &workload_extents(&near)).unwrap();
+        let df = feature_distance(&target, &workload_extents(&far)).unwrap();
+        assert!(dn < df, "near {dn} must rank before far {df}");
+    }
+
+    #[test]
+    fn find_matches_filters_and_ranks() {
+        let target = workload::moe_matmul("target", 16, 512, 512);
+        let near = workload::moe_matmul("near", 16, 1024, 512);
+        let far = workload::moe_matmul("far", 128, 8192, 4096);
+        let conv = workload::conv2d("conv", 8, 8, 16, 16, 3);
+
+        let mut db = Database::in_memory();
+        db.add(rec(&far, "core_i9", 2.0, 64));
+        db.add(rec(&near, "core_i9", 2.0, 64));
+        db.add(rec(&conv, "core_i9", 1.0, 2)); // different class: excluded
+        db.add(rec(&near, "m2_pro", 0.5, 64)); // other platform: excluded
+        db.add(rec(&target, "core_i9", 0.1, 64)); // same fp: excluded
+
+        let matches = find_matches(&db, &target, "core_i9", 8);
+        assert_eq!(matches.len(), 2);
+        assert_eq!(matches[0].record.workload, "near", "distance ranks first");
+        assert_eq!(matches[1].record.workload, "far");
+        assert!(matches[0].distance < matches[1].distance);
+
+        // k truncates.
+        assert_eq!(find_matches(&db, &target, "core_i9", 1).len(), 1);
+    }
+
+    #[test]
+    fn records_without_metadata_never_match() {
+        let target = workload::moe_matmul("target", 16, 512, 512);
+        let near = workload::moe_matmul("near", 16, 1024, 512);
+        let mut old = rec(&near, "core_i9", 2.0, 64);
+        old.shape_class = 0; // pre-transfer record
+        old.extents = Vec::new();
+        let mut db = Database::in_memory();
+        db.add(old);
+        assert!(find_matches(&db, &target, "core_i9", 8).is_empty());
+    }
+
+    #[test]
+    fn speedup_breaks_distance_ties() {
+        let target = workload::moe_matmul("target", 16, 512, 512);
+        let src = workload::moe_matmul("src", 16, 1024, 512);
+        let mut db = Database::in_memory();
+        db.add(rec(&src, "core_i9", 5.0, 32)); // 2x speedup
+        db.add(rec(&src, "core_i9", 2.0, 64)); // 5x speedup
+        let matches = find_matches(&db, &target, "core_i9", 8);
+        assert_eq!(matches.len(), 2);
+        assert_eq!(
+            matches[0].record.latency, 2.0,
+            "equal distance: higher recorded speedup first"
+        );
+    }
+}

@@ -28,6 +28,7 @@ fn every_model_produces_parseable_applicable_proposals() {
                 ancestors: vec![],
                 scores: vec![1.0],
                 platform: &plat,
+                exemplars: &[],
             };
             let resp = engine.complete(&ctx);
             assert!(resp.text.contains("Transformations to apply:"), "{}", model.name);
@@ -166,6 +167,7 @@ fn prompt_embeds_everything_the_engine_uses() {
         ancestors: vec![&base],
         scores: vec![0.8, 0.4],
         platform: &plat,
+        exemplars: &[],
     };
     let text = reasoning_compiler::reasoning::prompt::render(&ctx);
     assert!(text.contains("Amazon Graviton2"));

@@ -105,6 +105,8 @@ fn warm_evolutionary_search_reuses_recorded_measurements() {
         baseline_latency: known_latency * 4.0,
         seed: 7,
         timestamp: 1,
+        shape_class: 0,
+        extents: Vec::new(),
     });
     let (warm, cache) = db.hints(&base, "core_i9", 4);
     assert_eq!(warm.entries.len(), 1);
@@ -167,6 +169,8 @@ fn warm_seeding_hits_at_sample_zero_and_cache_only_does_not() {
         baseline_latency: known_latency * 3.0,
         seed: 9,
         timestamp: 1,
+        shape_class: 0,
+        extents: Vec::new(),
     });
     let (warm, cache) = db.hints(&base, "core_i9", 4);
     assert_eq!(warm.entries.len(), 1);
