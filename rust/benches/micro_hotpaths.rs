@@ -22,6 +22,7 @@ use reasoning_compiler::reasoning::{prompt::PromptContext, ModelProfile, Simulat
 use reasoning_compiler::schedule::{sampler, Schedule, Transform};
 use reasoning_compiler::tir::WorkloadId;
 use reasoning_compiler::util::bench::{BenchResult, Bencher};
+use reasoning_compiler::util::executor::Executor;
 use reasoning_compiler::util::json::{arr, num, s, Json};
 use reasoning_compiler::util::rng::Pcg;
 
@@ -130,11 +131,15 @@ fn main() {
         }));
     }
 
-    // Serial vs batched evaluation: the PR-2 parallel pipeline. One batch
-    // is a realistic MCTS/ES measurement slice (64 distinct candidates);
-    // the worker counts bracket a typical CI machine. Results are
-    // bit-identical across worker counts — only wall-clock moves.
-    let batch_speedup = {
+    // Serial vs batched evaluation: the parallel pipeline, now on the
+    // PR-5 persistent executor. One batch is a realistic MCTS/ES
+    // measurement slice (64 distinct candidates); the worker counts
+    // bracket a typical CI machine. Results are bit-identical across
+    // executor widths — only wall-clock moves. The third variant is the
+    // pre-PR-5 baseline — scoped threads spawned and joined per batch —
+    // so the executor-vs-scoped speedup (no per-batch thread start-up,
+    // workers stay hot) is tracked cross-PR in the JSON.
+    let (batch_speedup, executor_vs_scoped) = {
         let hw = HardwareModel::new(plat.clone());
         let mut rng3 = Pcg::new(9);
         let cands: Vec<_> = (0..64)
@@ -148,16 +153,37 @@ fn main() {
             .enumerate()
             .map(|(i, p)| LatencyJob { program: p, seed: 100 + i as u64 })
             .collect();
-        let serial = b.run("latency_batch x64 (workers=1, serial)", || {
-            latency_batch(&hw, &jobs, 1)
+        let serial_exec = Executor::serial();
+        let wide_exec = Executor::new(4);
+        let serial = b.run("latency_batch x64 (serial executor)", || {
+            latency_batch(&hw, &jobs, &serial_exec)
         });
-        let batched = b.run("latency_batch x64 (workers=4, pooled)", || {
-            latency_batch(&hw, &jobs, 4)
+        let batched = b.run("latency_batch x64 (persistent executor, 4 workers)", || {
+            latency_batch(&hw, &jobs, &wide_exec)
+        });
+        // Pre-PR-5 baseline: spawn + join fresh scoped threads per batch
+        // (what `util::pool::scoped_chunks` did at every parallel site).
+        let scoped = b.run("latency_batch x64 (scoped threads per batch, 4 workers)", || {
+            let mut out = vec![0.0f64; jobs.len()];
+            let chunk = jobs.len().div_ceil(4);
+            let hw = &hw;
+            std::thread::scope(|scope| {
+                for (js, os) in jobs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+                    scope.spawn(move || {
+                        for (j, o) in js.iter().zip(os.iter_mut()) {
+                            *o = hw.latency(j.program, j.seed);
+                        }
+                    });
+                }
+            });
+            out
         });
         let speedup = serial.mean_ns / batched.mean_ns.max(1.0);
+        let vs_scoped = scoped.mean_ns / batched.mean_ns.max(1.0);
         results.push(serial);
         results.push(batched);
-        speedup
+        results.push(scoped);
+        (speedup, vs_scoped)
     };
 
     // Combined inner-loop hot path: one search-tree edge at trace depth >= 8
@@ -234,6 +260,9 @@ fn main() {
     write_json(&results);
     println!(
         "\nbatched evaluation wall-clock speedup (4 workers vs serial, 64-candidate batch): {batch_speedup:.2}x"
+    );
+    println!(
+        "persistent executor vs scoped-threads-per-batch (4 workers, 64-candidate batch): {executor_vs_scoped:.2}x"
     );
     println!(
         "incremental-evaluation speedup on the depth-8 hot path (uncached pre-PR path vs incremental): {hotpath_speedup:.2}x (target >= 5x) — {}",

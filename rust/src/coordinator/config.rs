@@ -87,12 +87,15 @@ pub struct TuneConfig {
     /// order-dependent, so a parallel repeat pool would make results vary
     /// with thread timing. Default off, preserving the paper's protocol.
     pub share_repeat_cache: bool,
-    /// Worker threads for parallel execution: sizes the session's repeat
-    /// pool and each run's batched-evaluation fan-out. `0` = auto
-    /// (`RCC_WORKERS` env var if set, else the machine's available
-    /// parallelism). Any value yields identical results when
-    /// `eval_batch <= 1` — workers only change wall-clock; `1` forces the
-    /// fully serial path.
+    /// Total parallelism of the session's one persistent work-stealing
+    /// executor (`util::executor`). Every parallel site — session repeats,
+    /// each run's batched evaluation, `serve --tune`'s concurrent model
+    /// sessions — runs as task groups on that single executor, so nested
+    /// sites share this budget instead of multiplying thread pools.
+    /// `0` = auto (`RCC_WORKERS` env var if set, else the machine's
+    /// available parallelism). Any value yields identical results —
+    /// workers only change wall-clock; `1` forces the fully serial
+    /// inline path.
     pub workers: usize,
     /// MCTS leaves expanded + measured per iteration (leaf-parallel batch
     /// width). `1` (the default) is the original serial trajectory and

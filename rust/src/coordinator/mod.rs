@@ -13,5 +13,5 @@ pub mod tuner;
 pub use config::{Strategy, TuneConfig, DEFAULT_DB_PATH};
 pub use registry::{Registry, RunRecord};
 pub use server::{BestSchedule, Server, ServerConfig};
-pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on, tune_models,
-    E2eResult, SearchHints, SessionResult};
+pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on,
+    run_session_on_with, tune_models, E2eResult, FleetResult, SearchHints, SessionResult};

@@ -2,8 +2,17 @@
 //! paper's mean-of-20 protocol, parallel execution across repeats, the
 //! end-to-end multi-task driver behind Table 2, and the session-level
 //! open/commit lifecycle of the persistent tuning database.
+//!
+//! Every parallel site here — the session's repeats, each repeat's batched
+//! evaluation, and the `rcc serve --tune` model fleet — runs as task
+//! groups on **one** persistent [`Executor`] sized by
+//! `TuneConfig::workers`. Nested sites share that single core budget
+//! (waiting submitters help run queued tasks) instead of multiplying
+//! per-site thread pools into `workers²` threads.
 
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -18,6 +27,7 @@ use crate::search::{
 use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
 use crate::transfer::{self, Exemplar};
+use crate::util::executor::Executor;
 use crate::util::stats;
 
 use super::config::{Strategy, TuneConfig};
@@ -110,20 +120,24 @@ pub fn run_once(program: &Program, cfg: &TuneConfig, seed: u64) -> Result<Search
 }
 
 /// [`run_once`] with database hints: the search is warm-started from
-/// `hints.warm` and evaluates through a clone of `hints.cache`.
+/// `hints.warm` and evaluates through a clone of `hints.cache`. Spins up
+/// a private executor of `cfg.resolved_workers()` for this one run;
+/// sessions instead thread one shared executor through every repeat.
 pub fn run_once_warm(
     program: &Program,
     cfg: &TuneConfig,
     seed: u64,
     hints: Option<&SearchHints>,
 ) -> Result<SearchResult> {
-    Ok(run_once_with_accounting(program, cfg, seed, hints, &AnalysisCache::new())?.0)
+    let exec = Executor::new(cfg.resolved_workers());
+    Ok(run_once_with_accounting(program, cfg, seed, hints, &AnalysisCache::new(), &exec)?.0)
 }
 
 /// Run one strategy once, returning LLM accounting when applicable. All
-/// strategies dispatch through the [`SearchStrategy`] trait; the
-/// parallelism knobs (`cfg.workers`, `cfg.eval_batch`) flow into the
-/// [`SearchContext`] driving the batched evaluation pipeline.
+/// strategies dispatch through the [`SearchStrategy`] trait; the run's
+/// batched evaluation streams onto `exec` (shared session-wide, so nested
+/// parallel sites split one core budget) and `cfg.eval_batch` flows into
+/// the [`SearchContext`] driving the leaf-parallel trajectory.
 ///
 /// `analysis` is the session-wide access-analysis memoization: the
 /// surrogate, the hardware model and (for llm_mcts) the reasoning engine
@@ -138,6 +152,7 @@ fn run_once_with_accounting(
     seed: u64,
     hints: Option<&SearchHints>,
     analysis: &AnalysisCache,
+    exec: &Arc<Executor>,
 ) -> Result<(SearchResult, CostTracker, f64, u64)> {
     let platform = platform_for(cfg)?;
     let surrogate = SurrogateModel::with_analysis(platform.clone(), analysis.share());
@@ -148,7 +163,7 @@ fn run_once_with_accounting(
     ctx.warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
     ctx.cache = hints.map(|h| &h.cache);
     ctx.shared_cache = cfg.share_repeat_cache;
-    ctx.workers = cfg.resolved_workers();
+    ctx.executor = Arc::clone(exec);
     ctx.eval_batch = cfg.resolved_eval_batch();
     let result = match cfg.strategy {
         Strategy::Evolutionary => {
@@ -185,13 +200,36 @@ pub fn run_session(cfg: &TuneConfig) -> Result<SessionResult> {
 }
 
 /// Same as [`run_session`] but over an arbitrary program (used by e2e).
+/// Owns a session executor of `cfg.resolved_workers()`.
+pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResult> {
+    let exec = Executor::new(cfg.resolved_workers());
+    run_session_on_with(program, cfg, &exec, None)
+}
+
+/// The session core: repeats run as a task group on the caller's
+/// persistent `exec`, and each repeat's inner batched-evaluation fan-out
+/// streams onto the *same* executor — nesting shares one core budget
+/// instead of multiplying pools.
 ///
 /// When `cfg.db_path` is set, the session opens the tuning database,
 /// derives warm-start hints for this program's structural fingerprint, runs
 /// every repeat against them, then records each run's best trace and
 /// commits — the open → search → commit lifecycle that makes measurements
 /// durable across processes.
-pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResult> {
+///
+/// `pool` is the `rcc serve --tune` cross-session measurement pool: when
+/// set, the session's database hints are spliced into it (keep-best), the
+/// session evaluates through *shared* handles on it, and its measurements
+/// become visible to every concurrently tuned model — so one program
+/// fingerprint is never measured twice in a serve session. Pooling implies
+/// `share_repeat_cache` semantics (repeats run serially in seed order;
+/// order-dependent sharing stays deterministic).
+pub fn run_session_on_with(
+    program: &Program,
+    cfg: &TuneConfig,
+    exec: &Arc<Executor>,
+    pool: Option<&MeasureCache>,
+) -> Result<SessionResult> {
     // Validate the platform up front so every repeat fails the same way.
     platform_for(cfg)?;
     let mut db = match &cfg.db_path {
@@ -223,44 +261,44 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
         }
         hints
     });
-    // `--share-repeat-cache` without a database still needs a session-lived
-    // cache for the repeats to share; hand them an empty one (no warm
-    // traces, no exemplars — just the pooled measurements).
-    let hints = match hints {
-        None if cfg.share_repeat_cache => Some(SearchHints::default()),
-        h => h,
+    // Splice the serve-fleet measurement pool in: database hints flow into
+    // the pool (keep-best, so merge order cannot matter) and the session
+    // evaluates through shared handles on it. `--share-repeat-cache`
+    // without a database still needs a session-lived cache for the repeats
+    // to share; hand them an empty one (no warm traces, no exemplars —
+    // just the pooled measurements).
+    let pooled = pool.is_some();
+    let hints = match (hints, pool) {
+        (Some(mut h), Some(p)) => {
+            h.cache.merge_into(p);
+            h.cache = p.share();
+            Some(h)
+        }
+        (None, Some(p)) => {
+            Some(SearchHints { cache: p.share(), ..SearchHints::default() })
+        }
+        (None, None) if cfg.share_repeat_cache => Some(SearchHints::default()),
+        (h, None) => h,
     };
 
     let seeds: Vec<u64> = (0..cfg.repeats as u64).map(|i| cfg.seed + i * 1009).collect();
-    let mut outcomes: Vec<Option<Result<(SearchResult, CostTracker, f64, u64)>>> =
-        (0..seeds.len()).map(|_| None).collect();
 
-    // Repeats run across a bounded worker pool (`cfg.workers`, 0 = auto).
-    // Each repeat is an independent seeded run over a private clone of the
-    // hints cache, so the pool size never affects results — `workers = 1`
-    // runs the repeats strictly serially. (Exception: with
-    // `share_repeat_cache` the repeats deliberately share one cache handle,
-    // which is order-dependent — that mode forces `pool = 1` below and
-    // must keep doing so.) The session owns the worker
-    // budget at one level: repeats split it, and each repeat's inner
-    // batch-evaluation fan-out gets the remainder (at least 1) instead of
-    // multiplying into `workers²` threads. `eval_batch` is resolved
-    // against the *session* worker count first so the leaf-parallel
-    // trajectory does not depend on how many repeats share the pool.
-    let resolved = cfg.resolved_workers();
-    // A shared repeat cache makes repeats order-dependent (each may answer
-    // from whichever repeat measured a program first), so the repeats must
-    // run serially, in seed order, to stay deterministic run-to-run — the
-    // "workers never change results" contract then still holds: the inner
-    // batched-evaluation fan-out keeps the full worker budget.
-    let pool = if cfg.share_repeat_cache {
-        1
-    } else {
-        resolved.min(seeds.len()).max(1)
-    };
     let mut run_cfg = cfg.clone();
+    // Resolve `eval_batch` against the configured worker count up front so
+    // the leaf-parallel trajectory never depends on scheduling.
     run_cfg.eval_batch = cfg.resolved_eval_batch();
-    run_cfg.workers = (resolved / pool).max(1);
+    // Pooled sessions evaluate through shared cache handles — the same
+    // order-dependent sharing `--share-repeat-cache` opts into.
+    if pooled {
+        run_cfg.share_repeat_cache = true;
+    }
+    // A shared cache (repeat-shared or serve-pooled) makes repeats
+    // order-dependent (each may answer from whichever repeat measured a
+    // program first), so the repeats must run serially, in seed order, to
+    // stay deterministic run-to-run — the "workers never change results"
+    // contract then still holds: the inner batched-evaluation fan-out
+    // keeps the executor's full budget.
+    let serial_repeats = run_cfg.share_repeat_cache;
     let run_cfg = &run_cfg;
     let hints = hints.as_ref();
     // One analysis cache for the whole session: the repeats evaluate the
@@ -268,19 +306,33 @@ pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResu
     // and pure values — sharing cannot perturb per-seed determinism).
     let analysis = AnalysisCache::new();
     let analysis = &analysis;
-    let mut work: Vec<(&mut Option<_>, u64)> =
-        outcomes.iter_mut().zip(seeds.iter().copied()).collect();
-    crate::util::pool::scoped_chunks(&mut work, pool, |batch| {
-        for (slot, seed) in batch.iter_mut() {
-            **slot = Some(run_once_with_accounting(program, run_cfg, *seed, hints, analysis));
-        }
-    });
-    drop(work);
+    // Repeats run as one task group on the shared session executor. Each
+    // repeat is an independent seeded run over a private clone of the
+    // hints cache, and the group folds results by seed index, so the
+    // executor width never affects results — a serial executor runs the
+    // repeats strictly serially, inline. A repeat's own batched
+    // evaluation submits nested groups to the same executor (waiting
+    // submitters help), so repeats × eval_batch never oversubscribes.
+    let outcomes: Vec<Result<(SearchResult, CostTracker, f64, u64)>> = if serial_repeats {
+        seeds
+            .iter()
+            .map(|&seed| run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec))
+            .collect()
+    } else {
+        exec.run(
+            seeds
+                .iter()
+                .map(|&seed| {
+                    move || run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec)
+                })
+                .collect(),
+        )
+    };
 
     let mut runs = Vec::new();
     let mut llm_costs = CostTracker::default();
     let mut fb_rates = Vec::new();
-    for o in outcomes.into_iter().flatten() {
+    for o in outcomes {
         let o = o?;
         runs.push(o.0);
         llm_costs.merge(&o.1);
@@ -377,41 +429,86 @@ pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> Result<E2eResult> {
     })
 }
 
-/// Tune several registered models concurrently, one session per model,
-/// across a worker pool of `base_cfg.resolved_workers()` threads. All
-/// sessions share one tuning database path; the database's advisory file
-/// lock serializes their commits, so no session's records are lost
+/// Outcome of a [`tune_models`] fleet: per-model sessions plus the shared
+/// measurement pool's accounting (the `rcc serve --tune` summary).
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// `(model, session)` pairs in input order. Models aliasing the same
+    /// workload share one session (identical program fingerprints are
+    /// tuned — and measured — exactly once per serve session).
+    pub sessions: Vec<(String, SessionResult)>,
+    /// Distinct (program fingerprint, platform) measurements in the shared
+    /// pool after the fleet: database-seeded plus newly measured.
+    pub pool_entries: usize,
+    /// Candidate evaluations across all sessions answered by the shared
+    /// pool (database warm entries or another repeat's/session's
+    /// measurement) instead of spending a hardware sample.
+    pub pooled_hits: usize,
+}
+
+/// Tune every registered model concurrently — one session per *distinct*
+/// workload, run as a task group on one persistent executor of
+/// `base_cfg.resolved_workers()` total parallelism. The sessions' nested
+/// parallel sites (repeats, batched evaluation) submit to the same
+/// executor, so the fleet never oversubscribes the machine the way
+/// stacked per-site pools did.
+///
+/// Cross-session measurement dedup: all sessions evaluate through one
+/// shared [`MeasureCache`] pool (via `MeasureCache::share`), so a program
+/// fingerprint measured by any session — or already recorded in the
+/// database — is never measured twice in a serve session. Distinct
+/// workloads produce disjoint fingerprint sets, so concurrent pooling
+/// stays deterministic; models aliasing one workload are deduplicated
+/// onto a single session outright.
+///
+/// All sessions share one tuning database path; the database's advisory
+/// file lock serializes their commits, so no session's records are lost
 /// (the serving-side "tune everything you host at once" path behind
 /// `rcc serve --tune`). Models that don't name a known workload are
-/// skipped. Returns `(model, session)` pairs in input order.
-pub fn tune_models(models: &[String], base_cfg: &TuneConfig) -> Result<Vec<(String, SessionResult)>> {
+/// skipped.
+pub fn tune_models(models: &[String], base_cfg: &TuneConfig) -> Result<FleetResult> {
     let tunable: Vec<&String> = models
         .iter()
         .filter(|m| WorkloadId::from_name(m).is_some())
         .collect();
     if tunable.is_empty() {
-        return Ok(Vec::new());
+        return Ok(FleetResult { sessions: Vec::new(), pool_entries: 0, pooled_hits: 0 });
     }
-    let mut slots: Vec<Option<Result<SessionResult>>> =
-        (0..tunable.len()).map(|_| None).collect();
-    let mut work: Vec<(&String, &mut Option<Result<SessionResult>>)> =
-        tunable.iter().copied().zip(slots.iter_mut()).collect();
-    crate::util::pool::scoped_chunks(&mut work, base_cfg.resolved_workers(), |batch| {
-        for (model, slot) in batch.iter_mut() {
-            let mut cfg = base_cfg.clone();
-            cfg.workload = (*model).clone();
-            // Model-level concurrency already fills the pool; keep each
-            // session internally serial to avoid nested pools.
-            cfg.workers = 1;
-            **slot = Some(run_session(&cfg));
+    let exec = Executor::new(base_cfg.resolved_workers());
+    let pool = MeasureCache::new();
+    // One session per distinct workload, in first-appearance order.
+    let mut unique: Vec<&str> = Vec::new();
+    for m in &tunable {
+        if !unique.contains(&m.as_str()) {
+            unique.push(m.as_str());
         }
-    });
-    drop(work);
-    tunable
+    }
+    let (exec_ref, pool_ref, cfg_ref) = (&exec, &pool, base_cfg);
+    let results: Vec<Result<SessionResult>> = exec.run(
+        unique
+            .iter()
+            .map(|&w| {
+                move || {
+                    let mut cfg = cfg_ref.clone();
+                    cfg.workload = w.to_string();
+                    let workload = WorkloadId::from_name(w).expect("filtered to known workloads");
+                    run_session_on_with(&workload.build(), &cfg, exec_ref, Some(pool_ref))
+                }
+            })
+            .collect(),
+    );
+    let mut by_workload: HashMap<&str, SessionResult> = HashMap::new();
+    for (w, r) in unique.iter().copied().zip(results) {
+        by_workload.insert(w, r?);
+    }
+    // Hits are counted once per actually-run session (aliased models
+    // re-present the same session in `sessions`, they don't re-run it).
+    let pooled_hits = by_workload.values().map(|s| s.total_cache_hits()).sum();
+    let sessions: Vec<(String, SessionResult)> = tunable
         .into_iter()
-        .zip(slots)
-        .map(|(m, s)| Ok((m.clone(), s.expect("model session ran")?)))
-        .collect()
+        .map(|m| (m.clone(), by_workload[m.as_str()].clone()))
+        .collect();
+    Ok(FleetResult { sessions, pool_entries: pool.len(), pooled_hits })
 }
 
 /// Replay the best trace of a search result into a concrete program

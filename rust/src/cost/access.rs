@@ -10,11 +10,37 @@
 //! fits in `C`; every loop outside `d` then re-streams that working set, so
 //! traffic(level) = trips(0..d) x footprint_lines(d).
 
+use std::sync::Mutex;
+
 use crate::tir::expr::LinIdx;
 use crate::tir::program::{BufKind, LoopKind, Program, ReduceOp, Stage};
 
 pub const LINE_BYTES: i64 = 64;
 const F32_BYTES: i64 = 4;
+
+/// Per-analysis memo of [`traffic_bytes`] components, keyed by cache
+/// capacity: `(capacity, load_bytes, store_bytes)`. Analyses are shared
+/// (`Arc<StageAnalysis>` out of the `AnalysisCache`) across the 20-repeat
+/// measurement protocol, both cost models and every worker thread, and
+/// each simulator call re-derives traffic for the same three capacity
+/// levels — the last repeated pure computation on the simulate hot path.
+/// A handful of capacities ever occur per platform, so a small
+/// linear-scan vec under a mutex beats a hash map here.
+///
+/// Store traffic is memoized separately from load traffic (the one store
+/// is the last access), so one entry serves every `store_weight`
+/// bit-identically. Cloning an analysis starts an empty memo: entries are
+/// recomputable pure values, never state.
+#[derive(Debug, Default)]
+pub struct TrafficMemo {
+    slots: Mutex<Vec<(i64, f64, f64)>>,
+}
+
+impl Clone for TrafficMemo {
+    fn clone(&self) -> Self {
+        TrafficMemo::default()
+    }
+}
 
 /// Analysis of one buffer access (load or store) within a stage.
 #[derive(Debug, Clone)]
@@ -61,6 +87,9 @@ pub struct StageAnalysis {
     pub wb_tile_bytes: i64,
     pub total_iters: i64,
     pub flops: u64,
+    /// Lazily memoized per-capacity traffic components (see
+    /// [`TrafficMemo`]); starts empty, filled by [`traffic_bytes`].
+    pub traffic_memo: TrafficMemo,
 }
 
 /// Analyze a stage. Cost-model hot path: called once per candidate
@@ -274,6 +303,7 @@ pub fn analyze(program: &Program, stage: &Stage) -> StageAnalysis {
         wb_tile_bytes,
         total_iters,
         flops: stage.flops(),
+        traffic_memo: TrafficMemo::default(),
     }
 }
 
@@ -313,7 +343,20 @@ fn writeback_count(stage: &Stage, trips: &[i64]) -> i64 {
 
 /// Cache traffic in bytes for a capacity level: the tiling-reuse model.
 /// `store_weight` scales store traffic (read-for-ownership + write-back).
+///
+/// Memoized per `(analysis, capacity)` in the analysis itself (see
+/// [`TrafficMemo`]): load and store components are cached separately and
+/// recombined under the caller's `store_weight`, bit-identically to the
+/// unmemoized sum — the store is the single last access, so
+/// `loads + store_weight * store` reproduces the original left-to-right
+/// accumulation exactly.
 pub fn traffic_bytes(a: &StageAnalysis, capacity: i64, store_weight: f64) -> f64 {
+    {
+        let memo = a.traffic_memo.slots.lock().unwrap();
+        if let Some(&(_, loads, stores)) = memo.iter().find(|e| e.0 == capacity) {
+            return loads + store_weight * stores;
+        }
+    }
     let n = a.trips.len() - 1;
     // Outermost depth whose working set fits.
     let mut d_fit = n;
@@ -324,12 +367,21 @@ pub fn traffic_bytes(a: &StageAnalysis, capacity: i64, store_weight: f64) -> f64
         }
     }
     let trips = a.trips[d_fit] as f64;
-    let mut bytes = 0.0;
+    let mut loads = 0.0;
+    let mut stores = 0.0;
     for acc in &a.accesses {
-        let w = if acc.is_store { store_weight } else { 1.0 };
-        bytes += trips * acc.lines_at_depth[d_fit] as f64 * LINE_BYTES as f64 * w;
+        let bytes = trips * acc.lines_at_depth[d_fit] as f64 * LINE_BYTES as f64;
+        if acc.is_store {
+            stores += bytes;
+        } else {
+            loads += bytes;
+        }
     }
-    bytes
+    let mut memo = a.traffic_memo.slots.lock().unwrap();
+    if !memo.iter().any(|e| e.0 == capacity) {
+        memo.push((capacity, loads, stores));
+    }
+    loads + store_weight * stores
 }
 
 /// Whole-program analysis (per stage) plus total weights for multi-stage
@@ -434,6 +486,27 @@ mod tests {
         // Tiny cache: traffic strictly larger.
         let hot = traffic_bytes(&a, 1 << 8, 1.0);
         assert!(hot > cold * 4.0, "hot={hot} cold={cold}");
+    }
+
+    #[test]
+    fn traffic_memo_is_bit_identical_and_weight_independent() {
+        let p = workload::moe_matmul("m", 16, 64, 64);
+        let a = analyze(&p, &p.stages[0]);
+        for cap in [1i64 << 8, 32 << 10, 1 << 30] {
+            for w in [1.0, 1.6, 2.0] {
+                // First call computes + memoizes; the second answers from
+                // the memo; a fresh analysis is the unmemoized reference.
+                let first = traffic_bytes(&a, cap, w);
+                let memoized = traffic_bytes(&a, cap, w);
+                let fresh = traffic_bytes(&analyze(&p, &p.stages[0]), cap, w);
+                assert_eq!(first.to_bits(), memoized.to_bits(), "cap={cap} w={w}");
+                assert_eq!(first.to_bits(), fresh.to_bits(), "cap={cap} w={w}");
+            }
+        }
+        // One memo entry per distinct capacity, shared across weights.
+        assert_eq!(a.traffic_memo.slots.lock().unwrap().len(), 3);
+        // Clones restart cold (entries are pure values, not state).
+        assert!(a.clone().traffic_memo.slots.lock().unwrap().is_empty());
     }
 
     #[test]

@@ -2,15 +2,21 @@
 //!
 //! The search engines spend almost all of their wall-clock inside
 //! `CostModel::latency` calls. Those calls are pure functions of
-//! `(program, seed)`, so a batch of candidates can fan out across a worker
-//! pool with no change in results: each job's seed is fixed by the caller
-//! before the fan-out, and results come back in input order regardless of
-//! thread scheduling. This is the evaluation-layer half of the parallel
-//! pipeline; budget metering and cache consultation stay in
-//! `search::common::Evaluator`, which plans a batch serially, calls
-//! [`latency_batch`], then folds results back in deterministic order.
+//! `(program, seed)`, so a batch of candidates can fan out across the
+//! crate's persistent executor with no change in results: each job's seed
+//! is fixed by the caller before the fan-out, and results come back in
+//! input order regardless of thread scheduling.
+//!
+//! [`latency_batch`] is the standalone form of that idea — a deterministic
+//! parallel map over a cost model — used by embedders and the perf benches
+//! (`benches/micro_hotpaths.rs` races it against spawn-per-batch scoped
+//! threads). The production search pipeline does **not** route through it:
+//! `search::common::BatchEvaluator` plans candidates serially (budget
+//! metering, cache consultation, seed assignment) and streams its
+//! hardware closures onto the executor directly, folding in plan order.
 
 use crate::tir::Program;
+use crate::util::executor::Executor;
 
 use super::analytical::CostModel;
 
@@ -22,24 +28,20 @@ pub struct LatencyJob<'a> {
     pub seed: u64,
 }
 
-/// Evaluate `jobs` on `model` across up to `workers` OS threads, returning
-/// latencies in input order. `workers <= 1` (or a single job) runs inline
-/// with no threads spawned — the exact serial path. Results are
-/// bit-identical for every worker count because each job's seed is fixed
+/// Evaluate `jobs` on `model` across the persistent executor, returning
+/// latencies in input order. A serial executor (or a single job) runs
+/// inline with no queueing — the exact serial path. Results are
+/// bit-identical for every executor width because each job's seed is fixed
 /// up front and `CostModel::latency` is deterministic per `(program, seed)`.
-pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], workers: usize) -> Vec<f64> {
-    if workers <= 1 || jobs.len() <= 1 {
+pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Executor) -> Vec<f64> {
+    if exec.is_serial() || jobs.len() <= 1 {
         return jobs.iter().map(|j| model.latency(j.program, j.seed)).collect();
     }
-    let mut out = vec![0.0f64; jobs.len()];
-    let mut work: Vec<(&LatencyJob, &mut f64)> = jobs.iter().zip(out.iter_mut()).collect();
-    crate::util::pool::scoped_chunks(&mut work, workers, |batch| {
-        for (job, slot) in batch.iter_mut() {
-            **slot = model.latency(job.program, job.seed);
-        }
-    });
-    drop(work);
-    out
+    exec.run(
+        jobs.iter()
+            .map(|j| move || model.latency(j.program, j.seed))
+            .collect(),
+    )
 }
 
 #[cfg(test)]
@@ -70,19 +72,21 @@ mod tests {
             .enumerate()
             .map(|(i, p)| LatencyJob { program: p, seed: 1000 + i as u64 })
             .collect();
-        let serial = latency_batch(&hw, &jobs, 1);
+        let serial = latency_batch(&hw, &jobs, &Executor::serial());
         for workers in [2, 4, 7] {
-            assert_eq!(latency_batch(&hw, &jobs, workers), serial, "workers={workers}");
+            let exec = Executor::new(workers);
+            assert_eq!(latency_batch(&hw, &jobs, &exec), serial, "workers={workers}");
         }
     }
 
     #[test]
     fn handles_empty_and_oversized_pools() {
         let hw = HardwareModel::new(Platform::core_i9());
-        assert!(latency_batch(&hw, &[], 4).is_empty());
+        let exec = Executor::new(64);
+        assert!(latency_batch(&hw, &[], &exec).is_empty());
         let progs = candidates(2);
         let jobs: Vec<LatencyJob> =
             progs.iter().map(|p| LatencyJob { program: p, seed: 5 }).collect();
-        assert_eq!(latency_batch(&hw, &jobs, 64).len(), 2);
+        assert_eq!(latency_batch(&hw, &jobs, &exec).len(), 2);
     }
 }

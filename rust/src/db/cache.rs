@@ -104,6 +104,55 @@ impl MeasureCache {
             .copied()
     }
 
+    /// Copy every entry of `self` into `dst`, keeping the lower latency on
+    /// a key collision — so the merge result is independent of merge order
+    /// (the property the `rcc serve --tune` measurement pool relies on
+    /// when several sessions splice their database hints into one shared
+    /// pool concurrently). A no-op when `dst` shares this cache's storage.
+    pub fn merge_into(&self, dst: &MeasureCache) {
+        if Arc::ptr_eq(&self.shards, &dst.shards) {
+            return; // self-merge: nothing to do (and locking would deadlock)
+        }
+        for shard in self.shards.iter() {
+            // Snapshot the source shard before touching `dst`: holding a
+            // source lock across destination inserts would hand two
+            // opposite-direction merges an ABBA deadlock.
+            let entries: Vec<(String, Vec<(u64, f64)>)> = shard
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(platform, m)| {
+                    (platform.clone(), m.iter().map(|(&fp, &lat)| (fp, lat)).collect())
+                })
+                .collect();
+            for (platform, entries) in entries {
+                for (fp, lat) in entries {
+                    dst.insert_if_better(fp, &platform, lat);
+                }
+            }
+        }
+    }
+
+    /// Insert unless an equal-or-lower-latency entry already exists — one
+    /// atomic check-and-set under the shard lock, so concurrent merges can
+    /// never interleave into keeping the worse of two measurements.
+    pub fn insert_if_better(&self, program_fp: u64, platform: &str, latency: f64) {
+        let mut shard = self.shard(program_fp).lock().unwrap();
+        match shard.get_mut(platform) {
+            Some(m) => {
+                let slot = m.entry(program_fp).or_insert(f64::INFINITY);
+                if latency < *slot {
+                    *slot = latency;
+                }
+            }
+            None => {
+                let mut m = HashMap::new();
+                m.insert(program_fp, latency);
+                shard.insert(platform.to_string(), m);
+            }
+        }
+    }
+
     /// Record a measurement. Last write wins (re-measurement under a
     /// different seed refreshes the entry).
     pub fn insert(&self, program_fp: u64, platform: &str, latency: f64) {
@@ -154,6 +203,37 @@ mod tests {
         assert_eq!(shallow.len(), 2, "share must see later inserts");
         deep.insert(9, "core_i9", 3.0);
         assert!(c.get(9, "core_i9").is_none(), "clone writes stay private");
+    }
+
+    #[test]
+    fn merge_into_keeps_the_better_measurement_either_direction() {
+        let a = MeasureCache::new();
+        let b = MeasureCache::new();
+        a.insert(1, "core_i9", 2.0);
+        a.insert(2, "core_i9", 5.0);
+        b.insert(1, "core_i9", 3.0); // worse than a's
+        b.insert(3, "m2_pro", 7.0);
+        a.merge_into(&b);
+        assert_eq!(b.get(1, "core_i9"), Some(2.0), "lower latency wins");
+        assert_eq!(b.get(2, "core_i9"), Some(5.0));
+        assert_eq!(b.get(3, "m2_pro"), Some(7.0));
+        assert_eq!(b.len(), 3);
+        // Merge-order independence: the reverse merge yields the same map.
+        let c = MeasureCache::new();
+        let d = MeasureCache::new();
+        b.merge_into(&c);
+        c.merge_into(&d);
+        assert_eq!(d.get(1, "core_i9"), Some(2.0));
+        assert_eq!(d.len(), 3);
+        // Merging a cache into a shared handle of itself is a safe no-op.
+        let alias = d.share();
+        d.merge_into(&alias);
+        assert_eq!(d.len(), 3);
+        // insert_if_better never downgrades an entry.
+        d.insert_if_better(1, "core_i9", 9.0);
+        assert_eq!(d.get(1, "core_i9"), Some(2.0));
+        d.insert_if_better(1, "core_i9", 1.0);
+        assert_eq!(d.get(1, "core_i9"), Some(1.0));
     }
 
     #[test]

@@ -19,8 +19,9 @@
 //! - [`search`] — MCTS with UCT (serial or leaf-parallel with virtual
 //!   loss) and the TVM-style Evolutionary Search baseline, unified behind
 //!   the `SearchStrategy` trait, both warm-startable from the tuning
-//!   database and evaluated through a batched, worker-pooled measurement
-//!   pipeline backed by the measurement cache.
+//!   database and evaluated through a batched measurement pipeline backed
+//!   by the measurement cache and the crate-wide persistent work-stealing
+//!   executor (`util::executor`).
 //! - [`reasoning`] — the paper's contribution: prompt construction,
 //!   proposal parsing/validation with fallback, simulated LLM model
 //!   profiles and API cost tracking.

@@ -40,10 +40,12 @@ Tuning
               --share-repeat-cache  pool measurements across a session's
                              repeats (saves samples; waives the repeats'
                              independence contract — default off)
-              --workers N    worker threads: repeat pool + batched
-                             evaluation (0 = auto: RCC_WORKERS env or all
-                             cores; 1 = fully serial; results identical
-                             for every N)
+              --workers N    total parallelism of the one persistent
+                             executor all parallel sites share (repeats,
+                             batched evaluation, serve --tune fleets;
+                             0 = auto: RCC_WORKERS env or all cores;
+                             1 = fully serial; results identical for
+                             every N)
               --eval-batch N MCTS leaves measured per iteration (1 =
                              serial trajectory; >1 = leaf-parallel search,
                              deterministic per seed; 0 = match --workers)
@@ -362,13 +364,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         cfg.db_path = Some(db_path.to_string_lossy().to_string());
         let models: Vec<String> = manifest.artifacts.keys().cloned().collect();
         println!(
-            "tuning {} registered models concurrently ({} workers, budget {} x{} repeats)...",
+            "tuning {} registered models concurrently ({}-worker shared executor, budget {} x{} repeats)...",
             models.len(),
             cfg.resolved_workers(),
             cfg.budget,
             cfg.repeats
         );
-        for (model, session) in tune_models(&models, &cfg)? {
+        let fleet = tune_models(&models, &cfg)?;
+        for (model, session) in &fleet.sessions {
             println!(
                 "  {:<18} {:.2}x mean speedup ({} samples, {} cache hits)",
                 model,
@@ -377,6 +380,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 session.total_cache_hits()
             );
         }
+        // Cross-session dedup summary: one MeasureCache is shared by every
+        // session above, so identical program fingerprints are measured at
+        // most once per serve session.
+        println!(
+            "  shared measurement pool: {} fingerprints known, {} evaluations answered without a sample",
+            fleet.pool_entries, fleet.pooled_hits
+        );
     }
     // Annotate served models with their best-known tuned schedules. A
     // missing db is only acceptable when the path is the implicit default;
@@ -407,6 +417,16 @@ fn cmd_db(args: &Args) -> Result<()> {
         .map(|s| s.as_str())
         .unwrap_or("stats");
     let mut db = Database::open(&db_path)?;
+    // A corrupted (or version-drifted) database must be loud, not quietly
+    // smaller: every db subcommand leads with the skipped-line count.
+    if db.skipped_lines > 0 {
+        eprintln!(
+            "warning: skipped {} malformed line(s) in {} — corrupted or written by \
+             a different version (`db gc` preserves them verbatim)",
+            db.skipped_lines,
+            db_path.display()
+        );
+    }
     match action {
         "gc" => {
             let k = args.opt_usize("k", 8);

@@ -2,32 +2,37 @@
 //! convergence curves and the strategy interface.
 //!
 //! The pieces compose bottom-up: [`Evaluator`] meters the hardware budget
-//! one candidate at a time; [`BatchEvaluator`] plans a whole batch against
-//! the cache and budget, fans the needed hardware measurements across a
-//! worker pool (`cost::latency_batch`), and folds results back in
-//! deterministic candidate order; [`SearchStrategy`] is the uniform entry
-//! point (`MctsStrategy`, `EvolutionaryStrategy`) over a [`SearchContext`]
-//! carrying the models, budget, warm-start hints and parallelism knobs.
+//! one candidate at a time; [`BatchEvaluator`] plans candidates against
+//! the cache and budget, streams the needed hardware measurements onto
+//! the crate's persistent [`Executor`] (as a crate-internal
+//! `PlannedBatch`), and folds
+//! results back in deterministic candidate order; [`SearchStrategy`] is
+//! the uniform entry point (`MctsStrategy`, `EvolutionaryStrategy`) over a
+//! [`SearchContext`] carrying the models, budget, warm-start hints, the
+//! executor handle and the `eval_batch` knob.
 //!
-//! Determinism contract: `workers = 1, eval_batch = 1` reproduces the
-//! original serial search bit-for-bit; raising `workers` never changes
-//! results (only wall-clock) because every measurement's seed is fixed at
-//! plan time; raising `eval_batch` changes the MCTS trajectory (leaf
-//! parallelism) but stays bit-reproducible per seed.
+//! Determinism contract: a serial executor with `eval_batch = 1`
+//! reproduces the original serial search bit-for-bit; widening the
+//! executor never changes results (only wall-clock) because every
+//! measurement's seed is fixed at plan time and outputs fold by plan
+//! index, never completion order; raising `eval_batch` changes the MCTS
+//! trajectory (leaf parallelism) but stays bit-reproducible per seed.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use crate::cost::{latency_batch, CostModel, LatencyJob, Platform};
+use crate::cost::{CostModel, Platform};
 use crate::db::{program_fingerprint, MeasureCache};
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
+use crate::util::executor::{Executor, TaskGroup};
 use crate::util::rng::Pcg;
 
 pub use crate::db::WarmStart;
 
 /// Everything one search run needs, bundled so strategies share a uniform
 /// signature. Build with [`SearchContext::new`] and override the optional
-/// fields (`warm`, `cache`, `workers`, `eval_batch`) as needed.
+/// fields (`warm`, `cache`, `executor`, `eval_batch`) as needed.
 pub struct SearchContext<'a> {
     pub base: &'a Program,
     /// Rollout surrogate f̂ (never consumes samples).
@@ -53,8 +58,13 @@ pub struct SearchContext<'a> {
     /// independence contract — a repeat may answer from another repeat's
     /// measurement instead of its own seeded one.
     pub shared_cache: bool,
-    /// Worker threads for batched hardware evaluation (1 = serial).
-    pub workers: usize,
+    /// The persistent executor batched hardware evaluation streams onto.
+    /// Defaults to [`Executor::serial`] (inline, no threads); sessions
+    /// hand every run one shared session-wide executor so nested sites
+    /// (repeats × `eval_batch` × concurrently tuned models) share one
+    /// core budget instead of multiplying thread pools. The executor
+    /// width never changes results — only wall-clock.
+    pub executor: Arc<Executor>,
     /// Candidates expanded and measured per MCTS iteration (leaf-parallel
     /// batch width). 1 = the original serial trajectory. Evolutionary
     /// search ignores this: its natural batch is the per-generation
@@ -81,7 +91,7 @@ impl<'a> SearchContext<'a> {
             warm: None,
             cache: None,
             shared_cache: false,
-            workers: 1,
+            executor: Executor::serial(),
             eval_batch: 1,
         }
     }
@@ -104,9 +114,9 @@ impl<'a> SearchContext<'a> {
     }
 
     /// The batched evaluation pipeline for this run: [`Self::evaluator`]
-    /// behind a worker pool of `self.workers`.
+    /// streaming its hardware measurements onto `self.executor`.
     pub fn batch_evaluator(&self) -> BatchEvaluator<'a> {
-        BatchEvaluator { ev: self.evaluator(), workers: self.workers }
+        BatchEvaluator { ev: self.evaluator(), executor: Arc::clone(&self.executor) }
     }
 }
 
@@ -141,7 +151,7 @@ pub struct WarmReplay {
 /// best-recorded-first. Deliberately does NOT deduplicate: MCTS dedups
 /// against its tree fingerprints and evolutionary search keeps duplicates
 /// as extra population mass — both exactly as the pre-trait serial code
-/// behaved, which the `workers = 1` bit-parity contract pins. Shared by
+/// behaved, which the serial-executor bit-parity contract pins. Shared by
 /// both strategies so the replay logic cannot drift between them.
 pub fn replay_warm_entries(
     base_sched: &Schedule,
@@ -439,30 +449,34 @@ enum BatchPlan {
     /// Already in the cache: free, latency known at plan time.
     Hit(f64),
     /// Needs a hardware measurement; `job` indexes the fan-out results.
-    Miss { job: usize },
+    /// `fp` is the candidate's fingerprint, kept for the cache insert at
+    /// fold time (None when the caller evaluates fingerprint-less).
+    Miss { job: usize, fp: Option<u64> },
     /// Same fingerprint as an earlier miss in this batch: free once that
     /// job resolves (the serial loop would hit the just-inserted entry).
     HitOfMiss { job: usize },
 }
 
-/// The batched evaluation pipeline: wraps an [`Evaluator`], plans a whole
-/// batch of candidates against the measurement cache and remaining budget,
-/// fans the required hardware measurements across `workers` threads
-/// (`cost::latency_batch`), then folds results back in candidate order.
+/// The batched evaluation pipeline: wraps an [`Evaluator`], plans
+/// candidates against the measurement cache and remaining budget, streams
+/// the required hardware measurements onto the persistent [`Executor`],
+/// then folds results back in candidate order.
 ///
 /// Results are bit-identical to calling [`Evaluator::measure`] on each
 /// candidate in order (with callers breaking at the first `None`), for
-/// every worker count: each measurement's sample number — and therefore
-/// its seed — is assigned serially at plan time.
+/// every executor width: each measurement's sample number — and therefore
+/// its seed — is assigned serially at plan time, and outputs land by plan
+/// index, never completion order.
 pub struct BatchEvaluator<'a> {
     pub ev: Evaluator<'a>,
-    /// Threads for the hardware fan-out (1 = fully inline/serial).
-    pub workers: usize,
+    /// The persistent executor the hardware measurements stream onto (a
+    /// serial executor runs them inline — the exact serial path).
+    executor: Arc<Executor>,
 }
 
 impl<'a> BatchEvaluator<'a> {
-    pub fn new(ev: Evaluator<'a>, workers: usize) -> BatchEvaluator<'a> {
-        BatchEvaluator { ev, workers }
+    pub fn new(ev: Evaluator<'a>, executor: Arc<Executor>) -> BatchEvaluator<'a> {
+        BatchEvaluator { ev, executor }
     }
 
     pub fn exhausted(&self) -> bool {
@@ -471,6 +485,28 @@ impl<'a> BatchEvaluator<'a> {
 
     pub fn into_result(self, strategy: &str, workload: &str, platform: &str) -> SearchResult {
         self.ev.into_result(strategy, workload, platform)
+    }
+
+    /// Start a streaming batch: candidates are planned — and their
+    /// hardware measurements submitted to the executor — one at a time as
+    /// [`PlannedBatch::submit`] is called, so callers (leaf-parallel MCTS)
+    /// overlap candidate selection with measurement. Finish with
+    /// [`PlannedBatch::finish`] to fold results in submission order.
+    ///
+    /// Crate-private like `Executor::group`: the in-flight batch holds
+    /// borrowing tasks and is only sound while never leaked before
+    /// `finish`/drop — in-crate callers uphold that; external users get
+    /// [`BatchEvaluator::measure_batch`].
+    pub(crate) fn begin_batch<'s>(&'s mut self) -> PlannedBatch<'s, 'a> {
+        let group = self.executor.group();
+        PlannedBatch {
+            ev: &mut self.ev,
+            group,
+            plans: Vec::new(),
+            fp_to_job: HashMap::new(),
+            n_jobs: 0,
+            exhausted: false,
+        }
     }
 
     /// Evaluate a batch of candidates. Fingerprints are computed here when
@@ -503,50 +539,89 @@ impl<'a> BatchEvaluator<'a> {
         candidates: &[&Schedule],
         fps: Option<&[u64]>,
     ) -> Vec<Option<f64>> {
-        let ev = &mut self.ev;
-        // ---- plan (serial): classify candidates, assign sample numbers ----
-        let mut plans: Vec<BatchPlan> = Vec::with_capacity(candidates.len());
-        // (candidate index, sample number) per planned hardware job.
-        let mut jobs: Vec<(usize, usize)> = Vec::new();
-        let mut fp_to_job: HashMap<u64, usize> = HashMap::new();
-        for (i, _) in candidates.iter().enumerate() {
-            let cached = match (ev.cache.as_ref(), fps.map(|f| f[i])) {
-                (Some(cache), Some(fp)) => match cache.get(fp, &ev.platform_name) {
-                    Some(known) => Some(BatchPlan::Hit(known)),
-                    None => fp_to_job.get(&fp).map(|&j| BatchPlan::HitOfMiss { job: j }),
-                },
-                _ => None,
-            };
-            let plan = match cached {
-                Some(p) => p,
-                None => {
-                    if ev.used + jobs.len() >= ev.budget {
-                        break; // budget exhausted: this and all later candidates are None
-                    }
-                    let job = jobs.len();
-                    jobs.push((i, ev.used + job + 1));
-                    if let Some(f) = fps {
-                        fp_to_job.insert(f[i], job);
-                    }
-                    BatchPlan::Miss { job }
-                }
-            };
-            plans.push(plan);
+        let mut batch = self.begin_batch();
+        for (i, c) in candidates.iter().enumerate() {
+            if !batch.submit(c, fps.map(|f| f[i])) {
+                break; // budget exhausted: this and all later candidates are None
+            }
         }
+        batch.finish(candidates)
+    }
+}
 
-        // ---- fan out (parallel): pure (program, seed) evaluations --------
-        let latency_jobs: Vec<LatencyJob> = jobs
-            .iter()
-            .map(|&(i, sample)| LatencyJob {
-                program: &candidates[i].current,
-                seed: ev.seed.wrapping_add(sample as u64),
-            })
-            .collect();
-        let measured = latency_batch(ev.hardware, &latency_jobs, self.workers);
+/// An in-flight evaluation batch (see [`BatchEvaluator::begin_batch`]).
+///
+/// `submit` lays down the plan serially in call order — cache probe,
+/// in-batch duplicate detection, sample-number (and therefore seed)
+/// assignment — and immediately streams any needed hardware measurement
+/// onto the executor, where persistent workers pick it up while the
+/// caller keeps selecting candidates. `finish` waits for the group and
+/// folds in submission order, making the whole pipeline bit-identical to
+/// the serial measure loop for every executor width.
+pub(crate) struct PlannedBatch<'s, 'a> {
+    ev: &'s mut Evaluator<'a>,
+    group: TaskGroup<'a, f64>,
+    plans: Vec<BatchPlan>,
+    fp_to_job: HashMap<u64, usize>,
+    n_jobs: usize,
+    exhausted: bool,
+}
 
-        // ---- fold (serial, candidate order): identical to the serial loop -
+impl<'s, 'a> PlannedBatch<'s, 'a> {
+    /// Plan one candidate and (on a cache miss) submit its hardware
+    /// measurement. Returns `false` — leaving the candidate unplanned —
+    /// once the remaining budget cannot afford another measurement; the
+    /// serial contract then makes every later candidate unevaluated too,
+    /// so callers should stop submitting.
+    pub(crate) fn submit(&mut self, candidate: &Schedule, fp: Option<u64>) -> bool {
+        if self.exhausted {
+            return false;
+        }
+        let ev = &mut *self.ev;
+        let cached = match (ev.cache.as_ref(), fp) {
+            (Some(cache), Some(fp)) => match cache.get(fp, &ev.platform_name) {
+                Some(known) => Some(BatchPlan::Hit(known)),
+                None => self.fp_to_job.get(&fp).map(|&j| BatchPlan::HitOfMiss { job: j }),
+            },
+            _ => None,
+        };
+        let plan = match cached {
+            Some(p) => p,
+            None => {
+                if ev.used + self.n_jobs >= ev.budget {
+                    self.exhausted = true;
+                    return false;
+                }
+                let job = self.n_jobs;
+                self.n_jobs += 1;
+                let sample = ev.used + job + 1;
+                let seed = ev.seed.wrapping_add(sample as u64);
+                // The job owns a CoW clone of the program (a handful of
+                // Arc bumps): the caller's candidate storage may move or
+                // grow while the measurement is in flight.
+                let hw = ev.hardware;
+                let prog = candidate.current.clone();
+                self.group.submit(move || hw.latency(&prog, seed));
+                if let Some(f) = fp {
+                    self.fp_to_job.insert(f, job);
+                }
+                BatchPlan::Miss { job, fp }
+            }
+        };
+        self.plans.push(plan);
+        true
+    }
+
+    /// Wait for the in-flight measurements and fold everything in
+    /// submission order. `candidates` must be the submitted schedules in
+    /// submission order (it may extend past the plans — those trailing
+    /// candidates, rejected by budget at plan time, fold to `None`).
+    pub(crate) fn finish(self, candidates: &[&Schedule]) -> Vec<Option<f64>> {
+        debug_assert!(candidates.len() >= self.plans.len());
+        let measured = self.group.wait();
+        let ev = self.ev;
         let mut out: Vec<Option<f64>> = Vec::with_capacity(candidates.len());
-        for (i, plan) in plans.iter().enumerate() {
+        for (i, plan) in self.plans.iter().enumerate() {
             let lat = match *plan {
                 BatchPlan::Hit(known) => {
                     ev.cache_hits += 1;
@@ -556,12 +631,12 @@ impl<'a> BatchEvaluator<'a> {
                     ev.cache_hits += 1;
                     measured[job]
                 }
-                BatchPlan::Miss { job } => {
+                BatchPlan::Miss { job, fp } => {
                     let lat = measured[job];
                     ev.used += 1;
-                    if let (Some(cache), Some(f)) = (&ev.cache, fps) {
+                    if let (Some(cache), Some(f)) = (&ev.cache, fp) {
                         ev.cache_misses += 1;
-                        cache.insert(f[i], &ev.platform_name, lat);
+                        cache.insert(f, &ev.platform_name, lat);
                     }
                     lat
                 }

@@ -89,11 +89,11 @@ pub fn evolutionary_search_warm(
 
 /// Evolutionary Search behind the [`SearchStrategy`] interface. The
 /// per-generation measurement slice goes through the batched evaluation
-/// pipeline: since the slice's membership is fixed by surrogate ranking
-/// *before* any hardware runs, results are bit-identical for every
-/// `SearchContext::workers` count — parallelism here is pure wall-clock.
-/// (`SearchContext::eval_batch` is ignored; the generation slice is the
-/// natural batch.)
+/// pipeline (streamed onto `SearchContext::executor`): since the slice's
+/// membership is fixed by surrogate ranking *before* any hardware runs,
+/// results are bit-identical for every executor width — parallelism here
+/// is pure wall-clock. (`SearchContext::eval_batch` is ignored; the
+/// generation slice is the natural batch.)
 pub struct EvolutionaryStrategy {
     pub cfg: EvoConfig,
 }

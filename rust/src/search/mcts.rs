@@ -20,10 +20,15 @@
 //! up to `eval_batch` leaves are selected and expanded under *virtual
 //! loss* — each selected path temporarily gains visits without reward, so
 //! consecutive selections within one batch diverge instead of piling onto
-//! the same leaf — and the new children are measured concurrently through
-//! the [`super::common::BatchEvaluator`] worker pool. With
+//! the same leaf. Each leaf's hardware measurement is **streamed onto the
+//! persistent executor as leaves are selected** (the crate-internal
+//! `PlannedBatch`): selection of leaf k+1 overlaps the measurement of
+//! leaf k, and the executor's long-lived workers stay hot across
+//! iterations instead of being respawned per batch. The plan
+//! (cache probes, sample numbers, seeds) is laid down serially in
+//! selection order and results fold by plan index, so with
 //! `eval_batch = 1` the loop is the original serial search, bit-for-bit,
-//! for any worker count.
+//! for any executor width.
 
 use std::collections::{HashMap, HashSet};
 
@@ -126,11 +131,11 @@ pub fn mcts_search_warm(
 /// a different subtree. Removed before real backpropagation.
 const VIRTUAL_LOSS: f64 = 1.0;
 
-/// A newly expanded child awaiting its batched hardware measurement.
+/// A newly expanded child whose hardware measurement is in flight on the
+/// executor (submitted at selection time; folded at iteration end).
 struct PendingLeaf {
     parent: usize,
     sched: Schedule,
-    fp: u64,
     /// Expansion step at selection time (seeds the rollout scoring).
     step: usize,
     /// Node path leaf→root carrying this leaf's virtual loss.
@@ -246,6 +251,14 @@ impl SearchStrategy for MctsStrategy<'_> {
             // In-flight expansions per parent: pending children are not in
             // the tree yet, so the branching limit must count them too.
             let mut pending_children: HashMap<usize, usize> = HashMap::new();
+            // Leaves stream onto the executor as they are selected: the
+            // batch plan (cache probes, sample numbers → seeds) is laid
+            // down serially in selection order, while measurements run on
+            // the persistent workers concurrently with later selections.
+            // (A lone leaf — eval_batch = 1 — runs inline at fold instead:
+            // the executor's lazy first dispatch keeps the serial default
+            // free of any queue traffic.)
+            let mut batch = ev.begin_batch();
             while pending.len() < batch_size && sterile <= 200 {
                 step += 1;
                 // ---- selection: UCT descent to an expandable node ----------
@@ -322,6 +335,15 @@ impl SearchStrategy for MctsStrategy<'_> {
                 }
                 sterile = 0;
 
+                // Plan + submit the leaf's measurement right now (the
+                // dedup fingerprint doubles as the measurement-cache
+                // key). A plan-time budget rejection means no further
+                // leaf is affordable either — stop collecting; the outer
+                // loop exits once the folded batch drains the budget.
+                if !batch.submit(&child_sched, Some(fp)) {
+                    break;
+                }
+
                 // Virtual loss: visits without reward along the selected
                 // path, so the next selection of this batch diverges. A
                 // batch of one never re-selects, so it skips the loss
@@ -342,7 +364,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                     Vec::new()
                 };
                 *pending_children.entry(cur).or_insert(0) += 1;
-                pending.push(PendingLeaf { parent: cur, sched: child_sched, fp, step, path });
+                pending.push(PendingLeaf { parent: cur, sched: child_sched, step, path });
             }
 
             // Real statistics flow below; lift the provisional losses first.
@@ -351,21 +373,21 @@ impl SearchStrategy for MctsStrategy<'_> {
                     nodes[i].n -= VIRTUAL_LOSS;
                 }
             }
+
+            // ---- fold the batch: one sample per fresh leaf -----------------
+            // Waits for the in-flight measurements and folds them in
+            // selection order — bit-identical to the serial loop.
+            let lats = {
+                let cands: Vec<&Schedule> = pending.iter().map(|p| &p.sched).collect();
+                batch.finish(&cands)
+            };
             if pending.is_empty() {
                 continue; // saturated or out of legal moves; loop guards decide
             }
 
-            // ---- batched measurement: one sample per fresh leaf ------------
-            // The dedup fingerprint doubles as the measurement-cache key.
-            let lats = {
-                let cands: Vec<(&Schedule, u64)> =
-                    pending.iter().map(|p| (&p.sched, p.fp)).collect();
-                ev.measure_batch_with_fingerprints(&cands)
-            };
-
             for (p, lat) in pending.into_iter().zip(lats) {
                 if lat.is_none() {
-                    break; // budget exhausted mid-batch; outer loop exits
+                    break; // unreachable: every pending leaf was planned
                 }
 
                 // ---- rollout: random continuation scored by the surrogate --

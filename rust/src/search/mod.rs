@@ -2,10 +2,10 @@
 //! LLM-guided via a pluggable [`ProposalPolicy`]) and the TVM-style
 //! Evolutionary Search baseline, unified behind the [`SearchStrategy`]
 //! trait over a [`SearchContext`]. All strategies meter hardware
-//! measurements through [`common::Evaluator`] — batched across a worker
-//! pool by [`common::BatchEvaluator`] when `SearchContext::workers > 1` —
-//! producing the speedup-vs-samples curves the paper's figures and tables
-//! are built from.
+//! measurements through [`common::Evaluator`] — planned and streamed onto
+//! the persistent `util::executor::Executor` by [`common::BatchEvaluator`]
+//! (its crate-internal `PlannedBatch`) — producing the speedup-vs-samples
+//! curves the paper's figures and tables are built from.
 //!
 //! Warm starts ([`WarmStart`] traces from the tuning database) seed the
 //! MCTS root frontier / the evolutionary population through one shared
@@ -13,11 +13,12 @@
 //! `db::MeasureCache` makes re-measurements of known programs cost zero
 //! samples; [`SearchResult`] reports the cache hit/miss counts.
 //!
-//! Determinism: `workers` never changes results (measurement seeds are
-//! fixed at plan time); `eval_batch > 1` switches MCTS to leaf-parallel
-//! expansion, which changes the trajectory but stays bit-reproducible per
-//! seed. The legacy free functions (`mcts_search*`, `evolutionary_search*`)
-//! wrap the strategies with a serial context.
+//! Determinism: the executor width never changes results (measurement
+//! seeds are fixed at plan time and results fold by plan index);
+//! `eval_batch > 1` switches MCTS to leaf-parallel expansion, which
+//! changes the trajectory but stays bit-reproducible per seed. The legacy
+//! free functions (`mcts_search*`, `evolutionary_search*`) wrap the
+//! strategies with a serial context.
 
 pub mod common;
 pub mod evolutionary;

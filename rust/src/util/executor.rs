@@ -1,0 +1,574 @@
+//! Persistent work-stealing executor — the one scheduler behind every
+//! parallel site in the crate.
+//!
+//! Before PR 5 each parallel site (batched cost-model evaluation, session
+//! repeats, `rcc serve --tune` model fleets) spawned and joined fresh
+//! scoped threads per call, so MCTS workers went cold between iterations
+//! and nested sites (repeats × `eval_batch` × models) multiplied into
+//! `workers²` OS threads with no global view. The [`Executor`] replaces
+//! all of that with one long-lived pool:
+//!
+//! - **Persistent workers.** `Executor::new(workers)` spawns
+//!   `workers - 1` long-lived threads (the submitting thread is the
+//!   remaining worker — see *helping* below). They stay hot for the
+//!   lifetime of the executor instead of being re-created per batch.
+//! - **Per-worker deques with stealing.** Submitted tasks land round-robin
+//!   on per-worker deques; a worker pops its own deque newest-first (its
+//!   own nested subtasks run soonest) and steals oldest-first from the
+//!   others when idle, so an imbalanced batch never strands cores.
+//! - **Deterministic fold.** Work is submitted in *task groups*
+//!   ([`Executor::run`] / [`Executor::group`]): every task's output lands
+//!   in a result slot chosen by submission index, never by completion
+//!   order. Callers fix all order-sensitive state (measurement seeds,
+//!   sample numbers) at plan time, so the scheduler only ever changes
+//!   wall-clock — the PR 2/3 determinism contract (`workers` never
+//!   changes results; `workers = 1` is the exact serial path, inline, no
+//!   threads) survives verbatim.
+//! - **Nesting without oversubscription.** A task running on a worker may
+//!   submit its own group: while a group is unfinished, its submitter
+//!   *helps* — it pops and runs queued tasks (its own group's or any
+//!   other's) instead of blocking. Total concurrency therefore stays at
+//!   `workers` no matter how deeply session repeats, evaluation batches
+//!   and model fleets nest, and a waiting submitter can never deadlock
+//!   the pool (every waiter is also an executor).
+//! - **Panic propagation.** A panicking task marks its group; the
+//!   submitter re-raises the payload after the group drains. A panic
+//!   fails the submitting group — it never hangs the executor or poisons
+//!   the worker threads (workers run every task under `catch_unwind`).
+//!
+//! # Safety
+//!
+//! Group tasks may borrow the submitter's stack (`&dyn CostModel`,
+//! slices, caches). Internally each task is boxed and its lifetime erased
+//! to `'static` before it is queued — sound because a [`TaskGroup`] never
+//! lets those borrows outlive it: both [`TaskGroup::wait`] and its `Drop`
+//! run the group to completion (executing tasks on the calling thread if
+//! need be) before returning. The one obligation on callers inside this
+//! crate: never `mem::forget` a `TaskGroup`.
+
+use std::collections::VecDeque;
+use std::marker::PhantomData;
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// A queued task with its lifetime erased (see module-level Safety notes).
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// State shared between the executor handle, its worker threads and every
+/// task group (groups hold their own `Arc`, so a group can finish — by
+/// helping — even while the executor itself is being dropped).
+struct Shared {
+    /// One deque per worker thread; submitters distribute round-robin.
+    deques: Vec<Mutex<VecDeque<Job>>>,
+    /// Queued-but-unclaimed jobs (wakes sleeping workers cheaply).
+    pending: AtomicUsize,
+    /// Group submitters currently parked on `done_cv` — lets the per-task
+    /// completion path skip the global lock entirely when nobody waits.
+    /// The waiter/completion handshake is SeqCst (Dekker-style): a waiter
+    /// registers *then* re-checks its counter under `sync`; a completion
+    /// decrements the counter *then* loads `waiters` — so one of them
+    /// always sees the other.
+    waiters: AtomicUsize,
+    /// Round-robin submission cursor.
+    cursor: AtomicUsize,
+    shutdown: AtomicBool,
+    /// Sleep coordination. Two condvars under one mutex so wakeups are
+    /// targeted: a push wakes exactly one idle worker (`work_cv`,
+    /// `notify_one` — no thundering herd racing for one job), a
+    /// completion wakes only group waiters (`done_cv`; there are at most
+    /// a handful). Sleepers re-check their counter under `sync` before
+    /// waiting, so notifications cannot be lost; the wait timeouts are
+    /// backstops only.
+    sync: Mutex<()>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+impl Shared {
+    fn push(&self, job: Job) {
+        debug_assert!(!self.deques.is_empty(), "serial executors never queue");
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.deques.len();
+        self.deques[i].lock().unwrap().push_back(job);
+        self.pending.fetch_add(1, Ordering::Release);
+        let _g = self.sync.lock().unwrap();
+        self.work_cv.notify_one();
+    }
+
+    /// Worker pop: own deque newest-first, then steal oldest-first.
+    fn pop(&self, home: usize) -> Option<Job> {
+        let n = self.deques.len();
+        if n == 0 {
+            return None;
+        }
+        if let Some(j) = self.deques[home % n].lock().unwrap().pop_back() {
+            self.pending.fetch_sub(1, Ordering::AcqRel);
+            return Some(j);
+        }
+        for k in 1..n {
+            if let Some(j) = self.deques[(home + k) % n].lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Steal for a helping submitter (oldest-first across all deques).
+    fn steal(&self) -> Option<Job> {
+        for q in &self.deques {
+            if let Some(j) = q.lock().unwrap().pop_front() {
+                self.pending.fetch_sub(1, Ordering::AcqRel);
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// A task finished: wake any group waiter to re-check its counter.
+    /// Lock-free in the common no-waiter case (see `waiters`).
+    fn notify_done(&self) {
+        if self.waiters.load(Ordering::SeqCst) == 0 {
+            return;
+        }
+        let _g = self.sync.lock().unwrap();
+        self.done_cv.notify_all();
+    }
+
+    /// Shutdown / teardown: wake everything.
+    fn notify_all(&self) {
+        let _g = self.sync.lock().unwrap();
+        self.work_cv.notify_all();
+        self.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>, home: usize) {
+    loop {
+        if let Some(job) = shared.pop(home) {
+            job(); // the job's epilogue notifies its waiting group itself
+            continue;
+        }
+        let g = shared.sync.lock().unwrap();
+        if shared.shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        if shared.pending.load(Ordering::Acquire) == 0 {
+            // Timeout is a backstop only; pushes notify under `sync`.
+            let _ = shared.work_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+        }
+    }
+}
+
+/// Per-group completion state shared with every queued task of the group.
+struct GroupCore {
+    remaining: AtomicUsize,
+    /// First panic payload from any task of this group.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+/// The crate-wide persistent executor. Construct once per session (or
+/// process) with [`Executor::new`] and share the `Arc` across every
+/// parallel site; see the module docs for the scheduling model.
+pub struct Executor {
+    shared: Arc<Shared>,
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    workers: usize,
+}
+
+impl std::fmt::Debug for Executor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executor").field("workers", &self.workers).finish()
+    }
+}
+
+impl Executor {
+    /// An executor with `workers` total parallelism: `workers - 1`
+    /// persistent threads plus the submitting thread (which helps while
+    /// waiting). `workers <= 1` spawns nothing — every group runs inline,
+    /// the exact serial path.
+    pub fn new(workers: usize) -> Arc<Executor> {
+        let workers = workers.max(1);
+        let threads = workers - 1;
+        let shared = Arc::new(Shared {
+            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            pending: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            sync: Mutex::new(()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..threads)
+            .map(|i| {
+                let s = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("rcc-exec-{i}"))
+                    .spawn(move || worker_loop(s, i))
+                    .expect("spawning executor worker thread")
+            })
+            .collect();
+        Arc::new(Executor { shared, handles: Mutex::new(handles), workers })
+    }
+
+    /// The inline/serial executor (`workers = 1`): no threads, every task
+    /// runs on the submitting thread in submission order.
+    pub fn serial() -> Arc<Executor> {
+        Executor::new(1)
+    }
+
+    /// Configured total parallelism (threads + the helping submitter).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Whether groups run inline on the submitter (no worker threads).
+    pub fn is_serial(&self) -> bool {
+        self.workers <= 1
+    }
+
+    /// An incremental task group: submit tasks one at a time (they start
+    /// running once a second task arrives — see lazy first dispatch),
+    /// then [`TaskGroup::wait`] for all results in submission order. This
+    /// is how leaf-parallel MCTS overlaps leaf selection with measurement.
+    ///
+    /// Crate-private on purpose: a caller-owned group of borrowing tasks
+    /// is only sound while the group is never leaked (`mem::forget`),
+    /// which the compiler cannot enforce — in-crate call sites uphold it,
+    /// external users get the sound [`Executor::run`] (which never hands
+    /// the group out).
+    pub(crate) fn group<'scope, T: Send + 'scope>(&self) -> TaskGroup<'scope, T> {
+        TaskGroup {
+            shared: Arc::clone(&self.shared),
+            serial: self.is_serial(),
+            slots: Vec::new(),
+            core: Arc::new(GroupCore {
+                remaining: AtomicUsize::new(0),
+                panic: Mutex::new(None),
+            }),
+            deferred: None,
+            _scope: PhantomData,
+        }
+    }
+
+    /// Run a batch of tasks and return their outputs **by submission
+    /// index** (never completion order). Blocks until every task
+    /// finished, helping with queued work meanwhile; re-raises the first
+    /// task panic after the group drains.
+    pub fn run<'scope, T, F>(&self, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        let mut group = self.group::<T>();
+        for t in tasks {
+            group.submit(t);
+        }
+        group.wait()
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.shared.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// An in-flight task group (see [`Executor::group`]). Results land by
+/// submission index. Dropping an unfinished group blocks until its tasks
+/// drain (discarding results), so borrowed task inputs can never dangle.
+pub struct TaskGroup<'scope, T: Send + 'scope> {
+    shared: Arc<Shared>,
+    serial: bool,
+    slots: Vec<Arc<Mutex<Option<T>>>>,
+    core: Arc<GroupCore>,
+    /// Lazy first dispatch: the first parallel task is held back until a
+    /// second one arrives. A group that only ever gets one task (the
+    /// default `eval_batch = 1` measurement path) then runs it inline at
+    /// `wait`, with zero queue/wakeup traffic — the old single-job
+    /// shortcut, preserved — while multi-task groups flush it on the
+    /// second submit and stream from there.
+    deferred: Option<Box<dyn FnOnce() + Send + 'scope>>,
+    /// Invariant over `'scope`: tasks may borrow the submitter's stack.
+    _scope: PhantomData<fn(&'scope ()) -> &'scope ()>,
+}
+
+impl<'scope, T: Send + 'scope> TaskGroup<'scope, T> {
+    /// Number of tasks submitted so far.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// Submit one task. On a serial executor it runs inline right here
+    /// (panics propagate directly — the exact serial path); otherwise it
+    /// is queued for the worker pool and runs concurrently with further
+    /// submissions.
+    pub fn submit<F>(&mut self, f: F)
+    where
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        let slot = Arc::new(Mutex::new(None));
+        self.slots.push(Arc::clone(&slot));
+        if self.serial {
+            *slot.lock().unwrap() = Some(f());
+            return;
+        }
+        // Count before queueing: the job may finish before we return.
+        self.core.remaining.fetch_add(1, Ordering::AcqRel);
+        let core = Arc::clone(&self.core);
+        let shared = Arc::clone(&self.shared);
+        let job: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+            match panic::catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => *slot.lock().unwrap() = Some(v),
+                Err(p) => {
+                    core.panic.lock().unwrap().get_or_insert(p);
+                }
+            }
+            // SeqCst so a concurrently-registering waiter and this
+            // completion cannot miss each other (see `Shared::waiters`).
+            core.remaining.fetch_sub(1, Ordering::SeqCst);
+            shared.notify_done();
+        });
+        // Lazy first dispatch (see the `deferred` field): the group's
+        // first task is held on the submitter until a second one proves
+        // the group is worth fanning out.
+        match self.deferred.take() {
+            Some(prev) => {
+                self.dispatch(prev);
+                self.dispatch(job);
+            }
+            None if self.slots.len() == 1 => self.deferred = Some(job),
+            None => self.dispatch(job),
+        }
+    }
+
+    /// Queue one wrapped task on the worker pool.
+    fn dispatch(&self, job: Box<dyn FnOnce() + Send + 'scope>) {
+        // SAFETY: lifetime erasure only — same layout. The group never
+        // outlives `'scope` with tasks still queued or running: `wait`
+        // and `Drop` both run the group to completion first (module docs).
+        let job: Job = unsafe {
+            std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
+        };
+        self.shared.push(job);
+    }
+
+    /// Run queued work until every task of this group has finished.
+    fn join(&mut self) {
+        if let Some(job) = self.deferred.take() {
+            job(); // single-task group: run inline, no executor traffic
+        }
+        while self.core.remaining.load(Ordering::Acquire) > 0 {
+            // Help: run anything queued (this group's tasks or another's
+            // — every waiter is also an executor, so nesting can't
+            // deadlock and total concurrency stays at `workers`). The
+            // job's own epilogue notifies whichever group it belongs to.
+            if let Some(job) = self.shared.steal() {
+                job();
+                continue;
+            }
+            // Nothing to steal: our tasks are in flight on other workers.
+            // Register as a waiter *before* the final re-check, so a
+            // completion that just decremented `remaining` either sees us
+            // (and notifies under `sync`, which we hold until parked) or
+            // happened early enough that our re-check sees zero.
+            let g = self.shared.sync.lock().unwrap();
+            self.shared.waiters.fetch_add(1, Ordering::SeqCst);
+            if self.core.remaining.load(Ordering::SeqCst) > 0
+                && self.shared.pending.load(Ordering::Acquire) == 0
+            {
+                let _ = self
+                    .shared
+                    .done_cv
+                    .wait_timeout(g, Duration::from_millis(1))
+                    .unwrap();
+            }
+            self.shared.waiters.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Block until every task finished (helping meanwhile) and return the
+    /// results in submission order. Re-raises the first task panic.
+    pub fn wait(mut self) -> Vec<T> {
+        self.join();
+        if let Some(p) = self.core.panic.lock().unwrap().take() {
+            panic::resume_unwind(p);
+        }
+        std::mem::take(&mut self.slots)
+            .into_iter()
+            .map(|s| s.lock().unwrap().take().expect("task group slot filled"))
+            .collect()
+    }
+}
+
+impl<'scope, T: Send + 'scope> Drop for TaskGroup<'scope, T> {
+    fn drop(&mut self) {
+        // Run to completion even when abandoned (or unwinding), so tasks
+        // borrowing the submitter's stack can never outlive it. Panic
+        // payloads of an abandoned group are dropped, not re-raised.
+        self.join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_land_by_submission_index_for_any_worker_count() {
+        for workers in [1, 2, 3, 8] {
+            let exec = Executor::new(workers);
+            let tasks: Vec<_> = (0..23usize).map(|i| move || i * i).collect();
+            let out = exec.run(tasks);
+            assert_eq!(
+                out,
+                (0..23usize).map(|i| i * i).collect::<Vec<_>>(),
+                "workers={workers}"
+            );
+        }
+    }
+
+    #[test]
+    fn serial_executor_runs_inline_in_order() {
+        let exec = Executor::serial();
+        assert!(exec.is_serial());
+        let order = Mutex::new(Vec::new());
+        let tasks: Vec<_> = (0..5usize)
+            .map(|i| {
+                let order = &order;
+                move || {
+                    order.lock().unwrap().push(i);
+                    i
+                }
+            })
+            .collect();
+        let out = exec.run(tasks);
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2, 3, 4], "strict submission order");
+    }
+
+    #[test]
+    fn tasks_can_borrow_the_submitters_stack() {
+        let exec = Executor::new(4);
+        let data: Vec<u64> = (0..100).collect();
+        let slice = &data;
+        let tasks: Vec<_> = (0..10usize)
+            .map(|i| move || slice[i * 10..(i + 1) * 10].iter().sum::<u64>())
+            .collect();
+        let out = exec.run(tasks);
+        assert_eq!(out.iter().sum::<u64>(), data.iter().sum::<u64>());
+    }
+
+    #[test]
+    fn nested_groups_share_one_pool_without_deadlock() {
+        let exec = Executor::new(3);
+        // 4 outer tasks × 6 inner tasks on a 3-wide pool: submitters must
+        // help or this oversubscribed nest would starve.
+        let exec_ref = &exec;
+        let outer: Vec<_> = (0..4u64)
+            .map(|i| {
+                move || {
+                    let inner: Vec<_> =
+                        (0..6u64).map(|j| move || i * 100 + j).collect();
+                    exec_ref.run(inner).into_iter().sum::<u64>()
+                }
+            })
+            .collect();
+        let out = exec.run(outer);
+        let expect: Vec<u64> = (0..4u64).map(|i| (0..6u64).map(|j| i * 100 + j).sum()).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn single_task_group_runs_inline_on_the_submitter() {
+        // Lazy first dispatch: a group that only ever gets one task must
+        // execute it on the calling thread (the old single-job shortcut),
+        // not round-trip through the worker deques.
+        let exec = Executor::new(4);
+        let me = std::thread::current().id();
+        let mut g = exec.group::<std::thread::ThreadId>();
+        g.submit(|| std::thread::current().id());
+        assert_eq!(g.wait(), vec![me], "lone task must run inline at wait");
+    }
+
+    #[test]
+    fn incremental_group_overlaps_submission_and_execution() {
+        let exec = Executor::new(4);
+        let mut group = exec.group::<usize>();
+        for i in 0..16usize {
+            group.submit(move || i + 1);
+        }
+        assert_eq!(group.len(), 16);
+        let out = group.wait();
+        assert_eq!(out, (1..=16).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panicking_task_fails_the_group_not_the_executor() {
+        let exec = Executor::new(4);
+        let exec_ref = &exec;
+        let attempt = panic::catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                Box::new(|| 1),
+                Box::new(|| panic!("injected task failure")),
+                Box::new(|| 3),
+            ];
+            exec_ref.run(tasks)
+        }));
+        assert!(attempt.is_err(), "group must re-raise the task panic");
+        // The executor survives and keeps scheduling correctly.
+        let out = exec.run((0..8usize).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out, (0..8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn panic_in_nested_group_propagates_to_the_outer_group() {
+        let exec = Executor::new(4);
+        let exec_ref = &exec;
+        let attempt = panic::catch_unwind(AssertUnwindSafe(|| {
+            exec_ref.run(vec![move || {
+                let inner: Vec<Box<dyn FnOnce() -> usize + Send>> =
+                    vec![Box::new(|| panic!("inner failure"))];
+                exec_ref.run(inner)
+            }])
+        }));
+        assert!(attempt.is_err());
+        assert_eq!(exec.run(vec![|| 7usize]), vec![7]);
+    }
+
+    #[test]
+    fn dropping_an_unfinished_group_drains_it() {
+        let exec = Executor::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let mut group = exec.group::<()>();
+            for _ in 0..32 {
+                let c = Arc::clone(&counter);
+                group.submit(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+            // Dropped without wait(): must still run everything.
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn many_more_tasks_than_workers() {
+        let exec = Executor::new(2);
+        let out = exec.run((0..500usize).map(|i| move || i % 7).collect::<Vec<_>>());
+        assert_eq!(out.len(), 500);
+        assert!(out.iter().enumerate().all(|(i, &v)| v == i % 7));
+    }
+}

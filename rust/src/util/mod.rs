@@ -1,17 +1,18 @@
 //! Utility substrate: RNG, statistics, JSON, CLI parsing, config files,
-//! bench timing and the scoped worker pool. These stand in for the
-//! rand/serde/clap/criterion crates, which are unavailable in this
-//! offline environment.
+//! bench timing and the persistent work-stealing executor. These stand in
+//! for the rand/serde/clap/criterion/rayon crates, which are unavailable
+//! in this offline environment.
 
 pub mod bench;
 pub mod cli;
+pub mod executor;
 pub mod json;
-pub mod pool;
 pub mod prop;
 pub mod pvec;
 pub mod rng;
 pub mod stats;
 pub mod tomlmini;
 
+pub use executor::Executor;
 pub use json::Json;
 pub use rng::Pcg;

@@ -1,0 +1,187 @@
+//! Stress tests of the persistent work-stealing executor (PR 5) at full
+//! coordinator depth: repeats × `eval_batch` × `tune_models` nested on one
+//! shared executor must (a) complete without deadlock or oversubscription
+//! pathologies, (b) produce bit-identical results to the fully serial
+//! path, and (c) fail loudly — a panicking task fails its submitting
+//! group instead of hanging the pool.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use reasoning_compiler::coordinator::{run_session, tune_models, Strategy, TuneConfig};
+use reasoning_compiler::search::SearchResult;
+use reasoning_compiler::util::executor::Executor;
+
+fn curve_key(r: &SearchResult) -> Vec<(usize, u64)> {
+    r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect()
+}
+
+/// repeats × eval_batch nested on one session executor: a wide executor
+/// must reproduce the serial session bit-for-bit (latencies, curves,
+/// sample counts, cache accounting).
+#[test]
+fn nested_repeats_and_eval_batch_match_serial_bit_for_bit() {
+    let base = TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 25,
+        repeats: 3,
+        eval_batch: 2,
+        ..Default::default()
+    };
+    let serial = run_session(&TuneConfig { workers: 1, ..base.clone() }).unwrap();
+    for workers in [4, 8] {
+        let wide = run_session(&TuneConfig { workers, ..base.clone() }).unwrap();
+        assert_eq!(serial.runs.len(), wide.runs.len());
+        for (s, w) in serial.runs.iter().zip(&wide.runs) {
+            assert_eq!(s.best_latency.to_bits(), w.best_latency.to_bits(), "workers={workers}");
+            assert_eq!(curve_key(s), curve_key(w), "workers={workers}");
+            assert_eq!(s.samples_used, w.samples_used, "workers={workers}");
+            assert_eq!(
+                (s.cache_hits, s.cache_misses),
+                (w.cache_hits, w.cache_misses),
+                "workers={workers}"
+            );
+        }
+    }
+}
+
+/// The full serve-fleet nest — tune_models × repeats × eval_batch, all on
+/// one shared executor plus the shared measurement pool — against the
+/// serial executor. Distinct workloads keep the pool deterministic, so
+/// the whole fleet must be bit-identical at every width.
+#[test]
+fn tune_models_fleet_is_bit_identical_across_executor_widths() {
+    let models = vec![
+        "deepseek_moe".to_string(),
+        "llama4_mlp".to_string(),
+        "not_a_workload".to_string(), // skipped, never an error
+    ];
+    let mk = |workers: usize| TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 20,
+        repeats: 2,
+        eval_batch: 2,
+        workers,
+        db_path: None,
+        ..Default::default()
+    };
+    let serial = tune_models(&models, &mk(1)).unwrap();
+    assert_eq!(serial.sessions.len(), 2, "unknown model skipped");
+    let wide = tune_models(&models, &mk(8)).unwrap();
+    assert_eq!(serial.sessions.len(), wide.sessions.len());
+    for ((ms, ss), (mw, sw)) in serial.sessions.iter().zip(&wide.sessions) {
+        assert_eq!(ms, mw, "model order is input order");
+        for (a, b) in ss.runs.iter().zip(&sw.runs) {
+            assert_eq!(a.best_latency.to_bits(), b.best_latency.to_bits(), "{ms}");
+            assert_eq!(curve_key(a), curve_key(b), "{ms}");
+            assert_eq!(a.samples_used, b.samples_used, "{ms}");
+        }
+    }
+    assert_eq!(serial.pool_entries, wide.pool_entries, "pool content is deterministic");
+    assert_eq!(serial.pooled_hits, wide.pooled_hits);
+    assert!(serial.pool_entries > 0, "sessions write their measurements into the pool");
+}
+
+/// Models aliasing one workload share a session — the aliased fingerprints
+/// are measured once, and both aliases report the identical session.
+#[test]
+fn aliased_models_share_one_session_and_one_measurement_set() {
+    let models = vec!["deepseek_moe".to_string(), "deepseek_moe".to_string()];
+    let fleet = tune_models(
+        &models,
+        &TuneConfig {
+            strategy: Strategy::Mcts,
+            budget: 15,
+            repeats: 1,
+            workers: 4,
+            db_path: None,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(fleet.sessions.len(), 2, "both aliases are reported");
+    let (a, b) = (&fleet.sessions[0].1, &fleet.sessions[1].1);
+    assert_eq!(a.runs.len(), b.runs.len());
+    for (ra, rb) in a.runs.iter().zip(&b.runs) {
+        assert_eq!(ra.best_latency.to_bits(), rb.best_latency.to_bits());
+        assert_eq!(ra.samples_used, rb.samples_used);
+    }
+    // One session's worth of samples, not two: the alias consumed zero.
+    let total: usize = a.runs.iter().map(|r| r.samples_used).sum();
+    assert!(total <= 15, "aliased model must not re-measure: {total}");
+}
+
+/// A panicking task fails the submitting group (the panic propagates to
+/// the waiter) and leaves the executor fully usable — it must never hang
+/// the pool or poison the worker threads.
+#[test]
+fn panicking_task_fails_the_group_and_spares_the_executor() {
+    let exec = Executor::new(4);
+    let exec_ref = &exec;
+    let completed = AtomicUsize::new(0);
+    let completed_ref = &completed;
+
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..8)
+            .map(|i| {
+                let b: Box<dyn FnOnce() -> usize + Send> = Box::new(move || {
+                    if i == 5 {
+                        panic!("injected failure in task {i}");
+                    }
+                    completed_ref.fetch_add(1, Ordering::SeqCst);
+                    i
+                });
+                b
+            })
+            .collect();
+        exec_ref.run(tasks)
+    }));
+    assert!(outcome.is_err(), "the group must re-raise the task panic");
+
+    // The pool survives: a fresh (even nested) group still completes and
+    // still folds deterministically by submission index.
+    let nested: Vec<usize> = exec.run(
+        (0..6usize)
+            .map(|i| {
+                move || {
+                    exec_ref
+                        .run((0..4usize).map(|j| move || i * 10 + j).collect::<Vec<_>>())
+                        .into_iter()
+                        .sum::<usize>()
+                }
+            })
+            .collect(),
+    );
+    let expect: Vec<usize> =
+        (0..6).map(|i| (0..4).map(|j| i * 10 + j).sum::<usize>()).collect();
+    assert_eq!(nested, expect);
+}
+
+/// A panic inside a *session* (nested two groups deep) surfaces as a
+/// panic from the outer call, not a hang — exercised through the public
+/// coordinator API by tuning with a budget that makes the strategy panic
+/// impossible, then injecting the panic at the executor layer directly
+/// under coordinator-shaped nesting.
+#[test]
+fn nested_group_panic_propagates_outward() {
+    let exec = Executor::new(3);
+    let exec_ref = &exec;
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        let outer: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+            Box::new(move || {
+                // Inner group: one member panics mid-fleet.
+                let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = vec![
+                    Box::new(|| 1),
+                    Box::new(|| panic!("inner repeat failure")),
+                ];
+                exec_ref.run(tasks).into_iter().sum::<usize>()
+            }),
+            Box::new(move || 7usize),
+        ];
+        exec_ref.run(outer)
+    }));
+    assert!(outcome.is_err(), "inner-group panic must reach the outer waiter");
+    let after: Vec<Box<dyn FnOnce() -> usize + Send>> =
+        vec![Box::new(|| 41usize), Box::new(|| 1usize)];
+    assert_eq!(exec.run(after), vec![41, 1]);
+}

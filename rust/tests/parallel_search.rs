@@ -1,7 +1,8 @@
-//! Integration tests of the parallel batched evaluation pipeline (PR 2):
-//! the determinism contract (`workers` never changes results; leaf-parallel
-//! MCTS is bit-reproducible per seed), concurrent measurement-cache
-//! accounting, and concurrent sessions sharing one file-locked database.
+//! Integration tests of the parallel batched evaluation pipeline (PR 2,
+//! re-based onto the persistent executor in PR 5): the determinism
+//! contract (executor width never changes results; leaf-parallel MCTS is
+//! bit-reproducible per seed), concurrent measurement-cache accounting,
+//! and concurrent sessions sharing one file-locked database.
 
 use std::path::PathBuf;
 
@@ -15,6 +16,7 @@ use reasoning_compiler::search::{
 };
 use reasoning_compiler::tir::workload::WorkloadId;
 use reasoning_compiler::tir::Program;
+use reasoning_compiler::util::executor::Executor;
 
 fn curve_key(r: &SearchResult) -> Vec<(usize, u64)> {
     r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect()
@@ -40,7 +42,7 @@ fn models(workload: WorkloadId) -> Models {
 fn mcts_ctx_run(m: &Models, budget: usize, seed: u64, workers: usize, eval_batch: usize) -> SearchResult {
     let mut ctx =
         SearchContext::new(&m.base, &m.surrogate, &m.hardware, &m.platform, budget, seed);
-    ctx.workers = workers;
+    ctx.executor = Executor::new(workers);
     ctx.eval_batch = eval_batch;
     let mut policy = RandomPolicy::new(seed);
     MctsStrategy::new(MctsConfig::default(), &mut policy).search(&ctx)
@@ -49,7 +51,7 @@ fn mcts_ctx_run(m: &Models, budget: usize, seed: u64, workers: usize, eval_batch
 fn evo_ctx_run(m: &Models, budget: usize, seed: u64, workers: usize) -> SearchResult {
     let mut ctx =
         SearchContext::new(&m.base, &m.surrogate, &m.hardware, &m.platform, budget, seed);
-    ctx.workers = workers;
+    ctx.executor = Executor::new(workers);
     EvolutionaryStrategy::new(EvoConfig::default()).search(&ctx)
 }
 
