@@ -18,6 +18,7 @@ use reasoning_compiler::cost::{
     access, analytical, latency_batch, simulator, CostModel, HardwareModel, LatencyJob, Platform,
 };
 use reasoning_compiler::db::{program_fingerprint, workload_fingerprint, MeasureCache};
+use reasoning_compiler::obs;
 use reasoning_compiler::reasoning::{prompt::PromptContext, ModelProfile, SimulatedLlm};
 use reasoning_compiler::schedule::{sampler, Schedule, Transform};
 use reasoning_compiler::tir::WorkloadId;
@@ -27,10 +28,10 @@ use reasoning_compiler::util::json::{arr, num, s, Json};
 use reasoning_compiler::util::rng::Pcg;
 
 /// Dump all results as a JSON array for cross-PR perf tracking.
-fn write_json(results: &[BenchResult]) {
+fn write_json(results: &[BenchResult], tracing_overhead_pct: f64) {
     let path = std::env::var("RCC_BENCH_JSON")
         .unwrap_or_else(|_| "BENCH_micro_hotpaths.json".to_string());
-    let entries: Vec<Json> = results
+    let mut entries: Vec<Json> = results
         .iter()
         .map(|r| {
             let mut o = Json::obj();
@@ -40,6 +41,11 @@ fn write_json(results: &[BenchResult]) {
             o
         })
         .collect();
+    // Scalar acceptance number from the PR-6 observability work, kept in
+    // the same array so the artifact format stays a flat list of names.
+    let mut o = Json::obj();
+    o.set("name", s("tracing_overhead_pct")).set("value", num(tracing_overhead_pct));
+    entries.push(o);
     match std::fs::write(&path, arr(entries).to_pretty() + "\n") {
         Ok(()) => println!("\nwrote {path}"),
         Err(e) => eprintln!("\nfailed to write {path}: {e}"),
@@ -200,7 +206,7 @@ fn main() {
     //   `program_fingerprint`), and direct `simulator::simulate` (fresh
     //   `access::analyze` per stage per repeat).
     // The printed ratio is the PR-3 acceptance number (target >= 5x).
-    let hotpath_speedup = {
+    let (hotpath_speedup, tracing_overhead_pct) = {
         let attn = WorkloadId::Llama3Attention.build();
         let hw = HardwareModel::new(plat.clone());
         let mut deep = Schedule::new(attn);
@@ -250,14 +256,39 @@ fn main() {
         let speedup = uncached.mean_ns / incremental.mean_ns.max(1.0);
         results.push(incremental);
         results.push(uncached);
-        speedup
+
+        // Tracing-overhead variant (PR 6): the same depth-8 edge, each
+        // hardware repeat wrapped in a Measure span exactly as the batch
+        // evaluator does, timed with the recorder off and then on. The
+        // observability acceptance number: the live recorder must cost
+        // <3% on the densest span site in the codebase.
+        let traced_edge = || {
+            let child = deep.apply(step.clone()).unwrap();
+            let fp = program_fingerprint(&child.current);
+            let mut acc = 0.0;
+            for seed in 1..=20u64 {
+                let _sp = obs::span(obs::EventKind::Measure, seed);
+                acc += hw.latency(&child.current, seed);
+            }
+            (fp, acc)
+        };
+        obs::disable();
+        let trace_off = b.run("hotpath: depth-8 x20 with spans, recorder off", || traced_edge());
+        obs::enable();
+        let trace_on = b.run("hotpath: depth-8 x20 with spans, recorder on", || traced_edge());
+        obs::disable();
+        let _ = obs::drain(); // release the per-thread rings
+        let overhead_pct = (trace_on.median_ns / trace_off.median_ns.max(1.0) - 1.0) * 100.0;
+        results.push(trace_off);
+        results.push(trace_on);
+        (speedup, overhead_pct)
     };
 
     println!("\n== micro hot paths ==");
     for r in &results {
         println!("{}", r.report());
     }
-    write_json(&results);
+    write_json(&results, tracing_overhead_pct);
     println!(
         "\nbatched evaluation wall-clock speedup (4 workers vs serial, 64-candidate batch): {batch_speedup:.2}x"
     );
@@ -267,6 +298,10 @@ fn main() {
     println!(
         "incremental-evaluation speedup on the depth-8 hot path (uncached pre-PR path vs incremental): {hotpath_speedup:.2}x (target >= 5x) — {}",
         if hotpath_speedup >= 5.0 { "PASS" } else { "BELOW TARGET" }
+    );
+    println!(
+        "tracing overhead on the depth-8 hot path (recorder on vs off): {tracing_overhead_pct:.2}% (target < 3%) — {}",
+        if tracing_overhead_pct < 3.0 { "PASS" } else { "OVER" }
     );
     // §Perf acceptance: simulator throughput.
     let sim = &results[1];

@@ -103,6 +103,11 @@ pub struct TuneConfig {
     /// trajectory deterministically per seed; `0` = match the resolved
     /// worker count. Evolutionary search ignores this knob.
     pub eval_batch: usize,
+    /// Write a Chrome trace-event (Perfetto) JSON of the run to this path
+    /// (`[obs] trace` in TOML, `--trace` / `RCC_TRACE` on the CLI; CLI and
+    /// env win over the file). `None` leaves the recorder disabled —
+    /// tracing never changes results either way, only wall-clock.
+    pub trace_path: Option<String>,
 }
 
 /// Conventional database location used by the CLI when `--db` is not given.
@@ -131,6 +136,7 @@ impl Default for TuneConfig {
             share_repeat_cache: false,
             workers: 0,
             eval_batch: 1,
+            trace_path: None,
         }
     }
 }
@@ -196,6 +202,10 @@ impl TuneConfig {
                 .get_bool("db.share_repeat_cache", d.share_repeat_cache),
             workers: doc.get_usize("search.workers", d.workers),
             eval_batch: doc.get_usize("search.eval_batch", d.eval_batch),
+            trace_path: match doc.get_str("obs.trace", "") {
+                "" => d.trace_path,
+                p => Some(p.to_string()),
+            },
         }
     }
 
@@ -241,6 +251,9 @@ impl TuneConfig {
         }
         self.workers = args.opt_usize("workers", self.workers);
         self.eval_batch = args.opt_usize("eval-batch", self.eval_batch);
+        if let Some(p) = args.opt("trace") {
+            self.trace_path = Some(p.to_string());
+        }
     }
 }
 
@@ -385,6 +398,20 @@ history_depth = 3
         c.apply_cli(&args);
         assert_eq!(c.resolved_workers(), 4);
         assert_eq!(c.resolved_eval_batch(), 4, "eval_batch=0 follows workers");
+    }
+
+    #[test]
+    fn trace_knob_parses_and_overrides() {
+        assert_eq!(TuneConfig::default().trace_path, None);
+        let doc = Doc::parse("[obs]\ntrace = \"out/trace.json\"\n").unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.trace_path.as_deref(), Some("out/trace.json"));
+
+        let mut c = TuneConfig::default();
+        let args =
+            Args::parse("tune --trace /tmp/t.json".split_whitespace().map(String::from));
+        c.apply_cli(&args);
+        assert_eq!(c.trace_path.as_deref(), Some("/tmp/t.json"));
     }
 
     #[test]

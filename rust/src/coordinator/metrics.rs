@@ -3,7 +3,63 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use crate::util::rng::Pcg;
 use crate::util::stats::{percentile, Summary};
+
+/// Capacity of [`LatencyReservoir`]: enough samples for a stable p99
+/// (~10 expected tail samples) at constant memory.
+pub const LATENCY_RESERVOIR_CAP: usize = 1024;
+
+/// Bounded uniform sample of per-request latencies (Vitter's Algorithm R).
+/// A serving loop runs indefinitely, so keeping every latency would grow
+/// without bound; a reservoir keeps memory at O(cap) while percentiles
+/// stay estimates over the *full* history, not a recent window. The
+/// replacement RNG is seeded at construction, so the sample — and the
+/// reported p50/p99 — is deterministic for a given latency sequence.
+#[derive(Debug, Clone)]
+pub struct LatencyReservoir {
+    samples: Vec<f64>,
+    seen: u64,
+    rng: Pcg,
+}
+
+impl Default for LatencyReservoir {
+    fn default() -> Self {
+        LatencyReservoir { samples: Vec::new(), seen: 0, rng: Pcg::new(0x5EED_1A7E) }
+    }
+}
+
+impl LatencyReservoir {
+    pub fn record(&mut self, v: f64) {
+        self.seen += 1;
+        if self.samples.len() < LATENCY_RESERVOIR_CAP {
+            self.samples.push(v);
+        } else {
+            let j = self.rng.gen_range(self.seen as usize);
+            if j < LATENCY_RESERVOIR_CAP {
+                self.samples[j] = v;
+            }
+        }
+    }
+
+    /// Total latencies ever recorded (≥ the retained sample count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// The retained sample, unsorted (`percentile` sorts a copy).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+}
 
 /// Rolling metrics for one served model (artifact).
 #[derive(Debug, Clone, Default)]
@@ -11,8 +67,9 @@ pub struct ModelMetrics {
     pub requests: u64,
     pub batches: u64,
     pub batch_latency: Summary,
-    /// Per-request end-to-end latencies (seconds), kept for percentiles.
-    pub request_latencies: Vec<f64>,
+    /// Per-request end-to-end latencies (seconds), reservoir-sampled for
+    /// percentiles at bounded memory.
+    pub request_latencies: LatencyReservoir,
 }
 
 impl ModelMetrics {
@@ -21,16 +78,16 @@ impl ModelMetrics {
         self.batches += 1;
         self.batch_latency.record(exec_latency_s);
         for &w in request_waits {
-            self.request_latencies.push(w + exec_latency_s);
+            self.request_latencies.record(w + exec_latency_s);
         }
     }
 
     pub fn p50(&self) -> f64 {
-        percentile(&self.request_latencies, 50.0)
+        percentile(self.request_latencies.samples(), 50.0)
     }
 
     pub fn p99(&self) -> f64 {
-        percentile(&self.request_latencies, 99.0)
+        percentile(self.request_latencies.samples(), 99.0)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -117,5 +174,26 @@ mod tests {
         let report = m.report();
         assert!(report.contains("moe"));
         assert!(report.contains("total: 6 requests"));
+    }
+
+    #[test]
+    fn reservoir_bounds_memory_and_keeps_percentiles_stable() {
+        let mut r = LatencyReservoir::default();
+        for i in 0..10_000 {
+            r.record(i as f64 / 10_000.0); // uniform [0, 1)
+        }
+        assert_eq!(r.len(), LATENCY_RESERVOIR_CAP, "memory stays bounded");
+        assert_eq!(r.seen(), 10_000);
+        let p50 = percentile(r.samples(), 50.0);
+        let p99 = percentile(r.samples(), 99.0);
+        assert!((p50 - 0.5).abs() < 0.08, "p50 of uniform sample drifted: {p50}");
+        assert!(p99 > 0.9, "p99 of uniform sample drifted: {p99}");
+
+        // Fixed seed: the same latency sequence yields the same sample.
+        let mut r2 = LatencyReservoir::default();
+        for i in 0..10_000 {
+            r2.record(i as f64 / 10_000.0);
+        }
+        assert_eq!(r.samples(), r2.samples());
     }
 }

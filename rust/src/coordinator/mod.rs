@@ -14,4 +14,5 @@ pub use config::{Strategy, TuneConfig, DEFAULT_DB_PATH};
 pub use registry::{Registry, RunRecord};
 pub use server::{BestSchedule, Server, ServerConfig};
 pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on,
-    run_session_on_with, tune_models, E2eResult, FleetResult, SearchHints, SessionResult};
+    run_session_on_with, tune_models, E2eResult, FleetResult, SearchHints, SessionResult,
+    SessionTelemetry};

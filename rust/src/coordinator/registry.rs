@@ -93,7 +93,8 @@ impl Registry {
                         o
                     })
                     .collect()),
-            );
+            )
+            .set("telemetry", session.telemetry.to_json());
         let path = self.dir.join(format!("{id}.json"));
         std::fs::write(&path, doc.to_pretty())
             .with_context(|| format!("writing {}", path.display()))?;

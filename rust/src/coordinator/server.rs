@@ -14,6 +14,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::db::Database;
+use crate::obs;
 use crate::runtime::{Manifest, Runtime};
 use crate::util::rng::Pcg;
 
@@ -138,6 +139,7 @@ impl Server {
             seed,
             arrived: Instant::now(),
         });
+        obs::instant(obs::EventKind::ServeEnqueue, q.len() as u64);
         Ok(())
     }
 
@@ -167,6 +169,7 @@ impl Server {
             .get(&model)
             .ok_or_else(|| anyhow::anyhow!("{model} not loaded"))?;
 
+        let _sp = obs::span(obs::EventKind::ServeBatch, batch.len() as u64);
         let t0 = Instant::now();
         for req in &batch {
             let inputs = exe.random_inputs(req.seed);

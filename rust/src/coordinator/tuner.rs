@@ -18,6 +18,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::cost::{AnalysisCache, HardwareModel, Platform, SurrogateModel};
 use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, WarmStart};
+use crate::obs;
 use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
 use crate::schedule::Schedule;
 use crate::search::{
@@ -28,6 +29,7 @@ use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
 use crate::transfer::{self, Exemplar};
 use crate::util::executor::Executor;
+use crate::util::json::{self, Json};
 use crate::util::stats;
 
 use super::config::{Strategy, TuneConfig};
@@ -47,6 +49,78 @@ pub struct SearchHints {
     pub exemplars: Vec<Exemplar>,
 }
 
+/// Observability snapshot of one tuning session: this session's share of
+/// the process-wide per-phase time aggregates plus executor counters,
+/// captured as before/after deltas around the repeats. Phase rows populate
+/// only while tracing is enabled (`--trace` / `RCC_TRACE`); the executor
+/// counters are always on. Pure telemetry — never part of any result
+/// comparison, so tracing on/off cannot perturb determinism contracts.
+#[derive(Debug, Clone, Default)]
+pub struct SessionTelemetry {
+    /// `(phase name, stat)` rows for phases that recorded at least once.
+    pub phases: Vec<(String, obs::PhaseStat)>,
+    pub exec: obs::ExecCounters,
+}
+
+impl SessionTelemetry {
+    /// Delta between two snapshots taken around the reported body of work
+    /// (a session's repeats, a serve fleet, ...).
+    pub fn capture(phases0: &obs::PhaseTotals, exec0: &obs::ExecCounters) -> SessionTelemetry {
+        SessionTelemetry {
+            phases: obs::phase_totals()
+                .delta_since(phases0)
+                .nonzero()
+                .into_iter()
+                .map(|(k, s)| (k.name().to_string(), s))
+                .collect(),
+            exec: obs::exec_counters().delta_since(exec0),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty() && self.exec == obs::ExecCounters::default()
+    }
+
+    /// JSON block for the session report (`Registry::record`).
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        for (name, s) in &self.phases {
+            let mut row = Json::obj();
+            row.set("count", json::num(s.count as f64));
+            row.set("total_ms", json::num(s.total_ns as f64 / 1e6));
+            phases.set(name, row);
+        }
+        let mut exec = Json::obj();
+        exec.set("own_pops", json::num(self.exec.own_pops as f64));
+        exec.set("steals", json::num(self.exec.steals as f64));
+        exec.set("help_steals", json::num(self.exec.help_steals as f64));
+        exec.set("idle_wakeups", json::num(self.exec.idle_wakeups as f64));
+        exec.set("queue_hwm", json::num(self.exec.queue_hwm as f64));
+        let mut doc = Json::obj();
+        doc.set("phases", phases);
+        doc.set("executor", exec);
+        doc
+    }
+
+    /// Human block for `rcc tune` / `rcc serve --tune` summaries.
+    pub fn render(&self) -> String {
+        let mut out = String::from("telemetry:\n");
+        if self.phases.is_empty() {
+            out.push_str("  (no phase spans; enable with --trace or RCC_TRACE)\n");
+        }
+        for (name, s) in &self.phases {
+            out.push_str(&format!(
+                "  {:<12} {:>7} x {:>10.3} ms\n",
+                name,
+                s.count,
+                s.total_ns as f64 / 1e6
+            ));
+        }
+        out.push_str(&format!("  {}\n", self.exec.render_line()));
+        out
+    }
+}
+
 /// Outcome of a repeated tuning session on one (workload, platform).
 #[derive(Debug, Clone)]
 pub struct SessionResult {
@@ -57,6 +131,8 @@ pub struct SessionResult {
     /// Aggregated LLM accounting over the repeats (llm_mcts only).
     pub llm_costs: CostTracker,
     pub llm_fallback_rate: f64,
+    /// Observability counters scoped to this session.
+    pub telemetry: SessionTelemetry,
 }
 
 impl SessionResult {
@@ -232,6 +308,10 @@ pub fn run_session_on_with(
 ) -> Result<SessionResult> {
     // Validate the platform up front so every repeat fails the same way.
     platform_for(cfg)?;
+    // Telemetry baseline: the session reports its own share of the
+    // process-wide counters (read-only snapshots; never affects results).
+    let phases0 = obs::phase_totals();
+    let exec0 = obs::exec_counters();
     let mut db = match &cfg.db_path {
         Some(p) => Some(Database::open(Path::new(p))?),
         None => None,
@@ -385,6 +465,7 @@ pub fn run_session_on_with(
         runs,
         llm_costs,
         llm_fallback_rate: stats::mean(&fb_rates),
+        telemetry: SessionTelemetry::capture(&phases0, &exec0),
     })
 }
 

@@ -15,6 +15,7 @@
 //! metering, cache consultation, seed assignment) and streams its
 //! hardware closures onto the executor directly, folding in plan order.
 
+use crate::obs;
 use crate::tir::Program;
 use crate::util::executor::Executor;
 
@@ -35,11 +36,24 @@ pub struct LatencyJob<'a> {
 /// up front and `CostModel::latency` is deterministic per `(program, seed)`.
 pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Executor) -> Vec<f64> {
     if exec.is_serial() || jobs.len() <= 1 {
-        return jobs.iter().map(|j| model.latency(j.program, j.seed)).collect();
+        return jobs
+            .iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let _sp = obs::span(obs::EventKind::Measure, i as u64);
+                model.latency(j.program, j.seed)
+            })
+            .collect();
     }
     exec.run(
         jobs.iter()
-            .map(|j| move || model.latency(j.program, j.seed))
+            .enumerate()
+            .map(|(i, j)| {
+                move || {
+                    let _sp = obs::span(obs::EventKind::Measure, i as u64);
+                    model.latency(j.program, j.seed)
+                }
+            })
             .collect(),
     )
 }

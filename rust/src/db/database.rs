@@ -19,8 +19,10 @@ use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::obs;
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
+use crate::util::json::{self, Json};
 
 use super::cache::MeasureCache;
 use super::fingerprint::{program_fingerprint, workload_fingerprint};
@@ -50,20 +52,76 @@ pub struct DbStats {
     pub platforms: Vec<String>,
     /// Malformed JSONL lines skipped at load time.
     pub skipped_lines: usize,
+    /// Lifetime malformed-line skips: the header-carried count, never less
+    /// than what this load observed (gc preserves foreign lines in place,
+    /// so a plain sum would double-count them).
+    pub cum_skipped: usize,
+    /// Outcome of the most recent `rcc db gc`, carried in the header line.
+    pub last_gc: Option<GcInfo>,
 }
 
 impl DbStats {
     pub fn render(&self) -> String {
+        let last_gc = match &self.last_gc {
+            Some(g) => format!(
+                "kept {} dropped {} at unix {}",
+                g.kept, g.dropped, g.timestamp
+            ),
+            None => "never".to_string(),
+        };
         format!(
             "{} records over {} (workload, platform) pairs\n\
-             workloads: {}\nplatforms: {}\nskipped malformed lines: {}",
+             workloads: {}\nplatforms: {}\nskipped malformed lines: {}\n\
+             telemetry: cumulative skipped lines: {}\ntelemetry: last gc: {}",
             self.records,
             self.pairs,
             if self.workloads.is_empty() { "-".to_string() } else { self.workloads.join(", ") },
             if self.platforms.is_empty() { "-".to_string() } else { self.platforms.join(", ") },
-            self.skipped_lines
+            self.skipped_lines,
+            self.cum_skipped,
+            last_gc
         )
     }
+}
+
+/// Telemetry snapshot of the most recent gc pass, persisted in the header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcInfo {
+    pub kept: usize,
+    pub dropped: usize,
+    /// Unix seconds when the pass ran.
+    pub timestamp: u64,
+}
+
+/// Marker key of the database header line. The header is telemetry only —
+/// written (first line) exclusively by `gc`, recognized and excluded from
+/// the skip count on load, and never emitted by `commit` (appends land
+/// after it, so it stays first). Loaders that predate it see one more
+/// unparseable line — version drift stays non-fatal in both directions.
+const HEADER_KEY: &str = "rcc_db_header";
+
+fn parse_header(line: &str) -> Option<(usize, Option<GcInfo>)> {
+    let doc = Json::parse(line.trim())?;
+    doc.get(HEADER_KEY)?;
+    let cum = doc.get("cum_skipped").and_then(Json::as_f64).unwrap_or(0.0) as usize;
+    let last_gc = doc.get("last_gc").map(|g| GcInfo {
+        kept: g.get("kept").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+        dropped: g.get("dropped").and_then(Json::as_f64).unwrap_or(0.0) as usize,
+        timestamp: g.get("timestamp").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+    });
+    Some((cum, last_gc))
+}
+
+fn render_header(cum_skipped: usize, last_gc: &GcInfo) -> String {
+    let mut gc = Json::obj();
+    gc.set("kept", json::num(last_gc.kept as f64));
+    gc.set("dropped", json::num(last_gc.dropped as f64));
+    gc.set("timestamp", json::num(last_gc.timestamp as f64));
+    let mut doc = Json::obj();
+    doc.set(HEADER_KEY, json::num(1.0));
+    doc.set("cum_skipped", json::num(cum_skipped as f64));
+    doc.set("last_gc", gc);
+    doc.to_string()
 }
 
 /// Outcome of a [`Database::gc`] compaction pass.
@@ -178,6 +236,10 @@ pub struct Database {
     /// records[..committed] are already on disk.
     committed: usize,
     pub skipped_lines: usize,
+    /// Cumulative skip count carried by the header line (0 when absent).
+    header_cum_skipped: usize,
+    /// Most recent gc outcome, carried by the header line.
+    pub last_gc: Option<GcInfo>,
 }
 
 impl Database {
@@ -186,14 +248,23 @@ impl Database {
     /// stats`) get no filesystem side effects — parent directories are
     /// created by [`Database::commit`], on the write path.
     pub fn open(path: &Path) -> Result<Database> {
-        let (records, skipped_lines) = Self::load(path)?;
+        let (records, skipped_lines, header_cum_skipped, last_gc) = Self::load(path)?;
         let committed = records.len();
-        Ok(Database { path: Some(path.to_path_buf()), records, committed, skipped_lines })
+        Ok(Database {
+            path: Some(path.to_path_buf()),
+            records,
+            committed,
+            skipped_lines,
+            header_cum_skipped,
+            last_gc,
+        })
     }
 
-    fn load(path: &Path) -> Result<(Vec<TuningRecord>, usize)> {
+    fn load(path: &Path) -> Result<(Vec<TuningRecord>, usize, usize, Option<GcInfo>)> {
         let mut records = Vec::new();
         let mut skipped_lines = 0;
+        let mut header_cum_skipped = 0;
+        let mut last_gc = None;
         if path.exists() {
             let text = std::fs::read_to_string(path)
                 .with_context(|| format!("reading tuning db {}", path.display()))?;
@@ -203,16 +274,35 @@ impl Database {
                 }
                 match TuningRecord::from_jsonl(line) {
                     Some(r) => records.push(r),
-                    None => skipped_lines += 1,
+                    None => match parse_header(line) {
+                        Some((cum, gc)) => {
+                            header_cum_skipped = header_cum_skipped.max(cum);
+                            last_gc = gc.or(last_gc);
+                        }
+                        None => skipped_lines += 1,
+                    },
                 }
             }
         }
-        Ok((records, skipped_lines))
+        Ok((records, skipped_lines, header_cum_skipped, last_gc))
     }
 
     /// A database with no backing file; `commit` is a no-op.
     pub fn in_memory() -> Database {
-        Database { path: None, records: Vec::new(), committed: 0, skipped_lines: 0 }
+        Database {
+            path: None,
+            records: Vec::new(),
+            committed: 0,
+            skipped_lines: 0,
+            header_cum_skipped: 0,
+            last_gc: None,
+        }
+    }
+
+    /// Lifetime malformed-line skips: whichever is larger of the
+    /// header-carried count and what this load observed.
+    pub fn cum_skipped(&self) -> usize {
+        self.header_cum_skipped.max(self.skipped_lines)
     }
 
     pub fn len(&self) -> usize {
@@ -244,6 +334,7 @@ impl Database {
         if n == 0 {
             return Ok(0);
         }
+        let _sp = obs::span(obs::EventKind::DbCommit, n as u64);
         if let Some(path) = &self.path {
             if let Some(parent) = path.parent() {
                 if !parent.as_os_str().is_empty() {
@@ -294,6 +385,7 @@ impl Database {
             Foreign(String),
         }
 
+        let mut gc_span = obs::span(obs::EventKind::DbGc, 0);
         let locked = match &self.path {
             Some(path) => {
                 let lock = DbLock::acquire(path)?;
@@ -313,10 +405,20 @@ impl Database {
                                 layout.push(Line::Rec(records.len()));
                                 records.push(r);
                             }
-                            None => {
-                                skipped += 1;
-                                layout.push(Line::Foreign(line.to_string()));
-                            }
+                            // A prior pass's header is telemetry, not a
+                            // foreign line: absorb it (the rewrite emits a
+                            // fresh one first) instead of preserving it
+                            // verbatim mid-file.
+                            None => match parse_header(line) {
+                                Some((cum, gc)) => {
+                                    self.header_cum_skipped = self.header_cum_skipped.max(cum);
+                                    self.last_gc = gc.or(self.last_gc);
+                                }
+                                None => {
+                                    skipped += 1;
+                                    layout.push(Line::Foreign(line.to_string()));
+                                }
+                            },
                         }
                     }
                 }
@@ -333,10 +435,21 @@ impl Database {
 
         let keep = self.keep_indices(k);
         let total = self.records.len();
+        let info = GcInfo {
+            kept: keep.len(),
+            dropped: total - keep.len(),
+            timestamp: std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_secs())
+                .unwrap_or(0),
+        };
+        let cum_skipped = self.cum_skipped();
 
         // Durable rewrite first; bookkeeping only after it succeeds.
         if let Some((_lock, path, layout)) = &locked {
             let mut text = String::new();
+            text.push_str(&render_header(cum_skipped, &info));
+            text.push('\n');
             for line in layout {
                 match line {
                     Line::Foreign(raw) => {
@@ -367,6 +480,9 @@ impl Database {
         let report = GcReport { kept: kept_records.len(), dropped: total - kept_records.len() };
         self.records = kept_records;
         self.committed = self.records.len();
+        self.header_cum_skipped = cum_skipped;
+        self.last_gc = Some(info);
+        gc_span.set_args(report.kept as u64, report.dropped as u64);
         Ok(report)
     }
 
@@ -494,6 +610,8 @@ impl Database {
             workloads: workloads.into_iter().collect(),
             platforms: platforms.into_iter().collect(),
             skipped_lines: self.skipped_lines,
+            cum_skipped: self.cum_skipped(),
+            last_gc: self.last_gc,
         }
     }
 
@@ -744,6 +862,37 @@ mod tests {
         assert_eq!(reread.len(), 1);
         assert_eq!(reread.best(1, "core_i9").unwrap().latency, 1.0);
         assert_eq!(reread.skipped_lines, 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gc_header_carries_cumulative_telemetry() {
+        let path = temp_db_path("header");
+        let good = rec(1, "core_i9", 1.0, 4);
+        std::fs::write(&path, format!("{}\nnot json\n", good.to_jsonl())).unwrap();
+        let mut db = Database::open(&path).unwrap();
+        assert_eq!(db.cum_skipped(), 1);
+        assert!(db.last_gc.is_none());
+        db.gc(4).unwrap();
+
+        // Header is the first line and re-loads as telemetry, not a skip.
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.lines().next().unwrap().contains("rcc_db_header"), "{text}");
+        let reread = Database::open(&path).unwrap();
+        assert_eq!(reread.len(), 1);
+        assert_eq!(reread.skipped_lines, 1, "only the foreign line counts");
+        assert_eq!(reread.cum_skipped(), 1);
+        let gc = reread.last_gc.unwrap();
+        assert_eq!((gc.kept, gc.dropped), (1, 0));
+        let stats = reread.stats();
+        assert_eq!(stats.cum_skipped, 1);
+        assert!(stats.render().contains("last gc: kept 1 dropped 0"));
+
+        // A second pass refreshes the header without duplicating it.
+        let mut db2 = reread;
+        db2.gc(4).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.matches("rcc_db_header").count(), 1);
         std::fs::remove_file(&path).ok();
     }
 

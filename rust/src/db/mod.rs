@@ -30,6 +30,6 @@ pub mod fingerprint;
 pub mod record;
 
 pub use cache::MeasureCache;
-pub use database::{Database, DbStats, GcReport, WarmStart};
+pub use database::{Database, DbStats, GcInfo, GcReport, WarmStart};
 pub use fingerprint::{program_fingerprint, shape_class, workload_fingerprint};
 pub use record::TuningRecord;

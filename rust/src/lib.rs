@@ -33,6 +33,11 @@
 //!   recorded traces onto differently-sized workloads, and the few-shot
 //!   exemplar engine feeding accumulated feedback into LLM prompts.
 //! - [`coordinator`] — tuning sessions, config system, serving loop.
+//! - [`obs`] — the observability plane: a lock-cheap span/event recorder
+//!   with stable event kinds across search, batch evaluation, LLM calls,
+//!   db maintenance and serving, always-on executor/phase counters, and
+//!   Chrome trace-event (Perfetto) + human-summary exporters. Recording
+//!   never influences seeds, fold order or results.
 //! - [`runtime`] — PJRT execution of the AOT artifacts produced by the
 //!   Python build path (`python/compile/aot.py`).
 //! - [`report`] — regenerators for every table and figure in the paper.
@@ -46,5 +51,6 @@ pub mod reasoning;
 pub mod db;
 pub mod transfer;
 pub mod coordinator;
+pub mod obs;
 pub mod runtime;
 pub mod report;

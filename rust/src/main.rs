@@ -9,17 +9,19 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use reasoning_compiler::coordinator::{
-    run_e2e, run_session, tune_models, Registry, Server, ServerConfig, Strategy, TuneConfig,
-    DEFAULT_DB_PATH,
+    run_e2e, run_session, tune_models, Registry, Server, ServerConfig, SessionTelemetry,
+    Strategy, TuneConfig, DEFAULT_DB_PATH,
 };
 use reasoning_compiler::db::{workload_fingerprint, Database};
 use reasoning_compiler::cost::{features, Platform};
+use reasoning_compiler::obs;
 use reasoning_compiler::reasoning::{self, ModelProfile, PromptContext};
 use reasoning_compiler::report::{ablations, costs, figure3, platforms, Scale};
 use reasoning_compiler::runtime::Manifest;
 use reasoning_compiler::schedule::Schedule;
 use reasoning_compiler::tir::{printer, workload, WorkloadId};
 use reasoning_compiler::util::cli::Args;
+use reasoning_compiler::util::json::Json;
 
 const HELP: &str = "\
 rcc — REASONING COMPILER (NeurIPS 2025 reproduction)
@@ -84,6 +86,14 @@ Registry
   best        Show + replay the best recorded schedule.
               --workload NAME --platform NAME
 
+Observability
+  trace summary   Per-phase time table + executor counters of a recorded
+                  trace file. --trace FILE (defaults to RCC_TRACE)
+  Every command accepts --trace FILE (or the RCC_TRACE env var) to record
+  a Chrome trace-event JSON of the run — load it at ui.perfetto.dev.
+  `--config` files can set it as `[obs] trace`. Tracing never changes
+  results: searches are bit-identical with it on or off.
+
 Serving & inspection
   serve       Dynamic-batching serving demo over the AOT artifacts,
               annotated with best-known schedules from the tuning db.
@@ -102,10 +112,47 @@ Serving & inspection
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let cmd = args.subcommand.clone().unwrap_or_else(|| "help".to_string());
-    if let Err(e) = dispatch(&cmd, &args) {
+    // `--trace FILE` / `RCC_TRACE=FILE` arm the event recorder for any
+    // command; the trace is exported after the command finishes (also on
+    // error — a failing run's trace is the one worth looking at). The
+    // `trace` subcommand itself reads files, so it never arms recording.
+    let trace_path = if cmd == "trace" {
+        None
+    } else {
+        args.opt("trace")
+            .map(String::from)
+            .or_else(|| std::env::var("RCC_TRACE").ok().filter(|s| !s.is_empty()))
+    };
+    if trace_path.is_some() {
+        obs::enable();
+    }
+    let result = dispatch(&cmd, &args);
+    if let Some(path) = &trace_path {
+        if let Err(e) = export_trace(path) {
+            eprintln!("warning: failed to export trace to {path}: {e:#}");
+        }
+    }
+    if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Drain the recorder into a Chrome trace-event JSON at `path` and print
+/// the per-phase summary table.
+fn export_trace(path: &str) -> Result<()> {
+    let events = obs::drain();
+    if let Some(parent) = Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    obs::write_chrome_trace(path, &events)?;
+    let mut summary = obs::summarize(&events);
+    summary.exec = Some(obs::exec_counters());
+    println!("\ntrace: {} events -> {path} (load at ui.perfetto.dev)", events.len());
+    print!("{}", obs::render_summary(&summary));
+    Ok(())
 }
 
 fn dispatch(cmd: &str, args: &Args) -> Result<()> {
@@ -115,6 +162,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
             Ok(())
         }
         "tune" => cmd_tune(args),
+        "trace" => cmd_trace(args),
         "db" => cmd_db(args),
         "transfer" => cmd_transfer(args),
         "history" => cmd_history(),
@@ -163,6 +211,30 @@ fn config_from(args: &Args) -> Result<TuneConfig> {
     Ok(cfg)
 }
 
+/// `rcc trace summary --trace FILE`: per-phase table of a recorded trace.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("summary");
+    if action != "summary" {
+        return Err(anyhow!(
+            "unknown trace action {action:?}; use `trace summary --trace FILE`"
+        ));
+    }
+    let path = args
+        .opt("trace")
+        .map(String::from)
+        .or_else(|| args.positional.get(1).cloned())
+        .or_else(|| std::env::var("RCC_TRACE").ok().filter(|s| !s.is_empty()))
+        .ok_or_else(|| anyhow!("trace summary needs --trace FILE (or RCC_TRACE)"))?;
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("reading trace {path}: {e}"))?;
+    let doc = Json::parse(&text).ok_or_else(|| anyhow!("{path} is not valid JSON"))?;
+    let summary = obs::summarize_json(&doc)
+        .ok_or_else(|| anyhow!("{path} is not a Chrome trace-event file"))?;
+    println!("trace {path}:");
+    print!("{}", obs::render_summary(&summary));
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     let mut cfg = config_from(args)?;
     // The CLI persists to the conventional database location unless the
@@ -170,6 +242,16 @@ fn cmd_tune(args: &Args) -> Result<()> {
     if cfg.db_path.is_none() && !args.has_flag("no-db") {
         cfg.db_path = Some(DEFAULT_DB_PATH.to_string());
     }
+    // A config-file `[obs] trace` arms the recorder here (CLI `--trace` /
+    // RCC_TRACE were handled in main and take precedence); export at the
+    // end of the command mirrors main's lifecycle.
+    let config_trace = match &cfg.trace_path {
+        Some(p) if !obs::enabled() => {
+            obs::enable();
+            Some(p.clone())
+        }
+        _ => None,
+    };
     println!(
         "tuning {} on {} with {} (budget {}, {} repeats)...",
         cfg.workload,
@@ -205,6 +287,7 @@ fn cmd_tune(args: &Args) -> Result<()> {
             session.llm_fallback_rate * 100.0
         );
     }
+    print!("{}", session.telemetry.render());
     if !args.has_flag("no-record") {
         let reg = Registry::default_location()?;
         let id = reg.record(&session)?;
@@ -219,6 +302,9 @@ fn cmd_tune(args: &Args) -> Result<()> {
         let (best, _) = sched.apply_all(&run.best_trace);
         println!("\nbest schedule trace (run 0, {:.2}x):", run.best_speedup());
         println!("{}", best.render_trace());
+    }
+    if let Some(path) = &config_trace {
+        export_trace(path)?;
     }
     Ok(())
 }
@@ -370,6 +456,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             cfg.budget,
             cfg.repeats
         );
+        let phases0 = obs::phase_totals();
+        let exec0 = obs::exec_counters();
         let fleet = tune_models(&models, &cfg)?;
         for (model, session) in &fleet.sessions {
             println!(
@@ -387,6 +475,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "  shared measurement pool: {} fingerprints known, {} evaluations answered without a sample",
             fleet.pool_entries, fleet.pooled_hits
         );
+        // Fleet-scoped telemetry (sessions overlap in time, so the fleet
+        // delta is the meaningful unit here, not per-session shares).
+        print!("{}", SessionTelemetry::capture(&phases0, &exec0).render());
     }
     // Annotate served models with their best-known tuned schedules. A
     // missing db is only acceptable when the path is the implicit default;

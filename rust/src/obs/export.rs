@@ -1,0 +1,354 @@
+//! Trace exporters: Chrome trace-event JSON and the human phase summary.
+//!
+//! The Chrome exporter emits the JSON Object Format
+//! (`{"traceEvents": [...], "otherData": {...}}`) that Perfetto and
+//! `chrome://tracing` load directly. Ring overwrites in the recorder can
+//! orphan one half of a span; the exporter pairs begin/end events per
+//! thread and emits **only matched pairs** (plus instants), so the output
+//! is always well-formed: every `B` has an `E` and timestamps are
+//! monotone per thread.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{arr, num, s, Json};
+
+use super::metrics::{self, ExecCounters};
+use super::recorder::{Event, EventKind, Phase};
+
+/// Mark which events survive export: instants, and begin/end pairs that
+/// actually match (same thread, same kind, properly nested).
+fn matched(events: &[Event]) -> Vec<bool> {
+    let mut keep = vec![false; events.len()];
+    let mut stacks: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        match e.phase {
+            Phase::Instant => keep[i] = true,
+            Phase::Begin => stacks.entry(e.tid).or_default().push(i),
+            Phase::End => {
+                let st = stacks.entry(e.tid).or_default();
+                // Guards are scoped, so an end normally matches the top
+                // of its thread's stack; a ring overwrite that ate the
+                // begin leaves a mismatch — drop the orphaned end.
+                if let Some(&bi) = st.last() {
+                    if events[bi].kind == e.kind {
+                        st.pop();
+                        keep[bi] = true;
+                        keep[i] = true;
+                    }
+                }
+            }
+        }
+    }
+    keep
+}
+
+fn chrome_entry(e: &Event) -> Json {
+    let mut j = Json::obj();
+    j.set("name", s(e.kind.name()))
+        .set("cat", s(e.kind.category()))
+        .set(
+            "ph",
+            s(match e.phase {
+                Phase::Begin => "B",
+                Phase::End => "E",
+                Phase::Instant => "i",
+            }),
+        )
+        .set("ts", num(e.ts_us as f64))
+        .set("pid", num(1.0))
+        .set("tid", num(e.tid as f64));
+    if e.phase == Phase::Instant {
+        j.set("s", s("t"));
+    }
+    let mut a = Json::obj();
+    a.set("arg", num(e.arg as f64));
+    if e.arg2 != 0 {
+        a.set("arg2", num(e.arg2 as f64));
+    }
+    j.set("args", a);
+    j
+}
+
+fn exec_json(exec: &ExecCounters) -> Json {
+    let mut j = Json::obj();
+    j.set("own_pops", num(exec.own_pops as f64))
+        .set("steals", num(exec.steals as f64))
+        .set("help_steals", num(exec.help_steals as f64))
+        .set("idle_wakeups", num(exec.idle_wakeups as f64))
+        .set("queue_hwm", num(exec.queue_hwm as f64));
+    j
+}
+
+fn exec_from_json(j: &Json) -> Option<ExecCounters> {
+    let f = |k: &str| j.get(k).and_then(Json::as_f64).map(|x| x as u64);
+    Some(ExecCounters {
+        own_pops: f("own_pops")?,
+        steals: f("steals")?,
+        help_steals: f("help_steals")?,
+        idle_wakeups: f("idle_wakeups")?,
+        queue_hwm: f("queue_hwm")?,
+    })
+}
+
+/// Render a drained event stream as a Chrome trace document. Events are
+/// grouped by thread in chronological order; the process-wide executor
+/// counters are embedded under `otherData.executor` so `rcc trace
+/// summary` can report them after the fact.
+pub fn chrome_trace_json(events: &[Event]) -> Json {
+    let keep = matched(events);
+    // Group by tid: per-thread order is chronological by construction,
+    // which keeps per-thread timestamps monotone in the output.
+    let mut by_tid: BTreeMap<u64, Vec<Json>> = BTreeMap::new();
+    for (i, e) in events.iter().enumerate() {
+        if keep[i] {
+            by_tid.entry(e.tid).or_default().push(chrome_entry(e));
+        }
+    }
+    let mut entries = Vec::new();
+    for (_, v) in by_tid {
+        entries.extend(v);
+    }
+    let mut other = Json::obj();
+    other.set("executor", exec_json(&metrics::exec_counters()));
+    let mut doc = Json::obj();
+    doc.set("traceEvents", arr(entries))
+        .set("displayTimeUnit", s("ms"))
+        .set("otherData", other);
+    doc
+}
+
+/// Drain-free helper: write `events` as a Chrome trace to `path`.
+pub fn write_chrome_trace(path: &str, events: &[Event]) -> std::io::Result<()> {
+    std::fs::write(path, chrome_trace_json(events).to_string())
+}
+
+/// One phase's line in the summary table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SummaryRow {
+    pub kind: EventKind,
+    /// Completed spans (or instants, for instant-only kinds).
+    pub count: u64,
+    /// Total wall-clock inside spans of this kind, microseconds.
+    pub total_us: u64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TraceSummary {
+    /// Rows sorted by total time, busiest phase first.
+    pub rows: Vec<SummaryRow>,
+    pub threads: usize,
+    pub events: usize,
+    /// First-to-last event timestamp span, microseconds.
+    pub wall_us: u64,
+    /// Executor counters, when known (live summary or a trace file's
+    /// `otherData.executor`).
+    pub exec: Option<ExecCounters>,
+}
+
+/// Aggregate an event stream into per-phase counts and total times.
+pub fn summarize(events: &[Event]) -> TraceSummary {
+    let keep = matched(events);
+    let mut count = [0u64; super::recorder::NUM_KINDS];
+    let mut total_us = [0u64; super::recorder::NUM_KINDS];
+    let mut stacks: BTreeMap<u64, Vec<(EventKind, u64)>> = BTreeMap::new();
+    let mut tids: BTreeMap<u64, ()> = BTreeMap::new();
+    let mut min_ts = u64::MAX;
+    let mut max_ts = 0u64;
+    let mut kept = 0usize;
+    for (i, e) in events.iter().enumerate() {
+        if !keep[i] {
+            continue;
+        }
+        kept += 1;
+        tids.insert(e.tid, ());
+        min_ts = min_ts.min(e.ts_us);
+        max_ts = max_ts.max(e.ts_us);
+        match e.phase {
+            Phase::Instant => count[e.kind as usize] += 1,
+            Phase::Begin => stacks.entry(e.tid).or_default().push((e.kind, e.ts_us)),
+            Phase::End => {
+                if let Some((kind, begin_ts)) = stacks.entry(e.tid).or_default().pop() {
+                    count[kind as usize] += 1;
+                    total_us[kind as usize] += e.ts_us.saturating_sub(begin_ts);
+                }
+            }
+        }
+    }
+    let mut rows: Vec<SummaryRow> = EventKind::ALL
+        .iter()
+        .filter(|&&k| count[k as usize] > 0)
+        .map(|&k| SummaryRow { kind: k, count: count[k as usize], total_us: total_us[k as usize] })
+        .collect();
+    rows.sort_by(|a, b| b.total_us.cmp(&a.total_us).then(a.kind.cmp(&b.kind)));
+    TraceSummary {
+        rows,
+        threads: tids.len(),
+        events: kept,
+        wall_us: if kept == 0 { 0 } else { max_ts - min_ts },
+        exec: None,
+    }
+}
+
+/// Summarize a Chrome trace document produced by [`chrome_trace_json`]
+/// (used by `rcc trace summary` on a trace file). Returns None when the
+/// document has no `traceEvents` array.
+pub fn summarize_json(doc: &Json) -> Option<TraceSummary> {
+    let entries = doc.get("traceEvents")?.as_arr()?;
+    let mut events = Vec::with_capacity(entries.len());
+    for e in entries {
+        let kind = match e.get("name").and_then(Json::as_str).and_then(EventKind::from_name) {
+            Some(k) => k,
+            None => continue, // foreign event from another producer
+        };
+        let phase = match e.get("ph").and_then(Json::as_str) {
+            Some("B") => Phase::Begin,
+            Some("E") => Phase::End,
+            Some("i") => Phase::Instant,
+            _ => continue,
+        };
+        events.push(Event {
+            kind,
+            phase,
+            ts_us: e.get("ts").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            tid: e.get("tid").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            arg: e
+                .get("args")
+                .and_then(|a| a.get("arg"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64,
+            arg2: e
+                .get("args")
+                .and_then(|a| a.get("arg2"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0) as u64,
+        });
+    }
+    let mut sum = summarize(&events);
+    sum.exec = doc
+        .get("otherData")
+        .and_then(|o| o.get("executor"))
+        .and_then(exec_from_json);
+    Some(sum)
+}
+
+/// Render the per-phase time table (the `rcc trace summary` output).
+pub fn render_summary(sum: &TraceSummary) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<14} {:<7} {:>8} {:>12} {:>12}\n",
+        "phase", "cat", "count", "total ms", "mean us"
+    ));
+    for r in &sum.rows {
+        let total_ms = r.total_us as f64 / 1_000.0;
+        let mean_us = if r.count == 0 { 0.0 } else { r.total_us as f64 / r.count as f64 };
+        out.push_str(&format!(
+            "{:<14} {:<7} {:>8} {:>12.3} {:>12.1}\n",
+            r.kind.name(),
+            r.kind.category(),
+            r.count,
+            total_ms,
+            mean_us
+        ));
+    }
+    if sum.rows.is_empty() {
+        out.push_str("(no events)\n");
+    }
+    out.push_str(&format!(
+        "threads: {}   events: {}   wall-clock: {:.3} ms\n",
+        sum.threads,
+        sum.events,
+        sum.wall_us as f64 / 1_000.0
+    ));
+    if let Some(exec) = &sum.exec {
+        out.push_str(&exec.render_line());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(kind: EventKind, phase: Phase, ts_us: u64, tid: u64, arg: u64) -> Event {
+        Event { kind, phase, ts_us, tid, arg, arg2: 0 }
+    }
+
+    #[test]
+    fn export_pairs_and_drops_orphans() {
+        use EventKind::*;
+        use Phase::*;
+        let events = vec![
+            ev(Select, Begin, 0, 0, 1),
+            ev(Measure, Begin, 1, 1, 5),
+            // Orphan end: no begin on tid 0 for measure.
+            ev(Measure, End, 2, 0, 9),
+            ev(Select, End, 3, 0, 1),
+            ev(Measure, End, 4, 1, 5),
+            ev(Plan, Instant, 5, 0, 2),
+            // Orphan begin: never closed.
+            ev(Fold, Begin, 6, 0, 0),
+        ];
+        let doc = chrome_trace_json(&events);
+        let entries = doc.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+        // 2 matched pairs (4 events) + 1 instant.
+        assert_eq!(entries.len(), 5);
+        // Every B has an E, per tid, and ts is monotone per tid.
+        let mut stacks: BTreeMap<u64, Vec<String>> = BTreeMap::new();
+        let mut last_ts: BTreeMap<u64, f64> = BTreeMap::new();
+        for e in &entries {
+            let tid = e.get("tid").unwrap().as_f64().unwrap() as u64;
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            assert!(*last_ts.get(&tid).unwrap_or(&0.0) <= ts);
+            last_ts.insert(tid, ts);
+            match e.get("ph").unwrap().as_str().unwrap() {
+                "B" => stacks
+                    .entry(tid)
+                    .or_default()
+                    .push(e.get("name").unwrap().as_str().unwrap().to_string()),
+                "E" => {
+                    let top = stacks.entry(tid).or_default().pop().expect("E without B");
+                    assert_eq!(top, e.get("name").unwrap().as_str().unwrap());
+                }
+                "i" => {}
+                other => panic!("unexpected ph {other}"),
+            }
+        }
+        assert!(stacks.values().all(|s| s.is_empty()), "unclosed B in export");
+        // The document parses back through the summary path.
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).unwrap();
+        let sum = summarize_json(&parsed).unwrap();
+        assert_eq!(sum.events, 5);
+        assert!(sum.exec.is_some());
+    }
+
+    #[test]
+    fn summarize_totals_per_phase() {
+        use EventKind::*;
+        use Phase::*;
+        let events = vec![
+            ev(Measure, Begin, 10, 0, 1),
+            ev(Measure, End, 40, 0, 1),
+            ev(Measure, Begin, 50, 1, 2),
+            ev(Measure, End, 70, 1, 2),
+            ev(Fold, Begin, 80, 0, 2),
+            ev(Fold, End, 90, 0, 2),
+            ev(CacheProbe, Instant, 85, 0, 1),
+        ];
+        let sum = summarize(&events);
+        assert_eq!(sum.threads, 2);
+        assert_eq!(sum.wall_us, 80);
+        let measure = sum.rows.iter().find(|r| r.kind == Measure).unwrap();
+        assert_eq!(measure.count, 2);
+        assert_eq!(measure.total_us, 50);
+        let probe = sum.rows.iter().find(|r| r.kind == CacheProbe).unwrap();
+        assert_eq!(probe.count, 1);
+        assert_eq!(probe.total_us, 0);
+        // Busiest phase first.
+        assert_eq!(sum.rows[0].kind, Measure);
+        let text = render_summary(&sum);
+        assert!(text.contains("measure"));
+        assert!(text.contains("threads: 2"));
+    }
+}

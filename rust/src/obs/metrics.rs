@@ -1,0 +1,221 @@
+//! Always-on counters: per-phase time aggregates and executor counters.
+//!
+//! Unlike the event recorder, these are plain process-wide relaxed
+//! atomics that cost one `fetch_add` at sites that already take a lock —
+//! cheap enough to leave on unconditionally. Phase aggregates are only
+//! *updated* while tracing is enabled (span guards are inert otherwise);
+//! the executor counters count always, so `Executor::stats()` and the
+//! serve summary work without tracing.
+//!
+//! Snapshots are values ([`PhaseTotals`], [`ExecCounters`]) with
+//! `delta_since` helpers, so a session can report just its own share of
+//! the process-wide totals.
+
+use std::array;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::recorder::{EventKind, NUM_KINDS};
+
+struct Counters {
+    count: [AtomicU64; NUM_KINDS],
+    total_ns: [AtomicU64; NUM_KINDS],
+    exec_own_pops: AtomicU64,
+    exec_steals: AtomicU64,
+    exec_help_steals: AtomicU64,
+    exec_idle_wakeups: AtomicU64,
+    exec_queue_hwm: AtomicU64,
+}
+
+fn counters() -> &'static Counters {
+    static C: OnceLock<Counters> = OnceLock::new();
+    C.get_or_init(|| Counters {
+        count: array::from_fn(|_| AtomicU64::new(0)),
+        total_ns: array::from_fn(|_| AtomicU64::new(0)),
+        exec_own_pops: AtomicU64::new(0),
+        exec_steals: AtomicU64::new(0),
+        exec_help_steals: AtomicU64::new(0),
+        exec_idle_wakeups: AtomicU64::new(0),
+        exec_queue_hwm: AtomicU64::new(0),
+    })
+}
+
+pub(crate) fn record_span(kind: EventKind, ns: u64) {
+    let c = counters();
+    c.count[kind as usize].fetch_add(1, Ordering::Relaxed);
+    c.total_ns[kind as usize].fetch_add(ns, Ordering::Relaxed);
+}
+
+pub(crate) fn record_instant(kind: EventKind) {
+    counters().count[kind as usize].fetch_add(1, Ordering::Relaxed);
+}
+
+// ---- executor counter feeds (called from util::executor) --------------
+
+pub(crate) fn exec_own_pop() {
+    counters().exec_own_pops.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn exec_steal() {
+    counters().exec_steals.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn exec_help_steal() {
+    counters().exec_help_steals.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn exec_idle_wakeup() {
+    counters().exec_idle_wakeups.fetch_add(1, Ordering::Relaxed);
+}
+
+pub(crate) fn exec_queue_depth(depth: u64) {
+    counters().exec_queue_hwm.fetch_max(depth, Ordering::Relaxed);
+}
+
+/// One phase's aggregate: how many spans/instants, total span time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PhaseStat {
+    pub count: u64,
+    pub total_ns: u64,
+}
+
+impl Default for PhaseStat {
+    fn default() -> Self {
+        PhaseStat { count: 0, total_ns: 0 }
+    }
+}
+
+/// Snapshot of every phase's aggregate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PhaseTotals {
+    stats: [PhaseStat; NUM_KINDS],
+}
+
+impl Default for PhaseTotals {
+    fn default() -> Self {
+        PhaseTotals { stats: [PhaseStat::default(); NUM_KINDS] }
+    }
+}
+
+impl PhaseTotals {
+    pub fn get(&self, kind: EventKind) -> PhaseStat {
+        self.stats[kind as usize]
+    }
+
+    /// This snapshot minus an earlier one (saturating — counters only grow).
+    pub fn delta_since(&self, earlier: &PhaseTotals) -> PhaseTotals {
+        let mut out = PhaseTotals::default();
+        for i in 0..NUM_KINDS {
+            out.stats[i] = PhaseStat {
+                count: self.stats[i].count.saturating_sub(earlier.stats[i].count),
+                total_ns: self.stats[i].total_ns.saturating_sub(earlier.stats[i].total_ns),
+            };
+        }
+        out
+    }
+
+    /// Phases with at least one recorded span/instant.
+    pub fn nonzero(&self) -> Vec<(EventKind, PhaseStat)> {
+        EventKind::ALL
+            .iter()
+            .map(|&k| (k, self.get(k)))
+            .filter(|(_, s)| s.count > 0)
+            .collect()
+    }
+}
+
+/// Snapshot the process-wide per-phase aggregates.
+pub fn phase_totals() -> PhaseTotals {
+    let c = counters();
+    let mut out = PhaseTotals::default();
+    for i in 0..NUM_KINDS {
+        out.stats[i] = PhaseStat {
+            count: c.count[i].load(Ordering::Relaxed),
+            total_ns: c.total_ns[i].load(Ordering::Relaxed),
+        };
+    }
+    out
+}
+
+/// Process-wide executor counters (all executors in this process;
+/// per-executor, per-worker breakdowns come from `Executor::stats()`).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecCounters {
+    pub own_pops: u64,
+    pub steals: u64,
+    /// Steals by helping submitters (threads waiting on a group).
+    pub help_steals: u64,
+    pub idle_wakeups: u64,
+    /// High-water mark of any single deque's depth.
+    pub queue_hwm: u64,
+}
+
+impl ExecCounters {
+    pub fn delta_since(&self, earlier: &ExecCounters) -> ExecCounters {
+        ExecCounters {
+            own_pops: self.own_pops.saturating_sub(earlier.own_pops),
+            steals: self.steals.saturating_sub(earlier.steals),
+            help_steals: self.help_steals.saturating_sub(earlier.help_steals),
+            idle_wakeups: self.idle_wakeups.saturating_sub(earlier.idle_wakeups),
+            // A high-water mark is not a monotone sum; report the later one.
+            queue_hwm: self.queue_hwm,
+        }
+    }
+
+    pub fn render_line(&self) -> String {
+        format!(
+            "executor: own_pops={} steals={} help_steals={} idle_wakeups={} queue_hwm={}",
+            self.own_pops, self.steals, self.help_steals, self.idle_wakeups, self.queue_hwm
+        )
+    }
+}
+
+/// Snapshot the process-wide executor counters.
+pub fn exec_counters() -> ExecCounters {
+    let c = counters();
+    ExecCounters {
+        own_pops: c.exec_own_pops.load(Ordering::Relaxed),
+        steals: c.exec_steals.load(Ordering::Relaxed),
+        help_steals: c.exec_help_steals.load(Ordering::Relaxed),
+        idle_wakeups: c.exec_idle_wakeups.load(Ordering::Relaxed),
+        queue_hwm: c.exec_queue_hwm.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_totals_delta() {
+        let mut a = PhaseTotals::default();
+        let mut b = PhaseTotals::default();
+        a.stats[EventKind::Measure as usize] = PhaseStat { count: 3, total_ns: 300 };
+        b.stats[EventKind::Measure as usize] = PhaseStat { count: 10, total_ns: 1_300 };
+        b.stats[EventKind::Fold as usize] = PhaseStat { count: 1, total_ns: 50 };
+        let d = b.delta_since(&a);
+        assert_eq!(d.get(EventKind::Measure), PhaseStat { count: 7, total_ns: 1_000 });
+        assert_eq!(d.get(EventKind::Fold), PhaseStat { count: 1, total_ns: 50 });
+        assert_eq!(d.get(EventKind::Select).count, 0);
+        let names: Vec<&str> = d.nonzero().iter().map(|(k, _)| k.name()).collect();
+        assert_eq!(names, vec!["measure", "fold"]);
+    }
+
+    #[test]
+    fn exec_counters_delta_keeps_hwm() {
+        let a = ExecCounters { own_pops: 5, steals: 2, help_steals: 1, idle_wakeups: 4, queue_hwm: 9 };
+        let b = ExecCounters {
+            own_pops: 15,
+            steals: 2,
+            help_steals: 3,
+            idle_wakeups: 10,
+            queue_hwm: 12,
+        };
+        let d = b.delta_since(&a);
+        assert_eq!(d.own_pops, 10);
+        assert_eq!(d.steals, 0);
+        assert_eq!(d.help_steals, 2);
+        assert_eq!(d.queue_hwm, 12);
+        assert!(d.render_line().contains("steals=0"));
+    }
+}

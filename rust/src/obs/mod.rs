@@ -1,0 +1,58 @@
+//! Crate-wide observability: structured spans, counters and trace export.
+//!
+//! The telemetry plane has three parts:
+//!
+//! - [`recorder`] — a lock-cheap span/event recorder. Each thread records
+//!   into its own bounded ring buffer (one uncontended mutex per event);
+//!   a global sink drains every ring into one chronologically-ordered
+//!   stream. When tracing is disabled (the default) every record site is
+//!   a single relaxed atomic load — a no-op on the hot path.
+//! - [`metrics`] — always-on process-wide counters: per-phase
+//!   count/total-time aggregates (updated at span end, snapshotable
+//!   without draining events) and the executor's steal / own-pop /
+//!   idle-wakeup / queue-high-water counters.
+//! - [`export`] — exporters: Chrome trace-event JSON (loadable in
+//!   Perfetto / `chrome://tracing`) and the human per-phase summary
+//!   table behind `rcc trace summary`.
+//!
+//! ## Determinism contract
+//!
+//! Recording is strictly write-only with respect to the rest of the
+//! system: it reads the clock and bumps atomics, and **never** touches
+//! seeds, RNG streams, plan order or fold order. Tracing on vs off is
+//! bit-identical in every `SearchResult` (enforced by
+//! `tests/observability.rs`). Measurement events carry their plan-time
+//! submission index in `arg`, so a `workers=N` trace is diffable against
+//! a `workers=1` trace event-for-event.
+//!
+//! ## Event taxonomy
+//!
+//! | kind            | cat    | span/instant | `arg`                      |
+//! |-----------------|--------|--------------|----------------------------|
+//! | `select`        | search | span         | iteration                  |
+//! | `expand`        | search | span         | pending-leaf index         |
+//! | `propose`       | search | span         | node visit count           |
+//! | `measure`       | batch  | span         | plan-time submission index |
+//! | `backprop`      | search | span         | leaf index                 |
+//! | `plan`          | batch  | instant      | submission index           |
+//! | `cache_probe`   | batch  | instant      | 1 = hit, 0 = miss          |
+//! | `submit`        | batch  | instant      | submission index           |
+//! | `fold`          | batch  | span         | jobs folded                |
+//! | `llm_call`      | llm    | span         | prompt tokens (`arg2` = proposals) |
+//! | `db_commit`     | db     | span         | records committed          |
+//! | `db_gc`         | db     | span         | records kept               |
+//! | `serve_enqueue` | serve  | instant      | queue depth after enqueue  |
+//! | `serve_batch`   | serve  | span         | batch size                 |
+
+pub mod export;
+pub mod metrics;
+pub mod recorder;
+
+pub use export::{
+    chrome_trace_json, render_summary, summarize, summarize_json, write_chrome_trace,
+    SummaryRow, TraceSummary,
+};
+pub use metrics::{exec_counters, phase_totals, ExecCounters, PhaseStat, PhaseTotals};
+pub use recorder::{
+    disable, drain, enable, enabled, instant, span, span2, Event, EventKind, Phase, SpanGuard,
+};

@@ -1,0 +1,342 @@
+//! The span/event recorder: thread-local ring buffers, one global sink.
+//!
+//! Cost model: when disabled, every record site is one relaxed atomic
+//! load. When enabled, a record is a clock read plus a push under the
+//! recording thread's *own* buffer mutex — that mutex is only ever
+//! contended by [`drain`], so in steady state it is an uncontended lock
+//! (a couple of atomic ops). Buffers are bounded rings: past
+//! [`RING_CAP`] events per thread the oldest events are overwritten, so
+//! sustained tracing can never grow memory without bound (the exporter
+//! drops the orphaned halves of overwritten spans).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use super::metrics;
+
+/// Number of distinct event kinds (array sizing for the counters).
+pub const NUM_KINDS: usize = 14;
+
+/// Events a thread's ring holds before overwriting the oldest.
+pub const RING_CAP: usize = 1 << 18;
+
+/// Stable event kinds. The discriminant indexes the per-kind counter
+/// arrays; `name()` is the stable wire name used in trace files.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum EventKind {
+    Select = 0,
+    Expand = 1,
+    Propose = 2,
+    Measure = 3,
+    Backprop = 4,
+    Plan = 5,
+    CacheProbe = 6,
+    Submit = 7,
+    Fold = 8,
+    LlmCall = 9,
+    DbCommit = 10,
+    DbGc = 11,
+    ServeEnqueue = 12,
+    ServeBatch = 13,
+}
+
+impl EventKind {
+    pub const ALL: [EventKind; NUM_KINDS] = [
+        EventKind::Select,
+        EventKind::Expand,
+        EventKind::Propose,
+        EventKind::Measure,
+        EventKind::Backprop,
+        EventKind::Plan,
+        EventKind::CacheProbe,
+        EventKind::Submit,
+        EventKind::Fold,
+        EventKind::LlmCall,
+        EventKind::DbCommit,
+        EventKind::DbGc,
+        EventKind::ServeEnqueue,
+        EventKind::ServeBatch,
+    ];
+
+    /// Stable wire name (used as the Chrome trace `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Select => "select",
+            EventKind::Expand => "expand",
+            EventKind::Propose => "propose",
+            EventKind::Measure => "measure",
+            EventKind::Backprop => "backprop",
+            EventKind::Plan => "plan",
+            EventKind::CacheProbe => "cache_probe",
+            EventKind::Submit => "submit",
+            EventKind::Fold => "fold",
+            EventKind::LlmCall => "llm_call",
+            EventKind::DbCommit => "db_commit",
+            EventKind::DbGc => "db_gc",
+            EventKind::ServeEnqueue => "serve_enqueue",
+            EventKind::ServeBatch => "serve_batch",
+        }
+    }
+
+    /// Chrome trace `cat` field: which subsystem emits the event.
+    pub fn category(self) -> &'static str {
+        match self {
+            EventKind::Select | EventKind::Expand | EventKind::Propose | EventKind::Backprop => {
+                "search"
+            }
+            EventKind::Measure
+            | EventKind::Plan
+            | EventKind::CacheProbe
+            | EventKind::Submit
+            | EventKind::Fold => "batch",
+            EventKind::LlmCall => "llm",
+            EventKind::DbCommit | EventKind::DbGc => "db",
+            EventKind::ServeEnqueue | EventKind::ServeBatch => "serve",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<EventKind> {
+        EventKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Begin,
+    End,
+    Instant,
+}
+
+/// One recorded event. `arg` carries the kind-specific payload (see the
+/// taxonomy table in the module docs); `arg2` is a secondary payload
+/// (only `llm_call` uses it, for the proposal count).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    pub phase: Phase,
+    /// Microseconds since the recorder epoch (fixed at first use).
+    pub ts_us: u64,
+    /// Small sequential thread id (registration order, not OS tid).
+    pub tid: u64,
+    pub arg: u64,
+    pub arg2: u64,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+struct Ring {
+    buf: Vec<Event>,
+    /// Oldest slot once the ring has wrapped.
+    head: usize,
+}
+
+impl Ring {
+    fn new() -> Ring {
+        Ring { buf: Vec::new(), head: 0 }
+    }
+
+    fn push(&mut self, e: Event) {
+        if self.buf.len() < RING_CAP {
+            self.buf.push(e);
+        } else {
+            self.buf[self.head] = e;
+            self.head = (self.head + 1) % RING_CAP;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn drain(&mut self) -> Vec<Event> {
+        let head = std::mem::take(&mut self.head);
+        let mut out = std::mem::take(&mut self.buf);
+        out.rotate_left(head);
+        out
+    }
+}
+
+struct Sink {
+    epoch: Instant,
+    /// Every thread's ring, registered on that thread's first event and
+    /// kept alive here even after the thread exits, so a late drain
+    /// still sees its events.
+    rings: Mutex<Vec<Arc<Mutex<Ring>>>>,
+    next_tid: AtomicU64,
+}
+
+fn sink() -> &'static Sink {
+    static SINK: OnceLock<Sink> = OnceLock::new();
+    SINK.get_or_init(|| Sink {
+        epoch: Instant::now(),
+        rings: Mutex::new(Vec::new()),
+        next_tid: AtomicU64::new(0),
+    })
+}
+
+struct Local {
+    tid: u64,
+    ring: Arc<Mutex<Ring>>,
+}
+
+thread_local! {
+    static LOCAL: RefCell<Option<Local>> = const { RefCell::new(None) };
+}
+
+/// Is the recorder on? One relaxed load — the entire disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Turn the recorder on (fixes the timestamp epoch on first use).
+pub fn enable() {
+    let _ = sink();
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::SeqCst);
+}
+
+/// Events lost to ring overwrites since process start.
+pub fn dropped() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn record(kind: EventKind, phase: Phase, arg: u64, arg2: u64) {
+    let s = sink();
+    let ts_us = s.epoch.elapsed().as_micros() as u64;
+    LOCAL.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        let local = slot.get_or_insert_with(|| {
+            let ring = Arc::new(Mutex::new(Ring::new()));
+            let tid = s.next_tid.fetch_add(1, Ordering::Relaxed);
+            s.rings.lock().unwrap().push(Arc::clone(&ring));
+            Local { tid, ring }
+        });
+        local
+            .ring
+            .lock()
+            .unwrap()
+            .push(Event { kind, phase, ts_us, tid: local.tid, arg, arg2 });
+    });
+}
+
+/// Drain every thread's ring into one stream, sorted by timestamp.
+/// Per-thread chronological order is preserved for equal timestamps
+/// (stable sort over per-ring-ordered input), which the exporter's
+/// begin/end pairing relies on.
+pub fn drain() -> Vec<Event> {
+    let s = sink();
+    let rings: Vec<Arc<Mutex<Ring>>> = s.rings.lock().unwrap().clone();
+    let mut out = Vec::new();
+    for ring in rings {
+        out.extend(ring.lock().unwrap().drain());
+    }
+    out.sort_by_key(|e| e.ts_us);
+    out
+}
+
+/// Record a point event (no duration).
+#[inline]
+pub fn instant(kind: EventKind, arg: u64) {
+    if enabled() {
+        record(kind, Phase::Instant, arg, 0);
+        metrics::record_instant(kind);
+    }
+}
+
+/// Open a span; the returned guard closes it on drop. When the recorder
+/// is disabled this constructs an inert guard and records nothing.
+#[inline]
+pub fn span(kind: EventKind, arg: u64) -> SpanGuard {
+    span2(kind, arg, 0)
+}
+
+/// [`span`] with a secondary payload.
+#[inline]
+pub fn span2(kind: EventKind, arg: u64, arg2: u64) -> SpanGuard {
+    let start = if enabled() {
+        record(kind, Phase::Begin, arg, arg2);
+        Some(Instant::now())
+    } else {
+        None
+    };
+    SpanGuard { kind, arg, arg2, start }
+}
+
+/// Guard for an open span. Whether it records was fixed at construction,
+/// so an enable/disable flip mid-span cannot orphan a begin event on
+/// this thread.
+pub struct SpanGuard {
+    kind: EventKind,
+    arg: u64,
+    arg2: u64,
+    start: Option<Instant>,
+}
+
+impl SpanGuard {
+    /// Update the payloads carried on the span's end event (e.g. a token
+    /// count only known after the work ran).
+    pub fn set_args(&mut self, arg: u64, arg2: u64) {
+        self.arg = arg;
+        self.arg2 = arg2;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(start) = self.start {
+            metrics::record_span(self.kind, start.elapsed().as_nanos() as u64);
+            record(self.kind, Phase::End, self.arg, self.arg2);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in EventKind::ALL {
+            assert_eq!(EventKind::from_name(k.name()), Some(k));
+            assert!(!k.category().is_empty());
+        }
+        assert_eq!(EventKind::from_name("no_such_kind"), None);
+    }
+
+    #[test]
+    fn disabled_span_records_nothing_and_is_inert() {
+        // The recorder is off by default in the test binary; a span built
+        // while disabled must never record, even across many drops.
+        assert!(!enabled());
+        for i in 0..100 {
+            let mut g = span(EventKind::Measure, i);
+            g.set_args(i, 1);
+        }
+        instant(EventKind::Plan, 7);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_when_full() {
+        let mut r = Ring::new();
+        let ev = |arg| Event {
+            kind: EventKind::Measure,
+            phase: Phase::Instant,
+            ts_us: arg,
+            tid: 0,
+            arg,
+            arg2: 0,
+        };
+        for i in 0..(RING_CAP as u64 + 10) {
+            r.push(ev(i));
+        }
+        let out = r.drain();
+        assert_eq!(out.len(), RING_CAP);
+        // Oldest 10 overwritten; order is oldest-first.
+        assert_eq!(out[0].arg, 10);
+        assert_eq!(out[RING_CAP - 1].arg, RING_CAP as u64 + 9);
+    }
+}

@@ -2,6 +2,7 @@
 //! the reasoning pipeline (prompt → LLM → parse → validate → ground →
 //! fallback), with cost and fallback accounting.
 
+use crate::obs;
 use crate::schedule::Transform;
 use crate::search::common::{ProposalContext, ProposalPolicy};
 use crate::transfer::Exemplar;
@@ -69,6 +70,9 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
             platform: ctx.platform,
             exemplars: &self.exemplars,
         };
+        // The span mirrors CostTracker: arg = prompt tokens metered for this
+        // call, arg2 = transforms the proposal resolved to.
+        let mut llm_span = obs::span(obs::EventKind::LlmCall, 0);
         let response = self.engine.complete(&prompt_ctx);
         self.costs
             .record(response.prompt_tokens, response.completion_tokens);
@@ -83,6 +87,7 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
             &mut self.rng,
             &mut self.fallbacks,
         );
+        llm_span.set_args(response.prompt_tokens, seq.len() as u64);
         // On total fallback `seq` is empty; the MCTS loop then expands with
         // the default random policy (Appendix G) — uninterrupted search.
         seq

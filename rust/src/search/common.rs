@@ -23,6 +23,7 @@ use std::sync::Arc;
 
 use crate::cost::{CostModel, Platform};
 use crate::db::{program_fingerprint, MeasureCache};
+use crate::obs;
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
 use crate::util::executor::{Executor, TaskGroup};
@@ -379,7 +380,9 @@ impl<'a> Evaluator<'a> {
 
     fn measure_inner(&mut self, candidate: &Schedule, fp: Option<u64>) -> Option<f64> {
         let lat = if let (Some(cache), Some(fp)) = (&mut self.cache, fp) {
-            match cache.get(fp, &self.platform_name) {
+            let known = cache.get(fp, &self.platform_name);
+            obs::instant(obs::EventKind::CacheProbe, known.is_some() as u64);
+            match known {
                 Some(known) => {
                     self.cache_hits += 1;
                     known
@@ -390,6 +393,7 @@ impl<'a> Evaluator<'a> {
                     }
                     self.cache_misses += 1;
                     self.used += 1;
+                    let _sp = obs::span(obs::EventKind::Measure, self.used as u64);
                     let lat = self
                         .hardware
                         .latency(&candidate.current, self.seed.wrapping_add(self.used as u64));
@@ -402,6 +406,7 @@ impl<'a> Evaluator<'a> {
                 return None;
             }
             self.used += 1;
+            let _sp = obs::span(obs::EventKind::Measure, self.used as u64);
             self.hardware
                 .latency(&candidate.current, self.seed.wrapping_add(self.used as u64))
         };
@@ -579,12 +584,17 @@ impl<'s, 'a> PlannedBatch<'s, 'a> {
         }
         let ev = &mut *self.ev;
         let cached = match (ev.cache.as_ref(), fp) {
-            (Some(cache), Some(fp)) => match cache.get(fp, &ev.platform_name) {
-                Some(known) => Some(BatchPlan::Hit(known)),
-                None => self.fp_to_job.get(&fp).map(|&j| BatchPlan::HitOfMiss { job: j }),
-            },
+            (Some(cache), Some(fp)) => {
+                let probe = match cache.get(fp, &ev.platform_name) {
+                    Some(known) => Some(BatchPlan::Hit(known)),
+                    None => self.fp_to_job.get(&fp).map(|&j| BatchPlan::HitOfMiss { job: j }),
+                };
+                obs::instant(obs::EventKind::CacheProbe, probe.is_some() as u64);
+                probe
+            }
             _ => None,
         };
+        obs::instant(obs::EventKind::Plan, self.plans.len() as u64);
         let plan = match cached {
             Some(p) => p,
             None => {
@@ -596,12 +606,18 @@ impl<'s, 'a> PlannedBatch<'s, 'a> {
                 self.n_jobs += 1;
                 let sample = ev.used + job + 1;
                 let seed = ev.seed.wrapping_add(sample as u64);
+                obs::instant(obs::EventKind::Submit, sample as u64);
                 // The job owns a CoW clone of the program (a handful of
                 // Arc bumps): the caller's candidate storage may move or
                 // grow while the measurement is in flight.
                 let hw = ev.hardware;
                 let prog = candidate.current.clone();
-                self.group.submit(move || hw.latency(&prog, seed));
+                self.group.submit(move || {
+                    // The span's `arg` is the plan-time sample number, so
+                    // a workers=N trace diffs against workers=1 by index.
+                    let _sp = obs::span(obs::EventKind::Measure, sample as u64);
+                    hw.latency(&prog, seed)
+                });
                 if let Some(f) = fp {
                     self.fp_to_job.insert(f, job);
                 }
@@ -619,6 +635,7 @@ impl<'s, 'a> PlannedBatch<'s, 'a> {
     pub(crate) fn finish(self, candidates: &[&Schedule]) -> Vec<Option<f64>> {
         debug_assert!(candidates.len() >= self.plans.len());
         let measured = self.group.wait();
+        let _sp = obs::span(obs::EventKind::Fold, self.n_jobs as u64);
         let ev = self.ev;
         let mut out: Vec<Option<f64>> = Vec::with_capacity(candidates.len());
         for (i, plan) in self.plans.iter().enumerate() {

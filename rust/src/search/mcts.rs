@@ -34,6 +34,7 @@ use std::collections::{HashMap, HashSet};
 
 use crate::cost::CostModel;
 use crate::db::{program_fingerprint, MeasureCache};
+use crate::obs;
 use crate::schedule::{sampler, Schedule};
 use crate::tir::Program;
 use crate::util::rng::Pcg;
@@ -264,6 +265,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                 // ---- selection: UCT descent to an expandable node ----------
                 let mut cur = 0usize;
                 let mut saturated_in_flight = false;
+                let select_span = obs::span(obs::EventKind::Select, step as u64);
                 loop {
                     let node = &nodes[cur];
                     let in_flight = pending_children.get(&cur).copied().unwrap_or(0);
@@ -293,6 +295,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                     }
                     cur = best_child;
                 }
+                drop(select_span);
                 if saturated_in_flight {
                     break;
                 }
@@ -307,10 +310,12 @@ impl SearchStrategy for MctsStrategy<'_> {
                         platform: ctx.platform,
                         step,
                     };
+                    let _sp = obs::span(obs::EventKind::Propose, nodes[cur].n as u64);
                     self.policy.propose(&pctx)
                 };
                 // Apply the proposal; if nothing applies, fall back to one
                 // random legal transform (Appendix G's fallback path).
+                let expand_span = obs::span(obs::EventKind::Expand, pending.len() as u64);
                 let (mut child_sched, applied) = nodes[cur].schedule.apply_all(&proposal);
                 if applied == 0 {
                     match sampler::random_transform(&nodes[cur].schedule.current, &mut rng) {
@@ -324,6 +329,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                         }
                     }
                 }
+                drop(expand_span);
 
                 // Dedup: if this program state already exists in the tree, do
                 // not add it again (tree stays acyclic); still spend a visit.
@@ -385,10 +391,11 @@ impl SearchStrategy for MctsStrategy<'_> {
                 continue; // saturated or out of legal moves; loop guards decide
             }
 
-            for (p, lat) in pending.into_iter().zip(lats) {
+            for (leaf_idx, (p, lat)) in pending.into_iter().zip(lats).enumerate() {
                 if lat.is_none() {
                     break; // unreachable: every pending leaf was planned
                 }
+                let _sp = obs::span(obs::EventKind::Backprop, leaf_idx as u64);
 
                 // ---- rollout: random continuation scored by the surrogate --
                 let rollout_seq =

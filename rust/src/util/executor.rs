@@ -49,13 +49,80 @@
 use std::collections::VecDeque;
 use std::marker::PhantomData;
 use std::panic::{self, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::obs;
+
 /// A queued task with its lifetime erased (see module-level Safety notes).
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Always-on per-deque scheduling counters (relaxed atomics bumped at
+/// sites that already hold the deque mutex — cheap enough to never gate).
+/// Recording them cannot change scheduling decisions or task results;
+/// they are strictly write-only telemetry.
+struct DequeStats {
+    own_pops: AtomicU64,
+    steals: AtomicU64,
+    idle_wakeups: AtomicU64,
+    queue_hwm: AtomicU64,
+}
+
+impl DequeStats {
+    fn new() -> DequeStats {
+        DequeStats {
+            own_pops: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            idle_wakeups: AtomicU64::new(0),
+            queue_hwm: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Snapshot of one worker's scheduling counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerStats {
+    /// Tasks this worker popped from its own deque (newest-first).
+    pub own_pops: u64,
+    /// Tasks this worker stole from other workers' deques.
+    pub steals: u64,
+    /// Times this worker woke from an idle park.
+    pub idle_wakeups: u64,
+    /// High-water mark of this worker's deque depth.
+    pub queue_hwm: u64,
+}
+
+/// Snapshot of an executor's scheduling counters ([`Executor::stats`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ExecutorStats {
+    /// One entry per worker thread (empty for the serial executor).
+    pub per_worker: Vec<WorkerStats>,
+    /// Steals performed by helping submitters (threads blocked on a
+    /// group running queued work instead of sleeping).
+    pub help_steals: u64,
+}
+
+impl ExecutorStats {
+    pub fn total_own_pops(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.own_pops).sum()
+    }
+
+    /// Worker steals plus helping-submitter steals.
+    pub fn total_steals(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.steals).sum::<u64>() + self.help_steals
+    }
+
+    pub fn total_idle_wakeups(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.idle_wakeups).sum()
+    }
+
+    /// Deepest any single deque ever got.
+    pub fn queue_hwm(&self) -> u64 {
+        self.per_worker.iter().map(|w| w.queue_hwm).max().unwrap_or(0)
+    }
+}
 
 /// State shared between the executor handle, its worker threads and every
 /// task group (groups hold their own `Arc`, so a group can finish — by
@@ -85,13 +152,23 @@ struct Shared {
     sync: Mutex<()>,
     work_cv: Condvar,
     done_cv: Condvar,
+    /// Per-deque telemetry, parallel to `deques` (see [`DequeStats`]).
+    stats: Vec<DequeStats>,
+    /// Steals by helping submitters (they have no home deque).
+    help_steals: AtomicU64,
 }
 
 impl Shared {
     fn push(&self, job: Job) {
         debug_assert!(!self.deques.is_empty(), "serial executors never queue");
         let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.deques.len();
-        self.deques[i].lock().unwrap().push_back(job);
+        let depth = {
+            let mut q = self.deques[i].lock().unwrap();
+            q.push_back(job);
+            q.len() as u64
+        };
+        self.stats[i].queue_hwm.fetch_max(depth, Ordering::Relaxed);
+        obs::metrics::exec_queue_depth(depth);
         self.pending.fetch_add(1, Ordering::Release);
         let _g = self.sync.lock().unwrap();
         self.work_cv.notify_one();
@@ -105,11 +182,15 @@ impl Shared {
         }
         if let Some(j) = self.deques[home % n].lock().unwrap().pop_back() {
             self.pending.fetch_sub(1, Ordering::AcqRel);
+            self.stats[home % n].own_pops.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::exec_own_pop();
             return Some(j);
         }
         for k in 1..n {
             if let Some(j) = self.deques[(home + k) % n].lock().unwrap().pop_front() {
                 self.pending.fetch_sub(1, Ordering::AcqRel);
+                self.stats[home % n].steals.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::exec_steal();
                 return Some(j);
             }
         }
@@ -121,6 +202,8 @@ impl Shared {
         for q in &self.deques {
             if let Some(j) = q.lock().unwrap().pop_front() {
                 self.pending.fetch_sub(1, Ordering::AcqRel);
+                self.help_steals.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::exec_help_steal();
                 return Some(j);
             }
         }
@@ -158,6 +241,8 @@ fn worker_loop(shared: Arc<Shared>, home: usize) {
         if shared.pending.load(Ordering::Acquire) == 0 {
             // Timeout is a backstop only; pushes notify under `sync`.
             let _ = shared.work_cv.wait_timeout(g, Duration::from_millis(50)).unwrap();
+            shared.stats[home].idle_wakeups.fetch_add(1, Ordering::Relaxed);
+            obs::metrics::exec_idle_wakeup();
         }
     }
 }
@@ -201,6 +286,8 @@ impl Executor {
             sync: Mutex::new(()),
             work_cv: Condvar::new(),
             done_cv: Condvar::new(),
+            stats: (0..threads).map(|_| DequeStats::new()).collect(),
+            help_steals: AtomicU64::new(0),
         });
         let handles = (0..threads)
             .map(|i| {
@@ -228,6 +315,28 @@ impl Executor {
     /// Whether groups run inline on the submitter (no worker threads).
     pub fn is_serial(&self) -> bool {
         self.workers <= 1
+    }
+
+    /// Snapshot this executor's scheduling counters: per-worker own-pops,
+    /// steals, idle wakeups and queue-depth high-water marks, plus steals
+    /// by helping submitters. Counters are always on (recording them never
+    /// affects scheduling or results) and only ever grow, so deltas of two
+    /// snapshots attribute work to a window.
+    pub fn stats(&self) -> ExecutorStats {
+        ExecutorStats {
+            per_worker: self
+                .shared
+                .stats
+                .iter()
+                .map(|s| WorkerStats {
+                    own_pops: s.own_pops.load(Ordering::Relaxed),
+                    steals: s.steals.load(Ordering::Relaxed),
+                    idle_wakeups: s.idle_wakeups.load(Ordering::Relaxed),
+                    queue_hwm: s.queue_hwm.load(Ordering::Relaxed),
+                })
+                .collect(),
+            help_steals: self.shared.help_steals.load(Ordering::Relaxed),
+        }
     }
 
     /// An incremental task group: submit tasks one at a time (they start
@@ -562,6 +671,26 @@ mod tests {
             // Dropped without wait(): must still run everything.
         }
         assert_eq!(counter.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn stats_account_for_every_dispatched_task() {
+        let exec = Executor::new(4);
+        let out = exec.run((0..120usize).map(|i| move || i).collect::<Vec<_>>());
+        assert_eq!(out.len(), 120);
+        let stats = exec.stats();
+        assert_eq!(stats.per_worker.len(), 3, "workers-1 deques");
+        // Every queued job was popped exactly once, by its owner, a
+        // stealing worker, or the helping submitter.
+        assert_eq!(stats.total_own_pops() + stats.total_steals(), 120);
+        assert!(stats.queue_hwm() >= 1);
+
+        // Serial executors queue nothing and report no workers.
+        let serial = Executor::serial();
+        serial.run(vec![|| 1usize, || 2usize]);
+        let s = serial.stats();
+        assert!(s.per_worker.is_empty());
+        assert_eq!(s.total_steals(), 0);
     }
 
     #[test]

@@ -138,6 +138,17 @@ mod tests {
     }
 
     #[test]
+    fn percentile_sorts_unsorted_input() {
+        // Callers hand over raw buffers (e.g. an unsorted latency
+        // reservoir); percentile must not assume order or mutate input.
+        let xs = [9.0, 1.0, 5.0, 3.0, 7.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 9.0);
+        assert_eq!(xs, [9.0, 1.0, 5.0, 3.0, 7.0], "input untouched");
+    }
+
+    #[test]
     fn summary_stream() {
         let mut s = Summary::new();
         for x in [1.0, 2.0, 3.0] {
