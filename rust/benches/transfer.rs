@@ -8,12 +8,134 @@
 //! and once with `transfer` rebasing A's records into warm starts. Writes
 //! `BENCH_transfer.json` (`name`, `samples_to_target`, `best_speedup`,
 //! plus a `sample_reduction` summary entry) for cross-PR tracking.
-//! `RCC_BENCH_QUICK=1` shrinks budgets for CI smoke;
+//!
+//! Since PR 7 it also measures the ANN transfer index at scale: for
+//! synthetic databases of growing size it reports index build time,
+//! per-query time scan vs index, the speedup, and the index's recall of
+//! the scan's exact top-k (`index_scale_*` entries).
+//!
+//! `RCC_BENCH_QUICK=1` shrinks budgets and database sizes for CI smoke;
 //! `RCC_BENCH_TRANSFER_JSON` overrides the output path.
 
+use std::time::Instant;
+
 use reasoning_compiler::coordinator::{run_session_on, Strategy, TuneConfig};
+use reasoning_compiler::db::{shape_class, workload_fingerprint, Database, TuningRecord};
+use reasoning_compiler::schedule::Transform;
 use reasoning_compiler::tir::workload;
+use reasoning_compiler::transfer::{find_matches, uses_index, workload_extents};
 use reasoning_compiler::util::json::{arr, num, s, Json};
+use reasoning_compiler::util::Pcg;
+
+/// Random MoE-matmul dims (power-of-two): one shape class, many
+/// distinct workload fingerprints.
+fn random_dims(rng: &mut Pcg) -> (i64, i64, i64) {
+    (
+        1i64 << (2 + rng.gen_range(5)),
+        1i64 << (8 + rng.gen_range(7)),
+        1i64 << (8 + rng.gen_range(6)),
+    )
+}
+
+/// Scan-vs-index retrieval at growing database sizes. Returns one JSON
+/// entry per size with build/query times, speedup and recall.
+fn index_scale_series(quick: bool) -> Vec<Json> {
+    const K: usize = 8;
+    const QUERIES: usize = 32;
+    let sizes: &[usize] = if quick { &[1_000, 5_000] } else { &[1_000, 10_000, 100_000] };
+
+    let mut out = Vec::new();
+    println!("\n== index scale series (k = {K}, {QUERIES} queries per size) ==");
+    for &n in sizes {
+        // Synthetic corpus: real shape class + extents, per-shape
+        // fingerprints, random latencies, sequential timestamps.
+        let mut rng = Pcg::new(7);
+        let mut scan_db = Database::in_memory();
+        for i in 0..n {
+            let (t, o, i_dim) = random_dims(&mut rng);
+            let prog = workload::moe_matmul("scale_src", t, o, i_dim);
+            scan_db.add(TuningRecord {
+                workload_fp: workload_fingerprint(&prog),
+                workload: format!("scale_{t}x{o}x{i_dim}"),
+                platform: "core_i9".to_string(),
+                strategy: "synth".to_string(),
+                trace: vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 4 }],
+                latency: 0.5 + 9.0 * rng.gen_f64(),
+                baseline_latency: 10.0,
+                seed: 7,
+                timestamp: i as u64,
+                shape_class: shape_class(&prog),
+                extents: workload_extents(&prog),
+            });
+        }
+        let mut ix_db = scan_db.clone();
+
+        // Query workloads drawn from the same shape distribution (their
+        // own fingerprints are excluded from matching, like a real tune).
+        let mut qrng = Pcg::new(0xBEEF);
+        let queries: Vec<_> = (0..QUERIES)
+            .map(|_| {
+                let (t, o, i_dim) = random_dims(&mut qrng);
+                workload::moe_matmul("scale_query", t, o, i_dim)
+            })
+            .collect();
+
+        let t0 = Instant::now();
+        let scan_results: Vec<Vec<(u64, u64)>> = queries
+            .iter()
+            .map(|q| {
+                find_matches(&scan_db, q, "core_i9", K)
+                    .iter()
+                    .map(|m| (m.record.workload_fp, m.record.timestamp))
+                    .collect()
+            })
+            .collect();
+        let scan_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let t0 = Instant::now();
+        ix_db.attach_transfer_index(0);
+        let build_ms = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(uses_index(&ix_db), "index must engage at threshold 0");
+
+        let t0 = Instant::now();
+        let ix_results: Vec<Vec<(u64, u64)>> = queries
+            .iter()
+            .map(|q| {
+                find_matches(&ix_db, q, "core_i9", K)
+                    .iter()
+                    .map(|m| (m.record.workload_fp, m.record.timestamp))
+                    .collect()
+            })
+            .collect();
+        let index_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        // Recall: fraction of the scan's exact top-k the index returned.
+        let (mut hit, mut want) = (0usize, 0usize);
+        for (exact, approx) in scan_results.iter().zip(&ix_results) {
+            want += exact.len();
+            hit += exact.iter().filter(|e| approx.contains(e)).count();
+        }
+        let recall = if want == 0 { 1.0 } else { hit as f64 / want as f64 };
+        let speedup = scan_ms / index_ms.max(1e-9);
+        println!(
+            "{n:>7} records: build {build_ms:>8.1} ms, scan {:>8.3} ms/q, \
+             index {:>8.3} ms/q — {speedup:>6.1}x, recall {recall:.3}",
+            scan_ms / QUERIES as f64,
+            index_ms / QUERIES as f64,
+        );
+
+        let mut o = Json::obj();
+        o.set("name", s(&format!("index_scale_{n}")))
+            .set("records", num(n as f64))
+            .set("build_ms", num(build_ms))
+            .set("scan_query_ms", num(scan_ms / QUERIES as f64))
+            .set("index_query_ms", num(index_ms / QUERIES as f64))
+            .set("speedup_vs_scan", num(speedup))
+            .set("recall", num(recall));
+        out.push(o);
+    }
+    out
+}
 
 fn main() {
     let quick = std::env::var_os("RCC_BENCH_QUICK").is_some();
@@ -104,7 +226,7 @@ fn main() {
         "value",
         num(warm_samples.map_or(-1.0, |n| n as f64 / cold_samples.max(1) as f64)),
     );
-    let doc = arr(vec![
+    let mut entries = vec![
         entry("cold", cold_samples as f64, cold_run.best_speedup()),
         entry(
             "transfer_warm",
@@ -112,7 +234,9 @@ fn main() {
             warm_run.best_speedup(),
         ),
         summary,
-    ]);
+    ];
+    entries.extend(index_scale_series(quick));
+    let doc = arr(entries);
     let out_path = std::env::var("RCC_BENCH_TRANSFER_JSON")
         .unwrap_or_else(|_| "BENCH_transfer.json".to_string());
     match std::fs::write(&out_path, doc.to_pretty() + "\n") {

@@ -79,6 +79,16 @@ pub struct TuneConfig {
     pub transfer: bool,
     /// How many transfer matches to rebase into warm starts / exemplars.
     pub transfer_top_k: usize,
+    /// Attach the ANN transfer index (`transfer::index`) to the session's
+    /// database so similarity retrieval goes sublinear on large databases.
+    /// Small databases stay on the exact scan regardless (see
+    /// `transfer_index_threshold`). `--no-transfer-index` disables;
+    /// `--transfer-index` re-enables.
+    pub transfer_index: bool,
+    /// Minimum committed record count before retrieval switches from the
+    /// exact linear scan to the ANN index. Below it results are
+    /// bit-identical to the scan by construction.
+    pub transfer_index_threshold: usize,
     /// Share one measurement cache across the session's repeats
     /// (`--share-repeat-cache`): repeats answer each other's measurements,
     /// saving samples at the cost of the 20-repeat independence contract
@@ -133,6 +143,8 @@ impl Default for TuneConfig {
             warm_top_k: 8,
             transfer: true,
             transfer_top_k: 4,
+            transfer_index: true,
+            transfer_index_threshold: 256,
             share_repeat_cache: false,
             workers: 0,
             eval_batch: 1,
@@ -198,6 +210,9 @@ impl TuneConfig {
             warm_top_k: doc.get_usize("db.warm_top_k", d.warm_top_k),
             transfer: doc.get_bool("db.transfer", d.transfer),
             transfer_top_k: doc.get_usize("db.transfer_top_k", d.transfer_top_k),
+            transfer_index: doc.get_bool("db.transfer_index", d.transfer_index),
+            transfer_index_threshold: doc
+                .get_usize("db.transfer_index_threshold", d.transfer_index_threshold),
             share_repeat_cache: doc
                 .get_bool("db.share_repeat_cache", d.share_repeat_cache),
             workers: doc.get_usize("search.workers", d.workers),
@@ -246,6 +261,14 @@ impl TuneConfig {
             self.transfer = false;
         }
         self.transfer_top_k = args.opt_usize("transfer-top-k", self.transfer_top_k);
+        if args.has_flag("transfer-index") {
+            self.transfer_index = true;
+        }
+        if args.has_flag("no-transfer-index") {
+            self.transfer_index = false;
+        }
+        self.transfer_index_threshold =
+            args.opt_usize("transfer-index-threshold", self.transfer_index_threshold);
         if args.has_flag("share-repeat-cache") {
             self.share_repeat_cache = true;
         }
@@ -375,6 +398,35 @@ history_depth = 3
         let args = Args::parse("tune --transfer".split_whitespace().map(String::from));
         c.apply_cli(&args);
         assert!(c.transfer, "--transfer re-enables after --no-transfer");
+    }
+
+    #[test]
+    fn transfer_index_knobs_parse_and_override() {
+        let c = TuneConfig::default();
+        assert!(c.transfer_index, "index defaults on (scan below threshold)");
+        assert_eq!(c.transfer_index_threshold, 256);
+
+        let doc =
+            Doc::parse("[db]\ntransfer_index = false\ntransfer_index_threshold = 64\n")
+                .unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert!(!c.transfer_index);
+        assert_eq!(c.transfer_index_threshold, 64);
+
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --no-transfer-index --transfer-index-threshold 32"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args);
+        assert!(!c.transfer_index);
+        assert_eq!(c.transfer_index_threshold, 32);
+
+        let args =
+            Args::parse("tune --transfer-index".split_whitespace().map(String::from));
+        c.apply_cli(&args);
+        assert!(c.transfer_index, "--transfer-index re-enables");
     }
 
     #[test]

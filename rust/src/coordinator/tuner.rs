@@ -316,6 +316,16 @@ pub fn run_session_on_with(
         Some(p) => Some(Database::open(Path::new(p))?),
         None => None,
     };
+    // Attach the ANN transfer index before hint derivation so similarity
+    // retrieval goes sublinear on large databases. Below the threshold
+    // retrieval stays on the exact scan, so small sessions are
+    // bit-identical with the index attached or not.
+    if cfg.transfer && cfg.transfer_index && (cfg.warm_start || cfg.strategy == Strategy::LlmMcts)
+    {
+        if let Some(d) = db.as_mut() {
+            d.attach_transfer_index(cfg.transfer_index_threshold);
+        }
+    }
     let hints = db.as_ref().map(|db| {
         let (warm, cache) = db.hints(program, &cfg.platform, cfg.warm_top_k);
         let mut hints = SearchHints {

@@ -22,6 +22,7 @@ use anyhow::{Context, Result};
 use crate::obs;
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
+use crate::transfer::index::{dominated_positions, TransferIndex};
 use crate::util::json::{self, Json};
 
 use super::cache::MeasureCache;
@@ -240,6 +241,10 @@ pub struct Database {
     header_cum_skipped: usize,
     /// Most recent gc outcome, carried by the header line.
     pub last_gc: Option<GcInfo>,
+    /// ANN transfer index ([`Database::attach_transfer_index`]); kept in
+    /// sync by `commit` (incremental) and `gc` (rebuild). `None` until a
+    /// caller opts in — the db itself never needs it.
+    index: Option<TransferIndex>,
 }
 
 impl Database {
@@ -257,6 +262,7 @@ impl Database {
             skipped_lines,
             header_cum_skipped,
             last_gc,
+            index: None,
         })
     }
 
@@ -296,7 +302,53 @@ impl Database {
             skipped_lines: 0,
             header_cum_skipped: 0,
             last_gc: None,
+            index: None,
         }
+    }
+
+    /// Attach the ANN transfer index: load the `<db>.idx` sidecar when it
+    /// is fresh, rebuild (and re-save) it otherwise. Records without
+    /// transfer metadata (persisted before shape classes existed) are
+    /// excluded with one aggregated warning — mirroring the
+    /// malformed-JSONL convention, never per-record spam. Idempotent when
+    /// the attached index already covers every record.
+    pub fn attach_transfer_index(&mut self, threshold: usize) {
+        if self
+            .index
+            .as_ref()
+            .map_or(false, |ix| ix.threshold() == threshold && ix.covered() == self.records.len())
+        {
+            return;
+        }
+        let ix = match &self.path {
+            Some(path) => TransferIndex::load(path, &self.records, threshold).unwrap_or_else(|| {
+                let ix = TransferIndex::build(&self.records, threshold);
+                if let Err(e) = ix.save(path) {
+                    eprintln!(
+                        "warning: could not write transfer index sidecar for {}: {e}",
+                        path.display()
+                    );
+                }
+                ix
+            }),
+            None => TransferIndex::build(&self.records, threshold),
+        };
+        if ix.sentinel_skipped() > 0 {
+            eprintln!(
+                "warning: excluded {} pre-transfer record(s) without shape metadata from the transfer index{}",
+                ix.sentinel_skipped(),
+                self.path
+                    .as_deref()
+                    .map(|p| format!(" for {}", p.display()))
+                    .unwrap_or_default()
+            );
+        }
+        self.index = Some(ix);
+    }
+
+    /// The attached ANN transfer index, if any.
+    pub fn transfer_index(&self) -> Option<&TransferIndex> {
+        self.index.as_ref()
     }
 
     /// Lifetime malformed-line skips: whichever is larger of the
@@ -358,6 +410,19 @@ impl Database {
                 .with_context(|| format!("appending to tuning db {}", path.display()))?;
         }
         self.committed = self.records.len();
+        // Grow the attached ANN index incrementally with the new tail and
+        // re-stamp the sidecar against the file we just appended to.
+        if let Some(ix) = &mut self.index {
+            ix.extend_from(&self.records);
+            if let Some(path) = &self.path {
+                if let Err(e) = ix.save(path) {
+                    eprintln!(
+                        "warning: could not update transfer index sidecar for {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+        }
         Ok(n)
     }
 
@@ -378,6 +443,17 @@ impl Database {
     /// leaves staged records staged. Returns how many (parseable) records
     /// were kept and dropped.
     pub fn gc(&mut self, k: usize) -> Result<GcReport> {
+        self.gc_with(k, false)
+    }
+
+    /// [`Database::gc`] with the record-aging reaper: when
+    /// `reap_dominated` is set, records strictly dominated by a fresher
+    /// record of the same (workload, platform) pair — later timestamp
+    /// (file position as tie-break) at equal-or-lower latency, the same
+    /// relation that down-weights them at retrieval — are dropped even
+    /// when they would otherwise make the per-pair top-k. Opt-in: a plain
+    /// gc keeps every staged record it can (`rcc db gc --reap-dominated`).
+    pub fn gc_with(&mut self, k: usize, reap_dominated: bool) -> Result<GcReport> {
         /// One line of the rewritten file: a compactable record (by index
         /// into the merged record list) or a foreign line kept verbatim.
         enum Line {
@@ -433,7 +509,7 @@ impl Database {
             None => None,
         };
 
-        let keep = self.keep_indices(k);
+        let keep = self.keep_indices(k, reap_dominated);
         let total = self.records.len();
         let info = GcInfo {
             kept: keep.len(),
@@ -482,14 +558,35 @@ impl Database {
         self.committed = self.records.len();
         self.header_cum_skipped = cum_skipped;
         self.last_gc = Some(info);
+        // Record positions changed wholesale: rebuild the attached ANN
+        // index from the compacted set and re-stamp its sidecar.
+        if let Some(old) = self.index.take() {
+            let ix = TransferIndex::build(&self.records, old.threshold());
+            if let Some(path) = &self.path {
+                if let Err(e) = ix.save(path) {
+                    eprintln!(
+                        "warning: could not update transfer index sidecar for {}: {e}",
+                        path.display()
+                    );
+                }
+            }
+            self.index = Some(ix);
+        }
         gc_span.set_args(report.kept as u64, report.dropped as u64);
         Ok(report)
     }
 
     /// Indices of the records `gc` keeps: per (workload_fp, platform) pair,
     /// the `k` lowest-latency distinct traces. Ties break on earlier file
-    /// position, keeping the pass deterministic.
-    fn keep_indices(&self, k: usize) -> BTreeSet<usize> {
+    /// position, keeping the pass deterministic. With `reap_dominated`,
+    /// records superseded by fresher equal-or-better work are skipped
+    /// before the top-k is taken.
+    fn keep_indices(&self, k: usize, reap_dominated: bool) -> BTreeSet<usize> {
+        let dominated = if reap_dominated {
+            dominated_positions(&self.records)
+        } else {
+            BTreeSet::new()
+        };
         let mut by_pair: BTreeMap<(u64, &str), Vec<usize>> = BTreeMap::new();
         for (i, r) in self.records.iter().enumerate() {
             by_pair.entry((r.workload_fp, r.platform.as_str())).or_default().push(i);
@@ -507,6 +604,9 @@ impl Database {
             for i in idxs {
                 if taken.len() >= k {
                     break;
+                }
+                if dominated.contains(&i) {
+                    continue;
                 }
                 if taken.iter().any(|&t| self.records[t].trace == self.records[i].trace) {
                     continue;
@@ -830,6 +930,38 @@ mod tests {
         assert_eq!(reread.len(), 2, "staged record must be flushed by gc");
         assert_eq!(reread.best(7, "core_i9").unwrap().latency, 1.0);
         assert_eq!(db.commit().unwrap(), 0, "gc left nothing staged");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn gc_reap_dominated_is_opt_in_and_spares_sentinels() {
+        let path = temp_db_path("gc_reap");
+        let mut db = Database::open(&path).unwrap();
+        let eligible = |latency: f64, ts: u64, factor: i64| {
+            let mut r = rec(7, "core_i9", latency, factor);
+            r.shape_class = 0xC1A55;
+            r.extents = vec![vec![16, 512, 512]];
+            r.timestamp = ts;
+            r
+        };
+        db.add(eligible(2.0, 100, 8)); // superseded by the fresher 1.5
+        db.add(eligible(1.5, 200, 4)); // freshest of the pair
+        db.add(eligible(1.0, 150, 16)); // best latency: nothing dominates it
+        db.commit().unwrap();
+
+        // A plain gc with room keeps everything.
+        assert_eq!(db.gc(8).unwrap(), GcReport { kept: 3, dropped: 0 });
+        // Reaping drops the superseded record even though k has room.
+        assert_eq!(db.gc_with(8, true).unwrap(), GcReport { kept: 2, dropped: 1 });
+        let mut lat: Vec<f64> = db.records().iter().map(|r| r.latency).collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(lat, vec![1.0, 1.5]);
+
+        // Records without transfer metadata never participate in the
+        // domination relation — in either direction.
+        db.add(rec(9, "core_i9", 5.0, 2));
+        db.add(rec(9, "core_i9", 4.0, 4));
+        assert_eq!(db.gc_with(8, true).unwrap(), GcReport { kept: 4, dropped: 0 });
         std::fs::remove_file(&path).ok();
     }
 

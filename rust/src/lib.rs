@@ -28,10 +28,13 @@
 //! - [`db`] — the persistent tuning-record database: structural workload/
 //!   program fingerprints, JSONL tuning records with provenance, the
 //!   measurement cache, and warm-start hints derived from past runs.
-//! - [`transfer`] — cross-workload transfer tuning: a shape-class
-//!   similarity index over the database, a trace rebaser that replays
-//!   recorded traces onto differently-sized workloads, and the few-shot
-//!   exemplar engine feeding accumulated feedback into LLM prompts.
+//! - [`transfer`] — cross-workload transfer tuning: shape-class
+//!   similarity matching over the database (exact scan or, at scale, an
+//!   HNSW-style ANN index persisted as a `<db>.idx` sidecar, with
+//!   record aging), a trace rebaser that replays recorded traces onto
+//!   differently-sized workloads, and the bottleneck-conditioned
+//!   few-shot exemplar engine feeding accumulated feedback into LLM
+//!   prompts.
 //! - [`coordinator`] — tuning sessions, config system, serving loop.
 //! - [`obs`] — the observability plane: a lock-cheap span/event recorder
 //!   with stable event kinds across search, batch evaluation, LLM calls,

@@ -12,15 +12,16 @@ use reasoning_compiler::coordinator::{
     run_e2e, run_session, tune_models, Registry, Server, ServerConfig, SessionTelemetry,
     Strategy, TuneConfig, DEFAULT_DB_PATH,
 };
-use reasoning_compiler::db::{workload_fingerprint, Database};
+use reasoning_compiler::db::{workload_fingerprint, Database, TuningRecord};
 use reasoning_compiler::cost::{features, Platform};
 use reasoning_compiler::obs;
 use reasoning_compiler::reasoning::{self, ModelProfile, PromptContext};
 use reasoning_compiler::report::{ablations, costs, figure3, platforms, Scale};
 use reasoning_compiler::runtime::Manifest;
-use reasoning_compiler::schedule::Schedule;
+use reasoning_compiler::schedule::{Schedule, Transform};
 use reasoning_compiler::tir::{printer, workload, WorkloadId};
 use reasoning_compiler::util::cli::Args;
+use reasoning_compiler::util::rng::Pcg;
 use reasoning_compiler::util::json::Json;
 
 const HELP: &str = "\
@@ -39,6 +40,11 @@ Tuning
                              (rebased warm starts + LLM exemplars from
                              structurally similar recorded workloads)
               --transfer-top-k N  similar records to rebase (default 4)
+              --transfer-index | --no-transfer-index  ANN transfer index
+                             over the database (sublinear retrieval on
+                             large dbs; small dbs stay on the exact scan)
+              --transfer-index-threshold N  records before retrieval
+                             switches from scan to index (default 256)
               --share-repeat-cache  pool measurements across a session's
                              repeats (saves samples; waives the repeats'
                              independence contract — default off)
@@ -60,6 +66,12 @@ Tuning database
               --workload NAME --platform NAME [--k N] [--db FILE]
   db gc       Compact the database: keep the top-k records per
               (workload, platform), drop the rest. [--k N] [--db FILE]
+              [--reap-dominated]  also drop records superseded by fresher
+              equal-or-faster work on the same workload (the transfer
+              aging policy; default keeps them, down-weighted)
+  db synth    Append a synthetic record corpus (for transfer-index
+              benchmarking). [--records N] [--seed N] [--platform NAME]
+              [--db FILE]
 
 Transfer tuning (cross-workload reuse of the database)
   transfer match      Records from structurally similar workloads (same
@@ -69,6 +81,10 @@ Transfer tuning (cross-workload reuse of the database)
                       workload and verify it replays. Same options.
   transfer exemplars  Print the few-shot exemplar block the LLM prompts
                       embed for a workload. Same options.
+  Transfer actions attach the ANN index sidecar (<db>.idx) and report the
+  retrieval path taken (`retrieval: index|scan`); databases smaller than
+  --transfer-index-threshold (default 256) always use the exact scan.
+  --no-transfer-index forces the scan at any size.
 
 Paper experiments (each accepts --scale smoke|default|full, --seed, --out DIR)
   figure3     Fig. 3 / Table 3 convergence curves
@@ -521,16 +537,54 @@ fn cmd_db(args: &Args) -> Result<()> {
     match action {
         "gc" => {
             let k = args.opt_usize("k", 8);
-            let report = db.gc(k)?;
+            let reap = args.has_flag("reap-dominated");
+            let report = db.gc_with(k, reap)?;
             // Total from the report, not this handle's pre-gc snapshot:
             // gc re-reads the file and may see other tuners' commits.
             println!(
                 "compacted {}: kept {} of {} records, dropped {} \
-                 (top-{k} per workload/platform)",
+                 (top-{k} per workload/platform{})",
                 db_path.display(),
                 report.kept,
                 report.kept + report.dropped,
-                report.dropped
+                report.dropped,
+                if reap { ", dominated records reaped" } else { "" }
+            );
+            Ok(())
+        }
+        "synth" => {
+            let n = args.opt_usize("records", 5000);
+            let seed = args.opt_u64("seed", 1);
+            let platform = args.opt_or("platform", "core_i9");
+            let mut rng = Pcg::new(seed);
+            let start = db.len();
+            for i in 0..n {
+                // Power-of-two MoE matmul shapes: one shape class, many
+                // distinct workload fingerprints, realistic extent spread.
+                let tokens = 1i64 << (2 + rng.gen_range(5));
+                let out_dim = 1i64 << (8 + rng.gen_range(7));
+                let in_dim = 1i64 << (8 + rng.gen_range(6));
+                let prog = workload::moe_matmul("synth", tokens, out_dim, in_dim);
+                let factor = 1i64 << (1 + rng.gen_range(4));
+                db.add(TuningRecord {
+                    workload_fp: workload_fingerprint(&prog),
+                    workload: format!("synth_{tokens}x{out_dim}x{in_dim}"),
+                    platform: platform.to_string(),
+                    strategy: "synth".to_string(),
+                    trace: vec![Transform::TileSize { stage: 0, loop_idx: 1, factor }],
+                    latency: 0.5 + 9.0 * rng.gen_f64(),
+                    baseline_latency: 10.0,
+                    seed,
+                    timestamp: (start + i) as u64,
+                    shape_class: reasoning_compiler::db::shape_class(&prog),
+                    extents: reasoning_compiler::transfer::workload_extents(&prog),
+                });
+            }
+            db.commit()?;
+            println!(
+                "synthesized {n} records into {} ({} total)",
+                db_path.display(),
+                db.len()
             );
             Ok(())
         }
@@ -585,7 +639,7 @@ fn cmd_db(args: &Args) -> Result<()> {
             Ok(())
         }
         other => Err(anyhow!(
-            "unknown db action {other:?}; use `db stats`, `db top` or `db gc`"
+            "unknown db action {other:?}; use `db stats`, `db top`, `db gc` or `db synth`"
         )),
     }
 }
@@ -605,11 +659,21 @@ fn cmd_transfer(args: &Args) -> Result<()> {
     let w = WorkloadId::from_name(workload)
         .ok_or_else(|| anyhow!("unknown workload {workload}"))?;
     let base = w.build();
-    let db = Database::open(&db_path)?;
+    let mut db = Database::open(&db_path)?;
+    // Attach the ANN index unless disabled; retrieval still falls back to
+    // the exact scan below the threshold (`transfer::uses_index`).
+    if !args.has_flag("no-transfer-index") {
+        db.attach_transfer_index(args.opt_usize("transfer-index-threshold", 256));
+    }
+    let db = db;
 
     match action {
         "match" => {
             let matches = transfer::find_matches(&db, &base, platform, k);
+            println!(
+                "retrieval: {}",
+                if transfer::uses_index(&db) { "index" } else { "scan" }
+            );
             if matches.is_empty() {
                 println!(
                     "no structurally similar records for {workload}/{platform} in {} \
@@ -630,7 +694,7 @@ fn cmd_transfer(args: &Args) -> Result<()> {
             for m in &matches {
                 let rb = transfer::rebase_trace(&base, &m.record.trace);
                 println!(
-                    "{:<18} {:>9.3} {:>8.2}x {:>7} {:<10} {} kept, {} adjusted, {} dropped",
+                    "{:<18} {:>9.3} {:>8.2}x {:>7} {:<10} {} kept, {} adjusted, {} dropped{}",
                     m.record.workload,
                     m.distance,
                     m.record.speedup(),
@@ -638,7 +702,8 @@ fn cmd_transfer(args: &Args) -> Result<()> {
                     m.record.strategy,
                     rb.trace.len(),
                     rb.adjusted,
-                    rb.dropped
+                    rb.dropped,
+                    if m.superseded { "  [superseded]" } else { "" }
                 );
             }
             Ok(())

@@ -43,6 +43,7 @@
 //! | `db_gc`         | db     | span         | records kept               |
 //! | `serve_enqueue` | serve  | instant      | queue depth after enqueue  |
 //! | `serve_batch`   | serve  | span         | batch size                 |
+//! | `transfer_query` | db    | span         | candidates considered (`arg2`: 1 = index, 0 = scan) |
 
 pub mod export;
 pub mod metrics;

@@ -17,7 +17,7 @@ use std::time::Instant;
 use super::metrics;
 
 /// Number of distinct event kinds (array sizing for the counters).
-pub const NUM_KINDS: usize = 14;
+pub const NUM_KINDS: usize = 15;
 
 /// Events a thread's ring holds before overwriting the oldest.
 pub const RING_CAP: usize = 1 << 18;
@@ -40,6 +40,7 @@ pub enum EventKind {
     DbGc = 11,
     ServeEnqueue = 12,
     ServeBatch = 13,
+    TransferQuery = 14,
 }
 
 impl EventKind {
@@ -58,6 +59,7 @@ impl EventKind {
         EventKind::DbGc,
         EventKind::ServeEnqueue,
         EventKind::ServeBatch,
+        EventKind::TransferQuery,
     ];
 
     /// Stable wire name (used as the Chrome trace `name` field).
@@ -77,6 +79,7 @@ impl EventKind {
             EventKind::DbGc => "db_gc",
             EventKind::ServeEnqueue => "serve_enqueue",
             EventKind::ServeBatch => "serve_batch",
+            EventKind::TransferQuery => "transfer_query",
         }
     }
 
@@ -92,7 +95,7 @@ impl EventKind {
             | EventKind::Submit
             | EventKind::Fold => "batch",
             EventKind::LlmCall => "llm",
-            EventKind::DbCommit | EventKind::DbGc => "db",
+            EventKind::DbCommit | EventKind::DbGc | EventKind::TransferQuery => "db",
             EventKind::ServeEnqueue | EventKind::ServeBatch => "serve",
         }
     }
@@ -111,7 +114,8 @@ pub enum Phase {
 
 /// One recorded event. `arg` carries the kind-specific payload (see the
 /// taxonomy table in the module docs); `arg2` is a secondary payload
-/// (only `llm_call` uses it, for the proposal count).
+/// (`llm_call` uses it for the proposal count, `transfer_query` for the
+/// retrieval path).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Event {
     pub kind: EventKind,

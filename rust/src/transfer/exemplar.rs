@@ -16,13 +16,23 @@
 //! first (diversity across workloads), then remaining slots fill with
 //! distinct rebased traces from already-used workloads. Exemplars whose
 //! trace rebases to nothing are skipped.
+//!
+//! **Bottleneck conditioning**: when the platform is known, matches are
+//! first bucketed by whether their trace attacks the target's dominant
+//! cost-model bottleneck — compute-bound programs (arithmetic intensity
+//! above the platform's roofline ridge) prefer exemplars containing
+//! parallelize/vectorize/unroll steps, traffic-bound programs prefer
+//! tiling/reordering/fusion/locality steps — with the distance/speedup
+//! ranking preserved *within* each bucket (stable sort), so shape
+//! similarity still decides among equally relevant exemplars.
 
+use crate::cost::{features, Platform};
 use crate::db::Database;
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
 
 use super::rebase::rebase_trace;
-use super::similarity::find_matches;
+use super::similarity::{find_matches, TransferMatch};
 
 /// One few-shot exemplar: a proven optimization from a structurally
 /// similar workload, rebased onto the target program.
@@ -40,7 +50,55 @@ pub struct Exemplar {
     pub rendered: String,
 }
 
-/// Select up to `k` diverse exemplars for `target` on `platform`.
+/// Which side of the platform roofline the target program sits on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    /// Arithmetic intensity at or above the ridge point: FLOP-limited.
+    Compute,
+    /// Below the ridge: DRAM-traffic-limited.
+    Traffic,
+}
+
+/// Classify the target's dominant bottleneck against the platform's
+/// roofline ridge point (peak FLOP/s over DRAM bytes/s). Deterministic
+/// and read-only — reuses the cost model's feature extraction.
+pub fn classify_bottleneck(program: &Program, platform: &Platform) -> Bottleneck {
+    let f = features::extract(program, platform);
+    let peak_flops = platform.cores as f64
+        * platform.simd_lanes as f64
+        * platform.fma_ports as f64
+        * 2.0
+        * platform.freq_ghz
+        * 1e9;
+    let ridge = peak_flops / (platform.dram_gbps * 1e9);
+    if f.arithmetic_intensity >= ridge {
+        Bottleneck::Compute
+    } else {
+        Bottleneck::Traffic
+    }
+}
+
+/// Does this transform primarily attack the given bottleneck? Tiling,
+/// reordering, fusion and locality transforms reshape memory traffic;
+/// parallelization, vectorization and unrolling raise compute
+/// throughput.
+fn attacks(t: &Transform, b: Bottleneck) -> bool {
+    let traffic = matches!(
+        t,
+        Transform::TileSize { .. }
+            | Transform::Reorder { .. }
+            | Transform::Fuse { .. }
+            | Transform::ComputeLocation { .. }
+            | Transform::CacheWrite { .. }
+    );
+    match b {
+        Bottleneck::Traffic => traffic,
+        Bottleneck::Compute => !traffic,
+    }
+}
+
+/// Select up to `k` diverse exemplars for `target` on `platform`,
+/// bottleneck-conditioned when the platform is a known hardware model.
 pub fn select_exemplars(
     db: &Database,
     target: &Program,
@@ -49,7 +107,26 @@ pub fn select_exemplars(
 ) -> Vec<Exemplar> {
     // Over-fetch so dropped/duplicate rebases don't starve the selection.
     let matches = find_matches(db, target, platform, k.saturating_mul(4).max(8));
-    exemplars_from_matches(&matches, target, k)
+    match Platform::by_name(platform) {
+        Some(p) => exemplars_for(&matches, target, &p, k),
+        None => exemplars_from_matches(&matches, target, k),
+    }
+}
+
+/// [`exemplars_from_matches`] conditioned on the target's dominant
+/// cost-model bottleneck: matches whose traces contain at least one
+/// transform attacking it are preferred, with the distance/speedup
+/// ranking preserved within each bucket (stable sort).
+pub fn exemplars_for(
+    matches: &[TransferMatch],
+    target: &Program,
+    platform: &Platform,
+    k: usize,
+) -> Vec<Exemplar> {
+    let bottleneck = classify_bottleneck(target, platform);
+    let mut ordered = matches.to_vec();
+    ordered.sort_by_key(|m| !m.record.trace.iter().any(|t| attacks(t, bottleneck)));
+    exemplars_from_matches(&ordered, target, k)
 }
 
 /// [`select_exemplars`] over an already-computed match set — callers that
@@ -186,6 +263,45 @@ mod tests {
         // With k=3 the second src_a record fills the remaining slot.
         let ex3 = select_exemplars(&db, &target, "core_i9", 3);
         assert_eq!(ex3.len(), 3);
+    }
+
+    #[test]
+    fn bottleneck_conditioning_prefers_relevant_traces() {
+        let target = workload::moe_matmul("target", 16, 256, 128);
+        let src_near = workload::moe_matmul("src_near", 16, 512, 256);
+        let src_far = workload::moe_matmul("src_far", 64, 2048, 1024);
+        let mut db = Database::in_memory();
+        // The *nearest* source carries a pure traffic trace, the farther
+        // one a pure compute trace — so whichever way the classifier
+        // rules, conditioning picks by relevance while the plain
+        // selection keeps distance order.
+        db.add(rec(
+            &src_near,
+            vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 64 }],
+            2.0,
+        ));
+        db.add(rec(
+            &src_far,
+            vec![Transform::Parallel { stage: 0, loop_idx: 0 }],
+            2.0,
+        ));
+        let platform = Platform::by_name("core_i9").unwrap();
+        let matches = find_matches(&db, &target, "core_i9", 8);
+        assert_eq!(matches.len(), 2);
+        let verdict = classify_bottleneck(&target, &platform);
+        assert_eq!(verdict, classify_bottleneck(&target, &platform), "deterministic");
+        let ex = exemplars_for(&matches, &target, &platform, 1);
+        assert_eq!(ex.len(), 1);
+        match verdict {
+            Bottleneck::Traffic => assert_eq!(ex[0].workload, "src_near"),
+            Bottleneck::Compute => assert_eq!(ex[0].workload, "src_far"),
+        }
+        // Unconditioned selection keeps pure distance order.
+        let plain = exemplars_from_matches(&matches, &target, 1);
+        assert_eq!(plain[0].workload, "src_near");
+        // Conditioning reorders but never loses exemplars: with room
+        // for both, both sources appear.
+        assert_eq!(exemplars_for(&matches, &target, &platform, 2).len(), 2);
     }
 
     #[test]

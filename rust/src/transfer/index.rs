@@ -1,0 +1,815 @@
+//! HNSW-style approximate-nearest-neighbor index over tuning-record
+//! feature vectors, plus the record-aging policy shared by retrieval
+//! and `db gc`.
+//!
+//! The linear scan in [`super::similarity`] is exact but O(records) on
+//! every session start; at fleet scale (ROADMAP item 4) the db holds
+//! millions of records and the scan dominates session startup. This
+//! module indexes records **per `(shape_class, platform)` partition**
+//! — so every candidate the graph returns is already a legal rebase
+//! target — over the raw per-axis log2-extent vector of each record
+//! (role-agnostic: computable from a record's `extents` alone, without
+//! a target program). Queries navigate the graph to collect an
+//! `ef`-wide candidate set; the caller re-ranks those candidates with
+//! the *exact* role-aware feature distance, so whenever the candidate
+//! set covers the true top-k the results are bit-identical to the
+//! scan. Partitions no larger than the candidate width are searched
+//! exhaustively, which makes small-db retrieval exactly equal to the
+//! scan by construction.
+//!
+//! ## Determinism
+//!
+//! Nothing here touches wall clocks or RNG state. Layer assignment
+//! hashes the node ordinal (splitmix64 trailing zeros), every heap
+//! tie breaks on node index, and candidates are returned in file
+//! (position) order so the downstream stable sort reproduces the
+//! scan's tie-breaks.
+//!
+//! ## Sidecar persistence
+//!
+//! The graph is persisted as a JSON sidecar next to the JSONL db
+//! (`<db>.idx`). The db stays the only source of truth: the sidecar
+//! stores just the adjacency lists and per-partition entry points,
+//! stamped with the db's byte length and record count. On load,
+//! vectors, latencies and aging flags are re-derived from the live
+//! records and every stored position is re-validated; any mismatch —
+//! stale stamp, malformed JSON, out-of-range position, eligibility
+//! drift — silently falls back to a full rebuild. Losing or
+//! corrupting the sidecar can never lose data or fail a command.
+//!
+//! ## Aging
+//!
+//! A record is *superseded* when a fresher record (later timestamp,
+//! position as tie-break) of the same `(workload_fp, platform)` pair
+//! reached an equal-or-lower latency. Superseded records stay in the
+//! db and the index but carry [`STALE_DISTANCE_PENALTY`] at ranking
+//! time, so a stale record never outranks its successor at equal
+//! shape distance; `rcc db gc --reap-dominated` drops them for real.
+//! Both retrieval paths (scan and index) compute the flag from the
+//! same relation — the scan via [`dominated_positions`], the index
+//! incrementally as entries register — so rankings agree.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::{BTreeMap, BTreeSet, BinaryHeap};
+use std::path::{Path, PathBuf};
+
+use crate::db::TuningRecord;
+use crate::util::json::{self, Json};
+
+/// Max neighbors kept per node on the upper layers.
+const M: usize = 8;
+/// Max neighbors kept per node on the base layer.
+const M0: usize = 16;
+/// Candidate-list width while building the graph.
+const EF_CONSTRUCTION: usize = 40;
+/// Minimum candidate-list width at query time (grows with k).
+const EF_SEARCH: usize = 64;
+/// Hard cap on layer assignment (log4 of any plausible record count).
+const MAX_LEVEL: u32 = 12;
+
+/// Distance penalty added at ranking time to superseded records.
+/// Structural distances are small (log2-extent space), so one full
+/// unit reliably demotes a stale record behind its fresher successor
+/// without ejecting it from the candidate list entirely.
+pub const STALE_DISTANCE_PENALTY: f64 = 1.0;
+
+/// A record is eligible for the index when it carries real transfer
+/// metadata (PR 4+) and a non-empty trace. The same predicate gates
+/// the scan path's aging flags and `db gc --reap-dominated`.
+pub fn record_eligible(r: &TuningRecord) -> bool {
+    r.shape_class != 0 && !r.extents.is_empty() && !r.trace.is_empty()
+}
+
+/// Records persisted before PR 4 decode with sentinel shape metadata;
+/// they can never be rebased, so the index excludes them (counted,
+/// warned about once — never per record).
+pub fn record_is_sentinel(r: &TuningRecord) -> bool {
+    r.shape_class == 0 || r.extents.is_empty()
+}
+
+/// Role-agnostic navigation vector: per-axis log2 extents, flattened
+/// in stage order. This is the prefix of the exact feature vector in
+/// `similarity.rs` (which appends role-aware per-stage sums that need
+/// a target program); it is computable from a record's `extents`
+/// alone, which is what lets the index build without any query.
+pub fn raw_log_vector(extents: &[Vec<i64>]) -> Vec<f64> {
+    let mut v = Vec::with_capacity(extents.iter().map(Vec::len).sum());
+    for stage in extents {
+        for &e in stage {
+            v.push((e.max(1) as f64).log2());
+        }
+    }
+    v
+}
+
+/// Positions of records strictly dominated by a fresher record of the
+/// same `(workload_fp, platform)` pair — the exact-scan counterpart of
+/// the index's incremental flags, also used by `db gc
+/// --reap-dominated`. Only eligible records participate (a sentinel or
+/// trace-less record neither dominates nor is reaped).
+pub fn dominated_positions(records: &[TuningRecord]) -> BTreeSet<usize> {
+    let mut groups: BTreeMap<(u64, &str), Vec<usize>> = BTreeMap::new();
+    for (i, r) in records.iter().enumerate() {
+        if record_eligible(r) {
+            groups.entry((r.workload_fp, r.platform.as_str())).or_default().push(i);
+        }
+    }
+    let mut out = BTreeSet::new();
+    for idxs in groups.values() {
+        let mut order = idxs.clone();
+        order.sort_by_key(|&i| (records[i].timestamp, i));
+        let mut best_fresher = f64::INFINITY;
+        for &i in order.iter().rev() {
+            if best_fresher <= records[i].latency {
+                out.insert(i);
+            }
+            if records[i].latency < best_fresher {
+                best_fresher = records[i].latency;
+            }
+        }
+    }
+    out
+}
+
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic geometric layer assignment (p = 1/4 per level) from
+/// the node's insertion ordinal — no RNG state, no wall clock.
+fn assign_level(ordinal: u32) -> u32 {
+    (splitmix64(ordinal as u64).trailing_zeros() / 2).min(MAX_LEVEL)
+}
+
+fn l2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+}
+
+/// Heap element: distance with a node-index tie-break so every
+/// ordering decision is total and deterministic.
+#[derive(Clone, Copy, PartialEq)]
+struct Scored(f64, u32);
+
+impl Eq for Scored {}
+
+impl Ord for Scored {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.0.total_cmp(&other.0).then(self.1.cmp(&other.1))
+    }
+}
+
+impl PartialOrd for Scored {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Record position in the db (file order).
+    pos: u32,
+    fp: u64,
+    latency: f64,
+    timestamp: u64,
+    superseded: bool,
+    vec: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+struct Node {
+    /// Index into `TransferIndex::entries`.
+    entry: u32,
+    level: u32,
+    /// `neighbors[l]` = node indices adjacent at layer `l` (0..=level).
+    neighbors: Vec<Vec<u32>>,
+}
+
+#[derive(Debug, Clone, Default)]
+struct Partition {
+    dims: usize,
+    nodes: Vec<Node>,
+    entry_point: u32,
+    max_level: u32,
+    /// Entry indices grouped by workload fingerprint — drives the
+    /// incremental superseded-flag maintenance on insert.
+    by_fp: BTreeMap<u64, Vec<u32>>,
+}
+
+impl Partition {
+    fn greedy_descend(&self, entries: &[Entry], q: &[f64], mut ep: u32, level: usize) -> u32 {
+        let mut best = l2(q, &entries[self.nodes[ep as usize].entry as usize].vec);
+        loop {
+            let mut improved = false;
+            for &nb in &self.nodes[ep as usize].neighbors[level] {
+                let d = l2(q, &entries[self.nodes[nb as usize].entry as usize].vec);
+                if d < best {
+                    best = d;
+                    ep = nb;
+                    improved = true;
+                }
+            }
+            if !improved {
+                return ep;
+            }
+        }
+    }
+
+    /// Best-first beam search at one layer; returns up to `ef` nodes
+    /// sorted by (distance, node index).
+    fn search_layer(&self, entries: &[Entry], q: &[f64], eps: &[u32], ef: usize, level: usize) -> Vec<Scored> {
+        let mut visited = vec![false; self.nodes.len()];
+        let mut frontier: BinaryHeap<Reverse<Scored>> = BinaryHeap::new();
+        let mut best: BinaryHeap<Scored> = BinaryHeap::new();
+        for &ep in eps {
+            if std::mem::replace(&mut visited[ep as usize], true) {
+                continue;
+            }
+            let d = l2(q, &entries[self.nodes[ep as usize].entry as usize].vec);
+            frontier.push(Reverse(Scored(d, ep)));
+            best.push(Scored(d, ep));
+            if best.len() > ef {
+                best.pop();
+            }
+        }
+        while let Some(Reverse(Scored(d, n))) = frontier.pop() {
+            let worst = best.peek().map_or(f64::INFINITY, |s| s.0);
+            if best.len() >= ef && d > worst {
+                break;
+            }
+            for &nb in &self.nodes[n as usize].neighbors[level] {
+                if std::mem::replace(&mut visited[nb as usize], true) {
+                    continue;
+                }
+                let dn = l2(q, &entries[self.nodes[nb as usize].entry as usize].vec);
+                let worst = best.peek().map_or(f64::INFINITY, |s| s.0);
+                if best.len() < ef || dn < worst {
+                    frontier.push(Reverse(Scored(dn, nb)));
+                    best.push(Scored(dn, nb));
+                    if best.len() > ef {
+                        best.pop();
+                    }
+                }
+            }
+        }
+        let mut out = best.into_vec();
+        out.sort();
+        out
+    }
+
+    fn insert_node(&mut self, entries: &[Entry], entry_idx: u32) {
+        let ordinal = self.nodes.len() as u32;
+        let level = assign_level(ordinal);
+        let mut neighbors: Vec<Vec<u32>> = vec![Vec::new(); level as usize + 1];
+        if self.nodes.is_empty() {
+            self.nodes.push(Node { entry: entry_idx, level, neighbors });
+            self.entry_point = 0;
+            self.max_level = level;
+            return;
+        }
+        let q = entries[entry_idx as usize].vec.clone();
+        let mut ep = self.entry_point;
+        let mut lvl = self.max_level;
+        while lvl > level {
+            ep = self.greedy_descend(entries, &q, ep, lvl as usize);
+            lvl -= 1;
+        }
+        let top = level.min(self.max_level);
+        let mut eps = vec![ep];
+        for l in (0..=top).rev() {
+            let found = self.search_layer(entries, &q, &eps, EF_CONSTRUCTION, l as usize);
+            let cap = if l == 0 { M0 } else { M };
+            neighbors[l as usize] = found.iter().take(cap).map(|s| s.1).collect();
+            eps = found.iter().map(|s| s.1).collect();
+        }
+        self.nodes.push(Node { entry: entry_idx, level, neighbors });
+        for l in 0..=top {
+            let cap = if l == 0 { M0 } else { M };
+            for nb in self.nodes[ordinal as usize].neighbors[l as usize].clone() {
+                let mut list = self.nodes[nb as usize].neighbors[l as usize].clone();
+                list.push(ordinal);
+                if list.len() > cap {
+                    let nb_vec = &entries[self.nodes[nb as usize].entry as usize].vec;
+                    let mut scored: Vec<Scored> = list
+                        .iter()
+                        .map(|&m| Scored(l2(nb_vec, &entries[self.nodes[m as usize].entry as usize].vec), m))
+                        .collect();
+                    scored.sort();
+                    list = scored.into_iter().take(cap).map(|s| s.1).collect();
+                }
+                self.nodes[nb as usize].neighbors[l as usize] = list;
+            }
+        }
+        if level > self.max_level {
+            self.max_level = level;
+            self.entry_point = ordinal;
+        }
+    }
+}
+
+/// Candidate returned by [`TransferIndex::query`]: a record position
+/// plus its aging flag, in file order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Candidate {
+    pub pos: usize,
+    pub superseded: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransferIndex {
+    threshold: usize,
+    /// Number of db records processed so far (file order), including
+    /// skipped ones — the incremental high-water mark.
+    covered: usize,
+    sentinel_skipped: usize,
+    layout_skipped: usize,
+    loaded_from_sidecar: bool,
+    entries: Vec<Entry>,
+    parts: BTreeMap<(u64, String), Partition>,
+}
+
+impl TransferIndex {
+    /// Build from scratch over the given records.
+    pub fn build(records: &[TuningRecord], threshold: usize) -> TransferIndex {
+        let mut ix = TransferIndex {
+            threshold,
+            covered: 0,
+            sentinel_skipped: 0,
+            layout_skipped: 0,
+            loaded_from_sidecar: false,
+            entries: Vec::new(),
+            parts: BTreeMap::new(),
+        };
+        ix.extend_from(records);
+        ix
+    }
+
+    /// Index every record not yet covered (`records[self.covered..]`)
+    /// — called after each db commit so the index grows with the file.
+    pub fn extend_from(&mut self, records: &[TuningRecord]) {
+        for pos in self.covered..records.len() {
+            self.insert_record(records, pos);
+        }
+        self.covered = records.len();
+    }
+
+    fn insert_record(&mut self, records: &[TuningRecord], pos: usize) {
+        let r = &records[pos];
+        if record_is_sentinel(r) {
+            self.sentinel_skipped += 1;
+            return;
+        }
+        if r.trace.is_empty() {
+            return; // nothing to transfer; never a match candidate
+        }
+        let vec = raw_log_vector(&r.extents);
+        let part = self.parts.entry((r.shape_class, r.platform.clone())).or_default();
+        if part.nodes.is_empty() {
+            part.dims = vec.len();
+        } else if part.dims != vec.len() {
+            self.layout_skipped += 1;
+            return;
+        }
+        let entry = Entry {
+            pos: pos as u32,
+            fp: r.workload_fp,
+            latency: r.latency,
+            timestamp: r.timestamp,
+            superseded: false,
+            vec,
+        };
+        let entry_idx = register_entry(&mut self.entries, part, entry);
+        part.insert_node(&self.entries, entry_idx);
+    }
+
+    /// Candidate positions for a query vector, in file order. Exact
+    /// (exhaustive) for partitions no larger than the search width;
+    /// graph-navigated beyond that. The caller re-ranks with the exact
+    /// feature distance.
+    pub fn query(&self, class: u64, platform: &str, qvec: &[f64], k: usize) -> Vec<Candidate> {
+        let Some(part) = self.parts.get(&(class, platform.to_string())) else {
+            return Vec::new();
+        };
+        if part.nodes.is_empty() || part.dims != qvec.len() {
+            return Vec::new();
+        }
+        let ef = EF_SEARCH.max(k.saturating_mul(4));
+        let found: Vec<u32> = if part.nodes.len() <= ef {
+            (0..part.nodes.len() as u32).collect()
+        } else {
+            let mut ep = part.entry_point;
+            let mut lvl = part.max_level;
+            while lvl > 0 {
+                ep = part.greedy_descend(&self.entries, qvec, ep, lvl as usize);
+                lvl -= 1;
+            }
+            part.search_layer(&self.entries, qvec, &[ep], ef, 0)
+                .into_iter()
+                .map(|s| s.1)
+                .collect()
+        };
+        let mut out: Vec<Candidate> = found
+            .iter()
+            .map(|&n| {
+                let e = &self.entries[part.nodes[n as usize].entry as usize];
+                Candidate { pos: e.pos as usize, superseded: e.superseded }
+            })
+            .collect();
+        out.sort_by_key(|c| c.pos);
+        out
+    }
+
+    /// Records indexed (eligible entries, not raw db length).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn threshold(&self) -> usize {
+        self.threshold
+    }
+
+    pub fn covered(&self) -> usize {
+        self.covered
+    }
+
+    pub fn sentinel_skipped(&self) -> usize {
+        self.sentinel_skipped
+    }
+
+    pub fn loaded_from_sidecar(&self) -> bool {
+        self.loaded_from_sidecar
+    }
+
+    pub fn partitions(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Persist the graph as a sidecar next to the db file. Stores only
+    /// adjacency + entry points; vectors and aging flags are re-derived
+    /// from the db on load, which stays the single source of truth.
+    pub fn save(&self, db_path: &Path) -> std::io::Result<()> {
+        let db_bytes = std::fs::metadata(db_path).map(|m| m.len()).unwrap_or(0);
+        let mut root = Json::obj();
+        root.set("rcc_transfer_index", json::num(1.0));
+        root.set("db_bytes", json::num(db_bytes as f64));
+        root.set("records", json::num(self.covered as f64));
+        root.set("sentinel_skipped", json::num(self.sentinel_skipped as f64));
+        root.set("layout_skipped", json::num(self.layout_skipped as f64));
+        let parts: Vec<Json> = self
+            .parts
+            .iter()
+            .map(|((class, platform), p)| {
+                let mut pj = Json::obj();
+                pj.set("class", json::s(&format!("{class:016x}")));
+                pj.set("platform", json::s(platform));
+                pj.set("entry_point", json::num(p.entry_point as f64));
+                pj.set("max_level", json::num(p.max_level as f64));
+                let nodes: Vec<Json> = p
+                    .nodes
+                    .iter()
+                    .map(|n| {
+                        let mut nj = Json::obj();
+                        nj.set("pos", json::num(self.entries[n.entry as usize].pos as f64));
+                        nj.set("level", json::num(n.level as f64));
+                        nj.set(
+                            "nbrs",
+                            json::arr(
+                                n.neighbors
+                                    .iter()
+                                    .map(|l| json::arr(l.iter().map(|&x| json::num(x as f64)).collect()))
+                                    .collect(),
+                            ),
+                        );
+                        nj
+                    })
+                    .collect();
+                pj.set("nodes", json::arr(nodes));
+                pj
+            })
+            .collect();
+        root.set("parts", json::arr(parts));
+        std::fs::write(sidecar_path(db_path), root.to_string())
+    }
+
+    /// Load the sidecar, re-validating it against the live records.
+    /// Returns `None` — caller rebuilds — on any staleness or
+    /// malformation: this path must never be fatal.
+    pub fn load(db_path: &Path, records: &[TuningRecord], threshold: usize) -> Option<TransferIndex> {
+        let raw = std::fs::read_to_string(sidecar_path(db_path)).ok()?;
+        let root = Json::parse(&raw)?;
+        if root.get("rcc_transfer_index")?.as_f64()? != 1.0 {
+            return None;
+        }
+        let db_bytes = std::fs::metadata(db_path).ok()?.len();
+        if root.get("db_bytes")?.as_f64()? != db_bytes as f64 {
+            return None;
+        }
+        if root.get("records")?.as_f64()? != records.len() as f64 {
+            return None;
+        }
+        let stored_layout_skipped = root.get("layout_skipped")?.as_f64()? as usize;
+        let stored_sentinel_skipped = root.get("sentinel_skipped")?.as_f64()? as usize;
+        let mut ix = TransferIndex {
+            threshold,
+            covered: records.len(),
+            sentinel_skipped: 0,
+            layout_skipped: stored_layout_skipped,
+            loaded_from_sidecar: true,
+            entries: Vec::new(),
+            parts: BTreeMap::new(),
+        };
+        let mut seen_pos: BTreeSet<usize> = BTreeSet::new();
+        for pj in root.get("parts")?.as_arr()? {
+            let class = u64::from_str_radix(pj.get("class")?.as_str()?, 16).ok()?;
+            let platform = pj.get("platform")?.as_str()?.to_string();
+            let nodes_json = pj.get("nodes")?.as_arr()?;
+            let mut part = Partition {
+                entry_point: pj.get("entry_point")?.as_f64()? as u32,
+                max_level: pj.get("max_level")?.as_f64()? as u32,
+                ..Partition::default()
+            };
+            let node_count = nodes_json.len();
+            for nj in nodes_json {
+                let pos = nj.get("pos")?.as_f64()? as usize;
+                let r = records.get(pos)?;
+                if !record_eligible(r) || r.shape_class != class || r.platform != platform {
+                    return None;
+                }
+                if !seen_pos.insert(pos) {
+                    return None;
+                }
+                let vec = raw_log_vector(&r.extents);
+                if part.nodes.is_empty() {
+                    part.dims = vec.len();
+                } else if part.dims != vec.len() {
+                    return None;
+                }
+                let level = nj.get("level")?.as_f64()? as u32;
+                let mut neighbors: Vec<Vec<u32>> = Vec::new();
+                for lj in nj.get("nbrs")?.as_arr()? {
+                    let mut layer = Vec::new();
+                    for x in lj.as_arr()? {
+                        let idx = x.as_f64()? as usize;
+                        if idx >= node_count {
+                            return None;
+                        }
+                        layer.push(idx as u32);
+                    }
+                    neighbors.push(layer);
+                }
+                if neighbors.len() != level as usize + 1 {
+                    return None;
+                }
+                let entry = Entry {
+                    pos: pos as u32,
+                    fp: r.workload_fp,
+                    latency: r.latency,
+                    timestamp: r.timestamp,
+                    superseded: false,
+                    vec,
+                };
+                let entry_idx = register_entry(&mut ix.entries, &mut part, entry);
+                part.nodes.push(Node { entry: entry_idx, level, neighbors });
+            }
+            if !part.nodes.is_empty() && part.entry_point as usize >= part.nodes.len() {
+                return None;
+            }
+            if ix.parts.insert((class, platform), part).is_some() {
+                return None;
+            }
+        }
+        // The eligible set must match the db exactly — a record added,
+        // dropped or rewritten since the save invalidates the graph.
+        let mut want_entries = 0usize;
+        let mut want_sentinels = 0usize;
+        for r in records {
+            if record_is_sentinel(r) {
+                want_sentinels += 1;
+            } else if !r.trace.is_empty() {
+                want_entries += 1;
+            }
+        }
+        if ix.entries.len() + stored_layout_skipped != want_entries
+            || stored_sentinel_skipped != want_sentinels
+        {
+            return None;
+        }
+        ix.sentinel_skipped = want_sentinels;
+        Some(ix)
+    }
+}
+
+/// Append an entry, updating aging flags pairwise within its
+/// `(workload_fp, platform)` group. Order-independent: each pair is
+/// compared exactly once with explicit (timestamp, position)
+/// freshness, so build, load and incremental insert all converge on
+/// the same flags as [`dominated_positions`].
+fn register_entry(entries: &mut Vec<Entry>, part: &mut Partition, mut entry: Entry) -> u32 {
+    let idx = entries.len() as u32;
+    let group = part.by_fp.entry(entry.fp).or_default();
+    for &old in group.iter() {
+        let o = &mut entries[old as usize];
+        let new_fresher = (entry.timestamp, entry.pos) > (o.timestamp, o.pos);
+        if new_fresher {
+            if entry.latency <= o.latency {
+                o.superseded = true;
+            }
+        } else if o.latency <= entry.latency {
+            entry.superseded = true;
+        }
+    }
+    group.push(idx);
+    entries.push(entry);
+    idx
+}
+
+/// `<db>.idx` — the sidecar lives next to the JSONL file it indexes.
+pub fn sidecar_path(db_path: &Path) -> PathBuf {
+    let mut name = db_path.file_name().map(|s| s.to_os_string()).unwrap_or_default();
+    name.push(".idx");
+    db_path.with_file_name(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Transform;
+
+    fn rec(fp: u64, platform: &str, class: u64, extents: Vec<Vec<i64>>, latency: f64, ts: u64) -> TuningRecord {
+        TuningRecord {
+            workload_fp: fp,
+            workload: format!("w{fp:x}"),
+            platform: platform.into(),
+            strategy: "test".into(),
+            trace: vec![Transform::TileSize { stage: 0, loop_idx: 2, factor: 4 }],
+            latency,
+            baseline_latency: 10.0,
+            seed: 0,
+            timestamp: ts,
+            shape_class: class,
+            extents,
+        }
+    }
+
+    fn grid_records(n: usize, platform: &str) -> Vec<TuningRecord> {
+        (0..n)
+            .map(|i| {
+                let a = 1 << (i % 10);
+                let b = 1 << ((i / 10) % 10);
+                let c = 1 << ((i / 100) % 10);
+                rec(0x1000 + i as u64, platform, 0xC1A55, vec![vec![a, b, c]], 1.0 + i as f64, i as u64)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn raw_log_vector_flattens_per_axis_logs() {
+        let v = raw_log_vector(&[vec![8, 2], vec![16]]);
+        assert_eq!(v, vec![3.0, 1.0, 4.0]);
+        // Degenerate extents clamp to zero instead of -inf.
+        assert_eq!(raw_log_vector(&[vec![0]]), vec![0.0]);
+    }
+
+    #[test]
+    fn level_assignment_is_deterministic_and_bounded() {
+        for ord in 0..10_000u32 {
+            let l = assign_level(ord);
+            assert_eq!(l, assign_level(ord));
+            assert!(l <= MAX_LEVEL);
+        }
+        // The distribution actually uses more than one layer.
+        assert!((0..10_000u32).any(|o| assign_level(o) > 0));
+    }
+
+    #[test]
+    fn small_partition_query_is_exhaustive_in_file_order() {
+        let records = grid_records(12, "core_i9");
+        let ix = TransferIndex::build(&records, 0);
+        assert_eq!(ix.len(), 12);
+        let got = ix.query(0xC1A55, "core_i9", &raw_log_vector(&[vec![4, 4, 4]]), 4);
+        let pos: Vec<usize> = got.iter().map(|c| c.pos).collect();
+        assert_eq!(pos, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partitions_split_by_class_and_platform() {
+        let mut records = grid_records(4, "core_i9");
+        records.extend(grid_records(4, "graviton2"));
+        records.push(rec(0x9999, "core_i9", 0xD00D, vec![vec![2, 2]], 1.0, 0));
+        let ix = TransferIndex::build(&records, 0);
+        assert_eq!(ix.partitions(), 3);
+        assert!(ix.query(0xC1A55, "graviton2", &raw_log_vector(&[vec![4, 4, 4]]), 4).len() == 4);
+        assert!(ix.query(0xD00D, "core_i9", &raw_log_vector(&[vec![2, 2]]), 4).len() == 1);
+        // Unknown partition or mismatched query layout: empty, not a panic.
+        assert!(ix.query(0xBEEF, "core_i9", &[0.0], 4).is_empty());
+        assert!(ix.query(0xC1A55, "core_i9", &[0.0], 4).is_empty());
+    }
+
+    #[test]
+    fn sentinel_records_are_counted_not_indexed() {
+        let mut records = grid_records(3, "core_i9");
+        records.push(rec(0x1, "core_i9", 0, Vec::new(), 1.0, 0));
+        let mut legacy = rec(0x2, "core_i9", 0xC1A55, Vec::new(), 1.0, 0);
+        legacy.extents = Vec::new();
+        records.push(legacy);
+        let ix = TransferIndex::build(&records, 0);
+        assert_eq!(ix.len(), 3);
+        assert_eq!(ix.sentinel_skipped(), 2);
+    }
+
+    #[test]
+    fn aging_flags_match_dominated_positions_in_any_insert_order() {
+        // Same fp, out-of-order timestamps: the fresher (ts=200) record
+        // at an equal latency supersedes the older one regardless of
+        // file position.
+        let records = vec![
+            rec(0xAA, "core_i9", 0xC1A55, vec![vec![4, 4, 4]], 5.0, 200),
+            rec(0xAA, "core_i9", 0xC1A55, vec![vec![4, 4, 4]], 5.0, 100),
+            rec(0xAA, "core_i9", 0xC1A55, vec![vec![4, 4, 4]], 4.0, 150),
+            rec(0xBB, "core_i9", 0xC1A55, vec![vec![8, 8, 8]], 9.0, 50),
+        ];
+        let dominated = dominated_positions(&records);
+        // pos1 (ts=100, 5.0): superseded by pos2 (ts=150, 4.0) and pos0.
+        // pos2 (ts=150, 4.0): no fresher record at <= 4.0. pos0
+        // (ts=200, 5.0): freshest of its group. pos3: alone.
+        assert_eq!(dominated.into_iter().collect::<Vec<_>>(), vec![1]);
+        let ix = TransferIndex::build(&records, 0);
+        let flags: Vec<bool> = ix
+            .query(0xC1A55, "core_i9", &raw_log_vector(&[vec![4, 4, 4]]), 8)
+            .iter()
+            .map(|c| c.superseded)
+            .collect();
+        assert_eq!(flags, vec![false, true, false, false]);
+    }
+
+    #[test]
+    fn graph_query_recalls_brute_force_neighbors_at_scale() {
+        let records = grid_records(600, "core_i9");
+        let ix = TransferIndex::build(&records, 0);
+        let q = raw_log_vector(&[vec![16, 32, 2]]);
+        let got = ix.query(0xC1A55, "core_i9", &q, 8);
+        assert!(got.len() >= 8 && got.len() <= 600);
+        // Deterministic: same query, same candidates.
+        assert_eq!(got, ix.query(0xC1A55, "core_i9", &q, 8));
+        // The exact nearest neighbor must be in the candidate set.
+        let best = (0..records.len())
+            .min_by(|&a, &b| {
+                l2(&q, &raw_log_vector(&records[a].extents))
+                    .total_cmp(&l2(&q, &raw_log_vector(&records[b].extents)))
+                    .then(a.cmp(&b))
+            })
+            .unwrap();
+        assert!(got.iter().any(|c| c.pos == best));
+    }
+
+    #[test]
+    fn sidecar_roundtrip_and_staleness() {
+        let dir = std::env::temp_dir().join(format!("rcc_idx_test_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let db_path = dir.join("db.jsonl");
+        std::fs::write(&db_path, b"fake-db-bytes\n").unwrap();
+        let mut records = grid_records(30, "core_i9");
+        let ix = TransferIndex::build(&records, 7);
+        ix.save(&db_path).unwrap();
+        let loaded = TransferIndex::load(&db_path, &records, 7).expect("fresh sidecar loads");
+        assert!(loaded.loaded_from_sidecar());
+        assert_eq!(loaded.len(), ix.len());
+        assert_eq!(loaded.threshold(), 7);
+        let q = raw_log_vector(&[vec![4, 2, 1]]);
+        assert_eq!(loaded.query(0xC1A55, "core_i9", &q, 5), ix.query(0xC1A55, "core_i9", &q, 5));
+        // Record count drift -> stale -> rebuild.
+        records.push(rec(0x7777, "core_i9", 0xC1A55, vec![vec![2, 2, 2]], 1.0, 99));
+        assert!(TransferIndex::load(&db_path, &records, 7).is_none());
+        records.pop();
+        // Db byte drift -> stale.
+        std::fs::write(&db_path, b"fake-db-bytes-grew\n").unwrap();
+        assert!(TransferIndex::load(&db_path, &records, 7).is_none());
+        std::fs::write(&db_path, b"fake-db-bytes\n").unwrap();
+        assert!(TransferIndex::load(&db_path, &records, 7).is_some());
+        // Garbage sidecar -> rebuild, never fatal.
+        std::fs::write(sidecar_path(&db_path), b"{not json").unwrap();
+        assert!(TransferIndex::load(&db_path, &records, 7).is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn extend_from_matches_full_rebuild() {
+        let records = grid_records(50, "core_i9");
+        let mut incremental = TransferIndex::build(&records[..20], 0);
+        incremental.extend_from(&records);
+        let full = TransferIndex::build(&records, 0);
+        let q = raw_log_vector(&[vec![8, 8, 8]]);
+        assert_eq!(incremental.covered(), full.covered());
+        assert_eq!(incremental.len(), full.len());
+        assert_eq!(
+            incremental.query(0xC1A55, "core_i9", &q, 6),
+            full.query(0xC1A55, "core_i9", &q, 6)
+        );
+    }
+}

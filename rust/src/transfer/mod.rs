@@ -17,10 +17,19 @@
 //!   inapplicable steps — yielding traces that are always fully legal on
 //!   the target.
 //! - [`exemplar`] — the few-shot exemplar engine: selects top-k diverse
-//!   (workload, trace, speedup) triples for the target's shape class and
-//!   renders them into the reasoning engine's prompts
-//!   (`reasoning::prompt::render_with`), so `informed_proposals` conditions
-//!   on accumulated cross-workload performance feedback.
+//!   (workload, trace, speedup) triples for the target's shape class —
+//!   conditioned on the target's dominant cost-model bottleneck (compute
+//!   vs traffic) when the platform is known — and renders them into the
+//!   reasoning engine's prompts (`reasoning::prompt::render_with`), so
+//!   `informed_proposals` conditions on accumulated cross-workload
+//!   performance feedback.
+//! - [`index`] — sublinear retrieval at scale: an HNSW-style ANN index
+//!   over per-stage log-extent vectors, partitioned by shape class and
+//!   platform, persisted as a `<db>.idx` sidecar and rebuilt whenever
+//!   stale — plus the record-aging policy (superseded records are
+//!   down-weighted at retrieval and reaped by `rcc db gc
+//!   --reap-dominated`). Small dbs fall back to the exact linear scan,
+//!   bit-identical to the pre-index behavior.
 //!
 //! The coordinator wires both products into a session via
 //! [`derive_hints`]: rebased traces extend the `SearchContext` warm-start
@@ -31,13 +40,19 @@
 //! `reasoning::LlmPolicy`. CLI: `rcc transfer match|rebase|exemplars`.
 
 pub mod exemplar;
+pub mod index;
 pub mod rebase;
 pub mod similarity;
 
-pub use exemplar::{exemplars_from_matches, render_exemplar_block, select_exemplars, Exemplar};
+pub use exemplar::{
+    classify_bottleneck, exemplars_for, exemplars_from_matches, render_exemplar_block,
+    select_exemplars, Bottleneck, Exemplar,
+};
+pub use index::{sidecar_path, TransferIndex, STALE_DISTANCE_PENALTY};
 pub use rebase::{rebase_trace, RebaseOutcome};
-pub use similarity::{feature_distance, find_matches, workload_extents, TransferMatch};
+pub use similarity::{feature_distance, find_matches, uses_index, workload_extents, TransferMatch};
 
+use crate::cost::Platform;
 use crate::db::Database;
 use crate::schedule::Transform;
 use crate::tir::Program;
@@ -86,7 +101,10 @@ pub fn derive_hints(
         }
         hints.warm_entries.push((rebased.trace, m.record.latency));
     }
-    hints.exemplars = exemplar::exemplars_from_matches(&matches, target, top_k);
+    hints.exemplars = match Platform::by_name(platform) {
+        Some(p) => exemplar::exemplars_for(&matches, target, &p, top_k),
+        None => exemplar::exemplars_from_matches(&matches, target, top_k),
+    };
     hints
 }
 

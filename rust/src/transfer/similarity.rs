@@ -18,10 +18,24 @@
 //! Matching is read-only over `Database::records()` and fully
 //! deterministic: ties break on recorded speedup (higher first) and then on
 //! file order via the stable sort.
+//!
+//! Retrieval has two physical paths with one logical contract. Small
+//! dbs use the exact linear scan below; once a [`TransferIndex`]
+//! (`transfer::index`) is attached to the db *and* the record count
+//! reaches its fallback threshold, candidates come from the ANN graph
+//! instead and only those are re-ranked with the exact feature
+//! distance — identical output whenever the candidate set covers the
+//! true top-k, which is guaranteed for partitions the graph searches
+//! exhaustively. Both paths apply the same record-aging penalty
+//! ([`index::STALE_DISTANCE_PENALTY`]) to superseded records and emit
+//! one `transfer_query` observability span per call.
 
 use crate::db::fingerprint::{shape_class, workload_fingerprint};
 use crate::db::{Database, TuningRecord};
+use crate::obs;
 use crate::tir::Program;
+
+use super::index::{self, dominated_positions, raw_log_vector};
 
 /// Per-stage original-axis extents of a program, the structural summary
 /// persisted in every `TuningRecord` for later similarity matching.
@@ -38,6 +52,18 @@ pub struct TransferMatch<'a> {
     pub record: &'a TuningRecord,
     /// Feature distance to the target (0 = identical extents).
     pub distance: f64,
+    /// A fresher record of the same workload/platform pair reached an
+    /// equal-or-lower latency; ranked with a distance penalty.
+    pub superseded: bool,
+}
+
+impl TransferMatch<'_> {
+    /// Aging-adjusted ranking distance: superseded records carry
+    /// [`index::STALE_DISTANCE_PENALTY`] so a stale record never
+    /// outranks its fresher successor at equal shape distance.
+    pub fn effective_distance(&self) -> f64 {
+        self.distance + if self.superseded { index::STALE_DISTANCE_PENALTY } else { 0.0 }
+    }
 }
 
 /// Extent-derived feature vector of one workload: per axis `log2(extent)`,
@@ -90,11 +116,22 @@ pub fn feature_distance(target: &Program, record_extents: &[Vec<i64>]) -> Option
     Some(l2(&a, &b))
 }
 
+/// True when retrieval will go through the ANN index: one is attached
+/// to the db, it covers every record (no uncommitted tail), and the
+/// record count has reached its fallback threshold — small dbs stay on
+/// the exact scan, bit-identical to pre-index behavior.
+pub fn uses_index(db: &Database) -> bool {
+    db.transfer_index()
+        .map_or(false, |ix| ix.covered() == db.len() && db.len() >= ix.threshold())
+}
+
 /// The `k` database records most similar to `target` on `platform`:
 /// same shape class, *different* workload fingerprint (bit-identical
-/// workloads are already served by the plain warm start), ranked by feature
-/// distance, then recorded speedup, then file order. Records without
-/// transfer metadata (shape class 0 / missing extents) are skipped.
+/// workloads are already served by the plain warm start), ranked by
+/// aging-adjusted feature distance, then recorded speedup, then file
+/// order. Records without transfer metadata (shape class 0 / missing
+/// extents) are skipped. Candidates come from the attached ANN index
+/// when [`uses_index`] holds, from the exact linear scan otherwise.
 pub fn find_matches<'a>(
     db: &'a Database,
     target: &Program,
@@ -103,31 +140,57 @@ pub fn find_matches<'a>(
 ) -> Vec<TransferMatch<'a>> {
     let class = shape_class(target);
     let fp = workload_fingerprint(target);
+    let target_extents = workload_extents(target);
     // The target's own feature vector is the same for every candidate;
     // compute it once, not per record.
-    let Some(target_vec) = feature_vector(target, &workload_extents(target)) else {
+    let Some(target_vec) = feature_vector(target, &target_extents) else {
         return Vec::new();
     };
-    let mut matches: Vec<TransferMatch<'a>> = db
-        .records()
-        .iter()
-        .filter(|r| {
-            r.platform == platform
-                && r.shape_class == class
-                && r.shape_class != 0
-                && r.workload_fp != fp
-                && !r.trace.is_empty()
-        })
-        .filter_map(|r| {
-            feature_vector(target, &r.extents).map(|v| TransferMatch {
-                record: r,
-                distance: l2(&target_vec, &v),
+    let mut sp = obs::span2(obs::EventKind::TransferQuery, 0, 0);
+    let via_index = uses_index(db);
+    // Both arms yield candidates in file order, so the stable sort
+    // below reproduces identical tie-breaks on either path.
+    let mut matches: Vec<TransferMatch<'a>> = if via_index {
+        let ix = db.transfer_index().expect("uses_index implies an attached index");
+        ix.query(class, platform, &raw_log_vector(&target_extents), k)
+            .into_iter()
+            .filter_map(|c| {
+                let r = &db.records()[c.pos];
+                if r.workload_fp == fp {
+                    return None;
+                }
+                feature_vector(target, &r.extents).map(|v| TransferMatch {
+                    record: r,
+                    distance: l2(&target_vec, &v),
+                    superseded: c.superseded,
+                })
             })
-        })
-        .collect();
+            .collect()
+    } else {
+        let stale = dominated_positions(db.records());
+        db.records()
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| {
+                r.platform == platform
+                    && r.shape_class == class
+                    && r.shape_class != 0
+                    && r.workload_fp != fp
+                    && !r.trace.is_empty()
+            })
+            .filter_map(|(i, r)| {
+                feature_vector(target, &r.extents).map(|v| TransferMatch {
+                    record: r,
+                    distance: l2(&target_vec, &v),
+                    superseded: stale.contains(&i),
+                })
+            })
+            .collect()
+    };
+    let considered = matches.len();
     matches.sort_by(|a, b| {
-        a.distance
-            .partial_cmp(&b.distance)
+        a.effective_distance()
+            .partial_cmp(&b.effective_distance())
             .unwrap_or(std::cmp::Ordering::Equal)
             .then(
                 b.record
@@ -137,6 +200,7 @@ pub fn find_matches<'a>(
             )
     });
     matches.truncate(k);
+    sp.set_args(considered as u64, via_index as u64);
     matches
 }
 
@@ -222,6 +286,30 @@ mod tests {
         let mut db = Database::in_memory();
         db.add(old);
         assert!(find_matches(&db, &target, "core_i9", 8).is_empty());
+    }
+
+    #[test]
+    fn superseded_records_rank_behind_fresher_work() {
+        let target = workload::moe_matmul("target", 16, 512, 512);
+        let src_a = workload::moe_matmul("src_a", 16, 1024, 512); // distance ~1.41
+        let src_b = workload::moe_matmul("src_b", 16, 1024, 1024); // distance 2.0
+        let mut db = Database::in_memory();
+        let old = rec(&src_a, "core_i9", 2.0, 32); // ts=100, superseded below
+        db.add(old);
+        let mut fresh = rec(&src_a, "core_i9", 1.5, 64);
+        fresh.timestamp = 200;
+        db.add(fresh);
+        db.add(rec(&src_b, "core_i9", 5.0, 64));
+        let matches = find_matches(&db, &target, "core_i9", 8);
+        assert_eq!(matches.len(), 3);
+        // Without aging the stale src_a record (distance 1.41) would
+        // outrank src_b (distance 2.0); the penalty demotes it last.
+        assert_eq!(matches[0].record.latency, 1.5);
+        assert!(!matches[0].superseded);
+        assert_eq!(matches[1].record.workload, "src_b");
+        assert_eq!(matches[2].record.latency, 2.0);
+        assert!(matches[2].superseded);
+        assert!(matches[2].effective_distance() > matches[2].distance);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Integration tests of the ANN transfer index (PR 7).
+//!
+//! The acceptance properties: retrieval through the index returns exactly
+//! what the exact linear scan returns on stock-scale databases (small
+//! partitions are searched exhaustively, so recall is 1.0 by
+//! construction); below the record-count threshold the scan path is used
+//! outright; tuning sessions are bit-identical with the index on or off
+//! and across worker counts; record aging never ranks a superseded
+//! record above the fresher work that superseded it; and the `<db>.idx`
+//! sidecar persists across processes, reloads when fresh, and is
+//! silently rebuilt when stale or corrupt.
+
+use std::path::{Path, PathBuf};
+
+use reasoning_compiler::coordinator::{run_session_on, Strategy, TuneConfig};
+use reasoning_compiler::db::{shape_class, workload_fingerprint, Database, TuningRecord};
+use reasoning_compiler::schedule::Transform;
+use reasoning_compiler::tir::workload;
+use reasoning_compiler::transfer::{find_matches, sidecar_path, uses_index, workload_extents};
+use reasoning_compiler::util::Pcg;
+
+fn temp_db(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "rcc_tindex_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+/// A real record for an MoE matmul shape: genuine fingerprint, shape
+/// class and extents, and a trace that replays on any multiple-of-4 `j`.
+fn moe_rec(tokens: i64, out_dim: i64, in_dim: i64, latency: f64, ts: u64) -> TuningRecord {
+    let prog = workload::moe_matmul("idx_src", tokens, out_dim, in_dim);
+    TuningRecord {
+        workload_fp: workload_fingerprint(&prog),
+        workload: format!("moe_{tokens}x{out_dim}x{in_dim}"),
+        platform: "core_i9".to_string(),
+        strategy: "test".to_string(),
+        trace: vec![Transform::TileSize { stage: 0, loop_idx: 1, factor: 4 }],
+        latency,
+        baseline_latency: 10.0,
+        seed: 1,
+        timestamp: ts,
+        shape_class: shape_class(&prog),
+        extents: workload_extents(&prog),
+    }
+}
+
+fn target() -> reasoning_compiler::tir::Program {
+    workload::moe_matmul("idx_target", 16, 256, 128)
+}
+
+/// Flatten a match list into a comparable signature.
+fn signature(db: &Database, k: usize) -> Vec<(u64, u64, bool, u64)> {
+    find_matches(db, &target(), "core_i9", k)
+        .iter()
+        .map(|m| {
+            (
+                m.record.workload_fp,
+                m.record.timestamp,
+                m.superseded,
+                m.distance.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn populate(path: &Path, records: &[TuningRecord]) {
+    let mut db = Database::open(path).unwrap();
+    for r in records {
+        db.add(r.clone());
+    }
+    db.commit().unwrap();
+}
+
+#[test]
+fn index_retrieval_matches_the_exact_scan_bit_for_bit() {
+    let path = temp_db("parity");
+    let mut records = Vec::new();
+    let mut ts = 0u64;
+    // Several shapes in the target's class, multiple records per shape
+    // (some superseded), plus another platform and a foreign kernel.
+    for (t, o, i) in [
+        (16i64, 512i64, 256i64),
+        (32, 512, 512),
+        (8, 1024, 256),
+        (16, 2048, 512),
+        (32, 256, 128),
+    ] {
+        for (lat, step) in [(4.0, 0u64), (2.5, 1), (3.0, 2)] {
+            ts += 1;
+            records.push(moe_rec(t, o, i, lat, ts + step));
+        }
+    }
+    let mut other = moe_rec(16, 512, 256, 1.0, 999);
+    other.platform = "graviton2".to_string();
+    records.push(other);
+    populate(&path, &records);
+
+    // Handle 1: plain scan. Handle 2: index forced on (threshold 0).
+    let scan_db = Database::open(&path).unwrap();
+    assert!(!uses_index(&scan_db));
+    let mut ix_db = Database::open(&path).unwrap();
+    ix_db.attach_transfer_index(0);
+    assert!(uses_index(&ix_db), "threshold 0 must engage the index");
+
+    for k in [1, 3, 8, 64] {
+        assert_eq!(
+            signature(&scan_db, k),
+            signature(&ix_db, k),
+            "index and scan must agree at k={k}"
+        );
+    }
+    // The superseded flag surfaces: the (4.0, earliest) record of each
+    // shape is dominated by the fresher 2.5.
+    let matches = find_matches(&ix_db, &target(), "core_i9", 64);
+    assert!(matches.iter().any(|m| m.superseded));
+    assert!(matches.iter().any(|m| !m.superseded));
+
+    std::fs::remove_file(sidecar_path(&path)).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn below_threshold_the_scan_path_is_used() {
+    let path = temp_db("threshold");
+    populate(&path, &[moe_rec(16, 512, 256, 2.0, 1), moe_rec(32, 512, 512, 3.0, 2)]);
+    let mut db = Database::open(&path).unwrap();
+    db.attach_transfer_index(256);
+    assert!(
+        !uses_index(&db),
+        "2 records < threshold 256 must stay on the exact scan"
+    );
+    // Retrieval still works (through the scan path).
+    assert!(!find_matches(&db, &target(), "core_i9", 4).is_empty());
+    std::fs::remove_file(sidecar_path(&path)).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn aging_never_ranks_a_superseded_record_above_its_dominator() {
+    let mut rng = Pcg::new(0xA61);
+    let shapes = [
+        (8i64, 128i64, 128i64),
+        (16, 256, 256),
+        (32, 512, 256),
+        (16, 512, 512),
+        (8, 256, 128),
+        (32, 1024, 512),
+    ];
+    for round in 0..10 {
+        let path = temp_db(&format!("aging_{round}"));
+        let mut records = Vec::new();
+        for &(t, o, i) in &shapes {
+            for _ in 0..(1 + rng.gen_range(3)) {
+                let latency = 1.0 + 9.0 * rng.gen_f64();
+                let ts = 1 + rng.gen_range(50) as u64;
+                records.push(moe_rec(t, o, i, latency, ts));
+            }
+        }
+        populate(&path, &records);
+
+        let scan_db = Database::open(&path).unwrap();
+        let mut ix_db = Database::open(&path).unwrap();
+        ix_db.attach_transfer_index(0);
+        assert_eq!(
+            signature(&scan_db, 64),
+            signature(&ix_db, 64),
+            "round {round}: scan/index parity under random aging"
+        );
+
+        // Within one workload fingerprint every fresh match must precede
+        // every superseded one: same extents => same base distance, and
+        // the staleness penalty strictly separates them.
+        let matches = find_matches(&ix_db, &target(), "core_i9", 64);
+        for (a, m1) in matches.iter().enumerate() {
+            for m2 in matches.iter().skip(a + 1) {
+                if m1.record.workload_fp == m2.record.workload_fp {
+                    assert!(
+                        !(m1.superseded && !m2.superseded),
+                        "round {round}: superseded record ranked above its dominator"
+                    );
+                }
+            }
+        }
+        std::fs::remove_file(sidecar_path(&path)).ok();
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn sessions_are_bit_identical_with_index_on_or_off() {
+    let path = temp_db("session");
+    let db_str = path.to_string_lossy().to_string();
+    // Seed the database with prior work on a structurally similar shape.
+    let cfg_seed = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: 60,
+        repeats: 1,
+        seed: 42,
+        db_path: Some(db_str.clone()),
+        workers: 1,
+        ..Default::default()
+    };
+    run_session_on(&workload::moe_matmul("idx_seed", 32, 512, 256), &cfg_seed)
+        .expect("seed session");
+
+    let b = target();
+    let cfg_off = TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 40,
+        repeats: 1,
+        seed: 9,
+        db_path: Some(db_str.clone()),
+        transfer_index: false,
+        workers: 1,
+        ..Default::default()
+    };
+    // Index forced on at any size: exact parity, so identical sessions.
+    let cfg_forced = TuneConfig {
+        transfer_index: true,
+        transfer_index_threshold: 0,
+        ..cfg_off.clone()
+    };
+    let curve = |s: &reasoning_compiler::coordinator::SessionResult| -> Vec<(usize, u64)> {
+        s.runs[0].curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect()
+    };
+    let off = run_session_on(&b, &cfg_off).expect("scan session");
+    let forced = run_session_on(&b, &cfg_forced).expect("index session");
+    assert_eq!(off.runs[0].best_latency, forced.runs[0].best_latency);
+    assert_eq!(off.runs[0].samples_used, forced.runs[0].samples_used);
+    assert_eq!(curve(&off), curve(&forced));
+
+    // And identical again across worker counts with the index engaged.
+    let wide = run_session_on(&b, &TuneConfig { workers: 4, ..cfg_forced.clone() })
+        .expect("parallel index session");
+    assert_eq!(forced.runs[0].best_latency, wide.runs[0].best_latency);
+    assert_eq!(forced.runs[0].samples_used, wide.runs[0].samples_used);
+    assert_eq!(curve(&forced), curve(&wide));
+
+    std::fs::remove_file(sidecar_path(&path)).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn sidecar_persists_reloads_and_rebuilds_when_stale_or_corrupt() {
+    let path = temp_db("sidecar");
+    let mut records = Vec::new();
+    for i in 0..12i64 {
+        records.push(moe_rec(8 << (i % 3), 256, 128, 2.0 + i as f64, i as u64));
+    }
+    populate(&path, &records);
+
+    // First attach builds the index and writes the sidecar.
+    let mut db = Database::open(&path).unwrap();
+    db.attach_transfer_index(0);
+    let ix = db.transfer_index().expect("index attached");
+    assert!(!ix.loaded_from_sidecar(), "first attach is a fresh build");
+    let side = sidecar_path(&path);
+    assert!(side.exists(), "attach must persist {}", side.display());
+
+    // A second process loads it instead of rebuilding.
+    let mut db2 = Database::open(&path).unwrap();
+    db2.attach_transfer_index(0);
+    assert!(db2.transfer_index().unwrap().loaded_from_sidecar());
+    assert_eq!(signature(&db, 64), signature(&db2, 64));
+
+    // Committing through another handle makes the sidecar stale; the next
+    // attach detects the drift and rebuilds — never trusts a stale file.
+    let mut writer = Database::open(&path).unwrap();
+    writer.add(moe_rec(16, 1024, 512, 1.5, 99));
+    writer.commit().unwrap();
+    let mut db3 = Database::open(&path).unwrap();
+    db3.attach_transfer_index(0);
+    let ix3 = db3.transfer_index().unwrap();
+    assert!(!ix3.loaded_from_sidecar(), "stale sidecar must be rebuilt");
+    assert_eq!(ix3.covered(), db3.len());
+
+    // Corruption is not fatal either: garbage in, rebuild out.
+    std::fs::write(&side, b"{ not an index").unwrap();
+    let mut db4 = Database::open(&path).unwrap();
+    db4.attach_transfer_index(0);
+    assert!(!db4.transfer_index().unwrap().loaded_from_sidecar());
+    assert_eq!(signature(&db3, 64), signature(&db4, 64));
+
+    std::fs::remove_file(&side).ok();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pre_transfer_sentinel_records_are_excluded_with_one_count() {
+    let path = temp_db("sentinel");
+    let mut records = vec![moe_rec(16, 512, 256, 2.0, 1), moe_rec(32, 512, 512, 3.0, 2)];
+    // Records written before the transfer metadata existed: shape_class 0,
+    // no extents. They must be skipped (and counted), not indexed.
+    for i in 0..3 {
+        let mut r = moe_rec(16, 256, 128, 4.0 + i as f64, 10 + i);
+        r.shape_class = 0;
+        r.extents = Vec::new();
+        records.push(r);
+    }
+    populate(&path, &records);
+
+    let mut db = Database::open(&path).unwrap();
+    db.attach_transfer_index(0);
+    let ix = db.transfer_index().unwrap();
+    assert_eq!(ix.sentinel_skipped(), 3);
+    assert_eq!(ix.covered(), db.len(), "sentinels still count as covered");
+    assert!(uses_index(&db));
+    // Retrieval still serves the two real records.
+    assert_eq!(find_matches(&db, &target(), "core_i9", 8).len(), 2);
+
+    std::fs::remove_file(sidecar_path(&path)).ok();
+    std::fs::remove_file(&path).ok();
+}
