@@ -118,6 +118,26 @@ pub struct TuneConfig {
     /// env win over the file). `None` leaves the recorder disabled —
     /// tracing never changes results either way, only wall-clock.
     pub trace_path: Option<String>,
+    /// Checkpoint the session to this crash-safe JSONL journal
+    /// (`[session] journal` in TOML, `--journal` on the CLI): one fsynced
+    /// entry per completed repeat, so a killed session can be resumed
+    /// bit-identically. Journaling serializes the repeat pool (each
+    /// repeat's inner evaluation fan-out keeps the full executor, so this
+    /// is wall-clock only — the workers contract guarantees identical
+    /// results).
+    pub journal_path: Option<String>,
+    /// Resume a killed session from its journal (`--resume <journal>`):
+    /// journaled repeats are replayed verbatim, the rest run fresh, and
+    /// new checkpoints append to the same file. The journal header must
+    /// match this session's parameters exactly.
+    pub resume_from: Option<String>,
+    /// Deterministic fault-injection spec (`[faults] spec` in TOML,
+    /// `--faults` / `RCC_FAULTS` on the CLI; CLI wins over env wins over
+    /// the file), e.g. `"llm_error=0.05,measure_fail=0.03,seed=7"`. See
+    /// `util::faults::FaultPlan::parse`. `None` / empty leaves the
+    /// harness disarmed — stock runs are bit-identical to a build
+    /// without it.
+    pub faults_spec: Option<String>,
 }
 
 /// Conventional database location used by the CLI when `--db` is not given.
@@ -149,6 +169,9 @@ impl Default for TuneConfig {
             workers: 0,
             eval_batch: 1,
             trace_path: None,
+            journal_path: None,
+            resume_from: None,
+            faults_spec: None,
         }
     }
 }
@@ -221,6 +244,17 @@ impl TuneConfig {
                 "" => d.trace_path,
                 p => Some(p.to_string()),
             },
+            journal_path: match doc.get_str("session.journal", "") {
+                "" => d.journal_path,
+                p => Some(p.to_string()),
+            },
+            // Resuming is an operator action on a specific journal file,
+            // not a standing configuration — CLI only.
+            resume_from: d.resume_from,
+            faults_spec: match doc.get_str("faults.spec", "") {
+                "" => d.faults_spec,
+                p => Some(p.to_string()),
+            },
         }
     }
 
@@ -276,6 +310,15 @@ impl TuneConfig {
         self.eval_batch = args.opt_usize("eval-batch", self.eval_batch);
         if let Some(p) = args.opt("trace") {
             self.trace_path = Some(p.to_string());
+        }
+        if let Some(p) = args.opt("journal") {
+            self.journal_path = Some(p.to_string());
+        }
+        if let Some(p) = args.opt("resume") {
+            self.resume_from = Some(p.to_string());
+        }
+        if let Some(f) = args.opt("faults") {
+            self.faults_spec = Some(f.to_string());
         }
     }
 }
@@ -464,6 +507,34 @@ history_depth = 3
             Args::parse("tune --trace /tmp/t.json".split_whitespace().map(String::from));
         c.apply_cli(&args);
         assert_eq!(c.trace_path.as_deref(), Some("/tmp/t.json"));
+    }
+
+    #[test]
+    fn resilience_knobs_parse_and_override() {
+        let c = TuneConfig::default();
+        assert_eq!(c.journal_path, None);
+        assert_eq!(c.resume_from, None);
+        assert_eq!(c.faults_spec, None);
+
+        let doc = Doc::parse(
+            "[session]\njournal = \"results/session.jsonl\"\n[faults]\nspec = \"llm_error=0.1\"\n",
+        )
+        .unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.journal_path.as_deref(), Some("results/session.jsonl"));
+        assert_eq!(c.faults_spec.as_deref(), Some("llm_error=0.1"));
+        assert_eq!(c.resume_from, None, "resume is CLI-only");
+
+        let mut c = TuneConfig::default();
+        let args = Args::parse(
+            "tune --journal /tmp/j.jsonl --resume /tmp/j.jsonl --faults measure_fail=0.2,seed=9"
+                .split_whitespace()
+                .map(String::from),
+        );
+        c.apply_cli(&args);
+        assert_eq!(c.journal_path.as_deref(), Some("/tmp/j.jsonl"));
+        assert_eq!(c.resume_from.as_deref(), Some("/tmp/j.jsonl"));
+        assert_eq!(c.faults_spec.as_deref(), Some("measure_fail=0.2,seed=9"));
     }
 
     #[test]

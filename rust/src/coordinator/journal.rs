@@ -1,0 +1,656 @@
+//! Crash-safe session journal: an append-only JSONL checkpoint of a tuning
+//! session's per-repeat outcomes, so `rcc tune --resume <journal>` can
+//! restart a killed session and produce a **bit-identical**
+//! `SessionResult` to the uninterrupted run.
+//!
+//! File shape (mirrors the tuning database's durability contracts):
+//!
+//! - Line 1 is the header: the session parameters that pin the repeat
+//!   trajectory (workload fingerprint, platform, strategy, seed, budget,
+//!   repeats, resolved eval-batch width, cache-sharing mode, model). It is
+//!   written to a temp sibling and atomically renamed into place, so a
+//!   crash mid-create never leaves a half-written header and any stale
+//!   journal is replaced whole.
+//! - Every later line is one completed repeat: its index, seed, full
+//!   [`SearchResult`], LLM accounting, and — in shared-cache sessions —
+//!   the measurement-cache delta that repeat contributed (what later
+//!   repeats are allowed to observe). Appends are fsynced, so once
+//!   `append` returns a kill loses at most the repeat in flight.
+//! - On load, a malformed entry line (the torn tail of a mid-append kill)
+//!   is **skipped loudly, never fatal** — the database-wide recovery
+//!   contract. A missing or mismatched header *is* fatal: there is nothing
+//!   safe to resume.
+//!
+//! Numbers that must survive bit-exactly do: finite `f64`s round-trip
+//! through the crate's shortest-roundtrip JSON writer/parser, and `u64`
+//! identifiers that may exceed 2^53 (fingerprints, seeds) are carried as
+//! strings. Transforms reuse the registry's rendered-text codec, which is
+//! exact (integer parameters only).
+
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::reasoning::CostTracker;
+use crate::schedule::Transform;
+use crate::search::{Measurement, SearchResult};
+use crate::util::json::{arr, num, s, Json};
+
+/// Session parameters pinned at journal creation. Resume refuses to mix
+/// journals across sessions whose results could diverge.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JournalHeader {
+    pub workload_fp: u64,
+    pub workload: String,
+    pub platform: String,
+    pub strategy: String,
+    pub model: String,
+    pub seed: u64,
+    pub budget: usize,
+    pub repeats: usize,
+    /// Resolved width (`TuneConfig::resolved_eval_batch`): `eval_batch = 0`
+    /// follows the worker count, which changes the MCTS trajectory — so the
+    /// *resolved* value is what resume must agree on.
+    pub eval_batch: usize,
+    pub share_repeat_cache: bool,
+}
+
+const JOURNAL_KIND: &str = "rcc-session-journal";
+const JOURNAL_VERSION: f64 = 1.0;
+
+impl JournalHeader {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("kind", s(JOURNAL_KIND))
+            .set("version", num(JOURNAL_VERSION))
+            .set("workload_fp", s(&format!("{:016x}", self.workload_fp)))
+            .set("workload", s(&self.workload))
+            .set("platform", s(&self.platform))
+            .set("strategy", s(&self.strategy))
+            .set("model", s(&self.model))
+            .set("seed", s(&self.seed.to_string()))
+            .set("budget", num(self.budget as f64))
+            .set("repeats", num(self.repeats as f64))
+            .set("eval_batch", num(self.eval_batch as f64))
+            .set("share_repeat_cache", Json::Bool(self.share_repeat_cache));
+        o
+    }
+
+    fn from_json(doc: &Json) -> Result<JournalHeader> {
+        if get_str(doc, "kind")? != JOURNAL_KIND {
+            return Err(anyhow!("not a session journal (kind mismatch)"));
+        }
+        Ok(JournalHeader {
+            workload_fp: u64::from_str_radix(&get_str(doc, "workload_fp")?, 16)
+                .map_err(|e| anyhow!("bad workload_fp: {e}"))?,
+            workload: get_str(doc, "workload")?,
+            platform: get_str(doc, "platform")?,
+            strategy: get_str(doc, "strategy")?,
+            model: get_str(doc, "model")?,
+            seed: get_u64_str(doc, "seed")?,
+            budget: get_num(doc, "budget")? as usize,
+            repeats: get_num(doc, "repeats")? as usize,
+            eval_batch: get_num(doc, "eval_batch")? as usize,
+            share_repeat_cache: get_bool(doc, "share_repeat_cache")?,
+        })
+    }
+
+    /// Refuse to resume under parameters that could change results,
+    /// naming every mismatched field.
+    pub fn ensure_matches(&self, current: &JournalHeader) -> Result<()> {
+        let mut bad: Vec<String> = Vec::new();
+        let mut chk = |name: &str, a: &str, b: &str| {
+            if a != b {
+                bad.push(format!("{name}: journal={a}, session={b}"));
+            }
+        };
+        chk(
+            "workload_fp",
+            &format!("{:016x}", self.workload_fp),
+            &format!("{:016x}", current.workload_fp),
+        );
+        chk("platform", &self.platform, &current.platform);
+        chk("strategy", &self.strategy, &current.strategy);
+        chk("model", &self.model, &current.model);
+        chk("seed", &self.seed.to_string(), &current.seed.to_string());
+        chk("budget", &self.budget.to_string(), &current.budget.to_string());
+        chk("repeats", &self.repeats.to_string(), &current.repeats.to_string());
+        chk(
+            "eval_batch",
+            &self.eval_batch.to_string(),
+            &current.eval_batch.to_string(),
+        );
+        chk(
+            "share_repeat_cache",
+            &self.share_repeat_cache.to_string(),
+            &current.share_repeat_cache.to_string(),
+        );
+        if bad.is_empty() {
+            Ok(())
+        } else {
+            Err(anyhow!("journal does not match this session: {}", bad.join("; ")))
+        }
+    }
+}
+
+/// One completed repeat, exactly as the session loop would have produced
+/// it: replaying this entry instead of re-running the repeat is
+/// bit-identical by construction.
+#[derive(Debug, Clone)]
+pub struct JournalEntry {
+    /// Repeat index within the session (`0..repeats`).
+    pub repeat: usize,
+    /// The repeat's root seed (`session seed + repeat * 1009`).
+    pub seed: u64,
+    pub result: SearchResult,
+    pub costs: CostTracker,
+    pub fb_rate: f64,
+    pub expansions: u64,
+    /// Measurements this repeat added to the session-shared cache, as
+    /// `(platform, program fingerprint, latency)` — empty unless the
+    /// session shares its repeat cache. Resume replays these so later
+    /// repeats observe exactly the cache state they would have seen.
+    pub cache_delta: Vec<(String, u64, f64)>,
+}
+
+impl JournalEntry {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("repeat", num(self.repeat as f64))
+            .set("seed", s(&self.seed.to_string()))
+            .set("result", result_to_json(&self.result))
+            .set("costs", costs_to_json(&self.costs))
+            .set("fb_rate", num(self.fb_rate))
+            .set("expansions", num(self.expansions as f64))
+            .set(
+                "cache_delta",
+                arr(self
+                    .cache_delta
+                    .iter()
+                    .map(|(plat, fp, lat)| {
+                        arr(vec![s(plat), s(&format!("{fp:016x}")), num(*lat)])
+                    })
+                    .collect()),
+            );
+        o
+    }
+
+    fn from_json(doc: &Json) -> Result<JournalEntry> {
+        let mut cache_delta = Vec::new();
+        for row in doc
+            .get("cache_delta")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("missing cache_delta"))?
+        {
+            let row = row.as_arr().ok_or_else(|| anyhow!("bad cache_delta row"))?;
+            match row {
+                [p, fp, lat] => cache_delta.push((
+                    p.as_str().ok_or_else(|| anyhow!("bad delta platform"))?.to_string(),
+                    u64::from_str_radix(
+                        fp.as_str().ok_or_else(|| anyhow!("bad delta fp"))?,
+                        16,
+                    )
+                    .map_err(|e| anyhow!("bad delta fp: {e}"))?,
+                    lat.as_f64().ok_or_else(|| anyhow!("bad delta latency"))?,
+                )),
+                _ => return Err(anyhow!("bad cache_delta row arity")),
+            }
+        }
+        Ok(JournalEntry {
+            repeat: get_num(doc, "repeat")? as usize,
+            seed: get_u64_str(doc, "seed")?,
+            result: result_from_json(
+                doc.get("result").ok_or_else(|| anyhow!("missing result"))?,
+            )?,
+            costs: costs_from_json(
+                doc.get("costs").ok_or_else(|| anyhow!("missing costs"))?,
+            )?,
+            fb_rate: get_num(doc, "fb_rate")?,
+            expansions: get_num(doc, "expansions")? as u64,
+            cache_delta,
+        })
+    }
+}
+
+/// Handle on a journal file. Creation is atomic; appends are durable.
+#[derive(Debug, Clone)]
+pub struct SessionJournal {
+    path: PathBuf,
+}
+
+impl SessionJournal {
+    /// Start a fresh journal: header written via temp sibling + atomic
+    /// rename (replacing any stale journal whole).
+    pub fn create(path: &Path, header: &JournalHeader) -> Result<SessionJournal> {
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating journal dir {}", dir.display()))?;
+        }
+        let tmp = path.with_extension("jsonl.tmp");
+        let mut line = header.to_json().to_string();
+        line.push('\n');
+        std::fs::write(&tmp, &line)
+            .with_context(|| format!("writing journal header {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("publishing journal {}", path.display()))?;
+        Ok(SessionJournal { path: path.to_path_buf() })
+    }
+
+    /// Re-open an existing journal for further appends (the resume path;
+    /// call [`SessionJournal::load`] first to validate the header).
+    pub fn open(path: &Path) -> SessionJournal {
+        SessionJournal { path: path.to_path_buf() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Append one repeat checkpoint and fsync: after this returns, a kill
+    /// at any point loses at most the repeat in flight.
+    pub fn append(&self, entry: &JournalEntry) -> Result<()> {
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(&self.path)
+            .with_context(|| format!("opening journal {}", self.path.display()))?;
+        let mut line = entry.to_json().to_string();
+        line.push('\n');
+        f.write_all(line.as_bytes())
+            .with_context(|| format!("appending to journal {}", self.path.display()))?;
+        f.sync_data()
+            .with_context(|| format!("syncing journal {}", self.path.display()))?;
+        Ok(())
+    }
+
+    /// Load header + journaled repeats (sorted by repeat index; a
+    /// duplicate index keeps the first occurrence, loudly). Malformed
+    /// entry lines — the torn tail of a mid-append kill — are skipped
+    /// loudly, never fatal. A missing/malformed header is fatal.
+    pub fn load(path: &Path) -> Result<(JournalHeader, Vec<JournalEntry>)> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading journal {}", path.display()))?;
+        let mut lines = text.lines();
+        let header_line = lines
+            .next()
+            .ok_or_else(|| anyhow!("journal {} is empty", path.display()))?;
+        let header = Json::parse(header_line)
+            .ok_or_else(|| anyhow!("journal {} has a malformed header", path.display()))
+            .and_then(|j| JournalHeader::from_json(&j))
+            .with_context(|| format!("journal {}", path.display()))?;
+        let mut entries: Vec<JournalEntry> = Vec::new();
+        for (i, line) in lines.enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let parsed = Json::parse(line)
+                .ok_or_else(|| anyhow!("malformed JSON"))
+                .and_then(|j| JournalEntry::from_json(&j));
+            match parsed {
+                Ok(e) if entries.iter().any(|x| x.repeat == e.repeat) => {
+                    eprintln!(
+                        "warning: journal {}: duplicate repeat {} at line {}; keeping the first",
+                        path.display(),
+                        e.repeat,
+                        i + 2
+                    );
+                }
+                Ok(e) => entries.push(e),
+                Err(err) => eprintln!(
+                    "warning: journal {}: skipping malformed line {}: {err}",
+                    path.display(),
+                    i + 2
+                ),
+            }
+        }
+        entries.sort_by_key(|e| e.repeat);
+        Ok((header, entries))
+    }
+}
+
+// ---- field helpers --------------------------------------------------------
+
+fn get_str(doc: &Json, k: &str) -> Result<String> {
+    doc.get(k)
+        .and_then(|v| v.as_str())
+        .map(String::from)
+        .ok_or_else(|| anyhow!("missing {k}"))
+}
+
+fn get_num(doc: &Json, k: &str) -> Result<f64> {
+    doc.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("missing {k}"))
+}
+
+fn get_bool(doc: &Json, k: &str) -> Result<bool> {
+    match doc.get(k) {
+        Some(Json::Bool(b)) => Ok(*b),
+        _ => Err(anyhow!("missing {k}")),
+    }
+}
+
+/// `u64` carried as a decimal string (fingerprints and seeds may exceed
+/// 2^53, past which JSON numbers stop being exact).
+fn get_u64_str(doc: &Json, k: &str) -> Result<u64> {
+    get_str(doc, k)?.parse::<u64>().map_err(|e| anyhow!("bad {k}: {e}"))
+}
+
+// ---- SearchResult / CostTracker codecs ------------------------------------
+
+fn result_to_json(r: &SearchResult) -> Json {
+    let mut o = Json::obj();
+    o.set("strategy", s(&r.strategy))
+        .set("workload", s(&r.workload))
+        .set("platform", s(&r.platform))
+        .set("baseline_latency", num(r.baseline_latency))
+        .set("best_latency", num(r.best_latency))
+        .set(
+            "best_trace",
+            arr(r
+                .best_trace
+                .iter()
+                .map(|t| s(&crate::reasoning::engine::render_transform(t)))
+                .collect()),
+        )
+        .set(
+            "curve",
+            arr(r
+                .curve
+                .iter()
+                .map(|m| {
+                    arr(vec![
+                        num(m.sample as f64),
+                        num(m.latency),
+                        num(m.best_speedup),
+                        num(m.trace_len as f64),
+                    ])
+                })
+                .collect()),
+        )
+        .set("samples_used", num(r.samples_used as f64))
+        .set("cache_hits", num(r.cache_hits as f64))
+        .set("cache_misses", num(r.cache_misses as f64))
+        .set("failed_measurements", num(r.failed_measurements as f64));
+    o
+}
+
+fn result_from_json(doc: &Json) -> Result<SearchResult> {
+    let mut best_trace: Vec<Transform> = Vec::new();
+    for t in doc
+        .get("best_trace")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing best_trace"))?
+    {
+        let text = t.as_str().ok_or_else(|| anyhow!("bad trace element"))?;
+        best_trace.push(
+            parse_rendered_transform(text)
+                .ok_or_else(|| anyhow!("bad trace element {text:?}"))?,
+        );
+    }
+    let mut curve: Vec<Measurement> = Vec::new();
+    for row in doc
+        .get("curve")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("missing curve"))?
+    {
+        let row = row.as_arr().ok_or_else(|| anyhow!("bad curve row"))?;
+        let f = |i: usize| -> Result<f64> {
+            row.get(i)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("bad curve row"))
+        };
+        curve.push(Measurement {
+            sample: f(0)? as usize,
+            latency: f(1)?,
+            best_speedup: f(2)?,
+            trace_len: f(3)? as usize,
+        });
+    }
+    Ok(SearchResult {
+        strategy: get_str(doc, "strategy")?,
+        workload: get_str(doc, "workload")?,
+        platform: get_str(doc, "platform")?,
+        baseline_latency: get_num(doc, "baseline_latency")?,
+        best_latency: get_num(doc, "best_latency")?,
+        best_trace,
+        curve,
+        samples_used: get_num(doc, "samples_used")? as usize,
+        cache_hits: get_num(doc, "cache_hits")? as usize,
+        cache_misses: get_num(doc, "cache_misses")? as usize,
+        failed_measurements: get_num(doc, "failed_measurements")? as usize,
+    })
+}
+
+fn costs_to_json(c: &CostTracker) -> Json {
+    let mut o = Json::obj();
+    o.set("calls", num(c.calls as f64))
+        .set("prompt_tokens", num(c.prompt_tokens as f64))
+        .set("completion_tokens", num(c.completion_tokens as f64))
+        .set("retries", num(c.retries as f64))
+        .set("degraded", num(c.degraded as f64))
+        .set("backoff_ms", num(c.backoff_ms as f64));
+    o
+}
+
+fn costs_from_json(doc: &Json) -> Result<CostTracker> {
+    Ok(CostTracker {
+        calls: get_num(doc, "calls")? as u64,
+        prompt_tokens: get_num(doc, "prompt_tokens")? as u64,
+        completion_tokens: get_num(doc, "completion_tokens")? as u64,
+        retries: get_num(doc, "retries")? as u64,
+        degraded: get_num(doc, "degraded")? as u64,
+        backoff_ms: get_num(doc, "backoff_ms")? as u64,
+    })
+}
+
+/// Exact inverse of `render_transform`, via the proposal parser (the same
+/// codec the run registry uses for persisted best traces).
+fn parse_rendered_transform(text: &str) -> Option<Transform> {
+    let resp = format!("Transformations to apply: {text}.");
+    match crate::reasoning::proposal::parse_response(&resp).into_iter().next()? {
+        crate::reasoning::proposal::Parsed::Valid(t) => Some(t),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_header() -> JournalHeader {
+        JournalHeader {
+            workload_fp: 0xdead_beef_cafe_f00d,
+            workload: "deepseek_moe".to_string(),
+            platform: "core_i9".to_string(),
+            strategy: "llm_mcts".to_string(),
+            model: "gpt4o_mini".to_string(),
+            seed: u64::MAX - 7, // exercise the >2^53 string codec
+            budget: 40,
+            repeats: 3,
+            eval_batch: 1,
+            share_repeat_cache: true,
+        }
+    }
+
+    fn sample_entry(repeat: usize) -> JournalEntry {
+        JournalEntry {
+            repeat,
+            seed: 42 + repeat as u64 * 1009,
+            result: SearchResult {
+                strategy: "llm_mcts".to_string(),
+                workload: "deepseek_moe".to_string(),
+                platform: "core_i9".to_string(),
+                baseline_latency: 0.012345678901234567,
+                best_latency: 0.003141592653589793,
+                best_trace: vec![
+                    Transform::TileSize { stage: 0, loop_idx: 1, factor: 8 },
+                    Transform::Reorder { stage: 1, perm: vec![1, 0] },
+                    Transform::CacheWrite { stage: 0 },
+                ],
+                curve: vec![
+                    Measurement {
+                        sample: 1,
+                        latency: 0.0101010101010101,
+                        best_speedup: 1.0000000000000002,
+                        trace_len: 2,
+                    },
+                    Measurement {
+                        sample: 2,
+                        latency: 0.003141592653589793,
+                        best_speedup: 3.9297,
+                        trace_len: 3,
+                    },
+                ],
+                samples_used: 2,
+                cache_hits: 1,
+                cache_misses: 2,
+                failed_measurements: 1,
+            },
+            costs: CostTracker {
+                calls: 9,
+                prompt_tokens: 12345,
+                completion_tokens: 678,
+                retries: 4,
+                degraded: 1,
+                backoff_ms: 175,
+            },
+            fb_rate: 0.1111111111111111,
+            expansions: 3,
+            cache_delta: vec![
+                ("core_i9".to_string(), u64::MAX - 1, 0.000123456789012345),
+                ("core_i9".to_string(), 17, 2.0),
+            ],
+        }
+    }
+
+    fn tmp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "rcc_journal_{tag}_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    fn assert_entries_bit_equal(a: &JournalEntry, b: &JournalEntry) {
+        assert_eq!(a.repeat, b.repeat);
+        assert_eq!(a.seed, b.seed);
+        assert_eq!(a.result.strategy, b.result.strategy);
+        assert_eq!(
+            a.result.baseline_latency.to_bits(),
+            b.result.baseline_latency.to_bits()
+        );
+        assert_eq!(a.result.best_latency.to_bits(), b.result.best_latency.to_bits());
+        assert_eq!(a.result.best_trace, b.result.best_trace);
+        assert_eq!(a.result.curve.len(), b.result.curve.len());
+        for (x, y) in a.result.curve.iter().zip(&b.result.curve) {
+            assert_eq!(x.sample, y.sample);
+            assert_eq!(x.latency.to_bits(), y.latency.to_bits());
+            assert_eq!(x.best_speedup.to_bits(), y.best_speedup.to_bits());
+            assert_eq!(x.trace_len, y.trace_len);
+        }
+        assert_eq!(a.result.samples_used, b.result.samples_used);
+        assert_eq!(a.result.cache_hits, b.result.cache_hits);
+        assert_eq!(a.result.cache_misses, b.result.cache_misses);
+        assert_eq!(a.result.failed_measurements, b.result.failed_measurements);
+        assert_eq!(a.costs.calls, b.costs.calls);
+        assert_eq!(a.costs.prompt_tokens, b.costs.prompt_tokens);
+        assert_eq!(a.costs.retries, b.costs.retries);
+        assert_eq!(a.costs.degraded, b.costs.degraded);
+        assert_eq!(a.costs.backoff_ms, b.costs.backoff_ms);
+        assert_eq!(a.fb_rate.to_bits(), b.fb_rate.to_bits());
+        assert_eq!(a.expansions, b.expansions);
+        assert_eq!(a.cache_delta.len(), b.cache_delta.len());
+        for ((p1, f1, l1), (p2, f2, l2)) in a.cache_delta.iter().zip(&b.cache_delta) {
+            assert_eq!(p1, p2);
+            assert_eq!(f1, f2);
+            assert_eq!(l1.to_bits(), l2.to_bits());
+        }
+    }
+
+    #[test]
+    fn header_and_entry_roundtrip_bit_exact() {
+        let h = sample_header();
+        let h2 = JournalHeader::from_json(&Json::parse(&h.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(h, h2);
+        let e = sample_entry(1);
+        let e2 = JournalEntry::from_json(&Json::parse(&e.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_entries_bit_equal(&e, &e2);
+    }
+
+    #[test]
+    fn create_append_load_roundtrip() {
+        let path = tmp_path("roundtrip");
+        let j = SessionJournal::create(&path, &sample_header()).unwrap();
+        j.append(&sample_entry(0)).unwrap();
+        j.append(&sample_entry(2)).unwrap();
+        j.append(&sample_entry(1)).unwrap();
+        let (h, entries) = SessionJournal::load(&path).unwrap();
+        assert_eq!(h, sample_header());
+        assert_eq!(
+            entries.iter().map(|e| e.repeat).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "entries sort by repeat index"
+        );
+        assert_entries_bit_equal(&entries[1], &sample_entry(1));
+        // Re-creating over an existing journal replaces it whole.
+        SessionJournal::create(&path, &sample_header()).unwrap();
+        let (_, entries) = SessionJournal::load(&path).unwrap();
+        assert!(entries.is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn torn_tail_is_skipped_loudly_not_fatal() {
+        let path = tmp_path("torn");
+        let j = SessionJournal::create(&path, &sample_header()).unwrap();
+        j.append(&sample_entry(0)).unwrap();
+        // Simulate a kill mid-append: a truncated JSON line at the tail.
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"{\"repeat\":1,\"seed\":\"43\",\"res").unwrap();
+        drop(f);
+        let (_, entries) = SessionJournal::load(&path).unwrap();
+        assert_eq!(entries.len(), 1, "intact prefix survives a torn tail");
+        assert_eq!(entries[0].repeat, 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_mismatch_and_bad_header_are_fatal() {
+        let h = sample_header();
+        let mut other = h.clone();
+        other.budget = 41;
+        other.platform = "m2_pro".to_string();
+        let err = h.ensure_matches(&other).unwrap_err().to_string();
+        assert!(err.contains("budget"), "{err}");
+        assert!(err.contains("platform"), "{err}");
+        assert!(h.ensure_matches(&h.clone()).is_ok());
+
+        let path = tmp_path("badheader");
+        std::fs::write(&path, "{not json\n").unwrap();
+        assert!(SessionJournal::load(&path).is_err(), "bad header must be fatal");
+        std::fs::write(&path, "{\"kind\":\"something-else\"}\n").unwrap();
+        assert!(SessionJournal::load(&path).is_err(), "wrong kind must be fatal");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn duplicate_repeat_keeps_first() {
+        let path = tmp_path("dup");
+        let j = SessionJournal::create(&path, &sample_header()).unwrap();
+        let mut first = sample_entry(0);
+        first.costs.calls = 1;
+        let mut second = sample_entry(0);
+        second.costs.calls = 2;
+        j.append(&first).unwrap();
+        j.append(&second).unwrap();
+        let (_, entries) = SessionJournal::load(&path).unwrap();
+        assert_eq!(entries.len(), 1);
+        assert_eq!(entries[0].costs.calls, 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

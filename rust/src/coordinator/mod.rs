@@ -5,12 +5,14 @@
 //! over PJRT executables annotated with their best-known schedules.
 
 pub mod config;
+pub mod journal;
 pub mod metrics;
 pub mod registry;
 pub mod server;
 pub mod tuner;
 
 pub use config::{Strategy, TuneConfig, DEFAULT_DB_PATH};
+pub use journal::{JournalEntry, JournalHeader, SessionJournal};
 pub use registry::{Registry, RunRecord};
 pub use server::{BestSchedule, Server, ServerConfig};
 pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on,

@@ -95,9 +95,15 @@ impl Registry {
                     .collect()),
             )
             .set("telemetry", session.telemetry.to_json());
+        // Temp sibling + atomic rename: a crash mid-write must never leave
+        // a torn record for `list()` to trip over (`rcc serve` resolves
+        // best schedules through these files at startup).
         let path = self.dir.join(format!("{id}.json"));
-        std::fs::write(&path, doc.to_pretty())
-            .with_context(|| format!("writing {}", path.display()))?;
+        let tmp = self.dir.join(format!("{id}.json.tmp"));
+        std::fs::write(&tmp, doc.to_pretty())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, &path)
+            .with_context(|| format!("publishing {}", path.display()))?;
         Ok(id)
     }
 
@@ -250,6 +256,24 @@ mod tests {
         let reg = temp_registry();
         std::fs::write(reg.dir.join("junk.json"), "{not json").unwrap();
         assert!(reg.list().unwrap().is_empty());
+        std::fs::remove_dir_all(&reg.dir).ok();
+    }
+
+    #[test]
+    fn truncated_record_skipped_loudly_and_tmp_files_ignored() {
+        let reg = temp_registry();
+        let s = session();
+        let id = reg.record(&s).unwrap();
+        // Simulate a torn write of a *second* record: a valid record
+        // truncated mid-file must be skipped, not fail the whole listing.
+        let good = std::fs::read_to_string(reg.dir.join(format!("{id}.json"))).unwrap();
+        std::fs::write(reg.dir.join("torn.json"), &good[..good.len() / 2]).unwrap();
+        // A leftover temp sibling (crash between write and rename) is not
+        // a record and must not be listed.
+        std::fs::write(reg.dir.join("stale.json.tmp"), &good).unwrap();
+        let records = reg.list().unwrap();
+        assert_eq!(records.len(), 1, "only the intact record survives");
+        assert_eq!(records[0].id, id);
         std::fs::remove_dir_all(&reg.dir).ok();
     }
 }

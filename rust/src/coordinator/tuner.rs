@@ -29,10 +29,12 @@ use crate::tir::workload::{E2eTask, WorkloadId};
 use crate::tir::Program;
 use crate::transfer::{self, Exemplar};
 use crate::util::executor::Executor;
+use crate::util::faults;
 use crate::util::json::{self, Json};
 use crate::util::stats;
 
 use super::config::{Strategy, TuneConfig};
+use super::journal::{JournalEntry, JournalHeader, SessionJournal};
 
 /// Database-derived hints shared by every repeat of a session: warm-start
 /// traces plus a measurement cache pre-populated with known costs. Each run
@@ -131,6 +133,9 @@ pub struct SessionResult {
     /// Aggregated LLM accounting over the repeats (llm_mcts only).
     pub llm_costs: CostTracker,
     pub llm_fallback_rate: f64,
+    /// Repeats replayed verbatim from a `--resume` journal instead of
+    /// being re-run (0 for a fresh session).
+    pub resumed_repeats: usize,
     /// Observability counters scoped to this session.
     pub telemetry: SessionTelemetry,
 }
@@ -172,6 +177,12 @@ impl SessionResult {
     /// Total hardware samples consumed across repeats.
     pub fn total_samples(&self) -> usize {
         self.runs.iter().map(|r| r.samples_used).sum()
+    }
+
+    /// Total quarantined hardware measurements across repeats (samples
+    /// spent on failures; always 0 without an armed fault plan).
+    pub fn total_failed_measurements(&self) -> usize {
+        self.runs.iter().map(|r| r.failed_measurements).sum()
     }
 }
 
@@ -308,6 +319,45 @@ pub fn run_session_on_with(
 ) -> Result<SessionResult> {
     // Validate the platform up front so every repeat fails the same way.
     platform_for(cfg)?;
+    // ---- crash-safe journaling / resume --------------------------------
+    // The serve fleet shares one measurement pool across many sessions; a
+    // single journal path cannot describe that, so refuse loudly instead
+    // of corrupting checkpoints.
+    if pool.is_some() && (cfg.journal_path.is_some() || cfg.resume_from.is_some()) {
+        return Err(anyhow!(
+            "--journal/--resume are per-session and not supported with the serve fleet"
+        ));
+    }
+    let header = JournalHeader {
+        workload_fp: workload_fingerprint(program),
+        workload: program.name.clone(),
+        platform: cfg.platform.clone(),
+        strategy: cfg.strategy.name().to_string(),
+        model: cfg.model.clone(),
+        seed: cfg.seed,
+        budget: cfg.budget,
+        repeats: cfg.repeats,
+        eval_batch: cfg.resolved_eval_batch(),
+        share_repeat_cache: cfg.share_repeat_cache,
+    };
+    // Resume loads + validates the old journal and keeps appending to it;
+    // a fresh `--journal` atomically replaces whatever was at the path.
+    let mut replayed: HashMap<usize, JournalEntry> = HashMap::new();
+    let journal: Option<SessionJournal> = if let Some(rp) = &cfg.resume_from {
+        let path = Path::new(rp);
+        let (jh, entries) = SessionJournal::load(path)?;
+        jh.ensure_matches(&header).with_context(|| format!("--resume {rp}"))?;
+        for e in entries {
+            if e.repeat < cfg.repeats {
+                replayed.insert(e.repeat, e);
+            }
+        }
+        Some(SessionJournal::open(path))
+    } else if let Some(jp) = &cfg.journal_path {
+        Some(SessionJournal::create(Path::new(jp), &header)?)
+    } else {
+        None
+    };
     // Telemetry baseline: the session reports its own share of the
     // process-wide counters (read-only snapshots; never affects results).
     let phases0 = obs::phase_totals();
@@ -387,8 +437,13 @@ pub fn run_session_on_with(
     // program first), so the repeats must run serially, in seed order, to
     // stay deterministic run-to-run — the "workers never change results"
     // contract then still holds: the inner batched-evaluation fan-out
-    // keeps the executor's full budget.
-    let serial_repeats = run_cfg.share_repeat_cache;
+    // keeps the executor's full budget. Journaling and an armed crash
+    // clock also force seed order: checkpoints mean "repeats 0..k are
+    // durable" and a deterministic kill point needs a deterministic
+    // repeat-in-flight — both wall-clock-only choices under that same
+    // contract.
+    let serial_repeats =
+        run_cfg.share_repeat_cache || journal.is_some() || faults::crash_armed();
     let run_cfg = &run_cfg;
     let hints = hints.as_ref();
     // One analysis cache for the whole session: the repeats evaluate the
@@ -403,11 +458,61 @@ pub fn run_session_on_with(
     // repeats strictly serially, inline. A repeat's own batched
     // evaluation submits nested groups to the same executor (waiting
     // submitters help), so repeats × eval_batch never oversubscribes.
+    let shared_cache = run_cfg.share_repeat_cache;
+    let mut resumed_repeats = 0usize;
     let outcomes: Vec<Result<(SearchResult, CostTracker, f64, u64)>> = if serial_repeats {
-        seeds
-            .iter()
-            .map(|&seed| run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec))
-            .collect()
+        let mut outcomes = Vec::with_capacity(seeds.len());
+        for (i, &seed) in seeds.iter().enumerate() {
+            // A journaled repeat replays verbatim — bit-identical by
+            // construction — re-applying its cache delta so later repeats
+            // observe exactly the cache state of the uninterrupted run.
+            if let Some(e) = replayed.remove(&i) {
+                if let Some(h) = hints.filter(|_| shared_cache) {
+                    for (plat, fp, lat) in &e.cache_delta {
+                        h.cache.insert(*fp, plat, *lat);
+                    }
+                }
+                resumed_repeats += 1;
+                outcomes.push(Ok((e.result, e.costs, e.fb_rate, e.expansions)));
+                continue;
+            }
+            let cache_before = match (&journal, hints) {
+                (Some(_), Some(h)) if shared_cache => Some(h.cache.entries()),
+                _ => None,
+            };
+            let out = run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec);
+            // An armed crash clock models a mid-session kill: the repeat
+            // in flight when the clock expired is *discarded* (a real kill
+            // loses it mid-write) and the session aborts before the
+            // database commit. `--resume` re-runs it from its fixed seed.
+            if faults::crash_due() {
+                return Err(anyhow!(
+                    "injected crash: fault plan expired after {} measurement steps (repeat {i} discarded{})",
+                    faults::steps(),
+                    if journal.is_some() { "; restart with --resume" } else { "" },
+                ));
+            }
+            if let (Some(j), Ok(o)) = (&journal, &out) {
+                let cache_delta = match cache_before {
+                    Some(before) => diff_cache_entries(
+                        &before,
+                        hints.map(|h| h.cache.entries()).unwrap_or_default(),
+                    ),
+                    None => Vec::new(),
+                };
+                j.append(&JournalEntry {
+                    repeat: i,
+                    seed,
+                    result: o.0.clone(),
+                    costs: o.1.clone(),
+                    fb_rate: o.2,
+                    expansions: o.3,
+                    cache_delta,
+                })?;
+            }
+            outcomes.push(out);
+        }
+        outcomes
     } else {
         exec.run(
             seeds
@@ -475,8 +580,27 @@ pub fn run_session_on_with(
         runs,
         llm_costs,
         llm_fallback_rate: stats::mean(&fb_rates),
+        resumed_repeats,
         telemetry: SessionTelemetry::capture(&phases0, &exec0),
     })
+}
+
+/// Entries present in `after` but not `before` (or with a changed value):
+/// the measurements one repeat contributed to the session-shared cache.
+/// Both snapshots come sorted from [`MeasureCache::entries`], so the delta
+/// is deterministic.
+fn diff_cache_entries(
+    before: &[(String, u64, f64)],
+    after: Vec<(String, u64, f64)>,
+) -> Vec<(String, u64, f64)> {
+    let prev: HashMap<(&str, u64), f64> =
+        before.iter().map(|(p, fp, l)| ((p.as_str(), *fp), *l)).collect();
+    after
+        .into_iter()
+        .filter(|(p, fp, l)| {
+            prev.get(&(p.as_str(), *fp)).map_or(true, |old| old.to_bits() != l.to_bits())
+        })
+        .collect()
 }
 
 /// End-to-end result: per-task sessions + the invocation-weighted speedup
@@ -735,6 +859,96 @@ mod tests {
         );
         std::fs::remove_file(&da).ok();
         std::fs::remove_file(&db_).ok();
+    }
+
+    fn temp_journal(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "rcc_session_journal_{tag}_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    fn result_key(r: &SearchResult) -> (u64, usize, Vec<(usize, u64)>) {
+        (
+            r.best_latency.to_bits(),
+            r.samples_used,
+            r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect(),
+        )
+    }
+
+    #[test]
+    fn journaled_session_resumes_bit_identically() {
+        let jp = temp_journal("full");
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some(jp.to_string_lossy().to_string());
+        let a = run_session(&cfg).unwrap();
+        assert_eq!(a.resumed_repeats, 0);
+        let (h, entries) = SessionJournal::load(&jp).unwrap();
+        assert_eq!(h.repeats, 2);
+        assert_eq!(entries.len(), 2, "every repeat checkpointed");
+
+        // Resuming a complete journal replays everything, runs nothing,
+        // and reproduces the session bit-for-bit.
+        let mut rcfg = cfg.clone();
+        rcfg.journal_path = None;
+        rcfg.resume_from = Some(jp.to_string_lossy().to_string());
+        let b = run_session(&rcfg).unwrap();
+        assert_eq!(b.resumed_repeats, 2);
+        assert_eq!(
+            a.runs.iter().map(result_key).collect::<Vec<_>>(),
+            b.runs.iter().map(result_key).collect::<Vec<_>>()
+        );
+
+        // Mismatched parameters refuse to resume, naming the field.
+        let mut bad = rcfg.clone();
+        bad.budget += 1;
+        let err = run_session(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("budget"), "{err:#}");
+        std::fs::remove_file(&jp).ok();
+    }
+
+    #[test]
+    fn truncated_journal_resume_re_runs_missing_repeats() {
+        // An uninterrupted journaled session, then simulate a kill by
+        // truncating the journal to header + repeat 0 + a torn tail line.
+        let jp = temp_journal("truncated");
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some(jp.to_string_lossy().to_string());
+        let full = run_session(&cfg).unwrap();
+        let text = std::fs::read_to_string(&jp).unwrap();
+        let keep: Vec<&str> = text.lines().take(2).collect();
+        std::fs::write(&jp, format!("{}\n{{\"repeat\":1,\"se", keep.join("\n"))).unwrap();
+
+        let mut rcfg = cfg.clone();
+        rcfg.journal_path = None;
+        rcfg.resume_from = Some(jp.to_string_lossy().to_string());
+        let resumed = run_session(&rcfg).unwrap();
+        assert_eq!(resumed.resumed_repeats, 1, "repeat 0 replays, repeat 1 re-runs");
+        assert_eq!(
+            full.runs.iter().map(result_key).collect::<Vec<_>>(),
+            resumed.runs.iter().map(result_key).collect::<Vec<_>>(),
+            "resume after a torn journal is bit-identical to the uninterrupted run"
+        );
+        // The re-run repeat was re-checkpointed into the same journal.
+        let (_, entries) = SessionJournal::load(&jp).unwrap();
+        assert_eq!(entries.len(), 2);
+        std::fs::remove_file(&jp).ok();
+    }
+
+    #[test]
+    fn journal_is_rejected_for_the_serve_fleet() {
+        let pool = MeasureCache::new();
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some("/tmp/never-written.jsonl".to_string());
+        let program = WorkloadId::DeepSeekMoe.build_test();
+        let exec = Arc::new(Executor::new(1));
+        let err =
+            run_session_on_with(&program, &cfg, &exec, Some(&pool)).unwrap_err();
+        assert!(err.to_string().contains("serve fleet"), "{err}");
     }
 
     #[test]

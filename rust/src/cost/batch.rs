@@ -16,8 +16,10 @@
 //! hardware closures onto the executor directly, folding in plan order.
 
 use crate::obs;
+use crate::search::common::FAILED_MEASUREMENT;
 use crate::tir::Program;
 use crate::util::executor::Executor;
+use crate::util::faults;
 
 use super::analytical::CostModel;
 
@@ -35,11 +37,35 @@ pub struct LatencyJob<'a> {
 /// bit-identical for every executor width because each job's seed is fixed
 /// up front and `CostModel::latency` is deterministic per `(program, seed)`.
 pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Executor) -> Vec<f64> {
+    // Injected measurement faults (`util::faults`) are rolled serially here,
+    // at plan time and keyed by each job's seed, so a fault schedule is
+    // fixed before the fan-out and identical for every executor width — the
+    // same contract the searchers' BatchEvaluator follows. A faulted job
+    // returns [`FAILED_MEASUREMENT`] without touching the model. Stock runs
+    // take the `!armed()` branch: one relaxed load, no per-job work.
+    let faulted: Vec<bool> = if faults::armed() {
+        jobs.iter()
+            .enumerate()
+            .map(|(i, j)| {
+                let hit = faults::measure_fault(j.seed);
+                if hit {
+                    obs::instant(obs::EventKind::MeasureFail, i as u64);
+                }
+                hit
+            })
+            .collect()
+    } else {
+        Vec::new()
+    };
+    let fault_at = |i: usize| faulted.get(i).copied().unwrap_or(false);
     if exec.is_serial() || jobs.len() <= 1 {
         return jobs
             .iter()
             .enumerate()
             .map(|(i, j)| {
+                if fault_at(i) {
+                    return FAILED_MEASUREMENT;
+                }
                 let _sp = obs::span(obs::EventKind::Measure, i as u64);
                 model.latency(j.program, j.seed)
             })
@@ -49,7 +75,11 @@ pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Exec
         jobs.iter()
             .enumerate()
             .map(|(i, j)| {
+                let failed = fault_at(i);
                 move || {
+                    if failed {
+                        return FAILED_MEASUREMENT;
+                    }
                     let _sp = obs::span(obs::EventKind::Measure, i as u64);
                     model.latency(j.program, j.seed)
                 }

@@ -153,6 +153,24 @@ impl MeasureCache {
         }
     }
 
+    /// Snapshot every entry as `(platform, fingerprint, latency)`, sorted.
+    /// Used by the session journal to diff a shared cache before/after a
+    /// repeat (checkpointing exactly the measurements that repeat added);
+    /// the sort makes the snapshot independent of shard and hash order.
+    pub fn entries(&self) -> Vec<(String, u64, f64)> {
+        let mut out: Vec<(String, u64, f64)> = Vec::with_capacity(self.len());
+        for shard in self.shards.iter() {
+            let shard = shard.lock().unwrap();
+            for (platform, m) in shard.iter() {
+                for (&fp, &lat) in m.iter() {
+                    out.push((platform.clone(), fp, lat));
+                }
+            }
+        }
+        out.sort_by(|a, b| (&a.0, a.1).cmp(&(&b.0, b.1)));
+        out
+    }
+
     /// Record a measurement. Last write wins (re-measurement under a
     /// different seed refreshes the entry).
     pub fn insert(&self, program_fp: u64, platform: &str, latency: f64) {
@@ -234,6 +252,23 @@ mod tests {
         assert_eq!(d.get(1, "core_i9"), Some(2.0));
         d.insert_if_better(1, "core_i9", 1.0);
         assert_eq!(d.get(1, "core_i9"), Some(1.0));
+    }
+
+    #[test]
+    fn entries_snapshot_is_sorted_and_complete() {
+        let c = MeasureCache::new();
+        c.insert(9, "m2_pro", 3.0);
+        c.insert(1, "core_i9", 1.0);
+        c.insert(5, "core_i9", 2.0);
+        assert_eq!(
+            c.entries(),
+            vec![
+                ("core_i9".to_string(), 1, 1.0),
+                ("core_i9".to_string(), 5, 2.0),
+                ("m2_pro".to_string(), 9, 3.0),
+            ]
+        );
+        assert!(MeasureCache::new().entries().is_empty());
     }
 
     #[test]

@@ -21,6 +21,7 @@ use reasoning_compiler::runtime::Manifest;
 use reasoning_compiler::schedule::{Schedule, Transform};
 use reasoning_compiler::tir::{printer, workload, WorkloadId};
 use reasoning_compiler::util::cli::Args;
+use reasoning_compiler::util::faults;
 use reasoning_compiler::util::rng::Pcg;
 use reasoning_compiler::util::json::Json;
 
@@ -57,6 +58,18 @@ Tuning
               --eval-batch N MCTS leaves measured per iteration (1 =
                              serial trajectory; >1 = leaf-parallel search,
                              deterministic per seed; 0 = match --workers)
+              --journal FILE crash-safe session checkpoint (append-only
+                             JSONL, one fsynced entry per completed
+                             repeat; `[session] journal` in --config)
+              --resume FILE  resume a killed session from its journal:
+                             journaled repeats replay verbatim, the rest
+                             re-run — bit-identical to the uninterrupted
+                             run; new checkpoints append to the same file
+              --faults SPEC  deterministic fault injection (RCC_FAULTS env
+                             or `[faults] spec` in --config also work;
+                             CLI > env > config), e.g. llm_error=0.05,
+                             llm_timeout=0.02,measure_fail=0.03,
+                             crash_at_step=40,seed=7
   compare     Run all three strategies head-to-head on one benchmark.
   e2e         Tune the end-to-end Llama-3-8B task set.
 
@@ -108,7 +121,18 @@ Observability
   Every command accepts --trace FILE (or the RCC_TRACE env var) to record
   a Chrome trace-event JSON of the run — load it at ui.perfetto.dev.
   `--config` files can set it as `[obs] trace`. Tracing never changes
-  results: searches are bit-identical with it on or off.
+  results: searches are bit-identical with it on or off. With a trace
+  armed, a panic still exports it (plus a telemetry summary to stderr).
+
+Fault tolerance
+  With an armed fault plan (--faults / RCC_FAULTS), injected LLM failures
+  are retried (bounded attempts, deterministic backoff) and then degrade
+  to the sampler fallback; failed hardware measurements are quarantined —
+  the sample is spent but nothing is cached or recorded — and the search
+  keeps going. `crash_at_step=N` kills the session once the measurement
+  clock passes N; with --journal armed, `tune --resume` restarts it
+  bit-identically. With no plan armed every workload is bit-identical to
+  a build without the harness.
 
 Serving & inspection
   serve       Dynamic-batching serving demo over the AOT artifacts,
@@ -139,8 +163,46 @@ fn main() {
             .map(String::from)
             .or_else(|| std::env::var("RCC_TRACE").ok().filter(|s| !s.is_empty()))
     };
-    if trace_path.is_some() {
+    if let Some(path) = &trace_path {
         obs::enable();
+        // A panicking run's trace is the one worth looking at: export the
+        // armed trace and a telemetry summary to stderr before unwinding
+        // finishes, then defer to the default hook's backtrace.
+        let hook_path = path.clone();
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            default_hook(info);
+            let events = obs::drain();
+            if let Some(parent) = Path::new(&hook_path).parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent).ok();
+                }
+            }
+            match obs::write_chrome_trace(&hook_path, &events) {
+                Ok(()) => eprintln!(
+                    "panic: exported {} trace events to {hook_path} (load at ui.perfetto.dev)",
+                    events.len()
+                ),
+                Err(e) => eprintln!("panic: failed to export trace to {hook_path}: {e:#}"),
+            }
+            let mut summary = obs::summarize(&events);
+            summary.exec = Some(obs::exec_counters());
+            eprint!("{}", obs::render_summary(&summary));
+        }));
+    }
+    // RCC_FAULTS arms the deterministic fault-injection harness for any
+    // command; `tune` additionally honors `--faults` / `[faults] spec`
+    // with CLI > env > config precedence. A bad spec is a usage error.
+    if let Ok(spec) = std::env::var("RCC_FAULTS") {
+        if !spec.is_empty() {
+            match faults::FaultPlan::parse(&spec) {
+                Ok(plan) => faults::arm(&plan),
+                Err(e) => {
+                    eprintln!("error: bad RCC_FAULTS spec: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
     }
     let result = dispatch(&cmd, &args);
     if let Some(path) = &trace_path {
@@ -268,6 +330,17 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         _ => None,
     };
+    // Arm fault injection: `--faults` wins over RCC_FAULTS (armed in
+    // main), which wins over a config-file `[faults] spec`.
+    let env_faults =
+        std::env::var("RCC_FAULTS").map(|s| !s.is_empty()).unwrap_or(false);
+    if args.opt("faults").is_some() || !env_faults {
+        if let Some(spec) = &cfg.faults_spec {
+            let plan = faults::FaultPlan::parse(spec)
+                .map_err(|e| anyhow!("bad --faults spec: {e}"))?;
+            faults::arm(&plan);
+        }
+    }
     println!(
         "tuning {} on {} with {} (budget {}, {} repeats)...",
         cfg.workload,
@@ -277,6 +350,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
         cfg.repeats
     );
     let session = run_session(&cfg)?;
+    if let Some(j) = &cfg.resume_from {
+        println!(
+            "resumed {} of {} repeats from {j} (re-ran the rest; bit-identical to the uninterrupted session)",
+            session.resumed_repeats, cfg.repeats
+        );
+    } else if let Some(j) = &cfg.journal_path {
+        println!("session journal: {j} ({} repeats checkpointed)", cfg.repeats);
+    }
     println!(
         "mean best speedup: {:.2}x over pre-optimized code",
         session.mean_speedup()
@@ -301,6 +382,23 @@ fn cmd_tune(args: &Args) -> Result<()> {
             session.llm_costs.prompt_tokens,
             session.llm_costs.usd(&model),
             session.llm_fallback_rate * 100.0
+        );
+    }
+    // Resilience accounting: printed whenever a fault plan is armed (so CI
+    // can assert on it) or any failure was absorbed. Stock runs stay
+    // byte-identical — this block never fires without injected faults.
+    let quarantined = session.total_failed_measurements();
+    if faults::armed()
+        || quarantined > 0
+        || session.llm_costs.retries > 0
+        || session.llm_costs.degraded > 0
+    {
+        println!(
+            "fault injection: {} LLM retries, {} degraded calls ({} ms backoff scheduled), {} quarantined measurements",
+            session.llm_costs.retries,
+            session.llm_costs.degraded,
+            session.llm_costs.backoff_ms,
+            quarantined
         );
     }
     print!("{}", session.telemetry.render());

@@ -44,6 +44,12 @@
 //! | `serve_enqueue` | serve  | instant      | queue depth after enqueue  |
 //! | `serve_batch`   | serve  | span         | batch size                 |
 //! | `transfer_query` | db    | span         | candidates considered (`arg2`: 1 = index, 0 = scan) |
+//! | `llm_retry`     | llm    | instant      | attempt index (`arg2`: 1 = timeout, 0 = error) |
+//! | `llm_degrade`   | llm    | instant      | policy call index          |
+//! | `measure_fail`  | batch  | instant      | plan-time submission index |
+//!
+//! The last three only ever fire under an armed fault plan
+//! (`util::faults`); stock runs never emit them.
 
 pub mod export;
 pub mod metrics;
@@ -55,5 +61,6 @@ pub use export::{
 };
 pub use metrics::{exec_counters, phase_totals, ExecCounters, PhaseStat, PhaseTotals};
 pub use recorder::{
-    disable, drain, enable, enabled, instant, span, span2, Event, EventKind, Phase, SpanGuard,
+    disable, drain, enable, enabled, instant, instant2, span, span2, Event, EventKind, Phase,
+    SpanGuard,
 };

@@ -17,7 +17,7 @@ use std::time::Instant;
 use super::metrics;
 
 /// Number of distinct event kinds (array sizing for the counters).
-pub const NUM_KINDS: usize = 15;
+pub const NUM_KINDS: usize = 18;
 
 /// Events a thread's ring holds before overwriting the oldest.
 pub const RING_CAP: usize = 1 << 18;
@@ -41,6 +41,9 @@ pub enum EventKind {
     ServeEnqueue = 12,
     ServeBatch = 13,
     TransferQuery = 14,
+    LlmRetry = 15,
+    LlmDegrade = 16,
+    MeasureFail = 17,
 }
 
 impl EventKind {
@@ -60,6 +63,9 @@ impl EventKind {
         EventKind::ServeEnqueue,
         EventKind::ServeBatch,
         EventKind::TransferQuery,
+        EventKind::LlmRetry,
+        EventKind::LlmDegrade,
+        EventKind::MeasureFail,
     ];
 
     /// Stable wire name (used as the Chrome trace `name` field).
@@ -80,6 +86,9 @@ impl EventKind {
             EventKind::ServeEnqueue => "serve_enqueue",
             EventKind::ServeBatch => "serve_batch",
             EventKind::TransferQuery => "transfer_query",
+            EventKind::LlmRetry => "llm_retry",
+            EventKind::LlmDegrade => "llm_degrade",
+            EventKind::MeasureFail => "measure_fail",
         }
     }
 
@@ -93,8 +102,9 @@ impl EventKind {
             | EventKind::Plan
             | EventKind::CacheProbe
             | EventKind::Submit
-            | EventKind::Fold => "batch",
-            EventKind::LlmCall => "llm",
+            | EventKind::Fold
+            | EventKind::MeasureFail => "batch",
+            EventKind::LlmCall | EventKind::LlmRetry | EventKind::LlmDegrade => "llm",
             EventKind::DbCommit | EventKind::DbGc | EventKind::TransferQuery => "db",
             EventKind::ServeEnqueue | EventKind::ServeBatch => "serve",
         }
@@ -245,8 +255,14 @@ pub fn drain() -> Vec<Event> {
 /// Record a point event (no duration).
 #[inline]
 pub fn instant(kind: EventKind, arg: u64) {
+    instant2(kind, arg, 0);
+}
+
+/// [`instant`] with a secondary payload.
+#[inline]
+pub fn instant2(kind: EventKind, arg: u64, arg2: u64) {
     if enabled() {
-        record(kind, Phase::Instant, arg, 0);
+        record(kind, Phase::Instant, arg, arg2);
         metrics::record_instant(kind);
     }
 }

@@ -8,9 +8,19 @@ use super::models::ModelProfile;
 
 #[derive(Debug, Clone, Default)]
 pub struct CostTracker {
+    /// Completed calls (a call that fails and is retried still counts
+    /// once, when an attempt finally succeeds).
     pub calls: u64,
     pub prompt_tokens: u64,
     pub completion_tokens: u64,
+    /// Failed attempts that were retried (errors + timeouts).
+    pub retries: u64,
+    /// Calls abandoned after exhausting retries and degraded to the
+    /// sampler fallback path.
+    pub degraded: u64,
+    /// Deterministic backoff the retry policy scheduled, in ms (recorded,
+    /// not slept against simulated engines).
+    pub backoff_ms: u64,
 }
 
 impl CostTracker {
@@ -30,6 +40,9 @@ impl CostTracker {
         self.calls += other.calls;
         self.prompt_tokens += other.prompt_tokens;
         self.completion_tokens += other.completion_tokens;
+        self.retries += other.retries;
+        self.degraded += other.degraded;
+        self.backoff_ms += other.backoff_ms;
     }
 }
 
@@ -66,5 +79,18 @@ mod tests {
         assert_eq!(a.calls, 2);
         assert_eq!(a.prompt_tokens, 40);
         assert_eq!(a.completion_tokens, 60);
+    }
+
+    #[test]
+    fn merge_sums_resilience_counters() {
+        let mut a = CostTracker { retries: 2, degraded: 1, backoff_ms: 75, ..CostTracker::default() };
+        let b = CostTracker { retries: 3, degraded: 0, backoff_ms: 25, ..CostTracker::default() };
+        a.merge(&b);
+        assert_eq!(a.retries, 5);
+        assert_eq!(a.degraded, 1);
+        assert_eq!(a.backoff_ms, 100);
+        // Failed attempts never count as completed calls or tokens.
+        assert_eq!(a.calls, 0);
+        assert_eq!(a.prompt_tokens, 0);
     }
 }

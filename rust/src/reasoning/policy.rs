@@ -6,12 +6,24 @@ use crate::obs;
 use crate::schedule::Transform;
 use crate::search::common::{ProposalContext, ProposalPolicy};
 use crate::transfer::Exemplar;
+use crate::util::faults;
 use crate::util::rng::Pcg;
 
 use super::cost_tracker::CostTracker;
-use super::engine::LlmEngine;
+use super::engine::{LlmEngine, LlmResponse};
 use super::proposal::{self, FallbackStats};
 use super::prompt::PromptContext;
+
+/// Attempts per LLM call before degrading to the sampler fallback.
+pub const MAX_LLM_ATTEMPTS: u64 = 3;
+
+/// Deterministic exponential backoff schedule: 25ms, 50ms, 100ms... The
+/// delay is *recorded* (CostTracker::backoff_ms) rather than slept,
+/// since the stock engines are simulated; a remote engine adapter would
+/// sleep it before re-calling.
+pub fn backoff_ms(attempt: u64) -> u64 {
+    25u64 << attempt.min(6)
+}
 
 /// ProposalPolicy backed by an [`LlmEngine`].
 pub struct LlmPolicy<E: LlmEngine> {
@@ -28,6 +40,11 @@ pub struct LlmPolicy<E: LlmEngine> {
     /// Most recent raw responses, for logging/inspection (bounded).
     pub transcript: Vec<String>,
     pub log_transcript: bool,
+    /// Serial call index; with the policy seed it keys the fault rolls,
+    /// so an injected failure schedule is fixed at plan time and
+    /// independent of worker count (propose() is serial per search).
+    calls_made: u64,
+    fault_salt: u64,
 }
 
 impl<E: LlmEngine> LlmPolicy<E> {
@@ -41,7 +58,36 @@ impl<E: LlmEngine> LlmPolicy<E> {
             rng: Pcg::new(seed ^ 0x9D_0F_FE),
             transcript: Vec::new(),
             log_transcript: false,
+            calls_made: 0,
+            fault_salt: seed,
         }
+    }
+
+    /// One engine call under the retry policy. `None` = every attempt
+    /// failed (injected error or timeout) and the call degrades to the
+    /// sampler fallback. With no fault plan armed this is exactly one
+    /// `engine.complete` and nothing else.
+    fn complete_with_retries(&mut self, prompt_ctx: &PromptContext) -> Option<LlmResponse> {
+        let call = self.calls_made;
+        self.calls_made += 1;
+        for attempt in 0..MAX_LLM_ATTEMPTS {
+            let token = self.fault_salt ^ (call * 8 + attempt);
+            match faults::llm_fault(token) {
+                None => return Some(self.engine.complete(prompt_ctx)),
+                Some(kind) => {
+                    self.costs.retries += 1;
+                    self.costs.backoff_ms += backoff_ms(attempt);
+                    obs::instant2(
+                        obs::EventKind::LlmRetry,
+                        attempt,
+                        (kind == faults::LlmFault::Timeout) as u64,
+                    );
+                }
+            }
+        }
+        self.costs.degraded += 1;
+        obs::instant(obs::EventKind::LlmDegrade, call);
+        None
     }
 
     /// Attach transfer-tuning exemplars (builder style).
@@ -73,21 +119,28 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
         // The span mirrors CostTracker: arg = prompt tokens metered for this
         // call, arg2 = transforms the proposal resolved to.
         let mut llm_span = obs::span(obs::EventKind::LlmCall, 0);
-        let response = self.engine.complete(&prompt_ctx);
-        self.costs
-            .record(response.prompt_tokens, response.completion_tokens);
-        if self.log_transcript && self.transcript.len() < 64 {
-            self.transcript.push(response.text.clone());
-        }
-
-        let parsed = proposal::parse_response(&response.text);
+        // A degraded call (every retry failed) parses as an empty proposal
+        // list, which `resolve` counts as a fallback — the same sampler
+        // path a weak model's all-invalid answer takes, so the session
+        // keeps searching instead of erroring.
+        let (parsed, prompt_tokens) = match self.complete_with_retries(&prompt_ctx) {
+            Some(response) => {
+                self.costs
+                    .record(response.prompt_tokens, response.completion_tokens);
+                if self.log_transcript && self.transcript.len() < 64 {
+                    self.transcript.push(response.text.clone());
+                }
+                (proposal::parse_response(&response.text), response.prompt_tokens)
+            }
+            None => (Vec::new(), 0),
+        };
         let (seq, _fallback) = proposal::resolve(
             &parsed,
             &ctx.node.current,
             &mut self.rng,
             &mut self.fallbacks,
         );
-        llm_span.set_args(response.prompt_tokens, seq.len() as u64);
+        llm_span.set_args(prompt_tokens, seq.len() as u64);
         // On total fallback `seq` is empty; the MCTS loop then expands with
         // the default random policy (Appendix G) — uninterrupted search.
         seq

@@ -27,9 +27,24 @@ use crate::obs;
 use crate::schedule::{Schedule, Transform};
 use crate::tir::Program;
 use crate::util::executor::{Executor, TaskGroup};
+use crate::util::faults;
 use crate::util::rng::Pcg;
 
 pub use crate::db::WarmStart;
+
+/// Sentinel latency of a *failed* (quarantined) measurement: an injected
+/// or real hardware failure spends its sample but yields no usable
+/// number. Infinity can never become best-so-far, is never cached or
+/// committed, and strategies treat it pessimistically (MCTS backprops a
+/// zero reward, ES assigns worst fitness). Only ever produced under an
+/// armed fault plan (`util::faults`).
+pub const FAILED_MEASUREMENT: f64 = f64::INFINITY;
+
+/// Is this latency the quarantined-failure sentinel?
+#[inline]
+pub fn is_failed_measurement(lat: f64) -> bool {
+    lat.is_infinite()
+}
 
 /// Everything one search run needs, bundled so strategies share a uniform
 /// signature. Build with [`SearchContext::new`] and override the optional
@@ -255,6 +270,9 @@ pub struct SearchResult {
     pub cache_hits: usize,
     /// Candidate evaluations that fell through to the hardware model.
     pub cache_misses: usize,
+    /// Hardware measurements that failed and were quarantined (sample
+    /// spent, nothing cached or recorded). Always 0 without a fault plan.
+    pub failed_measurements: usize,
 }
 
 impl SearchResult {
@@ -306,6 +324,12 @@ pub struct Evaluator<'a> {
     /// the cache, so misses always equal actual hardware invocations (an
     /// exhausted-budget bail-out is neither).
     cache_misses: usize,
+    /// Quarantined (failed) measurements so far.
+    failed: usize,
+    /// Per-run failure budget: once this many measurements have failed,
+    /// the run reports exhaustion and stops rather than burning the whole
+    /// sample budget against a broken measurement target.
+    failure_budget: usize,
 }
 
 impl<'a> Evaluator<'a> {
@@ -324,6 +348,8 @@ impl<'a> Evaluator<'a> {
             platform_name: String::new(),
             cache_hits: 0,
             cache_misses: 0,
+            failed: 0,
+            failure_budget: budget / 4 + 8,
         }
     }
 
@@ -345,7 +371,13 @@ impl<'a> Evaluator<'a> {
     }
 
     pub fn exhausted(&self) -> bool {
-        self.used >= self.budget
+        self.used >= self.budget || self.failed >= self.failure_budget
+    }
+
+    /// Quarantined (failed) measurements so far. Always 0 without an
+    /// armed fault plan.
+    pub fn failed_count(&self) -> usize {
+        self.failed
     }
 
     /// Whether a measurement cache is attached (batch planning needs to
@@ -393,6 +425,9 @@ impl<'a> Evaluator<'a> {
                     }
                     self.cache_misses += 1;
                     self.used += 1;
+                    if faults::measure_fault(self.seed.wrapping_add(self.used as u64)) {
+                        return Some(self.quarantine(self.used));
+                    }
                     let _sp = obs::span(obs::EventKind::Measure, self.used as u64);
                     let lat = self
                         .hardware
@@ -406,12 +441,26 @@ impl<'a> Evaluator<'a> {
                 return None;
             }
             self.used += 1;
+            if faults::measure_fault(self.seed.wrapping_add(self.used as u64)) {
+                return Some(self.quarantine(self.used));
+            }
             let _sp = obs::span(obs::EventKind::Measure, self.used as u64);
             self.hardware
                 .latency(&candidate.current, self.seed.wrapping_add(self.used as u64))
         };
         self.record(candidate, lat);
         Some(lat)
+    }
+
+    /// Fold a failed measurement: the sample is spent and the failure
+    /// charged against the failure budget, but nothing enters the cache,
+    /// the curve or best-so-far — the candidate simply has no usable
+    /// number, and the caller receives the [`FAILED_MEASUREMENT`]
+    /// sentinel to score pessimistically.
+    fn quarantine(&mut self, sample: usize) -> f64 {
+        self.failed += 1;
+        obs::instant(obs::EventKind::MeasureFail, sample as u64);
+        FAILED_MEASUREMENT
     }
 
     /// Fold one resolved measurement into best-so-far and the curve.
@@ -443,6 +492,7 @@ impl<'a> Evaluator<'a> {
             samples_used: self.used,
             cache_hits,
             cache_misses,
+            failed_measurements: self.failed,
         }
     }
 }
@@ -460,6 +510,10 @@ enum BatchPlan {
     /// Same fingerprint as an earlier miss in this batch: free once that
     /// job resolves (the serial loop would hit the just-inserted entry).
     HitOfMiss { job: usize },
+    /// The measurement fails (injected fault, decided at plan time from
+    /// the plan-time seed): the sample is spent but quarantined — never
+    /// cached, never recorded. Only occurs under an armed fault plan.
+    Failed,
 }
 
 /// The batched evaluation pipeline: wraps an [`Evaluator`], plans
@@ -510,6 +564,7 @@ impl<'a> BatchEvaluator<'a> {
             plans: Vec::new(),
             fp_to_job: HashMap::new(),
             n_jobs: 0,
+            n_submitted: 0,
             exhausted: false,
         }
     }
@@ -568,7 +623,11 @@ pub(crate) struct PlannedBatch<'s, 'a> {
     group: TaskGroup<'a, f64>,
     plans: Vec<BatchPlan>,
     fp_to_job: HashMap<u64, usize>,
+    /// Samples this batch has planned (executor jobs + quarantined
+    /// failures) — the budget and sample-number accounting unit.
     n_jobs: usize,
+    /// Executor jobs actually submitted (indexes the fan-out results).
+    n_submitted: usize,
     exhausted: bool,
 }
 
@@ -602,26 +661,35 @@ impl<'s, 'a> PlannedBatch<'s, 'a> {
                     self.exhausted = true;
                     return false;
                 }
-                let job = self.n_jobs;
+                let sample = ev.used + self.n_jobs + 1;
                 self.n_jobs += 1;
-                let sample = ev.used + job + 1;
                 let seed = ev.seed.wrapping_add(sample as u64);
-                obs::instant(obs::EventKind::Submit, sample as u64);
-                // The job owns a CoW clone of the program (a handful of
-                // Arc bumps): the caller's candidate storage may move or
-                // grow while the measurement is in flight.
-                let hw = ev.hardware;
-                let prog = candidate.current.clone();
-                self.group.submit(move || {
-                    // The span's `arg` is the plan-time sample number, so
-                    // a workers=N trace diffs against workers=1 by index.
-                    let _sp = obs::span(obs::EventKind::Measure, sample as u64);
-                    hw.latency(&prog, seed)
-                });
-                if let Some(f) = fp {
-                    self.fp_to_job.insert(f, job);
+                // The fault roll keys on the plan-time seed, so an
+                // injected failure schedule is identical at every worker
+                // count and batch width (a no-op load when disarmed).
+                if faults::measure_fault(seed) {
+                    obs::instant(obs::EventKind::MeasureFail, sample as u64);
+                    BatchPlan::Failed
+                } else {
+                    let job = self.n_submitted;
+                    self.n_submitted += 1;
+                    obs::instant(obs::EventKind::Submit, sample as u64);
+                    // The job owns a CoW clone of the program (a handful of
+                    // Arc bumps): the caller's candidate storage may move or
+                    // grow while the measurement is in flight.
+                    let hw = ev.hardware;
+                    let prog = candidate.current.clone();
+                    self.group.submit(move || {
+                        // The span's `arg` is the plan-time sample number, so
+                        // a workers=N trace diffs against workers=1 by index.
+                        let _sp = obs::span(obs::EventKind::Measure, sample as u64);
+                        hw.latency(&prog, seed)
+                    });
+                    if let Some(f) = fp {
+                        self.fp_to_job.insert(f, job);
+                    }
+                    BatchPlan::Miss { job, fp }
                 }
-                BatchPlan::Miss { job, fp }
             }
         };
         self.plans.push(plan);
@@ -656,6 +724,18 @@ impl<'s, 'a> PlannedBatch<'s, 'a> {
                         cache.insert(f, &ev.platform_name, lat);
                     }
                     lat
+                }
+                BatchPlan::Failed => {
+                    // Quarantine: the sample is spent and the failure
+                    // charged, but nothing is cached or recorded — the
+                    // caller sees the sentinel and scores pessimistically.
+                    ev.used += 1;
+                    if ev.cache.is_some() {
+                        ev.cache_misses += 1;
+                    }
+                    ev.failed += 1;
+                    out.push(Some(FAILED_MEASUREMENT));
+                    continue;
                 }
             };
             ev.record(candidates[i], lat);

@@ -14,7 +14,8 @@ use crate::tir::Program;
 use crate::util::rng::Pcg;
 
 use super::common::{
-    replay_warm_entries, SearchContext, SearchResult, SearchStrategy, WarmStart,
+    is_failed_measurement, replay_warm_entries, SearchContext, SearchResult, SearchStrategy,
+    WarmStart,
 };
 
 #[derive(Debug, Clone)]
@@ -155,13 +156,25 @@ impl SearchStrategy for EvolutionaryStrategy {
                     .unwrap()
             });
             let used_before = ev.ev.used;
-            {
+            let failed: Vec<usize> = {
                 let slice: Vec<&Schedule> = order
                     .iter()
                     .take(cfg.measure_per_gen)
                     .map(|&i| &population[i].schedule)
                     .collect();
-                ev.measure_batch(&slice);
+                let lats = ev.measure_batch(&slice);
+                lats.iter()
+                    .enumerate()
+                    .filter(|(_, l)| matches!(l, Some(x) if is_failed_measurement(*x)))
+                    .map(|(k, _)| order[k])
+                    .collect()
+            };
+            // Quarantined measurements (injected faults) poison the member:
+            // worst-possible fitness, so it cannot survive as an elite or
+            // win a tournament — the ES analog of MCTS's zero-reward
+            // backprop. Empty in every stock run.
+            for i in failed {
+                population[i].fitness = 0.0;
             }
             if ev.ev.used == used_before {
                 stalled_gens += 1;

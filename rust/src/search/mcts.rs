@@ -40,8 +40,8 @@ use crate::tir::Program;
 use crate::util::rng::Pcg;
 
 use super::common::{
-    replay_warm_entries, ProposalContext, ProposalPolicy, SearchContext, SearchResult,
-    SearchStrategy, WarmStart,
+    is_failed_measurement, replay_warm_entries, ProposalContext, ProposalPolicy, SearchContext,
+    SearchResult, SearchStrategy, WarmStart,
 };
 
 /// MCTS hyperparameters (paper §4.1: c = sqrt(2), B = 2).
@@ -392,10 +392,35 @@ impl SearchStrategy for MctsStrategy<'_> {
             }
 
             for (leaf_idx, (p, lat)) in pending.into_iter().zip(lats).enumerate() {
-                if lat.is_none() {
+                let Some(lat) = lat else {
                     break; // unreachable: every pending leaf was planned
-                }
+                };
                 let _sp = obs::span(obs::EventKind::Backprop, leaf_idx as u64);
+
+                // A quarantined (failed) measurement: the leaf enters the
+                // tree with a pessimistic zero reward — UCT steers away
+                // from it but the search keeps going instead of unwinding
+                // the batch. Ancestors gain the visit, no reward.
+                if is_failed_measurement(lat) {
+                    let child_latency_hat =
+                        ctx.surrogate.latency(&p.sched.current, ctx.seed ^ (p.step as u64) << 1);
+                    let child_id = nodes.len();
+                    nodes.push(Node {
+                        schedule: p.sched,
+                        parent: Some(p.parent),
+                        children: Vec::new(),
+                        w: 0.0,
+                        n: 1.0,
+                        score: surrogate_baseline / child_latency_hat,
+                    });
+                    nodes[p.parent].children.push(child_id);
+                    let mut up = Some(p.parent);
+                    while let Some(i) = up {
+                        nodes[i].n += 1.0;
+                        up = nodes[i].parent;
+                    }
+                    continue;
+                }
 
                 // ---- rollout: random continuation scored by the surrogate --
                 let rollout_seq =

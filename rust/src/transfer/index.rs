@@ -494,7 +494,14 @@ impl TransferIndex {
             })
             .collect();
         root.set("parts", json::arr(parts));
-        std::fs::write(sidecar_path(db_path), root.to_string())
+        // Temp sibling + atomic rename: a crash mid-save must never leave
+        // a torn sidecar. (`load` would reject one anyway and rebuild, but
+        // a half-written file that happens to parse is the failure mode
+        // worth closing off for good.)
+        let path = sidecar_path(db_path);
+        let tmp = path.with_extension("idx.tmp");
+        std::fs::write(&tmp, root.to_string())?;
+        std::fs::rename(&tmp, &path)
     }
 
     /// Load the sidecar, re-validating it against the live records.

@@ -1,0 +1,282 @@
+//! Deterministic fault injection for the tuning plane.
+//!
+//! A *fault plan* is a seeded schedule of failures — LLM call errors and
+//! timeouts, hardware-measurement failures, and a process "crash" after a
+//! fixed number of measurements — armed process-wide via the `RCC_FAULTS`
+//! environment variable, `--faults`, or `[faults] spec` in a tune config:
+//!
+//! ```text
+//! RCC_FAULTS="llm_error=0.05,llm_timeout=0.02,measure_fail=0.03,crash_at_step=40,seed=1"
+//! ```
+//!
+//! Determinism contract (mirrors `obs`): the disabled path is a single
+//! relaxed atomic load and nothing else — with no plan armed every fault
+//! site behaves bit-identically to a build without this module. When a
+//! plan is armed, each fault decision is a *stateless* hash of
+//! `(plan seed, site, token)` where the token is already fixed at plan
+//! time (the measurement's plan-time seed, the policy's call index), so
+//! decisions are independent of thread scheduling and worker count and
+//! never touch any search RNG.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Parsed fault schedule. Probabilities are in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Probability an LLM call attempt fails with a (retryable) error.
+    pub llm_error: f64,
+    /// Probability an LLM call attempt times out (classified separately).
+    pub llm_timeout: f64,
+    /// Probability a hardware measurement fails (quarantined, not cached).
+    pub measure_fail: f64,
+    /// Simulate a process kill once this many measurements have run
+    /// (checked at session checkpoint boundaries).
+    pub crash_at_step: Option<u64>,
+    /// Seed for the stateless fault hash.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan { llm_error: 0.0, llm_timeout: 0.0, measure_fail: 0.0, crash_at_step: None, seed: 0 }
+    }
+}
+
+impl FaultPlan {
+    /// Parse a `k=v,...` spec, e.g.
+    /// `llm_error=0.05,llm_timeout=0.02,measure_fail=0.03,crash_at_step=40,seed=1`.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault knob `{part}` is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let prob = |v: &str| -> Result<f64, String> {
+                let p: f64 = v.parse().map_err(|_| format!("bad value for `{k}`: `{v}`"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("`{k}` must be a probability in [0,1], got {v}"));
+                }
+                Ok(p)
+            };
+            match k {
+                "llm_error" => plan.llm_error = prob(v)?,
+                "llm_timeout" => plan.llm_timeout = prob(v)?,
+                "measure_fail" => plan.measure_fail = prob(v)?,
+                "crash_at_step" => {
+                    let n: u64 = v.parse().map_err(|_| format!("bad value for `crash_at_step`: `{v}`"))?;
+                    plan.crash_at_step = Some(n);
+                }
+                "seed" => {
+                    plan.seed = v.parse().map_err(|_| format!("bad value for `seed`: `{v}`"))?;
+                }
+                _ => return Err(format!("unknown fault knob `{k}`")),
+            }
+        }
+        Ok(plan)
+    }
+
+    fn is_noop(&self) -> bool {
+        self.llm_error == 0.0
+            && self.llm_timeout == 0.0
+            && self.measure_fail == 0.0
+            && self.crash_at_step.is_none()
+    }
+}
+
+// The armed plan lives in atomics (f64 probabilities as bit patterns) so
+// fault rolls are lock-free; ARMED is the one flag the disabled fast path
+// loads. `u64::MAX` in CRASH_AT means "no crash scheduled".
+static ARMED: AtomicBool = AtomicBool::new(false);
+static LLM_ERROR: AtomicU64 = AtomicU64::new(0);
+static LLM_TIMEOUT: AtomicU64 = AtomicU64::new(0);
+static MEASURE_FAIL: AtomicU64 = AtomicU64::new(0);
+static CRASH_AT: AtomicU64 = AtomicU64::new(u64::MAX);
+static SEED: AtomicU64 = AtomicU64::new(0);
+/// Global measurement-step counter (only advanced while armed).
+static STEP: AtomicU64 = AtomicU64::new(0);
+
+/// Arm a fault plan process-wide (resets the measurement-step counter).
+/// A no-op plan (all zeros) disarms instead, so `RCC_FAULTS=""` and an
+/// all-default spec cost nothing.
+pub fn arm(plan: &FaultPlan) {
+    if plan.is_noop() {
+        disarm();
+        return;
+    }
+    LLM_ERROR.store(plan.llm_error.to_bits(), Ordering::Relaxed);
+    LLM_TIMEOUT.store(plan.llm_timeout.to_bits(), Ordering::Relaxed);
+    MEASURE_FAIL.store(plan.measure_fail.to_bits(), Ordering::Relaxed);
+    CRASH_AT.store(plan.crash_at_step.unwrap_or(u64::MAX), Ordering::Relaxed);
+    SEED.store(plan.seed, Ordering::Relaxed);
+    STEP.store(0, Ordering::Relaxed);
+    ARMED.store(true, Ordering::SeqCst);
+}
+
+/// Disarm all fault injection (the default state).
+pub fn disarm() {
+    ARMED.store(false, Ordering::SeqCst);
+    CRASH_AT.store(u64::MAX, Ordering::Relaxed);
+    STEP.store(0, Ordering::Relaxed);
+}
+
+/// One relaxed load; `false` in every stock run.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// The currently armed plan, if any (for reporting).
+pub fn plan() -> Option<FaultPlan> {
+    if !armed() {
+        return None;
+    }
+    let crash = CRASH_AT.load(Ordering::Relaxed);
+    Some(FaultPlan {
+        llm_error: f64::from_bits(LLM_ERROR.load(Ordering::Relaxed)),
+        llm_timeout: f64::from_bits(LLM_TIMEOUT.load(Ordering::Relaxed)),
+        measure_fail: f64::from_bits(MEASURE_FAIL.load(Ordering::Relaxed)),
+        crash_at_step: (crash != u64::MAX).then_some(crash),
+        seed: SEED.load(Ordering::Relaxed),
+    })
+}
+
+/// Classification of a failed LLM call attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LlmFault {
+    Error,
+    Timeout,
+}
+
+// Distinct site constants keep the three roll streams independent even
+// when tokens collide.
+const SITE_LLM_ERROR: u64 = 0x11;
+const SITE_LLM_TIMEOUT: u64 = 0x22;
+const SITE_MEASURE: u64 = 0x33;
+
+/// Stateless uniform draw in `[0, 1)` from `(seed, site, token)` — a
+/// splitmix64 finalizer over the mixed key. No shared state, so the
+/// result is identical regardless of which thread asks, in which order.
+fn roll(site: u64, token: u64) -> f64 {
+    roll_from(SEED.load(Ordering::Relaxed), site, token)
+}
+
+fn roll_from(seed: u64, site: u64, token: u64) -> f64 {
+    let mut x = seed
+        ^ site.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ token.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Does LLM call attempt `token` fail, and how? `None` when disarmed or
+/// the attempt succeeds. Errors are rolled before timeouts so the two
+/// probabilities are independent knobs, not a partition.
+#[inline]
+pub fn llm_fault(token: u64) -> Option<LlmFault> {
+    if !armed() {
+        return None;
+    }
+    if roll(SITE_LLM_ERROR, token) < f64::from_bits(LLM_ERROR.load(Ordering::Relaxed)) {
+        return Some(LlmFault::Error);
+    }
+    if roll(SITE_LLM_TIMEOUT, token) < f64::from_bits(LLM_TIMEOUT.load(Ordering::Relaxed)) {
+        return Some(LlmFault::Timeout);
+    }
+    None
+}
+
+/// Does the hardware measurement with plan-time seed `token` fail?
+/// Also advances the global measurement-step counter (crash clock).
+#[inline]
+pub fn measure_fault(token: u64) -> bool {
+    if !armed() {
+        return false;
+    }
+    STEP.fetch_add(1, Ordering::Relaxed);
+    roll(SITE_MEASURE, token) < f64::from_bits(MEASURE_FAIL.load(Ordering::Relaxed))
+}
+
+/// Is a crash scheduled at all? (Sessions serialize repeats when it is,
+/// so checkpoint boundaries are meaningful; by the workers contract that
+/// never changes results.)
+#[inline]
+pub fn crash_armed() -> bool {
+    armed() && CRASH_AT.load(Ordering::Relaxed) != u64::MAX
+}
+
+/// Has the measurement-step counter crossed `crash_at_step`? Checked at
+/// session checkpoint boundaries; the session then returns an error as if
+/// the process had been killed, leaving its journal behind for `--resume`.
+#[inline]
+pub fn crash_due() -> bool {
+    crash_armed() && STEP.load(Ordering::Relaxed) >= CRASH_AT.load(Ordering::Relaxed)
+}
+
+/// Measurement steps taken since arming (for reporting/tests).
+pub fn steps() -> u64 {
+    STEP.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    // Fault state is process-global and unit tests share one process with
+    // every other lib test (including determinism suites running live
+    // searches), so nothing here may call `arm`. Global arm/disarm,
+    // crash-clock and end-to-end behavior are covered by
+    // `tests/failure_injection.rs`, whose binary serializes fault-armed
+    // tests behind one mutex.
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse(
+            "llm_error=0.05, llm_timeout=0.02,measure_fail=0.03,crash_at_step=40,seed=7",
+        )
+        .unwrap();
+        assert_eq!(p.llm_error, 0.05);
+        assert_eq!(p.llm_timeout, 0.02);
+        assert_eq!(p.measure_fail, 0.03);
+        assert_eq!(p.crash_at_step, Some(40));
+        assert_eq!(p.seed, 7);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultPlan::parse("llm_error").is_err());
+        assert!(FaultPlan::parse("llm_error=2.0").is_err());
+        assert!(FaultPlan::parse("warp_core=0.1").is_err());
+        assert!(FaultPlan::parse("crash_at_step=soon").is_err());
+        // Empty/trailing separators are tolerated.
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("measure_fail=0.5,").is_ok());
+    }
+
+    #[test]
+    fn pure_rolls_are_deterministic_and_seed_sensitive() {
+        let a: Vec<f64> = (0..64).map(|t| roll_from(1, SITE_MEASURE, t)).collect();
+        let b: Vec<f64> = (0..64).map(|t| roll_from(1, SITE_MEASURE, t)).collect();
+        assert_eq!(a, b, "same key -> same draw, no hidden state");
+        assert!(a.iter().all(|&x| (0.0..1.0).contains(&x)));
+        assert!(a.iter().any(|&x| x < 0.5) && a.iter().any(|&x| x >= 0.5));
+        // Seed and site each reshuffle the stream.
+        assert_ne!(a, (0..64).map(|t| roll_from(2, SITE_MEASURE, t)).collect::<Vec<_>>());
+        assert_ne!(a, (0..64).map(|t| roll_from(1, SITE_LLM_ERROR, t)).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn noop_detection() {
+        assert!(FaultPlan::default().is_noop());
+        assert!(FaultPlan { seed: 9, ..FaultPlan::default() }.is_noop());
+        assert!(!FaultPlan { measure_fail: 0.1, ..FaultPlan::default() }.is_noop());
+        assert!(!FaultPlan { crash_at_step: Some(1), ..FaultPlan::default() }.is_noop());
+    }
+}

@@ -6,6 +6,7 @@
 pub mod bench;
 pub mod cli;
 pub mod executor;
+pub mod faults;
 pub mod json;
 pub mod prop;
 pub mod pvec;

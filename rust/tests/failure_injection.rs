@@ -2,13 +2,22 @@
 //! malformed inputs — adversarial LLM responses, corrupt manifests, broken
 //! configs and hostile proposal parameters.
 
-use reasoning_compiler::coordinator::TuneConfig;
+use std::sync::Mutex;
+
+use reasoning_compiler::coordinator::{run_session, SessionJournal, Strategy, TuneConfig};
 use reasoning_compiler::reasoning::proposal::{self, FallbackStats, Parsed};
 use reasoning_compiler::runtime::Manifest;
 use reasoning_compiler::schedule::Transform;
+use reasoning_compiler::search::SearchResult;
 use reasoning_compiler::tir::WorkloadId;
+use reasoning_compiler::util::faults::{self, FaultPlan};
 use reasoning_compiler::util::rng::Pcg;
 use reasoning_compiler::util::tomlmini::Doc;
+
+/// Fault plans are process-global, so every test that arms one serializes
+/// behind this mutex and disarms before releasing it. Poisoning (a failed
+/// armed test) must not cascade, hence `into_inner` on poison.
+static GUARD: Mutex<()> = Mutex::new(());
 
 #[test]
 fn adversarial_llm_responses_never_panic() {
@@ -159,4 +168,213 @@ fn parse_response_bracket_bomb_terminates_quickly() {
     assert!(parsed
         .iter()
         .all(|p| matches!(p, Parsed::Invalid(_) | Parsed::Bare(_))));
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic fault injection: armed plans, retry/degrade, quarantine,
+// and kill-at-step-N -> `--resume` bit-identity. These live here (not in
+// lib unit tests) because fault state is process-global; `GUARD` keeps
+// armed tests from interleaving.
+// ---------------------------------------------------------------------------
+
+fn result_key(r: &SearchResult) -> (u64, usize, Vec<(usize, u64)>) {
+    (
+        r.best_latency.to_bits(),
+        r.samples_used,
+        r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect(),
+    )
+}
+
+fn session_keys(s: &reasoning_compiler::coordinator::SessionResult) -> Vec<(u64, usize, Vec<(usize, u64)>)> {
+    s.runs.iter().map(result_key).collect()
+}
+
+fn temp_journal(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "rcc_fi_journal_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+#[test]
+fn arming_publishes_plan_and_crash_clock_is_deterministic() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    faults::disarm();
+    assert!(!faults::armed());
+    assert!(faults::plan().is_none());
+    assert!(!faults::measure_fault(0), "disarmed sites never fire");
+    assert_eq!(faults::steps(), 0, "disarmed sites never advance the clock");
+
+    let plan = FaultPlan::parse("llm_error=0.25,measure_fail=0.5,crash_at_step=5,seed=11").unwrap();
+    faults::arm(&plan);
+    assert!(faults::armed());
+    assert_eq!(faults::plan(), Some(plan.clone()));
+    assert!(faults::crash_armed());
+    assert!(!faults::crash_due(), "clock starts at zero on arm");
+
+    let first: Vec<bool> = (0..16).map(|t| faults::measure_fault(t)).collect();
+    assert_eq!(faults::steps(), 16);
+    assert!(faults::crash_due(), "16 steps >= crash_at_step=5");
+    assert!(first.iter().any(|&b| b) && first.iter().any(|&b| !b));
+
+    // Re-arming the same plan resets the clock and replays identical
+    // decisions: rolls are stateless in (seed, site, token).
+    faults::arm(&plan);
+    assert_eq!(faults::steps(), 0);
+    assert!(!faults::crash_due());
+    let second: Vec<bool> = (0..16).map(|t| faults::measure_fault(t)).collect();
+    assert_eq!(first, second);
+
+    // A no-op plan disarms rather than arming a do-nothing schedule.
+    faults::arm(&FaultPlan::default());
+    assert!(!faults::armed());
+    assert!(!faults::crash_armed());
+    faults::disarm();
+}
+
+#[test]
+fn flaky_llm_engine_retries_then_degrades_without_aborting() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    faults::disarm();
+    let cfg = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: 30,
+        repeats: 2,
+        ..Default::default()
+    };
+    // Moderately flaky engine: retries happen, the session still finishes.
+    let flaky = FaultPlan::parse("llm_error=0.5,llm_timeout=0.1,seed=5").unwrap();
+    faults::arm(&flaky);
+    let a = run_session(&cfg).unwrap();
+    faults::arm(&flaky); // reset the step clock for an identical replay
+    let b = run_session(&cfg).unwrap();
+    faults::disarm();
+    assert_eq!(a.runs.len(), 2);
+    assert!(a.llm_costs.retries > 0, "a 50% flaky engine must trigger retries");
+    assert!(a.llm_costs.backoff_ms > 0, "retries schedule deterministic backoff");
+    // Same plan seed -> bit-identical results and identical accounting.
+    assert_eq!(session_keys(&a), session_keys(&b));
+    assert_eq!(a.llm_costs.retries, b.llm_costs.retries);
+    assert_eq!(a.llm_costs.degraded, b.llm_costs.degraded);
+    assert_eq!(a.llm_costs.calls, b.llm_costs.calls);
+
+    // An engine that is down almost always: calls exhaust their retry
+    // budget and degrade to the sampler fallback, but tuning completes.
+    let storm = FaultPlan::parse("llm_error=0.95,seed=5").unwrap();
+    faults::arm(&storm);
+    let c = run_session(&cfg).unwrap();
+    faults::disarm();
+    assert_eq!(c.runs.len(), 2, "degraded calls must not abort the session");
+    assert!(c.llm_costs.degraded > 0, "0.95^3 per call must abandon some calls");
+    assert!(c.mean_speedup() > 1.0, "fallback sampling still makes progress");
+}
+
+#[test]
+fn measurement_quarantine_is_worker_invariant() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    faults::disarm();
+    let plan = FaultPlan::parse("measure_fail=0.2,seed=9").unwrap();
+    let cfg = |workers: usize| TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 40,
+        repeats: 2,
+        workers,
+        ..Default::default()
+    };
+    faults::arm(&plan);
+    let a = run_session(&cfg(1)).unwrap();
+    faults::arm(&plan);
+    let b = run_session(&cfg(4)).unwrap();
+    faults::disarm();
+    assert!(
+        a.total_failed_measurements() > 0,
+        "a 20% failure rate over 80 samples must quarantine something"
+    );
+    assert_eq!(
+        session_keys(&a),
+        session_keys(&b),
+        "quarantine decisions are plan-time seeded: worker count must not matter"
+    );
+    assert_eq!(a.total_failed_measurements(), b.total_failed_measurements());
+    // Quarantined samples are spent, not refunded.
+    for r in &a.runs {
+        assert!(r.samples_used <= 40);
+        assert!(r.best_latency.is_finite(), "sentinel must never become the best");
+    }
+
+    // Evolutionary search folds failures as zero fitness and survives too.
+    faults::arm(&plan);
+    let es = run_session(&TuneConfig {
+        strategy: Strategy::Evolutionary,
+        budget: 40,
+        repeats: 1,
+        workers: 2,
+        ..Default::default()
+    })
+    .unwrap();
+    faults::disarm();
+    assert!(es.runs[0].best_latency.is_finite());
+    assert!(es.mean_speedup() >= 1.0);
+}
+
+#[test]
+fn kill_at_step_then_resume_is_bit_identical() {
+    let _g = GUARD.lock().unwrap_or_else(|p| p.into_inner());
+    faults::disarm();
+    for (fault_seed, shared_cache, workers) in [(3u64, false, 0), (11, true, 4)] {
+        let base =
+            FaultPlan::parse(&format!("measure_fail=0.1,seed={fault_seed}")).unwrap();
+        let cfg = TuneConfig {
+            strategy: Strategy::Mcts,
+            budget: 30,
+            repeats: 3,
+            share_repeat_cache: shared_cache,
+            workers,
+            ..Default::default()
+        };
+
+        // Reference: the same measurement-fault plan, never killed.
+        faults::arm(&base);
+        let reference = run_session(&cfg).unwrap();
+
+        // Killed run: crash after 35 measurement steps, i.e. mid-repeat 1.
+        // The session journals completed repeats, then dies loudly.
+        let jp = temp_journal(&format!("kill_{fault_seed}"));
+        let mut jcfg = cfg.clone();
+        jcfg.journal_path = Some(jp.to_string_lossy().to_string());
+        let killer = FaultPlan { crash_at_step: Some(35), ..base.clone() };
+        faults::arm(&killer);
+        let err = run_session(&jcfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected crash"),
+            "kill must surface as the injected crash, got: {err:#}"
+        );
+
+        // Resume without the crash knob: journaled repeats replay verbatim,
+        // the discarded one re-runs from its fixed seed — bit-identical.
+        let mut rcfg = cfg.clone();
+        rcfg.resume_from = Some(jp.to_string_lossy().to_string());
+        faults::arm(&base);
+        let resumed = run_session(&rcfg).unwrap();
+        faults::disarm();
+        assert!(
+            resumed.resumed_repeats >= 1 && resumed.resumed_repeats < cfg.repeats,
+            "crash at step 35 lands mid-session, got {} resumed",
+            resumed.resumed_repeats
+        );
+        assert_eq!(
+            session_keys(&reference),
+            session_keys(&resumed),
+            "resume (seed={fault_seed}, shared_cache={shared_cache}) must be \
+             bit-identical to the uninterrupted session"
+        );
+        // Re-run repeats were re-checkpointed: the journal is now complete.
+        let (_, entries) = SessionJournal::load(&jp).unwrap();
+        assert_eq!(entries.len(), cfg.repeats);
+        std::fs::remove_file(&jp).ok();
+    }
 }
