@@ -118,6 +118,11 @@ pub struct TuneConfig {
     /// env win over the file). `None` leaves the recorder disabled —
     /// tracing never changes results either way, only wall-clock.
     pub trace_path: Option<String>,
+    /// Append the decision-provenance audit log (JSONL; see `obs::audit`)
+    /// to this path (`[obs] audit` in TOML, `--audit` / `RCC_AUDIT` on the
+    /// CLI; CLI and env win over the file). `None` leaves the audit plane
+    /// disarmed — auditing never changes results either way.
+    pub audit_path: Option<String>,
     /// Checkpoint the session to this crash-safe JSONL journal
     /// (`[session] journal` in TOML, `--journal` on the CLI): one fsynced
     /// entry per completed repeat, so a killed session can be resumed
@@ -169,6 +174,7 @@ impl Default for TuneConfig {
             workers: 0,
             eval_batch: 1,
             trace_path: None,
+            audit_path: None,
             journal_path: None,
             resume_from: None,
             faults_spec: None,
@@ -244,6 +250,10 @@ impl TuneConfig {
                 "" => d.trace_path,
                 p => Some(p.to_string()),
             },
+            audit_path: match doc.get_str("obs.audit", "") {
+                "" => d.audit_path,
+                p => Some(p.to_string()),
+            },
             journal_path: match doc.get_str("session.journal", "") {
                 "" => d.journal_path,
                 p => Some(p.to_string()),
@@ -310,6 +320,9 @@ impl TuneConfig {
         self.eval_batch = args.opt_usize("eval-batch", self.eval_batch);
         if let Some(p) = args.opt("trace") {
             self.trace_path = Some(p.to_string());
+        }
+        if let Some(p) = args.opt("audit") {
+            self.audit_path = Some(p.to_string());
         }
         if let Some(p) = args.opt("journal") {
             self.journal_path = Some(p.to_string());
@@ -507,6 +520,20 @@ history_depth = 3
             Args::parse("tune --trace /tmp/t.json".split_whitespace().map(String::from));
         c.apply_cli(&args);
         assert_eq!(c.trace_path.as_deref(), Some("/tmp/t.json"));
+    }
+
+    #[test]
+    fn audit_knob_parses_and_overrides() {
+        assert_eq!(TuneConfig::default().audit_path, None);
+        let doc = Doc::parse("[obs]\naudit = \"out/audit.jsonl\"\n").unwrap();
+        let c = TuneConfig::from_doc(&doc);
+        assert_eq!(c.audit_path.as_deref(), Some("out/audit.jsonl"));
+
+        let mut c = TuneConfig::default();
+        let args =
+            Args::parse("tune --audit /tmp/a.jsonl".split_whitespace().map(String::from));
+        c.apply_cli(&args);
+        assert_eq!(c.audit_path.as_deref(), Some("/tmp/a.jsonl"));
     }
 
     #[test]

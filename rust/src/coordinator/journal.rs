@@ -369,7 +369,8 @@ fn result_to_json(r: &SearchResult) -> Json {
         .set("samples_used", num(r.samples_used as f64))
         .set("cache_hits", num(r.cache_hits as f64))
         .set("cache_misses", num(r.cache_misses as f64))
-        .set("failed_measurements", num(r.failed_measurements as f64));
+        .set("failed_measurements", num(r.failed_measurements as f64))
+        .set("calibration", r.calibration.to_json());
     o
 }
 
@@ -417,6 +418,12 @@ fn result_from_json(doc: &Json) -> Result<SearchResult> {
         cache_hits: get_num(doc, "cache_hits")? as usize,
         cache_misses: get_num(doc, "cache_misses")? as usize,
         failed_measurements: get_num(doc, "failed_measurements")? as usize,
+        // Older journals predate calibration; a missing block decodes as
+        // the empty summary (raw sums round-trip bit-exactly otherwise).
+        calibration: doc
+            .get("calibration")
+            .map(crate::cost::CalibrationStats::from_json)
+            .unwrap_or_default(),
     })
 }
 
@@ -427,11 +434,16 @@ fn costs_to_json(c: &CostTracker) -> Json {
         .set("completion_tokens", num(c.completion_tokens as f64))
         .set("retries", num(c.retries as f64))
         .set("degraded", num(c.degraded as f64))
-        .set("backoff_ms", num(c.backoff_ms as f64));
+        .set("backoff_ms", num(c.backoff_ms as f64))
+        .set("proposals_offered", num(c.proposals_offered as f64))
+        .set("proposals_accepted", num(c.proposals_accepted as f64));
     o
 }
 
 fn costs_from_json(doc: &Json) -> Result<CostTracker> {
+    // The proposal counters are optional: journals written before the
+    // audit plane simply decode them as 0.
+    let opt = |k: &str| doc.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
     Ok(CostTracker {
         calls: get_num(doc, "calls")? as u64,
         prompt_tokens: get_num(doc, "prompt_tokens")? as u64,
@@ -439,6 +451,8 @@ fn costs_from_json(doc: &Json) -> Result<CostTracker> {
         retries: get_num(doc, "retries")? as u64,
         degraded: get_num(doc, "degraded")? as u64,
         backoff_ms: get_num(doc, "backoff_ms")? as u64,
+        proposals_offered: opt("proposals_offered"),
+        proposals_accepted: opt("proposals_accepted"),
     })
 }
 
@@ -504,6 +518,12 @@ mod tests {
                 cache_hits: 1,
                 cache_misses: 2,
                 failed_measurements: 1,
+                calibration: {
+                    let mut c = crate::cost::CalibrationStats::default();
+                    c.record(0.0111111111111111, 0.0101010101010101);
+                    c.record(0.0029999999999999, 0.003141592653589793);
+                    c
+                },
             },
             costs: CostTracker {
                 calls: 9,
@@ -512,6 +532,8 @@ mod tests {
                 retries: 4,
                 degraded: 1,
                 backoff_ms: 175,
+                proposals_offered: 27,
+                proposals_accepted: 21,
             },
             fb_rate: 0.1111111111111111,
             expansions: 3,
@@ -554,7 +576,22 @@ mod tests {
         assert_eq!(a.result.cache_hits, b.result.cache_hits);
         assert_eq!(a.result.cache_misses, b.result.cache_misses);
         assert_eq!(a.result.failed_measurements, b.result.failed_measurements);
+        assert_eq!(a.result.calibration.n, b.result.calibration.n);
+        assert_eq!(
+            a.result.calibration.sum_rel.to_bits(),
+            b.result.calibration.sum_rel.to_bits()
+        );
+        assert_eq!(
+            a.result.calibration.sum_abs_rel.to_bits(),
+            b.result.calibration.sum_abs_rel.to_bits()
+        );
+        assert_eq!(
+            a.result.calibration.worst_abs_rel.to_bits(),
+            b.result.calibration.worst_abs_rel.to_bits()
+        );
         assert_eq!(a.costs.calls, b.costs.calls);
+        assert_eq!(a.costs.proposals_offered, b.costs.proposals_offered);
+        assert_eq!(a.costs.proposals_accepted, b.costs.proposals_accepted);
         assert_eq!(a.costs.prompt_tokens, b.costs.prompt_tokens);
         assert_eq!(a.costs.retries, b.costs.retries);
         assert_eq!(a.costs.degraded, b.costs.degraded);

@@ -89,6 +89,7 @@ impl Registry {
                     .map(|m| {
                         let mut o = Json::obj();
                         o.set("sample", num(m.sample as f64))
+                            .set("latency", num(m.latency))
                             .set("best_speedup", num(m.best_speedup));
                         o
                     })
@@ -227,6 +228,15 @@ mod tests {
         assert_eq!(r.workload, "deepseek_moe");
         assert!((r.mean_speedup - s.mean_speedup()).abs() < 1e-9);
         assert!(!r.best_trace.is_empty());
+        // The persisted document carries the calibration summary and the
+        // per-sample latencies of the sample-efficiency curve.
+        let text = std::fs::read_to_string(reg.dir.join(format!("{id}.json"))).unwrap();
+        let doc = Json::parse(&text).unwrap();
+        let cal = doc.get("telemetry").and_then(|t| t.get("calibration")).unwrap();
+        assert!(cal.get("n").and_then(Json::as_f64).unwrap() > 0.0);
+        let curve = doc.get("curve").and_then(Json::as_arr).unwrap();
+        assert!(!curve.is_empty());
+        assert!(curve[0].get("latency").and_then(Json::as_f64).is_some());
         std::fs::remove_dir_all(&reg.dir).ok();
     }
 

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::cost::{AnalysisCache, HardwareModel, Platform, SurrogateModel};
+use crate::cost::{AnalysisCache, CalibrationStats, HardwareModel, Platform, SurrogateModel};
 use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, WarmStart};
 use crate::obs;
 use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
@@ -62,12 +62,24 @@ pub struct SessionTelemetry {
     /// `(phase name, stat)` rows for phases that recorded at least once.
     pub phases: Vec<(String, obs::PhaseStat)>,
     pub exec: obs::ExecCounters,
+    /// Cost-model calibration: surrogate predictions vs measured latencies,
+    /// aggregated over every repeat of the session. Always on (the pairs
+    /// exist regardless of tracing); empty only when nothing was measured.
+    pub calibration: CalibrationStats,
+    /// Trace events lost to per-thread ring overwrites during this
+    /// session's window (0 unless tracing is enabled and overran a ring).
+    pub dropped_events: u64,
 }
 
 impl SessionTelemetry {
     /// Delta between two snapshots taken around the reported body of work
-    /// (a session's repeats, a serve fleet, ...).
-    pub fn capture(phases0: &obs::PhaseTotals, exec0: &obs::ExecCounters) -> SessionTelemetry {
+    /// (a session's repeats, a serve fleet, ...). `dropped0` is the ring
+    /// overwrite counter at the start of the window.
+    pub fn capture(
+        phases0: &obs::PhaseTotals,
+        exec0: &obs::ExecCounters,
+        dropped0: u64,
+    ) -> SessionTelemetry {
         SessionTelemetry {
             phases: obs::phase_totals()
                 .delta_since(phases0)
@@ -76,11 +88,16 @@ impl SessionTelemetry {
                 .map(|(k, s)| (k.name().to_string(), s))
                 .collect(),
             exec: obs::exec_counters().delta_since(exec0),
+            calibration: CalibrationStats::default(),
+            dropped_events: obs::dropped().saturating_sub(dropped0),
         }
     }
 
     pub fn is_empty(&self) -> bool {
-        self.phases.is_empty() && self.exec == obs::ExecCounters::default()
+        self.phases.is_empty()
+            && self.exec == obs::ExecCounters::default()
+            && self.calibration.is_empty()
+            && self.dropped_events == 0
     }
 
     /// JSON block for the session report (`Registry::record`).
@@ -101,6 +118,8 @@ impl SessionTelemetry {
         let mut doc = Json::obj();
         doc.set("phases", phases);
         doc.set("executor", exec);
+        doc.set("calibration", self.calibration.to_json());
+        doc.set("dropped_events", json::num(self.dropped_events as f64));
         doc
     }
 
@@ -119,6 +138,15 @@ impl SessionTelemetry {
             ));
         }
         out.push_str(&format!("  {}\n", self.exec.render_line()));
+        if !self.calibration.is_empty() {
+            out.push_str(&format!("  {}\n", self.calibration.render_line()));
+        }
+        if self.dropped_events > 0 {
+            out.push_str(&format!(
+                "  warning: {} trace event(s) lost to ring overwrites\n",
+                self.dropped_events
+            ));
+        }
         out
     }
 }
@@ -362,6 +390,19 @@ pub fn run_session_on_with(
     // process-wide counters (read-only snapshots; never affects results).
     let phases0 = obs::phase_totals();
     let exec0 = obs::exec_counters();
+    let dropped0 = obs::dropped();
+    // Audit header: one `session` record delimits this session's slice of
+    // the decision log (`rcc explain` reconstructs from the last slice).
+    if obs::audit::armed() {
+        let mut r = obs::audit::record("session", cfg.seed);
+        r.set("workload", json::s(&program.name))
+            .set("platform", json::s(&cfg.platform))
+            .set("strategy", json::s(cfg.strategy.name()))
+            .set("budget", json::num(cfg.budget as f64))
+            .set("repeats", json::num(cfg.repeats as f64))
+            .set("shape_class", json::s(&format!("{:016x}", crate::db::shape_class(program))));
+        obs::audit::emit(r);
+    }
     let mut db = match &cfg.db_path {
         Some(p) => Some(Database::open(Path::new(p))?),
         None => None,
@@ -534,6 +575,32 @@ pub fn run_session_on_with(
         fb_rates.push(o.2);
     }
 
+    // Audit: one `result` record per repeat, emitted in seed order on the
+    // coordinating thread (never from the fan-out workers). The sample-
+    // efficiency curve rides along so `rcc explain` can plot convergence
+    // from the decision log alone.
+    if obs::audit::armed() {
+        for (run, &seed) in runs.iter().zip(&seeds) {
+            let mut r = obs::audit::record("result", seed);
+            r.set("baseline", json::num(run.baseline_latency))
+                .set("best_latency", json::num(run.best_latency))
+                .set("samples", json::num(run.samples_used as f64))
+                .set("failed", json::num(run.failed_measurements as f64));
+            let curve: Vec<Json> = run
+                .curve
+                .iter()
+                .map(|m| {
+                    let mut p = Json::obj();
+                    p.set("sample", json::num(m.sample as f64));
+                    p.set("latency", json::num(m.latency));
+                    p
+                })
+                .collect();
+            r.set("curve", json::arr(curve));
+            obs::audit::emit(r);
+        }
+    }
+
     // Persist each repeat's best discovery and flush. Records carry the
     // transfer metadata (shape class + per-stage extents) that lets future
     // sessions on structurally similar workloads find and rebase them.
@@ -573,6 +640,10 @@ pub fn run_session_on_with(
             .with_context(|| format!("committing tuning records for {}", program.name))?;
     }
 
+    let mut telemetry = SessionTelemetry::capture(&phases0, &exec0, dropped0);
+    for r in &runs {
+        telemetry.calibration.merge(&r.calibration);
+    }
     Ok(SessionResult {
         config_strategy: cfg.strategy,
         workload: cfg.workload.clone(),
@@ -581,7 +652,7 @@ pub fn run_session_on_with(
         llm_costs,
         llm_fallback_rate: stats::mean(&fb_rates),
         resumed_repeats,
-        telemetry: SessionTelemetry::capture(&phases0, &exec0),
+        telemetry,
     })
 }
 
@@ -761,6 +832,23 @@ mod tests {
         assert!(s.llm_costs.calls > 0);
         assert!(s.llm_costs.prompt_tokens > 0);
         assert_eq!(s.llm_fallback_rate, 0.0); // gpt4o_mini never falls back
+    }
+
+    #[test]
+    fn session_telemetry_aggregates_calibration() {
+        // Calibration is always-on: every measured sample pairs a surrogate
+        // prediction with the hardware latency, and the session telemetry
+        // merges per-run summaries exactly.
+        let s = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        assert!(s.telemetry.calibration.n > 0, "no calibration pairs recorded");
+        let mut merged = CalibrationStats::default();
+        for r in &s.runs {
+            merged.merge(&r.calibration);
+        }
+        assert_eq!(merged, s.telemetry.calibration);
+        assert!(s.telemetry.calibration.mean_abs_rel().is_finite());
+        let e = run_session(&quick_cfg(Strategy::Evolutionary)).unwrap();
+        assert!(e.telemetry.calibration.n > 0, "ES records calibration too");
     }
 
     #[test]

@@ -58,9 +58,8 @@ pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Exec
         Vec::new()
     };
     let fault_at = |i: usize| faulted.get(i).copied().unwrap_or(false);
-    if exec.is_serial() || jobs.len() <= 1 {
-        return jobs
-            .iter()
+    let out: Vec<f64> = if exec.is_serial() || jobs.len() <= 1 {
+        jobs.iter()
             .enumerate()
             .map(|(i, j)| {
                 if fault_at(i) {
@@ -69,23 +68,40 @@ pub fn latency_batch(model: &dyn CostModel, jobs: &[LatencyJob<'_>], exec: &Exec
                 let _sp = obs::span(obs::EventKind::Measure, i as u64);
                 model.latency(j.program, j.seed)
             })
-            .collect();
-    }
-    exec.run(
-        jobs.iter()
-            .enumerate()
-            .map(|(i, j)| {
-                let failed = fault_at(i);
-                move || {
-                    if failed {
-                        return FAILED_MEASUREMENT;
+            .collect()
+    } else {
+        exec.run(
+            jobs.iter()
+                .enumerate()
+                .map(|(i, j)| {
+                    let failed = fault_at(i);
+                    move || {
+                        if failed {
+                            return FAILED_MEASUREMENT;
+                        }
+                        let _sp = obs::span(obs::EventKind::Measure, i as u64);
+                        model.latency(j.program, j.seed)
                     }
-                    let _sp = obs::span(obs::EventKind::Measure, i as u64);
-                    model.latency(j.program, j.seed)
-                }
-            })
-            .collect(),
-    )
+                })
+                .collect(),
+        )
+    };
+    // Audit: one record per measurement, emitted in input order after the
+    // fan-out returns — worker threads never write the decision log.
+    if obs::audit::armed() {
+        use crate::util::json::{num, Json};
+        for (i, (j, lat)) in jobs.iter().zip(out.iter()).enumerate() {
+            let mut r = obs::audit::record("measure", j.seed);
+            r.set("sample", num(i as f64));
+            if lat.is_finite() {
+                r.set("latency", num(*lat));
+            } else {
+                r.set("failed", Json::Bool(true));
+            }
+            obs::audit::emit(r);
+        }
+    }
+    out
 }
 
 #[cfg(test)]

@@ -1,0 +1,171 @@
+//! Cost-model calibration: surrogate prediction vs measured latency.
+//!
+//! Every hardware measurement the search folds comes with the surrogate
+//! prediction that justified spending the sample (MCTS's child score, an
+//! ES member's ranking fitness). [`CalibrationStats`] aggregates the
+//! relative residuals `(predicted - measured) / measured` into a
+//! mergeable summary that rides in the session `telemetry` block and the
+//! registry run JSON — the predicted-vs-measured substrate ROADMAP item
+//! 5's roofline cost-model work needs.
+//!
+//! Aggregation is raw sums (not means), so per-run stats merge exactly
+//! and round-trip bit-exactly through the session journal. Failed
+//! (quarantined) measurements carry an infinite sentinel and are never
+//! recorded here.
+
+use crate::util::json::{num, Json};
+
+/// Mergeable residual summary of predicted-vs-measured latency pairs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationStats {
+    /// Pairs recorded.
+    pub n: u64,
+    /// Sum of signed relative errors `(pred - meas) / meas` (bias).
+    pub sum_rel: f64,
+    /// Sum of absolute relative errors.
+    pub sum_abs_rel: f64,
+    /// Largest single absolute relative error.
+    pub worst_abs_rel: f64,
+}
+
+impl CalibrationStats {
+    /// Record one prediction/measurement pair. Non-finite or
+    /// non-positive values (the quarantine sentinel, a degenerate
+    /// baseline) are ignored — calibration only speaks for real samples.
+    pub fn record(&mut self, predicted: f64, measured: f64) {
+        if !predicted.is_finite() || !measured.is_finite() || measured <= 0.0 {
+            return;
+        }
+        let rel = (predicted - measured) / measured;
+        self.n += 1;
+        self.sum_rel += rel;
+        self.sum_abs_rel += rel.abs();
+        if rel.abs() > self.worst_abs_rel {
+            self.worst_abs_rel = rel.abs();
+        }
+    }
+
+    /// Fold another summary in (exact: sums add, worst takes max).
+    pub fn merge(&mut self, other: &CalibrationStats) {
+        self.n += other.n;
+        self.sum_rel += other.sum_rel;
+        self.sum_abs_rel += other.sum_abs_rel;
+        if other.worst_abs_rel > self.worst_abs_rel {
+            self.worst_abs_rel = other.worst_abs_rel;
+        }
+    }
+
+    /// Mean absolute relative error (0 when empty).
+    pub fn mean_abs_rel(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum_abs_rel / self.n as f64 }
+    }
+
+    /// Mean signed relative error: positive = the model over-predicts.
+    pub fn bias(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum_rel / self.n as f64 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// One human line for session reports.
+    pub fn render_line(&self) -> String {
+        format!(
+            "calibration: {} pairs, mean |err| {:.1}%, bias {:+.1}%, worst {:.1}%",
+            self.n,
+            self.mean_abs_rel() * 100.0,
+            self.bias() * 100.0,
+            self.worst_abs_rel * 100.0
+        )
+    }
+
+    /// Raw sums plus derived means (readability); [`from_json`] reads
+    /// only the raw fields, so the round-trip is bit-exact.
+    ///
+    /// [`from_json`]: CalibrationStats::from_json
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("n", num(self.n as f64))
+            .set("sum_rel", num(self.sum_rel))
+            .set("sum_abs_rel", num(self.sum_abs_rel))
+            .set("worst_abs_rel", num(self.worst_abs_rel))
+            .set("mean_abs_rel", num(self.mean_abs_rel()))
+            .set("bias", num(self.bias()));
+        j
+    }
+
+    /// Decode [`to_json`] output; a missing/empty document decodes as the
+    /// empty summary (older journals predate calibration).
+    ///
+    /// [`to_json`]: CalibrationStats::to_json
+    pub fn from_json(j: &Json) -> CalibrationStats {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        CalibrationStats {
+            n: f("n") as u64,
+            sum_rel: f("sum_rel"),
+            sum_abs_rel: f("sum_abs_rel"),
+            worst_abs_rel: f("worst_abs_rel"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_aggregates_signed_and_absolute_residuals() {
+        let mut c = CalibrationStats::default();
+        c.record(12.0, 10.0); // +20%
+        c.record(8.0, 10.0); // -20%
+        c.record(15.0, 10.0); // +50%
+        assert_eq!(c.n, 3);
+        assert!((c.bias() - (0.2 - 0.2 + 0.5) / 3.0).abs() < 1e-12);
+        assert!((c.mean_abs_rel() - 0.3).abs() < 1e-12);
+        assert!((c.worst_abs_rel - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sentinels_and_degenerate_measurements_ignored() {
+        let mut c = CalibrationStats::default();
+        c.record(1.0, f64::INFINITY); // quarantined measurement
+        c.record(f64::NAN, 1.0);
+        c.record(f64::INFINITY, 1.0);
+        c.record(1.0, 0.0);
+        c.record(1.0, -2.0);
+        assert!(c.is_empty());
+        assert_eq!(c.mean_abs_rel(), 0.0);
+        assert_eq!(c.bias(), 0.0);
+    }
+
+    #[test]
+    fn merge_is_exact() {
+        let mut a = CalibrationStats::default();
+        a.record(11.0, 10.0);
+        a.record(14.0, 10.0);
+        let mut b = CalibrationStats::default();
+        b.record(5.0, 10.0);
+        let mut whole = CalibrationStats::default();
+        for (p, m) in [(11.0, 10.0), (14.0, 10.0), (5.0, 10.0)] {
+            whole.record(p, m);
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+        assert!((a.worst_abs_rel - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let mut c = CalibrationStats::default();
+        c.record(0.123456789, 0.987654321);
+        c.record(3.0, 7.0);
+        let text = c.to_json().to_string();
+        let back = CalibrationStats::from_json(&Json::parse(&text).unwrap());
+        assert_eq!(back.n, c.n);
+        assert_eq!(back.sum_rel.to_bits(), c.sum_rel.to_bits());
+        assert_eq!(back.sum_abs_rel.to_bits(), c.sum_abs_rel.to_bits());
+        assert_eq!(back.worst_abs_rel.to_bits(), c.worst_abs_rel.to_bits());
+        assert!(c.render_line().contains("2 pairs"));
+    }
+}

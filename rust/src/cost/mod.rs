@@ -8,6 +8,7 @@ pub mod access;
 pub mod analysis;
 pub mod analytical;
 pub mod batch;
+pub mod calibration;
 pub mod features;
 pub mod platform;
 pub mod simulator;
@@ -15,5 +16,6 @@ pub mod simulator;
 pub use analysis::AnalysisCache;
 pub use analytical::{CostModel, HardwareModel, SurrogateModel};
 pub use batch::{latency_batch, LatencyJob};
+pub use calibration::CalibrationStats;
 pub use features::Features;
 pub use platform::Platform;

@@ -118,11 +118,22 @@ Registry
 Observability
   trace summary   Per-phase time table + executor counters of a recorded
                   trace file. --trace FILE (defaults to RCC_TRACE)
+  explain         Reconstruct *why* a session picked its schedule from a
+                  decision-provenance audit log: the winning path with
+                  per-transform reward attribution, abandoned branches,
+                  LLM proposal acceptance stats, and the cost-model
+                  calibration table. Takes an audit log path or a
+                  recorded run id (results/runs/). [--json]
   Every command accepts --trace FILE (or the RCC_TRACE env var) to record
   a Chrome trace-event JSON of the run — load it at ui.perfetto.dev.
   `--config` files can set it as `[obs] trace`. Tracing never changes
   results: searches are bit-identical with it on or off. With a trace
   armed, a panic still exports it (plus a telemetry summary to stderr).
+  Every command likewise accepts --audit FILE (or RCC_AUDIT, or `[obs]
+  audit` in --config) to append a decision-provenance JSONL log — every
+  MCTS node/selection/backprop, ES generation, LLM proposal, and
+  predicted-vs-measured pair. Audit on/off is also bit-identical; a
+  panic flushes the armed log.
 
 Fault tolerance
   With an armed fault plan (--faults / RCC_FAULTS), injected LLM failures
@@ -163,31 +174,62 @@ fn main() {
             .map(String::from)
             .or_else(|| std::env::var("RCC_TRACE").ok().filter(|s| !s.is_empty()))
     };
-    if let Some(path) = &trace_path {
+    if trace_path.is_some() {
         obs::enable();
-        // A panicking run's trace is the one worth looking at: export the
-        // armed trace and a telemetry summary to stderr before unwinding
-        // finishes, then defer to the default hook's backtrace.
-        let hook_path = path.clone();
+    }
+    // `--audit FILE` / `RCC_AUDIT=FILE` arm the decision-provenance log
+    // for any command; records append as the search runs and the log is
+    // flushed after the command (and on panic). The read-only `trace` and
+    // `explain` subcommands never arm it — explaining a log must not grow
+    // it. A config-file `[obs] audit` arms later, inside cmd_tune.
+    let audit_path = if cmd == "trace" || cmd == "explain" {
+        None
+    } else {
+        args.opt("audit")
+            .map(String::from)
+            .or_else(|| std::env::var("RCC_AUDIT").ok().filter(|s| !s.is_empty()))
+    };
+    if let Some(path) = &audit_path {
+        if let Err(e) = obs::audit::arm(path) {
+            eprintln!("error: cannot open audit log {path}: {e}");
+            std::process::exit(2);
+        }
+    }
+    // A panicking run's observability is the observability worth having:
+    // export the armed trace (plus a telemetry summary to stderr) and
+    // flush the armed audit log before unwinding finishes, then defer to
+    // the default hook's backtrace. Audit arming is checked dynamically —
+    // a config-file `[obs] audit` arms after this hook is installed.
+    {
+        let hook_trace = trace_path.clone();
         let default_hook = std::panic::take_hook();
         std::panic::set_hook(Box::new(move |info| {
             default_hook(info);
-            let events = obs::drain();
-            if let Some(parent) = Path::new(&hook_path).parent() {
-                if !parent.as_os_str().is_empty() {
-                    std::fs::create_dir_all(parent).ok();
+            if let Some(hook_path) = &hook_trace {
+                let events = obs::drain();
+                if let Some(parent) = Path::new(hook_path).parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent).ok();
+                    }
+                }
+                match obs::write_chrome_trace(hook_path, &events) {
+                    Ok(()) => eprintln!(
+                        "panic: exported {} trace events to {hook_path} (load at ui.perfetto.dev)",
+                        events.len()
+                    ),
+                    Err(e) => eprintln!("panic: failed to export trace to {hook_path}: {e:#}"),
+                }
+                let mut summary = obs::summarize(&events);
+                summary.exec = Some(obs::exec_counters());
+                summary.dropped = obs::dropped();
+                eprint!("{}", obs::render_summary(&summary));
+            }
+            if obs::audit::armed() {
+                obs::audit::flush();
+                if let Some(p) = obs::audit::path() {
+                    eprintln!("panic: audit decision log flushed to {p} (see `rcc explain`)");
                 }
             }
-            match obs::write_chrome_trace(&hook_path, &events) {
-                Ok(()) => eprintln!(
-                    "panic: exported {} trace events to {hook_path} (load at ui.perfetto.dev)",
-                    events.len()
-                ),
-                Err(e) => eprintln!("panic: failed to export trace to {hook_path}: {e:#}"),
-            }
-            let mut summary = obs::summarize(&events);
-            summary.exec = Some(obs::exec_counters());
-            eprint!("{}", obs::render_summary(&summary));
         }));
     }
     // RCC_FAULTS arms the deterministic fault-injection harness for any
@@ -210,6 +252,15 @@ fn main() {
             eprintln!("warning: failed to export trace to {path}: {e:#}");
         }
     }
+    // Flush the audit log (CLI/env-armed here, or config-armed inside
+    // cmd_tune) and tell the user where it went — the greppable line CI
+    // keys on before running `rcc explain`.
+    if obs::audit::armed() {
+        obs::audit::flush();
+        if let Some(p) = obs::audit::path() {
+            println!("audit decision log: {p}");
+        }
+    }
     if let Err(e) = result {
         eprintln!("error: {e:#}");
         std::process::exit(1);
@@ -228,8 +279,15 @@ fn export_trace(path: &str) -> Result<()> {
     obs::write_chrome_trace(path, &events)?;
     let mut summary = obs::summarize(&events);
     summary.exec = Some(obs::exec_counters());
+    summary.dropped = obs::dropped();
     println!("\ntrace: {} events -> {path} (load at ui.perfetto.dev)", events.len());
     print!("{}", obs::render_summary(&summary));
+    if summary.dropped > 0 {
+        eprintln!(
+            "warning: {} trace event(s) lost to ring overwrites — trace a shorter window",
+            summary.dropped
+        );
+    }
     Ok(())
 }
 
@@ -241,6 +299,7 @@ fn dispatch(cmd: &str, args: &Args) -> Result<()> {
         }
         "tune" => cmd_tune(args),
         "trace" => cmd_trace(args),
+        "explain" => cmd_explain(args),
         "db" => cmd_db(args),
         "transfer" => cmd_transfer(args),
         "history" => cmd_history(),
@@ -313,6 +372,53 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rcc explain <audit-log | run-id> [--json]`: reconstruct a session's
+/// decision provenance. A path that exists on disk is read as an audit
+/// JSONL log; anything else is resolved as a registry run id.
+fn cmd_explain(args: &Args) -> Result<()> {
+    use reasoning_compiler::report::explain::{render_run_record, Explanation};
+    let target = args
+        .positional
+        .first()
+        .cloned()
+        .or_else(|| args.opt("audit").map(String::from))
+        .or_else(|| std::env::var("RCC_AUDIT").ok().filter(|s| !s.is_empty()))
+        .ok_or_else(|| {
+            anyhow!("explain needs an audit log path or a recorded run id (see `rcc history`)")
+        })?;
+    let json_out = args.has_flag("json");
+    if Path::new(&target).exists() {
+        let records = obs::audit::load(&target)
+            .map_err(|e| anyhow!("reading audit log {target}: {e}"))?;
+        if records.is_empty() {
+            return Err(anyhow!("audit log {target} holds no records"));
+        }
+        let ex = Explanation::from_records(&records);
+        if json_out {
+            println!("{}", ex.to_json().to_pretty());
+        } else {
+            print!("{}", ex.render());
+        }
+        return Ok(());
+    }
+    let reg = Registry::default_location()?;
+    let path = reg.dir.join(format!("{target}.json"));
+    let text = std::fs::read_to_string(&path).map_err(|_| {
+        anyhow!(
+            "{target} is neither an audit log path nor a recorded run id in {}",
+            reg.dir.display()
+        )
+    })?;
+    let doc =
+        Json::parse(&text).ok_or_else(|| anyhow!("malformed run record {}", path.display()))?;
+    if json_out {
+        println!("{}", doc.to_pretty());
+    } else {
+        print!("{}", render_run_record(&doc));
+    }
+    Ok(())
+}
+
 fn cmd_tune(args: &Args) -> Result<()> {
     let mut cfg = config_from(args)?;
     // The CLI persists to the conventional database location unless the
@@ -330,6 +436,14 @@ fn cmd_tune(args: &Args) -> Result<()> {
         }
         _ => None,
     };
+    // Same pattern for a config-file `[obs] audit`: CLI `--audit` /
+    // RCC_AUDIT were armed in main and win; main's post-dispatch flush
+    // handles this log too.
+    if !obs::audit::armed() {
+        if let Some(p) = &cfg.audit_path {
+            obs::audit::arm(p).map_err(|e| anyhow!("cannot open audit log {p}: {e}"))?;
+        }
+    }
     // Arm fault injection: `--faults` wins over RCC_FAULTS (armed in
     // main), which wins over a config-file `[faults] spec`.
     let env_faults =
@@ -572,6 +686,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         let phases0 = obs::phase_totals();
         let exec0 = obs::exec_counters();
+        let dropped0 = obs::dropped();
         let fleet = tune_models(&models, &cfg)?;
         for (model, session) in &fleet.sessions {
             println!(
@@ -591,7 +706,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         // Fleet-scoped telemetry (sessions overlap in time, so the fleet
         // delta is the meaningful unit here, not per-session shares).
-        print!("{}", SessionTelemetry::capture(&phases0, &exec0).render());
+        print!("{}", SessionTelemetry::capture(&phases0, &exec0, dropped0).render());
     }
     // Annotate served models with their best-known tuned schedules. A
     // missing db is only acceptable when the path is the implicit default;

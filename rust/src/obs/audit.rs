@@ -1,0 +1,227 @@
+//! Decision-provenance audit log: an append-only JSONL record of *why*
+//! the search did what it did.
+//!
+//! The span recorder ([`super::recorder`]) answers "where did the time
+//! go"; the audit plane answers "why did the search pick this schedule".
+//! When armed (`--audit FILE` / `RCC_AUDIT` / `[obs] audit`) it appends
+//! one JSON object per decision to a log file:
+//!
+//! | kind       | emitted by              | meaning                                  |
+//! |------------|-------------------------|------------------------------------------|
+//! | `session`  | `coordinator/tuner.rs`  | session header (workload, platform, ...) |
+//! | `node`     | `search/mcts.rs`        | MCTS node creation (edge proposal, measured latency, reward, source) |
+//! | `select`   | `search/mcts.rs`        | one UCT descent (path + chosen-child visits/Q/UCB) |
+//! | `backprop` | `search/mcts.rs`        | reward propagation along a leaf's ancestor path |
+//! | `gen`      | `search/evolutionary.rs`| one ES generation (measured slice, best fitness/latency) |
+//! | `llm`      | `reasoning/policy.rs`   | one LLM call's proposal attribution (offered/valid/bare/invalid/expanded, retried/degraded) |
+//! | `measure`  | search fold paths + `cost/batch.rs` | one hardware measurement (predicted vs measured latency) |
+//! | `result`   | `coordinator/tuner.rs`  | one run's outcome (best latency, sample-efficiency curve) |
+//!
+//! `rcc explain <log>` reconstructs the search tree, the winning path
+//! with per-transform reward attribution, abandoned branches, LLM
+//! acceptance stats and the cost-model calibration table from this log
+//! alone (`report/explain.rs`).
+//!
+//! ## Determinism contract
+//!
+//! Same rules as the span recorder: emission is strictly write-only —
+//! records are built from values the search already computed, and no
+//! emission site may touch RNG state, seeds, plan order or fold order.
+//! The disarmed path is a single relaxed atomic load per site. Audit
+//! on/off is bit-identical in every `SearchResult` (enforced by
+//! `tests/observability.rs`).
+//!
+//! ## Encoding
+//!
+//! Same conventions as the session journal: `u64` values that may
+//! exceed 2^53 (seeds, fingerprints) are carried as decimal strings or
+//! 16-hex, `f64` via shortest-roundtrip `Display`. Failed (quarantined)
+//! measurements are encoded as `"failed": true` with the latency field
+//! omitted — `f64::INFINITY` has no JSON representation. Torn tails
+//! (crash mid-write) are skipped loudly by [`load`], never fatal.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write as _};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+
+use crate::util::json::{s, Json};
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+
+struct Sink {
+    path: String,
+    writer: BufWriter<File>,
+}
+
+fn sink() -> &'static Mutex<Option<Sink>> {
+    static S: OnceLock<Mutex<Option<Sink>>> = OnceLock::new();
+    S.get_or_init(|| Mutex::new(None))
+}
+
+fn lock() -> MutexGuard<'static, Option<Sink>> {
+    // A panicking emitter must not wedge the panic hook's flush.
+    sink().lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Is the audit log armed? One relaxed load — the entire cost of a
+/// disarmed emission site.
+#[inline]
+pub fn armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm the audit log: subsequent [`emit`] calls append to `path`
+/// (created along with its parent directory; existing logs grow).
+pub fn arm(path: &str) -> std::io::Result<()> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let file = OpenOptions::new().create(true).append(true).open(path)?;
+    let mut guard = lock();
+    *guard = Some(Sink { path: path.to_string(), writer: BufWriter::new(file) });
+    ARMED.store(true, Ordering::Relaxed);
+    Ok(())
+}
+
+/// Disarm and close the log (flushing buffered records).
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    let mut guard = lock();
+    if let Some(s) = guard.as_mut() {
+        s.writer.flush().ok();
+    }
+    *guard = None;
+}
+
+/// Flush buffered records to disk (command end, panic hook).
+pub fn flush() {
+    if let Some(s) = lock().as_mut() {
+        s.writer.flush().ok();
+    }
+}
+
+/// The armed log's path, if any.
+pub fn path() -> Option<String> {
+    lock().as_ref().map(|s| s.path.clone())
+}
+
+/// Append one record. No-op when disarmed — callers still guard record
+/// *construction* behind [`armed`] so the disarmed path stays one load.
+pub fn emit(doc: Json) {
+    if !armed() {
+        return;
+    }
+    if let Some(s) = lock().as_mut() {
+        let _ = writeln!(s.writer, "{}", doc.to_string());
+    }
+}
+
+/// Start a record: `{"kind": kind, "seed": "<decimal>"}`. The seed is the
+/// run's search seed — the correlator that groups one run's records when
+/// a session's repeats interleave in the log.
+pub fn record(kind: &str, seed: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("kind", s(kind)).set("seed", s(&seed.to_string()));
+    j
+}
+
+/// FNV-1a over a string: the stable context hash provenance records use
+/// to correlate prompts/exemplar sets without storing their text.
+pub fn fingerprint(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+    h
+}
+
+/// Read a `u64` that may be encoded as a decimal string (seeds,
+/// fingerprints can exceed 2^53) or, leniently, as a number.
+pub fn get_u64_str(j: &Json, key: &str) -> Option<u64> {
+    match j.get(key)? {
+        Json::Str(t) => t.parse().ok(),
+        Json::Num(n) => Some(*n as u64),
+        _ => None,
+    }
+}
+
+/// Load an audit log: one JSON object per line, malformed lines (torn
+/// tail after a crash) skipped with a stderr warning, never fatal.
+pub fn load(path: &str) -> std::io::Result<Vec<Json>> {
+    let text = std::fs::read_to_string(path)?;
+    let mut out = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Some(doc) => out.push(doc),
+            None => skipped += 1,
+        }
+    }
+    if skipped > 0 {
+        eprintln!("warning: skipped {skipped} malformed audit line(s) in {path} (torn tail?)");
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn disarmed_emit_is_a_no_op_and_log_roundtrips() {
+        let dir = std::env::temp_dir().join(format!("rcc_audit_{}", std::process::id()));
+        let path = dir.join("log.jsonl");
+        let path_s = path.to_string_lossy().to_string();
+
+        disarm();
+        emit(record("node", 7)); // disarmed: must not create any file
+        assert!(!path.exists());
+
+        arm(&path_s).unwrap();
+        assert!(armed());
+        let mut r = record("node", u64::MAX);
+        r.set("latency", num(1.5)).set("id", num(3.0));
+        emit(r);
+        emit(record("result", 9));
+        disarm();
+        assert!(!armed());
+
+        // Torn tail: a half-written line is skipped, intact lines load.
+        {
+            use std::io::Write;
+            let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+            write!(f, "{{\"kind\": \"nod").unwrap();
+        }
+        let records = load(&path_s).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].get("kind").and_then(Json::as_str), Some("node"));
+        // u64::MAX survives the decimal-string codec (2^53 would not).
+        assert_eq!(get_u64_str(&records[0], "seed"), Some(u64::MAX));
+        assert_eq!(records[0].get("latency").and_then(Json::as_f64), Some(1.5));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn arm_appends_across_sessions() {
+        let dir = std::env::temp_dir().join(format!("rcc_audit_app_{}", std::process::id()));
+        let path = dir.join("log.jsonl").to_string_lossy().to_string();
+        arm(&path).unwrap();
+        emit(record("session", 1));
+        disarm();
+        arm(&path).unwrap();
+        emit(record("session", 2));
+        disarm();
+        let records = load(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(get_u64_str(&records[1], "seed"), Some(2));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

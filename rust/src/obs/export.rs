@@ -110,6 +110,7 @@ pub fn chrome_trace_json(events: &[Event]) -> Json {
     }
     let mut other = Json::obj();
     other.set("executor", exec_json(&metrics::exec_counters()));
+    other.set("dropped_events", num(super::recorder::dropped() as f64));
     let mut doc = Json::obj();
     doc.set("traceEvents", arr(entries))
         .set("displayTimeUnit", s("ms"))
@@ -143,6 +144,11 @@ pub struct TraceSummary {
     /// Executor counters, when known (live summary or a trace file's
     /// `otherData.executor`).
     pub exec: Option<ExecCounters>,
+    /// Events lost to ring overwrites (live: `recorder::dropped()`; from
+    /// a trace file: `otherData.dropped_events`). [`summarize`] is a pure
+    /// function of its input stream and leaves this 0 — callers holding
+    /// the live counter or a trace document fill it in.
+    pub dropped: u64,
 }
 
 /// Aggregate an event stream into per-phase counts and total times.
@@ -186,6 +192,7 @@ pub fn summarize(events: &[Event]) -> TraceSummary {
         events: kept,
         wall_us: if kept == 0 { 0 } else { max_ts - min_ts },
         exec: None,
+        dropped: 0,
     }
 }
 
@@ -228,6 +235,11 @@ pub fn summarize_json(doc: &Json) -> Option<TraceSummary> {
         .get("otherData")
         .and_then(|o| o.get("executor"))
         .and_then(exec_from_json);
+    sum.dropped = doc
+        .get("otherData")
+        .and_then(|o| o.get("dropped_events"))
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0) as u64;
     Some(sum)
 }
 
@@ -262,6 +274,12 @@ pub fn render_summary(sum: &TraceSummary) -> String {
     if let Some(exec) = &sum.exec {
         out.push_str(&exec.render_line());
         out.push('\n');
+    }
+    if sum.dropped > 0 {
+        out.push_str(&format!(
+            "warning: {} event(s) lost to ring overwrites — trace a shorter window\n",
+            sum.dropped
+        ));
     }
     out
 }
@@ -321,6 +339,22 @@ mod tests {
         let sum = summarize_json(&parsed).unwrap();
         assert_eq!(sum.events, 5);
         assert!(sum.exec.is_some());
+    }
+
+    #[test]
+    fn dropped_count_renders_warning() {
+        let mut sum = summarize(&[]);
+        assert_eq!(sum.dropped, 0);
+        assert!(!render_summary(&sum).contains("ring overwrites"));
+        sum.dropped = 42;
+        assert!(render_summary(&sum).contains("42 event(s) lost to ring overwrites"));
+    }
+
+    #[test]
+    fn summarize_json_reads_dropped_events() {
+        let text = r#"{"traceEvents":[],"otherData":{"dropped_events":7}}"#;
+        let sum = summarize_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(sum.dropped, 7);
     }
 
     #[test]

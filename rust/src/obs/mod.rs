@@ -1,12 +1,15 @@
-//! Crate-wide observability: structured spans, counters and trace export.
+//! Crate-wide observability: structured spans, counters, trace export,
+//! and the decision-provenance audit log.
 //!
-//! The telemetry plane has three parts:
+//! The telemetry plane has four parts:
 //!
 //! - [`recorder`] — a lock-cheap span/event recorder. Each thread records
 //!   into its own bounded ring buffer (one uncontended mutex per event);
 //!   a global sink drains every ring into one chronologically-ordered
 //!   stream. When tracing is disabled (the default) every record site is
-//!   a single relaxed atomic load — a no-op on the hot path.
+//!   a single relaxed atomic load — a no-op on the hot path. Ring
+//!   overwrites are counted ([`recorder::dropped`]) and surfaced in the
+//!   trace summary and session telemetry.
 //! - [`metrics`] — always-on process-wide counters: per-phase
 //!   count/total-time aggregates (updated at span end, snapshotable
 //!   without draining events) and the executor's steal / own-pop /
@@ -14,6 +17,12 @@
 //! - [`export`] — exporters: Chrome trace-event JSON (loadable in
 //!   Perfetto / `chrome://tracing`) and the human per-phase summary
 //!   table behind `rcc trace summary`.
+//! - [`audit`] — the decision-provenance plane: an append-only JSONL log
+//!   of search-tree events (node/select/backprop/gen), LLM proposal
+//!   attribution (`llm`), measurements (`measure`) and run outcomes
+//!   (`session`/`result`), armed independently of tracing via
+//!   `--audit FILE` / `RCC_AUDIT` / `[obs] audit` and consumed by
+//!   `rcc explain` (see the taxonomy table in [`audit`]'s docs).
 //!
 //! ## Determinism contract
 //!
@@ -51,6 +60,7 @@
 //! The last three only ever fire under an armed fault plan
 //! (`util::faults`); stock runs never emit them.
 
+pub mod audit;
 pub mod export;
 pub mod metrics;
 pub mod recorder;
@@ -61,6 +71,6 @@ pub use export::{
 };
 pub use metrics::{exec_counters, phase_totals, ExecCounters, PhaseStat, PhaseTotals};
 pub use recorder::{
-    disable, drain, enable, enabled, instant, instant2, span, span2, Event, EventKind, Phase,
-    SpanGuard,
+    disable, drain, dropped, enable, enabled, instant, instant2, span, span2, Event, EventKind,
+    Phase, SpanGuard,
 };

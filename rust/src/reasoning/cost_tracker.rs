@@ -21,6 +21,12 @@ pub struct CostTracker {
     /// Deterministic backoff the retry policy scheduled, in ms (recorded,
     /// not slept against simulated engines).
     pub backoff_ms: u64,
+    /// Proposal items the model offered across completed calls (parsed
+    /// list lengths, before validation).
+    pub proposals_offered: u64,
+    /// Offered items that resolved to applicable transforms (valid as-is
+    /// or grounded from a bare op name).
+    pub proposals_accepted: u64,
 }
 
 impl CostTracker {
@@ -43,6 +49,18 @@ impl CostTracker {
         self.retries += other.retries;
         self.degraded += other.degraded;
         self.backoff_ms += other.backoff_ms;
+        self.proposals_offered += other.proposals_offered;
+        self.proposals_accepted += other.proposals_accepted;
+    }
+
+    /// Fraction of offered proposal items that resolved to applicable
+    /// transforms (0 when the model offered nothing).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.proposals_offered == 0 {
+            0.0
+        } else {
+            self.proposals_accepted as f64 / self.proposals_offered as f64
+        }
     }
 }
 
@@ -79,6 +97,19 @@ mod tests {
         assert_eq!(a.calls, 2);
         assert_eq!(a.prompt_tokens, 40);
         assert_eq!(a.completion_tokens, 60);
+    }
+
+    #[test]
+    fn acceptance_rate_counts_resolved_proposals() {
+        let mut t = CostTracker::default();
+        assert_eq!(t.acceptance_rate(), 0.0);
+        t.proposals_offered = 8;
+        t.proposals_accepted = 6;
+        assert!((t.acceptance_rate() - 0.75).abs() < 1e-12);
+        let other = CostTracker { proposals_offered: 2, proposals_accepted: 0, ..CostTracker::default() };
+        t.merge(&other);
+        assert_eq!(t.proposals_offered, 10);
+        assert!((t.acceptance_rate() - 0.6).abs() < 1e-12);
     }
 
     #[test]

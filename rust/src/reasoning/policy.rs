@@ -9,10 +9,12 @@ use crate::transfer::Exemplar;
 use crate::util::faults;
 use crate::util::rng::Pcg;
 
+use crate::util::json::{num, s, Json};
+
 use super::cost_tracker::CostTracker;
 use super::engine::{LlmEngine, LlmResponse};
 use super::proposal::{self, FallbackStats};
-use super::prompt::PromptContext;
+use super::prompt::{self, PromptContext};
 
 /// Attempts per LLM call before degrading to the sampler fallback.
 pub const MAX_LLM_ATTEMPTS: u64 = 3;
@@ -119,10 +121,13 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
         // The span mirrors CostTracker: arg = prompt tokens metered for this
         // call, arg2 = transforms the proposal resolved to.
         let mut llm_span = obs::span(obs::EventKind::LlmCall, 0);
+        let call_index = self.calls_made;
+        let retries_before = self.costs.retries;
         // A degraded call (every retry failed) parses as an empty proposal
         // list, which `resolve` counts as a fallback — the same sampler
         // path a weak model's all-invalid answer takes, so the session
         // keeps searching instead of erroring.
+        let mut degraded = false;
         let (parsed, prompt_tokens) = match self.complete_with_retries(&prompt_ctx) {
             Some(response) => {
                 self.costs
@@ -132,15 +137,40 @@ impl<E: LlmEngine> ProposalPolicy for LlmPolicy<E> {
                 }
                 (proposal::parse_response(&response.text), response.prompt_tokens)
             }
-            None => (Vec::new(), 0),
+            None => {
+                degraded = true;
+                (Vec::new(), 0)
+            }
         };
-        let (seq, _fallback) = proposal::resolve(
+        let (seq, fallback) = proposal::resolve(
             &parsed,
             &ctx.node.current,
             &mut self.rng,
             &mut self.fallbacks,
         );
+        self.costs.proposals_offered += parsed.len() as u64;
+        self.costs.proposals_accepted += seq.len() as u64;
         llm_span.set_args(prompt_tokens, seq.len() as u64);
+        // Audit: per-call proposal attribution. The context hash is only
+        // computed when armed — prompt rendering is pure, so the disarmed
+        // path stays one atomic load.
+        if obs::audit::armed() {
+            let (valid, bare, invalid) = proposal::classify(&parsed);
+            let ctx_hash = obs::audit::fingerprint(&prompt::render(&prompt_ctx));
+            let mut r = obs::audit::record("llm", self.fault_salt);
+            r.set("call", num(call_index as f64))
+                .set("ctx", s(&format!("{ctx_hash:016x}")))
+                .set("step", num(ctx.step as f64))
+                .set("offered", num(parsed.len() as f64))
+                .set("valid", num(valid as f64))
+                .set("bare", num(bare as f64))
+                .set("invalid", num(invalid as f64))
+                .set("expanded", num(seq.len() as f64))
+                .set("fallback", Json::Bool(fallback))
+                .set("retries", num((self.costs.retries - retries_before) as f64))
+                .set("degraded", Json::Bool(degraded));
+            obs::audit::emit(r);
+        }
         // On total fallback `seq` is empty; the MCTS loop then expands with
         // the default random policy (Appendix G) — uninterrupted search.
         seq

@@ -140,6 +140,20 @@ pub fn ground(op: &str, program: &Program, rng: &mut Pcg) -> Option<Transform> {
     Some(rng.choose(&candidates).clone())
 }
 
+/// Count a parsed list by outcome — the audit plane's per-call
+/// attribution triple (valid / bare-needs-grounding / invalid).
+pub fn classify(parsed: &[Parsed]) -> (u64, u64, u64) {
+    let (mut valid, mut bare, mut invalid) = (0u64, 0u64, 0u64);
+    for p in parsed {
+        match p {
+            Parsed::Valid(_) => valid += 1,
+            Parsed::Bare(_) => bare += 1,
+            Parsed::Invalid(_) => invalid += 1,
+        }
+    }
+    (valid, bare, invalid)
+}
+
 /// Statistics for Table 8: expansions vs all-invalid fallbacks.
 #[derive(Debug, Clone, Default)]
 pub struct FallbackStats {

@@ -1,0 +1,768 @@
+//! `rcc explain`: reconstruct *why* a tuning session picked its schedule
+//! from the decision-provenance audit log alone (`obs::audit`).
+//!
+//! The explanation is computed purely from the log's records — no replay,
+//! no re-measurement — so it works on logs shipped from another machine:
+//!
+//! - **Winning path**: the chain of tree edges from the root to the node
+//!   whose measured latency is the run's best, each edge carrying the
+//!   transforms the proposal added, its visit count / Q value after
+//!   backprop replay, and its *marginal reward attribution* — the share
+//!   of the total latency improvement first realized at that edge
+//!   ([`attribute`]; the shares sum to `baseline - best` exactly).
+//! - **Abandoned branches**: the most-visited off-path nodes and why they
+//!   lost (quarantined measurement, never revisited, lower Q).
+//! - **LLM attribution**: proposal acceptance over every `llm` record —
+//!   offered vs expanded, rejected-illegal counts, retries, degraded calls.
+//! - **Calibration**: surrogate-vs-measured residuals aggregated from
+//!   `measure` records, keyed by the session's (shape class, platform).
+//! - **Sample efficiency**: each run's convergence curve from its
+//!   `result` record.
+//!
+//! A log may hold several sessions (arming appends); explanation always
+//! reads the slice after the **last** `session` record, matching "explain
+//! the run I just did".
+
+use crate::cost::CalibrationStats;
+use crate::obs::audit::get_u64_str;
+use crate::util::json::{arr, num, s, Json};
+
+/// Session parameters from the `session` header record (empty strings
+/// when the log predates the header or was truncated before it).
+#[derive(Debug, Clone, Default)]
+pub struct SessionHeader {
+    pub workload: String,
+    pub platform: String,
+    pub strategy: String,
+    pub budget: usize,
+    pub repeats: usize,
+    /// 16-hex shape class — the calibration table's grouping key.
+    pub shape_class: String,
+    pub seed: u64,
+}
+
+/// One run's outcome (`result` record).
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub seed: u64,
+    pub baseline: f64,
+    pub best_latency: f64,
+    pub samples: usize,
+    pub failed: usize,
+    /// Sample-efficiency curve: `(sample, latency)` per improvement.
+    pub curve: Vec<(usize, f64)>,
+}
+
+/// One edge of the winning path, root side first.
+#[derive(Debug, Clone)]
+pub struct PathStep {
+    pub node: usize,
+    pub source: String,
+    pub transforms: Vec<String>,
+    /// Measured latency at this node (`None` for a quarantined edge).
+    pub latency: Option<f64>,
+    pub visits: f64,
+    pub q: f64,
+    /// Marginal best-latency improvement first realized at this edge.
+    pub improvement: f64,
+}
+
+/// An explored subtree that lost to the winning path.
+#[derive(Debug, Clone)]
+pub struct Abandoned {
+    pub node: usize,
+    pub visits: f64,
+    pub q: f64,
+    pub reason: String,
+    pub transforms: Vec<String>,
+}
+
+/// Aggregated LLM proposal attribution over every `llm` record.
+#[derive(Debug, Clone, Default)]
+pub struct LlmStats {
+    pub calls: u64,
+    pub offered: u64,
+    pub valid: u64,
+    pub bare: u64,
+    pub invalid: u64,
+    pub expanded: u64,
+    pub fallbacks: u64,
+    pub retries: u64,
+    pub degraded: u64,
+}
+
+impl LlmStats {
+    /// Proposals that survived legality filtering and entered the tree,
+    /// over proposals offered (0 when nothing was offered).
+    pub fn acceptance_rate(&self) -> f64 {
+        if self.offered == 0 { 0.0 } else { self.expanded as f64 / self.offered as f64 }
+    }
+}
+
+/// One ES generation (`gen` record) of the winning run.
+#[derive(Debug, Clone)]
+pub struct GenRow {
+    pub gen: usize,
+    pub measured: usize,
+    pub population: usize,
+    pub best_fitness: f64,
+    pub best_latency: f64,
+    pub failed: usize,
+}
+
+/// The full reconstruction. Build with [`Explanation::from_records`].
+#[derive(Debug, Clone, Default)]
+pub struct Explanation {
+    pub header: SessionHeader,
+    pub runs: Vec<RunSummary>,
+    /// Seed of the winning run (minimum best latency across repeats).
+    pub winning_seed: u64,
+    /// Winning path, root edge first (empty when the baseline won or the
+    /// run was ES — ES logs explain through `generations` instead).
+    pub path: Vec<PathStep>,
+    pub abandoned: Vec<Abandoned>,
+    pub llm: LlmStats,
+    /// `(shape class, platform, residual summary)` rows.
+    pub calibration: Vec<(String, String, CalibrationStats)>,
+    pub generations: Vec<GenRow>,
+}
+
+/// Marginal reward attribution: walking `lats` in path order with a
+/// running best that starts at `baseline`, each step's improvement is the
+/// best-latency drop it *first* achieves (0 for regressions). The
+/// improvements sum exactly to `baseline - min(best over the path)`, so
+/// every microsecond of the final speedup is attributed to exactly one
+/// edge. Quarantined edges are passed as `f64::INFINITY` and get 0.
+pub fn attribute(baseline: f64, lats: &[f64]) -> Vec<f64> {
+    let mut best = baseline;
+    lats.iter()
+        .map(|&l| {
+            if l.is_finite() && l < best {
+                let gain = best - l;
+                best = l;
+                gain
+            } else {
+                0.0
+            }
+        })
+        .collect()
+}
+
+fn f(j: &Json, k: &str) -> f64 {
+    j.get(k).and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn text(j: &Json, k: &str) -> String {
+    j.get(k).and_then(Json::as_str).unwrap_or("").to_string()
+}
+
+fn kind_of(j: &Json) -> &str {
+    j.get("kind").and_then(Json::as_str).unwrap_or("")
+}
+
+fn transforms_of(j: &Json) -> Vec<String> {
+    j.get("transforms")
+        .and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|t| t.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+/// Replayed per-node tree state for one run's `node`/`backprop` records.
+struct TreeNode {
+    parent: Option<usize>,
+    source: String,
+    transforms: Vec<String>,
+    latency: Option<f64>,
+    visits: f64,
+    w: f64,
+}
+
+impl Explanation {
+    /// Reconstruct from a loaded audit log (`obs::audit::load`). Reads
+    /// the slice after the last `session` record; a headerless log is
+    /// explained whole with a default header.
+    pub fn from_records(records: &[Json]) -> Explanation {
+        let start = records
+            .iter()
+            .rposition(|r| kind_of(r) == "session")
+            .unwrap_or(0);
+        let slice = &records[start..];
+
+        let mut ex = Explanation::default();
+        if let Some(h) = slice.iter().find(|r| kind_of(r) == "session") {
+            ex.header = SessionHeader {
+                workload: text(h, "workload"),
+                platform: text(h, "platform"),
+                strategy: text(h, "strategy"),
+                budget: f(h, "budget") as usize,
+                repeats: f(h, "repeats") as usize,
+                shape_class: text(h, "shape_class"),
+                seed: get_u64_str(h, "seed").unwrap_or(0),
+            };
+        }
+
+        // ---- per-run outcomes + the winning run ---------------------------
+        for r in slice.iter().filter(|r| kind_of(r) == "result") {
+            let curve = r
+                .get("curve")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|p| (f(p, "sample") as usize, f(p, "latency")))
+                        .collect()
+                })
+                .unwrap_or_default();
+            ex.runs.push(RunSummary {
+                seed: get_u64_str(r, "seed").unwrap_or(0),
+                baseline: f(r, "baseline"),
+                best_latency: f(r, "best_latency"),
+                samples: f(r, "samples") as usize,
+                failed: f(r, "failed") as usize,
+                curve,
+            });
+        }
+        let winner = ex
+            .runs
+            .iter()
+            .min_by(|a, b| a.best_latency.partial_cmp(&b.best_latency).unwrap())
+            .cloned();
+        ex.winning_seed = winner.as_ref().map(|w| w.seed).unwrap_or(0);
+        let win_seed_s = ex.winning_seed.to_string();
+        let of_winner =
+            |r: &Json| r.get("seed").and_then(Json::as_str) == Some(win_seed_s.as_str());
+
+        // ---- tree replay for the winning run ------------------------------
+        let mut tree: Vec<Option<TreeNode>> = Vec::new();
+        for r in slice.iter().filter(|r| kind_of(r) == "node").filter(|r| of_winner(r)) {
+            let id = f(r, "id") as usize;
+            if tree.len() <= id {
+                tree.resize_with(id + 1, || None);
+            }
+            let root = r.get("parent").is_none();
+            tree[id] = Some(TreeNode {
+                parent: (!root).then(|| f(r, "parent") as usize),
+                source: text(r, "source"),
+                transforms: transforms_of(r),
+                latency: r.get("latency").and_then(Json::as_f64),
+                // Creation state: non-root nodes start at one visit with
+                // their creation reward; the root accumulates from warm
+                // children and backprop replay below.
+                visits: if root { 0.0 } else { 1.0 },
+                w: f(r, "reward"),
+            });
+            // Warm seeding bumps the root without a backprop record.
+            if tree[id].as_ref().map(|n| n.source == "warm").unwrap_or(false) {
+                let reward = f(r, "reward");
+                if let Some(Some(root)) = tree.get_mut(0) {
+                    root.visits += 1.0;
+                    root.w += reward;
+                }
+            }
+        }
+        for r in slice.iter().filter(|r| kind_of(r) == "backprop").filter(|r| of_winner(r)) {
+            let reward = f(r, "reward");
+            let visit_only = matches!(r.get("visit_only"), Some(Json::Bool(true)));
+            if let Some(path) = r.get("path").and_then(Json::as_arr) {
+                for id in path.iter().filter_map(Json::as_f64) {
+                    if let Some(Some(n)) = tree.get_mut(id as usize) {
+                        n.visits += 1.0;
+                        if !visit_only {
+                            n.w += reward;
+                        }
+                    }
+                }
+            }
+        }
+
+        // ---- winning path + attribution -----------------------------------
+        let mut on_path: Vec<usize> = Vec::new();
+        if let Some(w) = &winner {
+            // The winning node measured the run's best latency; JSON
+            // round-trips f64 shortest-exact, so bit equality holds.
+            let win_node = tree
+                .iter()
+                .enumerate()
+                .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                .find(|(_, n)| n.latency.map(|l| l == w.best_latency).unwrap_or(false))
+                .map(|(i, _)| i);
+            if let Some(mut cur) = win_node {
+                loop {
+                    on_path.push(cur);
+                    match tree[cur].as_ref().and_then(|n| n.parent) {
+                        Some(p) => cur = p,
+                        None => break,
+                    }
+                }
+                on_path.reverse(); // root first
+                let lats: Vec<f64> = on_path
+                    .iter()
+                    .skip(1) // the root is the baseline, not an edge
+                    .map(|&i| {
+                        tree[i]
+                            .as_ref()
+                            .and_then(|n| n.latency)
+                            .unwrap_or(f64::INFINITY)
+                    })
+                    .collect();
+                let gains = attribute(w.baseline, &lats);
+                for (&id, gain) in on_path.iter().skip(1).zip(gains) {
+                    let n = tree[id].as_ref().unwrap();
+                    ex.path.push(PathStep {
+                        node: id,
+                        source: n.source.clone(),
+                        transforms: n.transforms.clone(),
+                        latency: n.latency,
+                        visits: n.visits,
+                        q: n.w / n.visits.max(1e-9),
+                        improvement: gain,
+                    });
+                }
+            }
+        }
+
+        // ---- abandoned branches -------------------------------------------
+        let mut off: Vec<(usize, &TreeNode)> = tree
+            .iter()
+            .enumerate()
+            .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+            .filter(|(i, _)| *i != 0 && !on_path.contains(i))
+            .collect();
+        off.sort_by(|a, b| {
+            b.1.visits.partial_cmp(&a.1.visits).unwrap().then(a.0.cmp(&b.0))
+        });
+        for (id, n) in off.into_iter().take(3) {
+            let reason = if n.latency.is_none() {
+                "quarantined measurement".to_string()
+            } else if n.visits <= 1.0 {
+                "never revisited (budget went elsewhere)".to_string()
+            } else {
+                "lower Q than the winning path".to_string()
+            };
+            ex.abandoned.push(Abandoned {
+                node: id,
+                visits: n.visits,
+                q: n.w / n.visits.max(1e-9),
+                reason,
+                transforms: n.transforms.clone(),
+            });
+        }
+
+        // ---- LLM attribution (all repeats) --------------------------------
+        for r in slice.iter().filter(|r| kind_of(r) == "llm") {
+            ex.llm.calls += 1;
+            ex.llm.offered += f(r, "offered") as u64;
+            ex.llm.valid += f(r, "valid") as u64;
+            ex.llm.bare += f(r, "bare") as u64;
+            ex.llm.invalid += f(r, "invalid") as u64;
+            ex.llm.expanded += f(r, "expanded") as u64;
+            ex.llm.retries += f(r, "retries") as u64;
+            if matches!(r.get("fallback"), Some(Json::Bool(true))) {
+                ex.llm.fallbacks += 1;
+            }
+            if matches!(r.get("degraded"), Some(Json::Bool(true))) {
+                ex.llm.degraded += 1;
+            }
+        }
+
+        // ---- calibration table --------------------------------------------
+        // `measure` records with a prediction pair the surrogate against
+        // the hardware; the standalone-batch records carry no prediction
+        // and are skipped. One session = one (shape class, platform) row.
+        let mut cal = CalibrationStats::default();
+        for r in slice.iter().filter(|r| kind_of(r) == "measure") {
+            if let (Some(p), Some(l)) = (
+                r.get("predicted").and_then(Json::as_f64),
+                r.get("latency").and_then(Json::as_f64),
+            ) {
+                cal.record(p, l);
+            }
+        }
+        if !cal.is_empty() {
+            ex.calibration.push((
+                ex.header.shape_class.clone(),
+                ex.header.platform.clone(),
+                cal,
+            ));
+        }
+
+        // ---- ES generations of the winning run ----------------------------
+        for r in slice.iter().filter(|r| kind_of(r) == "gen").filter(|r| of_winner(r)) {
+            ex.generations.push(GenRow {
+                gen: f(r, "gen") as usize,
+                measured: f(r, "measured") as usize,
+                population: f(r, "population") as usize,
+                best_fitness: f(r, "best_fitness"),
+                best_latency: f(r, "best_latency"),
+                failed: f(r, "failed") as usize,
+            });
+        }
+
+        ex
+    }
+
+    /// Human report: every section `rcc explain` prints.
+    pub fn render(&self) -> String {
+        let h = &self.header;
+        let mut out = format!(
+            "session: {} on {} — {}, budget {} x {} repeat(s)\n",
+            h.workload, h.platform, h.strategy, h.budget, h.repeats
+        );
+        out.push_str("runs:\n");
+        for r in &self.runs {
+            out.push_str(&format!(
+                "  seed {}: baseline {:.6} -> best {:.6} ({:.2}x), {} sample(s), {} failed\n",
+                r.seed,
+                r.baseline,
+                r.best_latency,
+                if r.best_latency > 0.0 { r.baseline / r.best_latency } else { 0.0 },
+                r.samples,
+                r.failed
+            ));
+        }
+        out.push_str(&format!("winning path (run seed {}):\n", self.winning_seed));
+        if self.path.is_empty() {
+            out.push_str("  (no tree edges — baseline won, or an ES run; see generations)\n");
+        }
+        for (i, p) in self.path.iter().enumerate() {
+            let lat = p
+                .latency
+                .map(|l| format!("{l:.6}"))
+                .unwrap_or_else(|| "failed".to_string());
+            out.push_str(&format!(
+                "  {}. node {} [{}] latency {} improvement {:.6} visits {:.0} Q {:.3} via {}\n",
+                i + 1,
+                p.node,
+                p.transforms.join("; "),
+                lat,
+                p.improvement,
+                p.visits,
+                p.q,
+                p.source
+            ));
+        }
+        if !self.abandoned.is_empty() {
+            out.push_str("abandoned branches:\n");
+            for a in &self.abandoned {
+                out.push_str(&format!(
+                    "  node {}: visits {:.0}, Q {:.3} — {} [{}]\n",
+                    a.node,
+                    a.visits,
+                    a.q,
+                    a.reason,
+                    a.transforms.join("; ")
+                ));
+            }
+        }
+        if self.llm.calls > 0 {
+            out.push_str(&format!(
+                "llm proposals: {} call(s), {} offered, {} accepted ({:.0}%), {} rejected illegal, {} fallback(s), {} retry(ies), {} degraded\n",
+                self.llm.calls,
+                self.llm.offered,
+                self.llm.expanded,
+                self.llm.acceptance_rate() * 100.0,
+                self.llm.invalid,
+                self.llm.fallbacks,
+                self.llm.retries,
+                self.llm.degraded
+            ));
+        }
+        for (class, plat, stats) in &self.calibration {
+            out.push_str(&format!(
+                "calibration [{class} @ {plat}]: {}\n",
+                stats.render_line()
+            ));
+        }
+        if !self.runs.is_empty() {
+            out.push_str("sample efficiency:\n");
+            for r in &self.runs {
+                let best_at = r
+                    .curve
+                    .iter()
+                    .filter(|(_, l)| *l == r.best_latency)
+                    .map(|(s, _)| *s)
+                    .next()
+                    .unwrap_or(0);
+                out.push_str(&format!(
+                    "  seed {}: best found at sample {} of {}\n",
+                    r.seed, best_at, r.samples
+                ));
+            }
+        }
+        if !self.generations.is_empty() {
+            out.push_str("es generations:\n");
+            for g in &self.generations {
+                out.push_str(&format!(
+                    "  gen {}: measured {}, population {}, best fitness {:.3}, best latency {:.6}, failed {}\n",
+                    g.gen, g.measured, g.population, g.best_fitness, g.best_latency, g.failed
+                ));
+            }
+        }
+        out
+    }
+
+    /// Machine form (`rcc explain --json`).
+    pub fn to_json(&self) -> Json {
+        let h = &self.header;
+        let mut header = Json::obj();
+        header
+            .set("workload", s(&h.workload))
+            .set("platform", s(&h.platform))
+            .set("strategy", s(&h.strategy))
+            .set("budget", num(h.budget as f64))
+            .set("repeats", num(h.repeats as f64))
+            .set("shape_class", s(&h.shape_class))
+            .set("seed", s(&h.seed.to_string()));
+        let runs = arr(self
+            .runs
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.set("seed", s(&r.seed.to_string()))
+                    .set("baseline", num(r.baseline))
+                    .set("best_latency", num(r.best_latency))
+                    .set("samples", num(r.samples as f64))
+                    .set("failed", num(r.failed as f64))
+                    .set(
+                        "curve",
+                        arr(r
+                            .curve
+                            .iter()
+                            .map(|(smp, lat)| {
+                                let mut p = Json::obj();
+                                p.set("sample", num(*smp as f64)).set("latency", num(*lat));
+                                p
+                            })
+                            .collect()),
+                    );
+                o
+            })
+            .collect());
+        let path = arr(self
+            .path
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("node", num(p.node as f64))
+                    .set("source", s(&p.source))
+                    .set("transforms", arr(p.transforms.iter().map(|t| s(t)).collect()))
+                    .set("improvement", num(p.improvement))
+                    .set("visits", num(p.visits))
+                    .set("q", num(p.q));
+                match p.latency {
+                    Some(l) => o.set("latency", num(l)),
+                    None => o.set("failed", Json::Bool(true)),
+                };
+                o
+            })
+            .collect());
+        let abandoned = arr(self
+            .abandoned
+            .iter()
+            .map(|a| {
+                let mut o = Json::obj();
+                o.set("node", num(a.node as f64))
+                    .set("visits", num(a.visits))
+                    .set("q", num(a.q))
+                    .set("reason", s(&a.reason))
+                    .set("transforms", arr(a.transforms.iter().map(|t| s(t)).collect()));
+                o
+            })
+            .collect());
+        let mut llm = Json::obj();
+        llm.set("calls", num(self.llm.calls as f64))
+            .set("offered", num(self.llm.offered as f64))
+            .set("valid", num(self.llm.valid as f64))
+            .set("bare", num(self.llm.bare as f64))
+            .set("invalid", num(self.llm.invalid as f64))
+            .set("expanded", num(self.llm.expanded as f64))
+            .set("acceptance_rate", num(self.llm.acceptance_rate()))
+            .set("fallbacks", num(self.llm.fallbacks as f64))
+            .set("retries", num(self.llm.retries as f64))
+            .set("degraded", num(self.llm.degraded as f64));
+        let calibration = arr(self
+            .calibration
+            .iter()
+            .map(|(class, plat, stats)| {
+                let mut o = Json::obj();
+                o.set("shape_class", s(class))
+                    .set("platform", s(plat))
+                    .set("stats", stats.to_json());
+                o
+            })
+            .collect());
+        let generations = arr(self
+            .generations
+            .iter()
+            .map(|g| {
+                let mut o = Json::obj();
+                o.set("gen", num(g.gen as f64))
+                    .set("measured", num(g.measured as f64))
+                    .set("population", num(g.population as f64))
+                    .set("best_fitness", num(g.best_fitness))
+                    .set("best_latency", num(g.best_latency))
+                    .set("failed", num(g.failed as f64));
+                o
+            })
+            .collect());
+        let mut doc = Json::obj();
+        doc.set("header", header)
+            .set("winning_seed", s(&self.winning_seed.to_string()))
+            .set("runs", runs)
+            .set("winning_path", path)
+            .set("abandoned", abandoned)
+            .set("llm", llm)
+            .set("calibration", calibration)
+            .set("generations", generations);
+        doc
+    }
+}
+
+/// Explain a *registry* run record (`results/runs/<id>.json`): the
+/// persisted summary has no tree, but it carries the best trace, the
+/// sample-efficiency curve and the session calibration block.
+pub fn render_run_record(doc: &Json) -> String {
+    let gs = |k: &str| doc.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+    let gn = |k: &str| doc.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut out = format!(
+        "run {}: {} on {} — {}, mean {:.2}x, best {:.2}x in {} sample(s)\n",
+        gs("id"),
+        gs("workload"),
+        gs("platform"),
+        gs("strategy"),
+        gn("mean_speedup"),
+        gn("best_speedup"),
+        gn("samples")
+    );
+    if let Some(trace) = doc.get("best_trace").and_then(Json::as_arr) {
+        out.push_str("best trace:\n");
+        for t in trace {
+            if let Some(t) = t.as_str() {
+                out.push_str(&format!("  {t}\n"));
+            }
+        }
+    }
+    if let Some(curve) = doc.get("curve").and_then(Json::as_arr) {
+        out.push_str("sample efficiency:\n");
+        for p in curve {
+            out.push_str(&format!(
+                "  sample {:>4}: {:.2}x\n",
+                p.get("sample").and_then(Json::as_f64).unwrap_or(0.0),
+                p.get("best_speedup").and_then(Json::as_f64).unwrap_or(0.0)
+            ));
+        }
+    }
+    if let Some(cal) = doc.get("telemetry").and_then(|t| t.get("calibration")) {
+        let stats = CalibrationStats::from_json(cal);
+        if !stats.is_empty() {
+            out.push_str(&format!("calibration: {}\n", stats.render_line()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::audit::record;
+
+    #[test]
+    fn attribute_sums_to_total_improvement_and_skips_regressions() {
+        let gains = attribute(10.0, &[8.0, 9.0, f64::INFINITY, 6.0, 6.0]);
+        assert_eq!(gains, vec![2.0, 0.0, 0.0, 2.0, 0.0]);
+        let total: f64 = gains.iter().sum();
+        assert!((total - (10.0 - 6.0)).abs() < 1e-12, "sum == baseline - best");
+        assert!(attribute(5.0, &[]).is_empty());
+        // A path that never beats the baseline attributes nothing.
+        assert_eq!(attribute(1.0, &[2.0, 3.0]), vec![0.0, 0.0]);
+    }
+
+    /// Synthetic log: root -> node 1 (best) -> abandoned node 2.
+    fn synthetic_log() -> Vec<Json> {
+        let mut records = Vec::new();
+        let mut h = record("session", 42);
+        h.set("workload", s("w")).set("platform", s("p")).set("strategy", s("mcts"))
+            .set("budget", num(10.0)).set("repeats", num(1.0))
+            .set("shape_class", s("00000000000000aa"));
+        records.push(h);
+        let mut root = record("node", 42);
+        root.set("id", num(0.0)).set("source", s("root")).set("latency", num(10.0))
+            .set("step", num(0.0));
+        records.push(root);
+        let mut n1 = record("node", 42);
+        n1.set("id", num(1.0)).set("parent", num(0.0)).set("source", s("policy"))
+            .set("step", num(0.0)).set("score", num(1.5)).set("reward", num(1.0))
+            .set("latency", num(6.0))
+            .set("transforms", arr(vec![s("tile(stage=0, loop=1, factor=8)")]));
+        records.push(n1);
+        let mut n2 = record("node", 42);
+        n2.set("id", num(2.0)).set("parent", num(0.0)).set("source", s("policy"))
+            .set("step", num(1.0)).set("score", num(1.1)).set("reward", num(0.4))
+            .set("latency", num(9.0))
+            .set("transforms", arr(vec![s("cache_write(stage=0)")]));
+        records.push(n2);
+        let mut b = record("backprop", 42);
+        b.set("leaf", num(1.0)).set("reward", num(1.0))
+            .set("visit_only", Json::Bool(false)).set("path", arr(vec![num(0.0)]));
+        records.push(b);
+        for (pred, lat) in [(6.5, 6.0), (9.5, 9.0)] {
+            let mut m = record("measure", 42);
+            m.set("sample", num(1.0)).set("predicted", num(pred)).set("latency", num(lat));
+            records.push(m);
+        }
+        let mut l = record("llm", 42);
+        l.set("call", num(0.0)).set("ctx", s("abcd")).set("step", num(0.0))
+            .set("offered", num(3.0)).set("valid", num(2.0)).set("bare", num(0.0))
+            .set("invalid", num(1.0)).set("expanded", num(2.0))
+            .set("fallback", Json::Bool(false)).set("retries", num(1.0))
+            .set("degraded", Json::Bool(false));
+        records.push(l);
+        let mut r = record("result", 42);
+        r.set("baseline", num(10.0)).set("best_latency", num(6.0))
+            .set("samples", num(2.0)).set("failed", num(0.0))
+            .set("curve", arr(vec![{
+                let mut p = Json::obj();
+                p.set("sample", num(2.0)).set("latency", num(6.0));
+                p
+            }]));
+        records.push(r);
+        records
+    }
+
+    #[test]
+    fn reconstructs_winning_path_attribution_and_stats() {
+        let ex = Explanation::from_records(&synthetic_log());
+        assert_eq!(ex.header.workload, "w");
+        assert_eq!(ex.winning_seed, 42);
+        assert_eq!(ex.runs.len(), 1);
+        assert_eq!(ex.path.len(), 1, "root -> node 1");
+        assert_eq!(ex.path[0].node, 1);
+        assert_eq!(ex.path[0].transforms, vec!["tile(stage=0, loop=1, factor=8)"]);
+        assert!((ex.path[0].improvement - 4.0).abs() < 1e-12);
+        // Node 1: created with 1 visit, no further backprop onto itself.
+        assert!((ex.path[0].visits - 1.0).abs() < 1e-12);
+        assert_eq!(ex.abandoned.len(), 1);
+        assert_eq!(ex.abandoned[0].node, 2);
+        assert_eq!(ex.llm.calls, 1);
+        assert!((ex.llm.acceptance_rate() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(ex.calibration.len(), 1);
+        assert_eq!(ex.calibration[0].2.n, 2);
+        let text = ex.render();
+        assert!(text.contains("winning path"), "{text}");
+        assert!(text.contains("llm proposals"), "{text}");
+        assert!(text.contains("calibration ["), "{text}");
+        let json = ex.to_json().to_string();
+        assert!(json.contains("winning_path"), "{json}");
+    }
+
+    #[test]
+    fn explains_the_last_session_slice_only() {
+        let mut records = Vec::new();
+        // A stale first session with a different workload.
+        let mut old = record("session", 1);
+        old.set("workload", s("stale"));
+        records.push(old);
+        records.extend(synthetic_log());
+        let ex = Explanation::from_records(&records);
+        assert_eq!(ex.header.workload, "w", "only the last session explains");
+    }
+}

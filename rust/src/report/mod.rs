@@ -5,6 +5,7 @@
 
 pub mod ablations;
 pub mod costs;
+pub mod explain;
 pub mod figure3;
 pub mod platforms;
 pub mod scale;

@@ -21,7 +21,7 @@
 use std::collections::HashMap;
 use std::sync::Arc;
 
-use crate::cost::{CostModel, Platform};
+use crate::cost::{CalibrationStats, CostModel, Platform};
 use crate::db::{program_fingerprint, MeasureCache};
 use crate::obs;
 use crate::schedule::{Schedule, Transform};
@@ -273,6 +273,10 @@ pub struct SearchResult {
     /// Hardware measurements that failed and were quarantined (sample
     /// spent, nothing cached or recorded). Always 0 without a fault plan.
     pub failed_measurements: usize,
+    /// Cost-model calibration: the surrogate prediction that justified
+    /// each measured sample vs the measured latency, aggregated into a
+    /// residual summary (always on — recording costs two adds per fold).
+    pub calibration: CalibrationStats,
 }
 
 impl SearchResult {
@@ -330,6 +334,8 @@ pub struct Evaluator<'a> {
     /// the run reports exhaustion and stops rather than burning the whole
     /// sample budget against a broken measurement target.
     failure_budget: usize,
+    /// Predicted-vs-measured residuals of this run's folded samples.
+    calibration: CalibrationStats,
 }
 
 impl<'a> Evaluator<'a> {
@@ -350,6 +356,7 @@ impl<'a> Evaluator<'a> {
             cache_misses: 0,
             failed: 0,
             failure_budget: budget / 4 + 8,
+            calibration: CalibrationStats::default(),
         }
     }
 
@@ -389,6 +396,26 @@ impl<'a> Evaluator<'a> {
     /// Cache accounting so far (hits, misses); (0, 0) without a cache.
     pub fn cache_counts(&self) -> (usize, usize) {
         (self.cache_hits, self.cache_misses)
+    }
+
+    /// Record one cost-model calibration pair: the surrogate latency that
+    /// justified spending this sample vs the measured latency. Strictly
+    /// accounting — never feeds back into the search (determinism), and
+    /// quarantine sentinels are ignored inside [`CalibrationStats`].
+    pub fn record_calibration(&mut self, predicted: f64, measured: f64) {
+        self.calibration.record(predicted, measured);
+        // Audit: the predicted-vs-measured pair behind this sample.
+        if obs::audit::armed() {
+            use crate::util::json::{num, Json};
+            let mut r = obs::audit::record("measure", self.seed);
+            r.set("sample", num(self.used as f64)).set("predicted", num(predicted));
+            if measured.is_finite() {
+                r.set("latency", num(measured));
+            } else {
+                r.set("failed", Json::Bool(true));
+            }
+            obs::audit::emit(r);
+        }
     }
 
     /// Evaluate a candidate. A measurement-cache hit returns the known
@@ -493,6 +520,7 @@ impl<'a> Evaluator<'a> {
             cache_hits,
             cache_misses,
             failed_measurements: self.failed,
+            calibration: self.calibration,
         }
     }
 }

@@ -9,8 +9,10 @@
 
 use crate::cost::CostModel;
 use crate::db::MeasureCache;
+use crate::obs;
 use crate::schedule::{sampler, Schedule, Transform};
 use crate::tir::Program;
+use crate::util::json::num;
 use crate::util::rng::Pcg;
 
 use super::common::{
@@ -156,25 +158,50 @@ impl SearchStrategy for EvolutionaryStrategy {
                     .unwrap()
             });
             let used_before = ev.ev.used;
-            let failed: Vec<usize> = {
+            let lats = {
                 let slice: Vec<&Schedule> = order
                     .iter()
                     .take(cfg.measure_per_gen)
                     .map(|&i| &population[i].schedule)
                     .collect();
-                let lats = ev.measure_batch(&slice);
-                lats.iter()
-                    .enumerate()
-                    .filter(|(_, l)| matches!(l, Some(x) if is_failed_measurement(*x)))
-                    .map(|(k, _)| order[k])
-                    .collect()
+                ev.measure_batch(&slice)
             };
+            // Calibration: the surrogate fitness that earned each member
+            // its slot in the measured slice doubles as the prediction
+            // (fitness = baseline / f̂, so f̂ = baseline / fitness).
+            for (k, l) in lats.iter().enumerate() {
+                if let Some(lat) = l {
+                    let fit = population[order[k]].fitness;
+                    if fit > 0.0 {
+                        ev.ev.record_calibration(surrogate_baseline / fit, *lat);
+                    }
+                }
+            }
+            let failed: Vec<usize> = lats
+                .iter()
+                .enumerate()
+                .filter(|(_, l)| matches!(l, Some(x) if is_failed_measurement(*x)))
+                .map(|(k, _)| order[k])
+                .collect();
+            let n_failed = failed.len();
             // Quarantined measurements (injected faults) poison the member:
             // worst-possible fitness, so it cannot survive as an elite or
             // win a tournament — the ES analog of MCTS's zero-reward
             // backprop. Empty in every stock run.
             for i in failed {
                 population[i].fitness = 0.0;
+            }
+            // Audit: one record per generation — the ES analog of the MCTS
+            // node/backprop stream.
+            if obs::audit::armed() {
+                let mut r = obs::audit::record("gen", ctx.seed);
+                r.set("gen", num(gen as f64))
+                    .set("measured", num((ev.ev.used - used_before) as f64))
+                    .set("population", num(population.len() as f64))
+                    .set("best_fitness", num(population[order[0]].fitness))
+                    .set("best_latency", num(ev.ev.best_latency))
+                    .set("failed", num(n_failed as f64));
+                obs::audit::emit(r);
             }
             if ev.ev.used == used_before {
                 stalled_gens += 1;

@@ -37,6 +37,7 @@ use crate::db::{program_fingerprint, MeasureCache};
 use crate::obs;
 use crate::schedule::{sampler, Schedule};
 use crate::tir::Program;
+use crate::util::json::{arr, num, s, Json};
 use crate::util::rng::Pcg;
 
 use super::common::{
@@ -141,6 +142,20 @@ struct PendingLeaf {
     step: usize,
     /// Node path leaf→root carrying this leaf's virtual loss.
     path: Vec<usize>,
+    /// Who authored the edge: the proposal policy, or the random fallback
+    /// taken when nothing it proposed applied (audit provenance).
+    source: &'static str,
+}
+
+/// Rendered transforms of the edge `parent → child`: the trace suffix the
+/// expansion added, in the registry's round-trippable format.
+fn edge_transforms(sched: &Schedule, parent_len: usize) -> Json {
+    arr(sched
+        .trace
+        .iter()
+        .skip(parent_len)
+        .map(|t| s(&crate::reasoning::engine::render_transform(t)))
+        .collect())
 }
 
 /// MCTS behind the [`SearchStrategy`] interface, carrying its
@@ -183,6 +198,17 @@ impl SearchStrategy for MctsStrategy<'_> {
         let mut seen: HashSet<u64> = HashSet::new();
         seen.insert(program_fingerprint(&nodes[0].schedule.current));
 
+        // Audit: the root anchors the reconstructed tree; its latency is
+        // the measured baseline every reward attribution starts from.
+        if obs::audit::armed() {
+            let mut r = obs::audit::record("node", ctx.seed);
+            r.set("id", num(0.0))
+                .set("source", s("root"))
+                .set("latency", num(ev.ev.baseline_latency))
+                .set("step", num(0.0));
+            obs::audit::emit(r);
+        }
+
         let mut best_rollout_reward: f64 = 1.0;
 
         // ---- warm start: seed root children from the tuning database -------
@@ -206,12 +232,14 @@ impl SearchStrategy for MctsStrategy<'_> {
                 ev.measure_batch_with_fingerprints(&cands)
             };
             let mut seeded: Vec<(usize, f64)> = Vec::new();
+            let mut warm_lats: Vec<f64> = Vec::new();
             for (replay, lat) in warm_children.into_iter().zip(lats) {
                 let Some(lat) = lat else { break };
                 let (i, child_sched) = (replay.index, replay.schedule);
                 let child_latency_hat = ctx
                     .surrogate
                     .latency(&child_sched.current, ctx.seed ^ 0x3A17 ^ (i as u64) << 8);
+                ev.ev.record_calibration(child_latency_hat, lat);
                 let score = surrogate_baseline / child_latency_hat;
                 let child_id = nodes.len();
                 nodes.push(Node {
@@ -225,6 +253,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                 nodes[0].children.push(child_id);
                 nodes[0].n += 1.0;
                 seeded.push((child_id, ev.ev.baseline_latency / lat));
+                warm_lats.push(lat);
             }
             let best_speedup = seeded.iter().map(|&(_, s)| s).fold(0.0, f64::max);
             if best_speedup > 0.0 {
@@ -232,6 +261,26 @@ impl SearchStrategy for MctsStrategy<'_> {
                     let reward = speedup / best_speedup;
                     nodes[id].w = reward;
                     nodes[0].w += reward;
+                }
+            }
+            // Audit: warm children are recorded after normalization so the
+            // emitted reward matches the exploit weight UCT will see.
+            if obs::audit::armed() {
+                for (&(id, _), &lat) in seeded.iter().zip(warm_lats.iter()) {
+                    let mut r = obs::audit::record("node", ctx.seed);
+                    r.set("id", num(id as f64))
+                        .set("parent", num(0.0))
+                        .set("source", s("warm"))
+                        .set("step", num(0.0))
+                        .set("score", num(nodes[id].score))
+                        .set("reward", num(nodes[id].w))
+                        .set("transforms", edge_transforms(&nodes[id].schedule, 0));
+                    if is_failed_measurement(lat) {
+                        r.set("failed", Json::Bool(true));
+                    } else {
+                        r.set("latency", num(lat));
+                    }
+                    obs::audit::emit(r);
                 }
             }
         }
@@ -265,6 +314,9 @@ impl SearchStrategy for MctsStrategy<'_> {
                 // ---- selection: UCT descent to an expandable node ----------
                 let mut cur = 0usize;
                 let mut saturated_in_flight = false;
+                // Audit-only descent trail: built when armed, never read by
+                // the descent itself.
+                let mut sel_path: Vec<Json> = Vec::new();
                 let select_span = obs::span(obs::EventKind::Select, step as u64);
                 loop {
                     let node = &nodes[cur];
@@ -293,9 +345,26 @@ impl SearchStrategy for MctsStrategy<'_> {
                             best_child = c;
                         }
                     }
+                    if obs::audit::armed() {
+                        let ch = &nodes[best_child];
+                        let mut e = Json::obj();
+                        e.set("id", num(best_child as f64))
+                            .set("visits", num(ch.n))
+                            .set("q", num(ch.w / ch.n.max(1e-9)))
+                            .set("ucb", num(best_uct));
+                        sel_path.push(e);
+                    }
                     cur = best_child;
                 }
                 drop(select_span);
+                if obs::audit::armed() && !saturated_in_flight {
+                    let mut r = obs::audit::record("select", ctx.seed);
+                    r.set("step", num(step as f64))
+                        .set("leaf", num(cur as f64))
+                        .set("virtual_loss", num(if batch_size > 1 { VIRTUAL_LOSS } else { 0.0 }))
+                        .set("path", arr(sel_path));
+                    obs::audit::emit(r);
+                }
                 if saturated_in_flight {
                     break;
                 }
@@ -317,7 +386,9 @@ impl SearchStrategy for MctsStrategy<'_> {
                 // random legal transform (Appendix G's fallback path).
                 let expand_span = obs::span(obs::EventKind::Expand, pending.len() as u64);
                 let (mut child_sched, applied) = nodes[cur].schedule.apply_all(&proposal);
+                let mut source = "policy";
                 if applied == 0 {
+                    source = "random-fallback";
                     match sampler::random_transform(&nodes[cur].schedule.current, &mut rng) {
                         Some(t) => match nodes[cur].schedule.apply(t) {
                             Ok(s) => child_sched = s,
@@ -370,7 +441,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                     Vec::new()
                 };
                 *pending_children.entry(cur).or_insert(0) += 1;
-                pending.push(PendingLeaf { parent: cur, sched: child_sched, step, path });
+                pending.push(PendingLeaf { parent: cur, sched: child_sched, step, path, source });
             }
 
             // Real statistics flow below; lift the provisional losses first.
@@ -404,6 +475,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                 if is_failed_measurement(lat) {
                     let child_latency_hat =
                         ctx.surrogate.latency(&p.sched.current, ctx.seed ^ (p.step as u64) << 1);
+                    let parent_len = nodes[p.parent].schedule.trace.len();
                     let child_id = nodes.len();
                     nodes.push(Node {
                         schedule: p.sched,
@@ -414,10 +486,35 @@ impl SearchStrategy for MctsStrategy<'_> {
                         score: surrogate_baseline / child_latency_hat,
                     });
                     nodes[p.parent].children.push(child_id);
+                    let mut bp_path: Vec<Json> = Vec::new();
                     let mut up = Some(p.parent);
                     while let Some(i) = up {
                         nodes[i].n += 1.0;
+                        if obs::audit::armed() {
+                            bp_path.push(num(i as f64));
+                        }
                         up = nodes[i].parent;
+                    }
+                    if obs::audit::armed() {
+                        let mut r = obs::audit::record("node", ctx.seed);
+                        r.set("id", num(child_id as f64))
+                            .set("parent", num(p.parent as f64))
+                            .set("source", s(p.source))
+                            .set("step", num(p.step as f64))
+                            .set("score", num(nodes[child_id].score))
+                            .set("reward", num(0.0))
+                            .set("failed", Json::Bool(true))
+                            .set(
+                                "transforms",
+                                edge_transforms(&nodes[child_id].schedule, parent_len),
+                            );
+                        obs::audit::emit(r);
+                        let mut b = obs::audit::record("backprop", ctx.seed);
+                        b.set("leaf", num(child_id as f64))
+                            .set("reward", num(0.0))
+                            .set("visit_only", Json::Bool(true))
+                            .set("path", arr(bp_path));
+                        obs::audit::emit(b);
                     }
                     continue;
                 }
@@ -432,6 +529,8 @@ impl SearchStrategy for MctsStrategy<'_> {
                 let child_latency_hat =
                     ctx.surrogate.latency(&p.sched.current, ctx.seed ^ (p.step as u64) << 1);
                 let child_score = surrogate_baseline / child_latency_hat;
+                // Calibration: this prediction justified spending the sample.
+                ev.ev.record_calibration(child_latency_hat, lat);
 
                 // Reward: speedup of the rollout terminal vs baseline,
                 // normalized by the best rollout so far to keep UCT's exploit
@@ -441,6 +540,7 @@ impl SearchStrategy for MctsStrategy<'_> {
                 let reward = raw_reward / best_rollout_reward;
 
                 // ---- insert + backpropagate --------------------------------
+                let parent_len = nodes[p.parent].schedule.trace.len();
                 let child_id = nodes.len();
                 nodes.push(Node {
                     schedule: p.sched,
@@ -451,11 +551,36 @@ impl SearchStrategy for MctsStrategy<'_> {
                     score: child_score,
                 });
                 nodes[p.parent].children.push(child_id);
+                let mut bp_path: Vec<Json> = Vec::new();
                 let mut up = Some(p.parent);
                 while let Some(i) = up {
                     nodes[i].w += reward;
                     nodes[i].n += 1.0;
+                    if obs::audit::armed() {
+                        bp_path.push(num(i as f64));
+                    }
                     up = nodes[i].parent;
+                }
+                if obs::audit::armed() {
+                    let mut r = obs::audit::record("node", ctx.seed);
+                    r.set("id", num(child_id as f64))
+                        .set("parent", num(p.parent as f64))
+                        .set("source", s(p.source))
+                        .set("step", num(p.step as f64))
+                        .set("score", num(child_score))
+                        .set("reward", num(reward))
+                        .set("latency", num(lat))
+                        .set(
+                            "transforms",
+                            edge_transforms(&nodes[child_id].schedule, parent_len),
+                        );
+                    obs::audit::emit(r);
+                    let mut b = obs::audit::record("backprop", ctx.seed);
+                    b.set("leaf", num(child_id as f64))
+                        .set("reward", num(reward))
+                        .set("visit_only", Json::Bool(false))
+                        .set("path", arr(bp_path));
+                    obs::audit::emit(b);
                 }
             }
         }

@@ -9,8 +9,10 @@
 use std::collections::BTreeMap;
 use std::sync::Mutex;
 
+use reasoning_compiler::coordinator::{run_session, Strategy, TuneConfig};
 use reasoning_compiler::cost::{HardwareModel, Platform, SurrogateModel};
 use reasoning_compiler::obs;
+use reasoning_compiler::report::explain::Explanation;
 use reasoning_compiler::search::{
     EvoConfig, EvolutionaryStrategy, MctsConfig, MctsStrategy, RandomPolicy, SearchContext,
     SearchResult, SearchStrategy,
@@ -161,6 +163,187 @@ fn chrome_trace_export_is_well_formed() {
     let rendered = obs::render_summary(&sum);
     assert!(rendered.contains("measure"));
     assert!(rendered.contains("executor:"));
+}
+
+fn temp_audit(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "rcc_audit_test_{tag}_{}_{}.jsonl",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .unwrap()
+            .as_nanos()
+    ))
+}
+
+fn kind_count(records: &[Json], kind: &str) -> usize {
+    records
+        .iter()
+        .filter(|r| r.get("kind").and_then(Json::as_str) == Some(kind))
+        .count()
+}
+
+#[test]
+fn audit_on_off_is_bit_identical() {
+    // The decision log, like tracing, is strictly write-only: arming it
+    // must not perturb a single bit of any search result, at any worker
+    // count. Calibration is always-on and must agree too.
+    let _g = lock();
+    obs::disable();
+    obs::drain();
+    obs::audit::disarm();
+    let m = models(WorkloadId::DeepSeekMoe);
+    for workers in [1usize, 4] {
+        let eval_batch = if workers == 1 { 1 } else { 4 };
+        let off_mcts = mcts_run(&m, 40, 7, workers, eval_batch);
+        let off_evo = evo_run(&m, 60, 7, workers);
+
+        let path = temp_audit(&format!("parity_w{workers}"));
+        let path_s = path.to_string_lossy().to_string();
+        obs::audit::arm(&path_s).unwrap();
+        let on_mcts = mcts_run(&m, 40, 7, workers, eval_batch);
+        let on_evo = evo_run(&m, 60, 7, workers);
+        obs::audit::disarm();
+
+        assert_eq!(
+            result_key(&off_mcts),
+            result_key(&on_mcts),
+            "audit changed MCTS results at workers={workers}"
+        );
+        assert_eq!(
+            result_key(&off_evo),
+            result_key(&on_evo),
+            "audit changed evolutionary results at workers={workers}"
+        );
+        assert_eq!(off_mcts.calibration, on_mcts.calibration);
+        assert_eq!(off_evo.calibration, on_evo.calibration);
+
+        let records = obs::audit::load(&path_s).unwrap();
+        assert!(kind_count(&records, "node") > 1, "MCTS emitted node records");
+        assert!(kind_count(&records, "select") > 0, "MCTS emitted select records");
+        assert!(kind_count(&records, "backprop") > 0, "MCTS emitted backprop records");
+        assert!(kind_count(&records, "gen") > 0, "ES emitted generation records");
+        assert!(kind_count(&records, "measure") > 0, "measure records carry calibration pairs");
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn audit_on_off_bit_identical_with_shared_repeat_cache() {
+    let _g = lock();
+    obs::audit::disarm();
+    let cfg = TuneConfig {
+        strategy: Strategy::Mcts,
+        budget: 25,
+        repeats: 2,
+        workers: 4,
+        share_repeat_cache: true,
+        ..Default::default()
+    };
+    let off = run_session(&cfg).unwrap();
+    let path = temp_audit("shared");
+    let path_s = path.to_string_lossy().to_string();
+    obs::audit::arm(&path_s).unwrap();
+    let on = run_session(&cfg).unwrap();
+    obs::audit::disarm();
+    assert_eq!(
+        off.runs.iter().map(result_key).collect::<Vec<_>>(),
+        on.runs.iter().map(result_key).collect::<Vec<_>>(),
+        "audit changed a shared-cache session"
+    );
+    assert_eq!(off.telemetry.calibration, on.telemetry.calibration);
+    // The telemetry JSON block carries calibration + dropped-event counts.
+    let tj = on.telemetry.to_json().to_string();
+    assert!(tj.contains("\"calibration\""), "{tj}");
+    assert!(tj.contains("\"dropped_events\""), "{tj}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn explain_reconstructs_a_fixed_seed_session() {
+    let _g = lock();
+    obs::audit::disarm();
+    let path = temp_audit("explain");
+    let path_s = path.to_string_lossy().to_string();
+    let cfg = TuneConfig {
+        strategy: Strategy::LlmMcts,
+        budget: 40,
+        repeats: 2,
+        ..Default::default()
+    };
+    let off = run_session(&cfg).unwrap();
+    obs::audit::arm(&path_s).unwrap();
+    let on = run_session(&cfg).unwrap();
+    obs::audit::disarm();
+    assert_eq!(
+        off.runs.iter().map(result_key).collect::<Vec<_>>(),
+        on.runs.iter().map(result_key).collect::<Vec<_>>()
+    );
+
+    let records = obs::audit::load(&path_s).unwrap();
+    let ex = Explanation::from_records(&records);
+    assert_eq!(ex.header.strategy, "llm_mcts");
+    assert_eq!(ex.header.workload, "deepseek_moe");
+    assert_eq!(ex.runs.len(), 2, "one result record per repeat");
+
+    // The winning path reaches the run's best latency, and the marginal
+    // reward attribution over its edges accounts for the whole
+    // baseline-to-best improvement.
+    let win = ex
+        .runs
+        .iter()
+        .min_by(|a, b| a.best_latency.partial_cmp(&b.best_latency).unwrap())
+        .unwrap();
+    assert_eq!(win.seed, ex.winning_seed);
+    assert!(!ex.path.is_empty(), "winning path reconstructed from the log alone");
+    assert!(ex.path.iter().any(|p| !p.transforms.is_empty()));
+    let attributed: f64 = ex.path.iter().map(|p| p.improvement).sum();
+    let total = win.baseline - win.best_latency;
+    assert!(
+        (attributed - total).abs() <= 1e-9 * win.baseline.max(1.0),
+        "attribution {attributed} != total improvement {total}"
+    );
+
+    assert!(ex.llm.calls > 0, "LLM strategy must leave llm records");
+    assert!(ex.llm.offered > 0);
+    assert!(ex.llm.acceptance_rate() > 0.0);
+    assert_eq!(ex.calibration.len(), 1);
+    assert!(ex.calibration[0].2.n > 0, "calibration table populated");
+
+    // Golden shape of the human report (what CI greps for).
+    let text = ex.render();
+    for needle in ["session:", "winning path", "llm proposals", "calibration [", "sample efficiency"] {
+        assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+    }
+    let json = ex.to_json().to_string();
+    assert!(json.contains("\"winning_path\""));
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn explain_handles_es_sessions_via_generations() {
+    let _g = lock();
+    obs::audit::disarm();
+    let path = temp_audit("es");
+    let path_s = path.to_string_lossy().to_string();
+    let cfg = TuneConfig {
+        strategy: Strategy::Evolutionary,
+        budget: 60,
+        repeats: 1,
+        ..Default::default()
+    };
+    obs::audit::arm(&path_s).unwrap();
+    let s = run_session(&cfg).unwrap();
+    obs::audit::disarm();
+    assert!(s.telemetry.calibration.n > 0, "ES sessions calibrate too");
+
+    let records = obs::audit::load(&path_s).unwrap();
+    let ex = Explanation::from_records(&records);
+    assert!(ex.path.is_empty(), "no tree to reconstruct for ES");
+    assert!(!ex.generations.is_empty(), "generation table from gen records");
+    assert!(ex.calibration.first().map(|c| c.2.n > 0).unwrap_or(false));
+    assert!(ex.render().contains("es generations"));
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
