@@ -24,16 +24,19 @@ fn main() -> anyhow::Result<()> {
         manifest.artifacts.len(),
         manifest.dir.display()
     );
-    let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+    let mut server = Server::start(&manifest, ServerConfig { max_batch, ..Default::default() })?;
 
     println!("serving {requests} synthetic requests (max batch {max_batch})...\n");
     server.run_synthetic(requests, 7)?;
 
     println!("{}", server.metrics.report());
 
-    // Focused latency check on the end-to-end block.
+    // Focused latency check on the end-to-end block. Submissions go
+    // through admission control now, so tick the scheduler as we go
+    // rather than stacking the queue to its budget.
     for _ in 0..16 {
         server.submit("llama3_block", 99)?;
+        server.step()?;
     }
     server.drain()?;
     let m = &server.metrics.per_model["llama3_block"];

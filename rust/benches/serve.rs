@@ -1,0 +1,191 @@
+//! Serving-plane load generator (`BENCH_serve.json`).
+//!
+//! `cargo bench --bench serve` (`RCC_BENCH_QUICK=1` for the CI smoke).
+//!
+//! Open-loop seeded arrivals against the simulated backend, execution
+//! fanned onto the persistent executor as high-priority tasks:
+//!
+//! - `serve_scale_w{N}`: batch throughput scaling from workers=1 up —
+//!   identical scheduling decisions (asserted bit-exact), only wall
+//!   clock moves;
+//! - `serve_p99_tune_idle` / `serve_p99_tune_saturated`: wall-clock p99
+//!   with the executor quiet vs flooded by low-priority background work
+//!   (a stand-in for `rcc serve --tune`). High-priority serve dispatch
+//!   preempts the flood at every dequeue/steal site, so the ratio
+//!   staying near 1x (target: within 2x) is the no-priority-inversion
+//!   acceptance number;
+//! - `serve_overload`: rejection accounting under saturating bursts
+//!   against tiny admission budgets.
+//!
+//! Set `RCC_BENCH_SERVE_JSON` to change the output path.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use reasoning_compiler::coordinator::server::synthetic_work;
+use reasoning_compiler::coordinator::{Server, ServerConfig};
+use reasoning_compiler::util::executor::{Executor, Priority};
+use reasoning_compiler::util::json::{arr, num, s, Json};
+use reasoning_compiler::util::stats::percentile;
+
+const SPIN_PER_TICK: u64 = 20_000;
+const LOAD_SEED: u64 = 9;
+
+fn models() -> Vec<String> {
+    vec!["deepseek_moe".to_string(), "llama4_mlp".to_string()]
+}
+
+struct RunOutcome {
+    served: u64,
+    rejected: u64,
+    wall_s: f64,
+    virt_p50_ms: f64,
+    virt_p99_ms: f64,
+    wall_p99_ms: f64,
+    /// Deterministic digest of every scheduling decision.
+    digest: Vec<(String, u64, u64, u64, u64, u64, u64, Vec<u64>)>,
+}
+
+fn run_load(workers: usize, requests: usize, config: ServerConfig, flooded: bool) -> RunOutcome {
+    let exec = Executor::new(workers);
+    let stop = Arc::new(AtomicBool::new(false));
+    let flood = flooded.then(|| {
+        let fe = Arc::clone(&exec);
+        let fs = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            while !fs.load(Ordering::Relaxed) {
+                let tasks: Vec<_> = (0..32).map(|_| || synthetic_work(50_000)).collect();
+                fe.run_with(Priority::Low, tasks);
+            }
+        })
+    });
+    let mut server = Server::start_sim(&models(), config)
+        .unwrap()
+        .with_executor(Arc::clone(&exec), SPIN_PER_TICK);
+    let t0 = Instant::now();
+    server.run_synthetic(requests, LOAD_SEED).unwrap();
+    let wall_s = t0.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(h) = flood {
+        h.join().unwrap();
+    }
+    let mut virt: Vec<f64> = Vec::new();
+    let mut wall: Vec<f64> = Vec::new();
+    for m in server.metrics.per_model.values() {
+        virt.extend_from_slice(m.request_latencies.samples());
+        wall.extend_from_slice(m.wall_latencies.samples());
+    }
+    RunOutcome {
+        served: server.metrics.total_requests(),
+        rejected: server.metrics.total_rejected(),
+        wall_s,
+        virt_p50_ms: percentile(&virt, 50.0) * 1e3,
+        virt_p99_ms: percentile(&virt, 99.0) * 1e3,
+        wall_p99_ms: percentile(&wall, 99.0) * 1e3,
+        digest: server
+            .metrics
+            .per_model
+            .iter()
+            .map(|(name, m)| {
+                (
+                    name.clone(),
+                    m.admitted,
+                    m.rejected,
+                    m.evicted,
+                    m.requests,
+                    m.batches,
+                    m.partial_dispatches,
+                    m.request_latencies.samples().iter().map(|v| v.to_bits()).collect(),
+                )
+            })
+            .collect(),
+    }
+}
+
+fn entry(name: &str, o: &RunOutcome) -> Json {
+    let mut e = Json::obj();
+    e.set("name", s(name))
+        .set("served", num(o.served as f64))
+        .set("rejected", num(o.rejected as f64))
+        .set("wall_ms", num(o.wall_s * 1e3))
+        .set("throughput_rps", num(o.served as f64 / o.wall_s.max(1e-9)))
+        .set("virt_p50_ms", num(o.virt_p50_ms))
+        .set("virt_p99_ms", num(o.virt_p99_ms))
+        .set("wall_p99_ms", num(o.wall_p99_ms));
+    e
+}
+
+fn main() {
+    let quick = std::env::var_os("RCC_BENCH_QUICK").is_some();
+    let requests = if quick { 300 } else { 2000 };
+    let worker_counts: &[usize] = if quick { &[1, 4] } else { &[1, 2, 4] };
+    let mut entries: Vec<Json> = Vec::new();
+
+    // --- throughput scaling with workers --------------------------------
+    println!("== serve: throughput scaling ({requests} requests) ==");
+    let mut scale_runs: Vec<(usize, RunOutcome)> = Vec::new();
+    for &w in worker_counts {
+        let o = run_load(w, requests, ServerConfig::default(), false);
+        println!(
+            "  workers={w}: {:.0} req/s ({} served, {} rejected, wall {:.1} ms, virt p99 {:.3} ms)",
+            o.served as f64 / o.wall_s.max(1e-9),
+            o.served,
+            o.rejected,
+            o.wall_s * 1e3,
+            o.virt_p99_ms
+        );
+        entries.push(entry(&format!("serve_scale_w{w}"), &o));
+        scale_runs.push((w, o));
+    }
+    // Standing contract: worker count moves wall clock only, never a
+    // scheduling decision. A digest mismatch is a determinism regression.
+    for (w, o) in &scale_runs[1..] {
+        assert_eq!(
+            scale_runs[0].1.digest, o.digest,
+            "scheduling decisions differ between workers=1 and workers={w}"
+        );
+    }
+
+    // --- priority inversion under a saturating tuning load --------------
+    println!("\n== serve: saturating low-priority background load (workers=4) ==");
+    let idle = run_load(4, requests, ServerConfig::default(), false);
+    let saturated = run_load(4, requests, ServerConfig::default(), true);
+    assert_eq!(
+        idle.digest, saturated.digest,
+        "background load must not change scheduling decisions"
+    );
+    let ratio = saturated.wall_p99_ms / idle.wall_p99_ms.max(1e-9);
+    println!("  tune-idle      wall p99: {:.3} ms", idle.wall_p99_ms);
+    println!("  tune-saturated wall p99: {:.3} ms", saturated.wall_p99_ms);
+    println!(
+        "  ratio: {ratio:.2}x (target <= 2x, no priority inversion) — {}",
+        if ratio <= 2.0 { "PASS" } else { "OVER" }
+    );
+    entries.push(entry("serve_p99_tune_idle", &idle));
+    entries.push(entry("serve_p99_tune_saturated", &saturated));
+    let mut r = Json::obj();
+    r.set("name", s("serve_p99_saturated_over_idle")).set("value", num(ratio));
+    entries.push(r);
+
+    // --- overload: tiny budgets, aggressive bursts ----------------------
+    println!("\n== serve: overload (queue_cap=2, burst=6) ==");
+    let overload_cfg = ServerConfig { queue_cap: 2, arrival_burst: 6, ..Default::default() };
+    let o = run_load(2, requests, overload_cfg, false);
+    println!(
+        "  {} served, {} rejected ({:.0}% shed), virt p99 {:.3} ms",
+        o.served,
+        o.rejected,
+        100.0 * o.rejected as f64 / (o.served + o.rejected).max(1) as f64,
+        o.virt_p99_ms
+    );
+    assert!(o.rejected > 0, "saturating bursts must trip admission control");
+    entries.push(entry("serve_overload", &o));
+
+    let path = std::env::var("RCC_BENCH_SERVE_JSON")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    match std::fs::write(&path, arr(entries).to_pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("\nfailed to write {path}: {e}"),
+    }
+}

@@ -1,0 +1,231 @@
+//! Multi-model tuning drivers: the end-to-end multi-task session behind
+//! the paper's Table 2 and the `rcc serve --tune` model fleet (one session
+//! per distinct hosted workload, pooled measurements, shared executor).
+//!
+//! Single-session mechanics — strategy dispatch, repeats, journaling, the
+//! database lifecycle — live in [`super::session`]; this module only
+//! fans sessions out and aggregates.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::db::MeasureCache;
+use crate::schedule::Schedule;
+use crate::search::SearchResult;
+use crate::tir::workload::{E2eTask, WorkloadId};
+use crate::tir::Program;
+use crate::util::executor::Executor;
+use crate::util::stats;
+
+use super::config::TuneConfig;
+use super::session::{run_session_on, run_session_on_with, SessionResult};
+
+/// End-to-end result: per-task sessions + the invocation-weighted speedup
+/// (the Table-2 metric: total model latency before vs after tuning).
+#[derive(Debug, Clone)]
+pub struct E2eResult {
+    pub tasks: Vec<(String, SessionResult)>,
+    pub total_samples: usize,
+    pub weighted_speedup: f64,
+}
+
+/// Tune every task of an end-to-end model and combine by invocation count.
+pub fn run_e2e(tasks: &[E2eTask], cfg: &TuneConfig) -> Result<E2eResult> {
+    let mut sessions = Vec::new();
+    let mut base_total = 0.0;
+    let mut opt_total = 0.0;
+    let mut total_samples = 0;
+    for task in tasks {
+        let mut task_cfg = cfg.clone();
+        // Budget splits across tasks proportional to... equal shares here;
+        // the paper tunes each extracted task with the shared budget.
+        task_cfg.budget = (cfg.budget / tasks.len()).max(10);
+        let session = run_session_on(&task.program, &task_cfg)?;
+        // Weighted latency: mean best latency per run x invocations.
+        let base = stats::mean(
+            &session.runs.iter().map(|r| r.baseline_latency).collect::<Vec<_>>(),
+        );
+        let best = stats::mean(
+            &session.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
+        );
+        base_total += base * task.invocations as f64;
+        opt_total += best * task.invocations as f64;
+        total_samples += session.runs.iter().map(|r| r.samples_used).sum::<usize>()
+            / session.runs.len().max(1);
+        sessions.push((task.program.name.clone(), session));
+    }
+    Ok(E2eResult {
+        tasks: sessions,
+        total_samples,
+        weighted_speedup: base_total / opt_total,
+    })
+}
+
+/// Outcome of a [`tune_models`] fleet: per-model sessions plus the shared
+/// measurement pool's accounting (the `rcc serve --tune` summary).
+#[derive(Debug, Clone)]
+pub struct FleetResult {
+    /// `(model, session)` pairs in input order. Models aliasing the same
+    /// workload share one session (identical program fingerprints are
+    /// tuned — and measured — exactly once per serve session).
+    pub sessions: Vec<(String, SessionResult)>,
+    /// Distinct (program fingerprint, platform) measurements in the shared
+    /// pool after the fleet: database-seeded plus newly measured.
+    pub pool_entries: usize,
+    /// Candidate evaluations across all sessions answered by the shared
+    /// pool (database warm entries or another repeat's/session's
+    /// measurement) instead of spending a hardware sample.
+    pub pooled_hits: usize,
+}
+
+/// Tune every registered model concurrently on a private executor of
+/// `base_cfg.resolved_workers()` total parallelism. See
+/// [`tune_models_on`] — the serving plane passes its own executor there so
+/// background tuning shares (and yields) the serve cores instead of
+/// spawning a second pool.
+pub fn tune_models(models: &[String], base_cfg: &TuneConfig) -> Result<FleetResult> {
+    let exec = Executor::new(base_cfg.resolved_workers());
+    tune_models_on(models, base_cfg, &exec)
+}
+
+/// Tune every registered model concurrently — one session per *distinct*
+/// workload, run as a task group on the caller's persistent `exec`. The
+/// sessions' nested parallel sites (repeats, batched evaluation) submit to
+/// the same executor, so the fleet never oversubscribes the machine the
+/// way stacked per-site pools did. Fleet tasks run at the executor's
+/// default (low) priority: when the serving plane shares the executor,
+/// serve traffic dispatched at high priority preempts tuning at every
+/// dequeue and steal site.
+///
+/// Cross-session measurement dedup: all sessions evaluate through one
+/// shared [`MeasureCache`] pool (via `MeasureCache::share`), so a program
+/// fingerprint measured by any session — or already recorded in the
+/// database — is never measured twice in a serve session. Distinct
+/// workloads produce disjoint fingerprint sets, so concurrent pooling
+/// stays deterministic; models aliasing one workload are deduplicated
+/// onto a single session outright.
+///
+/// All sessions share one tuning database path; the database's advisory
+/// file lock serializes their commits, so no session's records are lost
+/// (the serving-side "tune everything you host at once" path behind
+/// `rcc serve --tune`). Models that don't name a known workload are
+/// skipped.
+pub fn tune_models_on(
+    models: &[String],
+    base_cfg: &TuneConfig,
+    exec: &Arc<Executor>,
+) -> Result<FleetResult> {
+    let tunable: Vec<&String> = models
+        .iter()
+        .filter(|m| WorkloadId::from_name(m).is_some())
+        .collect();
+    if tunable.is_empty() {
+        return Ok(FleetResult { sessions: Vec::new(), pool_entries: 0, pooled_hits: 0 });
+    }
+    let pool = MeasureCache::new();
+    // One session per distinct workload, in first-appearance order.
+    let mut unique: Vec<&str> = Vec::new();
+    for m in &tunable {
+        if !unique.contains(&m.as_str()) {
+            unique.push(m.as_str());
+        }
+    }
+    let (pool_ref, cfg_ref) = (&pool, base_cfg);
+    let results: Vec<Result<SessionResult>> = exec.run(
+        unique
+            .iter()
+            .map(|&w| {
+                move || {
+                    let mut cfg = cfg_ref.clone();
+                    cfg.workload = w.to_string();
+                    let workload = WorkloadId::from_name(w).expect("filtered to known workloads");
+                    run_session_on_with(&workload.build(), &cfg, exec, Some(pool_ref))
+                }
+            })
+            .collect(),
+    );
+    let mut by_workload: HashMap<&str, SessionResult> = HashMap::new();
+    for (w, r) in unique.iter().copied().zip(results) {
+        by_workload.insert(w, r?);
+    }
+    // Hits are counted once per actually-run session (aliased models
+    // re-present the same session in `sessions`, they don't re-run it).
+    let pooled_hits = by_workload.values().map(|s| s.total_cache_hits()).sum();
+    let sessions: Vec<(String, SessionResult)> = tunable
+        .into_iter()
+        .map(|m| (m.clone(), by_workload[m.as_str()].clone()))
+        .collect();
+    Ok(FleetResult { sessions, pool_entries: pool.len(), pooled_hits })
+}
+
+/// Replay the best trace of a search result into a concrete program
+/// (used by `rcc show-best` and the serving annotations).
+pub fn best_program(base: &Program, result: &SearchResult) -> Program {
+    let sched = Schedule::new(base.clone());
+    let (best, _) = sched.apply_all(&result.best_trace);
+    best.current
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::config::Strategy;
+    use super::*;
+
+    fn quick_cfg(strategy: Strategy) -> TuneConfig {
+        TuneConfig {
+            strategy,
+            budget: 30,
+            repeats: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn e2e_weighted_speedup() {
+        let tasks = crate::tir::workload::llama3_e2e_test();
+        let mut cfg = quick_cfg(Strategy::LlmMcts);
+        cfg.budget = 30;
+        cfg.repeats = 1;
+        let r = run_e2e(&tasks, &cfg).unwrap();
+        assert_eq!(r.tasks.len(), 3);
+        assert!(r.weighted_speedup > 1.0, "e2e speedup {}", r.weighted_speedup);
+    }
+
+    #[test]
+    fn journal_is_rejected_for_the_serve_fleet() {
+        let pool = MeasureCache::new();
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some("/tmp/never-written.jsonl".to_string());
+        let program = WorkloadId::DeepSeekMoe.build_test();
+        let exec = Executor::new(1);
+        let err =
+            run_session_on_with(&program, &cfg, &exec, Some(&pool)).unwrap_err();
+        assert!(err.to_string().contains("serve fleet"), "{err}");
+    }
+
+    #[test]
+    fn fleet_on_shared_executor_matches_private_executor() {
+        // `tune_models` (private pool-sized executor) and `tune_models_on`
+        // (caller-owned executor, as the serving plane uses) must produce
+        // identical sessions: executor identity and width are scheduling
+        // details, never part of any result.
+        let models = vec!["deepseek_moe".to_string(), "llama4_mlp".to_string()];
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.budget = 25;
+        cfg.repeats = 1;
+        let a = tune_models(&models, &cfg).unwrap();
+        let exec = Executor::new(4);
+        let b = tune_models_on(&models, &cfg, &exec).unwrap();
+        let key = |f: &FleetResult| {
+            f.sessions
+                .iter()
+                .map(|(m, s)| {
+                    (m.clone(), s.runs.iter().map(|r| r.best_latency.to_bits()).collect::<Vec<_>>())
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(key(&a), key(&b));
+    }
+}

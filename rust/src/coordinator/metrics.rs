@@ -68,8 +68,24 @@ pub struct ModelMetrics {
     pub batches: u64,
     pub batch_latency: Summary,
     /// Per-request end-to-end latencies (seconds), reservoir-sampled for
-    /// percentiles at bounded memory.
+    /// percentiles at bounded memory. Under the simulated backend these
+    /// are *virtual* (tick-clock) latencies — deterministic per load
+    /// seed; wall-clock latencies live in `wall_latencies`.
     pub request_latencies: LatencyReservoir,
+    /// Wall-clock per-request latencies (seconds). Never part of any
+    /// determinism contract — benches read these for real throughput.
+    pub wall_latencies: LatencyReservoir,
+    /// Requests accepted by admission control.
+    pub admitted: u64,
+    /// Requests refused at the admission gate (`ServeError::Overloaded`).
+    pub rejected: u64,
+    /// Queued requests dropped for exceeding the queue-delay deadline.
+    pub evicted: u64,
+    /// Dispatches forced by the max-wait tick before `min_fill` was
+    /// reached (the drain fix: tail requests no longer wait for `drain()`).
+    pub partial_dispatches: u64,
+    /// Deepest this model's ingress queue ever got (at admission time).
+    pub queue_hwm: u64,
 }
 
 impl ModelMetrics {
@@ -82,12 +98,53 @@ impl ModelMetrics {
         }
     }
 
+    /// A request passed the admission gate with `depth` requests now queued.
+    pub fn record_admit(&mut self, depth: usize) {
+        self.admitted += 1;
+        self.queue_hwm = self.queue_hwm.max(depth as u64);
+    }
+
+    /// A request was refused at the admission gate.
+    pub fn record_reject(&mut self) {
+        self.rejected += 1;
+    }
+
+    /// A queued request was dropped for exceeding its queue-delay deadline.
+    pub fn record_evict(&mut self) {
+        self.evicted += 1;
+    }
+
+    /// One scheduling tick started `started` of this model's requests
+    /// (continuous batching: requests, not fixed batches). `partial` marks
+    /// a max-wait forced flush below the configured fill.
+    pub fn record_dispatch(&mut self, started: usize, exec_latency_s: f64, partial: bool) {
+        self.requests += started as u64;
+        self.batches += 1;
+        self.batch_latency.record(exec_latency_s);
+        if partial {
+            self.partial_dispatches += 1;
+        }
+    }
+
+    /// A request finished: `virt_latency_s` is its deterministic
+    /// tick-clock enqueue→completion latency, `wall_latency_s` the
+    /// wall-clock one.
+    pub fn record_completion(&mut self, virt_latency_s: f64, wall_latency_s: f64) {
+        self.request_latencies.record(virt_latency_s);
+        self.wall_latencies.record(wall_latency_s);
+    }
+
     pub fn p50(&self) -> f64 {
         percentile(self.request_latencies.samples(), 50.0)
     }
 
     pub fn p99(&self) -> f64 {
         percentile(self.request_latencies.samples(), 99.0)
+    }
+
+    /// Wall-clock p99 (benches only; not deterministic).
+    pub fn wall_p99(&self) -> f64 {
+        percentile(self.wall_latencies.samples(), 99.0)
     }
 
     pub fn mean_batch_size(&self) -> f64 {
@@ -121,6 +178,22 @@ impl ServerMetrics {
         self.per_model.values().map(|m| m.requests).sum()
     }
 
+    pub fn total_admitted(&self) -> u64 {
+        self.per_model.values().map(|m| m.admitted).sum()
+    }
+
+    pub fn total_rejected(&self) -> u64 {
+        self.per_model.values().map(|m| m.rejected).sum()
+    }
+
+    pub fn total_evicted(&self) -> u64 {
+        self.per_model.values().map(|m| m.evicted).sum()
+    }
+
+    pub fn total_partial_dispatches(&self) -> u64 {
+        self.per_model.values().map(|m| m.partial_dispatches).sum()
+    }
+
     pub fn throughput_rps(&self) -> f64 {
         let elapsed = self.started.elapsed().as_secs_f64();
         if elapsed <= 0.0 {
@@ -134,20 +207,30 @@ impl ServerMetrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "{:<20} {:>8} {:>8} {:>10} {:>10} {:>10}\n",
-            "model", "reqs", "batches", "mean batch", "p50 ms", "p99 ms"
+            "{:<20} {:>8} {:>8} {:>10} {:>10} {:>10} {:>8} {:>8} {:>8}\n",
+            "model", "reqs", "batches", "mean batch", "p50 ms", "p99 ms", "admit", "reject", "evict"
         ));
         for (name, m) in &self.per_model {
             out.push_str(&format!(
-                "{:<20} {:>8} {:>8} {:>10.2} {:>10.3} {:>10.3}\n",
+                "{:<20} {:>8} {:>8} {:>10.2} {:>10.3} {:>10.3} {:>8} {:>8} {:>8}\n",
                 name,
                 m.requests,
                 m.batches,
                 m.mean_batch_size(),
                 m.p50() * 1e3,
-                m.p99() * 1e3
+                m.p99() * 1e3,
+                m.admitted,
+                m.rejected,
+                m.evicted
             ));
         }
+        out.push_str(&format!(
+            "admission: admitted={} rejected={} evicted={} partial_flushes={}\n",
+            self.total_admitted(),
+            self.total_rejected(),
+            self.total_evicted(),
+            self.total_partial_dispatches()
+        ));
         out.push_str(&format!(
             "total: {} requests, {:.1} req/s\n",
             self.total_requests(),
@@ -174,6 +257,33 @@ mod tests {
         let report = m.report();
         assert!(report.contains("moe"));
         assert!(report.contains("total: 6 requests"));
+    }
+
+    #[test]
+    fn admission_counters_roll_up_into_the_report() {
+        let mut m = ServerMetrics::default();
+        m.model("moe").record_admit(3);
+        m.model("moe").record_admit(5);
+        m.model("moe").record_reject();
+        m.model("moe").record_evict();
+        m.model("moe").record_dispatch(2, 0.004, true);
+        m.model("moe").record_completion(0.004, 0.0041);
+        m.model("mlp").record_admit(1);
+        m.model("mlp").record_dispatch(1, 0.002, false);
+        let moe = &m.per_model["moe"];
+        assert_eq!(moe.admitted, 2);
+        assert_eq!(moe.rejected, 1);
+        assert_eq!(moe.evicted, 1);
+        assert_eq!(moe.partial_dispatches, 1);
+        assert_eq!(moe.queue_hwm, 5);
+        assert_eq!(moe.requests, 2);
+        assert_eq!(moe.request_latencies.seen(), 1);
+        assert_eq!(moe.wall_latencies.seen(), 1);
+        assert_eq!(m.total_admitted(), 3);
+        assert_eq!(m.total_rejected(), 1);
+        let report = m.report();
+        assert!(report.contains("admission: admitted=3 rejected=1 evicted=1 partial_flushes=1"));
+        assert!(report.contains("total: 3 requests"));
     }
 
     #[test]

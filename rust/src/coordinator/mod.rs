@@ -1,20 +1,23 @@
 //! L3 coordinator: the framework around the search — typed configuration,
 //! repeated tuning sessions with the paper's statistical protocol (which
 //! open, warm-start from and commit to the persistent tuning database),
-//! the end-to-end multi-task driver, and the dynamic-batching serving loop
-//! over PJRT executables annotated with their best-known schedules.
+//! the multi-model fleet and end-to-end drivers, and the continuous-
+//! batching serving plane with admission control over executables
+//! annotated with their best-known schedules.
 
 pub mod config;
+pub mod fleet;
 pub mod journal;
 pub mod metrics;
 pub mod registry;
 pub mod server;
+pub mod session;
 pub mod tuner;
 
 pub use config::{Strategy, TuneConfig, DEFAULT_DB_PATH};
 pub use journal::{JournalEntry, JournalHeader, SessionJournal};
 pub use registry::{Registry, RunRecord};
-pub use server::{BestSchedule, Server, ServerConfig};
+pub use server::{BestSchedule, ServeError, Server, ServerConfig};
 pub use tuner::{run_e2e, run_once, run_once_warm, run_session, run_session_on,
-    run_session_on_with, tune_models, E2eResult, FleetResult, SearchHints, SessionResult,
-    SessionTelemetry};
+    run_session_on_with, tune_models, tune_models_on, E2eResult, FleetResult, SearchHints,
+    SessionResult, SessionTelemetry};

@@ -1,21 +1,48 @@
-//! The model-serving loop (the "efficient model serving" of the title).
+//! The model-serving plane (the "efficient model serving" of the title).
 //!
-//! A dynamic-batching request server over the PJRT executables: requests
-//! queue per model; the dispatcher drains up to `max_batch` requests per
-//! model and executes them (artifact graphs are fixed-shape, so batching
-//! here means amortizing dispatch over back-to-back executions, the same
-//! way a compiled-kernel server amortizes launch overhead). The tuned
-//! schedules from the search reduce the *kernel* cost; this loop
-//! demonstrates the serving stack those kernels live in.
+//! **Continuous batching.** Instead of draining fixed batches, the server
+//! holds `max_batch` in-flight *slots* and refills them every scheduling
+//! tick: the moment a slot frees, the next admitted request takes it — a
+//! short request is never held hostage behind a long batch, because
+//! requests are admitted and retired individually (the vLLM-style
+//! in-flight batching the serving literature converged on).
+//!
+//! **Admission control.** Every model's ingress queue is bounded by an
+//! admission budget derived from its (tuned) service latency: a model
+//! whose tuned schedule runs faster earns a deeper queue for the same
+//! target queueing delay. Past the budget, [`Server::try_submit`] fails
+//! with a typed [`ServeError::Overloaded`] — backpressure, not an
+//! unbounded queue. Queued requests that exceed the optional queue-delay
+//! deadline are evicted. Slot refill walks the models round-robin from a
+//! persistent cursor, so a deep queue cannot starve its neighbors.
+//!
+//! **Two clocks.** All scheduling decisions — admission, eviction, batch
+//! composition, completion — run on a virtual tick clock, so the decision
+//! sequence and the reported per-request (virtual) latencies are
+//! bit-deterministic per load seed, independent of executor width. Wall
+//! time is measured alongside purely for throughput/latency *reporting*
+//! (benches), never consulted for a decision.
+//!
+//! Two backends share the machinery: the PJRT [`Runtime`] over built
+//! artifacts (`--features xla`), and a simulated backend
+//! ([`Server::start_sim`]) whose per-model service times come from the
+//! cost simulator — so the full serving plane (and its tests/benches)
+//! runs without artifacts, and execution can be fanned onto the shared
+//! [`Executor`] at high priority to preempt background tuning.
 
 use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::cost::simulator::simulate;
+use crate::cost::Platform;
 use crate::db::Database;
 use crate::obs;
 use crate::runtime::{Manifest, Runtime};
+use crate::tir::workload::WorkloadId;
+use crate::util::executor::{Executor, Priority};
 use crate::util::rng::Pcg;
 
 use super::metrics::ServerMetrics;
@@ -34,63 +61,246 @@ pub struct BestSchedule {
     pub trace_len: usize,
 }
 
-/// One inference request.
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub model: String,
-    pub seed: u64,
-    pub arrived: Instant,
+/// Typed admission failures — the backpressure surface of the server.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The model is not registered with this server.
+    UnknownModel(String),
+    /// The model's ingress queue is at its admission budget; the caller
+    /// should back off (or shed) rather than queue unboundedly.
+    Overloaded { model: String, depth: usize },
 }
 
-/// Dynamic-batching configuration.
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::UnknownModel(m) => write!(f, "unknown model {m}"),
+            ServeError::Overloaded { model, depth } => {
+                write!(f, "overloaded: {model} queue at admission budget ({depth} queued)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Serving-plane configuration.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// In-flight request slots (the continuous batch's width).
     pub max_batch: usize,
+    /// Hard upper bound on any model's admission budget (and thus on every
+    /// ingress queue) — nothing in the server grows past this.
+    pub queue_cap: usize,
+    /// Minimum queued requests before a slot is taken (amortization
+    /// threshold; 1 = dispatch immediately).
+    pub min_fill: usize,
+    /// Ticks after which a waiting request dispatches even below
+    /// `min_fill` (the drain fix: tail requests never wait for `drain()`).
+    pub max_wait_ticks: u64,
+    /// Evict a queued request older than this many ticks (0 = never).
+    pub max_queue_ticks: u64,
+    /// Target queueing delay, in ticks, that admission budgets are derived
+    /// from: `budget = clamp(target_delay_ticks / service_ticks, 1,
+    /// queue_cap)` — faster (tuned) models earn deeper queues.
+    pub target_delay_ticks: u64,
+    /// Load generator: max arrivals per tick (open loop, uniform 0..=N).
+    pub arrival_burst: usize,
+    /// Seconds per virtual tick; 0.0 = auto (half the fastest model's
+    /// simulated latency, so the fastest model takes 2 ticks).
+    pub tick_s: f64,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8 }
+        ServerConfig {
+            max_batch: 8,
+            queue_cap: 64,
+            min_fill: 1,
+            max_wait_ticks: 4,
+            max_queue_ticks: 0,
+            target_delay_ticks: 64,
+            arrival_burst: 2,
+            tick_s: 0.0,
+        }
     }
 }
 
-/// The serving engine: compiled executables + per-model request queues.
+/// A request waiting in a model's ingress queue.
+#[derive(Debug, Clone)]
+struct Queued {
+    seed: u64,
+    enqueued: u64,
+    arrived: Instant,
+}
+
+/// A request occupying an in-flight batch slot.
+#[derive(Debug, Clone)]
+struct Slot {
+    model: String,
+    seed: u64,
+    enqueued: u64,
+    arrived: Instant,
+    /// Tick at which this request completes and frees the slot.
+    finish: u64,
+}
+
+enum Backend {
+    /// PJRT executables over built artifacts; requests execute inline at
+    /// dispatch (service occupies one tick).
+    Runtime(Runtime),
+    /// Cost-simulator service times; optional calibrated busy work fans
+    /// onto the shared executor at high priority.
+    Sim,
+}
+
+/// Calibrated busy work for the simulated backend and the serve benches:
+/// `units` dependent multiply-adds the optimizer cannot elide.
+pub fn synthetic_work(units: u64) -> u64 {
+    let mut acc = 0u64;
+    for i in 0..units {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    std::hint::black_box(acc)
+}
+
+/// The serving engine: per-model bounded ingress queues feeding a
+/// continuously-batched slot pool.
 pub struct Server {
-    runtime: Runtime,
-    queues: std::collections::BTreeMap<String, VecDeque<Request>>,
+    backend: Backend,
     pub metrics: ServerMetrics,
     pub config: ServerConfig,
+    /// Registered models, sorted — the round-robin universe.
+    models: Vec<String>,
+    queues: BTreeMap<String, VecDeque<Queued>>,
+    /// Simulated base latency (seconds) per model, where known.
+    base_latency: BTreeMap<String, f64>,
+    /// Service time in ticks per model (≥ 1), after tuning annotations.
+    service_ticks: BTreeMap<String, u64>,
+    /// Admission budget (max queue depth) per model.
+    budgets: BTreeMap<String, usize>,
+    /// In-flight slots (`None` = free).
+    slots: Vec<Option<Slot>>,
+    /// Virtual tick clock.
+    now: u64,
+    /// Round-robin refill cursor into `models`.
+    rr: usize,
+    /// Resolved seconds per tick.
+    tick_s: f64,
     /// Best-known tuned schedule per model, populated by
     /// [`Server::attach_tuning_db`].
     best_known: BTreeMap<String, BestSchedule>,
+    /// Shared executor for simulated execution (high-priority dispatch).
+    exec: Option<Arc<Executor>>,
+    /// Busy-work units per service tick on the simulated backend.
+    spin_work: u64,
 }
 
 impl Server {
-    /// Load every artifact and stand up the server.
+    /// Load every artifact and stand up the server on the PJRT runtime.
     pub fn start(manifest: &Manifest, config: ServerConfig) -> Result<Server> {
         let mut runtime = Runtime::cpu()?;
         runtime.load_all(manifest)?;
-        let queues = manifest
-            .artifacts
-            .keys()
-            .map(|k| (k.clone(), VecDeque::new()))
-            .collect();
-        Ok(Server {
-            runtime,
-            queues,
+        let models: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        Server::build(Backend::Runtime(runtime), models, config)
+    }
+
+    /// Stand up the server on the simulated backend: every model must name
+    /// a known workload; its service time comes from the cost simulator.
+    /// This is the artifact-free path behind `rcc serve --sim`, the tests
+    /// and the benches.
+    pub fn start_sim(models: &[String], config: ServerConfig) -> Result<Server> {
+        for m in models {
+            if WorkloadId::from_name(m).is_none() {
+                return Err(ServeError::UnknownModel(m.clone()).into());
+            }
+        }
+        Server::build(Backend::Sim, models.to_vec(), config)
+    }
+
+    fn build(backend: Backend, mut models: Vec<String>, config: ServerConfig) -> Result<Server> {
+        models.sort();
+        models.dedup();
+        let platform = Platform::by_name("core_i9").expect("stock platform");
+        let mut base_latency = BTreeMap::new();
+        for m in &models {
+            if let Some(w) = WorkloadId::from_name(m) {
+                // Seed 0 is the noise-free simulation: a pure function of
+                // the program structure, so service times are stable.
+                base_latency.insert(m.clone(), simulate(&w.build(), &platform, 0));
+            }
+        }
+        let min_base = base_latency.values().cloned().fold(f64::INFINITY, f64::min);
+        let tick_s = if config.tick_s > 0.0 {
+            config.tick_s
+        } else if min_base.is_finite() {
+            min_base / 2.0
+        } else {
+            1e-3
+        };
+        let slots = vec![None; config.max_batch.max(1)];
+        let queues = models.iter().map(|m| (m.clone(), VecDeque::new())).collect();
+        let mut server = Server {
+            backend,
             metrics: ServerMetrics::default(),
             config,
+            models,
+            queues,
+            base_latency,
+            service_ticks: BTreeMap::new(),
+            budgets: BTreeMap::new(),
+            slots,
+            now: 0,
+            rr: 0,
+            tick_s,
             best_known: BTreeMap::new(),
-        })
+            exec: None,
+            spin_work: 0,
+        };
+        server.recompute_schedule_params();
+        Ok(server)
+    }
+
+    /// Fan simulated execution onto `exec` as high-priority tasks
+    /// (`spin_work` busy units per service tick): serve traffic then
+    /// preempts any low-priority background tuning sharing the executor.
+    pub fn with_executor(mut self, exec: Arc<Executor>, spin_work: u64) -> Server {
+        self.exec = Some(exec);
+        self.spin_work = spin_work;
+        self
+    }
+
+    /// Derive per-model service ticks and admission budgets from the
+    /// (possibly tuned) latencies.
+    fn recompute_schedule_params(&mut self) {
+        for m in &self.models {
+            let ticks = match self.base_latency.get(m) {
+                Some(base) => {
+                    let eff = match self.best_known.get(m) {
+                        Some(b) if b.speedup > 0.0 => base / b.speedup,
+                        _ => *base,
+                    };
+                    ((eff / self.tick_s).round() as u64).max(1)
+                }
+                // Runtime artifacts without a workload mapping execute
+                // inline: one tick of service.
+                None => 1,
+            };
+            self.service_ticks.insert(m.clone(), ticks);
+            let budget = (self.config.target_delay_ticks / ticks)
+                .clamp(1, self.config.queue_cap as u64) as usize;
+            self.budgets.insert(m.clone(), budget);
+        }
     }
 
     /// Attach the tuning database: every served model with a recorded run
-    /// gets annotated with its best-known schedule (the serving half of
-    /// "never pay for the same measurement twice"). Returns how many models
-    /// matched a record.
+    /// gets annotated with its best-known schedule, and admission budgets
+    /// are re-derived from the tuned latencies (a faster tuned schedule
+    /// earns a deeper queue for the same target delay). Returns how many
+    /// models matched a record.
     pub fn attach_tuning_db(&mut self, db: &Database) -> usize {
         let mut n = 0;
-        for model in self.queues.keys() {
+        for model in &self.models {
             if let Some(rec) = db.best_for_workload(model) {
                 self.best_known.insert(
                     model.clone(),
@@ -104,6 +314,7 @@ impl Server {
                 n += 1;
             }
         }
+        self.recompute_schedule_params();
         n
     }
 
@@ -116,7 +327,7 @@ impl Server {
     /// one) — printed by `rcc serve`.
     pub fn schedule_summary(&self) -> String {
         let mut out = String::new();
-        for model in self.queues.keys() {
+        for model in &self.models {
             match self.best_known.get(model) {
                 Some(b) => out.push_str(&format!(
                     "{:<18} {:>6.2}x via {} on {} ({} transforms)\n",
@@ -128,89 +339,229 @@ impl Server {
         out
     }
 
-    /// Enqueue a request.
-    pub fn submit(&mut self, model: &str, seed: u64) -> Result<()> {
-        let q = self
-            .queues
-            .get_mut(model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model {model}"))?;
-        q.push_back(Request {
-            model: model.to_string(),
-            seed,
-            arrived: Instant::now(),
-        });
-        obs::instant(obs::EventKind::ServeEnqueue, q.len() as u64);
+    /// Enqueue a request through admission control. `Err(Overloaded)` is
+    /// the backpressure signal: the queue is at the model's admission
+    /// budget and the request was *not* queued.
+    pub fn try_submit(&mut self, model: &str, seed: u64) -> Result<(), ServeError> {
+        let budget = *self
+            .budgets
+            .get(model)
+            .ok_or_else(|| ServeError::UnknownModel(model.to_string()))?;
+        let q = self.queues.get_mut(model).expect("budget implies queue");
+        let depth = q.len();
+        if depth >= budget {
+            self.metrics.model(model).record_reject();
+            obs::instant2(obs::EventKind::ServeEnqueue, depth as u64, 0);
+            return Err(ServeError::Overloaded { model: model.to_string(), depth });
+        }
+        q.push_back(Queued { seed, enqueued: self.now, arrived: Instant::now() });
+        self.metrics.model(model).record_admit(depth + 1);
+        obs::instant2(obs::EventKind::ServeEnqueue, depth as u64 + 1, 1);
         Ok(())
     }
 
+    /// [`Server::try_submit`] for callers that treat rejection as fatal.
+    pub fn submit(&mut self, model: &str, seed: u64) -> Result<()> {
+        self.try_submit(model, seed).map_err(Into::into)
+    }
+
+    /// Requests waiting in ingress queues (bounded by budgets).
     pub fn pending(&self) -> usize {
         self.queues.values().map(|q| q.len()).sum()
     }
 
-    /// Drain one batch from the deepest queue; returns the number of
-    /// requests served (0 when idle).
+    /// Requests occupying in-flight slots.
+    pub fn in_flight(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Current virtual tick.
+    pub fn now(&self) -> u64 {
+        self.now
+    }
+
+    /// Service time in ticks for a model.
+    pub fn service_ticks(&self, model: &str) -> Option<u64> {
+        self.service_ticks.get(model).copied()
+    }
+
+    /// Admission budget (max queue depth) for a model.
+    pub fn budget(&self, model: &str) -> Option<usize> {
+        self.budgets.get(model).copied()
+    }
+
+    /// Override a model's service time (experiments/tests); re-derives its
+    /// admission budget.
+    pub fn set_service_ticks(&mut self, model: &str, ticks: u64) -> Result<(), ServeError> {
+        if !self.service_ticks.contains_key(model) {
+            return Err(ServeError::UnknownModel(model.to_string()));
+        }
+        let ticks = ticks.max(1);
+        self.service_ticks.insert(model.to_string(), ticks);
+        let budget = (self.config.target_delay_ticks / ticks)
+            .clamp(1, self.config.queue_cap as u64) as usize;
+        self.budgets.insert(model.to_string(), budget);
+        Ok(())
+    }
+
+    /// One scheduling tick: retire finished slots, evict deadline-expired
+    /// queue entries, refill free slots round-robin, execute what started.
+    /// Returns the number of requests that *completed* this tick.
     pub fn step(&mut self) -> Result<usize> {
-        let Some((model, _)) = self
-            .queues
-            .iter()
-            .filter(|(_, q)| !q.is_empty())
-            .max_by_key(|(_, q)| q.len())
-            .map(|(k, q)| (k.clone(), q.len()))
-        else {
-            return Ok(0);
-        };
-        let batch: Vec<Request> = {
-            let q = self.queues.get_mut(&model).unwrap();
-            let n = q.len().min(self.config.max_batch);
-            q.drain(..n).collect()
-        };
-        let exe = self
-            .runtime
-            .get(&model)
-            .ok_or_else(|| anyhow::anyhow!("{model} not loaded"))?;
+        self.now += 1;
 
-        let _sp = obs::span(obs::EventKind::ServeBatch, batch.len() as u64);
-        let t0 = Instant::now();
-        for req in &batch {
-            let inputs = exe.random_inputs(req.seed);
-            let out = exe.run(&inputs)?;
-            debug_assert!(out.outputs[0].iter().all(|x| x.is_finite()));
-        }
-        let exec_latency = t0.elapsed().as_secs_f64();
-
-        let waits: Vec<f64> = batch
-            .iter()
-            .map(|r| r.arrived.elapsed().as_secs_f64() - exec_latency)
-            .map(|w| w.max(0.0))
-            .collect();
-        self.metrics
-            .model(&model)
-            .record_batch(batch.len(), exec_latency, &waits);
-        Ok(batch.len())
-    }
-
-    /// Run until all queues drain.
-    pub fn drain(&mut self) -> Result<u64> {
-        let mut served = 0u64;
-        while self.pending() > 0 {
-            served += self.step()? as u64;
-        }
-        Ok(served)
-    }
-
-    /// Drive a synthetic open-loop workload: `total` requests spread over
-    /// the loaded models (weighted toward the first ones), serving as they
-    /// arrive — the demo behind `rcc serve` and `examples/serve_llama.rs`.
-    pub fn run_synthetic(&mut self, total: usize, seed: u64) -> Result<()> {
-        let models: Vec<String> = self.queues.keys().cloned().collect();
-        let mut rng = Pcg::new(seed);
-        for i in 0..total {
-            let m = &models[rng.gen_range(models.len())];
-            self.submit(m, i as u64)?;
-            // Keep queues bounded: serve a batch every few arrivals.
-            if i % 4 == 3 {
-                self.step()?;
+        // 1. Retire: every slot whose service finished frees immediately —
+        //    the next admitted request takes it this same tick.
+        let mut completed = 0usize;
+        for slot in &mut self.slots {
+            if let Some(s) = slot {
+                if s.finish <= self.now {
+                    let virt = (s.finish - s.enqueued) as f64 * self.tick_s;
+                    let wall = s.arrived.elapsed().as_secs_f64();
+                    self.metrics.model(&s.model).record_completion(virt, wall);
+                    *slot = None;
+                    completed += 1;
+                }
             }
+        }
+
+        // 2. Evict queue entries past the queueing-delay deadline.
+        if self.config.max_queue_ticks > 0 {
+            for m in &self.models {
+                let q = self.queues.get_mut(m).expect("registered");
+                while let Some(front) = q.front() {
+                    if self.now.saturating_sub(front.enqueued) > self.config.max_queue_ticks {
+                        q.pop_front();
+                        self.metrics.model(m).record_evict();
+                    } else {
+                        break;
+                    }
+                }
+            }
+        }
+
+        // 3. Refill free slots round-robin across models from the
+        //    persistent cursor: one request per model per pass, so no
+        //    model's deep queue starves the others.
+        let mut started: BTreeMap<String, (usize, bool)> = BTreeMap::new();
+        let mut new_slots: Vec<usize> = Vec::new();
+        let free: Vec<usize> =
+            (0..self.slots.len()).filter(|&i| self.slots[i].is_none()).collect();
+        let n_models = self.models.len();
+        let mut scanned_without_take = 0usize;
+        let mut free_iter = free.into_iter();
+        let mut next_free = free_iter.next();
+        while let Some(slot_idx) = next_free {
+            if n_models == 0 || scanned_without_take >= n_models {
+                break; // full pass with nothing eligible
+            }
+            let model = self.models[self.rr % n_models].clone();
+            self.rr = (self.rr + 1) % n_models;
+            let ticks = self.service_ticks[&model];
+            let q = self.queues.get_mut(&model).expect("registered");
+            let eligible = q.front().map_or(false, |front| {
+                q.len() >= self.config.min_fill
+                    || self.now.saturating_sub(front.enqueued) >= self.config.max_wait_ticks
+            });
+            if !eligible {
+                scanned_without_take += 1;
+                continue;
+            }
+            // A take below `min_fill` is a max-wait forced flush: count it
+            // (once per model per tick) so the drain fix is observable.
+            let partial = q.len() < self.config.min_fill;
+            let req = q.pop_front().expect("eligible implies non-empty");
+            self.slots[slot_idx] = Some(Slot {
+                model: model.clone(),
+                seed: req.seed,
+                enqueued: req.enqueued,
+                arrived: req.arrived,
+                finish: self.now + ticks,
+            });
+            new_slots.push(slot_idx);
+            let e = started.entry(model).or_insert((0, false));
+            e.0 += 1;
+            e.1 |= partial;
+            scanned_without_take = 0;
+            next_free = free_iter.next();
+        }
+
+        // 4. Execute what started this tick.
+        let total_started: usize = started.values().map(|(n, _)| n).sum();
+        if total_started > 0 {
+            let occupancy = self.in_flight() as u64;
+            let _sp = obs::span2(obs::EventKind::ServeBatch, total_started as u64, occupancy);
+            let t0 = Instant::now();
+            match &self.backend {
+                Backend::Runtime(rt) => {
+                    for &i in &new_slots {
+                        let s = self.slots[i].as_ref().expect("just filled");
+                        let exe = rt
+                            .get(&s.model)
+                            .ok_or_else(|| anyhow::anyhow!("{} not loaded", s.model))?;
+                        let inputs = exe.random_inputs(s.seed);
+                        let out = exe.run(&inputs)?;
+                        debug_assert!(out.outputs[0].iter().all(|x| x.is_finite()));
+                    }
+                }
+                Backend::Sim => {
+                    if let (Some(exec), true) = (&self.exec, self.spin_work > 0) {
+                        // One high-priority task per started request,
+                        // scaled by its service time: serve work preempts
+                        // background tuning at every dequeue/steal site.
+                        let tasks: Vec<_> = new_slots
+                            .iter()
+                            .map(|&i| {
+                                let s = self.slots[i].as_ref().expect("just filled");
+                                let units = self.spin_work * self.service_ticks[&s.model];
+                                move || synthetic_work(units)
+                            })
+                            .collect();
+                        exec.run_with(Priority::High, tasks);
+                    }
+                }
+            }
+            let exec_latency = t0.elapsed().as_secs_f64();
+            for (model, (n, partial)) in &started {
+                self.metrics.model(model).record_dispatch(*n, exec_latency, *partial);
+            }
+        }
+        Ok(completed)
+    }
+
+    /// Tick until every queue and slot is empty; returns requests completed.
+    pub fn drain(&mut self) -> Result<u64> {
+        let mut completed = 0u64;
+        while self.pending() > 0 || self.in_flight() > 0 {
+            completed += self.step()? as u64;
+        }
+        Ok(completed)
+    }
+
+    /// Drive a seeded open-loop workload: up to `arrival_burst` arrivals
+    /// per tick across the registered models, overload rejections counted
+    /// (not fatal), one scheduling tick per arrival burst, then a full
+    /// drain (tail requests flush via `max_wait_ticks`, not the drain).
+    /// The arrival sequence — and with it every admission, eviction and
+    /// batch-composition decision — is a pure function of `seed`.
+    pub fn run_synthetic(&mut self, total: usize, seed: u64) -> Result<()> {
+        let models = self.models.clone();
+        let mut rng = Pcg::new(seed);
+        let mut issued = 0usize;
+        while issued < total {
+            let burst = rng.gen_range(self.config.arrival_burst + 1);
+            for _ in 0..burst {
+                if issued >= total {
+                    break;
+                }
+                let m = &models[rng.gen_range(models.len())];
+                match self.try_submit(m, issued as u64) {
+                    Ok(()) | Err(ServeError::Overloaded { .. }) => {}
+                    Err(e) => return Err(e.into()),
+                }
+                issued += 1;
+            }
+            self.step()?;
         }
         self.drain()?;
         Ok(())
@@ -221,51 +572,121 @@ impl Server {
 mod tests {
     use super::*;
 
-    fn manifest() -> Option<Manifest> {
-        Manifest::discover().ok()
+    fn sim_models(names: &[&str]) -> Vec<String> {
+        names.iter().map(|s| s.to_string()).collect()
     }
 
     #[test]
-    fn serves_batches_and_tracks_metrics() {
-        let Some(m) = manifest() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        if !cfg!(feature = "xla") {
-            eprintln!("skipping: built without the xla feature");
-            return;
-        }
-        let mut server = Server::start(&m, ServerConfig { max_batch: 4 }).unwrap();
+    fn sim_server_serves_and_completes() {
+        // Generous target delay so both models' budgets cover the burst
+        // regardless of their relative simulated latencies.
+        let cfg = ServerConfig { target_delay_ticks: 4096, ..ServerConfig::default() };
+        let mut server =
+            Server::start_sim(&sim_models(&["deepseek_moe", "llama4_mlp"]), cfg).unwrap();
         for i in 0..10 {
-            server.submit("deepseek_moe", i).unwrap();
+            let m = if i % 2 == 0 { "deepseek_moe" } else { "llama4_mlp" };
+            server.try_submit(m, i).unwrap();
         }
-        let served = server.drain().unwrap();
-        assert_eq!(served, 10);
-        let mm = &server.metrics.per_model["deepseek_moe"];
-        assert_eq!(mm.requests, 10);
-        assert!(mm.batches >= 3); // 4+4+2
-        assert!(mm.p50() > 0.0);
-    }
-
-    #[test]
-    fn unknown_model_rejected() {
-        let Some(m) = manifest() else { return };
-        if !cfg!(feature = "xla") {
-            return;
-        }
-        let mut server = Server::start(&m, ServerConfig::default()).unwrap();
-        assert!(server.submit("nope", 0).is_err());
-    }
-
-    #[test]
-    fn synthetic_workload_drains() {
-        let Some(m) = manifest() else { return };
-        if !cfg!(feature = "xla") {
-            return;
-        }
-        let mut server = Server::start(&m, ServerConfig::default()).unwrap();
-        server.run_synthetic(12, 3).unwrap();
+        let completed = server.drain().unwrap();
+        assert_eq!(completed, 10);
         assert_eq!(server.pending(), 0);
-        assert_eq!(server.metrics.total_requests(), 12);
+        assert_eq!(server.in_flight(), 0);
+        assert_eq!(server.metrics.total_requests(), 10);
+        let mm = &server.metrics.per_model["deepseek_moe"];
+        assert_eq!(mm.admitted, 5);
+        assert!(mm.batches > 0);
+        assert!(mm.p50() > 0.0, "virtual latencies recorded");
+    }
+
+    #[test]
+    fn unknown_model_is_a_typed_error() {
+        let mut server =
+            Server::start_sim(&sim_models(&["deepseek_moe"]), ServerConfig::default()).unwrap();
+        assert_eq!(
+            server.try_submit("nope", 0),
+            Err(ServeError::UnknownModel("nope".to_string()))
+        );
+        assert!(Server::start_sim(&sim_models(&["nope"]), ServerConfig::default()).is_err());
+    }
+
+    #[test]
+    fn overload_rejects_with_typed_error_and_bounded_queue() {
+        let cfg = ServerConfig { queue_cap: 4, ..ServerConfig::default() };
+        let mut server = Server::start_sim(&sim_models(&["deepseek_moe"]), cfg).unwrap();
+        // Budget clamps to queue_cap: 4 admitted, the rest backpressured.
+        let mut rejected = 0;
+        for i in 0..10 {
+            match server.try_submit("deepseek_moe", i) {
+                Ok(()) => {}
+                Err(ServeError::Overloaded { depth, .. }) => {
+                    assert_eq!(depth, 4);
+                    rejected += 1;
+                }
+                Err(e) => panic!("unexpected {e}"),
+            }
+        }
+        assert_eq!(rejected, 6);
+        assert_eq!(server.pending(), 4, "queue never exceeds the budget");
+        let mm = &server.metrics.per_model["deepseek_moe"];
+        assert_eq!(mm.admitted, 4);
+        assert_eq!(mm.rejected, 6);
+        assert_eq!(mm.queue_hwm, 4);
+    }
+
+    #[test]
+    fn refill_is_round_robin_fair_across_models() {
+        let cfg = ServerConfig { max_batch: 2, ..ServerConfig::default() };
+        let mut server =
+            Server::start_sim(&sim_models(&["deepseek_moe", "llama4_mlp"]), cfg).unwrap();
+        server.set_service_ticks("deepseek_moe", 4).unwrap();
+        server.set_service_ticks("llama4_mlp", 4).unwrap();
+        for i in 0..8 {
+            server.try_submit("deepseek_moe", i).unwrap();
+        }
+        for i in 0..2 {
+            server.try_submit("llama4_mlp", 100 + i).unwrap();
+        }
+        server.step().unwrap();
+        // Two slots, two models: one each, despite the 8-deep moe queue.
+        assert_eq!(server.metrics.per_model["deepseek_moe"].requests, 1);
+        assert_eq!(server.metrics.per_model["llama4_mlp"].requests, 1);
+    }
+
+    #[test]
+    fn max_wait_flushes_partial_batches() {
+        // min_fill 4 but only 2 requests ever arrive: without the max-wait
+        // tick they would sit until drain(); with it they dispatch (and
+        // the forced flush is counted).
+        let cfg = ServerConfig { min_fill: 4, max_wait_ticks: 3, ..ServerConfig::default() };
+        let mut server = Server::start_sim(&sim_models(&["deepseek_moe"]), cfg).unwrap();
+        server.try_submit("deepseek_moe", 0).unwrap();
+        server.try_submit("deepseek_moe", 1).unwrap();
+        for _ in 0..2 {
+            server.step().unwrap();
+            assert_eq!(server.metrics.per_model["deepseek_moe"].requests, 0, "below min_fill");
+        }
+        server.step().unwrap(); // wait ≥ max_wait_ticks: forced flush
+        let mm = &server.metrics.per_model["deepseek_moe"];
+        assert_eq!(mm.requests, 2);
+        assert!(mm.partial_dispatches >= 1, "forced flush is counted");
+        server.drain().unwrap();
+        assert_eq!(server.metrics.per_model["deepseek_moe"].request_latencies.seen(), 2);
+    }
+
+    #[test]
+    fn deadline_evicts_stale_queue_entries() {
+        // One slot, long service: the queue backs up and entries past the
+        // deadline are evicted rather than served arbitrarily late.
+        let cfg = ServerConfig { max_batch: 1, max_queue_ticks: 3, ..ServerConfig::default() };
+        let mut server = Server::start_sim(&sim_models(&["deepseek_moe"]), cfg).unwrap();
+        server.set_service_ticks("deepseek_moe", 10).unwrap();
+        for i in 0..5 {
+            server.try_submit("deepseek_moe", i).unwrap();
+        }
+        server.drain().unwrap();
+        let mm = &server.metrics.per_model["deepseek_moe"];
+        assert!(mm.evicted > 0, "stale entries evicted");
+        assert_eq!(mm.admitted, 5);
+        assert_eq!(mm.requests as u64 + mm.evicted, 5, "every request served or evicted");
     }
 }

@@ -1,0 +1,920 @@
+//! Single tuning sessions: strategy dispatch, repeated (multi-seed) runs
+//! with the paper's mean-of-20 protocol, parallel execution across
+//! repeats, crash-safe journaling/resume, and the session-level
+//! open/commit lifecycle of the persistent tuning database.
+//!
+//! The multi-model drivers (the `rcc serve --tune` fleet and the
+//! end-to-end task set) live in [`super::fleet`]; this module owns
+//! everything from one `(workload, platform)` pair down.
+//!
+//! Every parallel site here — the session's repeats and each repeat's
+//! batched evaluation — runs as task groups on **one** persistent
+//! [`Executor`] sized by `TuneConfig::workers`. Nested sites share that
+//! single core budget (waiting submitters help run queued tasks) instead
+//! of multiplying per-site thread pools into `workers²` threads.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cost::{AnalysisCache, CalibrationStats, HardwareModel, Platform, SurrogateModel};
+use crate::db::{workload_fingerprint, Database, MeasureCache, TuningRecord, WarmStart};
+use crate::obs;
+use crate::reasoning::{CostTracker, LlmPolicy, ModelProfile, SimulatedLlm};
+use crate::search::{
+    EvoConfig, EvolutionaryStrategy, MctsConfig, MctsStrategy, RandomPolicy, SearchContext,
+    SearchResult, SearchStrategy,
+};
+use crate::tir::workload::WorkloadId;
+use crate::tir::Program;
+use crate::transfer::{self, Exemplar};
+use crate::util::executor::Executor;
+use crate::util::faults;
+use crate::util::json::{self, Json};
+use crate::util::stats;
+
+use super::config::{Strategy, TuneConfig};
+use super::journal::{JournalEntry, JournalHeader, SessionJournal};
+
+/// Database-derived hints shared by every repeat of a session: warm-start
+/// traces plus a measurement cache pre-populated with known costs. Each run
+/// clones the cache (runs are independent; counters are per-run) unless the
+/// session opts into `share_repeat_cache`. With transfer tuning enabled the
+/// warm traces also include rebased cross-workload records, and
+/// `exemplars` feeds the LLM proposal policy's few-shot context.
+#[derive(Debug, Clone, Default)]
+pub struct SearchHints {
+    pub warm: WarmStart,
+    pub cache: MeasureCache,
+    /// Few-shot exemplars from structurally similar workloads (transfer
+    /// subsystem); only the LLM strategy consumes these.
+    pub exemplars: Vec<Exemplar>,
+}
+
+/// Observability snapshot of one tuning session: this session's share of
+/// the process-wide per-phase time aggregates plus executor counters,
+/// captured as before/after deltas around the repeats. Phase rows populate
+/// only while tracing is enabled (`--trace` / `RCC_TRACE`); the executor
+/// counters are always on. Pure telemetry — never part of any result
+/// comparison, so tracing on/off cannot perturb determinism contracts.
+#[derive(Debug, Clone, Default)]
+pub struct SessionTelemetry {
+    /// `(phase name, stat)` rows for phases that recorded at least once.
+    pub phases: Vec<(String, obs::PhaseStat)>,
+    pub exec: obs::ExecCounters,
+    /// Cost-model calibration: surrogate predictions vs measured latencies,
+    /// aggregated over every repeat of the session. Always on (the pairs
+    /// exist regardless of tracing); empty only when nothing was measured.
+    pub calibration: CalibrationStats,
+    /// Trace events lost to per-thread ring overwrites during this
+    /// session's window (0 unless tracing is enabled and overran a ring).
+    pub dropped_events: u64,
+}
+
+impl SessionTelemetry {
+    /// Delta between two snapshots taken around the reported body of work
+    /// (a session's repeats, a serve fleet, ...). `dropped0` is the ring
+    /// overwrite counter at the start of the window.
+    pub fn capture(
+        phases0: &obs::PhaseTotals,
+        exec0: &obs::ExecCounters,
+        dropped0: u64,
+    ) -> SessionTelemetry {
+        SessionTelemetry {
+            phases: obs::phase_totals()
+                .delta_since(phases0)
+                .nonzero()
+                .into_iter()
+                .map(|(k, s)| (k.name().to_string(), s))
+                .collect(),
+            exec: obs::exec_counters().delta_since(exec0),
+            calibration: CalibrationStats::default(),
+            dropped_events: obs::dropped().saturating_sub(dropped0),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+            && self.exec == obs::ExecCounters::default()
+            && self.calibration.is_empty()
+            && self.dropped_events == 0
+    }
+
+    /// JSON block for the session report (`Registry::record`).
+    pub fn to_json(&self) -> Json {
+        let mut phases = Json::obj();
+        for (name, s) in &self.phases {
+            let mut row = Json::obj();
+            row.set("count", json::num(s.count as f64));
+            row.set("total_ms", json::num(s.total_ns as f64 / 1e6));
+            phases.set(name, row);
+        }
+        let mut exec = Json::obj();
+        exec.set("own_pops", json::num(self.exec.own_pops as f64));
+        exec.set("steals", json::num(self.exec.steals as f64));
+        exec.set("help_steals", json::num(self.exec.help_steals as f64));
+        exec.set("idle_wakeups", json::num(self.exec.idle_wakeups as f64));
+        exec.set("queue_hwm", json::num(self.exec.queue_hwm as f64));
+        let mut doc = Json::obj();
+        doc.set("phases", phases);
+        doc.set("executor", exec);
+        doc.set("calibration", self.calibration.to_json());
+        doc.set("dropped_events", json::num(self.dropped_events as f64));
+        doc
+    }
+
+    /// Human block for `rcc tune` / `rcc serve --tune` summaries.
+    pub fn render(&self) -> String {
+        let mut out = String::from("telemetry:\n");
+        if self.phases.is_empty() {
+            out.push_str("  (no phase spans; enable with --trace or RCC_TRACE)\n");
+        }
+        for (name, s) in &self.phases {
+            out.push_str(&format!(
+                "  {:<12} {:>7} x {:>10.3} ms\n",
+                name,
+                s.count,
+                s.total_ns as f64 / 1e6
+            ));
+        }
+        out.push_str(&format!("  {}\n", self.exec.render_line()));
+        if !self.calibration.is_empty() {
+            out.push_str(&format!("  {}\n", self.calibration.render_line()));
+        }
+        if self.dropped_events > 0 {
+            out.push_str(&format!(
+                "  warning: {} trace event(s) lost to ring overwrites\n",
+                self.dropped_events
+            ));
+        }
+        out
+    }
+}
+
+/// Outcome of a repeated tuning session on one (workload, platform).
+#[derive(Debug, Clone)]
+pub struct SessionResult {
+    pub config_strategy: Strategy,
+    pub workload: String,
+    pub platform: String,
+    pub runs: Vec<SearchResult>,
+    /// Aggregated LLM accounting over the repeats (llm_mcts only).
+    pub llm_costs: CostTracker,
+    pub llm_fallback_rate: f64,
+    /// Repeats replayed verbatim from a `--resume` journal instead of
+    /// being re-run (0 for a fresh session).
+    pub resumed_repeats: usize,
+    /// Observability counters scoped to this session.
+    pub telemetry: SessionTelemetry,
+}
+
+impl SessionResult {
+    /// Mean best speedup across repeats.
+    pub fn mean_speedup(&self) -> f64 {
+        stats::mean(&self.runs.iter().map(|r| r.best_speedup()).collect::<Vec<_>>())
+    }
+
+    /// Mean best speedup within the first `samples` measurements.
+    pub fn mean_speedup_at(&self, samples: usize) -> f64 {
+        stats::mean(
+            &self
+                .runs
+                .iter()
+                .map(|r| r.speedup_at(samples))
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Mean samples needed to reach `target` speedup (runs that never reach
+    /// it count as their full budget).
+    pub fn mean_samples_to(&self, target: f64) -> f64 {
+        stats::mean(
+            &self
+                .runs
+                .iter()
+                .map(|r| r.samples_to_reach(target).unwrap_or(r.samples_used) as f64)
+                .collect::<Vec<_>>(),
+        )
+    }
+
+    /// Total measurement-cache hits across repeats (0 without a database).
+    pub fn total_cache_hits(&self) -> usize {
+        self.runs.iter().map(|r| r.cache_hits).sum()
+    }
+
+    /// Total hardware samples consumed across repeats.
+    pub fn total_samples(&self) -> usize {
+        self.runs.iter().map(|r| r.samples_used).sum()
+    }
+
+    /// Total quarantined hardware measurements across repeats (samples
+    /// spent on failures; always 0 without an armed fault plan).
+    pub fn total_failed_measurements(&self) -> usize {
+        self.runs.iter().map(|r| r.failed_measurements).sum()
+    }
+}
+
+pub(super) fn platform_for(cfg: &TuneConfig) -> Result<Platform> {
+    Platform::by_name(&cfg.platform)
+        .ok_or_else(|| anyhow!("unknown platform {:?} (see `rcc platforms`)", cfg.platform))
+}
+
+fn mcts_cfg_for(cfg: &TuneConfig) -> MctsConfig {
+    MctsConfig {
+        exploration_c: cfg.exploration_c,
+        branching: cfg.branching,
+        rollout_len: cfg.rollout_len,
+        history_depth: cfg.history_depth,
+        max_trace_len: cfg.max_trace_len,
+    }
+}
+
+/// Run one strategy once on a prebuilt program.
+pub fn run_once(program: &Program, cfg: &TuneConfig, seed: u64) -> Result<SearchResult> {
+    run_once_warm(program, cfg, seed, None)
+}
+
+/// [`run_once`] with database hints: the search is warm-started from
+/// `hints.warm` and evaluates through a clone of `hints.cache`. Spins up
+/// a private executor of `cfg.resolved_workers()` for this one run;
+/// sessions instead thread one shared executor through every repeat.
+pub fn run_once_warm(
+    program: &Program,
+    cfg: &TuneConfig,
+    seed: u64,
+    hints: Option<&SearchHints>,
+) -> Result<SearchResult> {
+    let exec = Executor::new(cfg.resolved_workers());
+    Ok(run_once_with_accounting(program, cfg, seed, hints, &AnalysisCache::new(), &exec)?.0)
+}
+
+/// Run one strategy once, returning LLM accounting when applicable. All
+/// strategies dispatch through the [`SearchStrategy`] trait; the run's
+/// batched evaluation streams onto `exec` (shared session-wide, so nested
+/// parallel sites split one core budget) and `cfg.eval_batch` flows into
+/// the [`SearchContext`] driving the leaf-parallel trajectory.
+///
+/// `analysis` is the session-wide access-analysis memoization: the
+/// surrogate, the hardware model and (for llm_mcts) the reasoning engine
+/// all share it, so one distinct stage structure is analyzed once per
+/// session — across the 20-repeat protocol and every feature extraction.
+/// Sharing is invisible to results: cached analyses are pure values, so
+/// every run stays bit-identical to an uncached one (unlike the
+/// measurement cache, which each run deliberately clones).
+fn run_once_with_accounting(
+    program: &Program,
+    cfg: &TuneConfig,
+    seed: u64,
+    hints: Option<&SearchHints>,
+    analysis: &AnalysisCache,
+    exec: &Arc<Executor>,
+) -> Result<(SearchResult, CostTracker, f64, u64)> {
+    let platform = platform_for(cfg)?;
+    let surrogate = SurrogateModel::with_analysis(platform.clone(), analysis.share());
+    let hardware = HardwareModel::with_analysis(platform.clone(), analysis.share());
+    let mcts_cfg = mcts_cfg_for(cfg);
+    let mut ctx =
+        SearchContext::new(program, &surrogate, &hardware, &platform, cfg.budget, seed);
+    ctx.warm = hints.map(|h| &h.warm).filter(|w| !w.is_empty());
+    ctx.cache = hints.map(|h| &h.cache);
+    ctx.shared_cache = cfg.share_repeat_cache;
+    ctx.executor = Arc::clone(exec);
+    ctx.eval_batch = cfg.resolved_eval_batch();
+    let result = match cfg.strategy {
+        Strategy::Evolutionary => {
+            let r = EvolutionaryStrategy::new(EvoConfig::default()).search(&ctx);
+            (r, CostTracker::default(), 0.0, 0)
+        }
+        Strategy::Mcts => {
+            let mut policy = RandomPolicy::new(seed);
+            let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
+            (r, CostTracker::default(), 0.0, 0)
+        }
+        Strategy::LlmMcts => {
+            let model = ModelProfile::by_name(&cfg.model)
+                .ok_or_else(|| anyhow!("unknown model {:?} (see `rcc models`)", cfg.model))?;
+            let engine = SimulatedLlm::new(model, seed).with_analysis(analysis.share());
+            let mut policy = LlmPolicy::new(engine, cfg.history_depth, seed)
+                .with_exemplars(hints.map(|h| h.exemplars.clone()).unwrap_or_default());
+            let r = MctsStrategy::new(mcts_cfg, &mut policy).search(&ctx);
+            let fb = policy.fallbacks.fallback_rate();
+            let expansions = policy.fallbacks.fallbacks;
+            (r, policy.costs, fb, expansions)
+        }
+    };
+    Ok(result)
+}
+
+/// Repeat a tuning run over `cfg.repeats` seeds (in parallel) and aggregate
+/// — the paper's statistical protocol.
+pub fn run_session(cfg: &TuneConfig) -> Result<SessionResult> {
+    let workload = WorkloadId::from_name(&cfg.workload)
+        .ok_or_else(|| anyhow!("unknown workload {:?} (see `rcc show`)", cfg.workload))?;
+    let program = workload.build();
+    run_session_on(&program, cfg)
+}
+
+/// Same as [`run_session`] but over an arbitrary program (used by e2e).
+/// Owns a session executor of `cfg.resolved_workers()`.
+pub fn run_session_on(program: &Program, cfg: &TuneConfig) -> Result<SessionResult> {
+    let exec = Executor::new(cfg.resolved_workers());
+    run_session_on_with(program, cfg, &exec, None)
+}
+
+/// The session core: repeats run as a task group on the caller's
+/// persistent `exec`, and each repeat's inner batched-evaluation fan-out
+/// streams onto the *same* executor — nesting shares one core budget
+/// instead of multiplying pools.
+///
+/// When `cfg.db_path` is set, the session opens the tuning database,
+/// derives warm-start hints for this program's structural fingerprint, runs
+/// every repeat against them, then records each run's best trace and
+/// commits — the open → search → commit lifecycle that makes measurements
+/// durable across processes.
+///
+/// `pool` is the `rcc serve --tune` cross-session measurement pool: when
+/// set, the session's database hints are spliced into it (keep-best), the
+/// session evaluates through *shared* handles on it, and its measurements
+/// become visible to every concurrently tuned model — so one program
+/// fingerprint is never measured twice in a serve session. Pooling implies
+/// `share_repeat_cache` semantics (repeats run serially in seed order;
+/// order-dependent sharing stays deterministic).
+pub fn run_session_on_with(
+    program: &Program,
+    cfg: &TuneConfig,
+    exec: &Arc<Executor>,
+    pool: Option<&MeasureCache>,
+) -> Result<SessionResult> {
+    // Validate the platform up front so every repeat fails the same way.
+    platform_for(cfg)?;
+    // ---- crash-safe journaling / resume --------------------------------
+    // The serve fleet shares one measurement pool across many sessions; a
+    // single journal path cannot describe that, so refuse loudly instead
+    // of corrupting checkpoints.
+    if pool.is_some() && (cfg.journal_path.is_some() || cfg.resume_from.is_some()) {
+        return Err(anyhow!(
+            "--journal/--resume are per-session and not supported with the serve fleet"
+        ));
+    }
+    let header = JournalHeader {
+        workload_fp: workload_fingerprint(program),
+        workload: program.name.clone(),
+        platform: cfg.platform.clone(),
+        strategy: cfg.strategy.name().to_string(),
+        model: cfg.model.clone(),
+        seed: cfg.seed,
+        budget: cfg.budget,
+        repeats: cfg.repeats,
+        eval_batch: cfg.resolved_eval_batch(),
+        share_repeat_cache: cfg.share_repeat_cache,
+    };
+    // Resume loads + validates the old journal and keeps appending to it;
+    // a fresh `--journal` atomically replaces whatever was at the path.
+    let mut replayed: HashMap<usize, JournalEntry> = HashMap::new();
+    let journal: Option<SessionJournal> = if let Some(rp) = &cfg.resume_from {
+        let path = Path::new(rp);
+        let (jh, entries) = SessionJournal::load(path)?;
+        jh.ensure_matches(&header).with_context(|| format!("--resume {rp}"))?;
+        for e in entries {
+            if e.repeat < cfg.repeats {
+                replayed.insert(e.repeat, e);
+            }
+        }
+        Some(SessionJournal::open(path))
+    } else if let Some(jp) = &cfg.journal_path {
+        Some(SessionJournal::create(Path::new(jp), &header)?)
+    } else {
+        None
+    };
+    // Telemetry baseline: the session reports its own share of the
+    // process-wide counters (read-only snapshots; never affects results).
+    let phases0 = obs::phase_totals();
+    let exec0 = obs::exec_counters();
+    let dropped0 = obs::dropped();
+    // Audit header: one `session` record delimits this session's slice of
+    // the decision log (`rcc explain` reconstructs from the last slice).
+    if obs::audit::armed() {
+        let mut r = obs::audit::record("session", cfg.seed);
+        r.set("workload", json::s(&program.name))
+            .set("platform", json::s(&cfg.platform))
+            .set("strategy", json::s(cfg.strategy.name()))
+            .set("budget", json::num(cfg.budget as f64))
+            .set("repeats", json::num(cfg.repeats as f64))
+            .set("shape_class", json::s(&format!("{:016x}", crate::db::shape_class(program))));
+        obs::audit::emit(r);
+    }
+    let mut db = match &cfg.db_path {
+        Some(p) => Some(Database::open(Path::new(p))?),
+        None => None,
+    };
+    // Attach the ANN transfer index before hint derivation so similarity
+    // retrieval goes sublinear on large databases. Below the threshold
+    // retrieval stays on the exact scan, so small sessions are
+    // bit-identical with the index attached or not.
+    if cfg.transfer && cfg.transfer_index && (cfg.warm_start || cfg.strategy == Strategy::LlmMcts)
+    {
+        if let Some(d) = db.as_mut() {
+            d.attach_transfer_index(cfg.transfer_index_threshold);
+        }
+    }
+    let hints = db.as_ref().map(|db| {
+        let (warm, cache) = db.hints(program, &cfg.platform, cfg.warm_top_k);
+        let mut hints = SearchHints {
+            warm: if cfg.warm_start { warm } else { WarmStart::default() },
+            cache,
+            exemplars: Vec::new(),
+        };
+        // Cross-workload transfer: rebased traces from structurally similar
+        // workloads extend the warm frontier (appended after the exact
+        // records — those carry real measurements of *this* program), and
+        // exemplars flow to the LLM policy. Recorded latencies of other
+        // shapes are never planted in the measurement cache: a transferred
+        // candidate is measured like any other, it just exists earlier.
+        // Skip the whole derivation when nothing would consume it: warm
+        // entries are gated on `warm_start` and only the LLM strategy
+        // reads exemplars.
+        if cfg.transfer && (cfg.warm_start || cfg.strategy == Strategy::LlmMcts) {
+            let t = transfer::derive_hints(db, program, &cfg.platform, cfg.transfer_top_k);
+            if cfg.warm_start {
+                hints.warm.entries.extend(t.warm_entries);
+            }
+            hints.exemplars = t.exemplars;
+        }
+        hints
+    });
+    // Splice the serve-fleet measurement pool in: database hints flow into
+    // the pool (keep-best, so merge order cannot matter) and the session
+    // evaluates through shared handles on it. `--share-repeat-cache`
+    // without a database still needs a session-lived cache for the repeats
+    // to share; hand them an empty one (no warm traces, no exemplars —
+    // just the pooled measurements).
+    let pooled = pool.is_some();
+    let hints = match (hints, pool) {
+        (Some(mut h), Some(p)) => {
+            h.cache.merge_into(p);
+            h.cache = p.share();
+            Some(h)
+        }
+        (None, Some(p)) => {
+            Some(SearchHints { cache: p.share(), ..SearchHints::default() })
+        }
+        (None, None) if cfg.share_repeat_cache => Some(SearchHints::default()),
+        (h, None) => h,
+    };
+
+    let seeds: Vec<u64> = (0..cfg.repeats as u64).map(|i| cfg.seed + i * 1009).collect();
+
+    let mut run_cfg = cfg.clone();
+    // Resolve `eval_batch` against the configured worker count up front so
+    // the leaf-parallel trajectory never depends on scheduling.
+    run_cfg.eval_batch = cfg.resolved_eval_batch();
+    // Pooled sessions evaluate through shared cache handles — the same
+    // order-dependent sharing `--share-repeat-cache` opts into.
+    if pooled {
+        run_cfg.share_repeat_cache = true;
+    }
+    // A shared cache (repeat-shared or serve-pooled) makes repeats
+    // order-dependent (each may answer from whichever repeat measured a
+    // program first), so the repeats must run serially, in seed order, to
+    // stay deterministic run-to-run — the "workers never change results"
+    // contract then still holds: the inner batched-evaluation fan-out
+    // keeps the executor's full budget. Journaling and an armed crash
+    // clock also force seed order: checkpoints mean "repeats 0..k are
+    // durable" and a deterministic kill point needs a deterministic
+    // repeat-in-flight — both wall-clock-only choices under that same
+    // contract.
+    let serial_repeats =
+        run_cfg.share_repeat_cache || journal.is_some() || faults::crash_armed();
+    let run_cfg = &run_cfg;
+    let hints = hints.as_ref();
+    // One analysis cache for the whole session: the repeats evaluate the
+    // same workload, so they share every per-stage analysis (thread-safe,
+    // and pure values — sharing cannot perturb per-seed determinism).
+    let analysis = AnalysisCache::new();
+    let analysis = &analysis;
+    // Repeats run as one task group on the shared session executor. Each
+    // repeat is an independent seeded run over a private clone of the
+    // hints cache, and the group folds results by seed index, so the
+    // executor width never affects results — a serial executor runs the
+    // repeats strictly serially, inline. A repeat's own batched
+    // evaluation submits nested groups to the same executor (waiting
+    // submitters help), so repeats × eval_batch never oversubscribes.
+    let shared_cache = run_cfg.share_repeat_cache;
+    let mut resumed_repeats = 0usize;
+    let outcomes: Vec<Result<(SearchResult, CostTracker, f64, u64)>> = if serial_repeats {
+        let mut outcomes = Vec::with_capacity(seeds.len());
+        for (i, &seed) in seeds.iter().enumerate() {
+            // A journaled repeat replays verbatim — bit-identical by
+            // construction — re-applying its cache delta so later repeats
+            // observe exactly the cache state of the uninterrupted run.
+            if let Some(e) = replayed.remove(&i) {
+                if let Some(h) = hints.filter(|_| shared_cache) {
+                    for (plat, fp, lat) in &e.cache_delta {
+                        h.cache.insert(*fp, plat, *lat);
+                    }
+                }
+                resumed_repeats += 1;
+                outcomes.push(Ok((e.result, e.costs, e.fb_rate, e.expansions)));
+                continue;
+            }
+            let cache_before = match (&journal, hints) {
+                (Some(_), Some(h)) if shared_cache => Some(h.cache.entries()),
+                _ => None,
+            };
+            let out = run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec);
+            // An armed crash clock models a mid-session kill: the repeat
+            // in flight when the clock expired is *discarded* (a real kill
+            // loses it mid-write) and the session aborts before the
+            // database commit. `--resume` re-runs it from its fixed seed.
+            if faults::crash_due() {
+                return Err(anyhow!(
+                    "injected crash: fault plan expired after {} measurement steps (repeat {i} discarded{})",
+                    faults::steps(),
+                    if journal.is_some() { "; restart with --resume" } else { "" },
+                ));
+            }
+            if let (Some(j), Ok(o)) = (&journal, &out) {
+                let cache_delta = match cache_before {
+                    Some(before) => diff_cache_entries(
+                        &before,
+                        hints.map(|h| h.cache.entries()).unwrap_or_default(),
+                    ),
+                    None => Vec::new(),
+                };
+                j.append(&JournalEntry {
+                    repeat: i,
+                    seed,
+                    result: o.0.clone(),
+                    costs: o.1.clone(),
+                    fb_rate: o.2,
+                    expansions: o.3,
+                    cache_delta,
+                })?;
+            }
+            outcomes.push(out);
+        }
+        outcomes
+    } else {
+        exec.run(
+            seeds
+                .iter()
+                .map(|&seed| {
+                    move || run_once_with_accounting(program, run_cfg, seed, hints, analysis, exec)
+                })
+                .collect(),
+        )
+    };
+
+    let mut runs = Vec::new();
+    let mut llm_costs = CostTracker::default();
+    let mut fb_rates = Vec::new();
+    for o in outcomes {
+        let o = o?;
+        runs.push(o.0);
+        llm_costs.merge(&o.1);
+        fb_rates.push(o.2);
+    }
+
+    // Audit: one `result` record per repeat, emitted in seed order on the
+    // coordinating thread (never from the fan-out workers). The sample-
+    // efficiency curve rides along so `rcc explain` can plot convergence
+    // from the decision log alone.
+    if obs::audit::armed() {
+        for (run, &seed) in runs.iter().zip(&seeds) {
+            let mut r = obs::audit::record("result", seed);
+            r.set("baseline", json::num(run.baseline_latency))
+                .set("best_latency", json::num(run.best_latency))
+                .set("samples", json::num(run.samples_used as f64))
+                .set("failed", json::num(run.failed_measurements as f64));
+            let curve: Vec<Json> = run
+                .curve
+                .iter()
+                .map(|m| {
+                    let mut p = Json::obj();
+                    p.set("sample", json::num(m.sample as f64));
+                    p.set("latency", json::num(m.latency));
+                    p
+                })
+                .collect();
+            r.set("curve", json::arr(curve));
+            obs::audit::emit(r);
+        }
+    }
+
+    // Persist each repeat's best discovery and flush. Records carry the
+    // transfer metadata (shape class + per-stage extents) that lets future
+    // sessions on structurally similar workloads find and rebase them.
+    if let Some(db) = &mut db {
+        let fp = workload_fingerprint(program);
+        let class = crate::db::shape_class(program);
+        let extents = transfer::workload_extents(program);
+        let timestamp = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        for (run, &seed) in runs.iter().zip(&seeds) {
+            if run.best_trace.is_empty() {
+                continue; // nothing beat the baseline; no record to keep
+            }
+            // A warm run that only re-confirms a recorded result adds no
+            // information; skip the append so the log doesn't grow with
+            // duplicates on every converged re-run.
+            if db.has_equivalent(fp, &cfg.platform, &run.best_trace, run.best_latency) {
+                continue;
+            }
+            db.add(TuningRecord {
+                workload_fp: fp,
+                workload: program.name.clone(),
+                platform: cfg.platform.clone(),
+                strategy: run.strategy.clone(),
+                trace: run.best_trace.clone(),
+                latency: run.best_latency,
+                baseline_latency: run.baseline_latency,
+                seed,
+                timestamp,
+                shape_class: class,
+                extents: extents.clone(),
+            });
+        }
+        db.commit()
+            .with_context(|| format!("committing tuning records for {}", program.name))?;
+    }
+
+    let mut telemetry = SessionTelemetry::capture(&phases0, &exec0, dropped0);
+    for r in &runs {
+        telemetry.calibration.merge(&r.calibration);
+    }
+    Ok(SessionResult {
+        config_strategy: cfg.strategy,
+        workload: cfg.workload.clone(),
+        platform: cfg.platform.clone(),
+        runs,
+        llm_costs,
+        llm_fallback_rate: stats::mean(&fb_rates),
+        resumed_repeats,
+        telemetry,
+    })
+}
+
+/// Entries present in `after` but not `before` (or with a changed value):
+/// the measurements one repeat contributed to the session-shared cache.
+/// Both snapshots come sorted from [`MeasureCache::entries`], so the delta
+/// is deterministic.
+fn diff_cache_entries(
+    before: &[(String, u64, f64)],
+    after: Vec<(String, u64, f64)>,
+) -> Vec<(String, u64, f64)> {
+    let prev: HashMap<(&str, u64), f64> =
+        before.iter().map(|(p, fp, l)| ((p.as_str(), *fp), *l)).collect();
+    after
+        .into_iter()
+        .filter(|(p, fp, l)| {
+            prev.get(&(p.as_str(), *fp)).map_or(true, |old| old.to_bits() != l.to_bits())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg(strategy: Strategy) -> TuneConfig {
+        TuneConfig {
+            strategy,
+            budget: 30,
+            repeats: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn session_aggregates_repeats() {
+        let s = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        assert_eq!(s.runs.len(), 2);
+        assert!(s.mean_speedup() > 1.0);
+        assert!(s.mean_speedup_at(30) >= s.mean_speedup_at(5));
+    }
+
+    #[test]
+    fn llm_session_tracks_costs() {
+        let s = run_session(&quick_cfg(Strategy::LlmMcts)).unwrap();
+        assert!(s.llm_costs.calls > 0);
+        assert!(s.llm_costs.prompt_tokens > 0);
+        assert_eq!(s.llm_fallback_rate, 0.0); // gpt4o_mini never falls back
+    }
+
+    #[test]
+    fn session_telemetry_aggregates_calibration() {
+        // Calibration is always-on: every measured sample pairs a surrogate
+        // prediction with the hardware latency, and the session telemetry
+        // merges per-run summaries exactly.
+        let s = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        assert!(s.telemetry.calibration.n > 0, "no calibration pairs recorded");
+        let mut merged = CalibrationStats::default();
+        for r in &s.runs {
+            merged.merge(&r.calibration);
+        }
+        assert_eq!(merged, s.telemetry.calibration);
+        assert!(s.telemetry.calibration.mean_abs_rel().is_finite());
+        let e = run_session(&quick_cfg(Strategy::Evolutionary)).unwrap();
+        assert!(e.telemetry.calibration.n > 0, "ES records calibration too");
+    }
+
+    #[test]
+    fn es_session_runs() {
+        let s = run_session(&quick_cfg(Strategy::Evolutionary)).unwrap();
+        assert!(s.mean_speedup() > 1.0);
+        assert_eq!(s.llm_costs.calls, 0);
+    }
+
+    #[test]
+    fn unknown_platform_is_an_error_not_a_panic() {
+        let cfg = TuneConfig {
+            platform: "quantum_abacus".to_string(),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        let err = run_session(&cfg).unwrap_err();
+        assert!(err.to_string().contains("quantum_abacus"), "{err}");
+        let program = WorkloadId::DeepSeekMoe.build_test();
+        assert!(run_once(&program, &cfg, 1).is_err());
+    }
+
+    #[test]
+    fn unknown_workload_and_model_are_errors() {
+        let cfg = TuneConfig {
+            workload: "nope".to_string(),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        assert!(run_session(&cfg).is_err());
+        let cfg = TuneConfig {
+            model: "gpt9".to_string(),
+            ..quick_cfg(Strategy::LlmMcts)
+        };
+        assert!(run_session(&cfg).is_err());
+    }
+
+    #[test]
+    fn sessions_deterministic() {
+        let a = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        let b = run_session(&quick_cfg(Strategy::Mcts)).unwrap();
+        assert_eq!(
+            a.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
+            b.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn shared_repeat_cache_sessions_stay_deterministic() {
+        // Sharing the measurement cache across repeats forces the repeat
+        // pool serial (sharing is order-dependent); with that, two
+        // identical sessions — even with a wide worker budget for the
+        // inner evaluation fan-out — must produce identical results.
+        let mk_db = |tag: &str| {
+            std::env::temp_dir().join(format!(
+                "rcc_shared_cache_{tag}_{}_{}.jsonl",
+                std::process::id(),
+                std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .unwrap()
+                    .as_nanos()
+            ))
+        };
+        let run = |db: &std::path::PathBuf| {
+            let cfg = TuneConfig {
+                strategy: Strategy::Mcts,
+                budget: 25,
+                repeats: 2,
+                workers: 4,
+                share_repeat_cache: true,
+                db_path: Some(db.to_string_lossy().to_string()),
+                ..Default::default()
+            };
+            run_session(&cfg).unwrap()
+        };
+        // Fresh databases for both sessions so neither warm-starts.
+        let (da, db_) = (mk_db("a"), mk_db("b"));
+        let a = run(&da);
+        let b = run(&db_);
+        assert_eq!(
+            a.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>(),
+            b.runs.iter().map(|r| r.best_latency).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            a.runs.iter().map(|r| r.samples_used).collect::<Vec<_>>(),
+            b.runs.iter().map(|r| r.samples_used).collect::<Vec<_>>()
+        );
+        std::fs::remove_file(&da).ok();
+        std::fs::remove_file(&db_).ok();
+    }
+
+    fn temp_journal(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "rcc_session_journal_{tag}_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ))
+    }
+
+    fn result_key(r: &SearchResult) -> (u64, usize, Vec<(usize, u64)>) {
+        (
+            r.best_latency.to_bits(),
+            r.samples_used,
+            r.curve.iter().map(|m| (m.sample, m.latency.to_bits())).collect(),
+        )
+    }
+
+    #[test]
+    fn journaled_session_resumes_bit_identically() {
+        let jp = temp_journal("full");
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some(jp.to_string_lossy().to_string());
+        let a = run_session(&cfg).unwrap();
+        assert_eq!(a.resumed_repeats, 0);
+        let (h, entries) = SessionJournal::load(&jp).unwrap();
+        assert_eq!(h.repeats, 2);
+        assert_eq!(entries.len(), 2, "every repeat checkpointed");
+
+        // Resuming a complete journal replays everything, runs nothing,
+        // and reproduces the session bit-for-bit.
+        let mut rcfg = cfg.clone();
+        rcfg.journal_path = None;
+        rcfg.resume_from = Some(jp.to_string_lossy().to_string());
+        let b = run_session(&rcfg).unwrap();
+        assert_eq!(b.resumed_repeats, 2);
+        assert_eq!(
+            a.runs.iter().map(result_key).collect::<Vec<_>>(),
+            b.runs.iter().map(result_key).collect::<Vec<_>>()
+        );
+
+        // Mismatched parameters refuse to resume, naming the field.
+        let mut bad = rcfg.clone();
+        bad.budget += 1;
+        let err = run_session(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("budget"), "{err:#}");
+        std::fs::remove_file(&jp).ok();
+    }
+
+    #[test]
+    fn truncated_journal_resume_re_runs_missing_repeats() {
+        // An uninterrupted journaled session, then simulate a kill by
+        // truncating the journal to header + repeat 0 + a torn tail line.
+        let jp = temp_journal("truncated");
+        let mut cfg = quick_cfg(Strategy::Mcts);
+        cfg.journal_path = Some(jp.to_string_lossy().to_string());
+        let full = run_session(&cfg).unwrap();
+        let text = std::fs::read_to_string(&jp).unwrap();
+        let keep: Vec<&str> = text.lines().take(2).collect();
+        std::fs::write(&jp, format!("{}\n{{\"repeat\":1,\"se", keep.join("\n"))).unwrap();
+
+        let mut rcfg = cfg.clone();
+        rcfg.journal_path = None;
+        rcfg.resume_from = Some(jp.to_string_lossy().to_string());
+        let resumed = run_session(&rcfg).unwrap();
+        assert_eq!(resumed.resumed_repeats, 1, "repeat 0 replays, repeat 1 re-runs");
+        assert_eq!(
+            full.runs.iter().map(result_key).collect::<Vec<_>>(),
+            resumed.runs.iter().map(result_key).collect::<Vec<_>>(),
+            "resume after a torn journal is bit-identical to the uninterrupted run"
+        );
+        // The re-run repeat was re-checkpointed into the same journal.
+        let (_, entries) = SessionJournal::load(&jp).unwrap();
+        assert_eq!(entries.len(), 2);
+        std::fs::remove_file(&jp).ok();
+    }
+
+    #[test]
+    fn session_with_db_persists_and_warm_starts() {
+        let db_path = std::env::temp_dir().join(format!(
+            "rcc_tuner_db_{}_{}.jsonl",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let cfg = TuneConfig {
+            db_path: Some(db_path.to_string_lossy().to_string()),
+            ..quick_cfg(Strategy::Mcts)
+        };
+        let cold = run_session(&cfg).unwrap();
+        assert_eq!(cold.total_cache_hits(), 0, "cold run has nothing to hit");
+        let db = Database::open(&db_path).unwrap();
+        assert!(
+            (1..=2).contains(&db.len()),
+            "one record per repeat (minus same-trace dedup), got {}",
+            db.len()
+        );
+
+        let warm = run_session(&cfg).unwrap();
+        assert!(
+            warm.total_cache_hits() > 0,
+            "warm run must reuse recorded measurements"
+        );
+        std::fs::remove_file(&db_path).ok();
+    }
+}

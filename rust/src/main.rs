@@ -9,8 +9,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{anyhow, Result};
 
 use reasoning_compiler::coordinator::{
-    run_e2e, run_session, tune_models, Registry, Server, ServerConfig, SessionTelemetry,
-    Strategy, TuneConfig, DEFAULT_DB_PATH,
+    run_e2e, run_session, tune_models, tune_models_on, Registry, Server, ServerConfig,
+    SessionTelemetry, Strategy, TuneConfig, DEFAULT_DB_PATH,
 };
 use reasoning_compiler::db::{workload_fingerprint, Database, TuningRecord};
 use reasoning_compiler::cost::{features, Platform};
@@ -21,6 +21,7 @@ use reasoning_compiler::runtime::Manifest;
 use reasoning_compiler::schedule::{Schedule, Transform};
 use reasoning_compiler::tir::{printer, workload, WorkloadId};
 use reasoning_compiler::util::cli::Args;
+use reasoning_compiler::util::executor::Executor;
 use reasoning_compiler::util::faults;
 use reasoning_compiler::util::rng::Pcg;
 use reasoning_compiler::util::json::Json;
@@ -146,12 +147,27 @@ Fault tolerance
   a build without the harness.
 
 Serving & inspection
-  serve       Dynamic-batching serving demo over the AOT artifacts,
-              annotated with best-known schedules from the tuning db.
-              --requests N --max-batch N [--db FILE]
-              --tune         first tune every registered model, running
-                             the sessions concurrently against the shared
-                             database (file-locked)
+  serve       Continuous-batching serving plane: bounded per-model ingress
+              with admission control (typed Overloaded rejection), per-
+              request slot admit/evict each scheduling tick, round-robin
+              fairness, deadline eviction, and per-model p50/p99 +
+              admission counters in the report. Runs over the AOT
+              artifacts, or (--sim, or when artifacts/xla are absent) a
+              simulated backend whose service times come from the cost
+              model. --requests N --max-batch N [--db FILE]
+              --sim --models a,b     simulated backend + model list
+              --queue-cap N          hard bound on any ingress queue
+              --target-delay N       ticks of queueing delay the per-model
+                                     admission budget is derived from
+                                     (tuned models earn deeper queues)
+              --min-fill N --max-wait N   batch amortization + forced
+                                     flush of non-full batches (counted)
+              --max-queue-ticks N    evict queued requests older than this
+              --burst N              load generator max arrivals per tick
+              --tune         tune every registered model in the background
+                             *while serving* — the fleet shares the serve
+                             executor at low priority (serve preempts) and
+                             commits to the shared database (file-locked)
               --tune-budget N --tune-repeats N  per-model session size
   artifacts   List + smoke-run the AOT artifacts.
   show        Print a workload's TIR. --workload NAME
@@ -655,39 +671,105 @@ fn cmd_experiment(cmd: &str, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let manifest = Manifest::discover()?;
     let requests = args.opt_usize("requests", 64);
-    let max_batch = args.opt_usize("max-batch", 8);
-    println!(
-        "serving {} artifacts from {} (PJRT CPU), {} synthetic requests, max batch {}",
-        manifest.artifacts.len(),
-        manifest.dir.display(),
-        requests,
-        max_batch
-    );
-    let mut server = Server::start(&manifest, ServerConfig { max_batch })?;
+    let config = ServerConfig {
+        max_batch: args.opt_usize("max-batch", 8),
+        queue_cap: args.opt_usize("queue-cap", 64),
+        min_fill: args.opt_usize("min-fill", 1),
+        max_wait_ticks: args.opt_u64("max-wait", 4),
+        max_queue_ticks: args.opt_u64("max-queue-ticks", 0),
+        target_delay_ticks: args.opt_u64("target-delay", 64),
+        arrival_burst: args.opt_usize("burst", 2),
+        tick_s: 0.0,
+    };
+    // One persistent executor shared by the serving plane (high-priority
+    // execution) and the optional background tuning fleet (low priority):
+    // serve traffic preempts tuning at every dequeue and steal site.
+    let mut tune_cfg = TuneConfig::default();
+    tune_cfg.apply_cli(args);
+    let exec = Executor::new(tune_cfg.resolved_workers());
+    // Backend: the PJRT runtime over built artifacts when available;
+    // otherwise — or with --sim — the simulated backend over the stock
+    // workloads, which needs no artifacts and no xla feature.
+    let manifest = Manifest::discover();
+    let use_sim = args.has_flag("sim") || !cfg!(feature = "xla") || manifest.is_err();
+    let (mut server, models) = if use_sim {
+        let models: Vec<String> = args
+            .opt_or("models", "deepseek_moe,llama4_mlp")
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        println!(
+            "serving {} simulated models ({}), {} synthetic requests, max batch {}",
+            models.len(),
+            models.join(", "),
+            requests,
+            config.max_batch
+        );
+        let server =
+            Server::start_sim(&models, config)?.with_executor(std::sync::Arc::clone(&exec), 20_000);
+        (server, models)
+    } else {
+        let manifest = manifest?;
+        let models: Vec<String> = manifest.artifacts.keys().cloned().collect();
+        println!(
+            "serving {} artifacts from {} (PJRT CPU), {} synthetic requests, max batch {}",
+            manifest.artifacts.len(),
+            manifest.dir.display(),
+            requests,
+            config.max_batch
+        );
+        (Server::start(&manifest, config)?, models)
+    };
     let db_path = PathBuf::from(args.opt_or("db", DEFAULT_DB_PATH));
-    // Optionally tune every registered model first, sessions running
-    // concurrently against the shared (file-locked) tuning database, so a
-    // fresh deployment starts serving with best-known schedules.
-    if args.has_flag("tune") {
-        let mut cfg = TuneConfig::default();
-        cfg.apply_cli(args);
+    // Optionally tune every registered model in the background *while
+    // serving*: the fleet shares the serve executor at low priority, so it
+    // soaks idle cores but yields to traffic. Records commit to the shared
+    // (file-locked) tuning database; schedules re-attach after the join.
+    let tune_thread = if args.has_flag("tune") {
+        let mut cfg = tune_cfg.clone();
         cfg.budget = args.opt_usize("tune-budget", 40);
         cfg.repeats = args.opt_usize("tune-repeats", 1);
         cfg.db_path = Some(db_path.to_string_lossy().to_string());
-        let models: Vec<String> = manifest.artifacts.keys().cloned().collect();
         println!(
-            "tuning {} registered models concurrently ({}-worker shared executor, budget {} x{} repeats)...",
+            "tuning {} registered models in the background ({}-worker shared executor, budget {} x{} repeats)...",
             models.len(),
             cfg.resolved_workers(),
             cfg.budget,
             cfg.repeats
         );
-        let phases0 = obs::phase_totals();
-        let exec0 = obs::exec_counters();
-        let dropped0 = obs::dropped();
-        let fleet = tune_models(&models, &cfg)?;
+        let tune_models_list = models.clone();
+        let tune_exec = std::sync::Arc::clone(&exec);
+        Some((
+            std::thread::spawn(move || tune_models_on(&tune_models_list, &cfg, &tune_exec)),
+            (obs::phase_totals(), obs::exec_counters(), obs::dropped()),
+        ))
+    } else {
+        None
+    };
+    // Annotate served models with already-recorded schedules up front. A
+    // missing db is acceptable when the path is the implicit default or
+    // when --tune is about to create it; an explicit --db that doesn't
+    // exist otherwise is a user error, not a no-op.
+    if args.opt("db").is_some() && !db_path.exists() && tune_thread.is_none() {
+        return Err(anyhow!("tuning db {} does not exist", db_path.display()));
+    }
+    if db_path.exists() {
+        let db = Database::open(&db_path)?;
+        let matched = server.attach_tuning_db(&db);
+        println!(
+            "\ntuning db {} ({} records, {matched} served models matched):",
+            db_path.display(),
+            db.len()
+        );
+        print!("{}", server.schedule_summary());
+    }
+    server.run_synthetic(requests, args.opt_u64("seed", 1))?;
+    if let Some((handle, (phases0, exec0, dropped0))) = tune_thread {
+        let fleet = handle
+            .join()
+            .map_err(|_| anyhow!("background tuning thread panicked"))??;
         for (model, session) in &fleet.sessions {
             println!(
                 "  {:<18} {:.2}x mean speedup ({} samples, {} cache hits)",
@@ -704,27 +786,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "  shared measurement pool: {} fingerprints known, {} evaluations answered without a sample",
             fleet.pool_entries, fleet.pooled_hits
         );
-        // Fleet-scoped telemetry (sessions overlap in time, so the fleet
-        // delta is the meaningful unit here, not per-session shares).
+        // Fleet-scoped telemetry (tuning overlapped serving, so the delta
+        // covers both — the meaningful unit for a shared executor).
         print!("{}", SessionTelemetry::capture(&phases0, &exec0, dropped0).render());
+        // Freshly committed records: re-annotate with the tuned schedules.
+        if db_path.exists() {
+            let db = Database::open(&db_path)?;
+            let matched = server.attach_tuning_db(&db);
+            println!("\ntuned schedules attached ({matched} served models matched):");
+            print!("{}", server.schedule_summary());
+        }
     }
-    // Annotate served models with their best-known tuned schedules. A
-    // missing db is only acceptable when the path is the implicit default;
-    // an explicit --db that doesn't exist is a user error, not a no-op.
-    if args.opt("db").is_some() && !db_path.exists() {
-        return Err(anyhow!("tuning db {} does not exist", db_path.display()));
-    }
-    if db_path.exists() {
-        let db = Database::open(&db_path)?;
-        let matched = server.attach_tuning_db(&db);
-        println!(
-            "\ntuning db {} ({} records, {matched} served models matched):",
-            db_path.display(),
-            db.len()
-        );
-        print!("{}", server.schedule_summary());
-    }
-    server.run_synthetic(requests, args.opt_u64("seed", 1))?;
     println!("\n{}", server.metrics.report());
     Ok(())
 }

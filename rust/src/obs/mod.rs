@@ -50,8 +50,8 @@
 //! | `llm_call`      | llm    | span         | prompt tokens (`arg2` = proposals) |
 //! | `db_commit`     | db     | span         | records committed          |
 //! | `db_gc`         | db     | span         | records kept               |
-//! | `serve_enqueue` | serve  | instant      | queue depth after enqueue  |
-//! | `serve_batch`   | serve  | span         | batch size                 |
+//! | `serve_enqueue` | serve  | instant      | queue depth (`arg2`: 1 = admitted, 0 = rejected) |
+//! | `serve_batch`   | serve  | span         | requests started this tick (`arg2` = slot occupancy) |
 //! | `transfer_query` | db    | span         | candidates considered (`arg2`: 1 = index, 0 = scan) |
 //! | `llm_retry`     | llm    | instant      | attempt index (`arg2`: 1 = timeout, 0 = error) |
 //! | `llm_degrade`   | llm    | instant      | policy call index          |

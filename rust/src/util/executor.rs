@@ -35,6 +35,18 @@
 //!   submitter re-raises the payload after the group drains. A panic
 //!   fails the submitting group — it never hangs the executor or poisons
 //!   the worker threads (workers run every task under `catch_unwind`).
+//! - **Two-level priority.** Every task group carries a [`Priority`]:
+//!   `High` (latency-sensitive serve traffic) or `Low` (background
+//!   tuning — the default, so every pre-existing call site keeps its
+//!   behavior). Each worker deque is split into a high and a low lane;
+//!   *every* dequeue site — own pop, worker steal, helping-submitter
+//!   steal — drains queued high jobs before touching a low one, so serve
+//!   traffic preempts background tuning at dequeue/steal time. A helper
+//!   waiting on a *high* group steals only high jobs (it must not adopt
+//!   long background work while its own latency-sensitive tasks run;
+//!   its own queued jobs are high, so the restriction never starves it).
+//!   Priorities reorder wall-clock execution only: results still land by
+//!   submission index, so the determinism contract is untouched.
 //!
 //! # Safety
 //!
@@ -58,6 +70,45 @@ use crate::obs;
 
 /// A queued task with its lifetime erased (see module-level Safety notes).
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Scheduling class of a task group. `High` preempts `Low` at every
+/// dequeue and steal site (see the module docs); `Low` is the default so
+/// existing call sites — batch evaluation, session repeats, tuning fleets
+/// — stay background work without changes. Priorities never change
+/// results, only wall-clock order: outputs fold by submission index.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground work (serve traffic).
+    High,
+    /// Throughput-oriented background work (tuning, batched evaluation).
+    #[default]
+    Low,
+}
+
+/// One worker's queue, split into a per-priority lane pair. Depth and
+/// high-water telemetry count both lanes together (the deque identity is
+/// what matters for stealing, not the lane).
+struct Lanes {
+    high: VecDeque<Job>,
+    low: VecDeque<Job>,
+}
+
+impl Lanes {
+    fn new() -> Lanes {
+        Lanes { high: VecDeque::new(), low: VecDeque::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.high.len() + self.low.len()
+    }
+
+    fn lane_mut(&mut self, prio: Priority) -> &mut VecDeque<Job> {
+        match prio {
+            Priority::High => &mut self.high,
+            Priority::Low => &mut self.low,
+        }
+    }
+}
 
 /// Always-on per-deque scheduling counters (relaxed atomics bumped at
 /// sites that already hold the deque mutex — cheap enough to never gate).
@@ -128,10 +179,15 @@ impl ExecutorStats {
 /// task group (groups hold their own `Arc`, so a group can finish — by
 /// helping — even while the executor itself is being dropped).
 struct Shared {
-    /// One deque per worker thread; submitters distribute round-robin.
-    deques: Vec<Mutex<VecDeque<Job>>>,
-    /// Queued-but-unclaimed jobs (wakes sleeping workers cheaply).
+    /// One two-lane deque per worker thread; submitters distribute
+    /// round-robin, priority picks the lane.
+    deques: Vec<Mutex<Lanes>>,
+    /// Queued-but-unclaimed jobs across both lanes (wakes sleeping
+    /// workers cheaply).
     pending: AtomicUsize,
+    /// Queued-but-unclaimed *high* jobs: lets the hot all-low path skip
+    /// the cross-deque high-lane scan with one relaxed-ish load.
+    pending_high: AtomicUsize,
     /// Group submitters currently parked on `done_cv` — lets the per-task
     /// completion path skip the global lock entirely when nobody waits.
     /// The waiter/completion handshake is SeqCst (Dekker-style): a waiter
@@ -159,37 +215,70 @@ struct Shared {
 }
 
 impl Shared {
-    fn push(&self, job: Job) {
+    fn push(&self, job: Job, prio: Priority) {
         debug_assert!(!self.deques.is_empty(), "serial executors never queue");
         let i = self.cursor.fetch_add(1, Ordering::Relaxed) % self.deques.len();
         let depth = {
             let mut q = self.deques[i].lock().unwrap();
-            q.push_back(job);
+            q.lane_mut(prio).push_back(job);
             q.len() as u64
         };
         self.stats[i].queue_hwm.fetch_max(depth, Ordering::Relaxed);
         obs::metrics::exec_queue_depth(depth);
+        if prio == Priority::High {
+            self.pending_high.fetch_add(1, Ordering::Release);
+        }
         self.pending.fetch_add(1, Ordering::Release);
         let _g = self.sync.lock().unwrap();
         self.work_cv.notify_one();
     }
 
-    /// Worker pop: own deque newest-first, then steal oldest-first.
+    /// A queued job was taken off a deque: maintain the pending counters.
+    fn claim(&self, prio: Priority) {
+        self.pending.fetch_sub(1, Ordering::AcqRel);
+        if prio == Priority::High {
+            self.pending_high.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+
+    /// Worker pop — serve preempts tune at the dequeue site: every queued
+    /// high job (own newest-first, then stolen oldest-first) runs before
+    /// any low job is dequeued. Within a lane the order is unchanged from
+    /// the single-lane executor: own deque newest-first, steal
+    /// oldest-first. The `pending_high` guard keeps the all-low hot path
+    /// at one extra atomic load instead of a cross-deque scan.
     fn pop(&self, home: usize) -> Option<Job> {
         let n = self.deques.len();
         if n == 0 {
             return None;
         }
-        if let Some(j) = self.deques[home % n].lock().unwrap().pop_back() {
-            self.pending.fetch_sub(1, Ordering::AcqRel);
-            self.stats[home % n].own_pops.fetch_add(1, Ordering::Relaxed);
+        let home = home % n;
+        if self.pending_high.load(Ordering::Acquire) > 0 {
+            if let Some(j) = self.deques[home].lock().unwrap().high.pop_back() {
+                self.claim(Priority::High);
+                self.stats[home].own_pops.fetch_add(1, Ordering::Relaxed);
+                obs::metrics::exec_own_pop();
+                return Some(j);
+            }
+            for k in 1..n {
+                if let Some(j) = self.deques[(home + k) % n].lock().unwrap().high.pop_front() {
+                    self.claim(Priority::High);
+                    self.stats[home].steals.fetch_add(1, Ordering::Relaxed);
+                    obs::metrics::exec_steal();
+                    return Some(j);
+                }
+            }
+        }
+        if let Some(j) = self.deques[home].lock().unwrap().low.pop_back() {
+            self.claim(Priority::Low);
+            self.stats[home].own_pops.fetch_add(1, Ordering::Relaxed);
             obs::metrics::exec_own_pop();
             return Some(j);
         }
         for k in 1..n {
-            if let Some(j) = self.deques[(home + k) % n].lock().unwrap().pop_front() {
-                self.pending.fetch_sub(1, Ordering::AcqRel);
-                self.stats[home % n].steals.fetch_add(1, Ordering::Relaxed);
+            if let Some(j) = self.deques[(home + k) % n].lock().unwrap().low.pop_front() {
+                self.claim(Priority::Low);
+                self.stats[home].steals.fetch_add(1, Ordering::Relaxed);
                 obs::metrics::exec_steal();
                 return Some(j);
             }
@@ -197,11 +286,30 @@ impl Shared {
         None
     }
 
-    /// Steal for a helping submitter (oldest-first across all deques).
-    fn steal(&self) -> Option<Job> {
+    /// Steal for a helping submitter (oldest-first across all deques,
+    /// high lane first). `floor` is the priority of the group the helper
+    /// is waiting on: a submitter of a *high* group steals only high jobs
+    /// — adopting a long-running background task while its own
+    /// latency-sensitive tasks sit queued would be priority inversion by
+    /// helping. Its own queued jobs are high, so the restriction can
+    /// never starve it (it parks briefly only while they are in flight).
+    fn steal(&self, floor: Priority) -> Option<Job> {
+        if self.pending_high.load(Ordering::Acquire) > 0 {
+            for q in &self.deques {
+                if let Some(j) = q.lock().unwrap().high.pop_front() {
+                    self.claim(Priority::High);
+                    self.help_steals.fetch_add(1, Ordering::Relaxed);
+                    obs::metrics::exec_help_steal();
+                    return Some(j);
+                }
+            }
+        }
+        if floor == Priority::High {
+            return None;
+        }
         for q in &self.deques {
-            if let Some(j) = q.lock().unwrap().pop_front() {
-                self.pending.fetch_sub(1, Ordering::AcqRel);
+            if let Some(j) = q.lock().unwrap().low.pop_front() {
+                self.claim(Priority::Low);
                 self.help_steals.fetch_add(1, Ordering::Relaxed);
                 obs::metrics::exec_help_steal();
                 return Some(j);
@@ -278,8 +386,9 @@ impl Executor {
         let workers = workers.max(1);
         let threads = workers - 1;
         let shared = Arc::new(Shared {
-            deques: (0..threads).map(|_| Mutex::new(VecDeque::new())).collect(),
+            deques: (0..threads).map(|_| Mutex::new(Lanes::new())).collect(),
             pending: AtomicUsize::new(0),
+            pending_high: AtomicUsize::new(0),
             waiters: AtomicUsize::new(0),
             cursor: AtomicUsize::new(0),
             shutdown: AtomicBool::new(false),
@@ -350,9 +459,20 @@ impl Executor {
     /// external users get the sound [`Executor::run`] (which never hands
     /// the group out).
     pub(crate) fn group<'scope, T: Send + 'scope>(&self) -> TaskGroup<'scope, T> {
+        self.group_with(Priority::Low)
+    }
+
+    /// [`Executor::group`] with an explicit [`Priority`]. High groups'
+    /// tasks preempt queued low work at every dequeue site, and their
+    /// waiting submitters help with high jobs only.
+    pub(crate) fn group_with<'scope, T: Send + 'scope>(
+        &self,
+        prio: Priority,
+    ) -> TaskGroup<'scope, T> {
         TaskGroup {
             shared: Arc::clone(&self.shared),
             serial: self.is_serial(),
+            prio,
             slots: Vec::new(),
             core: Arc::new(GroupCore {
                 remaining: AtomicUsize::new(0),
@@ -366,13 +486,25 @@ impl Executor {
     /// Run a batch of tasks and return their outputs **by submission
     /// index** (never completion order). Blocks until every task
     /// finished, helping with queued work meanwhile; re-raises the first
-    /// task panic after the group drains.
+    /// task panic after the group drains. Tasks run at [`Priority::Low`]
+    /// (background); latency-sensitive callers use [`Executor::run_with`].
     pub fn run<'scope, T, F>(&self, tasks: Vec<F>) -> Vec<T>
     where
         T: Send + 'scope,
         F: FnOnce() -> T + Send + 'scope,
     {
-        let mut group = self.group::<T>();
+        self.run_with(Priority::Low, tasks)
+    }
+
+    /// [`Executor::run`] at an explicit [`Priority`] — the serve plane
+    /// submits per-tick batch work at `High` so it preempts background
+    /// tuning sharing the same executor.
+    pub fn run_with<'scope, T, F>(&self, prio: Priority, tasks: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'scope,
+        F: FnOnce() -> T + Send + 'scope,
+    {
+        let mut group = self.group_with::<T>(prio);
         for t in tasks {
             group.submit(t);
         }
@@ -396,6 +528,8 @@ impl Drop for Executor {
 pub struct TaskGroup<'scope, T: Send + 'scope> {
     shared: Arc<Shared>,
     serial: bool,
+    /// Lane this group's tasks queue on, fixed at creation.
+    prio: Priority,
     slots: Vec<Arc<Mutex<Option<T>>>>,
     core: Arc<GroupCore>,
     /// Lazy first dispatch: the first parallel task is held back until a
@@ -470,7 +604,7 @@ impl<'scope, T: Send + 'scope> TaskGroup<'scope, T> {
         let job: Job = unsafe {
             std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Job>(job)
         };
-        self.shared.push(job);
+        self.shared.push(job, self.prio);
     }
 
     /// Run queued work until every task of this group has finished.
@@ -479,11 +613,13 @@ impl<'scope, T: Send + 'scope> TaskGroup<'scope, T> {
             job(); // single-task group: run inline, no executor traffic
         }
         while self.core.remaining.load(Ordering::Acquire) > 0 {
-            // Help: run anything queued (this group's tasks or another's
-            // — every waiter is also an executor, so nesting can't
-            // deadlock and total concurrency stays at `workers`). The
-            // job's own epilogue notifies whichever group it belongs to.
-            if let Some(job) = self.shared.steal() {
+            // Help: run anything queued at our priority floor (this
+            // group's tasks or another's — every waiter is also an
+            // executor, so nesting can't deadlock and total concurrency
+            // stays at `workers`; a high group's waiter helps with high
+            // jobs only, see `Shared::steal`). The job's own epilogue
+            // notifies whichever group it belongs to.
+            if let Some(job) = self.shared.steal(self.prio) {
                 job();
                 continue;
             }
@@ -699,5 +835,126 @@ mod tests {
         let out = exec.run((0..500usize).map(|i| move || i % 7).collect::<Vec<_>>());
         assert_eq!(out.len(), 500);
         assert!(out.iter().enumerate().all(|(i, &v)| v == i % 7));
+    }
+
+    /// A bare `Shared` with no worker threads: lets the dequeue policy be
+    /// exercised deterministically, one pop at a time.
+    fn bare_shared(n: usize) -> Arc<Shared> {
+        Arc::new(Shared {
+            deques: (0..n).map(|_| Mutex::new(Lanes::new())).collect(),
+            pending: AtomicUsize::new(0),
+            pending_high: AtomicUsize::new(0),
+            waiters: AtomicUsize::new(0),
+            cursor: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+            sync: Mutex::new(()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            stats: (0..n).map(|_| DequeStats::new()).collect(),
+            help_steals: AtomicU64::new(0),
+        })
+    }
+
+    fn tagged(order: &Arc<Mutex<Vec<&'static str>>>, tag: &'static str) -> Job {
+        let order = Arc::clone(order);
+        Box::new(move || order.lock().unwrap().push(tag))
+    }
+
+    #[test]
+    fn dequeue_prefers_the_high_lane_before_any_low_job() {
+        // Single deque, single consumer: priority decides before recency
+        // does. Own pops stay newest-first *within* a lane, but every
+        // queued high job drains before the first low job is touched.
+        let s = bare_shared(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        s.push(tagged(&order, "low0"), Priority::Low);
+        s.push(tagged(&order, "low1"), Priority::Low);
+        s.push(tagged(&order, "high0"), Priority::High);
+        s.push(tagged(&order, "high1"), Priority::High);
+        while let Some(j) = s.pop(0) {
+            j();
+        }
+        assert_eq!(*order.lock().unwrap(), vec!["high1", "high0", "low1", "low0"]);
+        assert_eq!(s.pending.load(Ordering::SeqCst), 0);
+        assert_eq!(s.pending_high.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn high_group_helpers_steal_high_jobs_only() {
+        let s = bare_shared(1);
+        let order = Arc::new(Mutex::new(Vec::new()));
+        s.push(tagged(&order, "low0"), Priority::Low);
+        s.push(tagged(&order, "high0"), Priority::High);
+        s.push(tagged(&order, "high1"), Priority::High);
+        // A high group's waiting submitter: high jobs oldest-first, and
+        // never a low job — that would be priority inversion by helping.
+        s.steal(Priority::High).expect("first high job")();
+        s.steal(Priority::High).expect("second high job")();
+        assert!(s.steal(Priority::High).is_none(), "low job must stay queued");
+        // A low group's waiting submitter takes anything, high lane first.
+        s.steal(Priority::Low).expect("remaining low job")();
+        assert_eq!(*order.lock().unwrap(), vec!["high0", "high1", "low0"]);
+        assert_eq!(s.pending.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn queued_high_jobs_run_before_queued_low_jobs_end_to_end() {
+        // Serve-preempts-tune through the public group API: occupy the
+        // sole worker thread with a gate task, queue a low group then a
+        // high group, and drain single-consumer by helping. Every dequeue
+        // prefers the high lane, so the recorded order is exact.
+        let exec = Executor::new(2); // one worker thread, one deque
+        let started = Arc::new(AtomicBool::new(false));
+        let release = Arc::new(AtomicBool::new(false));
+        let mut blocker = exec.group::<()>();
+        {
+            let (s, r) = (Arc::clone(&started), Arc::clone(&release));
+            blocker.submit(move || {
+                s.store(true, Ordering::SeqCst);
+                while !r.load(Ordering::SeqCst) {
+                    std::thread::yield_now();
+                }
+            });
+        }
+        blocker.submit(|| {}); // flush the lazily-deferred gate task
+        while !started.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+
+        let order = Arc::new(Mutex::new(Vec::<String>::new()));
+        let mut low = exec.group::<()>();
+        for i in 0..3 {
+            let o = Arc::clone(&order);
+            low.submit(move || o.lock().unwrap().push(format!("low{i}")));
+        }
+        let mut high = exec.group_with::<()>(Priority::High);
+        for i in 0..3 {
+            let o = Arc::clone(&order);
+            high.submit(move || o.lock().unwrap().push(format!("high{i}")));
+        }
+        // The worker is parked on the gate, so this thread is the only
+        // consumer: helping drains the high lane first, then the low one.
+        high.wait();
+        low.wait();
+        release.store(true, Ordering::SeqCst);
+        drop(blocker);
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec!["high0", "high1", "high2", "low0", "low1", "low2"],
+            "all high jobs must dequeue before any queued low job"
+        );
+    }
+
+    #[test]
+    fn run_with_priorities_returns_results_by_index() {
+        for workers in [1, 4] {
+            let exec = Executor::new(workers);
+            let high =
+                exec.run_with(Priority::High, (0..10usize).map(|i| move || i * 3).collect::<Vec<_>>());
+            assert_eq!(high, (0..10).map(|i| i * 3).collect::<Vec<_>>(), "workers={workers}");
+            let low =
+                exec.run_with(Priority::Low, (0..10usize).map(|i| move || i + 1).collect::<Vec<_>>());
+            assert_eq!(low, (1..=10).collect::<Vec<_>>(), "workers={workers}");
+        }
     }
 }

@@ -144,7 +144,11 @@ fn serving_stack_over_artifacts() {
         eprintln!("skipping: built without the xla feature");
         return;
     }
-    let mut server = Server::start(&manifest, ServerConfig { max_batch: 4 }).unwrap();
+    let mut server = Server::start(
+        &manifest,
+        ServerConfig { max_batch: 4, target_delay_ticks: 4096, ..Default::default() },
+    )
+    .unwrap();
     // Mixed workload across all models.
     for (i, name) in manifest.artifacts.keys().cycle().take(20).enumerate() {
         server.submit(name, i as u64).unwrap();

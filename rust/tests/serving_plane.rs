@@ -1,0 +1,176 @@
+//! Integration contracts for the continuous-batching serving plane:
+//! bounded queues under overload, no hostage-taking of short requests,
+//! determinism of the seeded load generator across executor widths, and
+//! scheduling isolation from background (low-priority) tuning load.
+//!
+//! Everything here runs on the simulated backend: scheduling decisions
+//! live on the virtual tick clock, so the admission/eviction/batch
+//! sequence — and the virtual latency reservoirs — are bit-deterministic
+//! per load seed regardless of worker count or wall-clock noise.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use reasoning_compiler::coordinator::{ServeError, Server, ServerConfig};
+use reasoning_compiler::coordinator::server::synthetic_work;
+use reasoning_compiler::util::executor::{Executor, Priority};
+
+fn models() -> Vec<String> {
+    vec!["deepseek_moe".to_string(), "llama4_mlp".to_string()]
+}
+
+#[test]
+fn overload_backpressure_keeps_queues_bounded() {
+    let cfg = ServerConfig { queue_cap: 4, target_delay_ticks: 4096, ..Default::default() };
+    let mut server = Server::start_sim(&models(), cfg).unwrap();
+    let mut admitted = 0;
+    let mut rejected = 0;
+    for i in 0..40 {
+        match server.try_submit("deepseek_moe", i) {
+            Ok(()) => admitted += 1,
+            Err(ServeError::Overloaded { model, depth }) => {
+                assert_eq!(model, "deepseek_moe");
+                assert_eq!(depth, 4, "rejection happens exactly at the budget");
+                rejected += 1;
+            }
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+    }
+    assert_eq!(admitted, 4, "budget clamps to queue_cap");
+    assert_eq!(rejected, 36);
+    assert!(server.pending() <= 4, "no queue ever exceeds its bound");
+    let mm = &server.metrics.per_model["deepseek_moe"];
+    assert_eq!((mm.admitted, mm.rejected), (4, 36));
+    // The queue drains normally after the overload burst.
+    server.drain().unwrap();
+    assert_eq!(server.metrics.total_requests(), 4);
+}
+
+#[test]
+fn short_requests_are_not_held_hostage_by_a_long_batch() {
+    // One long request (50-tick service) shares the slot pool with a
+    // stream of short ones (2-tick service). Under fixed batching the
+    // shorts would queue behind the long batch; with per-slot continuous
+    // batching they flow through the remaining slots immediately.
+    let cfg = ServerConfig { max_batch: 4, ..Default::default() };
+    let mut server = Server::start_sim(&models(), cfg).unwrap();
+    server.set_service_ticks("deepseek_moe", 2).unwrap();
+    server.set_service_ticks("llama4_mlp", 50).unwrap();
+    server.try_submit("llama4_mlp", 0).unwrap();
+    for i in 0..12 {
+        server.try_submit("deepseek_moe", 1 + i).unwrap();
+    }
+    server.drain().unwrap();
+    let short = &server.metrics.per_model["deepseek_moe"];
+    let long = &server.metrics.per_model["llama4_mlp"];
+    assert_eq!(short.requests, 12);
+    assert_eq!(long.requests, 1);
+    // Every short completed while the long request was still in flight:
+    // even the slowest short is far below the long service time.
+    let short_worst = short
+        .request_latencies
+        .samples()
+        .iter()
+        .cloned()
+        .fold(0.0f64, f64::max);
+    let long_latency = long.request_latencies.samples()[0];
+    assert!(
+        short_worst < long_latency / 2.0,
+        "short worst-case {short_worst} should be far below the long request's {long_latency}"
+    );
+}
+
+/// Deterministic digest of everything the load generator decided.
+fn decision_digest(server: &Server) -> Vec<(String, u64, u64, u64, u64, u64, u64, Vec<u64>)> {
+    server
+        .metrics
+        .per_model
+        .iter()
+        .map(|(m, s)| {
+            (
+                m.clone(),
+                s.admitted,
+                s.rejected,
+                s.evicted,
+                s.requests,
+                s.batches,
+                s.partial_dispatches,
+                s.request_latencies.samples().iter().map(|v| v.to_bits()).collect(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn seeded_load_generator_is_deterministic_across_worker_counts() {
+    let run = |workers: usize| {
+        let exec = Executor::new(workers);
+        let cfg = ServerConfig { queue_cap: 8, arrival_burst: 3, ..Default::default() };
+        let mut server = Server::start_sim(&models(), cfg)
+            .unwrap()
+            .with_executor(exec, 2_000);
+        server.run_synthetic(300, 9).unwrap();
+        decision_digest(&server)
+    };
+    let serial = run(1);
+    let wide = run(4);
+    assert_eq!(serial, wide, "admission/eviction/batch composition must not depend on workers");
+    // And per-seed stability: the same seed replays the same decisions.
+    assert_eq!(serial, run(1));
+}
+
+#[test]
+fn overloaded_generator_rejects_deterministically() {
+    let run = |workers: usize| {
+        let exec = Executor::new(workers);
+        // Tiny queues + aggressive bursts: the generator must shed load.
+        let cfg = ServerConfig { queue_cap: 2, arrival_burst: 6, ..Default::default() };
+        let mut server = Server::start_sim(&models(), cfg)
+            .unwrap()
+            .with_executor(exec, 2_000);
+        server.run_synthetic(300, 5).unwrap();
+        decision_digest(&server)
+    };
+    let a = run(1);
+    let b = run(4);
+    assert_eq!(a, b);
+    let total_rejected: u64 = a.iter().map(|r| r.2).sum();
+    assert!(total_rejected > 0, "saturating bursts must trip admission control");
+}
+
+#[test]
+fn background_low_priority_load_does_not_change_serving_decisions() {
+    // A saturating flood of low-priority work (a stand-in for `--tune`)
+    // shares the executor with the serving plane. High-priority serve
+    // dispatch preempts it at every dequeue/steal site; the virtual-clock
+    // decision sequence must be bit-identical to a quiet executor's.
+    let quiet = {
+        let exec = Executor::new(2);
+        let mut server = Server::start_sim(&models(), ServerConfig::default())
+            .unwrap()
+            .with_executor(exec, 2_000);
+        server.run_synthetic(200, 11).unwrap();
+        decision_digest(&server)
+    };
+    let noisy = {
+        let exec = Executor::new(2);
+        let stop = Arc::new(AtomicBool::new(false));
+        let flood_exec = Arc::clone(&exec);
+        let flood_stop = Arc::clone(&stop);
+        let flood = std::thread::spawn(move || {
+            while !flood_stop.load(Ordering::Relaxed) {
+                let tasks: Vec<_> =
+                    (0..16).map(|_| || synthetic_work(20_000)).collect();
+                flood_exec.run_with(Priority::Low, tasks);
+            }
+        });
+        let mut server = Server::start_sim(&models(), ServerConfig::default())
+            .unwrap()
+            .with_executor(Arc::clone(&exec), 2_000);
+        server.run_synthetic(200, 11).unwrap();
+        stop.store(true, Ordering::Relaxed);
+        flood.join().unwrap();
+        decision_digest(&server)
+    };
+    assert_eq!(quiet, noisy);
+}
